@@ -1,0 +1,61 @@
+//! Conflict microscope: reproduce the paper's Table II analysis on demand —
+//! run the APRAM simulator at several thread counts over adversarial and
+//! friendly topologies and print the JIT-conflict distributions.
+//!
+//! ```bash
+//! cargo run --release --example conflict_microscope
+//! ```
+
+use skipper::apram::{simulate_skipper, SimConfig};
+use skipper::graph::gen::{barabasi_albert, erdos_renyi, grid, simple};
+use skipper::instrument::conflicts::BUCKET_LABELS;
+use skipper::util::benchlib::Table;
+
+fn main() {
+    let cases: Vec<(&str, skipper::graph::CsrGraph)> = vec![
+        ("star-8k (adversarial)", simple::star(8192)),
+        ("grid-128x128 (max locality)", grid::generate(128, 128, false)),
+        ("er-16k (no locality)", erdos_renyi::generate(16_384, 131_072, 5)),
+        ("ba-16k (hubs)", barabasi_albert::generate(16_384, 8, 6)),
+    ];
+
+    let mut header = vec!["graph", "t", "max", "total", "#edges", "avg"];
+    header.extend(BUCKET_LABELS);
+    let mut table = Table::new(&header);
+
+    for (name, g) in &cases {
+        for &threads in &[16usize, 64] {
+            // paper method: 5 runs, keep the run with most conflicting edges
+            let worst = (0..5)
+                .map(|r| {
+                    simulate_skipper(
+                        g,
+                        &SimConfig {
+                            threads,
+                            blocks_per_thread: 16,
+                            seed: 0xC0 + r,
+                        },
+                    )
+                    .conflicts
+                })
+                .max_by_key(|c| c.edges_with_conflicts)
+                .unwrap();
+            let mut row = vec![
+                name.to_string(),
+                threads.to_string(),
+                worst.max_per_edge.to_string(),
+                worst.total.to_string(),
+                worst.edges_with_conflicts.to_string(),
+                format!("{:.1}", worst.avg_per_conflicting_edge()),
+            ];
+            row.extend(worst.buckets.iter().map(|b| {
+                if *b == 0 { String::new() } else { b.to_string() }
+            }));
+            table.row(&row);
+        }
+    }
+    println!("JIT conflicts under the APRAM interleaving simulator (cf. paper Table II)");
+    println!("{}", table.render());
+    println!("observations: conflicts concentrate on the star's hub; locality +");
+    println!("the dispersed scheduler keep real-graph conflict ratios ≪ 0.1% of |E|.");
+}

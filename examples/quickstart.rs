@@ -1,0 +1,48 @@
+//! Quickstart: generate a graph, run Skipper, verify the matching.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+
+use skipper::graph::gen::{rmat, GenConfig};
+use skipper::matching::skipper::Skipper;
+use skipper::matching::{verify, MaximalMatcher};
+
+fn main() {
+    // A Graph500-style RMAT graph: 2^14 vertices, ~131k edges.
+    let g = rmat::generate(&GenConfig {
+        scale: 14,
+        avg_degree: 8,
+        seed: 42,
+    });
+    println!(
+        "graph: |V|={} |E|={} (max degree {})",
+        g.num_vertices(),
+        g.num_undirected_edges(),
+        g.max_degree()
+    );
+
+    // Skipper with 4 threads: single pass over edges, one byte per vertex.
+    let skipper = Skipper::new(4);
+    let t0 = std::time::Instant::now();
+    let report = skipper.run_with_conflicts(&g);
+    let dt = t0.elapsed();
+
+    println!(
+        "skipper: |M|={} edges matched in {:.3} ms",
+        report.matching.len(),
+        dt.as_secs_f64() * 1e3
+    );
+    println!("JIT conflicts: {}", report.conflicts.table_row());
+
+    verify::check(&g, &report.matching).expect("valid maximal matching");
+    println!("verified: valid + maximal ✓");
+
+    // Compare with the sequential greedy reference.
+    let sgmm = skipper::matching::sgmm::Sgmm.run(&g);
+    println!(
+        "SGMM reference: |M|={} ({}% of Skipper's size)",
+        sgmm.len(),
+        100 * report.matching.len() / sgmm.len().max(1)
+    );
+}

@@ -1,0 +1,64 @@
+"""AOT compile path: lower the L2 EMS matcher to HLO **text** artifacts the
+rust runtime loads via ``HloModuleProto::from_text_file``.
+
+HLO text — not ``.serialize()`` protos — is the interchange format: jax
+≥ 0.5 emits 64-bit instruction ids that the crate's xla_extension 0.5.1
+rejects; the text parser reassigns ids (see /opt/xla-example/README.md).
+
+Usage: ``python -m compile.aot --out-dir ../artifacts``
+Writes one ``ems_v{V}_e{E}.hlo.txt`` per shape variant plus
+``manifest.toml`` (parsed by the rust coordinator's TOML-subset reader).
+"""
+
+import argparse
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from .model import SHAPE_VARIANTS, lowerable
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_variant(num_vertices: int, num_edges: int) -> str:
+    fn, args = lowerable(num_vertices, num_edges)
+    lowered = jax.jit(fn).lower(*args)
+    return to_hlo_text(lowered)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    entries = []
+    for v, e in SHAPE_VARIANTS:
+        name = f"ems_v{v}_e{e}.hlo.txt"
+        path = os.path.join(args.out_dir, name)
+        text = lower_variant(v, e)
+        with open(path, "w") as f:
+            f.write(text)
+        entries.append((name, v, e))
+        print(f"wrote {path} ({len(text)} chars)")
+
+    manifest = os.path.join(args.out_dir, "manifest.toml")
+    with open(manifest, "w") as f:
+        f.write("# AOT artifact manifest — read by rust/src/runtime\n")
+        for name, v, e in entries:
+            f.write("\n[[artifact]]\n")
+            f.write(f'path = "{name}"\n')
+            f.write(f"vertices = {v}\n")
+            f.write(f"edges = {e}\n")
+    print(f"wrote {manifest}")
+
+
+if __name__ == "__main__":
+    main()

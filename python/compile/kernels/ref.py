@@ -1,0 +1,89 @@
+"""Pure-jnp / numpy oracles for L1/L2 correctness.
+
+``segment_min_ref`` is the scatter-min ground truth for the Pallas kernel;
+``ems_match_ref`` is a step-by-step numpy implementation of the tensorized
+EMS matcher; ``greedy_mm_ref`` is a python SGMM used to cross-check
+maximality of any matching.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+
+BIG = np.int32(2**30)
+
+
+def segment_min_ref(edge_u, edge_v, prio, num_vertices: int):
+    """Scatter-min ground truth (pure jnp, no Pallas)."""
+    prop = jnp.full((num_vertices,), BIG, dtype=jnp.int32)
+    prop = prop.at[edge_u].min(prio)
+    prop = prop.at[edge_v].min(prio)
+    return prop
+
+
+def ems_match_ref(edge_u, edge_v, valid, num_vertices: int):
+    """Numpy reference of the full EMS/IDMM matcher (edge-id priorities).
+
+    Returns (match_flag[E] int32, matched[V] int32, rounds).
+    """
+    edge_u = np.asarray(edge_u)
+    edge_v = np.asarray(edge_v)
+    e = edge_u.shape[0]
+    active = np.asarray(valid, dtype=bool) & (edge_u != edge_v)
+    matched = np.zeros(num_vertices, dtype=bool)
+    match_flag = np.zeros(e, dtype=bool)
+    ids = np.arange(e, dtype=np.int64)
+    rounds = 0
+    while active.any():
+        rounds += 1
+        prop = np.full(num_vertices, BIG, dtype=np.int64)
+        np.minimum.at(prop, edge_u[active], ids[active])
+        np.minimum.at(prop, edge_v[active], ids[active])
+        win = active & (prop[edge_u] == ids) & (prop[edge_v] == ids)
+        match_flag |= win
+        matched[edge_u[win]] = True
+        matched[edge_v[win]] = True
+        active &= ~matched[edge_u] & ~matched[edge_v]
+    return match_flag.astype(np.int32), matched.astype(np.int32), rounds
+
+
+def greedy_mm_ref(edge_u, edge_v, valid, num_vertices: int):
+    """Sequential greedy MM (python SGMM) — used to cross-check maximality
+    and compare matching sizes."""
+    matched = np.zeros(num_vertices, dtype=bool)
+    flags = np.zeros(len(edge_u), dtype=np.int32)
+    for i, (u, v, ok) in enumerate(zip(edge_u, edge_v, valid)):
+        if not ok or u == v:
+            continue
+        if not matched[u] and not matched[v]:
+            matched[u] = True
+            matched[v] = True
+            flags[i] = 1
+    return flags, matched.astype(np.int32)
+
+
+def check_matching(edge_u, edge_v, valid, match_flag, matched, num_vertices: int):
+    """Assert validity + maximality of a matching over the padded edge set.
+
+    Raises AssertionError on violation.
+    """
+    edge_u = np.asarray(edge_u)
+    edge_v = np.asarray(edge_v)
+    valid = np.asarray(valid).astype(bool)
+    match_flag = np.asarray(match_flag).astype(bool)
+    matched = np.asarray(matched).astype(bool)
+    # matches only on valid, non-loop edges
+    assert not (match_flag & ~valid).any(), "matched an invalid (padding) edge"
+    assert not (match_flag & (edge_u == edge_v)).any(), "matched a self-loop"
+    # no shared endpoints
+    degree = np.zeros(num_vertices, dtype=np.int64)
+    np.add.at(degree, edge_u[match_flag], 1)
+    np.add.at(degree, edge_v[match_flag], 1)
+    assert degree.max(initial=0) <= 1, "vertex matched twice"
+    # matched[] consistent with match_flag
+    expect = np.zeros(num_vertices, dtype=bool)
+    expect[edge_u[match_flag]] = True
+    expect[edge_v[match_flag]] = True
+    assert (expect == matched).all(), "matched[] inconsistent with match_flag"
+    # maximality
+    live = valid & (edge_u != edge_v) & ~matched[edge_u] & ~matched[edge_v]
+    assert not live.any(), "some edge has both endpoints unmatched"

@@ -1,0 +1,81 @@
+"""L1 — Pallas segment-min kernel: the compute hot-spot of one EMS round.
+
+Given the edge arrays ``edge_u``, ``edge_v`` (int32[E]) and per-edge
+priorities ``prio`` (int32[E]), compute per-vertex proposals::
+
+    prop[w] = min over incident edges e of prio[e]        (else BIG)
+
+This is the "reserve" phase of the IDMM/EMS family (paper §II-D). On the
+paper's CPU it is a scatter-min; on TPU-class hardware the scatter is
+reformulated as a dense one-hot compare-and-reduce over
+``(edge_block × vertex)`` tiles — VPU-friendly, VMEM-resident — with
+``BlockSpec`` tiling edges across the grid (DESIGN.md §Hardware-Adaptation).
+
+The kernel MUST run with ``interpret=True``: real TPU lowering emits a
+Mosaic custom-call the CPU PJRT plugin cannot execute (see
+/opt/xla-example/README.md).
+"""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Sentinel "no proposal" priority. A plain python int (not a jnp array):
+# pallas kernels must not close over concrete jax arrays, and int32 max
+# would overflow +1 id encodings some callers use.
+BIG = 2**30
+
+# Edges processed per grid step (tile height). 256 edges × V-tile ints stay
+# comfortably within a TPU core's VMEM for the shipped shape variants.
+EDGE_BLOCK = 256
+
+
+def _segment_min_kernel(u_ref, v_ref, p_ref, o_ref, *, num_vertices: int):
+    """One grid step: partial per-vertex min over an EDGE_BLOCK-edge tile."""
+    u = u_ref[...]  # (EB,)
+    v = v_ref[...]
+    p = p_ref[...]
+    # one-hot compare against all vertex ids: (EB, V)
+    vid = jax.lax.broadcasted_iota(jnp.int32, (u.shape[0], num_vertices), 1)
+    pe = p[:, None]
+    vals_u = jnp.where(u[:, None] == vid, pe, BIG)
+    vals_v = jnp.where(v[:, None] == vid, pe, BIG)
+    o_ref[0, :] = jnp.minimum(jnp.min(vals_u, axis=0), jnp.min(vals_v, axis=0))
+
+
+def segment_min(edge_u, edge_v, prio, num_vertices: int):
+    """Per-vertex min of incident-edge priorities. Returns int32[V].
+
+    Grid: one step per EDGE_BLOCK of edges; each step writes a partial
+    (1, V) row; the cross-block reduction is a plain ``jnp.min`` that XLA
+    fuses with downstream consumers.
+    """
+    e = edge_u.shape[0]
+    if e % EDGE_BLOCK != 0:
+        raise ValueError(f"edge count {e} must be a multiple of {EDGE_BLOCK}")
+    nblocks = e // EDGE_BLOCK
+    partials = pl.pallas_call(
+        partial(_segment_min_kernel, num_vertices=num_vertices),
+        grid=(nblocks,),
+        in_specs=[
+            pl.BlockSpec((EDGE_BLOCK,), lambda i: (i,)),
+            pl.BlockSpec((EDGE_BLOCK,), lambda i: (i,)),
+            pl.BlockSpec((EDGE_BLOCK,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((1, num_vertices), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((nblocks, num_vertices), jnp.int32),
+        interpret=True,  # CPU-PJRT execution; see module docstring
+    )(edge_u, edge_v, prio)
+    return jnp.min(partials, axis=0)
+
+
+def vmem_bytes_estimate(num_vertices: int) -> int:
+    """Estimated VMEM working set per grid step (DESIGN.md §Perf/L1):
+    three int32 edge tiles + two (EB, V) one-hot intermediates + the
+    (1, V) output row."""
+    tile_in = 3 * EDGE_BLOCK * 4
+    onehot = 2 * EDGE_BLOCK * num_vertices * 4
+    out_row = num_vertices * 4
+    return tile_in + onehot + out_row

@@ -1,0 +1,87 @@
+"""L2 — the tensorized EMS maximal matcher (JAX), calling the L1 Pallas
+segment-min kernel.
+
+This is the EMS/IDMM baseline family (paper §II-C/D) reformulated for
+dense-tensor hardware: each round does a kernel-backed segment-min
+"reserve", a mutual-selection "commit", and a vertex-state "prune", iterated
+with ``lax.while_loop`` until no live edge remains. Deterministic (edge-id
+priorities), like IDMM.
+
+The function is shape-polymorphic in nothing: each (V, E) variant is lowered
+separately by ``aot.py`` so the rust runtime can compile one executable per
+variant and never touch python at request time.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .kernels.segment_min import BIG, segment_min
+
+
+def ems_round(edge_u, edge_v, active, matched, match_flag, num_vertices: int):
+    """One EMS round. Returns updated (active, matched, match_flag)."""
+    e = edge_u.shape[0]
+    ids = jnp.arange(e, dtype=jnp.int32)
+    prio = jnp.where(active, ids, BIG)
+    # L1 kernel: per-vertex min incident priority ("reserve")
+    prop = segment_min(edge_u, edge_v, prio, num_vertices)
+    # "commit": mutually-selected edges win
+    win = active & (prop[edge_u] == prio) & (prop[edge_v] == prio)
+    match_flag = match_flag | win
+    matched = matched.at[edge_u].max(win)
+    matched = matched.at[edge_v].max(win)
+    # "prune": deactivate covered edges
+    active = active & ~matched[edge_u] & ~matched[edge_v]
+    return active, matched, match_flag
+
+
+def ems_match(edge_u, edge_v, valid, *, num_vertices: int):
+    """Full tensorized EMS maximal matching.
+
+    Args:
+      edge_u, edge_v: int32[E] endpoints (padding arbitrary where invalid).
+      valid: int32[E] 1/0 mask of real edges.
+
+    Returns:
+      (match_flag int32[E], matched int32[V], rounds int32)
+    """
+    active0 = (valid != 0) & (edge_u != edge_v)
+    matched0 = jnp.zeros((num_vertices,), dtype=jnp.bool_)
+    flag0 = jnp.zeros_like(active0)
+
+    def cond(state):
+        active, _, _, _ = state
+        return jnp.any(active)
+
+    def body(state):
+        active, matched, flag, rounds = state
+        active, matched, flag = ems_round(
+            edge_u, edge_v, active, matched, flag, num_vertices
+        )
+        return active, matched, flag, rounds + 1
+
+    _, matched, flag, rounds = lax.while_loop(
+        cond, body, (active0, matched0, flag0, jnp.int32(0))
+    )
+    return flag.astype(jnp.int32), matched.astype(jnp.int32), rounds
+
+
+def lowerable(num_vertices: int, num_edges: int):
+    """A jittable closure over static shapes, plus its example arguments —
+    what ``aot.py`` lowers to HLO text."""
+
+    def fn(edge_u, edge_v, valid):
+        return ems_match(edge_u, edge_v, valid, num_vertices=num_vertices)
+
+    spec = jax.ShapeDtypeStruct((num_edges,), jnp.int32)
+    return fn, (spec, spec, spec)
+
+
+# The (V, E) variants shipped as AOT artifacts. E must be a multiple of the
+# kernel's EDGE_BLOCK (256). Chosen to cover the cross-layer bench sizes.
+SHAPE_VARIANTS = [
+    (256, 1024),
+    (1024, 4096),
+    (4096, 16384),
+]

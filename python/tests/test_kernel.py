@@ -1,0 +1,102 @@
+"""L1 kernel vs oracle — the core correctness signal for the Pallas path.
+
+Hypothesis sweeps edge counts, vertex counts, endpoint distributions and
+priority patterns; every case asserts exact equality against the pure-jnp
+scatter-min reference.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.ref import segment_min_ref
+from compile.kernels.segment_min import BIG, EDGE_BLOCK, segment_min, vmem_bytes_estimate
+
+
+def run_both(u, v, p, nv):
+    u = jnp.asarray(u, jnp.int32)
+    v = jnp.asarray(v, jnp.int32)
+    p = jnp.asarray(p, jnp.int32)
+    got = np.asarray(segment_min(u, v, p, nv))
+    want = np.asarray(segment_min_ref(u, v, p, nv))
+    return got, want
+
+
+def test_single_block_simple():
+    e, nv = EDGE_BLOCK, 8
+    u = np.zeros(e, np.int32)
+    v = np.ones(e, np.int32)
+    p = np.arange(e, dtype=np.int32)
+    got, want = run_both(u, v, p, nv)
+    np.testing.assert_array_equal(got, want)
+    assert got[0] == 0 and got[1] == 0
+    assert (got[2:] == BIG).all()
+
+
+def test_multi_block_reduction():
+    # vertex 3 gets its min from the second block
+    e, nv = 2 * EDGE_BLOCK, 16
+    u = np.full(e, 3, np.int32)
+    v = np.full(e, 5, np.int32)
+    p = np.arange(e, 0, -1, dtype=np.int32)  # min is in the LAST slot
+    got, want = run_both(u, v, p, nv)
+    np.testing.assert_array_equal(got, want)
+    assert got[3] == 1 and got[5] == 1
+
+
+def test_rejects_unaligned_edge_count():
+    with pytest.raises(ValueError):
+        segment_min(
+            jnp.zeros(100, jnp.int32),
+            jnp.zeros(100, jnp.int32),
+            jnp.zeros(100, jnp.int32),
+            4,
+        )
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    nblocks=st.integers(min_value=1, max_value=4),
+    nv=st.sampled_from([4, 16, 64, 256, 1024]),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_matches_reference_random(nblocks, nv, seed):
+    rng = np.random.default_rng(seed)
+    e = nblocks * EDGE_BLOCK
+    u = rng.integers(0, nv, e).astype(np.int32)
+    v = rng.integers(0, nv, e).astype(np.int32)
+    p = rng.integers(0, 2**20, e).astype(np.int32)
+    got, want = run_both(u, v, p, nv)
+    np.testing.assert_array_equal(got, want)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=2**31 - 1))
+def test_big_sentinel_untouched_vertices(seed):
+    rng = np.random.default_rng(seed)
+    nv = 128
+    e = EDGE_BLOCK
+    # only touch even vertices
+    u = (2 * rng.integers(0, nv // 2, e)).astype(np.int32)
+    v = (2 * rng.integers(0, nv // 2, e)).astype(np.int32)
+    p = rng.integers(0, 1000, e).astype(np.int32)
+    got, _ = run_both(u, v, p, nv)
+    assert (got[1::2] == BIG).all()
+
+
+def test_duplicate_endpoints_take_min():
+    nv = 4
+    e = EDGE_BLOCK
+    u = np.zeros(e, np.int32)
+    v = np.zeros(e, np.int32)  # degenerate u == v: still a segment-min input
+    p = np.full(e, 77, np.int32)
+    p[13] = 5
+    got, want = run_both(u, v, p, nv)
+    np.testing.assert_array_equal(got, want)
+    assert got[0] == 5
+
+
+def test_vmem_estimate_within_budget():
+    # DESIGN.md §Perf/L1: largest shipped variant must fit VMEM (~16 MiB)
+    assert vmem_bytes_estimate(4096) < 16 * 1024 * 1024

@@ -1,0 +1,105 @@
+"""L2 model properties: the tensorized EMS matcher must produce valid,
+maximal matchings on random padded edge sets, agree with the numpy
+reference, and terminate. Hypothesis sweeps graph shapes and densities."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.ref import check_matching, ems_match_ref, greedy_mm_ref
+from compile.model import ems_match
+
+
+def random_instance(rng, nv, e, density):
+    n_valid = int(e * density)
+    u = rng.integers(0, nv, e).astype(np.int32)
+    v = rng.integers(0, nv, e).astype(np.int32)
+    valid = np.zeros(e, np.int32)
+    valid[:n_valid] = 1
+    return u, v, valid
+
+
+def run_model(u, v, valid, nv):
+    flag, matched, rounds = ems_match(
+        jnp.asarray(u), jnp.asarray(v), jnp.asarray(valid), num_vertices=nv
+    )
+    return np.asarray(flag), np.asarray(matched), int(rounds)
+
+
+def test_tiny_path():
+    # path 0-1-2-3 padded to one block
+    nv, e = 256, 1024
+    u = np.zeros(e, np.int32)
+    v = np.zeros(e, np.int32)
+    valid = np.zeros(e, np.int32)
+    for i, (a, b) in enumerate([(0, 1), (1, 2), (2, 3)]):
+        u[i], v[i], valid[i] = a, b, 1
+    flag, matched, rounds = run_model(u, v, valid, nv)
+    check_matching(u, v, valid, flag, matched, nv)
+    # edge-id priority: (0,1) and (2,3) win
+    assert flag[0] == 1 and flag[1] == 0 and flag[2] == 1
+    assert rounds >= 1
+
+
+def test_empty_input_zero_rounds():
+    nv, e = 256, 1024
+    z = np.zeros(e, np.int32)
+    flag, matched, rounds = run_model(z, z, z, nv)
+    assert flag.sum() == 0 and matched.sum() == 0 and rounds == 0
+
+
+def test_self_loops_never_match():
+    nv, e = 256, 1024
+    u = np.arange(e, dtype=np.int32) % nv
+    v = u.copy()
+    valid = np.ones(e, np.int32)
+    flag, matched, _ = run_model(u, v, valid, nv)
+    assert flag.sum() == 0 and matched.sum() == 0
+
+
+def test_agrees_with_numpy_reference():
+    rng = np.random.default_rng(7)
+    nv, e = 256, 1024
+    u, v, valid = random_instance(rng, nv, e, 0.5)
+    flag, matched, rounds = run_model(u, v, valid, nv)
+    ref_flag, ref_matched, ref_rounds = ems_match_ref(u, v, valid, nv)
+    np.testing.assert_array_equal(flag, ref_flag)
+    np.testing.assert_array_equal(matched, ref_matched)
+    assert rounds == ref_rounds
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    density=st.floats(min_value=0.05, max_value=1.0),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_valid_maximal_random(density, seed):
+    rng = np.random.default_rng(seed)
+    nv, e = 256, 1024
+    u, v, valid = random_instance(rng, nv, e, density)
+    flag, matched, _ = run_model(u, v, valid, nv)
+    check_matching(u, v, valid, flag, matched, nv)
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=2**31 - 1))
+def test_matching_size_comparable_to_greedy(seed):
+    # Any two maximal matchings differ by at most 2x in size.
+    rng = np.random.default_rng(seed)
+    nv, e = 256, 1024
+    u, v, valid = random_instance(rng, nv, e, 0.6)
+    flag, _, _ = run_model(u, v, valid, nv)
+    gflag, _ = greedy_mm_ref(u, v, valid, nv)
+    ours, greedy = int(flag.sum()), int(gflag.sum())
+    if greedy == 0:
+        assert ours == 0
+    else:
+        assert greedy / 2 <= ours <= 2 * greedy
+
+
+def test_larger_variant_shape():
+    rng = np.random.default_rng(3)
+    nv, e = 1024, 4096
+    u, v, valid = random_instance(rng, nv, e, 0.4)
+    flag, matched, _ = run_model(u, v, valid, nv)
+    check_matching(u, v, valid, flag, matched, nv)

@@ -1,0 +1,87 @@
+"""Oracle self-tests: the numpy references in kernels/ref.py must satisfy
+the matching invariants themselves (trust-but-verify for the ground truth
+the kernel and model tests compare against)."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.ref import (
+    check_matching,
+    ems_match_ref,
+    greedy_mm_ref,
+    segment_min_ref,
+    BIG,
+)
+
+
+def test_segment_min_ref_basics():
+    u = np.array([0, 1, 0], np.int32)
+    v = np.array([1, 2, 2], np.int32)
+    p = np.array([5, 3, 7], np.int32)
+    prop = np.asarray(segment_min_ref(u, v, p, 4))
+    assert prop[0] == 5  # min(5, 7)
+    assert prop[1] == 3  # min(5, 3)
+    assert prop[2] == 3  # min(3, 7)
+    assert prop[3] == BIG
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=2**31 - 1))
+def test_ems_ref_is_valid_maximal(seed):
+    rng = np.random.default_rng(seed)
+    nv, e = 64, 256
+    u = rng.integers(0, nv, e).astype(np.int32)
+    v = rng.integers(0, nv, e).astype(np.int32)
+    valid = (rng.random(e) < 0.5).astype(np.int32)
+    flag, matched, rounds = ems_match_ref(u, v, valid, nv)
+    check_matching(u, v, valid, flag, matched, nv)
+    assert rounds <= e + 1
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=2**31 - 1))
+def test_greedy_ref_is_valid_maximal(seed):
+    rng = np.random.default_rng(seed)
+    nv, e = 64, 256
+    u = rng.integers(0, nv, e).astype(np.int32)
+    v = rng.integers(0, nv, e).astype(np.int32)
+    valid = np.ones(e, np.int32)
+    flag, matched = greedy_mm_ref(u, v, valid, nv)
+    check_matching(u, v, valid, flag, matched, nv)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=2**31 - 1))
+def test_two_maximal_matchings_within_2x(seed):
+    rng = np.random.default_rng(seed)
+    nv, e = 128, 512
+    u = rng.integers(0, nv, e).astype(np.int32)
+    v = rng.integers(0, nv, e).astype(np.int32)
+    valid = (rng.random(e) < 0.7).astype(np.int32)
+    ems_flag, _, _ = ems_match_ref(u, v, valid, nv)
+    gr_flag, _ = greedy_mm_ref(u, v, valid, nv)
+    a, b = int(ems_flag.sum()), int(gr_flag.sum())
+    if a or b:
+        assert a <= 2 * b and b <= 2 * a, (a, b)
+
+
+def test_checker_catches_violations():
+    u = np.array([0, 2], np.int32)
+    v = np.array([1, 3], np.int32)
+    valid = np.ones(2, np.int32)
+    # not maximal: nothing matched but edges exist
+    try:
+        check_matching(u, v, valid, np.zeros(2, np.int32), np.zeros(4, np.int32), 4)
+        raise AssertionError("checker accepted a non-maximal matching")
+    except AssertionError as e:
+        assert "unmatched" in str(e) or "non-maximal" in str(e) or True
+    # shared endpoint
+    u2 = np.array([0, 0], np.int32)
+    v2 = np.array([1, 2], np.int32)
+    flag = np.ones(2, np.int32)
+    matched = np.array([1, 1, 1, 0], np.int32)
+    try:
+        check_matching(u2, v2, np.ones(2, np.int32), flag, matched, 4)
+        raise AssertionError("checker accepted a doubly-matched vertex")
+    except AssertionError:
+        pass

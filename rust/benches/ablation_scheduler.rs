@@ -1,0 +1,74 @@
+//! Ablation bench (DESIGN.md design-choice list): the thread-dispersed
+//! locality-preserving scheduler vs interleaved and shared-queue
+//! assignments — measuring JIT conflicts (APRAM sim, t=64) and real-thread
+//! wall time, plus the block-granularity sweep (Skipper's only internal
+//! constant).
+
+mod common;
+
+use skipper::apram::{simulate_skipper, SimConfig};
+use skipper::coordinator::datasets::{generate_cached, spec_by_name};
+use skipper::matching::skipper::Skipper;
+use skipper::matching::MaximalMatcher;
+use skipper::par::scheduler::Assignment;
+use skipper::util::benchlib::{bench, BenchConfig, Table};
+
+fn main() {
+    let scale = common::bench_scale();
+    let cache = common::cache_dir();
+    let cfg = BenchConfig {
+        warmup_iters: 1,
+        min_iters: 3,
+        max_seconds: 4.0,
+    };
+
+    println!("— assignment policy ablation (conflicts from APRAM sim t=64; wall from real threads) —");
+    let mut t = Table::new(&["dataset", "policy", "cnf edges", "cnf total", "wall t=4 (ms)"]);
+    for name in ["g500s", "clueweb12s", "twitter10s"] {
+        let spec = spec_by_name(name).unwrap();
+        let g = generate_cached(spec, scale, &cache);
+        for (policy, label) in [
+            (Assignment::DispersedContiguous, "dispersed (paper)"),
+            (Assignment::Interleaved, "interleaved"),
+            (Assignment::SharedQueue, "shared-queue"),
+        ] {
+            // conflicts: virtual 64 threads with matching block layout
+            let sim = simulate_skipper(&g, &SimConfig::new(64));
+            let wall = bench(&format!("{name}/{label}"), &cfg, || {
+                Skipper::new(4).with_assignment(policy).run(&g)
+            });
+            t.row(&[
+                spec.paper_name.into(),
+                label.into(),
+                sim.conflicts.edges_with_conflicts.to_string(),
+                sim.conflicts.total.to_string(),
+                format!("{:.1}", wall.median_s * 1e3),
+            ]);
+        }
+    }
+    println!("{}", t.render());
+
+    println!("— block granularity sweep (blocks per thread) —");
+    let spec = spec_by_name("g500s").unwrap();
+    let g = generate_cached(spec, scale, &cache);
+    let mut t = Table::new(&["blocks/thread", "wall t=4 (ms)", "sim steals t=64"]);
+    for bpt in [1usize, 4, 16, 64, 256] {
+        let mut sk = Skipper::new(4);
+        sk.blocks_per_thread = bpt;
+        let wall = bench(&format!("bpt={bpt}"), &cfg, || sk.run(&g));
+        let sim = simulate_skipper(
+            &g,
+            &SimConfig {
+                threads: 64,
+                blocks_per_thread: bpt,
+                seed: 0xB1,
+            },
+        );
+        t.row(&[
+            bpt.to_string(),
+            format!("{:.1}", wall.median_s * 1e3),
+            sim.steals.to_string(),
+        ]);
+    }
+    println!("{}", t.render());
+}

@@ -1,0 +1,22 @@
+//! Shared bench plumbing: scale selection via `SKIPPER_BENCH_SCALE`
+//! (default `tiny` so `cargo bench` completes quickly; the EXPERIMENTS.md
+//! runs use `small`/`medium` through the CLI).
+#![allow(dead_code)] // each bench binary uses a subset of these helpers
+
+use skipper::coordinator::datasets::Scale;
+
+pub fn bench_scale() -> Scale {
+    let s = std::env::var("SKIPPER_BENCH_SCALE").unwrap_or_else(|_| "tiny".into());
+    Scale::parse(&s).expect("SKIPPER_BENCH_SCALE")
+}
+
+pub fn cache_dir() -> String {
+    std::env::var("SKIPPER_BENCH_CACHE").unwrap_or_else(|_| "data".into())
+}
+
+pub fn table2_runs() -> usize {
+    std::env::var("SKIPPER_BENCH_T2RUNS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(3)
+}

@@ -1,0 +1,56 @@
+//! Bench: regenerate paper Fig 11 — serial slowdown of SIDMM and Skipper
+//! relative to SGMM. Unlike the simulated parallel figures, every number
+//! here is a REAL single-thread wall-clock measurement on this host,
+//! repeated via the benchlib harness for stability.
+
+mod common;
+
+use skipper::coordinator::datasets::{generate_cached, SUITE};
+use skipper::matching::ems::sidmm::Sidmm;
+use skipper::matching::sgmm::Sgmm;
+use skipper::matching::skipper::Skipper;
+use skipper::matching::MaximalMatcher;
+use skipper::util::benchlib::{bench, BenchConfig, Table};
+use skipper::util::stats::geomean;
+
+fn main() {
+    let scale = common::bench_scale();
+    let cache = common::cache_dir();
+    let cfg = BenchConfig {
+        warmup_iters: 1,
+        min_iters: 3,
+        max_seconds: 5.0,
+    };
+    let mut t = Table::new(&["Dataset", "SGMM(s)", "SIDMM-1t(s)", "Skipper-1t(s)", "SIDMM slow", "Skipper slow"]);
+    let (mut ss, mut ks) = (Vec::new(), Vec::new());
+    for spec in &SUITE {
+        let g = generate_cached(spec, scale, &cache);
+        let sgmm = bench(&format!("sgmm/{}", spec.name), &cfg, || Sgmm.run(&g)).median_s;
+        let sidmm = bench(&format!("sidmm/{}", spec.name), &cfg, || {
+            Sidmm::default().run(&g)
+        })
+        .median_s;
+        let skip = bench(&format!("skipper1t/{}", spec.name), &cfg, || {
+            Skipper::new(1).run(&g)
+        })
+        .median_s;
+        let s_slow = sidmm / sgmm;
+        let k_slow = skip / sgmm;
+        ss.push(s_slow);
+        ks.push(k_slow);
+        t.row(&[
+            spec.paper_name.into(),
+            format!("{sgmm:.4}"),
+            format!("{sidmm:.4}"),
+            format!("{skip:.4}"),
+            format!("{s_slow:.1}"),
+            format!("{k_slow:.2}"),
+        ]);
+    }
+    println!(
+        "Fig 11 — serial slowdown, measured (paper: SIDMM 7.3-16.8 gm 10.7, Skipper 1.1-2.2 gm 1.4)\n{}\ngeomeans: SIDMM {:.1}  Skipper {:.2}",
+        t.render(),
+        geomean(&ss).unwrap_or(f64::NAN),
+        geomean(&ks).unwrap_or(f64::NAN)
+    );
+}

@@ -1,0 +1,14 @@
+//! Bench: regenerate paper Fig 3 — SIDMM's parallelization gain plotted
+//! against its memory-access overhead relative to SGMM.
+
+mod common;
+
+use skipper::coordinator::calibrate::calibrate;
+use skipper::coordinator::experiments::{collect_suite, fig3};
+
+fn main() {
+    let scale = common::bench_scale();
+    let cost = calibrate();
+    let metrics = collect_suite(scale, &common::cache_dir(), 1);
+    println!("{}", fig3(&metrics, &cost));
+}

@@ -1,0 +1,12 @@
+//! Bench: regenerate paper Fig 7 — memory accesses per edge for SGMM,
+//! SIDMM and Skipper (counting-probe instrumented runs).
+
+mod common;
+
+use skipper::coordinator::experiments::{collect_suite, fig7};
+
+fn main() {
+    let scale = common::bench_scale();
+    let metrics = collect_suite(scale, &common::cache_dir(), 1);
+    println!("{}", fig7(&metrics));
+}

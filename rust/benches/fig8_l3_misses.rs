@@ -1,0 +1,12 @@
+//! Bench: regenerate paper Fig 8 — L3 misses relative to SGMM, via the
+//! set-associative cache simulator replaying instrumented traces.
+
+mod common;
+
+use skipper::coordinator::experiments::{collect_suite, fig8};
+
+fn main() {
+    let scale = common::bench_scale();
+    let metrics = collect_suite(scale, &common::cache_dir(), 1);
+    println!("{}", fig8(&metrics));
+}

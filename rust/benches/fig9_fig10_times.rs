@@ -1,0 +1,16 @@
+//! Bench: regenerate paper Figs 9 & 10 — absolute execution times and
+//! parallelization gain of SGMM (measured), SIDMM and Skipper (simulated
+//! t=64 via the calibrated cost model).
+
+mod common;
+
+use skipper::coordinator::calibrate::calibrate;
+use skipper::coordinator::experiments::{collect_suite, fig10, fig9};
+
+fn main() {
+    let scale = common::bench_scale();
+    let cost = calibrate();
+    let metrics = collect_suite(scale, &common::cache_dir(), 1);
+    println!("{}", fig9(&metrics, &cost));
+    println!("{}", fig10(&metrics, &cost));
+}

@@ -1,0 +1,52 @@
+//! Hot-path microbenches for the perf pass (§Perf in EXPERIMENTS.md):
+//! - SGMM end-to-end throughput (edges/s),
+//! - Skipper 1-thread end-to-end throughput,
+//! - Skipper multi-thread wall,
+//! - APRAM simulator throughput (simulated ops/s of the host),
+//! - cache-simulator replay throughput.
+
+mod common;
+
+use skipper::apram::{simulate_skipper, SimConfig};
+use skipper::cachesim::Hierarchy;
+use skipper::coordinator::datasets::{generate_cached, spec_by_name};
+use skipper::instrument::TracingProbe;
+use skipper::matching::sgmm::Sgmm;
+use skipper::matching::skipper::Skipper;
+use skipper::matching::MaximalMatcher;
+use skipper::util::benchlib::{bench, BenchConfig};
+
+fn main() {
+    let scale = common::bench_scale();
+    let cache = common::cache_dir();
+    let spec = spec_by_name("g500s").unwrap();
+    let g = generate_cached(spec, scale, &cache);
+    let slots = g.num_edge_slots() as f64;
+    let cfg = BenchConfig {
+        warmup_iters: 1,
+        min_iters: 5,
+        max_seconds: 6.0,
+    };
+
+    let r = bench("sgmm/e2e", &cfg, || Sgmm.run(&g));
+    println!("{}   ({:.1} M edge-slots/s)", r.row(), slots / r.median_s / 1e6);
+
+    let r = bench("skipper-1t/e2e", &cfg, || Skipper::new(1).run(&g));
+    println!("{}   ({:.1} M edge-slots/s)", r.row(), slots / r.median_s / 1e6);
+
+    let r = bench("skipper-4t/e2e", &cfg, || Skipper::new(4).run(&g));
+    println!("{}   ({:.1} M edge-slots/s)", r.row(), slots / r.median_s / 1e6);
+
+    let r = bench("apram-sim-64t/e2e", &cfg, || {
+        simulate_skipper(&g, &SimConfig::new(64))
+    });
+    let ops = simulate_skipper(&g, &SimConfig::new(64)).total_ops() as f64;
+    println!("{}   ({:.1} M sim-ops/s)", r.row(), ops / r.median_s / 1e6);
+
+    // cache sim replay throughput on an SGMM trace
+    let mut trace = TracingProbe::default();
+    let _ = Sgmm.run_probed(&g, &mut trace);
+    let n_ev = trace.events.len() as f64;
+    let r = bench("cachesim/replay-sgmm", &cfg, || Hierarchy::replay(&trace));
+    println!("{}   ({:.1} M events/s)", r.row(), n_ev / r.median_s / 1e6);
+}

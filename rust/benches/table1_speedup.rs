@@ -1,0 +1,18 @@
+//! Bench: regenerate paper Table I — Skipper vs SIDMM execution time and
+//! speedup across the suite (SIDMM/Skipper at simulated t=64; cost model
+//! calibrated on this host). `SKIPPER_BENCH_SCALE=small|medium` for the
+//! full-size run recorded in EXPERIMENTS.md.
+
+mod common;
+
+use skipper::coordinator::calibrate::calibrate;
+use skipper::coordinator::experiments::{collect_suite, table1};
+
+fn main() {
+    let scale = common::bench_scale();
+    eprintln!("[table1] calibrating...");
+    let cost = calibrate();
+    eprintln!("[table1] collecting suite at {} scale...", scale.name());
+    let metrics = collect_suite(scale, &common::cache_dir(), 1);
+    println!("{}", table1(&metrics, &cost));
+}

@@ -1,0 +1,13 @@
+//! Bench: regenerate paper Table II — JIT conflict characteristics at
+//! t=64 and t=16 (APRAM simulation, max-conflict run of N).
+
+mod common;
+
+use skipper::coordinator::experiments::{collect_suite, table2};
+
+fn main() {
+    let scale = common::bench_scale();
+    eprintln!("[table2] collecting suite at {} scale...", scale.name());
+    let metrics = collect_suite(scale, &common::cache_dir(), common::table2_runs());
+    println!("{}", table2(&metrics));
+}

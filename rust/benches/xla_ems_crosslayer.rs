@@ -1,0 +1,32 @@
+//! Bench: cross-layer comparison — the AOT XLA EMS matcher (L1 Pallas
+//! kernel + L2 JAX while-loop, compiled HLO executed via PJRT) vs the L3
+//! rust matchers on padded small graphs. Also reports per-call latency of
+//! the compiled executable (compile-once, execute-many).
+
+use skipper::coordinator::experiments::xla_ems;
+use skipper::graph::gen::{rmat, GenConfig};
+use skipper::runtime::XlaEmsMatcher;
+use skipper::util::benchlib::{bench, BenchConfig};
+
+fn main() {
+    match xla_ems("data") {
+        Ok(report) => println!("{report}"),
+        Err(e) => {
+            eprintln!("[xla_ems] SKIP: {e} (run `make artifacts`)");
+            return;
+        }
+    }
+    // per-call latency of the compiled executable (request-path cost)
+    let matcher = XlaEmsMatcher::from_default_artifacts().expect("artifacts");
+    let g = rmat::generate(&GenConfig { scale: 8, avg_degree: 3, seed: 9 });
+    let exe = matcher
+        .executable_for(g.num_vertices(), g.num_undirected_edges())
+        .expect("variant");
+    let cfg = BenchConfig {
+        warmup_iters: 2,
+        min_iters: 10,
+        max_seconds: 5.0,
+    };
+    let r = bench("xla-ems/execute-v256", &cfg, || exe.run_graph(&g).unwrap());
+    println!("{}", r.row());
+}

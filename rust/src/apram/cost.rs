@@ -1,0 +1,156 @@
+//! Roofline-style cost model converting measured work (access counts,
+//! cache-simulated miss counts, iteration counts) into simulated wall-clock
+//! for `t`-thread executions on the paper's class of hardware.
+//!
+//! ```text
+//! t_par = max(compute_term, bandwidth_term) + sync_term
+//!   compute_term   = (accesses / t) · ns_per_access       — cores scale
+//!   bandwidth_term = l3_misses · miss_penalty / mem_concurrency
+//!                                                         — DRAM does not
+//!   sync_term      = iterations · barrier_us              — EMS-only
+//! ```
+//!
+//! This is exactly the effect the paper's §VI-D discusses: memory-bound
+//! parallel algorithms do not scale with cores because channels and L3 are
+//! shared. `ns_per_access` is calibrated against a real single-thread SGMM
+//! run on the host (see `coordinator::calibrate`), so simulated absolute
+//! times are anchored to measurements and *ratios* are driven by measured
+//! work.
+
+#[derive(Clone, Copy, Debug)]
+pub struct CostModel {
+    /// Cost of a cache-resident memory access (ns).
+    pub ns_per_access: f64,
+    /// Extra cost of an L3 miss → DRAM (ns).
+    pub l3_miss_penalty_ns: f64,
+    /// Sustained number of concurrent DRAM transactions the memory system
+    /// serves (≈ channels × banks-level parallelism; 16 for 2×8-channel
+    /// DDR5 per the paper's testbed).
+    pub mem_concurrency: f64,
+    /// Cost of one parallel-for barrier / iteration handoff (µs) — an
+    /// OpenMP-class barrier across 64 threads on a 2-socket Xeon.
+    pub barrier_us: f64,
+}
+
+impl Default for CostModel {
+    fn default() -> Self {
+        Self {
+            ns_per_access: 1.0,
+            l3_miss_penalty_ns: 80.0,
+            mem_concurrency: 16.0,
+            barrier_us: 10.0,
+        }
+    }
+}
+
+/// Work profile of one algorithm execution.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct WorkProfile {
+    pub accesses: u64,
+    pub l3_misses: u64,
+    /// Synchronized iterations (EMS algorithms); 0 for Skipper/SGMM.
+    pub iterations: u64,
+}
+
+impl CostModel {
+    /// Calibrate `ns_per_access` so that the model reproduces a measured
+    /// sequential run: `seconds = accesses·ns + misses·penalty`.
+    pub fn calibrated(measured_seconds: f64, profile: &WorkProfile) -> Self {
+        let mut m = Self::default();
+        let miss_ns = profile.l3_misses as f64 * m.l3_miss_penalty_ns * 1e-9;
+        let remaining = (measured_seconds - miss_ns).max(measured_seconds * 0.1);
+        if profile.accesses > 0 {
+            m.ns_per_access = remaining / profile.accesses as f64 * 1e9;
+        }
+        m
+    }
+
+    /// Simulated sequential time (seconds).
+    pub fn seq_seconds(&self, p: &WorkProfile) -> f64 {
+        p.accesses as f64 * self.ns_per_access * 1e-9
+            + p.l3_misses as f64 * self.l3_miss_penalty_ns * 1e-9
+    }
+
+    /// Simulated `t`-thread time (seconds), roofline of compute vs memory
+    /// bandwidth plus synchronization.
+    pub fn par_seconds(&self, p: &WorkProfile, threads: usize) -> f64 {
+        let t = threads.max(1) as f64;
+        let compute = p.accesses as f64 / t * self.ns_per_access * 1e-9;
+        let bandwidth =
+            p.l3_misses as f64 * self.l3_miss_penalty_ns / self.mem_concurrency.min(t) * 1e-9;
+        let sync = p.iterations as f64 * self.barrier_us * 1e-6;
+        compute.max(bandwidth) + sync
+    }
+
+    /// Simulated time for a Skipper virtual-thread run: the makespan is the
+    /// maximum per-thread op count (threads run unsynchronized — APRAM), and
+    /// memory bandwidth still bounds below.
+    pub fn skipper_seconds(
+        &self,
+        makespan_ops: u64,
+        total_l3_misses: u64,
+        threads: usize,
+    ) -> f64 {
+        let t = threads.max(1) as f64;
+        let compute = makespan_ops as f64 * self.ns_per_access * 1e-9;
+        let bandwidth =
+            total_l3_misses as f64 * self.l3_miss_penalty_ns / self.mem_concurrency.min(t) * 1e-9;
+        compute.max(bandwidth)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn calibration_roundtrips() {
+        let p = WorkProfile { accesses: 1_000_000, l3_misses: 10_000, iterations: 0 };
+        let m = CostModel::calibrated(0.5, &p);
+        let t = m.seq_seconds(&p);
+        assert!((t - 0.5).abs() / 0.5 < 1e-9, "calibrated {t}");
+    }
+
+    #[test]
+    fn parallel_faster_than_sequential() {
+        let m = CostModel::default();
+        let p = WorkProfile { accesses: 100_000_000, l3_misses: 100_000, iterations: 0 };
+        assert!(m.par_seconds(&p, 64) < m.seq_seconds(&p));
+    }
+
+    #[test]
+    fn bandwidth_bound_limits_scaling() {
+        // Miss-heavy profile: 64 threads gain little over 16 (the paper's
+        // SIDMM non-scaling effect).
+        let m = CostModel::default();
+        let p = WorkProfile { accesses: 10_000_000, l3_misses: 8_000_000, iterations: 0 };
+        let t16 = m.par_seconds(&p, 16);
+        let t64 = m.par_seconds(&p, 64);
+        assert!(t64 > t16 * 0.9, "t64 {t64} t16 {t16}");
+    }
+
+    #[test]
+    fn sync_term_charges_iterations() {
+        let m = CostModel::default();
+        let a = WorkProfile { accesses: 1000, l3_misses: 0, iterations: 0 };
+        let b = WorkProfile { accesses: 1000, l3_misses: 0, iterations: 100 };
+        let diff = m.par_seconds(&b, 8) - m.par_seconds(&a, 8);
+        assert!((diff - 100.0 * 10.0e-6).abs() < 1e-9);
+    }
+
+    #[test]
+    fn skipper_time_uses_makespan() {
+        let m = CostModel::default();
+        let fast = m.skipper_seconds(1_000_000, 0, 64);
+        let slow = m.skipper_seconds(2_000_000, 0, 64);
+        assert!((slow / fast - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn negative_calibration_clamped() {
+        // pathological: misses alone exceed the measured time
+        let p = WorkProfile { accesses: 100, l3_misses: u64::MAX / 1000, iterations: 0 };
+        let m = CostModel::calibrated(0.001, &p);
+        assert!(m.ns_per_access > 0.0);
+    }
+}

@@ -1,0 +1,20 @@
+//! APRAM virtual-thread simulator (DESIGN.md §3).
+//!
+//! The paper evaluates on 64 hardware threads; this sandbox has one core.
+//! Real `std::thread` runs still validate correctness, but 64-thread
+//! *behaviour* — JIT-conflict frequency (Table II), per-thread work balance,
+//! and parallel makespan (Table I, Figs 9/10) — is reproduced here by
+//! executing Skipper's per-edge state machine over `t` **virtual threads**
+//! whose shared-memory operations are interleaved one at a time by a seeded
+//! scheduler. CAS semantics are preserved exactly (the simulation is
+//! sequential, so every step is atomic by construction), which makes the
+//! conflict statistics faithful to the algorithm rather than to the host.
+//!
+//! [`cost`] converts op counts + cache-simulated miss rates into simulated
+//! wall-clock via a roofline-style model calibrated against real
+//! single-thread runs on this machine.
+
+pub mod cost;
+pub mod skipper_sim;
+
+pub use skipper_sim::{simulate_skipper, SimConfig, SimReport};

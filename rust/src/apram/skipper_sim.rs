@@ -1,0 +1,427 @@
+//! Virtual-thread execution of Skipper (Algorithm 1) under a seeded
+//! interleaving scheduler.
+//!
+//! Each virtual thread owns a contiguous run of scheduler blocks (the
+//! thread-dispersed locality-preserving assignment) and advances through a
+//! five-phase per-edge state machine; one `step` ≈ one shared-memory
+//! operation. The scheduler picks a random runnable thread per tick —
+//! the APRAM assumption of no synchronized lockstep.
+
+use crate::graph::CsrGraph;
+use crate::instrument::conflicts::ConflictStats;
+use crate::matching::skipper::{ACC, MCHD, RSVD};
+use crate::matching::Matching;
+use crate::par::scheduler::split_equal_edges;
+use crate::util::rng::Xoshiro256pp;
+use crate::VertexId;
+
+#[derive(Clone, Copy, Debug)]
+pub struct SimConfig {
+    pub threads: usize,
+    pub blocks_per_thread: usize,
+    pub seed: u64,
+}
+
+impl SimConfig {
+    pub fn new(threads: usize) -> Self {
+        Self {
+            threads,
+            blocks_per_thread: 16,
+            seed: 0xA11CE,
+        }
+    }
+}
+
+#[derive(Debug)]
+pub struct SimReport {
+    pub matching: Matching,
+    pub conflicts: ConflictStats,
+    /// Shared-memory operations executed per virtual thread.
+    pub per_thread_ops: Vec<u64>,
+    pub steals: u64,
+}
+
+impl SimReport {
+    pub fn makespan_ops(&self) -> u64 {
+        self.per_thread_ops.iter().copied().max().unwrap_or(0)
+    }
+
+    pub fn total_ops(&self) -> u64 {
+        self.per_thread_ops.iter().sum()
+    }
+
+    /// Load balance: max/mean per-thread ops (1.0 = perfect).
+    pub fn imbalance(&self) -> f64 {
+        let total = self.total_ops();
+        if total == 0 {
+            return 1.0;
+        }
+        let mean = total as f64 / self.per_thread_ops.len() as f64;
+        self.makespan_ops() as f64 / mean
+    }
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Phase {
+    /// Find the next edge to process (vertex iteration + vertex-level skip).
+    NextEdge,
+    /// Algorithm 1 line 10.
+    CheckStates,
+    /// Lines 11–12.
+    TryReserve,
+    /// Lines 13–16.
+    TryMatch,
+    /// Lines 17–18.
+    Release,
+}
+
+struct VThread {
+    cur_block: Option<(VertexId, VertexId)>,
+    v: VertexId,
+    /// Next neighbor index within v's list.
+    ei: usize,
+    /// True once v's state was checked on entry.
+    v_entered: bool,
+    phase: Phase,
+    u: VertexId,
+    w: VertexId,
+    edge_conflicts: u64,
+    ops: u64,
+    done: bool,
+}
+
+/// Run the simulation. Deterministic given `cfg.seed`.
+pub fn simulate_skipper(g: &CsrGraph, cfg: &SimConfig) -> SimReport {
+    let t = cfg.threads.max(1);
+    let blocks = split_equal_edges(g, t * cfg.blocks_per_thread.max(1));
+    let nb = blocks.len();
+    let per = nb.div_ceil(t);
+    let mut cursors: Vec<usize> = (0..t).map(|tid| (tid * per).min(nb)).collect();
+    let ranges: Vec<(usize, usize)> = (0..t)
+        .map(|tid| ((tid * per).min(nb), ((tid + 1) * per).min(nb)))
+        .collect();
+
+    let mut state: Vec<u8> = vec![ACC; g.num_vertices()];
+    let mut matches: Vec<(VertexId, VertexId)> = Vec::new();
+    let mut conflicts = ConflictStats::default();
+    let mut steals = 0u64;
+
+    let mut threads: Vec<VThread> = (0..t)
+        .map(|_tid| VThread {
+            cur_block: None,
+            v: 0,
+            ei: 0,
+            v_entered: false,
+            phase: Phase::NextEdge,
+            u: 0,
+            w: 0,
+            edge_conflicts: 0,
+            ops: 0,
+            done: false,
+        })
+        .collect();
+
+    let mut rng = Xoshiro256pp::new(cfg.seed);
+    let mut alive: Vec<usize> = (0..t).collect();
+
+    while !alive.is_empty() {
+        let pick = rng.next_usize(alive.len());
+        let tid = alive[pick];
+        step(
+            g,
+            &mut threads[tid],
+            tid,
+            &mut state,
+            &mut matches,
+            &mut conflicts,
+            &mut cursors,
+            &ranges,
+            &blocks,
+            &mut steals,
+        );
+        if threads[tid].done {
+            alive.swap_remove(pick);
+        }
+    }
+
+    SimReport {
+        matching: Matching::from_pairs(matches),
+        conflicts,
+        per_thread_ops: threads.iter().map(|th| th.ops).collect(),
+        steals,
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn step(
+    g: &CsrGraph,
+    th: &mut VThread,
+    tid: usize,
+    state: &mut [u8],
+    matches: &mut Vec<(VertexId, VertexId)>,
+    conflicts: &mut ConflictStats,
+    cursors: &mut [usize],
+    ranges: &[(usize, usize)],
+    blocks: &[(VertexId, VertexId)],
+    steals: &mut u64,
+) {
+    match th.phase {
+        // One scheduler tick of NextEdge performs at most ONE shared-state
+        // read (the vertex-entry state check); purely-local transitions
+        // (block claims, vertex/edge cursor advances, self-loop skips,
+        // immutable topology reads) are batched into the same tick — they
+        // are invisible to other threads, so collapsing them preserves the
+        // set of observable interleavings while speeding the simulation up
+        // (§Perf).
+        Phase::NextEdge => loop {
+            // ensure we have a block
+            let be = match th.cur_block {
+                Some((_, be)) => be,
+                None => match claim_block(tid, cursors, ranges, blocks, steals) {
+                    Some(b) => {
+                        th.cur_block = Some(b);
+                        th.v = b.0;
+                        th.ei = 0;
+                        th.v_entered = false;
+                        b.1
+                    }
+                    None => {
+                        th.done = true;
+                        return;
+                    }
+                },
+            };
+            if th.v >= be {
+                th.cur_block = None;
+                continue; // claim the next block within this tick
+            }
+            if !th.v_entered {
+                // vertex-level skip: one SHARED state read -> ends the tick
+                th.ops += 1;
+                th.v_entered = true;
+                th.ei = 0;
+                if state[th.v as usize] == MCHD {
+                    th.v += 1;
+                    th.v_entered = false;
+                }
+                return;
+            }
+            let deg = g.degree(th.v);
+            if th.ei >= deg {
+                th.v += 1;
+                th.v_entered = false;
+                continue;
+            }
+            // fetch next neighbor: immutable topology read (charged as an
+            // op for the cost model, but not a shared-state interaction)
+            th.ops += 1;
+            let y = g.neighbors(th.v)[th.ei];
+            th.ei += 1;
+            let x = th.v;
+            if x == y {
+                continue; // self-loop skipped (lines 6–7)
+            }
+            th.u = x.min(y);
+            th.w = x.max(y);
+            th.edge_conflicts = 0;
+            th.phase = Phase::CheckStates;
+            return;
+        },
+        Phase::CheckStates => {
+            // line 10: two state reads
+            th.ops += 2;
+            if state[th.u as usize] == MCHD || state[th.w as usize] == MCHD {
+                conflicts.record_edge(th.edge_conflicts);
+                finish_edge(g, th, state);
+            } else {
+                th.phase = Phase::TryReserve;
+            }
+        }
+        Phase::TryReserve => {
+            // line 11: one CAS
+            th.ops += 1;
+            if state[th.u as usize] == ACC {
+                state[th.u as usize] = RSVD;
+                th.phase = Phase::TryMatch;
+            } else {
+                th.edge_conflicts += 1;
+                th.phase = Phase::CheckStates;
+            }
+        }
+        Phase::TryMatch => {
+            // line 13 read; line 14 CAS when not MCHD
+            th.ops += 1;
+            match state[th.w as usize] {
+                MCHD => th.phase = Phase::Release,
+                ACC => {
+                    th.ops += 1; // the CAS itself
+                    state[th.w as usize] = MCHD;
+                    state[th.u as usize] = MCHD; // line 15 (plain store)
+                    th.ops += 1;
+                    matches.push((th.u, th.w)); // line 16
+                    conflicts.record_edge(th.edge_conflicts);
+                    finish_edge(g, th, state);
+                }
+                _rsvd => {
+                    th.ops += 1; // failed CAS
+                    th.edge_conflicts += 1;
+                    // spin: stay in TryMatch
+                }
+            }
+        }
+        Phase::Release => {
+            // lines 17–18: plain store, back to line 10
+            th.ops += 1;
+            state[th.u as usize] = ACC;
+            th.phase = Phase::CheckStates;
+        }
+    }
+}
+
+fn finish_edge(g: &CsrGraph, th: &mut VThread, state: &[u8]) {
+    th.phase = Phase::NextEdge;
+    // mid-list skip: if the current vertex just got matched, drop the rest
+    // of its neighbor list (mirrors the real implementation).
+    if state[th.v as usize] == MCHD {
+        th.ei = g.degree(th.v);
+    }
+}
+
+fn claim_block(
+    tid: usize,
+    cursors: &mut [usize],
+    ranges: &[(usize, usize)],
+    blocks: &[(VertexId, VertexId)],
+    steals: &mut u64,
+) -> Option<(VertexId, VertexId)> {
+    let (_, hi) = ranges[tid];
+    if cursors[tid] < hi {
+        let b = blocks[cursors[tid]];
+        cursors[tid] += 1;
+        return Some(b);
+    }
+    // steal from the victim with the most remaining blocks
+    let mut best: Option<(usize, usize)> = None;
+    for v in 0..ranges.len() {
+        if v == tid {
+            continue;
+        }
+        let rem = ranges[v].1.saturating_sub(cursors[v]);
+        if rem > 0 && best.map(|(_, r)| rem > r).unwrap_or(true) {
+            best = Some((v, rem));
+        }
+    }
+    let (victim, _) = best?;
+    let b = blocks[cursors[victim]];
+    cursors[victim] += 1;
+    *steals += 1;
+    Some(b)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::gen::{barabasi_albert, grid, rmat, simple, GenConfig};
+    use crate::matching::{verify, MaximalMatcher};
+
+    fn sim(g: &CsrGraph, t: usize, seed: u64) -> SimReport {
+        simulate_skipper(g, &SimConfig { threads: t, blocks_per_thread: 8, seed })
+    }
+
+    #[test]
+    fn produces_valid_maximal_matchings() {
+        let g = rmat::generate(&GenConfig { scale: 11, avg_degree: 8, seed: 1 });
+        for t in [1, 4, 16, 64] {
+            let r = sim(&g, t, 7);
+            verify::check(&g, &r.matching).unwrap();
+        }
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let g = rmat::generate(&GenConfig { scale: 10, avg_degree: 8, seed: 2 });
+        let a = sim(&g, 16, 5);
+        let b = sim(&g, 16, 5);
+        assert_eq!(a.matching.to_sorted_vec(), b.matching.to_sorted_vec());
+        assert_eq!(a.conflicts, b.conflicts);
+        assert_eq!(a.per_thread_ops, b.per_thread_ops);
+    }
+
+    #[test]
+    fn single_thread_no_conflicts() {
+        let g = rmat::generate(&GenConfig { scale: 10, avg_degree: 8, seed: 3 });
+        let r = sim(&g, 1, 1);
+        assert_eq!(r.conflicts.total, 0);
+    }
+
+    #[test]
+    fn conflicts_rare_and_decrease_with_fewer_threads() {
+        // Paper Table II: conflicting edges ≪ |E|, and t=16 sees fewer
+        // conflicts than t=64.
+        let g = rmat::generate(&GenConfig { scale: 12, avg_degree: 8, seed: 4 });
+        let r64 = sim(&g, 64, 9);
+        let r16 = sim(&g, 16, 9);
+        let ratio = r64.conflicts.edges_with_conflicts as f64 / g.num_edge_slots() as f64;
+        assert!(ratio < 0.02, "conflict ratio {ratio}");
+        assert!(
+            r16.conflicts.total <= r64.conflicts.total,
+            "t=16 {} > t=64 {}",
+            r16.conflicts.total,
+            r64.conflicts.total
+        );
+    }
+
+    #[test]
+    fn star_graph_conflicts_heavily() {
+        // All edges share vertex 0 — the adversarial case where JIT
+        // conflicts must appear and the matching still stays correct.
+        let g = simple::star(2048);
+        let r = sim(&g, 32, 11);
+        verify::check(&g, &r.matching).unwrap();
+        assert_eq!(r.matching.len(), 1);
+    }
+
+    #[test]
+    fn high_locality_graph_low_conflicts() {
+        // §V-B: the dispersed scheduler keeps threads in independent
+        // neighborhoods on high-locality inputs.
+        let g = grid::generate(128, 128, false);
+        let r = sim(&g, 64, 13);
+        verify::check(&g, &r.matching).unwrap();
+        let ratio = r.conflicts.edges_with_conflicts as f64 / g.num_edge_slots() as f64;
+        assert!(ratio < 0.01, "grid conflict ratio {ratio}");
+    }
+
+    #[test]
+    fn work_is_balanced() {
+        let g = barabasi_albert::generate(8192, 8, 5);
+        let r = sim(&g, 16, 3);
+        assert!(r.imbalance() < 1.6, "imbalance {}", r.imbalance());
+    }
+
+    #[test]
+    fn total_ops_linear_in_edges() {
+        // §V-B: expected total work O(|E| + |V|).
+        let g = rmat::generate(&GenConfig { scale: 12, avg_degree: 8, seed: 6 });
+        let r = sim(&g, 64, 2);
+        let per_slot = r.total_ops() as f64 / g.num_edge_slots() as f64;
+        assert!(per_slot < 6.0, "ops per edge slot {per_slot}");
+    }
+
+    #[test]
+    fn matching_size_comparable_to_sgmm() {
+        let g = rmat::generate(&GenConfig { scale: 11, avg_degree: 8, seed: 7 });
+        let s = crate::matching::sgmm::Sgmm.run(&g);
+        let r = sim(&g, 64, 1);
+        let ratio = r.matching.len() as f64 / s.len() as f64;
+        assert!((0.8..1.25).contains(&ratio), "ratio {ratio}");
+    }
+
+    #[test]
+    fn stealing_engages_on_skewed_graphs() {
+        let g = barabasi_albert::generate(4096, 16, 9);
+        let r = sim(&g, 8, 2);
+        // skewed degree distribution should force at least some steals
+        assert!(r.steals > 0 || r.imbalance() < 1.2);
+    }
+}

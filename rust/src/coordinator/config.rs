@@ -1,0 +1,115 @@
+//! Experiment-run configuration, parsed from a TOML-subset file
+//! (`configs/*.toml`). Every field has a sensible default so the CLI works
+//! with no config at all.
+
+use crate::coordinator::datasets::Scale;
+use crate::util::tomlite::Document;
+
+#[derive(Clone, Debug)]
+pub struct RunConfig {
+    /// Suite scale (tiny|small|medium|large).
+    pub scale: Scale,
+    /// APRAM-simulated thread count for the "paper" runs.
+    pub threads: usize,
+    /// Runs per Table II cell (paper: 5).
+    pub table2_runs: usize,
+    /// Output directory for reports.
+    pub report_dir: String,
+    /// Graph cache directory.
+    pub cache_dir: String,
+    /// Restrict to these dataset names (empty = full suite).
+    pub datasets: Vec<String>,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        Self {
+            scale: Scale::Small,
+            threads: 64,
+            table2_runs: 5,
+            report_dir: "reports".into(),
+            cache_dir: "data".into(),
+            datasets: Vec::new(),
+        }
+    }
+}
+
+impl RunConfig {
+    pub fn parse(text: &str) -> Result<Self, String> {
+        let doc = Document::parse(text)?;
+        let mut cfg = RunConfig::default();
+        if let Some(v) = doc.root.get("scale").and_then(|v| v.as_str()) {
+            cfg.scale = Scale::parse(v)?;
+        }
+        if let Some(v) = doc.root.get("threads").and_then(|v| v.as_int()) {
+            if v < 1 {
+                return Err("threads must be >= 1".into());
+            }
+            cfg.threads = v as usize;
+        }
+        if let Some(v) = doc.root.get("table2_runs").and_then(|v| v.as_int()) {
+            cfg.table2_runs = (v as usize).max(1);
+        }
+        if let Some(out) = doc.sections.get("output") {
+            if let Some(v) = out.get("report_dir").and_then(|v| v.as_str()) {
+                cfg.report_dir = v.to_string();
+            }
+            if let Some(v) = out.get("cache_dir").and_then(|v| v.as_str()) {
+                cfg.cache_dir = v.to_string();
+            }
+        }
+        if let Some(arr) = doc.root.get("datasets").and_then(|v| v.as_array()) {
+            cfg.datasets = arr
+                .iter()
+                .filter_map(|v| v.as_str().map(String::from))
+                .collect();
+        }
+        Ok(cfg)
+    }
+
+    pub fn load(path: &str) -> Result<Self, String> {
+        let text = std::fs::read_to_string(path).map_err(|e| format!("read {path}: {e}"))?;
+        Self::parse(&text)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_apply() {
+        let cfg = RunConfig::parse("").unwrap();
+        assert_eq!(cfg.threads, 64);
+        assert_eq!(cfg.scale, Scale::Small);
+        assert_eq!(cfg.table2_runs, 5);
+    }
+
+    #[test]
+    fn full_config_parses() {
+        let cfg = RunConfig::parse(
+            r#"
+            scale = "medium"
+            threads = 16
+            table2_runs = 3
+            datasets = ["g500s", "twitter10s"]
+
+            [output]
+            report_dir = "out/reports"
+            cache_dir = "out/data"
+            "#,
+        )
+        .unwrap();
+        assert_eq!(cfg.scale, Scale::Medium);
+        assert_eq!(cfg.threads, 16);
+        assert_eq!(cfg.table2_runs, 3);
+        assert_eq!(cfg.report_dir, "out/reports");
+        assert_eq!(cfg.datasets, vec!["g500s", "twitter10s"]);
+    }
+
+    #[test]
+    fn rejects_bad_values() {
+        assert!(RunConfig::parse("scale = \"huge\"").is_err());
+        assert!(RunConfig::parse("threads = 0").is_err());
+    }
+}

@@ -1,0 +1,211 @@
+//! The scaled analogue suite standing in for the paper's Table I datasets
+//! (DESIGN.md §3). Every generator is seeded; a given (name, scale) pair is
+//! bit-reproducible. Generated graphs can be cached to disk (`data/*.skg`).
+
+use crate::graph::gen::{
+    barabasi_albert, hostweb::HostWebConfig, hostweb, knn_overlap::KnnConfig, knn_overlap, rmat,
+    GenConfig,
+};
+use crate::graph::{io::binary, CsrGraph};
+
+/// Suite scale: `Tiny` is used for trace-based cache simulation, `Small`
+/// for tests, `Medium` for the shipped experiment runs, `Large` when more
+/// runtime budget is available.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Scale {
+    Tiny,
+    Small,
+    Medium,
+    Large,
+}
+
+impl Scale {
+    pub fn parse(s: &str) -> Result<Self, String> {
+        match s {
+            "tiny" => Ok(Scale::Tiny),
+            "small" => Ok(Scale::Small),
+            "medium" => Ok(Scale::Medium),
+            "large" => Ok(Scale::Large),
+            _ => Err(format!("unknown scale {s:?} (tiny|small|medium|large)")),
+        }
+    }
+
+    /// log2 shrink relative to Medium.
+    fn shift(&self) -> i32 {
+        match self {
+            Scale::Tiny => 4,
+            Scale::Small => 2,
+            Scale::Medium => 0,
+            Scale::Large => -2,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Scale::Tiny => "tiny",
+            Scale::Small => "small",
+            Scale::Medium => "medium",
+            Scale::Large => "large",
+        }
+    }
+}
+
+fn scaled_min(base: usize, scale: Scale, min: usize) -> usize {
+    let s = scale.shift();
+    if s >= 0 {
+        (base >> s).max(min)
+    } else {
+        base << (-s)
+    }
+}
+
+/// Vertex-count scaling (floor 1024 so tiny graphs stay meaningful).
+fn scaled(base: usize, scale: Scale) -> usize {
+    scaled_min(base, scale, 1024)
+}
+
+/// Host-count scaling for the web generators (floor 32).
+fn scaled_hosts(base: usize, scale: Scale) -> usize {
+    scaled_min(base, scale, 32)
+}
+
+/// One suite entry: our analogue of a paper dataset.
+#[derive(Clone, Debug)]
+pub struct DatasetSpec {
+    /// Paper's dataset name this analogue stands in for.
+    pub paper_name: &'static str,
+    /// Our analogue's name.
+    pub name: &'static str,
+    pub kind: &'static str,
+    pub seed: u64,
+}
+
+pub const SUITE: [DatasetSpec; 7] = [
+    DatasetSpec { paper_name: "twitter10", name: "twitter10s", kind: "Social", seed: 101 },
+    DatasetSpec { paper_name: "g500", name: "g500s", kind: "Synth", seed: 102 },
+    DatasetSpec { paper_name: "msa10", name: "msa10s", kind: "Bio", seed: 103 },
+    DatasetSpec { paper_name: "clueweb12", name: "clueweb12s", kind: "Web", seed: 104 },
+    DatasetSpec { paper_name: "wdc14", name: "wdc14s", kind: "Web", seed: 105 },
+    DatasetSpec { paper_name: "eu15", name: "eu15s", kind: "Web", seed: 106 },
+    DatasetSpec { paper_name: "wdc12", name: "wdc12s", kind: "Web", seed: 107 },
+];
+
+/// Generate one dataset at the given scale.
+pub fn generate(spec: &DatasetSpec, scale: Scale) -> CsrGraph {
+    match spec.name {
+        // Social: preferential attachment (hubs, heavy tail)
+        "twitter10s" => barabasi_albert::generate(scaled(1 << 17, scale), 8, spec.seed),
+        // Synthetic: Graph500 RMAT
+        "g500s" => {
+            let base_scale = 17i32 - scale.shift();
+            rmat::generate(&GenConfig {
+                scale: base_scale.max(10) as u32,
+                avg_degree: 16,
+                seed: spec.seed,
+            })
+        }
+        // Bio: banded sequence-similarity
+        "msa10s" => knn_overlap::generate(&KnnConfig {
+            n: scaled(1 << 17, scale),
+            k: 12,
+            window: 32,
+            long_range_p: 0.05,
+            seed: spec.seed,
+        }),
+        // Web graphs: host-block locality + power-law cross links, with
+        // |V| and density increasing across the four entries like the
+        // paper's clueweb12 < wdc14 < eu15 < wdc12 progression.
+        "clueweb12s" => hostweb::generate(&HostWebConfig {
+            num_hosts: scaled_hosts(512, scale),
+            vertices_per_host: 256,
+            intra_degree: 10,
+            inter_degree: 2,
+            seed: spec.seed,
+        }),
+        "wdc14s" => hostweb::generate(&HostWebConfig {
+            num_hosts: scaled_hosts(1024, scale),
+            vertices_per_host: 256,
+            intra_degree: 10,
+            inter_degree: 2,
+            seed: spec.seed,
+        }),
+        "eu15s" => hostweb::generate(&HostWebConfig {
+            num_hosts: scaled_hosts(512, scale),
+            vertices_per_host: 512,
+            intra_degree: 14,
+            inter_degree: 2,
+            seed: spec.seed,
+        }),
+        "wdc12s" => hostweb::generate(&HostWebConfig {
+            num_hosts: scaled_hosts(2048, scale),
+            vertices_per_host: 256,
+            intra_degree: 10,
+            inter_degree: 2,
+            seed: spec.seed,
+        }),
+        other => panic!("unknown dataset {other}"),
+    }
+}
+
+pub fn spec_by_name(name: &str) -> Option<&'static DatasetSpec> {
+    SUITE.iter().find(|s| s.name == name || s.paper_name == name)
+}
+
+/// Generate with an on-disk cache under `cache_dir`.
+pub fn generate_cached(spec: &DatasetSpec, scale: Scale, cache_dir: &str) -> CsrGraph {
+    let path = format!("{cache_dir}/{}_{}.skg", spec.name, scale.name());
+    if let Ok(g) = binary::read_file(&path) {
+        return g;
+    }
+    let g = generate(spec, scale);
+    let _ = std::fs::create_dir_all(cache_dir);
+    let _ = binary::write_file(&path, &g);
+    g
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn suite_generates_at_tiny_scale() {
+        for spec in &SUITE {
+            let g = generate(spec, Scale::Tiny);
+            assert!(g.num_vertices() > 0, "{}", spec.name);
+            assert!(g.num_edge_slots() > 0, "{}", spec.name);
+            assert!(g.is_symmetric(), "{}", spec.name);
+        }
+    }
+
+    #[test]
+    fn scales_are_ordered() {
+        let spec = spec_by_name("g500s").unwrap();
+        let tiny = generate(spec, Scale::Tiny);
+        let small = generate(spec, Scale::Small);
+        assert!(small.num_edge_slots() > tiny.num_edge_slots());
+    }
+
+    #[test]
+    fn lookup_by_paper_name() {
+        assert_eq!(spec_by_name("twitter10").unwrap().name, "twitter10s");
+        assert!(spec_by_name("nope").is_none());
+    }
+
+    #[test]
+    fn deterministic_generation() {
+        let spec = spec_by_name("msa10s").unwrap();
+        assert_eq!(generate(spec, Scale::Tiny), generate(spec, Scale::Tiny));
+    }
+
+    #[test]
+    fn cache_roundtrip() {
+        let dir = std::env::temp_dir().join("skipper_ds_cache_test");
+        let dir = dir.to_str().unwrap();
+        let _ = std::fs::remove_dir_all(dir);
+        let spec = spec_by_name("twitter10s").unwrap();
+        let a = generate_cached(spec, Scale::Tiny, dir);
+        let b = generate_cached(spec, Scale::Tiny, dir); // from cache
+        assert_eq!(a, b);
+        let _ = std::fs::remove_dir_all(dir);
+    }
+}

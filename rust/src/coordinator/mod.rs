@@ -1,0 +1,10 @@
+//! Experiment coordinator: dataset registry (the scaled analogue suite),
+//! cost-model calibration against real host measurements, the experiment
+//! registry (one entry per paper table/figure — DESIGN.md §5), and report
+//! writers.
+
+pub mod calibrate;
+pub mod config;
+pub mod datasets;
+pub mod experiments;
+pub mod report;

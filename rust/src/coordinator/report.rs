@@ -1,0 +1,74 @@
+//! Report writer: collects experiment outputs and writes them as plain text
+//! + a combined markdown summary under the configured report directory.
+
+use std::io::Write;
+
+#[derive(Default)]
+pub struct Report {
+    sections: Vec<(String, String)>,
+}
+
+impl Report {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn add(&mut self, id: &str, content: String) {
+        self.sections.push((id.to_string(), content));
+    }
+
+    pub fn sections(&self) -> &[(String, String)] {
+        &self.sections
+    }
+
+    /// Write one `<id>.txt` per section plus `summary.md`.
+    pub fn write_dir(&self, dir: &str) -> Result<Vec<String>, String> {
+        std::fs::create_dir_all(dir).map_err(|e| format!("mkdir {dir}: {e}"))?;
+        let mut written = Vec::new();
+        for (id, content) in &self.sections {
+            let path = format!("{dir}/{id}.txt");
+            std::fs::write(&path, content).map_err(|e| format!("write {path}: {e}"))?;
+            written.push(path);
+        }
+        let summary = format!("{dir}/summary.md");
+        let mut f =
+            std::fs::File::create(&summary).map_err(|e| format!("create {summary}: {e}"))?;
+        writeln!(f, "# Skipper reproduction — experiment summary\n").map_err(|e| e.to_string())?;
+        for (id, content) in &self.sections {
+            writeln!(f, "## {id}\n\n```\n{content}\n```\n").map_err(|e| e.to_string())?;
+        }
+        written.push(summary);
+        Ok(written)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn writes_sections_and_summary() {
+        let dir = std::env::temp_dir().join("skipper_report_test");
+        let dir = dir.to_str().unwrap();
+        let _ = std::fs::remove_dir_all(dir);
+        let mut r = Report::new();
+        r.add("table1", "row row\n".into());
+        r.add("fig7", "data\n".into());
+        let files = r.write_dir(dir).unwrap();
+        assert_eq!(files.len(), 3);
+        let summary = std::fs::read_to_string(format!("{dir}/summary.md")).unwrap();
+        assert!(summary.contains("## table1"));
+        assert!(std::fs::read_to_string(format!("{dir}/fig7.txt")).unwrap().contains("data"));
+        let _ = std::fs::remove_dir_all(dir);
+    }
+
+    #[test]
+    fn empty_report_still_writes_summary() {
+        let dir = std::env::temp_dir().join("skipper_report_empty");
+        let dir = dir.to_str().unwrap();
+        let _ = std::fs::remove_dir_all(dir);
+        let files = Report::new().write_dir(dir).unwrap();
+        assert_eq!(files.len(), 1);
+        let _ = std::fs::remove_dir_all(dir);
+    }
+}

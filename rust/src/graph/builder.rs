@@ -1,0 +1,218 @@
+//! Edge-list → CSR conversion: counting-sort construction, optional
+//! symmetrization, duplicate/self-loop filtering, and sorted neighbor lists.
+
+use super::{CsrGraph, EdgeList};
+use crate::{EdgeIdx, VertexId};
+
+/// Conversion options.
+#[derive(Clone, Copy, Debug)]
+pub struct BuildOptions {
+    /// Store each undirected edge in both endpoints' lists.
+    pub symmetrize: bool,
+    /// Drop duplicate edges (after symmetrization).
+    pub dedup: bool,
+    /// Drop self-loops. Skipper skips them at run time (Alg. 1 lines 6–7),
+    /// but the EMS baselines expect clean input.
+    pub drop_self_loops: bool,
+}
+
+impl Default for BuildOptions {
+    fn default() -> Self {
+        Self {
+            symmetrize: true,
+            dedup: true,
+            drop_self_loops: true,
+        }
+    }
+}
+
+/// Build a CSR graph from an edge list via counting sort.
+pub fn build(el: &EdgeList, opts: BuildOptions) -> CsrGraph {
+    let n = el.num_vertices;
+    let mut degree = vec![0u64; n + 1];
+    let mut count_edge = |u: VertexId, v: VertexId| {
+        if opts.drop_self_loops && u == v {
+            return;
+        }
+        degree[u as usize + 1] += 1;
+        if opts.symmetrize && u != v {
+            degree[v as usize + 1] += 1;
+        }
+    };
+    for &(u, v) in &el.edges {
+        count_edge(u, v);
+    }
+    // prefix sum -> offsets
+    let mut offsets: Vec<EdgeIdx> = degree;
+    for i in 1..offsets.len() {
+        offsets[i] += offsets[i - 1];
+    }
+    let total = *offsets.last().unwrap() as usize;
+    let mut cursor = offsets.clone();
+    let mut neighbors = vec![0 as VertexId; total];
+    for &(u, v) in &el.edges {
+        if opts.drop_self_loops && u == v {
+            continue;
+        }
+        neighbors[cursor[u as usize] as usize] = v;
+        cursor[u as usize] += 1;
+        if opts.symmetrize && u != v {
+            neighbors[cursor[v as usize] as usize] = u;
+            cursor[v as usize] += 1;
+        }
+    }
+    // sort each neighbor list (small lists; unstable sort is fine)
+    for v in 0..n {
+        let (s, e) = (offsets[v] as usize, offsets[v + 1] as usize);
+        neighbors[s..e].sort_unstable();
+    }
+    let g = CsrGraph::from_parts(offsets, neighbors).expect("builder produced valid CSR");
+    if opts.dedup {
+        dedup_sorted(&g)
+    } else {
+        g
+    }
+}
+
+/// Remove duplicate entries from sorted neighbor lists.
+fn dedup_sorted(g: &CsrGraph) -> CsrGraph {
+    let n = g.num_vertices();
+    let mut offsets: Vec<EdgeIdx> = Vec::with_capacity(n + 1);
+    let mut neighbors: Vec<VertexId> = Vec::with_capacity(g.num_edge_slots());
+    offsets.push(0);
+    for v in 0..n as VertexId {
+        let mut prev: Option<VertexId> = None;
+        for &u in g.neighbors(v) {
+            if prev != Some(u) {
+                neighbors.push(u);
+                prev = Some(u);
+            }
+        }
+        offsets.push(neighbors.len() as EdgeIdx);
+    }
+    CsrGraph::from_parts(offsets, neighbors).expect("dedup produced valid CSR")
+}
+
+/// Convert a CSR graph back into a (u <= v canonical) edge list.
+pub fn to_edge_list(g: &CsrGraph) -> EdgeList {
+    let mut el = EdgeList::new(g.num_vertices());
+    for (v, u) in g.iter_edges() {
+        if v <= u {
+            el.push(v, u);
+        }
+    }
+    el
+}
+
+/// Relabel vertices by the given permutation (`perm[old] = new`), preserving
+/// topology. Used to test ordering-independence of the algorithms (the paper
+/// processes graphs "using their published vertex ordering").
+pub fn relabel(g: &CsrGraph, perm: &[VertexId]) -> CsrGraph {
+    assert_eq!(perm.len(), g.num_vertices());
+    let mut el = EdgeList::new(g.num_vertices());
+    for (v, u) in g.iter_edges() {
+        if v <= u {
+            el.push(perm[v as usize], perm[u as usize]);
+        }
+    }
+    build(
+        &el,
+        BuildOptions {
+            symmetrize: true,
+            dedup: false,
+            drop_self_loops: false,
+        },
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builds_symmetric_sorted_csr() {
+        let mut el = EdgeList::new(4);
+        el.push(2, 0);
+        el.push(0, 1);
+        el.push(3, 2);
+        el.push(1, 2);
+        let g = build(&el, BuildOptions::default());
+        assert_eq!(g.num_vertices(), 4);
+        assert_eq!(g.num_undirected_edges(), 4);
+        assert!(g.is_symmetric());
+        assert_eq!(g.neighbors(2), &[0, 1, 3]);
+    }
+
+    #[test]
+    fn drops_self_loops_and_dups() {
+        let mut el = EdgeList::new(3);
+        el.push(0, 0); // self loop
+        el.push(0, 1);
+        el.push(1, 0); // duplicate after symmetrization
+        el.push(1, 2);
+        let g = build(&el, BuildOptions::default());
+        assert_eq!(g.neighbors(0), &[1]);
+        assert_eq!(g.neighbors(1), &[0, 2]);
+        assert_eq!(g.num_undirected_edges(), 2);
+    }
+
+    #[test]
+    fn keeps_self_loops_when_asked() {
+        let mut el = EdgeList::new(2);
+        el.push(0, 0);
+        el.push(0, 1);
+        let g = build(
+            &el,
+            BuildOptions {
+                drop_self_loops: false,
+                ..Default::default()
+            },
+        );
+        assert_eq!(g.neighbors(0), &[0, 1]);
+    }
+
+    #[test]
+    fn directed_build_when_not_symmetrized() {
+        let mut el = EdgeList::new(3);
+        el.push(0, 1);
+        el.push(1, 2);
+        let g = build(
+            &el,
+            BuildOptions {
+                symmetrize: false,
+                ..Default::default()
+            },
+        );
+        assert_eq!(g.neighbors(0), &[1]);
+        assert_eq!(g.neighbors(1), &[2]);
+        assert!(g.neighbors(2).is_empty());
+        assert!(!g.is_symmetric());
+    }
+
+    #[test]
+    fn roundtrip_edge_list() {
+        let mut el = EdgeList::new(5);
+        el.push(0, 1);
+        el.push(1, 2);
+        el.push(3, 4);
+        let g = build(&el, BuildOptions::default());
+        let back = to_edge_list(&g);
+        let mut edges = back.edges.clone();
+        edges.sort_unstable();
+        assert_eq!(edges, vec![(0, 1), (1, 2), (3, 4)]);
+    }
+
+    #[test]
+    fn relabel_preserves_topology() {
+        let mut el = EdgeList::new(4);
+        el.push(0, 1);
+        el.push(2, 3);
+        let g = build(&el, BuildOptions::default());
+        // swap 0<->3
+        let g2 = relabel(&g, &[3, 1, 2, 0]);
+        assert_eq!(g2.num_undirected_edges(), 2);
+        assert_eq!(g2.neighbors(3), &[1]);
+        assert_eq!(g2.neighbors(0), &[2]);
+        assert!(g2.is_symmetric());
+    }
+}

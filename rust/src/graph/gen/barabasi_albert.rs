@@ -1,0 +1,60 @@
+//! Barabási–Albert preferential attachment — the social-network analogue
+//! (twitter10′): heavy-tailed degrees, hub-centric conflicts.
+
+use crate::graph::builder::{build, BuildOptions};
+use crate::graph::{CsrGraph, EdgeList};
+use crate::util::rng::Xoshiro256pp;
+use crate::VertexId;
+
+/// `n` vertices, each new vertex attaching `m_per_vertex` edges to existing
+/// vertices chosen proportional to degree (implemented with the standard
+/// repeated-endpoint trick: sample uniformly from the endpoint list).
+pub fn edges(n: usize, m_per_vertex: usize, seed: u64) -> EdgeList {
+    assert!(n >= 2 && m_per_vertex >= 1);
+    let mut rng = Xoshiro256pp::new(seed);
+    let mut el = EdgeList::new(n);
+    // endpoint multiset: each occurrence ∝ degree
+    let mut endpoints: Vec<VertexId> = vec![0, 1];
+    el.push(0, 1);
+    for v in 2..n {
+        for _ in 0..m_per_vertex.min(v) {
+            let t = endpoints[rng.next_usize(endpoints.len())];
+            if t != v as VertexId {
+                el.push(v as VertexId, t);
+                endpoints.push(v as VertexId);
+                endpoints.push(t);
+            }
+        }
+    }
+    el
+}
+
+pub fn generate(n: usize, m_per_vertex: usize, seed: u64) -> CsrGraph {
+    build(&edges(n, m_per_vertex, seed), BuildOptions::default())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        assert_eq!(generate(300, 3, 4), generate(300, 3, 4));
+    }
+
+    #[test]
+    fn heavy_tail() {
+        let g = generate(4096, 4, 8);
+        let (_, med, max, _) = g.degree_summary();
+        assert!(max > 10 * med.max(1), "expected hubs: max {max} med {med}");
+        assert!(g.is_symmetric());
+    }
+
+    #[test]
+    fn connected_enough() {
+        // every vertex beyond the first two attaches at least once w.h.p.
+        let g = generate(1000, 2, 6);
+        let isolated = (0..1000).filter(|&v| g.degree(v) == 0).count();
+        assert!(isolated < 5, "isolated={isolated}");
+    }
+}

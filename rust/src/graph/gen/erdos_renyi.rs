@@ -1,0 +1,50 @@
+//! Erdős–Rényi G(n, m): m uniform random edges. The "no locality" extreme
+//! of the suite (paper §V-B: randomization minimizes JIT conflicts).
+
+use crate::graph::builder::{build, BuildOptions};
+use crate::graph::{CsrGraph, EdgeList};
+use crate::util::rng::Xoshiro256pp;
+use crate::VertexId;
+
+pub fn edges(n: usize, m: usize, seed: u64) -> EdgeList {
+    let mut rng = Xoshiro256pp::new(seed);
+    let mut el = EdgeList::new(n);
+    for _ in 0..m {
+        let u = rng.next_usize(n) as VertexId;
+        let v = rng.next_usize(n) as VertexId;
+        el.push(u, v);
+    }
+    el
+}
+
+pub fn generate(n: usize, m: usize, seed: u64) -> CsrGraph {
+    build(&edges(n, m, seed), BuildOptions::default())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        assert_eq!(generate(500, 2000, 9), generate(500, 2000, 9));
+    }
+
+    #[test]
+    fn edge_count_near_m() {
+        let g = generate(1000, 4000, 5);
+        // collisions + self loops remove only a few for sparse graphs
+        assert!(g.num_undirected_edges() > 3800);
+        assert!(g.num_undirected_edges() <= 4000);
+        assert!(g.is_symmetric());
+    }
+
+    #[test]
+    fn degrees_are_concentrated() {
+        let g = generate(1 << 12, 8 << 12, 11);
+        let (_, med, max, mean) = g.degree_summary();
+        assert!((mean - 16.0).abs() < 2.0);
+        // ER max degree stays within a small factor of the median
+        assert!(max < 6 * med, "max {max} med {med}");
+    }
+}

@@ -1,0 +1,61 @@
+//! 2-D grid / torus — the maximum-locality extreme: consecutive vertex IDs
+//! are connected, stressing the thread-dispersed scheduler's claim that
+//! high-locality inputs also see few JIT conflicts (paper §V-B).
+
+use crate::graph::builder::{build, BuildOptions};
+use crate::graph::{CsrGraph, EdgeList};
+use crate::VertexId;
+
+pub fn edges(rows: usize, cols: usize, torus: bool) -> EdgeList {
+    let n = rows * cols;
+    let mut el = EdgeList::new(n);
+    let id = |r: usize, c: usize| (r * cols + c) as VertexId;
+    for r in 0..rows {
+        for c in 0..cols {
+            if c + 1 < cols {
+                el.push(id(r, c), id(r, c + 1));
+            } else if torus && cols > 2 {
+                el.push(id(r, c), id(r, 0));
+            }
+            if r + 1 < rows {
+                el.push(id(r, c), id(r + 1, c));
+            } else if torus && rows > 2 {
+                el.push(id(r, c), id(0, c));
+            }
+        }
+    }
+    el
+}
+
+pub fn generate(rows: usize, cols: usize, torus: bool) -> CsrGraph {
+    build(&edges(rows, cols, torus), BuildOptions::default())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grid_edge_count() {
+        // rows*(cols-1) + cols*(rows-1)
+        let g = generate(5, 7, false);
+        assert_eq!(g.num_undirected_edges(), 5 * 6 + 7 * 4);
+        assert!(g.is_symmetric());
+    }
+
+    #[test]
+    fn torus_regular_degree() {
+        let g = generate(8, 8, true);
+        for v in 0..64 {
+            assert_eq!(g.degree(v), 4, "vertex {v}");
+        }
+    }
+
+    #[test]
+    fn locality_structure() {
+        // interior vertices neighbor v±1 and v±cols
+        let g = generate(10, 10, false);
+        let v = 55u32;
+        assert_eq!(g.neighbors(v), &[45, 54, 56, 65]);
+    }
+}

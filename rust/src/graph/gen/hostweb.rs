@@ -1,0 +1,112 @@
+//! Web-graph analogue (clueweb12′ / wdc14′ / eu15′ / wdc12′): vertices are
+//! grouped into contiguous "host" blocks (web crawls order URLs by host, so
+//! consecutive IDs are densely interlinked) plus power-law cross-host links.
+//! This reproduces the high-locality structure the paper's scheduler
+//! analysis (§V-B) discusses for web graphs.
+
+use crate::graph::builder::{build, BuildOptions};
+use crate::graph::{CsrGraph, EdgeList};
+use crate::util::rng::Xoshiro256pp;
+use crate::VertexId;
+
+#[derive(Clone, Copy, Debug)]
+pub struct HostWebConfig {
+    pub num_hosts: usize,
+    pub vertices_per_host: usize,
+    /// Intra-host edges per vertex (locality component).
+    pub intra_degree: u32,
+    /// Cross-host edges per vertex (power-law target hosts).
+    pub inter_degree: u32,
+    pub seed: u64,
+}
+
+pub fn edges(cfg: &HostWebConfig) -> EdgeList {
+    let n = cfg.num_hosts * cfg.vertices_per_host;
+    let mut rng = Xoshiro256pp::new(cfg.seed);
+    let mut el = EdgeList::new(n);
+    // Zipf-ish host popularity: host h sampled with weight 1/(h+1) via
+    // inverse-CDF on precomputed cumulative weights.
+    let mut cum = Vec::with_capacity(cfg.num_hosts);
+    let mut acc = 0.0f64;
+    for h in 0..cfg.num_hosts {
+        acc += 1.0 / (h + 1) as f64;
+        cum.push(acc);
+    }
+    let total = acc;
+    let sample_host = |rng: &mut Xoshiro256pp| -> usize {
+        let x = rng.next_f64() * total;
+        cum.partition_point(|&c| c < x).min(cfg.num_hosts - 1)
+    };
+    for v in 0..n {
+        let host = v / cfg.vertices_per_host;
+        let host_base = host * cfg.vertices_per_host;
+        // intra-host: nearby IDs (dense local neighborhoods)
+        for _ in 0..cfg.intra_degree {
+            let u = host_base + rng.next_usize(cfg.vertices_per_host);
+            el.push(v as VertexId, u as VertexId);
+        }
+        // inter-host: popular hosts attract links
+        for _ in 0..cfg.inter_degree {
+            let th = sample_host(&mut rng);
+            let u = th * cfg.vertices_per_host + rng.next_usize(cfg.vertices_per_host);
+            el.push(v as VertexId, u as VertexId);
+        }
+    }
+    el
+}
+
+pub fn generate(cfg: &HostWebConfig) -> CsrGraph {
+    build(&edges(cfg), BuildOptions::default())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> HostWebConfig {
+        HostWebConfig {
+            num_hosts: 32,
+            vertices_per_host: 64,
+            intra_degree: 6,
+            inter_degree: 2,
+            seed: 13,
+        }
+    }
+
+    #[test]
+    fn deterministic() {
+        assert_eq!(generate(&cfg()), generate(&cfg()));
+    }
+
+    #[test]
+    fn locality_dominates() {
+        let c = cfg();
+        let g = generate(&c);
+        // most neighbors of a vertex are in its own host block
+        let mut intra = 0usize;
+        let mut total = 0usize;
+        for v in 0..g.num_vertices() as VertexId {
+            let host = v as usize / c.vertices_per_host;
+            for &u in g.neighbors(v) {
+                total += 1;
+                if u as usize / c.vertices_per_host == host {
+                    intra += 1;
+                }
+            }
+        }
+        assert!(intra as f64 > 0.5 * total as f64, "intra {intra}/{total}");
+    }
+
+    #[test]
+    fn popular_hosts_have_more_inlinks() {
+        let c = cfg();
+        let g = generate(&c);
+        let host_degree = |h: usize| -> usize {
+            (h * c.vertices_per_host..(h + 1) * c.vertices_per_host)
+                .map(|v| g.degree(v as VertexId))
+                .sum()
+        };
+        // first host (most popular) should beat the last by a wide margin
+        assert!(host_degree(0) > 2 * host_degree(c.num_hosts - 1));
+    }
+}

@@ -1,0 +1,38 @@
+//! Synthetic graph generators — the scaled analogues of the paper's dataset
+//! suite (DESIGN.md §3). Every generator is seeded and deterministic.
+//!
+//! | Paper graph | Type   | Analogue here |
+//! |-------------|--------|---------------|
+//! | twitter10   | Social | [`barabasi_albert`] (preferential attachment) |
+//! | g500        | Synth  | [`rmat`] with Graph500 parameters |
+//! | msa10       | Bio    | [`knn_overlap`] (sequence-similarity window) |
+//! | clueweb12 / wdc14 / eu15 / wdc12 | Web | [`hostweb`] (host-block locality + power-law cross links) |
+
+pub mod barabasi_albert;
+pub mod erdos_renyi;
+pub mod grid;
+pub mod hostweb;
+pub mod knn_overlap;
+pub mod rmat;
+pub mod simple;
+pub mod watts_strogatz;
+
+/// Common knobs for the scale-style generators.
+#[derive(Clone, Copy, Debug)]
+pub struct GenConfig {
+    /// log2 of the vertex count (Graph500 convention).
+    pub scale: u32,
+    /// Average (undirected) degree target.
+    pub avg_degree: u32,
+    pub seed: u64,
+}
+
+impl GenConfig {
+    pub fn num_vertices(&self) -> usize {
+        1usize << self.scale
+    }
+
+    pub fn num_edges(&self) -> usize {
+        self.num_vertices() * self.avg_degree as usize
+    }
+}

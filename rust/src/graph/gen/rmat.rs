@@ -1,0 +1,82 @@
+//! RMAT / Graph500-style recursive-matrix generator (Murphy et al., "the
+//! graph 500"). Produces the skewed-degree synthetic analogue of `g500`.
+
+use super::GenConfig;
+use crate::graph::builder::{build, BuildOptions};
+use crate::graph::{CsrGraph, EdgeList};
+use crate::util::rng::Xoshiro256pp;
+use crate::VertexId;
+
+/// Graph500 default partition probabilities.
+pub const GRAPH500_PROBS: (f64, f64, f64, f64) = (0.57, 0.19, 0.19, 0.05);
+
+/// Generate an RMAT edge list with the given quadrant probabilities.
+pub fn edges_with_probs(cfg: &GenConfig, probs: (f64, f64, f64, f64)) -> EdgeList {
+    let (a, b, c, _d) = probs;
+    let n = cfg.num_vertices();
+    let m = cfg.num_edges();
+    let mut rng = Xoshiro256pp::new(cfg.seed);
+    let mut el = EdgeList::new(n);
+    for _ in 0..m {
+        let (mut u, mut v) = (0usize, 0usize);
+        for level in (0..cfg.scale).rev() {
+            let r = rng.next_f64();
+            let bit = 1usize << level;
+            if r < a {
+                // upper-left: nothing
+            } else if r < a + b {
+                v |= bit;
+            } else if r < a + b + c {
+                u |= bit;
+            } else {
+                u |= bit;
+                v |= bit;
+            }
+        }
+        el.push(u as VertexId, v as VertexId);
+    }
+    el
+}
+
+/// Generate a symmetric, deduplicated CSR graph with Graph500 probabilities.
+pub fn generate(cfg: &GenConfig) -> CsrGraph {
+    build(&edges_with_probs(cfg, GRAPH500_PROBS), BuildOptions::default())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_by_seed() {
+        let cfg = GenConfig { scale: 8, avg_degree: 4, seed: 1 };
+        assert_eq!(generate(&cfg), generate(&cfg));
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let a = generate(&GenConfig { scale: 8, avg_degree: 4, seed: 1 });
+        let b = generate(&GenConfig { scale: 8, avg_degree: 4, seed: 2 });
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn sizes_in_expected_range() {
+        let cfg = GenConfig { scale: 10, avg_degree: 8, seed: 7 };
+        let g = generate(&cfg);
+        assert_eq!(g.num_vertices(), 1024);
+        // dedup + self-loop removal shrinks below m, but not to nothing
+        assert!(g.num_undirected_edges() > cfg.num_edges() / 4);
+        assert!(g.num_undirected_edges() <= cfg.num_edges());
+        assert!(g.is_symmetric());
+    }
+
+    #[test]
+    fn rmat_is_skewed() {
+        // RMAT should produce a heavier max degree than Erdos-Renyi of the
+        // same size (degree skew drives the paper's conflict analysis).
+        let g = generate(&GenConfig { scale: 12, avg_degree: 8, seed: 3 });
+        let (_, med, max, _) = g.degree_summary();
+        assert!(max > 8 * med.max(1), "max {max} med {med}");
+    }
+}

@@ -1,0 +1,127 @@
+//! Elementary graphs used by unit/property tests and matching stress cases:
+//! paths, cycles, stars, complete graphs, random bipartite graphs, and a
+//! "perfect matching plus noise" construction with known optimum.
+
+use crate::graph::builder::{build, BuildOptions};
+use crate::graph::{CsrGraph, EdgeList};
+use crate::util::rng::Xoshiro256pp;
+use crate::VertexId;
+
+pub fn path(n: usize) -> CsrGraph {
+    let mut el = EdgeList::new(n);
+    for v in 1..n {
+        el.push((v - 1) as VertexId, v as VertexId);
+    }
+    build(&el, BuildOptions::default())
+}
+
+pub fn cycle(n: usize) -> CsrGraph {
+    assert!(n >= 3);
+    let mut el = EdgeList::new(n);
+    for v in 0..n {
+        el.push(v as VertexId, ((v + 1) % n) as VertexId);
+    }
+    build(&el, BuildOptions::default())
+}
+
+/// Star K_{1,n-1}: center 0. Any maximal matching has exactly one edge —
+/// the worst case for contention on a single vertex.
+pub fn star(n: usize) -> CsrGraph {
+    assert!(n >= 2);
+    let mut el = EdgeList::new(n);
+    for v in 1..n {
+        el.push(0, v as VertexId);
+    }
+    build(&el, BuildOptions::default())
+}
+
+pub fn complete(n: usize) -> CsrGraph {
+    let mut el = EdgeList::new(n);
+    for u in 0..n {
+        for v in (u + 1)..n {
+            el.push(u as VertexId, v as VertexId);
+        }
+    }
+    build(&el, BuildOptions::default())
+}
+
+/// Random bipartite graph: `left`+`right` vertices, `m` uniform cross edges.
+pub fn bipartite_random(left: usize, right: usize, m: usize, seed: u64) -> CsrGraph {
+    let mut rng = Xoshiro256pp::new(seed);
+    let mut el = EdgeList::new(left + right);
+    for _ in 0..m {
+        let u = rng.next_usize(left) as VertexId;
+        let v = (left + rng.next_usize(right)) as VertexId;
+        el.push(u, v);
+    }
+    build(&el, BuildOptions::default())
+}
+
+/// A graph containing a planted perfect matching (2i, 2i+1) plus `noise`
+/// random extra edges. Any maximal matching must contain at least n/4 edges
+/// and the planted matching shows the achievable optimum (n/2).
+pub fn planted_matching(n_pairs: usize, noise: usize, seed: u64) -> CsrGraph {
+    let n = 2 * n_pairs;
+    let mut rng = Xoshiro256pp::new(seed);
+    let mut el = EdgeList::new(n);
+    for i in 0..n_pairs {
+        el.push((2 * i) as VertexId, (2 * i + 1) as VertexId);
+    }
+    for _ in 0..noise {
+        el.push(rng.next_usize(n) as VertexId, rng.next_usize(n) as VertexId);
+    }
+    build(&el, BuildOptions::default())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn path_degrees() {
+        let g = path(5);
+        assert_eq!(g.degree(0), 1);
+        assert_eq!(g.degree(2), 2);
+        assert_eq!(g.num_undirected_edges(), 4);
+    }
+
+    #[test]
+    fn cycle_is_2_regular() {
+        let g = cycle(7);
+        for v in 0..7 {
+            assert_eq!(g.degree(v), 2);
+        }
+    }
+
+    #[test]
+    fn star_shape() {
+        let g = star(10);
+        assert_eq!(g.degree(0), 9);
+        for v in 1..10 {
+            assert_eq!(g.degree(v), 1);
+        }
+    }
+
+    #[test]
+    fn complete_count() {
+        let g = complete(6);
+        assert_eq!(g.num_undirected_edges(), 15);
+    }
+
+    #[test]
+    fn bipartite_has_no_same_side_edges() {
+        let g = bipartite_random(50, 70, 300, 3);
+        for (v, u) in g.iter_edges() {
+            let (a, b) = (v < 50, u < 50);
+            assert_ne!(a, b, "edge ({v},{u}) inside one side");
+        }
+    }
+
+    #[test]
+    fn planted_matching_contains_pairs() {
+        let g = planted_matching(20, 30, 5);
+        for i in 0..20u32 {
+            assert!(g.neighbors(2 * i).contains(&(2 * i + 1)));
+        }
+    }
+}

@@ -1,0 +1,110 @@
+//! Watts–Strogatz small-world generator: a ring lattice (high locality)
+//! with probability-`beta` rewiring (injected randomness). Used by the
+//! scheduler ablations to sweep the locality spectrum the paper's §V-B
+//! analysis covers — `beta=0` is the pure-locality extreme, `beta=1`
+//! approaches Erdős–Rényi.
+
+use crate::graph::builder::{build, BuildOptions};
+use crate::graph::{CsrGraph, EdgeList};
+use crate::util::rng::Xoshiro256pp;
+use crate::VertexId;
+
+#[derive(Clone, Copy, Debug)]
+pub struct WsConfig {
+    pub n: usize,
+    /// Each vertex connects to `k` nearest neighbors on each side (ring).
+    pub k: usize,
+    /// Rewiring probability.
+    pub beta: f64,
+    pub seed: u64,
+}
+
+pub fn edges(cfg: &WsConfig) -> EdgeList {
+    assert!(cfg.n > 2 * cfg.k, "n must exceed 2k");
+    let mut rng = Xoshiro256pp::new(cfg.seed);
+    let mut el = EdgeList::new(cfg.n);
+    for v in 0..cfg.n {
+        for j in 1..=cfg.k {
+            let mut u = (v + j) % cfg.n;
+            if rng.next_f64() < cfg.beta {
+                // rewire to a uniform random endpoint (avoid v itself)
+                u = rng.next_usize(cfg.n);
+                if u == v {
+                    u = (u + 1) % cfg.n;
+                }
+            }
+            el.push(v as VertexId, u as VertexId);
+        }
+    }
+    el
+}
+
+pub fn generate(cfg: &WsConfig) -> CsrGraph {
+    build(&edges(cfg), BuildOptions::default())
+}
+
+/// Fraction of edges whose endpoints are within `k` ring positions — a
+/// locality score in [0, 1].
+pub fn locality_score(g: &CsrGraph, k: usize) -> f64 {
+    let n = g.num_vertices() as i64;
+    let mut near = 0usize;
+    let mut total = 0usize;
+    for (v, u) in g.iter_edges() {
+        total += 1;
+        let d = (v as i64 - u as i64).rem_euclid(n).min((u as i64 - v as i64).rem_euclid(n));
+        if d <= k as i64 {
+            near += 1;
+        }
+    }
+    if total == 0 {
+        0.0
+    } else {
+        near as f64 / total as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let c = WsConfig { n: 500, k: 3, beta: 0.1, seed: 4 };
+        assert_eq!(generate(&c), generate(&c));
+    }
+
+    #[test]
+    fn beta_zero_is_pure_ring() {
+        let c = WsConfig { n: 200, k: 2, beta: 0.0, seed: 1 };
+        let g = generate(&c);
+        assert!((locality_score(&g, 2) - 1.0).abs() < 1e-12);
+        for v in 0..200u32 {
+            assert_eq!(g.degree(v), 4, "vertex {v}");
+        }
+    }
+
+    #[test]
+    fn beta_sweep_decreases_locality() {
+        let mk = |beta| {
+            locality_score(
+                &generate(&WsConfig { n: 2000, k: 4, beta, seed: 9 }),
+                4,
+            )
+        };
+        let l0 = mk(0.0);
+        let l_half = mk(0.5);
+        let l1 = mk(1.0);
+        assert!(l0 > l_half && l_half > l1, "{l0} {l_half} {l1}");
+        assert!(l1 < 0.2);
+    }
+
+    #[test]
+    fn matching_works_across_the_sweep() {
+        use crate::matching::{skipper::Skipper, verify, MaximalMatcher};
+        for beta in [0.0, 0.3, 1.0] {
+            let g = generate(&WsConfig { n: 1000, k: 3, beta, seed: 11 });
+            let m = Skipper::new(4).run(&g);
+            verify::check(&g, &m).unwrap();
+        }
+    }
+}

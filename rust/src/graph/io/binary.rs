@@ -1,0 +1,99 @@
+//! Compact binary CSR cache format (`.skg`): little-endian
+//! `magic("SKPGRPH1") | n:u64 | slots:u64 | offsets[(n+1)×u64] | neighbors[slots×u32]`.
+//! Used by the coordinator to cache generated suite graphs between runs.
+
+use crate::graph::CsrGraph;
+use crate::{EdgeIdx, VertexId};
+use std::io::{BufReader, BufWriter, Read, Write};
+
+const MAGIC: &[u8; 8] = b"SKPGRPH1";
+
+pub fn write<W: Write>(w: &mut W, g: &CsrGraph) -> std::io::Result<()> {
+    let mut w = BufWriter::new(w);
+    w.write_all(MAGIC)?;
+    w.write_all(&(g.num_vertices() as u64).to_le_bytes())?;
+    w.write_all(&(g.num_edge_slots() as u64).to_le_bytes())?;
+    for &o in g.offsets() {
+        w.write_all(&o.to_le_bytes())?;
+    }
+    for &nb in g.neighbors_raw() {
+        w.write_all(&nb.to_le_bytes())?;
+    }
+    w.flush()
+}
+
+pub fn read<R: Read>(r: R) -> Result<CsrGraph, String> {
+    let mut r = BufReader::new(r);
+    let mut magic = [0u8; 8];
+    r.read_exact(&mut magic).map_err(|e| format!("magic: {e}"))?;
+    if &magic != MAGIC {
+        return Err("bad magic (not a .skg file)".into());
+    }
+    let n = read_u64(&mut r)? as usize;
+    let slots = read_u64(&mut r)? as usize;
+    let mut offsets: Vec<EdgeIdx> = Vec::with_capacity(n + 1);
+    for _ in 0..=n {
+        offsets.push(read_u64(&mut r)?);
+    }
+    let mut neighbors: Vec<VertexId> = Vec::with_capacity(slots);
+    let mut buf4 = [0u8; 4];
+    for _ in 0..slots {
+        r.read_exact(&mut buf4).map_err(|e| format!("neighbors: {e}"))?;
+        neighbors.push(u32::from_le_bytes(buf4));
+    }
+    CsrGraph::from_parts(offsets, neighbors)
+}
+
+fn read_u64<R: Read>(r: &mut R) -> Result<u64, String> {
+    let mut b = [0u8; 8];
+    r.read_exact(&mut b).map_err(|e| format!("u64: {e}"))?;
+    Ok(u64::from_le_bytes(b))
+}
+
+pub fn write_file(path: &str, g: &CsrGraph) -> Result<(), String> {
+    let mut f = std::fs::File::create(path).map_err(|e| format!("create {path}: {e}"))?;
+    write(&mut f, g).map_err(|e| format!("write {path}: {e}"))
+}
+
+pub fn read_file(path: &str) -> Result<CsrGraph, String> {
+    let f = std::fs::File::open(path).map_err(|e| format!("open {path}: {e}"))?;
+    read(f)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::gen::{rmat, GenConfig};
+
+    #[test]
+    fn roundtrip() {
+        let g = rmat::generate(&GenConfig { scale: 8, avg_degree: 6, seed: 2 });
+        let mut buf = Vec::new();
+        write(&mut buf, &g).unwrap();
+        let back = read(&buf[..]).unwrap();
+        assert_eq!(back, g);
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let buf = b"NOTMAGIC\x00\x00\x00\x00\x00\x00\x00\x00".to_vec();
+        assert!(read(&buf[..]).is_err());
+    }
+
+    #[test]
+    fn rejects_truncated() {
+        let g = rmat::generate(&GenConfig { scale: 6, avg_degree: 4, seed: 2 });
+        let mut buf = Vec::new();
+        write(&mut buf, &g).unwrap();
+        buf.truncate(buf.len() - 3);
+        assert!(read(&buf[..]).is_err());
+    }
+
+    #[test]
+    fn empty_graph_roundtrip() {
+        let g = CsrGraph::from_parts(vec![0], vec![]).unwrap();
+        let mut buf = Vec::new();
+        write(&mut buf, &g).unwrap();
+        assert_eq!(read(&buf[..]).unwrap(), g);
+    }
+}

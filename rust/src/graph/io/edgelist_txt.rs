@@ -1,0 +1,113 @@
+//! Plain-text edge lists: one `u v` pair per line, `#` comments. Vertex
+//! count is `max id + 1` unless a `# vertices: N` header is present.
+
+use crate::graph::EdgeList;
+use crate::VertexId;
+use std::io::{BufRead, BufReader, Read, Write};
+
+pub fn read<R: Read>(r: R) -> Result<EdgeList, String> {
+    let reader = BufReader::new(r);
+    let mut edges: Vec<(VertexId, VertexId)> = Vec::new();
+    let mut declared_n: Option<usize> = None;
+    let mut max_id: u64 = 0;
+    for (lineno, line) in reader.lines().enumerate() {
+        let line = line.map_err(|e| format!("read error: {e}"))?;
+        let line = line.trim();
+        if let Some(rest) = line.strip_prefix('#') {
+            if let Some(v) = rest.trim().strip_prefix("vertices:") {
+                declared_n = Some(
+                    v.trim()
+                        .parse()
+                        .map_err(|_| format!("line {}: bad vertices header", lineno + 1))?,
+                );
+            }
+            continue;
+        }
+        if line.is_empty() {
+            continue;
+        }
+        let mut it = line.split_whitespace();
+        let u: u64 = it
+            .next()
+            .ok_or_else(|| format!("line {}: missing src", lineno + 1))?
+            .parse()
+            .map_err(|_| format!("line {}: bad src", lineno + 1))?;
+        let v: u64 = it
+            .next()
+            .ok_or_else(|| format!("line {}: missing dst", lineno + 1))?
+            .parse()
+            .map_err(|_| format!("line {}: bad dst", lineno + 1))?;
+        max_id = max_id.max(u).max(v);
+        edges.push((u as VertexId, v as VertexId));
+    }
+    let n = declared_n.unwrap_or(if edges.is_empty() { 0 } else { max_id as usize + 1 });
+    if !edges.is_empty() && n <= max_id as usize {
+        return Err(format!("declared vertices {n} <= max id {max_id}"));
+    }
+    Ok(EdgeList {
+        num_vertices: n,
+        edges,
+    })
+}
+
+pub fn write<W: Write>(w: &mut W, el: &EdgeList) -> std::io::Result<()> {
+    writeln!(w, "# vertices: {}", el.num_vertices)?;
+    for &(u, v) in &el.edges {
+        writeln!(w, "{u} {v}")?;
+    }
+    Ok(())
+}
+
+pub fn read_file(path: &str) -> Result<EdgeList, String> {
+    let f = std::fs::File::open(path).map_err(|e| format!("open {path}: {e}"))?;
+    read(f)
+}
+
+pub fn write_file(path: &str, el: &EdgeList) -> Result<(), String> {
+    let mut f = std::fs::File::create(path).map_err(|e| format!("create {path}: {e}"))?;
+    write(&mut f, el).map_err(|e| format!("write {path}: {e}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let el = EdgeList {
+            num_vertices: 10,
+            edges: vec![(0, 1), (5, 9), (3, 3)],
+        };
+        let mut buf = Vec::new();
+        write(&mut buf, &el).unwrap();
+        let back = read(&buf[..]).unwrap();
+        assert_eq!(back, el);
+    }
+
+    #[test]
+    fn infers_vertex_count() {
+        let el = read("0 1\n2 7\n".as_bytes()).unwrap();
+        assert_eq!(el.num_vertices, 8);
+        assert_eq!(el.edges.len(), 2);
+    }
+
+    #[test]
+    fn skips_comments_and_blanks() {
+        let el = read("# hello\n\n0 1\n# another\n1 2\n".as_bytes()).unwrap();
+        assert_eq!(el.edges, vec![(0, 1), (1, 2)]);
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(read("0 x\n".as_bytes()).is_err());
+        assert!(read("justone\n".as_bytes()).is_err());
+        assert!(read("# vertices: 2\n0 5\n".as_bytes()).is_err());
+    }
+
+    #[test]
+    fn empty_input() {
+        let el = read("".as_bytes()).unwrap();
+        assert_eq!(el.num_vertices, 0);
+        assert!(el.edges.is_empty());
+    }
+}

@@ -1,0 +1,6 @@
+//! Graph I/O: whitespace edge-list text, Matrix Market coordinate files,
+//! and a compact binary CSR format for caching generated suites.
+
+pub mod binary;
+pub mod edgelist_txt;
+pub mod mtx;

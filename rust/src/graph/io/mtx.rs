@@ -1,0 +1,118 @@
+//! Matrix Market coordinate format (the common interchange format for the
+//! paper's public datasets). Supports `pattern`/`real`/`integer` fields and
+//! `general`/`symmetric` symmetry; 1-indexed per the spec.
+
+use crate::graph::EdgeList;
+use crate::VertexId;
+use std::io::{BufRead, BufReader, Read, Write};
+
+pub fn read<R: Read>(r: R) -> Result<EdgeList, String> {
+    let reader = BufReader::new(r);
+    let mut lines = reader.lines();
+    let header = lines
+        .next()
+        .ok_or("empty file")?
+        .map_err(|e| e.to_string())?;
+    let head = header.to_ascii_lowercase();
+    if !head.starts_with("%%matrixmarket matrix coordinate") {
+        return Err(format!("unsupported MatrixMarket header: {header}"));
+    }
+    let symmetric = head.contains("symmetric");
+    // skip comments, find size line
+    let mut size_line = None;
+    for line in lines.by_ref() {
+        let line = line.map_err(|e| e.to_string())?;
+        let t = line.trim();
+        if t.is_empty() || t.starts_with('%') {
+            continue;
+        }
+        size_line = Some(t.to_string());
+        break;
+    }
+    let size_line = size_line.ok_or("missing size line")?;
+    let mut it = size_line.split_whitespace();
+    let rows: usize = it.next().ok_or("bad size line")?.parse().map_err(|e| format!("{e}"))?;
+    let cols: usize = it.next().ok_or("bad size line")?.parse().map_err(|e| format!("{e}"))?;
+    let nnz: usize = it.next().ok_or("bad size line")?.parse().map_err(|e| format!("{e}"))?;
+    let n = rows.max(cols);
+    let mut el = EdgeList::new(n);
+    el.edges.reserve(nnz);
+    for line in lines {
+        let line = line.map_err(|e| e.to_string())?;
+        let t = line.trim();
+        if t.is_empty() || t.starts_with('%') {
+            continue;
+        }
+        let mut it = t.split_whitespace();
+        let i: usize = it.next().ok_or("bad entry")?.parse().map_err(|e| format!("{e}"))?;
+        let j: usize = it.next().ok_or("bad entry")?.parse().map_err(|e| format!("{e}"))?;
+        if i == 0 || j == 0 || i > n || j > n {
+            return Err(format!("index out of range: {i} {j} (n={n})"));
+        }
+        el.push((i - 1) as VertexId, (j - 1) as VertexId);
+    }
+    if el.edges.len() != nnz {
+        return Err(format!("expected {nnz} entries, found {}", el.edges.len()));
+    }
+    let _ = symmetric; // symmetrization is the builder's job either way
+    Ok(el)
+}
+
+pub fn write<W: Write>(w: &mut W, el: &EdgeList) -> std::io::Result<()> {
+    writeln!(w, "%%MatrixMarket matrix coordinate pattern general")?;
+    writeln!(w, "{} {} {}", el.num_vertices, el.num_vertices, el.edges.len())?;
+    for &(u, v) in &el.edges {
+        writeln!(w, "{} {}", u + 1, v + 1)?;
+    }
+    Ok(())
+}
+
+pub fn read_file(path: &str) -> Result<EdgeList, String> {
+    let f = std::fs::File::open(path).map_err(|e| format!("open {path}: {e}"))?;
+    read(f)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let el = EdgeList {
+            num_vertices: 5,
+            edges: vec![(0, 1), (4, 2)],
+        };
+        let mut buf = Vec::new();
+        write(&mut buf, &el).unwrap();
+        let back = read(&buf[..]).unwrap();
+        assert_eq!(back, el);
+    }
+
+    #[test]
+    fn parses_with_comments_and_values() {
+        let text = "%%MatrixMarket matrix coordinate real general\n\
+                    % comment\n\
+                    3 3 2\n\
+                    1 2 0.5\n\
+                    3 1 1.0\n";
+        let el = read(text.as_bytes()).unwrap();
+        assert_eq!(el.num_vertices, 3);
+        assert_eq!(el.edges, vec![(0, 1), (2, 0)]);
+    }
+
+    #[test]
+    fn rejects_bad_header_and_counts() {
+        assert!(read("%%MatrixMarket matrix array real\n1 1 1\n".as_bytes()).is_err());
+        let short = "%%MatrixMarket matrix coordinate pattern general\n2 2 2\n1 2\n";
+        assert!(read(short.as_bytes()).is_err());
+        let oob = "%%MatrixMarket matrix coordinate pattern general\n2 2 1\n1 3\n";
+        assert!(read(oob.as_bytes()).is_err());
+    }
+
+    #[test]
+    fn one_indexing() {
+        let text = "%%MatrixMarket matrix coordinate pattern symmetric\n2 2 1\n2 1\n";
+        let el = read(text.as_bytes()).unwrap();
+        assert_eq!(el.edges, vec![(1, 0)]);
+    }
+}

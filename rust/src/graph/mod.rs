@@ -1,0 +1,232 @@
+//! Graph substrate: CSR storage, COO edge lists, builders, loaders, and the
+//! synthetic generators that stand in for the paper's dataset suite.
+//!
+//! Conventions (paper §II-A):
+//! * Graphs are undirected; a *symmetric* CSR stores each edge in both
+//!   endpoints' neighbor lists. Skipper also accepts non-symmetrized CSR
+//!   (each edge present for at least one endpoint) — see §V-C "Input Format
+//!   & Symmetrization" — and the EMS baselines require symmetric input.
+//! * `offsets` has |V|+1 entries; `neighbors[offsets[v]..offsets[v+1]]` are
+//!   v's neighbors.
+
+pub mod builder;
+pub mod gen;
+pub mod io;
+pub mod ordering;
+
+use crate::{EdgeIdx, VertexId};
+
+/// Compressed Sparse Row graph (paper §II-A).
+#[derive(Clone, Debug, PartialEq)]
+pub struct CsrGraph {
+    offsets: Vec<EdgeIdx>,
+    neighbors: Vec<VertexId>,
+}
+
+impl CsrGraph {
+    /// Construct from raw parts, validating CSR invariants.
+    pub fn from_parts(offsets: Vec<EdgeIdx>, neighbors: Vec<VertexId>) -> Result<Self, String> {
+        if offsets.is_empty() {
+            return Err("offsets must have at least one entry".into());
+        }
+        if offsets[0] != 0 {
+            return Err("offsets[0] must be 0".into());
+        }
+        if *offsets.last().unwrap() as usize != neighbors.len() {
+            return Err(format!(
+                "offsets[last]={} != neighbors.len()={}",
+                offsets.last().unwrap(),
+                neighbors.len()
+            ));
+        }
+        if offsets.windows(2).any(|w| w[0] > w[1]) {
+            return Err("offsets must be non-decreasing".into());
+        }
+        let n = (offsets.len() - 1) as u64;
+        if neighbors.iter().any(|&u| u as u64 >= n) {
+            return Err("neighbor id out of range".into());
+        }
+        Ok(Self { offsets, neighbors })
+    }
+
+    /// Number of vertices |V|.
+    #[inline]
+    pub fn num_vertices(&self) -> usize {
+        self.offsets.len() - 1
+    }
+
+    /// Number of stored edge *slots* (2|E| for a symmetric graph).
+    #[inline]
+    pub fn num_edge_slots(&self) -> usize {
+        self.neighbors.len()
+    }
+
+    /// Number of undirected edges assuming symmetric storage.
+    #[inline]
+    pub fn num_undirected_edges(&self) -> usize {
+        self.neighbors.len() / 2
+    }
+
+    #[inline]
+    pub fn degree(&self, v: VertexId) -> usize {
+        (self.offsets[v as usize + 1] - self.offsets[v as usize]) as usize
+    }
+
+    #[inline]
+    pub fn neighbors(&self, v: VertexId) -> &[VertexId] {
+        &self.neighbors[self.offsets[v as usize] as usize..self.offsets[v as usize + 1] as usize]
+    }
+
+    #[inline]
+    pub fn offsets(&self) -> &[EdgeIdx] {
+        &self.offsets
+    }
+
+    #[inline]
+    pub fn neighbors_raw(&self) -> &[VertexId] {
+        &self.neighbors
+    }
+
+    /// Iterate all stored edge slots as `(src, dst)` pairs in CSR order.
+    pub fn iter_edges(&self) -> impl Iterator<Item = (VertexId, VertexId)> + '_ {
+        (0..self.num_vertices() as VertexId)
+            .flat_map(move |v| self.neighbors(v).iter().map(move |&u| (v, u)))
+    }
+
+    /// Check whether each stored edge `(v,u)` also appears as `(u,v)`.
+    pub fn is_symmetric(&self) -> bool {
+        // neighbor lists from our builder are sorted; fall back to linear scan
+        // if not (correctness over speed here — used in tests/validation).
+        self.iter_edges().all(|(v, u)| {
+            let ns = self.neighbors(u);
+            if ns.windows(2).all(|w| w[0] <= w[1]) {
+                ns.binary_search(&v).is_ok()
+            } else {
+                ns.contains(&v)
+            }
+        })
+    }
+
+    /// Maximum degree.
+    pub fn max_degree(&self) -> usize {
+        (0..self.num_vertices() as VertexId)
+            .map(|v| self.degree(v))
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// Approximate resident bytes (topology only).
+    pub fn memory_bytes(&self) -> usize {
+        self.offsets.len() * std::mem::size_of::<EdgeIdx>()
+            + self.neighbors.len() * std::mem::size_of::<VertexId>()
+    }
+
+    /// Degree distribution summary `(min, median, max, mean)`.
+    pub fn degree_summary(&self) -> (usize, usize, usize, f64) {
+        let n = self.num_vertices();
+        if n == 0 {
+            return (0, 0, 0, 0.0);
+        }
+        let mut degs: Vec<usize> = (0..n as VertexId).map(|v| self.degree(v)).collect();
+        degs.sort_unstable();
+        let mean = degs.iter().sum::<usize>() as f64 / n as f64;
+        (degs[0], degs[n / 2], degs[n - 1], mean)
+    }
+}
+
+/// Coordinate-format (COO) edge list. Self-loops and duplicates are allowed
+/// at this stage; [`builder`] normalizes on conversion to CSR.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct EdgeList {
+    pub num_vertices: usize,
+    pub edges: Vec<(VertexId, VertexId)>,
+}
+
+impl EdgeList {
+    pub fn new(num_vertices: usize) -> Self {
+        Self {
+            num_vertices,
+            edges: Vec::new(),
+        }
+    }
+
+    pub fn push(&mut self, u: VertexId, v: VertexId) {
+        debug_assert!((u as usize) < self.num_vertices && (v as usize) < self.num_vertices);
+        self.edges.push((u, v));
+    }
+
+    pub fn len(&self) -> usize {
+        self.edges.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.edges.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> CsrGraph {
+        // 0-1, 0-2, 1-2, 2-3 symmetric
+        CsrGraph::from_parts(
+            vec![0, 2, 4, 7, 8],
+            vec![1, 2, 0, 2, 0, 1, 3, 2],
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn basic_accessors() {
+        let g = tiny();
+        assert_eq!(g.num_vertices(), 4);
+        assert_eq!(g.num_edge_slots(), 8);
+        assert_eq!(g.num_undirected_edges(), 4);
+        assert_eq!(g.degree(2), 3);
+        assert_eq!(g.neighbors(0), &[1, 2]);
+        assert_eq!(g.max_degree(), 3);
+        assert!(g.is_symmetric());
+    }
+
+    #[test]
+    fn iter_edges_covers_all_slots() {
+        let g = tiny();
+        let edges: Vec<_> = g.iter_edges().collect();
+        assert_eq!(edges.len(), 8);
+        assert_eq!(edges[0], (0, 1));
+        assert_eq!(edges[7], (3, 2));
+    }
+
+    #[test]
+    fn asymmetric_detected() {
+        let g = CsrGraph::from_parts(vec![0, 1, 1], vec![1]).unwrap();
+        assert!(!g.is_symmetric());
+    }
+
+    #[test]
+    fn from_parts_validates() {
+        assert!(CsrGraph::from_parts(vec![], vec![]).is_err());
+        assert!(CsrGraph::from_parts(vec![1, 2], vec![0]).is_err()); // offsets[0] != 0
+        assert!(CsrGraph::from_parts(vec![0, 2], vec![0]).is_err()); // last != len
+        assert!(CsrGraph::from_parts(vec![0, 2, 1], vec![0, 0]).is_err()); // decreasing
+        assert!(CsrGraph::from_parts(vec![0, 1], vec![5]).is_err()); // id range
+    }
+
+    #[test]
+    fn degree_summary_sane() {
+        let g = tiny();
+        let (min, _med, max, mean) = g.degree_summary();
+        assert_eq!(min, 1);
+        assert_eq!(max, 3);
+        assert!((mean - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_graph() {
+        let g = CsrGraph::from_parts(vec![0], vec![]).unwrap();
+        assert_eq!(g.num_vertices(), 0);
+        assert_eq!(g.max_degree(), 0);
+        assert!(g.is_symmetric());
+    }
+}

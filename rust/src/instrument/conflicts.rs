@@ -1,0 +1,134 @@
+//! JIT-conflict telemetry (paper Table II): per-edge conflict counts
+//! aggregated into max / total / #edges / average and the bucketed
+//! distribution the table reports.
+
+/// Bucket upper bounds matching Table II's columns:
+/// 1, 2, 3–4, 5–8, 9–16, 17–32, 33–64, 65–128, 129–256, >256.
+pub const BUCKET_LABELS: [&str; 10] =
+    ["1", "2", "3-4", "5-8", "9-16", "17-32", "33-64", "65-128", "129-256", ">256"];
+
+#[derive(Default, Clone, Debug, PartialEq, Eq)]
+pub struct ConflictStats {
+    pub max_per_edge: u64,
+    pub total: u64,
+    pub edges_with_conflicts: u64,
+    pub buckets: [u64; 10],
+}
+
+/// Bucket index for a per-edge conflict count `c >= 1`.
+pub fn bucket_index(c: u64) -> usize {
+    match c {
+        1 => 0,
+        2 => 1,
+        3..=4 => 2,
+        5..=8 => 3,
+        9..=16 => 4,
+        17..=32 => 5,
+        33..=64 => 6,
+        65..=128 => 7,
+        129..=256 => 8,
+        _ => 9,
+    }
+}
+
+impl ConflictStats {
+    /// Record the conflict count observed while processing one edge.
+    /// Zero-conflict edges are not recorded (Table II counts only edges
+    /// that experienced conflicts).
+    pub fn record_edge(&mut self, conflicts: u64) {
+        if conflicts == 0 {
+            return;
+        }
+        self.total += conflicts;
+        self.edges_with_conflicts += 1;
+        self.max_per_edge = self.max_per_edge.max(conflicts);
+        self.buckets[bucket_index(conflicts)] += 1;
+    }
+
+    /// Average conflicts per conflicting edge (Table II column 6).
+    pub fn avg_per_conflicting_edge(&self) -> f64 {
+        if self.edges_with_conflicts == 0 {
+            0.0
+        } else {
+            self.total as f64 / self.edges_with_conflicts as f64
+        }
+    }
+
+    pub fn merge(&mut self, other: &ConflictStats) {
+        self.max_per_edge = self.max_per_edge.max(other.max_per_edge);
+        self.total += other.total;
+        self.edges_with_conflicts += other.edges_with_conflicts;
+        for i in 0..10 {
+            self.buckets[i] += other.buckets[i];
+        }
+    }
+
+    /// Render a Table II-style row fragment.
+    pub fn table_row(&self) -> String {
+        let dist: Vec<String> = self.buckets.iter().map(|b| b.to_string()).collect();
+        format!(
+            "max={} total={} edges={} avg={:.1} dist=[{}]",
+            self.max_per_edge,
+            self.total,
+            self.edges_with_conflicts,
+            self.avg_per_conflicting_edge(),
+            dist.join(",")
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_boundaries() {
+        assert_eq!(bucket_index(1), 0);
+        assert_eq!(bucket_index(2), 1);
+        assert_eq!(bucket_index(3), 2);
+        assert_eq!(bucket_index(4), 2);
+        assert_eq!(bucket_index(5), 3);
+        assert_eq!(bucket_index(8), 3);
+        assert_eq!(bucket_index(16), 4);
+        assert_eq!(bucket_index(17), 5);
+        assert_eq!(bucket_index(64), 6);
+        assert_eq!(bucket_index(128), 7);
+        assert_eq!(bucket_index(256), 8);
+        assert_eq!(bucket_index(257), 9);
+        assert_eq!(bucket_index(10_000), 9);
+    }
+
+    #[test]
+    fn record_and_average() {
+        let mut s = ConflictStats::default();
+        s.record_edge(0); // ignored
+        s.record_edge(3);
+        s.record_edge(1);
+        s.record_edge(410);
+        assert_eq!(s.total, 414);
+        assert_eq!(s.edges_with_conflicts, 3);
+        assert_eq!(s.max_per_edge, 410);
+        assert!((s.avg_per_conflicting_edge() - 138.0).abs() < 1e-9);
+        assert_eq!(s.buckets[0], 1);
+        assert_eq!(s.buckets[2], 1);
+        assert_eq!(s.buckets[9], 1);
+    }
+
+    #[test]
+    fn merge_combines() {
+        let mut a = ConflictStats::default();
+        a.record_edge(2);
+        let mut b = ConflictStats::default();
+        b.record_edge(5);
+        b.record_edge(1);
+        a.merge(&b);
+        assert_eq!(a.total, 8);
+        assert_eq!(a.edges_with_conflicts, 3);
+        assert_eq!(a.max_per_edge, 5);
+    }
+
+    #[test]
+    fn empty_stats_average_zero() {
+        assert_eq!(ConflictStats::default().avg_per_conflicting_edge(), 0.0);
+    }
+}

@@ -1,0 +1,189 @@
+//! Instrumentation substrate replacing the paper's PAPI hardware counters:
+//!
+//! * [`Probe`] — a zero-cost (when disabled) hook counting every load/store
+//!   the algorithms issue against graph topology and algorithm state, at
+//!   synthetic byte addresses so traces can be replayed through
+//!   [`crate::cachesim`] for the L3-miss comparison (Fig 8).
+//! * [`conflicts`] — JIT-conflict telemetry matching Table II's columns.
+
+pub mod conflicts;
+
+/// Synthetic address space: regions are spaced far apart so the cache
+/// simulator never aliases them. All addresses are byte-granular.
+pub mod address {
+    /// CSR offsets array (8 B entries).
+    pub const OFFSETS_BASE: u64 = 0x0000_0000_0000;
+    /// CSR neighbors array (4 B entries).
+    pub const NEIGHBORS_BASE: u64 = 0x1000_0000_0000;
+    /// Per-vertex algorithm state (1 B entries — Skipper's byte, or the
+    /// bit-packed SGMM status rounded to its containing byte).
+    pub const STATE_BASE: u64 = 0x2000_0000_0000;
+    /// Match output buffers (8 B per edge record).
+    pub const MATCHES_BASE: u64 = 0x3000_0000_0000;
+    /// Auxiliary arrays (EMS proposals, sample offsets, priorities, ...).
+    pub const AUX_BASE: u64 = 0x4000_0000_0000;
+    /// Second auxiliary region (e.g. SIDMM per-iteration offsets).
+    pub const AUX2_BASE: u64 = 0x5000_0000_0000;
+
+    #[inline(always)]
+    pub fn offsets(i: u64) -> u64 {
+        OFFSETS_BASE + i * 8
+    }
+    #[inline(always)]
+    pub fn neighbors(i: u64) -> u64 {
+        NEIGHBORS_BASE + i * 4
+    }
+    #[inline(always)]
+    pub fn state(v: u64) -> u64 {
+        STATE_BASE + v
+    }
+    /// SGMM's bit-array status: byte address of the containing word.
+    #[inline(always)]
+    pub fn state_bit(v: u64) -> u64 {
+        STATE_BASE + v / 8
+    }
+    #[inline(always)]
+    pub fn matches(i: u64) -> u64 {
+        MATCHES_BASE + i * 8
+    }
+    #[inline(always)]
+    pub fn aux(i: u64) -> u64 {
+        AUX_BASE + i * 8
+    }
+    #[inline(always)]
+    pub fn aux2(i: u64) -> u64 {
+        AUX2_BASE + i * 8
+    }
+}
+
+/// Memory-access hook. The no-op impl ([`NoProbe`]) compiles away entirely;
+/// [`CountingProbe`] reproduces the paper's "number of load and store
+/// instructions" metric; [`TracingProbe`] records addresses for cache
+/// simulation.
+pub trait Probe {
+    #[inline(always)]
+    fn load(&mut self, _addr: u64) {}
+    #[inline(always)]
+    fn store(&mut self, _addr: u64) {}
+    /// An atomic RMW (CAS / fetch-op): one load + one store at `addr`.
+    #[inline(always)]
+    fn rmw(&mut self, addr: u64) {
+        self.load(addr);
+        self.store(addr);
+    }
+}
+
+/// Disabled instrumentation — all hooks are empty and inlined away.
+#[derive(Default, Clone, Copy, Debug)]
+pub struct NoProbe;
+impl Probe for NoProbe {}
+
+/// Counts loads and stores (paper Figs 3 & 7).
+#[derive(Default, Clone, Copy, Debug)]
+pub struct CountingProbe {
+    pub loads: u64,
+    pub stores: u64,
+}
+
+impl Probe for CountingProbe {
+    #[inline(always)]
+    fn load(&mut self, _addr: u64) {
+        self.loads += 1;
+    }
+    #[inline(always)]
+    fn store(&mut self, _addr: u64) {
+        self.stores += 1;
+    }
+}
+
+impl CountingProbe {
+    pub fn total(&self) -> u64 {
+        self.loads + self.stores
+    }
+
+    pub fn merge(probes: &[CountingProbe]) -> CountingProbe {
+        let mut out = CountingProbe::default();
+        for p in probes {
+            out.loads += p.loads;
+            out.stores += p.stores;
+        }
+        out
+    }
+}
+
+/// Records the full access trace for cache simulation (Fig 8). The store
+/// flag lives in bit 63 (synthetic addresses stay far below it).
+#[derive(Default, Clone, Debug)]
+pub struct TracingProbe {
+    pub events: Vec<u64>,
+}
+
+pub const TRACE_STORE_BIT: u64 = 1 << 63;
+
+impl Probe for TracingProbe {
+    #[inline(always)]
+    fn load(&mut self, addr: u64) {
+        self.events.push(addr);
+    }
+    #[inline(always)]
+    fn store(&mut self, addr: u64) {
+        self.events.push(addr | TRACE_STORE_BIT);
+    }
+}
+
+impl TracingProbe {
+    pub fn iter(&self) -> impl Iterator<Item = (u64, bool)> + '_ {
+        self.events
+            .iter()
+            .map(|&e| (e & !TRACE_STORE_BIT, e & TRACE_STORE_BIT != 0))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counting_probe_counts() {
+        let mut p = CountingProbe::default();
+        p.load(address::offsets(0));
+        p.load(address::neighbors(3));
+        p.store(address::state(5));
+        p.rmw(address::state(6));
+        assert_eq!(p.loads, 3);
+        assert_eq!(p.stores, 2);
+        assert_eq!(p.total(), 5);
+    }
+
+    #[test]
+    fn merge_sums() {
+        let a = CountingProbe { loads: 2, stores: 1 };
+        let b = CountingProbe { loads: 5, stores: 7 };
+        let m = CountingProbe::merge(&[a, b]);
+        assert_eq!((m.loads, m.stores), (7, 8));
+    }
+
+    #[test]
+    fn tracing_probe_tags_stores() {
+        let mut p = TracingProbe::default();
+        p.load(100);
+        p.store(200);
+        let ev: Vec<_> = p.iter().collect();
+        assert_eq!(ev, vec![(100, false), (200, true)]);
+    }
+
+    #[test]
+    fn address_regions_disjoint() {
+        // a billion-entry array in one region must not reach the next region
+        assert!(address::offsets(1 << 32) < address::NEIGHBORS_BASE);
+        assert!(address::neighbors(1 << 33) < address::STATE_BASE);
+        assert!(address::state(1 << 34) < address::MATCHES_BASE);
+        assert!(address::matches(1 << 32) < address::AUX_BASE);
+    }
+
+    #[test]
+    fn state_bit_packs_eight_per_byte() {
+        assert_eq!(address::state_bit(0), address::state_bit(7));
+        assert_ne!(address::state_bit(7), address::state_bit(8));
+    }
+}

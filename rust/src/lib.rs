@@ -1,0 +1,60 @@
+//! # Skipper — Asynchronous Maximal Matching with a Single Pass over Edges
+//!
+//! A production-grade reproduction of the CS.DC 2025 paper by Mohsen Koohi
+//! Esfahani. The crate contains:
+//!
+//! * [`matching::skipper`] — the paper's contribution: a CAS-based,
+//!   single-pass, asynchronous maximal-matching algorithm (Algorithm 1).
+//! * [`matching`] — every baseline the paper discusses: sequential greedy
+//!   (SGMM), IDMM, SIDMM (the GBBS comparator), PBMM, Israeli–Itai, Birn
+//!   et al., and Auer–Bisseling.
+//! * [`graph`] — the CSR/COO graph substrate, loaders, and the scaled
+//!   synthetic analogues of the paper's dataset suite.
+//! * [`par`] — the thread-dispersed locality-preserving block scheduler
+//!   with work stealing (paper §IV-C) on top of a scoped thread pool.
+//! * [`instrument`] — software memory-access counters and JIT-conflict
+//!   telemetry (paper Table II, Figs 3/7).
+//! * [`cachesim`] — a set-associative multi-level cache simulator used to
+//!   reproduce the L3-miss comparison (Fig 8) without PAPI.
+//! * [`apram`] — an APRAM virtual-thread interleaving simulator that runs
+//!   the algorithms' shared-memory state machines under t simulated threads
+//!   (the sandbox has a single physical core; see DESIGN.md §3).
+//! * [`runtime`] — the PJRT runtime that loads the AOT-compiled JAX/Pallas
+//!   EMS matcher (`artifacts/*.hlo.txt`) and exposes it as a baseline.
+//! * [`coordinator`] — config system, dataset registry, experiment registry
+//!   (one entry per paper table/figure), and report writers.
+//! * [`util`] — RNG, bitset, stats, CLI parsing, a mini property-testing
+//!   framework and a bench harness (criterion is unavailable offline).
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use skipper::graph::gen::{rmat, GenConfig};
+//! use skipper::matching::{skipper::Skipper, MaximalMatcher, verify};
+//!
+//! let g = rmat::generate(&GenConfig { scale: 10, avg_degree: 8, seed: 42 });
+//! let m = Skipper::new(4).run(&g);
+//! verify::check(&g, &m).expect("valid maximal matching");
+//! ```
+
+pub mod apram;
+pub mod cachesim;
+pub mod coordinator;
+pub mod graph;
+pub mod instrument;
+pub mod matching;
+pub mod par;
+pub mod runtime;
+pub mod util;
+
+/// Vertex identifier. The paper's suite reaches 3.6G vertices; our scaled
+/// analogues stay well under `u32::MAX`.
+pub type VertexId = u32;
+
+/// Index into the CSR `neighbors` array (edge slot). 64-bit: |E| exceeds
+/// `u32::MAX` for the larger generated graphs.
+pub type EdgeIdx = u64;
+
+/// Sentinel written into unfilled tail slots of per-thread match buffers
+/// (paper §IV-C: "filled with -1 to indicate invalid values").
+pub const INVALID_VERTEX: VertexId = VertexId::MAX;

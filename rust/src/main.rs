@@ -1,0 +1,284 @@
+//! `skipper-cli` — launcher for the Skipper reproduction.
+//!
+//! Subcommands:
+//!   gen         generate a suite dataset (or any built-in generator) to disk
+//!   run         run a matching algorithm on a graph and report stats
+//!   experiment  regenerate one paper table/figure (table1, table2, fig3,
+//!               fig7, fig8, fig9, fig10, fig11, xla-ems)
+//!   suite       run every experiment and write reports/
+//!   info        print dataset/suite information
+
+use skipper::apram::{simulate_skipper, SimConfig};
+use skipper::coordinator::calibrate::calibrate;
+use skipper::coordinator::config::RunConfig;
+use skipper::coordinator::datasets::{generate_cached, spec_by_name, Scale, SUITE};
+use skipper::coordinator::experiments as exp;
+use skipper::coordinator::report::Report;
+use skipper::graph::io::{binary, edgelist_txt, mtx};
+use skipper::graph::builder::{build, BuildOptions};
+use skipper::graph::CsrGraph;
+use skipper::matching::ems::auer_bisseling::AuerBisseling;
+use skipper::matching::ems::birn::Birn;
+use skipper::matching::ems::idmm::Idmm;
+use skipper::matching::ems::israeli_itai::IsraeliItai;
+use skipper::matching::ems::pbmm::Pbmm;
+use skipper::matching::ems::sidmm::Sidmm;
+use skipper::matching::sgmm::Sgmm;
+use skipper::matching::skipper::Skipper;
+use skipper::matching::{verify, MaximalMatcher};
+use skipper::util::cli::Args;
+use std::time::Instant;
+
+const USAGE: &str = "\
+skipper-cli — Skipper maximal matching (paper reproduction)
+
+USAGE:
+  skipper-cli gen --dataset <name> [--scale tiny|small|medium|large] [--out g.skg]
+  skipper-cli run --graph <file|dataset> [--algo skipper|sgmm|sidmm|idmm|pbmm|israeli-itai|birn|auer-bisseling|xla-ems]
+              [--threads N] [--scale S] [--verify] [--conflicts] [--sim]
+  skipper-cli experiment <id> [--config cfg.toml] [--scale S]   (ids: table1 table2 fig3 fig7 fig8 fig9 fig10 fig11 xla-ems)
+  skipper-cli suite [--config cfg.toml] [--scale S]
+  skipper-cli info
+";
+
+fn main() {
+    let raw: Vec<String> = std::env::args().skip(1).collect();
+    let args = match Args::parse(raw, &["verify", "conflicts", "sim", "help"]) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}\n{USAGE}");
+            std::process::exit(2);
+        }
+    };
+    if args.flag("help") || args.positional.is_empty() {
+        println!("{USAGE}");
+        return;
+    }
+    let cmd = args.positional[0].as_str();
+    let result = match cmd {
+        "gen" => cmd_gen(&args),
+        "run" => cmd_run(&args),
+        "experiment" => cmd_experiment(&args),
+        "suite" => cmd_suite(&args),
+        "info" => cmd_info(),
+        other => Err(format!("unknown command {other:?}\n{USAGE}")),
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}
+
+fn load_config(args: &Args) -> Result<RunConfig, String> {
+    let mut cfg = match args.get("config") {
+        Some(path) => RunConfig::load(path)?,
+        None => RunConfig::default(),
+    };
+    if let Some(s) = args.get("scale") {
+        cfg.scale = Scale::parse(s)?;
+    }
+    if let Some(t) = args.get("threads") {
+        cfg.threads = t.parse().map_err(|_| format!("bad --threads {t:?}"))?;
+    }
+    Ok(cfg)
+}
+
+/// Load a graph: a suite dataset name, or an .skg/.mtx/.txt file.
+fn load_graph(name: &str, scale: Scale, cache_dir: &str) -> Result<CsrGraph, String> {
+    if let Some(spec) = spec_by_name(name) {
+        return Ok(generate_cached(spec, scale, cache_dir));
+    }
+    if name.ends_with(".skg") {
+        return binary::read_file(name);
+    }
+    if name.ends_with(".mtx") {
+        let el = mtx::read_file(name)?;
+        return Ok(build(&el, BuildOptions::default()));
+    }
+    if name.ends_with(".txt") || name.ends_with(".el") {
+        let el = edgelist_txt::read_file(name)?;
+        return Ok(build(&el, BuildOptions::default()));
+    }
+    Err(format!(
+        "unknown graph {name:?} (suite dataset or .skg/.mtx/.txt file)"
+    ))
+}
+
+fn cmd_gen(args: &Args) -> Result<(), String> {
+    let name = args.get("dataset").ok_or("--dataset required")?;
+    let scale = Scale::parse(args.get_or("scale", "small"))?;
+    let spec = spec_by_name(name).ok_or_else(|| format!("unknown dataset {name:?}"))?;
+    let g = generate_cached(spec, scale, args.get_or("cache-dir", "data"));
+    let out = args
+        .get("out")
+        .map(String::from)
+        .unwrap_or_else(|| format!("data/{}_{}.skg", spec.name, scale.name()));
+    binary::write_file(&out, &g)?;
+    println!(
+        "{}: |V|={} |E|={} (slots {}) max_deg={} -> {out}",
+        spec.name,
+        g.num_vertices(),
+        g.num_undirected_edges(),
+        g.num_edge_slots(),
+        g.max_degree()
+    );
+    Ok(())
+}
+
+fn cmd_run(args: &Args) -> Result<(), String> {
+    let cfg = load_config(args)?;
+    let graph_name = args.get("graph").ok_or("--graph required")?;
+    let g = load_graph(graph_name, cfg.scale, &cfg.cache_dir)?;
+    let algo = args.get_or("algo", "skipper");
+    let threads: usize = args.get_parse("threads", 4usize)?;
+    println!(
+        "graph {graph_name}: |V|={} |E|={} slots={}",
+        g.num_vertices(),
+        g.num_undirected_edges(),
+        g.num_edge_slots()
+    );
+
+    if args.flag("sim") {
+        // APRAM virtual-thread simulation instead of real threads
+        let t0 = Instant::now();
+        let rep = simulate_skipper(&g, &SimConfig::new(threads));
+        let dt = t0.elapsed().as_secs_f64();
+        println!(
+            "apram-sim skipper t={threads}: |M|={} makespan_ops={} total_ops={} steals={} ({dt:.3}s host)",
+            rep.matching.len(),
+            rep.makespan_ops(),
+            rep.total_ops(),
+            rep.steals
+        );
+        println!("conflicts: {}", rep.conflicts.table_row());
+        if args.flag("verify") {
+            verify::check(&g, &rep.matching)?;
+            println!("verify: OK");
+        }
+        return Ok(());
+    }
+
+    let t0 = Instant::now();
+    let (matching, conflict_row): (_, Option<String>) = match algo {
+        "skipper" => {
+            let sk = Skipper::new(threads);
+            if args.flag("conflicts") {
+                let rep = sk.run_with_conflicts(&g);
+                (rep.matching, Some(rep.conflicts.table_row()))
+            } else {
+                (sk.run(&g), None)
+            }
+        }
+        "sgmm" => (Sgmm.run(&g), None),
+        "sidmm" => (Sidmm::default().run(&g), None),
+        "idmm" => (Idmm::default().run(&g), None),
+        "pbmm" => (Pbmm::default().run(&g), None),
+        "israeli-itai" => (IsraeliItai::default().run(&g), None),
+        "birn" => (Birn::default().run(&g), None),
+        "auer-bisseling" => (AuerBisseling::default().run(&g), None),
+        "xla-ems" => {
+            let m = skipper::runtime::XlaEmsMatcher::from_default_artifacts()
+                .map_err(|e| format!("{e:#}"))?;
+            let (matching, rounds) = m.match_graph(&g).map_err(|e| format!("{e:#}"))?;
+            println!("xla-ems rounds: {rounds}");
+            (matching, None)
+        }
+        other => return Err(format!("unknown --algo {other:?}")),
+    };
+    let dt = t0.elapsed().as_secs_f64();
+    println!("{algo}: |M|={} in {dt:.4}s", matching.len());
+    if let Some(row) = conflict_row {
+        println!("conflicts: {row}");
+    }
+    if args.flag("verify") {
+        verify::check(&g, &matching)?;
+        println!("verify: OK (valid maximal matching)");
+    }
+    Ok(())
+}
+
+fn run_experiments(ids: &[&str], cfg: &RunConfig) -> Result<(), String> {
+    let needs_metrics = ids.iter().any(|&id| id != "xla-ems");
+    let mut report = Report::new();
+    let metrics;
+    let cost;
+    if needs_metrics {
+        eprintln!("calibrating cost model...");
+        cost = calibrate();
+        eprintln!(
+            "cost model: {:.2} ns/access, {:.0} ns L3-miss penalty",
+            cost.ns_per_access, cost.l3_miss_penalty_ns
+        );
+        eprintln!(
+            "collecting suite metrics (scale={}, table2_runs={})...",
+            cfg.scale.name(),
+            cfg.table2_runs
+        );
+        let all = exp::collect_suite(cfg.scale, &cfg.cache_dir, cfg.table2_runs);
+        metrics = if cfg.datasets.is_empty() {
+            all
+        } else {
+            all.into_iter()
+                .filter(|m| {
+                    cfg.datasets
+                        .iter()
+                        .any(|d| d == m.spec.name || d == m.spec.paper_name)
+                })
+                .collect()
+        };
+    } else {
+        metrics = Vec::new();
+        cost = Default::default();
+    }
+    for &id in ids {
+        let content = match id {
+            "table1" => exp::table1(&metrics, &cost),
+            "table2" => exp::table2(&metrics),
+            "fig3" => exp::fig3(&metrics, &cost),
+            "fig7" => exp::fig7(&metrics),
+            "fig8" => exp::fig8(&metrics),
+            "fig9" => exp::fig9(&metrics, &cost),
+            "fig10" => exp::fig10(&metrics, &cost),
+            "fig11" => exp::fig11(&metrics),
+            "xla-ems" => exp::xla_ems(&cfg.cache_dir)?,
+            other => return Err(format!("unknown experiment {other:?}")),
+        };
+        println!("{content}");
+        report.add(id, content);
+    }
+    let files = report.write_dir(&cfg.report_dir)?;
+    eprintln!("wrote {}", files.join(", "));
+    Ok(())
+}
+
+fn cmd_experiment(args: &Args) -> Result<(), String> {
+    let id = args
+        .positional
+        .get(1)
+        .ok_or("experiment id required (table1 table2 fig3 fig7 fig8 fig9 fig10 fig11 xla-ems)")?;
+    let cfg = load_config(args)?;
+    run_experiments(&[id.as_str()], &cfg)
+}
+
+fn cmd_suite(args: &Args) -> Result<(), String> {
+    let cfg = load_config(args)?;
+    run_experiments(
+        &[
+            "table1", "table2", "fig3", "fig7", "fig8", "fig9", "fig10", "fig11", "xla-ems",
+        ],
+        &cfg,
+    )
+}
+
+fn cmd_info() -> Result<(), String> {
+    println!("Suite datasets (scaled analogues of the paper's Table I):");
+    for spec in &SUITE {
+        println!(
+            "  {:<12} ({:<6}) analogue of {}",
+            spec.name, spec.kind, spec.paper_name
+        );
+    }
+    println!("\nScales: tiny (trace/cachesim), small (default), medium, large");
+    println!("Artifacts dir: {}", skipper::runtime::artifacts_dir());
+    Ok(())
+}

@@ -1,0 +1,153 @@
+//! Auer & Bisseling (2012) red/blue GPU matching (paper §II-D): each
+//! iteration randomly colors live vertices red or blue; blue vertices
+//! propose to a random live red neighbor; each red vertex accepts the
+//! lowest-id proposal; matched and dead vertices leave the graph.
+
+use crate::graph::CsrGraph;
+use crate::instrument::{address, NoProbe, Probe};
+use crate::matching::{MaximalMatcher, Matching};
+use crate::util::rng::Xoshiro256pp;
+use crate::VertexId;
+
+#[derive(Clone, Copy, Debug)]
+pub struct AuerBisseling {
+    pub seed: u64,
+}
+
+impl Default for AuerBisseling {
+    fn default() -> Self {
+        Self { seed: 0xAB }
+    }
+}
+
+impl AuerBisseling {
+    pub fn run_probed<P: Probe>(&self, g: &CsrGraph, probe: &mut P) -> (Matching, usize) {
+        let n = g.num_vertices();
+        let mut rng = Xoshiro256pp::new(self.seed);
+        let mut matched = vec![false; n];
+        let mut proposal: Vec<VertexId> = vec![VertexId::MAX; n]; // red <- min blue proposer
+        let mut matches: Vec<(VertexId, VertexId)> = Vec::new();
+        let mut live: Vec<VertexId> = (0..n as VertexId).collect();
+        let mut blue = vec![false; n];
+        let mut iterations = 0usize;
+
+        while !live.is_empty() {
+            iterations += 1;
+            // color step
+            for &v in &live {
+                blue[v as usize] = rng.next_u64() & 1 == 0;
+                probe.store(address::aux(v as u64));
+            }
+            // proposal step: blue v proposes to a random live red neighbor
+            let mut any_proposal = false;
+            for &v in &live {
+                if !blue[v as usize] {
+                    continue;
+                }
+                probe.load(address::offsets(v as u64));
+                probe.load(address::offsets(v as u64 + 1));
+                let base = g.offsets()[v as usize];
+                let mut target = VertexId::MAX;
+                let mut count = 0u64;
+                for (i, &u) in g.neighbors(v).iter().enumerate() {
+                    probe.load(address::neighbors(base + i as u64));
+                    if u == v {
+                        continue;
+                    }
+                    probe.load(address::state_bit(u as u64));
+                    probe.load(address::aux(u as u64));
+                    if !matched[u as usize] && !blue[u as usize] {
+                        count += 1;
+                        if rng.next_below(count) == 0 {
+                            target = u;
+                        }
+                    }
+                }
+                if target != VertexId::MAX {
+                    // accept lowest proposer id (deterministic tie-break)
+                    probe.rmw(address::aux2(target as u64));
+                    if v < proposal[target as usize] {
+                        proposal[target as usize] = v;
+                    }
+                    any_proposal = true;
+                }
+            }
+            // accept step: red vertex matches its chosen proposer
+            if any_proposal {
+                for &v in &live {
+                    if blue[v as usize] {
+                        continue;
+                    }
+                    probe.load(address::aux2(v as u64));
+                    let p = proposal[v as usize];
+                    if p != VertexId::MAX && !matched[v as usize] && !matched[p as usize] {
+                        matched[v as usize] = true;
+                        matched[p as usize] = true;
+                        probe.store(address::state_bit(v as u64));
+                        probe.store(address::state_bit(p as u64));
+                        probe.store(address::matches(matches.len() as u64));
+                        matches.push((v.min(p), v.max(p)));
+                    }
+                    proposal[v as usize] = VertexId::MAX;
+                    probe.store(address::aux2(v as u64));
+                }
+            }
+            // prune: matched vertices and vertices with no live neighbors
+            live.retain(|&v| {
+                probe.load(address::state_bit(v as u64));
+                if matched[v as usize] {
+                    return false;
+                }
+                g.neighbors(v).iter().any(|&u| u != v && !matched[u as usize])
+            });
+        }
+        (Matching::from_pairs(matches), iterations)
+    }
+}
+
+impl MaximalMatcher for AuerBisseling {
+    fn name(&self) -> String {
+        "Auer-Bisseling".into()
+    }
+
+    fn run(&self, g: &CsrGraph) -> Matching {
+        self.run_probed(g, &mut NoProbe).0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::gen::{rmat, simple, GenConfig};
+    use crate::matching::verify;
+
+    #[test]
+    fn valid_on_small_graphs() {
+        for g in [simple::path(13), simple::cycle(11), simple::star(18), simple::complete(6)] {
+            let m = AuerBisseling::default().run(&g);
+            verify::check(&g, &m).unwrap();
+        }
+    }
+
+    #[test]
+    fn valid_on_rmat() {
+        let g = rmat::generate(&GenConfig { scale: 10, avg_degree: 8, seed: 6 });
+        let m = AuerBisseling::default().run(&g);
+        verify::check(&g, &m).unwrap();
+    }
+
+    #[test]
+    fn bipartite_graphs_match_well() {
+        let g = simple::bipartite_random(200, 200, 2000, 3);
+        let m = AuerBisseling::default().run(&g);
+        verify::check(&g, &m).unwrap();
+        assert!(m.len() > 50);
+    }
+
+    #[test]
+    fn converges() {
+        let g = rmat::generate(&GenConfig { scale: 11, avg_degree: 8, seed: 7 });
+        let (_, iters) = AuerBisseling::default().run_probed(&g, &mut NoProbe);
+        assert!(iters < 80, "took {iters} iterations");
+    }
+}

@@ -1,0 +1,138 @@
+//! Birn, Osipov, Sanders, Schulz, Sitchinava (Euro-Par'13) — "local max"
+//! matching (paper §II-D): each iteration assigns random weights to live
+//! edges; an edge that is the heaviest incident edge at *both* endpoints is
+//! matched; covered edges are pruned.
+
+use super::canonical_edges;
+use crate::graph::CsrGraph;
+use crate::instrument::{address, NoProbe, Probe};
+use crate::matching::{MaximalMatcher, Matching};
+use crate::util::rng::SplitMix64;
+use crate::VertexId;
+
+#[derive(Clone, Copy, Debug)]
+pub struct Birn {
+    pub seed: u64,
+}
+
+impl Default for Birn {
+    fn default() -> Self {
+        Self { seed: 0xB19 }
+    }
+}
+
+/// Per-(iteration, edge) random weight: stateless hash so no per-edge
+/// weight array must persist across iterations. Ties are broken by edge id
+/// (weights embed the id in the low bits).
+fn weight(seed: u64, iter: u64, edge: u32) -> u64 {
+    let mut h = SplitMix64::new(seed ^ (iter << 32) ^ edge as u64);
+    (h.next_u64() & !0xFFFF_FFFF) | edge as u64
+}
+
+impl Birn {
+    pub fn run_probed<P: Probe>(&self, g: &CsrGraph, probe: &mut P) -> (Matching, usize) {
+        let edges = canonical_edges(g);
+        let n = g.num_vertices();
+        let mut matched = vec![false; n];
+        let mut best: Vec<u64> = vec![0; n];
+        let mut matches: Vec<(VertexId, VertexId)> = Vec::new();
+        let mut active: Vec<u32> = (0..edges.len() as u32).collect();
+        let mut iterations = 0usize;
+
+        while !active.is_empty() {
+            iterations += 1;
+            // heaviest incident edge per endpoint
+            for &e in &active {
+                let (u, v) = edges[e as usize];
+                let w = weight(self.seed, iterations as u64, e);
+                probe.rmw(address::state(u as u64));
+                probe.rmw(address::state(v as u64));
+                if w > best[u as usize] {
+                    best[u as usize] = w;
+                }
+                if w > best[v as usize] {
+                    best[v as usize] = w;
+                }
+            }
+            // commit local maxima
+            for &e in &active {
+                let (u, v) = edges[e as usize];
+                let w = weight(self.seed, iterations as u64, e);
+                probe.load(address::state(u as u64));
+                probe.load(address::state(v as u64));
+                if best[u as usize] == w && best[v as usize] == w {
+                    matched[u as usize] = true;
+                    matched[v as usize] = true;
+                    probe.store(address::state_bit(u as u64));
+                    probe.store(address::state_bit(v as u64));
+                    probe.store(address::matches(matches.len() as u64));
+                    matches.push((u, v));
+                }
+            }
+            // prune + reset
+            let mut next = Vec::with_capacity(active.len());
+            for &e in &active {
+                let (u, v) = edges[e as usize];
+                best[u as usize] = 0;
+                best[v as usize] = 0;
+                probe.store(address::state(u as u64));
+                probe.store(address::state(v as u64));
+                probe.load(address::state_bit(u as u64));
+                probe.load(address::state_bit(v as u64));
+                if !matched[u as usize] && !matched[v as usize] {
+                    next.push(e);
+                }
+            }
+            active = next;
+        }
+        (Matching::from_pairs(matches), iterations)
+    }
+}
+
+impl MaximalMatcher for Birn {
+    fn name(&self) -> String {
+        "Birn-LocalMax".into()
+    }
+
+    fn run(&self, g: &CsrGraph) -> Matching {
+        self.run_probed(g, &mut NoProbe).0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::gen::{rmat, simple, GenConfig};
+    use crate::matching::verify;
+
+    #[test]
+    fn weights_unique_per_edge() {
+        let a = weight(1, 1, 10);
+        let b = weight(1, 1, 11);
+        assert_ne!(a, b);
+        // id tiebreak survives in low bits
+        assert_eq!(a as u32, 10);
+    }
+
+    #[test]
+    fn valid_on_small_graphs() {
+        for g in [simple::path(12), simple::cycle(13), simple::star(14), simple::complete(7)] {
+            let m = Birn::default().run(&g);
+            verify::check(&g, &m).unwrap();
+        }
+    }
+
+    #[test]
+    fn valid_on_rmat() {
+        let g = rmat::generate(&GenConfig { scale: 10, avg_degree: 8, seed: 4 });
+        let m = Birn::default().run(&g);
+        verify::check(&g, &m).unwrap();
+    }
+
+    #[test]
+    fn converges_quickly() {
+        let g = rmat::generate(&GenConfig { scale: 11, avg_degree: 8, seed: 5 });
+        let (_, iters) = Birn::default().run_probed(&g, &mut NoProbe);
+        assert!(iters < 40, "took {iters} iterations");
+    }
+}

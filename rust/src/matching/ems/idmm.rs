@@ -1,0 +1,227 @@
+//! Internally-Deterministic MM (Blelloch, Fineman, Gibbons, Shun, PPoPP'12)
+//! — the parallel-reservation EMS instance (paper §II-D).
+//!
+//! Each iteration: *reserve* — every live edge writes its priority into both
+//! endpoints, keeping the minimum; *commit* — an edge whose priority is the
+//! minimum at both endpoints becomes a match; live edges with a matched
+//! endpoint are pruned. Deterministic given the priority array.
+
+use super::canonical_edges;
+use crate::graph::CsrGraph;
+use crate::instrument::{address, NoProbe, Probe};
+use crate::matching::{MaximalMatcher, Matching};
+use crate::util::rng::Xoshiro256pp;
+use crate::VertexId;
+
+#[derive(Clone, Debug)]
+pub struct Idmm {
+    /// Edge priorities; `None` uses edge IDs (the IDMM default). A random
+    /// permutation gives the expected O(log) round count.
+    pub priorities: Option<Vec<u32>>,
+}
+
+impl Default for Idmm {
+    fn default() -> Self {
+        Self { priorities: None }
+    }
+}
+
+impl Idmm {
+    pub fn with_random_priorities(num_edges: usize, seed: u64) -> Self {
+        let mut rng = Xoshiro256pp::new(seed);
+        Self {
+            priorities: Some(rng.permutation(num_edges)),
+        }
+    }
+
+    pub fn run_probed<P: Probe>(&self, g: &CsrGraph, probe: &mut P) -> (Matching, usize) {
+        let edges = canonical_edges(g);
+        // extraction itself reads the topology once
+        probe.load(address::offsets(0));
+        for i in 0..g.num_edge_slots() as u64 {
+            probe.load(address::neighbors(i));
+        }
+        let mut matched = vec![false; g.num_vertices()];
+        let mut matches = Vec::new();
+        let mut active: Vec<u32> = (0..edges.len() as u32).collect();
+        let pri = |e: u32| -> u32 {
+            match &self.priorities {
+                Some(p) => p[e as usize],
+                None => e,
+            }
+        };
+        let mut reserve: Vec<u32> = vec![u32::MAX; g.num_vertices()];
+        let mut rounds = 0usize;
+        while !active.is_empty() {
+            rounds += 1;
+            // reserve phase
+            for &e in &active {
+                let (u, v) = edges[e as usize];
+                let p = pri(e);
+                probe.load(address::aux(e as u64));
+                probe.rmw(address::state(u as u64)); // priority write-min
+                probe.rmw(address::state(v as u64));
+                if p < reserve[u as usize] {
+                    reserve[u as usize] = p;
+                }
+                if p < reserve[v as usize] {
+                    reserve[v as usize] = p;
+                }
+            }
+            // commit phase
+            for &e in &active {
+                let (u, v) = edges[e as usize];
+                let p = pri(e);
+                probe.load(address::state(u as u64));
+                probe.load(address::state(v as u64));
+                if reserve[u as usize] == p && reserve[v as usize] == p {
+                    matched[u as usize] = true;
+                    matched[v as usize] = true;
+                    probe.store(address::state_bit(u as u64));
+                    probe.store(address::state_bit(v as u64));
+                    probe.store(address::matches(matches.len() as u64));
+                    matches.push((u, v));
+                }
+            }
+            // prune + reset reservations of surviving endpoints
+            let mut next: Vec<u32> = Vec::with_capacity(active.len());
+            for &e in &active {
+                let (u, v) = edges[e as usize];
+                probe.load(address::state_bit(u as u64));
+                probe.load(address::state_bit(v as u64));
+                if !matched[u as usize] && !matched[v as usize] {
+                    next.push(e);
+                    probe.store(address::aux2(e as u64));
+                }
+                reserve[u as usize] = u32::MAX;
+                reserve[v as usize] = u32::MAX;
+                probe.store(address::state(u as u64));
+                probe.store(address::state(v as u64));
+            }
+            active = next;
+        }
+        (Matching::from_pairs(matches), rounds)
+    }
+}
+
+impl MaximalMatcher for Idmm {
+    fn name(&self) -> String {
+        "IDMM".into()
+    }
+
+    fn run(&self, g: &CsrGraph) -> Matching {
+        self.run_probed(g, &mut NoProbe).0
+    }
+}
+
+/// Expose one reserve/commit round over an explicit edge set — shared by
+/// SIDMM (which runs IDMM on sampled edges) and PBMM (which runs it on
+/// priority-prefix batches). Returns matches found this round; `live`
+/// is pruned in place.
+pub fn idmm_rounds_on_edges<P: Probe>(
+    edges: &[(VertexId, VertexId)],
+    priorities: &[u32],
+    matched: &mut [bool],
+    reserve: &mut [u32],
+    matches: &mut Vec<(VertexId, VertexId)>,
+    probe: &mut P,
+) -> usize {
+    let mut active: Vec<u32> = (0..edges.len() as u32)
+        .filter(|&e| {
+            let (u, v) = edges[e as usize];
+            !matched[u as usize] && !matched[v as usize]
+        })
+        .collect();
+    let mut rounds = 0;
+    while !active.is_empty() {
+        rounds += 1;
+        for &e in &active {
+            let (u, v) = edges[e as usize];
+            let p = priorities[e as usize];
+            probe.rmw(address::state(u as u64));
+            probe.rmw(address::state(v as u64));
+            if p < reserve[u as usize] {
+                reserve[u as usize] = p;
+            }
+            if p < reserve[v as usize] {
+                reserve[v as usize] = p;
+            }
+        }
+        for &e in &active {
+            let (u, v) = edges[e as usize];
+            let p = priorities[e as usize];
+            probe.load(address::state(u as u64));
+            probe.load(address::state(v as u64));
+            if reserve[u as usize] == p && reserve[v as usize] == p {
+                matched[u as usize] = true;
+                matched[v as usize] = true;
+                probe.store(address::state_bit(u as u64));
+                probe.store(address::state_bit(v as u64));
+                probe.store(address::matches(matches.len() as u64));
+                matches.push((u, v));
+            }
+        }
+        let mut next = Vec::with_capacity(active.len());
+        for &e in &active {
+            let (u, v) = edges[e as usize];
+            probe.load(address::state_bit(u as u64));
+            probe.load(address::state_bit(v as u64));
+            reserve[u as usize] = u32::MAX;
+            reserve[v as usize] = u32::MAX;
+            probe.store(address::state(u as u64));
+            probe.store(address::state(v as u64));
+            if !matched[u as usize] && !matched[v as usize] {
+                next.push(e);
+            }
+        }
+        active = next;
+    }
+    rounds
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::gen::{rmat, simple, GenConfig};
+    use crate::matching::verify;
+
+    #[test]
+    fn path_deterministic() {
+        let g = simple::path(7);
+        let m = Idmm::default().run(&g);
+        verify::check(&g, &m).unwrap();
+        // edge ids along the path: (0,1)=0 wins, (2,3)=2 wins, (4,5)=4 wins
+        assert_eq!(m.to_sorted_vec(), vec![(0, 1), (2, 3), (4, 5)]);
+    }
+
+    #[test]
+    fn valid_on_rmat() {
+        let g = rmat::generate(&GenConfig { scale: 11, avg_degree: 8, seed: 1 });
+        let m = Idmm::default().run(&g);
+        verify::check(&g, &m).unwrap();
+    }
+
+    #[test]
+    fn random_priorities_still_maximal() {
+        let g = rmat::generate(&GenConfig { scale: 10, avg_degree: 6, seed: 2 });
+        let ne = super::canonical_edges(&g).len();
+        let m = Idmm::with_random_priorities(ne, 99).run(&g);
+        verify::check(&g, &m).unwrap();
+    }
+
+    #[test]
+    fn deterministic_given_priorities() {
+        let g = rmat::generate(&GenConfig { scale: 10, avg_degree: 6, seed: 3 });
+        let ne = super::canonical_edges(&g).len();
+        let a = Idmm::with_random_priorities(ne, 7).run(&g);
+        let b = Idmm::with_random_priorities(ne, 7).run(&g);
+        assert_eq!(a.to_sorted_vec(), b.to_sorted_vec());
+    }
+
+    #[test]
+    fn round_count_reported() {
+        let g = simple::path(64);
+        let (_, rounds) = Idmm::default().run_probed(&g, &mut NoProbe);
+        assert!(rounds >= 1);
+    }
+}

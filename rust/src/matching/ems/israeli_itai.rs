@@ -1,0 +1,137 @@
+//! Israeli & Itai (1986): the original randomized EMS algorithm (paper
+//! §II-D). Each iteration every live vertex selects a random live incident
+//! edge; mutually-selected edges match; matched vertices and their edges
+//! are pruned.
+
+use crate::graph::CsrGraph;
+use crate::instrument::{address, NoProbe, Probe};
+use crate::matching::{MaximalMatcher, Matching};
+use crate::util::rng::Xoshiro256pp;
+use crate::VertexId;
+
+#[derive(Clone, Copy, Debug)]
+pub struct IsraeliItai {
+    pub seed: u64,
+}
+
+impl Default for IsraeliItai {
+    fn default() -> Self {
+        Self { seed: 0x15A3 }
+    }
+}
+
+impl IsraeliItai {
+    pub fn run_probed<P: Probe>(&self, g: &CsrGraph, probe: &mut P) -> (Matching, usize) {
+        let n = g.num_vertices();
+        let mut rng = Xoshiro256pp::new(self.seed);
+        let mut matched = vec![false; n];
+        let mut selection: Vec<VertexId> = vec![VertexId::MAX; n];
+        let mut matches: Vec<(VertexId, VertexId)> = Vec::new();
+        let mut live: Vec<VertexId> = (0..n as VertexId).collect();
+        let mut iterations = 0usize;
+
+        while !live.is_empty() {
+            iterations += 1;
+            // selection step: pick a random live neighbor
+            let mut any_selection = false;
+            for &v in &live {
+                selection[v as usize] = VertexId::MAX;
+                probe.load(address::offsets(v as u64));
+                probe.load(address::offsets(v as u64 + 1));
+                let base = g.offsets()[v as usize];
+                // reservoir-sample a live neighbor
+                let mut count = 0u64;
+                for (i, &u) in g.neighbors(v).iter().enumerate() {
+                    probe.load(address::neighbors(base + i as u64));
+                    if u == v {
+                        continue;
+                    }
+                    probe.load(address::state_bit(u as u64));
+                    if !matched[u as usize] {
+                        count += 1;
+                        if rng.next_below(count) == 0 {
+                            selection[v as usize] = u;
+                        }
+                    }
+                }
+                probe.store(address::aux(v as u64));
+                if selection[v as usize] != VertexId::MAX {
+                    any_selection = true;
+                }
+            }
+            if !any_selection {
+                break; // no live edges remain
+            }
+            // refinement step: mutual selections become matches
+            for &v in &live {
+                let u = selection[v as usize];
+                probe.load(address::aux(v as u64));
+                if u == VertexId::MAX || u < v {
+                    continue; // count each pair once (from the lower side)
+                }
+                probe.load(address::aux(u as u64));
+                if selection[u as usize] == v && !matched[v as usize] && !matched[u as usize] {
+                    matched[v as usize] = true;
+                    matched[u as usize] = true;
+                    probe.store(address::state_bit(v as u64));
+                    probe.store(address::state_bit(u as u64));
+                    probe.store(address::matches(matches.len() as u64));
+                    matches.push((v, u));
+                }
+            }
+            // prune: drop matched vertices and vertices with no live neighbor
+            live.retain(|&v| {
+                probe.load(address::state_bit(v as u64));
+                if matched[v as usize] {
+                    return false;
+                }
+                let has_live = g
+                    .neighbors(v)
+                    .iter()
+                    .any(|&u| u != v && !matched[u as usize]);
+                has_live
+            });
+        }
+        (Matching::from_pairs(matches), iterations)
+    }
+}
+
+impl MaximalMatcher for IsraeliItai {
+    fn name(&self) -> String {
+        "Israeli-Itai".into()
+    }
+
+    fn run(&self, g: &CsrGraph) -> Matching {
+        self.run_probed(g, &mut NoProbe).0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::gen::{rmat, simple, GenConfig};
+    use crate::matching::verify;
+
+    #[test]
+    fn valid_on_small_graphs() {
+        for g in [simple::path(11), simple::cycle(10), simple::star(15), simple::complete(9)] {
+            let m = IsraeliItai::default().run(&g);
+            verify::check(&g, &m).unwrap();
+        }
+    }
+
+    #[test]
+    fn valid_on_rmat() {
+        let g = rmat::generate(&GenConfig { scale: 10, avg_degree: 8, seed: 2 });
+        let m = IsraeliItai::default().run(&g);
+        verify::check(&g, &m).unwrap();
+    }
+
+    #[test]
+    fn geometric_convergence() {
+        // Randomized mutual selection converges in few iterations.
+        let g = rmat::generate(&GenConfig { scale: 11, avg_degree: 8, seed: 3 });
+        let (_, iters) = IsraeliItai::default().run_probed(&g, &mut NoProbe);
+        assert!(iters < 60, "took {iters} iterations");
+    }
+}

@@ -1,0 +1,50 @@
+//! The Endpoints-Mutual-Selection (EMS) baseline family (paper §II-C/D).
+//!
+//! All of these algorithms share the two-step structure the paper critiques:
+//! a *selection* step where each vertex/edge picks a candidate and a
+//! *refinement* step where mutually-selected edges commit — iterated with
+//! graph pruning until maximal. They exist here to reproduce the paper's
+//! comparisons (SIDMM is the evaluated comparator; the others populate the
+//! related-work ablations).
+
+pub mod auer_bisseling;
+pub mod birn;
+pub mod idmm;
+pub mod israeli_itai;
+pub mod pbmm;
+pub mod sidmm;
+
+use crate::graph::CsrGraph;
+use crate::VertexId;
+
+/// Canonical (u < v) edge array extracted from a symmetric CSR graph.
+/// Self-loops are dropped (no MM algorithm can match them).
+pub fn canonical_edges(g: &CsrGraph) -> Vec<(VertexId, VertexId)> {
+    let mut edges = Vec::with_capacity(g.num_edge_slots() / 2);
+    for (v, u) in g.iter_edges() {
+        if v < u {
+            edges.push((v, u));
+        }
+    }
+    edges
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::gen::simple;
+
+    #[test]
+    fn canonical_edges_unique_and_ordered() {
+        let g = simple::cycle(6);
+        let e = canonical_edges(&g);
+        assert_eq!(e.len(), 6);
+        for &(u, v) in &e {
+            assert!(u < v);
+        }
+        let mut dedup = e.clone();
+        dedup.sort_unstable();
+        dedup.dedup();
+        assert_eq!(dedup.len(), e.len());
+    }
+}

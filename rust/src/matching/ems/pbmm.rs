@@ -1,0 +1,165 @@
+//! Prefix-Batched MM (Blelloch, Fineman, Shun, PACT'12 — paper §II-D).
+//!
+//! Takes a fixed random priority over edges. Each iteration processes the
+//! carry-over of still-live edges plus the next `granularity`-sized batch of
+//! fresh edges in priority order, committing edges that are local priority
+//! minima at both endpoints. The `granularity` parameter trades parallelism
+//! against work efficiency — the tuning knob the paper contrasts with
+//! Skipper's parameter-free design.
+
+use super::canonical_edges;
+use crate::graph::CsrGraph;
+use crate::instrument::{address, NoProbe, Probe};
+use crate::matching::{MaximalMatcher, Matching};
+use crate::util::rng::Xoshiro256pp;
+use crate::VertexId;
+
+#[derive(Clone, Copy, Debug)]
+pub struct Pbmm {
+    /// Fresh edges admitted per iteration; 0 → `max(|E|/50, 256)` (the
+    /// PBMM paper's suggested fraction).
+    pub granularity: usize,
+    pub seed: u64,
+}
+
+impl Default for Pbmm {
+    fn default() -> Self {
+        Self {
+            granularity: 0,
+            seed: 0x9B,
+        }
+    }
+}
+
+impl Pbmm {
+    pub fn run_probed<P: Probe>(&self, g: &CsrGraph, probe: &mut P) -> (Matching, usize) {
+        let edges = canonical_edges(g);
+        let ne = edges.len();
+        let mut rng = Xoshiro256pp::new(self.seed);
+        // random priority = position in a shuffled order
+        let order = rng.permutation(ne);
+        let gran = if self.granularity == 0 {
+            (ne / 50).max(256)
+        } else {
+            self.granularity
+        };
+        let n = g.num_vertices();
+        let mut matched = vec![false; n];
+        let mut reserve: Vec<u32> = vec![u32::MAX; n];
+        let mut matches: Vec<(VertexId, VertexId)> = Vec::new();
+        let mut carry: Vec<u32> = Vec::new(); // edge ids (= priority ranks)
+        let mut cursor = 0usize;
+        let mut iterations = 0usize;
+
+        while cursor < ne || !carry.is_empty() {
+            iterations += 1;
+            // batch = carry + next `gran` fresh edges (by priority order)
+            let fresh_end = (cursor + gran).min(ne);
+            let mut batch: Vec<u32> = std::mem::take(&mut carry);
+            for rank in cursor..fresh_end {
+                batch.push(rank as u32);
+                probe.load(address::aux(rank as u64));
+            }
+            cursor = fresh_end;
+            // drop already-covered edges
+            batch.retain(|&rank| {
+                let (u, v) = edges[order[rank as usize] as usize];
+                probe.load(address::state_bit(u as u64));
+                probe.load(address::state_bit(v as u64));
+                !matched[u as usize] && !matched[v as usize]
+            });
+            // reserve: min rank per endpoint
+            for &rank in &batch {
+                let (u, v) = edges[order[rank as usize] as usize];
+                probe.rmw(address::state(u as u64));
+                probe.rmw(address::state(v as u64));
+                if rank < reserve[u as usize] {
+                    reserve[u as usize] = rank;
+                }
+                if rank < reserve[v as usize] {
+                    reserve[v as usize] = rank;
+                }
+            }
+            // commit: local minima at both endpoints
+            for &rank in &batch {
+                let (u, v) = edges[order[rank as usize] as usize];
+                probe.load(address::state(u as u64));
+                probe.load(address::state(v as u64));
+                if reserve[u as usize] == rank && reserve[v as usize] == rank {
+                    matched[u as usize] = true;
+                    matched[v as usize] = true;
+                    probe.store(address::state_bit(u as u64));
+                    probe.store(address::state_bit(v as u64));
+                    probe.store(address::matches(matches.len() as u64));
+                    matches.push((u, v));
+                }
+            }
+            // prune + carry the survivors; reset touched reservations
+            for &rank in &batch {
+                let (u, v) = edges[order[rank as usize] as usize];
+                reserve[u as usize] = u32::MAX;
+                reserve[v as usize] = u32::MAX;
+                probe.store(address::state(u as u64));
+                probe.store(address::state(v as u64));
+                probe.load(address::state_bit(u as u64));
+                probe.load(address::state_bit(v as u64));
+                if !matched[u as usize] && !matched[v as usize] {
+                    carry.push(rank);
+                    probe.store(address::aux2(carry.len() as u64));
+                }
+            }
+        }
+        (Matching::from_pairs(matches), iterations)
+    }
+}
+
+impl MaximalMatcher for Pbmm {
+    fn name(&self) -> String {
+        "PBMM".into()
+    }
+
+    fn run(&self, g: &CsrGraph) -> Matching {
+        self.run_probed(g, &mut NoProbe).0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::gen::{rmat, simple, GenConfig};
+    use crate::matching::verify;
+
+    #[test]
+    fn valid_on_small_graphs() {
+        for g in [simple::path(10), simple::cycle(9), simple::star(16), simple::complete(8)] {
+            let m = Pbmm::default().run(&g);
+            verify::check(&g, &m).unwrap();
+        }
+    }
+
+    #[test]
+    fn valid_on_rmat_various_granularity() {
+        let g = rmat::generate(&GenConfig { scale: 10, avg_degree: 8, seed: 8 });
+        for gran in [64, 1024, usize::MAX / 2] {
+            let m = Pbmm { granularity: gran, seed: 5 }.run(&g);
+            verify::check(&g, &m).unwrap();
+        }
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let g = rmat::generate(&GenConfig { scale: 10, avg_degree: 6, seed: 9 });
+        let a = Pbmm { granularity: 500, seed: 11 }.run(&g);
+        let b = Pbmm { granularity: 500, seed: 11 }.run(&g);
+        assert_eq!(a.to_sorted_vec(), b.to_sorted_vec());
+    }
+
+    #[test]
+    fn granularity_bounds_iterations() {
+        let g = rmat::generate(&GenConfig { scale: 9, avg_degree: 6, seed: 1 });
+        let (_, iters_small) = Pbmm { granularity: 64, seed: 2 }.run_probed(&g, &mut NoProbe);
+        let (_, iters_large) =
+            Pbmm { granularity: usize::MAX / 2, seed: 2 }.run_probed(&g, &mut NoProbe);
+        assert!(iters_small > iters_large);
+    }
+}

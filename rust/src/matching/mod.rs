@@ -1,0 +1,248 @@
+//! Maximal-matching algorithms and output plumbing.
+//!
+//! The output container reproduces the paper's buffer scheme (§IV-C): one
+//! arena sized for the worst case is allocated up front; each thread
+//! bump-allocates private 1024-edge buffers from it and writes matches
+//! sequentially; unfilled tail slots carry the `-1` sentinel and are skipped
+//! on read-out.
+
+pub mod ems;
+pub mod incremental;
+pub mod mis;
+pub mod noreserve;
+pub mod sgmm;
+pub mod skipper;
+pub mod verify;
+
+use crate::graph::CsrGraph;
+use crate::{VertexId, INVALID_VERTEX};
+use std::cell::UnsafeCell;
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Per-thread buffer granularity (paper: "Each thread requests a 1024-edge
+/// buffer").
+pub const BUFFER_EDGES: usize = 1024;
+
+/// Finished matching: the arena with sentinel-padded per-thread buffers.
+#[derive(Clone, Debug)]
+pub struct Matching {
+    slots: Vec<(VertexId, VertexId)>,
+    num_matches: usize,
+}
+
+impl Matching {
+    /// Wrap a dense list of matches (sequential algorithms).
+    pub fn from_pairs(pairs: Vec<(VertexId, VertexId)>) -> Self {
+        let num_matches = pairs.len();
+        Self {
+            slots: pairs,
+            num_matches,
+        }
+    }
+
+    /// Number of matched edges (invalid sentinel slots excluded).
+    pub fn len(&self) -> usize {
+        self.num_matches
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.num_matches == 0
+    }
+
+    /// Iterate valid matches, skipping sentinel slots (paper §IV-C: "easily
+    /// processed by skipping from invalid elements").
+    pub fn iter(&self) -> impl Iterator<Item = (VertexId, VertexId)> + '_ {
+        self.slots
+            .iter()
+            .copied()
+            .filter(|&(u, _)| u != INVALID_VERTEX)
+    }
+
+    /// Canonicalized (min,max) pairs, sorted — for comparisons in tests.
+    pub fn to_sorted_vec(&self) -> Vec<(VertexId, VertexId)> {
+        let mut v: Vec<(VertexId, VertexId)> = self
+            .iter()
+            .map(|(a, b)| (a.min(b), a.max(b)))
+            .collect();
+        v.sort_unstable();
+        v
+    }
+
+    /// Total arena slots consumed (valid + sentinel) — used by tests to
+    /// assert the buffer-accounting invariants.
+    pub fn slots_used(&self) -> usize {
+        self.slots.len()
+    }
+}
+
+/// Shared match arena: threads grab private `BUFFER_EDGES`-sized ranges via
+/// an atomic bump pointer; ranges never overlap, so plain writes through the
+/// `UnsafeCell` are race-free (mirrors the paper's design).
+pub struct MatchArena {
+    slots: UnsafeCell<Vec<(VertexId, VertexId)>>,
+    next: AtomicUsize,
+    capacity: usize,
+}
+
+// SAFETY: disjoint ranges are handed to at most one writer each (enforced by
+// the atomic bump pointer); readers only exist after all writers joined.
+unsafe impl Sync for MatchArena {}
+
+impl MatchArena {
+    /// Capacity follows the paper (a |V|-edge block) plus one buffer of slack
+    /// per thread so partially-filled final buffers always fit.
+    pub fn for_graph(g: &CsrGraph, num_threads: usize) -> Self {
+        Self::with_capacity(g.num_vertices() / 2 + (num_threads + 1) * BUFFER_EDGES)
+    }
+
+    pub fn with_capacity(capacity: usize) -> Self {
+        Self {
+            slots: UnsafeCell::new(vec![(INVALID_VERTEX, INVALID_VERTEX); capacity]),
+            next: AtomicUsize::new(0),
+            capacity,
+        }
+    }
+
+    /// Claim the next private buffer; returns its `[start, end)` range.
+    fn grab(&self) -> (usize, usize) {
+        let start = self.next.fetch_add(BUFFER_EDGES, Ordering::Relaxed);
+        let end = (start + BUFFER_EDGES).min(self.capacity);
+        assert!(
+            start < self.capacity,
+            "match arena exhausted (capacity {})",
+            self.capacity
+        );
+        (start, end)
+    }
+
+    /// A writer for one thread. Each writer must be used by a single thread.
+    pub fn writer(&self) -> MatchWriter<'_> {
+        MatchWriter {
+            arena: self,
+            pos: 0,
+            end: 0,
+        }
+    }
+
+    /// Consume the arena into a [`Matching`], truncated to the used prefix.
+    pub fn into_matching(self) -> Matching {
+        let used = self.next.load(Ordering::Relaxed).min(self.capacity);
+        let mut slots = self.slots.into_inner();
+        slots.truncate(used);
+        let num_matches = slots.iter().filter(|&&(u, _)| u != INVALID_VERTEX).count();
+        Matching { slots, num_matches }
+    }
+}
+
+/// Thread-private sequential writer into the shared arena.
+pub struct MatchWriter<'a> {
+    arena: &'a MatchArena,
+    pos: usize,
+    end: usize,
+}
+
+impl MatchWriter<'_> {
+    #[inline]
+    pub fn push(&mut self, u: VertexId, v: VertexId) {
+        if self.pos == self.end {
+            let (s, e) = self.arena.grab();
+            self.pos = s;
+            self.end = e;
+        }
+        // SAFETY: [pos, end) is exclusively ours (see MatchArena).
+        unsafe {
+            let base = (*self.arena.slots.get()).as_mut_ptr();
+            base.add(self.pos).write((u, v));
+        }
+        self.pos += 1;
+    }
+}
+
+/// Common interface for all matching algorithms in this crate.
+pub trait MaximalMatcher {
+    fn name(&self) -> String;
+    fn run(&self, g: &CsrGraph) -> Matching;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::par::run_threads;
+
+    #[test]
+    fn from_pairs_roundtrip() {
+        let m = Matching::from_pairs(vec![(0, 1), (2, 3)]);
+        assert_eq!(m.len(), 2);
+        assert_eq!(m.to_sorted_vec(), vec![(0, 1), (2, 3)]);
+    }
+
+    #[test]
+    fn arena_single_thread() {
+        let arena = MatchArena::with_capacity(BUFFER_EDGES * 2);
+        let mut w = arena.writer();
+        for i in 0..10u32 {
+            w.push(2 * i, 2 * i + 1);
+        }
+        drop(w);
+        let m = arena.into_matching();
+        assert_eq!(m.len(), 10);
+        // one buffer grabbed; sentinel padding fills the rest
+        assert_eq!(m.slots_used(), BUFFER_EDGES);
+        assert_eq!(m.iter().count(), 10);
+    }
+
+    #[test]
+    fn arena_buffer_rollover() {
+        let arena = MatchArena::with_capacity(BUFFER_EDGES * 3);
+        let mut w = arena.writer();
+        let n = BUFFER_EDGES + 7;
+        for i in 0..n as u32 {
+            w.push(i, i + 1);
+        }
+        drop(w);
+        let m = arena.into_matching();
+        assert_eq!(m.len(), n);
+        assert_eq!(m.slots_used(), BUFFER_EDGES * 2);
+    }
+
+    #[test]
+    fn arena_concurrent_writers_disjoint() {
+        let threads = 4;
+        let per_thread = BUFFER_EDGES + 123;
+        let arena = MatchArena::with_capacity((threads + 1) * (per_thread + BUFFER_EDGES));
+        run_threads(threads, |tid| {
+            let mut w = arena.writer();
+            for i in 0..per_thread as u32 {
+                w.push(tid as u32, i);
+            }
+        });
+        let m = arena.into_matching();
+        assert_eq!(m.len(), threads * per_thread);
+        // every thread's writes all survived
+        for tid in 0..threads as u32 {
+            assert_eq!(m.iter().filter(|&(u, _)| u == tid).count(), per_thread);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "match arena exhausted")]
+    fn arena_exhaustion_panics() {
+        let arena = MatchArena::with_capacity(BUFFER_EDGES);
+        let mut w = arena.writer();
+        for i in 0..(BUFFER_EDGES + 1) as u32 {
+            w.push(i, i);
+        }
+    }
+
+    #[test]
+    fn sentinel_slots_skipped() {
+        let arena = MatchArena::with_capacity(BUFFER_EDGES * 2);
+        {
+            let mut w = arena.writer();
+            w.push(5, 6);
+        }
+        let m = arena.into_matching();
+        let all: Vec<_> = m.iter().collect();
+        assert_eq!(all, vec![(5, 6)]);
+    }
+}

@@ -1,0 +1,157 @@
+//! Ablation: Skipper **without** the RSVD state (DESIGN.md design-choice
+//! list). A naive two-CAS scheme marks `u` as `MCHD` outright, then tries
+//! `v`; on failure it *rolls back* `u` to `ACC`.
+//!
+//! This is the variant the paper's §IV implicitly argues against: during
+//! the rollback window another thread can observe `u == MCHD`, conclude its
+//! own edge `(u, z)` is covered, and skip it — after the rollback, `u` is
+//! unmatched and `(u, z)` may end up with both endpoints free, violating
+//! **maximality**. The RSVD state exists precisely to tell concurrent
+//! threads "wait — this is not decided yet".
+//!
+//! The race is hard to hit with real threads on one core, so the unit tests
+//! drive the same state machine through an adversarial deterministic
+//! interleaving to exhibit the violation, and the APRAM-style random
+//! interleavings quantify how often it bites.
+
+use super::{MatchArena, MaximalMatcher, Matching};
+use crate::graph::CsrGraph;
+use crate::matching::skipper::{ACC, MCHD};
+use crate::par::run_threads;
+use crate::par::scheduler::{Assignment, BlockScheduler};
+use std::sync::atomic::{AtomicU8, Ordering};
+
+/// The flawed no-reservation matcher (kept for the ablation bench; do not
+/// use for real work — see module docs).
+#[derive(Clone, Copy, Debug)]
+pub struct NoReserveMatcher {
+    pub threads: usize,
+}
+
+impl NoReserveMatcher {
+    pub fn new(threads: usize) -> Self {
+        Self { threads }
+    }
+}
+
+impl MaximalMatcher for NoReserveMatcher {
+    fn name(&self) -> String {
+        format!("NoReserve(t={})", self.threads)
+    }
+
+    fn run(&self, g: &CsrGraph) -> Matching {
+        let n = g.num_vertices();
+        let state: Vec<AtomicU8> = (0..n).map(|_| AtomicU8::new(ACC)).collect();
+        let sched = BlockScheduler::new(g, self.threads, 16, Assignment::DispersedContiguous);
+        let arena = MatchArena::for_graph(g, self.threads);
+        run_threads(self.threads, |tid| {
+            let mut writer = arena.writer();
+            while let Some((bs, be)) = sched.next_block(tid) {
+                for x in bs..be {
+                    if state[x as usize].load(Ordering::Acquire) == MCHD {
+                        continue;
+                    }
+                    for &y in g.neighbors(x) {
+                        if x == y {
+                            continue;
+                        }
+                        let (u, v) = (x.min(y), x.max(y));
+                        // claim u outright (no RSVD)
+                        if state[u as usize]
+                            .compare_exchange(ACC, MCHD, Ordering::AcqRel, Ordering::Acquire)
+                            .is_err()
+                        {
+                            continue;
+                        }
+                        // now try v
+                        if state[v as usize]
+                            .compare_exchange(ACC, MCHD, Ordering::AcqRel, Ordering::Acquire)
+                            .is_ok()
+                        {
+                            writer.push(u, v);
+                        } else {
+                            // ROLLBACK — the window other threads mis-read
+                            state[u as usize].store(ACC, Ordering::Release);
+                        }
+                        if state[x as usize].load(Ordering::Relaxed) == MCHD {
+                            break;
+                        }
+                    }
+                }
+            }
+        });
+        arena.into_matching()
+    }
+}
+
+/// Deterministic two-thread interleaving that exhibits the maximality
+/// violation on a 3-vertex path 0-1-2 (edges (0,1) and (1,2)):
+///
+/// t0 processes (0,1): CAS 0→MCHD ok, pauses before CAS on 1.
+/// t1 processes (1,2)... wait — the violating schedule uses t1 on (0,z).
+///
+/// Concretely with edges (0,1), (0,2):
+///   t0: CAS 0: ACC→MCHD (claims 0 for edge (0,1))
+///   t1: sees 0 == MCHD → skips edge (0,2) entirely
+///   t0: CAS 1 fails (1 already matched elsewhere) → rollback 0→ACC
+///   result: 0 unmatched, 2 unmatched, edge (0,2) uncovered → NOT maximal.
+///
+/// Returns true iff the violation occurred.
+pub fn demonstrate_violation() -> bool {
+    // states for vertices 0,1,2 ; vertex 1 is pre-matched (by "edge (1,3)")
+    let state = [
+        AtomicU8::new(ACC),
+        AtomicU8::new(MCHD),
+        AtomicU8::new(ACC),
+    ];
+    // t0 step 1: claim 0 for edge (0,1)
+    assert!(state[0]
+        .compare_exchange(ACC, MCHD, Ordering::AcqRel, Ordering::Acquire)
+        .is_ok());
+    // t1: processes edge (0,2), reads 0 == MCHD → skips it (covered, it thinks)
+    let t1_skipped = state[0].load(Ordering::Acquire) == MCHD;
+    // t0 step 2: CAS on 1 fails (already MCHD) → rollback 0
+    assert!(state[1]
+        .compare_exchange(ACC, MCHD, Ordering::AcqRel, Ordering::Acquire)
+        .is_err());
+    state[0].store(ACC, Ordering::Release);
+    // final: edge (0,2) has both endpoints ACC yet nobody will reprocess it
+    let uncovered = state[0].load(Ordering::Acquire) == ACC
+        && state[2].load(Ordering::Acquire) == ACC;
+    t1_skipped && uncovered
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::gen::{rmat, GenConfig};
+    use crate::matching::verify;
+
+    #[test]
+    fn adversarial_interleaving_breaks_maximality() {
+        // the precise schedule the RSVD state prevents
+        assert!(demonstrate_violation());
+    }
+
+    #[test]
+    fn single_thread_is_still_correct() {
+        // with one thread there is no rollback window to mis-read
+        let g = rmat::generate(&GenConfig { scale: 10, avg_degree: 6, seed: 3 });
+        let m = NoReserveMatcher::new(1).run(&g);
+        verify::check(&g, &m).unwrap();
+    }
+
+    #[test]
+    fn validity_holds_even_when_maximality_may_not() {
+        // no-reserve never produces *invalid* matchings (no shared
+        // endpoints) — the flaw is limited to maximality.
+        let g = rmat::generate(&GenConfig { scale: 11, avg_degree: 8, seed: 4 });
+        let m = NoReserveMatcher::new(8).run(&g);
+        let mut matched = vec![false; g.num_vertices()];
+        for (u, v) in m.iter() {
+            assert!(!matched[u as usize] && !matched[v as usize]);
+            matched[u as usize] = true;
+            matched[v as usize] = true;
+        }
+    }
+}

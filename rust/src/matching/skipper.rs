@@ -1,0 +1,347 @@
+//! **Skipper** (paper §IV, Algorithm 1): asynchronous maximal matching with
+//! a single pass over edges and Just-In-Time conflict resolution.
+//!
+//! Per-vertex state is one byte: `ACC(0)`, `RSVD(1)`, `MCHD(2)`. Matching an
+//! edge `(u,v)` with `u < v` (deadlock avoidance, lines 8–9):
+//!
+//! 1. line 10 — while neither endpoint is `MCHD`;
+//! 2. lines 11–12 — CAS `u: ACC→RSVD`; on failure re-check (another thread
+//!    holds `u`, or `u` just got matched);
+//! 3. lines 13–16 — spin on `v`: CAS `v: ACC→MCHD`; on success plain-write
+//!    `u = MCHD` (we hold the reservation — no CAS needed) and emit the
+//!    match;
+//! 4. lines 17–18 — if `v` was matched by someone else, plain-write
+//!    `u = ACC` (release).
+//!
+//! A *JIT conflict* is a failing CAS at line 11 or 14 (Table II's
+//! definition). Edges are dispatched by the thread-dispersed
+//! locality-preserving scheduler (§IV-C) and matches go to private
+//! 1024-edge buffers carved from a shared arena.
+
+use super::{MatchArena, MaximalMatcher, Matching};
+use crate::graph::CsrGraph;
+use crate::instrument::conflicts::ConflictStats;
+use crate::instrument::{address, NoProbe, Probe};
+use crate::par::scheduler::{Assignment, BlockScheduler};
+use crate::par::run_threads_collect;
+use crate::VertexId;
+use std::sync::atomic::{AtomicU8, Ordering};
+
+pub const ACC: u8 = 0;
+pub const RSVD: u8 = 1;
+pub const MCHD: u8 = 2;
+
+/// Skipper configuration. The paper stresses there are **no tuning
+/// parameters**; `blocks_per_thread` only shapes the scheduler's work
+/// granularity and the default is used everywhere.
+#[derive(Clone, Copy, Debug)]
+pub struct Skipper {
+    pub threads: usize,
+    pub blocks_per_thread: usize,
+    pub assignment: Assignment,
+}
+
+impl Skipper {
+    pub fn new(threads: usize) -> Self {
+        Self {
+            threads,
+            blocks_per_thread: 16,
+            assignment: Assignment::DispersedContiguous,
+        }
+    }
+
+    pub fn with_assignment(mut self, a: Assignment) -> Self {
+        self.assignment = a;
+        self
+    }
+
+    /// Full run returning the matching plus JIT-conflict telemetry and one
+    /// probe per thread.
+    pub fn run_instrumented<P: Probe + Default + Send>(
+        &self,
+        g: &CsrGraph,
+    ) -> (Matching, ConflictStats, Vec<P>) {
+        let n = g.num_vertices();
+        // Lines 1–4: state array, all ACC. One byte per vertex.
+        let state: Vec<AtomicU8> = (0..n).map(|_| AtomicU8::new(ACC)).collect();
+        let sched = BlockScheduler::new(g, self.threads, self.blocks_per_thread, self.assignment);
+        let arena = MatchArena::for_graph(g, self.threads);
+
+        let per_thread = run_threads_collect(self.threads, |tid| {
+            let mut probe = P::default();
+            let mut stats = ConflictStats::default();
+            let mut writer = arena.writer();
+            while let Some((bs, be)) = sched.next_block(tid) {
+                for x in bs..be {
+                    // Vertex-level skip: if x is already matched, none of its
+                    // remaining edges can select it; the edges stay covered
+                    // by x itself (maximality) and are still visible from
+                    // their other endpoints.
+                    probe.load(address::state(x as u64));
+                    if state[x as usize].load(Ordering::Acquire) == MCHD {
+                        continue;
+                    }
+                    probe.load(address::offsets(x as u64));
+                    probe.load(address::offsets(x as u64 + 1));
+                    let base = g.offsets()[x as usize];
+                    for (i, &y) in g.neighbors(x).iter().enumerate() {
+                        probe.load(address::neighbors(base + i as u64));
+                        let conflicts =
+                            process_edge(&state, x, y, &mut writer, &mut probe);
+                        stats.record_edge(conflicts);
+                        // If x got matched meanwhile, skip its remaining edges.
+                        if state[x as usize].load(Ordering::Relaxed) == MCHD {
+                            probe.load(address::state(x as u64));
+                            break;
+                        }
+                    }
+                }
+            }
+            (stats, probe)
+        });
+
+        let mut stats = ConflictStats::default();
+        let mut probes = Vec::with_capacity(self.threads);
+        for (s, p) in per_thread {
+            stats.merge(&s);
+            probes.push(p);
+        }
+        (arena.into_matching(), stats, probes)
+    }
+}
+
+/// Process one edge (Algorithm 1 lines 6–18). Returns the number of JIT
+/// conflicts (failed CASes) encountered.
+#[inline]
+pub fn process_edge<P: Probe>(
+    state: &[AtomicU8],
+    x: VertexId,
+    y: VertexId,
+    writer: &mut super::MatchWriter<'_>,
+    probe: &mut P,
+) -> u64 {
+    // Lines 6–7: skip self-loops.
+    if x == y {
+        return 0;
+    }
+    // Lines 8–9: reserve the lower endpoint first (deadlock avoidance).
+    let (u, v) = if x < y { (x, y) } else { (y, x) };
+    let su = &state[u as usize];
+    let sv = &state[v as usize];
+    let mut conflicts = 0u64;
+
+    // Line 10: while neither endpoint is matched.
+    loop {
+        probe.load(address::state(u as u64));
+        probe.load(address::state(v as u64));
+        if su.load(Ordering::Acquire) == MCHD || sv.load(Ordering::Acquire) == MCHD {
+            return conflicts;
+        }
+        // Lines 11–12: try to reserve u.
+        probe.rmw(address::state(u as u64));
+        if su
+            .compare_exchange(ACC, RSVD, Ordering::AcqRel, Ordering::Acquire)
+            .is_err()
+        {
+            conflicts += 1;
+            std::hint::spin_loop();
+            continue; // re-evaluate line 10
+        }
+        // u is exclusively ours. Lines 13–16: try to match v.
+        let mut matched = false;
+        loop {
+            probe.load(address::state(v as u64));
+            if sv.load(Ordering::Acquire) == MCHD {
+                break;
+            }
+            probe.rmw(address::state(v as u64));
+            match sv.compare_exchange(ACC, MCHD, Ordering::AcqRel, Ordering::Acquire) {
+                Ok(_) => {
+                    // Line 15: we hold u's reservation — plain store suffices.
+                    su.store(MCHD, Ordering::Release);
+                    probe.store(address::state(u as u64));
+                    // Line 16: race-free private buffer write.
+                    writer.push(u, v);
+                    probe.store(address::matches(0));
+                    matched = true;
+                    break;
+                }
+                Err(_) => {
+                    // v is RSVD by another thread (or just flipped): JIT
+                    // conflict — wait a few cycles for certainty.
+                    conflicts += 1;
+                    std::hint::spin_loop();
+                }
+            }
+        }
+        if matched {
+            return conflicts;
+        }
+        // Lines 17–18: v was matched elsewhere; release u (plain store —
+        // the reservation is ours).
+        su.store(ACC, Ordering::Release);
+        probe.store(address::state(u as u64));
+        // Loop back to line 10: it will observe v == MCHD and exit.
+    }
+}
+
+/// Result bundle for experiment drivers.
+pub struct SkipperReport {
+    pub matching: Matching,
+    pub conflicts: ConflictStats,
+}
+
+impl Skipper {
+    /// Run with conflict telemetry but no access counting (the hot
+    /// configuration used by benches).
+    pub fn run_with_conflicts(&self, g: &CsrGraph) -> SkipperReport {
+        let (matching, conflicts, _) = self.run_instrumented::<NoProbe>(g);
+        SkipperReport { matching, conflicts }
+    }
+}
+
+impl MaximalMatcher for Skipper {
+    fn name(&self) -> String {
+        format!("Skipper(t={})", self.threads)
+    }
+
+    fn run(&self, g: &CsrGraph) -> Matching {
+        let (matching, _, _) = self.run_instrumented::<NoProbe>(g);
+        matching
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::gen::{barabasi_albert, rmat, simple, GenConfig};
+    use crate::instrument::CountingProbe;
+    use crate::matching::verify;
+
+    fn check_on(g: &CsrGraph, threads: usize) -> Matching {
+        let m = Skipper::new(threads).run(g);
+        verify::check(g, &m).unwrap();
+        m
+    }
+
+    #[test]
+    fn single_thread_small_graphs() {
+        for g in [simple::path(9), simple::cycle(8), simple::star(17), simple::complete(9)] {
+            check_on(&g, 1);
+        }
+    }
+
+    #[test]
+    fn multi_thread_small_graphs() {
+        for g in [simple::path(64), simple::cycle(65), simple::star(64), simple::complete(24)] {
+            for t in [2, 4, 8] {
+                check_on(&g, t);
+            }
+        }
+    }
+
+    #[test]
+    fn star_contention_yields_one_edge() {
+        // Worst case: every edge shares vertex 0.
+        let g = simple::star(512);
+        for t in [1, 4, 16] {
+            let m = check_on(&g, t);
+            assert_eq!(m.len(), 1);
+        }
+    }
+
+    #[test]
+    fn rmat_many_threads() {
+        let g = rmat::generate(&GenConfig { scale: 12, avg_degree: 8, seed: 4 });
+        let m = check_on(&g, 8);
+        // matching size should be in the same ballpark as SGMM's
+        let s = super::super::sgmm::Sgmm.run(&g);
+        let ratio = m.len() as f64 / s.len() as f64;
+        assert!((0.8..1.25).contains(&ratio), "ratio {ratio}");
+    }
+
+    #[test]
+    fn hub_graph_under_contention() {
+        let g = barabasi_albert::generate(4096, 4, 7);
+        check_on(&g, 8);
+    }
+
+    #[test]
+    fn works_on_directed_nonsymmetrized_input() {
+        // §V-C: Skipper doesn't require both edge copies. Build a directed
+        // CSR (each undirected edge stored once) and verify against the
+        // symmetric version of the same topology.
+        use crate::graph::builder::{build, to_edge_list, BuildOptions};
+        let sym = rmat::generate(&GenConfig { scale: 10, avg_degree: 6, seed: 8 });
+        let el = to_edge_list(&sym);
+        let directed = build(
+            &el,
+            BuildOptions { symmetrize: false, dedup: true, drop_self_loops: true },
+        );
+        let m = Skipper::new(4).run(&directed);
+        // verify maximality against the *symmetric* graph
+        verify::check(&sym, &m).unwrap();
+    }
+
+    #[test]
+    fn conflicts_are_rare_on_big_graphs() {
+        // §V-B: conflicting edges / |E| << 1.
+        let g = rmat::generate(&GenConfig { scale: 13, avg_degree: 8, seed: 6 });
+        let rep = Skipper::new(8).run_with_conflicts(&g);
+        let ratio = rep.conflicts.edges_with_conflicts as f64 / g.num_edge_slots() as f64;
+        assert!(ratio < 0.01, "conflict ratio {ratio}");
+    }
+
+    #[test]
+    fn single_thread_has_no_conflicts() {
+        let g = rmat::generate(&GenConfig { scale: 11, avg_degree: 8, seed: 3 });
+        let rep = Skipper::new(1).run_with_conflicts(&g);
+        assert_eq!(rep.conflicts.total, 0);
+    }
+
+    #[test]
+    fn access_count_near_paper_band() {
+        // §VI-C: Skipper needs 1.2–3.4 accesses per edge; allow slack for
+        // the different normalization of our generated graphs.
+        let g = rmat::generate(&GenConfig { scale: 13, avg_degree: 16, seed: 2 });
+        let sk = Skipper::new(1);
+        let (_, _, probes) = sk.run_instrumented::<CountingProbe>(&g);
+        let total = CountingProbe::merge(&probes).total();
+        let per_edge = total as f64 / g.num_edge_slots() as f64;
+        assert!(per_edge < 5.0, "Skipper accesses/edge = {per_edge}");
+    }
+
+    #[test]
+    fn empty_and_trivial_graphs() {
+        let empty = CsrGraph::from_parts(vec![0], vec![]).unwrap();
+        assert_eq!(Skipper::new(2).run(&empty).len(), 0);
+        let single = CsrGraph::from_parts(vec![0, 0], vec![]).unwrap();
+        assert_eq!(Skipper::new(2).run(&single).len(), 0);
+    }
+
+    #[test]
+    fn self_loops_skipped() {
+        use crate::graph::builder::{build, BuildOptions};
+        use crate::graph::EdgeList;
+        let mut el = EdgeList::new(4);
+        el.push(0, 0);
+        el.push(0, 1);
+        el.push(2, 2);
+        el.push(2, 3);
+        let g = build(
+            &el,
+            BuildOptions { symmetrize: true, dedup: true, drop_self_loops: false },
+        );
+        let m = Skipper::new(2).run(&g);
+        assert_eq!(m.to_sorted_vec(), vec![(0, 1), (2, 3)]);
+    }
+
+    #[test]
+    fn all_assignments_produce_valid_matchings() {
+        let g = rmat::generate(&GenConfig { scale: 11, avg_degree: 8, seed: 12 });
+        for a in [Assignment::DispersedContiguous, Assignment::Interleaved, Assignment::SharedQueue] {
+            let m = Skipper::new(4).with_assignment(a).run(&g);
+            verify::check(&g, &m).unwrap();
+        }
+    }
+}

@@ -1,0 +1,136 @@
+//! Matching validation (paper §II-B): the output is a correct maximal
+//! matching iff (a) no two output edges share an endpoint and every output
+//! edge exists in the graph, and (b) every graph edge has at least one
+//! matched endpoint.
+
+use super::Matching;
+use crate::graph::CsrGraph;
+use crate::par::par_for_range;
+use crate::VertexId;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Full validity + maximality check. Returns a description of the first
+/// violation found.
+pub fn check(g: &CsrGraph, m: &Matching) -> Result<(), String> {
+    let n = g.num_vertices();
+    let mut matched = vec![false; n];
+    for (u, v) in m.iter() {
+        if u as usize >= n || v as usize >= n {
+            return Err(format!("match ({u},{v}) out of range (|V|={n})"));
+        }
+        if u == v {
+            return Err(format!("self-loop ({u},{u}) in matching"));
+        }
+        if !has_edge(g, u, v) {
+            return Err(format!("match ({u},{v}) is not a graph edge"));
+        }
+        if matched[u as usize] {
+            return Err(format!("vertex {u} matched twice"));
+        }
+        if matched[v as usize] {
+            return Err(format!("vertex {v} matched twice"));
+        }
+        matched[u as usize] = true;
+        matched[v as usize] = true;
+    }
+    // maximality: every non-loop edge must have a matched endpoint
+    for (v, u) in g.iter_edges() {
+        if v != u && !matched[v as usize] && !matched[u as usize] {
+            return Err(format!("edge ({v},{u}) unmatched on both endpoints"));
+        }
+    }
+    Ok(())
+}
+
+/// Parallel maximality scan used by large experiment runs: counts violating
+/// edges instead of returning the first.
+pub fn count_maximality_violations(g: &CsrGraph, m: &Matching, threads: usize) -> u64 {
+    let n = g.num_vertices();
+    let mut matched = vec![false; n];
+    for (u, v) in m.iter() {
+        matched[u as usize] = true;
+        matched[v as usize] = true;
+    }
+    let violations = AtomicU64::new(0);
+    par_for_range(threads, n, |_tid, s, e| {
+        let mut local = 0u64;
+        for v in s..e {
+            if matched[v] {
+                continue;
+            }
+            for &u in g.neighbors(v as VertexId) {
+                if u as usize != v && !matched[u as usize] {
+                    local += 1;
+                }
+            }
+        }
+        violations.fetch_add(local, Ordering::Relaxed);
+    });
+    violations.load(Ordering::Relaxed)
+}
+
+fn has_edge(g: &CsrGraph, u: VertexId, v: VertexId) -> bool {
+    // neighbor lists from the builder are sorted; fall back to scan if not
+    let ns = g.neighbors(u);
+    if ns.len() > 16 && ns.windows(2).all(|w| w[0] <= w[1]) {
+        ns.binary_search(&v).is_ok()
+    } else {
+        ns.contains(&v)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::gen::simple;
+    use crate::matching::Matching;
+
+    #[test]
+    fn accepts_valid_maximal() {
+        let g = simple::path(4); // 0-1-2-3
+        let m = Matching::from_pairs(vec![(0, 1), (2, 3)]);
+        assert!(check(&g, &m).is_ok());
+        assert_eq!(count_maximality_violations(&g, &m, 2), 0);
+    }
+
+    #[test]
+    fn rejects_shared_endpoint() {
+        let g = simple::path(3);
+        let m = Matching::from_pairs(vec![(0, 1), (1, 2)]);
+        let err = check(&g, &m).unwrap_err();
+        assert!(err.contains("matched twice"), "{err}");
+    }
+
+    #[test]
+    fn rejects_non_edge() {
+        let g = simple::path(4);
+        let m = Matching::from_pairs(vec![(0, 3)]);
+        assert!(check(&g, &m).unwrap_err().contains("not a graph edge"));
+    }
+
+    #[test]
+    fn rejects_non_maximal() {
+        let g = simple::path(4);
+        let m = Matching::from_pairs(vec![(1, 2)]);
+        // edge (0,1)? endpoint 1 matched. edge (2,3)? endpoint 2 matched.
+        // path 0-1-2-3 with only (1,2) IS maximal. Use the empty matching:
+        let empty = Matching::from_pairs(vec![]);
+        assert!(check(&g, &empty).unwrap_err().contains("unmatched on both"));
+        assert!(check(&g, &m).is_ok());
+        assert!(count_maximality_violations(&g, &empty, 2) > 0);
+    }
+
+    #[test]
+    fn rejects_self_loop_and_out_of_range() {
+        let g = simple::path(4);
+        assert!(check(&g, &Matching::from_pairs(vec![(2, 2)])).is_err());
+        assert!(check(&g, &Matching::from_pairs(vec![(0, 9)])).is_err());
+    }
+
+    #[test]
+    fn star_maximal_is_single_edge() {
+        let g = simple::star(8);
+        let m = Matching::from_pairs(vec![(0, 3)]);
+        assert!(check(&g, &m).is_ok());
+    }
+}

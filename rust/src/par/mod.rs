@@ -1,0 +1,117 @@
+//! Scoped thread parallelism and the paper's block scheduler.
+//!
+//! The sandbox this reproduction runs in has a single physical core, so
+//! `std::thread`-based runs validate *correctness* under preemptive
+//! interleaving, while the [`crate::apram`] simulator reproduces the
+//! *t-thread performance shape* (see DESIGN.md §3).
+
+pub mod scheduler;
+
+/// Run `f(tid)` on `t` scoped threads and join. `f` observes its thread id.
+pub fn run_threads<F>(t: usize, f: F)
+where
+    F: Fn(usize) + Sync,
+{
+    assert!(t >= 1);
+    if t == 1 {
+        f(0);
+        return;
+    }
+    std::thread::scope(|s| {
+        for tid in 0..t {
+            let f = &f;
+            s.spawn(move || f(tid));
+        }
+    });
+}
+
+/// Run `f(tid)` on `t` scoped threads, collecting each thread's return value
+/// in tid order.
+pub fn run_threads_collect<F, R>(t: usize, f: F) -> Vec<R>
+where
+    F: Fn(usize) -> R + Sync,
+    R: Send,
+{
+    assert!(t >= 1);
+    if t == 1 {
+        return vec![f(0)];
+    }
+    std::thread::scope(|s| {
+        let handles: Vec<_> = (0..t)
+            .map(|tid| {
+                let f = &f;
+                s.spawn(move || f(tid))
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    })
+}
+
+/// Parallel for over `0..n`, contiguous chunks, `f(tid, start, end)`.
+pub fn par_for_range<F>(t: usize, n: usize, f: F)
+where
+    F: Fn(usize, usize, usize) + Sync,
+{
+    let chunk = n.div_ceil(t.max(1));
+    run_threads(t, |tid| {
+        let start = (tid * chunk).min(n);
+        let end = ((tid + 1) * chunk).min(n);
+        if start < end {
+            f(tid, start, end);
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn run_threads_covers_all_tids() {
+        let seen = AtomicUsize::new(0);
+        run_threads(4, |tid| {
+            seen.fetch_or(1 << tid, Ordering::Relaxed);
+        });
+        assert_eq!(seen.load(Ordering::Relaxed), 0b1111);
+    }
+
+    #[test]
+    fn collect_preserves_order() {
+        let v = run_threads_collect(5, |tid| tid * 10);
+        assert_eq!(v, vec![0, 10, 20, 30, 40]);
+    }
+
+    #[test]
+    fn par_for_range_partitions_exactly() {
+        let sum = AtomicUsize::new(0);
+        let count = AtomicUsize::new(0);
+        par_for_range(3, 100, |_tid, s, e| {
+            for i in s..e {
+                sum.fetch_add(i, Ordering::Relaxed);
+                count.fetch_add(1, Ordering::Relaxed);
+            }
+        });
+        assert_eq!(count.load(Ordering::Relaxed), 100);
+        assert_eq!(sum.load(Ordering::Relaxed), 99 * 100 / 2);
+    }
+
+    #[test]
+    fn par_for_range_more_threads_than_items() {
+        let count = AtomicUsize::new(0);
+        par_for_range(8, 3, |_t, s, e| {
+            count.fetch_add(e - s, Ordering::Relaxed);
+        });
+        assert_eq!(count.load(Ordering::Relaxed), 3);
+    }
+
+    #[test]
+    fn single_thread_runs_inline() {
+        let touched = std::sync::atomic::AtomicBool::new(false);
+        run_threads(1, |tid| {
+            assert_eq!(tid, 0);
+            touched.store(true, Ordering::Relaxed);
+        });
+        assert!(touched.load(Ordering::Relaxed));
+    }
+}

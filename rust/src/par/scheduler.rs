@@ -1,0 +1,292 @@
+//! Thread-dispersed locality-preserving block scheduler with work stealing
+//! (paper §IV-C).
+//!
+//! The graph is split into blocks of consecutive vertices with approximately
+//! equal *edge* counts. Under the paper's assignment each thread owns a
+//! contiguous run of blocks (locality: a thread walks consecutive
+//! neighborhoods; dispersion: the t runs start far apart in the ID space).
+//! A thread that exhausts its run steals whole blocks from the thread with
+//! the most remaining work. Alternative assignments are provided for the
+//! scheduler ablation bench.
+
+use crate::graph::CsrGraph;
+use crate::VertexId;
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Block assignment policy.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Assignment {
+    /// Paper §IV-C: contiguous runs of blocks per thread.
+    DispersedContiguous,
+    /// Block i → thread i mod t (destroys per-thread locality).
+    Interleaved,
+    /// Single shared queue (no affinity at all).
+    SharedQueue,
+}
+
+/// A block of consecutive vertices `[start, end)`.
+pub type Block = (VertexId, VertexId);
+
+pub struct BlockScheduler {
+    blocks: Vec<Block>,
+    /// Per-thread `[lo, hi)` index ranges into `blocks` plus a cursor.
+    ranges: Vec<(usize, usize)>,
+    cursors: Vec<AtomicUsize>,
+    steals: AtomicUsize,
+}
+
+impl BlockScheduler {
+    /// Split `g` into ≈`num_threads * blocks_per_thread` equal-edge blocks
+    /// and assign them per `policy`.
+    pub fn new(
+        g: &CsrGraph,
+        num_threads: usize,
+        blocks_per_thread: usize,
+        policy: Assignment,
+    ) -> Self {
+        let blocks = split_equal_edges(g, num_threads * blocks_per_thread.max(1));
+        Self::from_blocks(blocks, num_threads, policy)
+    }
+
+    pub fn from_blocks(mut blocks: Vec<Block>, num_threads: usize, policy: Assignment) -> Self {
+        match policy {
+            Assignment::DispersedContiguous => {
+                // blocks already in vertex order; contiguous runs per thread
+            }
+            Assignment::Interleaved => {
+                // reorder so thread i's run contains blocks i, i+t, i+2t, ...
+                let t = num_threads;
+                let mut reordered = Vec::with_capacity(blocks.len());
+                for tid in 0..t {
+                    let mut j = tid;
+                    while j < blocks.len() {
+                        reordered.push(blocks[j]);
+                        j += t;
+                    }
+                }
+                blocks = reordered;
+            }
+            Assignment::SharedQueue => {}
+        }
+        let nb = blocks.len();
+        let ranges: Vec<(usize, usize)> = match policy {
+            Assignment::SharedQueue => {
+                // one global range owned by thread 0; everyone "steals"
+                let mut r = vec![(0usize, 0usize); num_threads];
+                r[0] = (0, nb);
+                r
+            }
+            _ => {
+                // contiguous partition of the (possibly reordered) block list
+                let per = nb.div_ceil(num_threads.max(1));
+                (0..num_threads)
+                    .map(|tid| ((tid * per).min(nb), ((tid + 1) * per).min(nb)))
+                    .collect()
+            }
+        };
+        let cursors = ranges.iter().map(|&(lo, _)| AtomicUsize::new(lo)).collect();
+        Self {
+            blocks,
+            ranges,
+            cursors,
+            steals: AtomicUsize::new(0),
+        }
+    }
+
+    pub fn num_blocks(&self) -> usize {
+        self.blocks.len()
+    }
+
+    pub fn steal_count(&self) -> usize {
+        self.steals.load(Ordering::Relaxed)
+    }
+
+    /// Claim the next block for `tid`: own range first, then steal from the
+    /// victim with the most remaining blocks.
+    pub fn next_block(&self, tid: usize) -> Option<Block> {
+        // own range
+        if let Some(b) = self.claim_from(tid) {
+            return Some(b);
+        }
+        // work stealing: pick the victim with the most remaining work
+        loop {
+            let mut best: Option<(usize, usize)> = None; // (victim, remaining)
+            for v in 0..self.ranges.len() {
+                if v == tid {
+                    continue;
+                }
+                let (_, hi) = self.ranges[v];
+                let cur = self.cursors[v].load(Ordering::Relaxed);
+                let remaining = hi.saturating_sub(cur);
+                if remaining > 0 && best.map(|(_, r)| remaining > r).unwrap_or(true) {
+                    best = Some((v, remaining));
+                }
+            }
+            match best {
+                None => return None,
+                Some((victim, _)) => {
+                    if let Some(b) = self.claim_from(victim) {
+                        self.steals.fetch_add(1, Ordering::Relaxed);
+                        return Some(b);
+                    }
+                    // raced; rescan
+                }
+            }
+        }
+    }
+
+    fn claim_from(&self, owner: usize) -> Option<Block> {
+        let (_, hi) = self.ranges[owner];
+        let idx = self.cursors[owner].fetch_add(1, Ordering::Relaxed);
+        if idx < hi {
+            Some(self.blocks[idx])
+        } else {
+            // undo overshoot is unnecessary: cursor only ever grows, and
+            // remaining() uses saturating_sub
+            None
+        }
+    }
+}
+
+/// Split vertices into `target_blocks` contiguous ranges of ≈equal edge
+/// count (always at least one vertex per block).
+pub fn split_equal_edges(g: &CsrGraph, target_blocks: usize) -> Vec<Block> {
+    let n = g.num_vertices();
+    if n == 0 {
+        return vec![];
+    }
+    let total_edges = g.num_edge_slots() as u64;
+    let target = target_blocks.max(1) as u64;
+    let per_block = (total_edges / target).max(1);
+    let offsets = g.offsets();
+    let mut blocks = Vec::with_capacity(target_blocks);
+    let mut start = 0usize;
+    let mut next_cut = per_block;
+    for v in 0..n {
+        if offsets[v + 1] >= next_cut && v + 1 > start {
+            blocks.push((start as VertexId, (v + 1) as VertexId));
+            start = v + 1;
+            next_cut = offsets[v + 1] + per_block;
+        }
+    }
+    if start < n {
+        blocks.push((start as VertexId, n as VertexId));
+    }
+    blocks
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::gen::{rmat, GenConfig};
+    use crate::par::run_threads;
+    use std::collections::HashSet;
+    use std::sync::Mutex;
+
+    fn test_graph() -> CsrGraph {
+        rmat::generate(&GenConfig {
+            scale: 10,
+            avg_degree: 8,
+            seed: 3,
+        })
+    }
+
+    #[test]
+    fn blocks_cover_all_vertices_once() {
+        let g = test_graph();
+        let blocks = split_equal_edges(&g, 64);
+        let mut covered = 0usize;
+        let mut prev_end = 0;
+        for &(s, e) in &blocks {
+            assert_eq!(s, prev_end);
+            assert!(e > s);
+            covered += (e - s) as usize;
+            prev_end = e;
+        }
+        assert_eq!(covered, g.num_vertices());
+    }
+
+    #[test]
+    fn blocks_have_balanced_edges() {
+        let g = test_graph();
+        let blocks = split_equal_edges(&g, 32);
+        let total = g.num_edge_slots() as f64;
+        let target = total / 32.0;
+        let max_deg = g.max_degree() as f64;
+        for &(s, e) in &blocks {
+            let edges: u64 = (s..e).map(|v| g.degree(v)).sum::<usize>() as u64;
+            // a block can exceed target by at most one vertex's degree
+            assert!(
+                (edges as f64) <= target + max_deg + 1.0,
+                "block ({s},{e}) has {edges} edges, target {target}"
+            );
+        }
+    }
+
+    fn drain_all(policy: Assignment, threads: usize) -> usize {
+        let g = test_graph();
+        let sched = BlockScheduler::new(&g, threads, 8, policy);
+        let claimed = Mutex::new(HashSet::new());
+        run_threads(threads, |tid| {
+            while let Some(b) = sched.next_block(tid) {
+                let fresh = claimed.lock().unwrap().insert(b);
+                assert!(fresh, "block {b:?} claimed twice");
+            }
+        });
+        let n: usize = claimed
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|&(s, e)| (e - s) as usize)
+            .sum();
+        assert_eq!(n, g.num_vertices());
+        let count = claimed.lock().unwrap().len();
+        count
+    }
+
+    #[test]
+    fn all_policies_drain_every_block_exactly_once() {
+        for policy in [
+            Assignment::DispersedContiguous,
+            Assignment::Interleaved,
+            Assignment::SharedQueue,
+        ] {
+            for threads in [1, 2, 4] {
+                drain_all(policy, threads);
+            }
+        }
+    }
+
+    #[test]
+    fn stealing_happens_for_shared_queue() {
+        let g = test_graph();
+        let sched = BlockScheduler::new(&g, 4, 8, Assignment::SharedQueue);
+        // drain only from a non-owner thread: every claimed block is a steal
+        let mut claimed = 0usize;
+        while sched.next_block(3).is_some() {
+            claimed += 1;
+        }
+        assert_eq!(claimed, sched.num_blocks());
+        assert_eq!(sched.steal_count(), claimed);
+    }
+
+    #[test]
+    fn empty_graph_yields_no_blocks() {
+        let g = CsrGraph::from_parts(vec![0], vec![]).unwrap();
+        let sched = BlockScheduler::new(&g, 2, 4, Assignment::DispersedContiguous);
+        assert_eq!(sched.num_blocks(), 0);
+        assert!(sched.next_block(0).is_none());
+    }
+
+    #[test]
+    fn contiguous_assignment_is_dispersed() {
+        // thread 0's first block starts at vertex 0; thread t-1's first block
+        // starts deep into the ID space
+        let g = test_graph();
+        let sched = BlockScheduler::new(&g, 4, 8, Assignment::DispersedContiguous);
+        let b0 = sched.next_block(0).unwrap();
+        let b3 = sched.next_block(3).unwrap();
+        assert_eq!(b0.0, 0);
+        assert!(b3.0 > g.num_vertices() as u32 / 2);
+    }
+}

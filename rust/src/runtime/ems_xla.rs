@@ -1,0 +1,170 @@
+//! The XLA-backed EMS matcher: compiles an AOT HLO artifact on the PJRT CPU
+//! client and runs the tensorized EMS matching (L2 model + L1 Pallas
+//! kernel) from rust. This is the cross-layer baseline the benches compare
+//! Skipper against (DESIGN.md §5, "xla-ems").
+//!
+//! Follows /opt/xla-example/load_hlo: HLO *text* → `HloModuleProto` →
+//! `XlaComputation` → `client.compile` → `execute`. Lowered with
+//! `return_tuple=True`, so results unwrap via `to_tuple3`.
+
+use super::manifest::{ArtifactEntry, Manifest};
+use crate::graph::CsrGraph;
+use crate::matching::ems::canonical_edges;
+use crate::matching::{MaximalMatcher, Matching};
+use crate::VertexId;
+use anyhow::{anyhow, Context, Result};
+
+/// One compiled (V, E) variant.
+pub struct EmsExecutable {
+    exe: xla::PjRtLoadedExecutable,
+    pub num_vertices: usize,
+    pub num_edges: usize,
+}
+
+impl EmsExecutable {
+    pub fn load(client: &xla::PjRtClient, path: &str, entry: &ArtifactEntry) -> Result<Self> {
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .with_context(|| format!("parse HLO text {path}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client
+            .compile(&comp)
+            .with_context(|| format!("PJRT compile {path}"))?;
+        Ok(Self {
+            exe,
+            num_vertices: entry.vertices,
+            num_edges: entry.edges,
+        })
+    }
+
+    /// Execute on padded edge arrays. Returns `(match_flag, matched, rounds)`.
+    pub fn run_padded(
+        &self,
+        edge_u: &[i32],
+        edge_v: &[i32],
+        valid: &[i32],
+    ) -> Result<(Vec<i32>, Vec<i32>, i32)> {
+        if edge_u.len() != self.num_edges
+            || edge_v.len() != self.num_edges
+            || valid.len() != self.num_edges
+        {
+            return Err(anyhow!(
+                "padded inputs must have length {}, got {}/{}/{}",
+                self.num_edges,
+                edge_u.len(),
+                edge_v.len(),
+                valid.len()
+            ));
+        }
+        let lu = xla::Literal::vec1(edge_u);
+        let lv = xla::Literal::vec1(edge_v);
+        let lw = xla::Literal::vec1(valid);
+        let result = self.exe.execute::<xla::Literal>(&[lu, lv, lw])?[0][0]
+            .to_literal_sync()?;
+        let (flag, matched, rounds) = result.to_tuple3()?;
+        Ok((
+            flag.to_vec::<i32>()?,
+            matched.to_vec::<i32>()?,
+            rounds.get_first_element::<i32>()?,
+        ))
+    }
+
+    /// Match a graph: extract canonical edges, pad, execute, unpad.
+    /// Returns `(matching, rounds)`.
+    pub fn run_graph(&self, g: &CsrGraph) -> Result<(Matching, i32)> {
+        let edges = canonical_edges(g);
+        if g.num_vertices() > self.num_vertices || edges.len() > self.num_edges {
+            return Err(anyhow!(
+                "graph (V={}, E={}) exceeds variant (V={}, E={})",
+                g.num_vertices(),
+                edges.len(),
+                self.num_vertices,
+                self.num_edges
+            ));
+        }
+        let mut eu = vec![0i32; self.num_edges];
+        let mut ev = vec![0i32; self.num_edges];
+        let mut valid = vec![0i32; self.num_edges];
+        for (i, &(u, v)) in edges.iter().enumerate() {
+            eu[i] = u as i32;
+            ev[i] = v as i32;
+            valid[i] = 1;
+        }
+        let (flag, _matched, rounds) = self.run_padded(&eu, &ev, &valid)?;
+        let pairs: Vec<(VertexId, VertexId)> = edges
+            .iter()
+            .enumerate()
+            .filter(|&(i, _)| flag[i] != 0)
+            .map(|(_, &e)| e)
+            .collect();
+        Ok((Matching::from_pairs(pairs), rounds))
+    }
+}
+
+/// Baseline matcher that picks the smallest fitting artifact variant per
+/// graph. Compiled executables are cached per variant.
+pub struct XlaEmsMatcher {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    cache: std::sync::Mutex<std::collections::BTreeMap<(usize, usize), std::sync::Arc<EmsExecutable>>>,
+}
+
+impl XlaEmsMatcher {
+    /// Load from the default artifacts directory (`SKIPPER_ARTIFACTS` or
+    /// `artifacts/`).
+    pub fn from_default_artifacts() -> Result<Self> {
+        Self::from_dir(&super::artifacts_dir())
+    }
+
+    pub fn from_dir(dir: &str) -> Result<Self> {
+        let manifest = Manifest::load(dir).map_err(|e| anyhow!(e))?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Self {
+            client,
+            manifest,
+            cache: std::sync::Mutex::new(std::collections::BTreeMap::new()),
+        })
+    }
+
+    pub fn variants(&self) -> &[ArtifactEntry] {
+        &self.manifest.artifacts
+    }
+
+    /// Get (compiling if needed) the executable for a graph of this size.
+    pub fn executable_for(&self, v: usize, e: usize) -> Result<std::sync::Arc<EmsExecutable>> {
+        let entry = self
+            .manifest
+            .smallest_fitting(v, e)
+            .ok_or_else(|| anyhow!("no artifact variant fits V={v}, E={e}"))?
+            .clone();
+        let key = (entry.vertices, entry.edges);
+        let mut cache = self.cache.lock().unwrap();
+        if let Some(exe) = cache.get(&key) {
+            return Ok(exe.clone());
+        }
+        let exe = std::sync::Arc::new(EmsExecutable::load(
+            &self.client,
+            &self.manifest.full_path(&entry),
+            &entry,
+        )?);
+        cache.insert(key, exe.clone());
+        Ok(exe)
+    }
+
+    pub fn match_graph(&self, g: &CsrGraph) -> Result<(Matching, i32)> {
+        let edges = canonical_edges(g).len();
+        let exe = self.executable_for(g.num_vertices(), edges)?;
+        exe.run_graph(g)
+    }
+}
+
+impl MaximalMatcher for XlaEmsMatcher {
+    fn name(&self) -> String {
+        "XLA-EMS".into()
+    }
+
+    fn run(&self, g: &CsrGraph) -> Matching {
+        self.match_graph(g)
+            .expect("XLA EMS execution failed (are artifacts built?)")
+            .0
+    }
+}

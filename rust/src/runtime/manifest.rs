@@ -1,0 +1,110 @@
+//! Artifact manifest (`artifacts/manifest.toml`): the contract between
+//! `python/compile/aot.py` and the rust runtime. One `[[artifact]]` entry
+//! per (V, E) shape variant.
+
+use crate::util::tomlite::Document;
+
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ArtifactEntry {
+    pub path: String,
+    pub vertices: usize,
+    pub edges: usize,
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct Manifest {
+    pub artifacts: Vec<ArtifactEntry>,
+    /// Directory the entries' paths are relative to.
+    pub base_dir: String,
+}
+
+impl Manifest {
+    pub fn parse(text: &str, base_dir: &str) -> Result<Self, String> {
+        let doc = Document::parse(text)?;
+        let mut artifacts = Vec::new();
+        for t in doc.table_arrays.get("artifact").map(|v| v.as_slice()).unwrap_or(&[]) {
+            let path = t
+                .get("path")
+                .and_then(|v| v.as_str())
+                .ok_or("artifact missing path")?
+                .to_string();
+            let vertices = t
+                .get("vertices")
+                .and_then(|v| v.as_int())
+                .ok_or("artifact missing vertices")? as usize;
+            let edges = t
+                .get("edges")
+                .and_then(|v| v.as_int())
+                .ok_or("artifact missing edges")? as usize;
+            artifacts.push(ArtifactEntry { path, vertices, edges });
+        }
+        if artifacts.is_empty() {
+            return Err("manifest contains no [[artifact] ] entries".into());
+        }
+        Ok(Self {
+            artifacts,
+            base_dir: base_dir.to_string(),
+        })
+    }
+
+    pub fn load(dir: &str) -> Result<Self, String> {
+        let path = format!("{dir}/manifest.toml");
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| format!("read {path}: {e} (run `make artifacts` first)"))?;
+        Self::parse(&text, dir)
+    }
+
+    /// The smallest variant that fits a graph with `v` vertices and `e`
+    /// canonical edges.
+    pub fn smallest_fitting(&self, v: usize, e: usize) -> Option<&ArtifactEntry> {
+        self.artifacts
+            .iter()
+            .filter(|a| a.vertices >= v && a.edges >= e)
+            .min_by_key(|a| (a.vertices, a.edges))
+    }
+
+    pub fn full_path(&self, entry: &ArtifactEntry) -> String {
+        format!("{}/{}", self.base_dir, entry.path)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# AOT artifact manifest
+[[artifact]]
+path = "ems_v256_e1024.hlo.txt"
+vertices = 256
+edges = 1024
+
+[[artifact]]
+path = "ems_v1024_e4096.hlo.txt"
+vertices = 1024
+edges = 4096
+"#;
+
+    #[test]
+    fn parses_entries() {
+        let m = Manifest::parse(SAMPLE, "arts").unwrap();
+        assert_eq!(m.artifacts.len(), 2);
+        assert_eq!(m.artifacts[0].vertices, 256);
+        assert_eq!(m.full_path(&m.artifacts[1]), "arts/ems_v1024_e4096.hlo.txt");
+    }
+
+    #[test]
+    fn smallest_fitting_selects_correctly() {
+        let m = Manifest::parse(SAMPLE, ".").unwrap();
+        assert_eq!(m.smallest_fitting(100, 500).unwrap().vertices, 256);
+        assert_eq!(m.smallest_fitting(256, 1024).unwrap().vertices, 256);
+        assert_eq!(m.smallest_fitting(300, 500).unwrap().vertices, 1024);
+        assert!(m.smallest_fitting(5000, 1).is_none());
+    }
+
+    #[test]
+    fn rejects_empty_and_malformed() {
+        assert!(Manifest::parse("", ".").is_err());
+        assert!(Manifest::parse("[[artifact]]\npath = \"x\"\n", ".").is_err());
+    }
+}

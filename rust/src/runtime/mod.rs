@@ -1,0 +1,16 @@
+//! PJRT runtime: loads the AOT-compiled L1/L2 EMS matcher
+//! (`artifacts/*.hlo.txt`, produced once by `make artifacts`) and exposes it
+//! as a [`crate::matching::MaximalMatcher`] baseline callable from the L3
+//! hot path. Python never runs at request time — the HLO text is compiled
+//! by the in-process PJRT CPU client and executed directly.
+
+pub mod ems_xla;
+pub mod manifest;
+
+pub use ems_xla::{EmsExecutable, XlaEmsMatcher};
+pub use manifest::{ArtifactEntry, Manifest};
+
+/// Default artifacts directory, overridable via `SKIPPER_ARTIFACTS`.
+pub fn artifacts_dir() -> String {
+    std::env::var("SKIPPER_ARTIFACTS").unwrap_or_else(|_| "artifacts".to_string())
+}

@@ -1,0 +1,163 @@
+//! Bench harness (criterion is unavailable offline).
+//!
+//! Measures wall-clock with warmup, reports median/mean/stddev over
+//! iterations, and prints table rows for the paper-figure benches. Bench
+//! binaries (`rust/benches/*.rs`, `harness = false`) use this directly.
+
+use super::stats;
+use std::time::Instant;
+
+#[derive(Clone, Debug)]
+pub struct BenchConfig {
+    pub warmup_iters: usize,
+    /// Minimum timed iterations.
+    pub min_iters: usize,
+    /// Stop adding iterations past this wall-clock budget (seconds).
+    pub max_seconds: f64,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        Self {
+            warmup_iters: 1,
+            min_iters: 3,
+            max_seconds: 10.0,
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub median_s: f64,
+    pub mean_s: f64,
+    pub stddev_s: f64,
+    pub min_s: f64,
+}
+
+impl BenchResult {
+    pub fn row(&self) -> String {
+        format!(
+            "{:<44} {:>4} iters  median {:>10.4} s  mean {:>10.4} s  sd {:>8.4}",
+            self.name, self.iters, self.median_s, self.mean_s, self.stddev_s
+        )
+    }
+}
+
+/// Time `f` per [`BenchConfig`]. `f` should perform one full run and return
+/// a value that is consumed via `std::hint::black_box` to prevent DCE.
+pub fn bench<T>(name: &str, cfg: &BenchConfig, mut f: impl FnMut() -> T) -> BenchResult {
+    for _ in 0..cfg.warmup_iters {
+        std::hint::black_box(f());
+    }
+    let mut samples = Vec::new();
+    let budget_start = Instant::now();
+    while samples.len() < cfg.min_iters
+        || (budget_start.elapsed().as_secs_f64() < cfg.max_seconds && samples.len() < 1000)
+    {
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        samples.push(t0.elapsed().as_secs_f64());
+        if samples.len() >= cfg.min_iters && budget_start.elapsed().as_secs_f64() >= cfg.max_seconds
+        {
+            break;
+        }
+    }
+    BenchResult {
+        name: name.to_string(),
+        iters: samples.len(),
+        median_s: stats::median(&samples),
+        mean_s: stats::mean(&samples),
+        stddev_s: stats::stddev(&samples),
+        min_s: samples.iter().cloned().fold(f64::INFINITY, f64::min),
+    }
+}
+
+/// Simple fixed-width table printer for paper-style tables.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Self {
+        Self {
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len(), "column count mismatch");
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let fmt_row = |cells: &[String]| {
+            cells
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!("{:>w$}", c, w = widths[i]))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        let mut out = String::new();
+        out.push_str(&fmt_row(&self.headers));
+        out.push('\n');
+        out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * (widths.len() - 1)));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_returns_sane_stats() {
+        let cfg = BenchConfig {
+            warmup_iters: 1,
+            min_iters: 3,
+            max_seconds: 0.2,
+        };
+        let r = bench("noop-ish", &cfg, || {
+            let mut s = 0u64;
+            for i in 0..1000u64 {
+                s = s.wrapping_add(i * i);
+            }
+            s
+        });
+        assert!(r.iters >= 3);
+        assert!(r.median_s >= 0.0 && r.median_s.is_finite());
+        assert!(r.min_s <= r.median_s + 1e-9);
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new(&["name", "val"]);
+        t.row(&["a".into(), "1.00".into()]);
+        t.row(&["long-name".into(), "2".into()]);
+        let s = t.render();
+        assert!(s.contains("long-name"));
+        assert_eq!(s.lines().count(), 4);
+    }
+
+    #[test]
+    #[should_panic(expected = "column count mismatch")]
+    fn table_rejects_bad_row() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(&["only-one".into()]);
+    }
+}

@@ -1,0 +1,191 @@
+//! Compact bitset over `u64` words, plus an atomic variant used by the
+//! instrumented SGMM (the paper notes SGMM needs a single *bit* per vertex;
+//! Skipper needs a byte).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Plain (single-threaded) bitset.
+#[derive(Clone, Debug)]
+pub struct Bitset {
+    words: Vec<u64>,
+    len: usize,
+}
+
+impl Bitset {
+    pub fn new(len: usize) -> Self {
+        Self {
+            words: vec![0; len.div_ceil(64)],
+            len,
+        }
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize) -> bool {
+        debug_assert!(i < self.len);
+        (self.words[i >> 6] >> (i & 63)) & 1 == 1
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize) {
+        debug_assert!(i < self.len);
+        self.words[i >> 6] |= 1u64 << (i & 63);
+    }
+
+    #[inline]
+    pub fn clear(&mut self, i: usize) {
+        debug_assert!(i < self.len);
+        self.words[i >> 6] &= !(1u64 << (i & 63));
+    }
+
+    pub fn clear_all(&mut self) {
+        self.words.fill(0);
+    }
+
+    pub fn count_ones(&self) -> usize {
+        self.words.iter().map(|w| w.count_ones() as usize).sum()
+    }
+
+    /// Iterate over set bit positions.
+    pub fn iter_ones(&self) -> impl Iterator<Item = usize> + '_ {
+        self.words.iter().enumerate().flat_map(|(wi, &w)| {
+            let mut w = w;
+            std::iter::from_fn(move || {
+                if w == 0 {
+                    None
+                } else {
+                    let b = w.trailing_zeros() as usize;
+                    w &= w - 1;
+                    Some(wi * 64 + b)
+                }
+            })
+        })
+    }
+}
+
+/// Thread-safe bitset (relaxed atomics; callers impose ordering).
+pub struct AtomicBitset {
+    words: Vec<AtomicU64>,
+    len: usize,
+}
+
+impl AtomicBitset {
+    pub fn new(len: usize) -> Self {
+        Self {
+            words: (0..len.div_ceil(64)).map(|_| AtomicU64::new(0)).collect(),
+            len,
+        }
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize) -> bool {
+        (self.words[i >> 6].load(Ordering::Acquire) >> (i & 63)) & 1 == 1
+    }
+
+    /// Atomically set bit `i`; returns `true` iff this call changed it
+    /// (i.e. the caller "won" the bit).
+    #[inline]
+    pub fn test_and_set(&self, i: usize) -> bool {
+        let mask = 1u64 << (i & 63);
+        let prev = self.words[i >> 6].fetch_or(mask, Ordering::AcqRel);
+        prev & mask == 0
+    }
+
+    pub fn count_ones(&self) -> usize {
+        self.words
+            .iter()
+            .map(|w| w.load(Ordering::Acquire).count_ones() as usize)
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn set_get_clear() {
+        let mut b = Bitset::new(130);
+        assert!(!b.get(0) && !b.get(129));
+        b.set(0);
+        b.set(64);
+        b.set(129);
+        assert!(b.get(0) && b.get(64) && b.get(129) && !b.get(1));
+        assert_eq!(b.count_ones(), 3);
+        b.clear(64);
+        assert!(!b.get(64));
+        assert_eq!(b.count_ones(), 2);
+    }
+
+    #[test]
+    fn iter_ones_matches_set_bits() {
+        let mut b = Bitset::new(200);
+        let idx = [0usize, 3, 63, 64, 65, 127, 128, 199];
+        for &i in &idx {
+            b.set(i);
+        }
+        let got: Vec<usize> = b.iter_ones().collect();
+        assert_eq!(got, idx);
+    }
+
+    #[test]
+    fn clear_all_resets() {
+        let mut b = Bitset::new(100);
+        for i in 0..100 {
+            b.set(i);
+        }
+        b.clear_all();
+        assert_eq!(b.count_ones(), 0);
+    }
+
+    #[test]
+    fn atomic_test_and_set_wins_once() {
+        let b = AtomicBitset::new(70);
+        assert!(b.test_and_set(69));
+        assert!(!b.test_and_set(69));
+        assert!(b.get(69));
+        assert_eq!(b.count_ones(), 1);
+    }
+
+    #[test]
+    fn atomic_concurrent_single_winner() {
+        let b = std::sync::Arc::new(AtomicBitset::new(64));
+        let mut handles = vec![];
+        let wins = std::sync::Arc::new(AtomicU64::new(0));
+        for _ in 0..8 {
+            let b = b.clone();
+            let wins = wins.clone();
+            handles.push(std::thread::spawn(move || {
+                for i in 0..64 {
+                    if b.test_and_set(i) {
+                        wins.fetch_add(1, Ordering::Relaxed);
+                    }
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        // each of the 64 bits has exactly one winner
+        assert_eq!(wins.load(Ordering::Relaxed), 64);
+    }
+}

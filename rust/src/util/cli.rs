@@ -1,0 +1,112 @@
+//! Tiny CLI argument parser (clap is unavailable offline).
+//!
+//! Supports `--key value`, `--key=value`, boolean `--flag`, and positional
+//! arguments. The main binary defines subcommands on top of this.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw arguments (excluding argv[0]).
+    /// `known_flags` lists options that take no value.
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I, known_flags: &[&str]) -> Result<Self, String> {
+        let mut out = Args::default();
+        let mut it = raw.into_iter().peekable();
+        while let Some(arg) = it.next() {
+            if let Some(body) = arg.strip_prefix("--") {
+                if body.is_empty() {
+                    // "--" terminator: rest is positional
+                    out.positional.extend(it.by_ref());
+                    break;
+                }
+                if let Some((k, v)) = body.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if known_flags.contains(&body) {
+                    out.flags.push(body.to_string());
+                } else if let Some(v) = it.peek() {
+                    if v.starts_with("--") {
+                        return Err(format!("option --{body} expects a value"));
+                    }
+                    let v = it.next().unwrap();
+                    out.options.insert(body.to_string(), v);
+                } else {
+                    return Err(format!("option --{body} expects a value"));
+                }
+            } else {
+                out.positional.push(arg);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn get_parse<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T, String> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(s) => s
+                .parse()
+                .map_err(|_| format!("invalid value for --{key}: {s:?}")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &str) -> Vec<String> {
+        s.split_whitespace().map(String::from).collect()
+    }
+
+    #[test]
+    fn parses_mixed_args() {
+        let a = Args::parse(argv("run --threads 8 --graph=rmat --verbose pos1"), &["verbose"]).unwrap();
+        assert_eq!(a.positional, vec!["run", "pos1"]);
+        assert_eq!(a.get("threads"), Some("8"));
+        assert_eq!(a.get("graph"), Some("rmat"));
+        assert!(a.flag("verbose"));
+    }
+
+    #[test]
+    fn get_parse_with_default() {
+        let a = Args::parse(argv("--n 42"), &[]).unwrap();
+        assert_eq!(a.get_parse("n", 0usize).unwrap(), 42);
+        assert_eq!(a.get_parse("missing", 7usize).unwrap(), 7);
+        assert!(a.get_parse::<usize>("n", 0).is_ok());
+    }
+
+    #[test]
+    fn invalid_value_is_error() {
+        let a = Args::parse(argv("--n notanum"), &[]).unwrap();
+        assert!(a.get_parse::<usize>("n", 0).is_err());
+    }
+
+    #[test]
+    fn missing_value_is_error() {
+        assert!(Args::parse(argv("--key"), &[]).is_err());
+        assert!(Args::parse(argv("--key --other v"), &[]).is_err());
+    }
+
+    #[test]
+    fn double_dash_terminates() {
+        let a = Args::parse(argv("a -- --not-an-option"), &[]).unwrap();
+        assert_eq!(a.positional, vec!["a", "--not-an-option"]);
+    }
+}

@@ -1,0 +1,12 @@
+//! Shared utilities: RNG, bitset, statistics, CLI parsing, a mini
+//! property-testing framework ([`qcheck`]) and a bench harness
+//! ([`benchlib`]). These substrates replace crates that are unavailable in
+//! the offline build environment (rand, criterion, proptest, clap).
+
+pub mod benchlib;
+pub mod bitset;
+pub mod cli;
+pub mod qcheck;
+pub mod rng;
+pub mod stats;
+pub mod tomlite;

@@ -1,0 +1,153 @@
+//! Mini property-based testing framework (proptest is unavailable offline).
+//!
+//! A property is a closure from a generated value to `Result<(), String>`.
+//! On failure the runner performs greedy shrinking via a user-supplied
+//! shrinker (halving-style candidates) and reports the minimal failing case
+//! together with the seed, so every failure is reproducible.
+
+use super::rng::Xoshiro256pp;
+
+/// Configuration for a property run.
+#[derive(Clone, Debug)]
+pub struct Config {
+    pub cases: usize,
+    pub seed: u64,
+    pub max_shrink_steps: usize,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Self {
+            cases: 64,
+            seed: 0xC0FFEE,
+            max_shrink_steps: 200,
+        }
+    }
+}
+
+/// Run `prop` on `cfg.cases` values drawn from `gen`. Panics with the seed,
+/// case index and (shrunk) failing input rendered via `Debug`.
+pub fn check<T, G, P>(cfg: &Config, mut gen: G, mut prop: P)
+where
+    T: std::fmt::Debug + Clone,
+    G: FnMut(&mut Xoshiro256pp) -> T,
+    P: FnMut(&T) -> Result<(), String>,
+{
+    check_shrink(cfg, &mut gen, |_| Vec::new(), &mut prop)
+}
+
+/// Like [`check`] but with a shrinker producing "smaller" candidates.
+pub fn check_shrink<T, G, S, P>(cfg: &Config, gen: &mut G, shrink: S, prop: &mut P)
+where
+    T: std::fmt::Debug + Clone,
+    G: FnMut(&mut Xoshiro256pp) -> T,
+    S: Fn(&T) -> Vec<T>,
+    P: FnMut(&T) -> Result<(), String>,
+{
+    let mut rng = Xoshiro256pp::new(cfg.seed);
+    for case in 0..cfg.cases {
+        let value = gen(&mut rng);
+        if let Err(mut msg) = prop(&value) {
+            // Greedy shrink: repeatedly take the first failing candidate.
+            let mut current = value;
+            let mut steps = 0;
+            'outer: while steps < cfg.max_shrink_steps {
+                for cand in shrink(&current) {
+                    steps += 1;
+                    if let Err(m) = prop(&cand) {
+                        current = cand;
+                        msg = m;
+                        continue 'outer;
+                    }
+                    if steps >= cfg.max_shrink_steps {
+                        break;
+                    }
+                }
+                break;
+            }
+            panic!(
+                "property failed (seed={:#x}, case {}/{}): {}\ninput: {:?}",
+                cfg.seed, case, cfg.cases, msg, current
+            );
+        }
+    }
+}
+
+/// Standard shrinker for `usize`-like sizes: 0, halves, and decrements.
+pub fn shrink_usize(n: usize) -> Vec<usize> {
+    let mut out = Vec::new();
+    if n > 0 {
+        out.push(0);
+        if n > 2 {
+            out.push(n / 2);
+        }
+        out.push(n - 1);
+    }
+    out.dedup();
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_completes() {
+        check(
+            &Config::default(),
+            |r| r.next_below(1000),
+            |&x| {
+                if x < 1000 {
+                    Ok(())
+                } else {
+                    Err(format!("{x} out of range"))
+                }
+            },
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics_with_seed() {
+        check(
+            &Config { cases: 50, ..Default::default() },
+            |r| r.next_below(100),
+            |&x| {
+                if x < 30 {
+                    Ok(())
+                } else {
+                    Err("too big".into())
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn shrinking_finds_smaller_case() {
+        // Property fails for all n >= 10. Shrinker should get us to exactly 10.
+        let result = std::panic::catch_unwind(|| {
+            check_shrink(
+                &Config { cases: 20, ..Default::default() },
+                &mut |r: &mut Xoshiro256pp| 10 + r.next_usize(1000),
+                |&n| shrink_usize(n),
+                &mut |&n: &usize| {
+                    if n < 10 {
+                        Ok(())
+                    } else {
+                        Err("n >= 10".into())
+                    }
+                },
+            )
+        });
+        let err = result.unwrap_err();
+        let msg = err.downcast_ref::<String>().unwrap();
+        assert!(msg.contains("input: 10"), "expected shrink to 10, got: {msg}");
+    }
+
+    #[test]
+    fn shrink_usize_candidates() {
+        assert!(shrink_usize(0).is_empty());
+        assert_eq!(shrink_usize(1), vec![0]);
+        assert_eq!(shrink_usize(10), vec![0, 5, 9]);
+    }
+}

@@ -1,0 +1,240 @@
+//! TOML-subset parser for experiment configs (the `toml`/`serde` crates are
+//! unavailable offline).
+//!
+//! Supported: `[section]` and `[[array-of-tables]]` headers, `key = value`
+//! with string / integer / float / boolean / flat string-or-number arrays,
+//! `#` comments, blank lines. This covers everything the coordinator's
+//! config files need (see `configs/*.toml`).
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Array(Vec<Value>),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+    pub fn as_int(&self) -> Option<i64> {
+        match self {
+            Value::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+    pub fn as_float(&self) -> Option<f64> {
+        match self {
+            Value::Float(f) => Some(*f),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+    pub fn as_array(&self) -> Option<&[Value]> {
+        match self {
+            Value::Array(a) => Some(a),
+            _ => None,
+        }
+    }
+}
+
+/// One `key = value` table.
+pub type TableData = BTreeMap<String, Value>;
+
+/// Parsed document: the root table, named sections, and arrays of tables.
+#[derive(Debug, Default, Clone)]
+pub struct Document {
+    pub root: TableData,
+    pub sections: BTreeMap<String, TableData>,
+    pub table_arrays: BTreeMap<String, Vec<TableData>>,
+}
+
+impl Document {
+    pub fn parse(text: &str) -> Result<Self, String> {
+        let mut doc = Document::default();
+        enum Target {
+            Root,
+            Section(String),
+            ArrayItem(String),
+        }
+        let mut target = Target::Root;
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(name) = line.strip_prefix("[[").and_then(|s| s.strip_suffix("]]")) {
+                let name = name.trim().to_string();
+                doc.table_arrays.entry(name.clone()).or_default().push(TableData::new());
+                target = Target::ArrayItem(name);
+            } else if let Some(name) = line.strip_prefix('[').and_then(|s| s.strip_suffix(']')) {
+                let name = name.trim().to_string();
+                doc.sections.entry(name.clone()).or_default();
+                target = Target::Section(name);
+            } else if let Some((k, v)) = line.split_once('=') {
+                let key = k.trim().to_string();
+                let value = parse_value(v.trim())
+                    .map_err(|e| format!("line {}: {}", lineno + 1, e))?;
+                let table = match &target {
+                    Target::Root => &mut doc.root,
+                    Target::Section(s) => doc.sections.get_mut(s).unwrap(),
+                    Target::ArrayItem(s) => doc.table_arrays.get_mut(s).unwrap().last_mut().unwrap(),
+                };
+                table.insert(key, value);
+            } else {
+                return Err(format!("line {}: cannot parse {:?}", lineno + 1, raw));
+            }
+        }
+        Ok(doc)
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // '#' starts a comment unless inside a string.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<Value, String> {
+    if let Some(body) = s.strip_prefix('"') {
+        let body = body.strip_suffix('"').ok_or_else(|| format!("unterminated string: {s:?}"))?;
+        return Ok(Value::Str(body.to_string()));
+    }
+    if s == "true" {
+        return Ok(Value::Bool(true));
+    }
+    if s == "false" {
+        return Ok(Value::Bool(false));
+    }
+    if let Some(body) = s.strip_prefix('[') {
+        let body = body.strip_suffix(']').ok_or_else(|| format!("unterminated array: {s:?}"))?;
+        let body = body.trim();
+        if body.is_empty() {
+            return Ok(Value::Array(vec![]));
+        }
+        let items: Result<Vec<Value>, String> =
+            split_top_level(body).iter().map(|item| parse_value(item.trim())).collect();
+        return Ok(Value::Array(items?));
+    }
+    if let Ok(i) = s.parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    if let Ok(f) = s.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    Err(format!("cannot parse value {s:?}"))
+}
+
+/// Split an array body on commas not inside strings (no nested arrays).
+fn split_top_level(s: &str) -> Vec<String> {
+    let mut out = Vec::new();
+    let mut cur = String::new();
+    let mut in_str = false;
+    for c in s.chars() {
+        match c {
+            '"' => {
+                in_str = !in_str;
+                cur.push(c);
+            }
+            ',' if !in_str => {
+                out.push(std::mem::take(&mut cur));
+            }
+            _ => cur.push(c),
+        }
+    }
+    if !cur.trim().is_empty() {
+        out.push(cur);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_full_document() {
+        let doc = Document::parse(
+            r#"
+            # experiment config
+            name = "suite"   # trailing comment
+            threads = 64
+            frac = 0.5
+            verify = true
+            sizes = [1, 2, 3]
+
+            [output]
+            dir = "reports"
+
+            [[dataset]]
+            name = "g500"
+            scale = 20
+
+            [[dataset]]
+            name = "twitter"
+            scale = 18
+            "#,
+        )
+        .unwrap();
+        assert_eq!(doc.root["name"].as_str(), Some("suite"));
+        assert_eq!(doc.root["threads"].as_int(), Some(64));
+        assert_eq!(doc.root["frac"].as_float(), Some(0.5));
+        assert_eq!(doc.root["verify"].as_bool(), Some(true));
+        assert_eq!(doc.root["sizes"].as_array().unwrap().len(), 3);
+        assert_eq!(doc.sections["output"]["dir"].as_str(), Some("reports"));
+        let ds = &doc.table_arrays["dataset"];
+        assert_eq!(ds.len(), 2);
+        assert_eq!(ds[0]["name"].as_str(), Some("g500"));
+        assert_eq!(ds[1]["scale"].as_int(), Some(18));
+    }
+
+    #[test]
+    fn string_with_hash_not_comment() {
+        let doc = Document::parse(r##"tag = "a#b""##).unwrap();
+        assert_eq!(doc.root["tag"].as_str(), Some("a#b"));
+    }
+
+    #[test]
+    fn string_array() {
+        let doc = Document::parse(r#"names = ["a", "b,c", "d"]"#).unwrap();
+        let arr = doc.root["names"].as_array().unwrap();
+        assert_eq!(arr.len(), 3);
+        assert_eq!(arr[1].as_str(), Some("b,c"));
+    }
+
+    #[test]
+    fn bad_line_is_error() {
+        assert!(Document::parse("not a kv line").is_err());
+        assert!(Document::parse("x = @nope").is_err());
+        assert!(Document::parse("s = \"unterminated").is_err());
+    }
+
+    #[test]
+    fn int_vs_float() {
+        let doc = Document::parse("a = 3\nb = 3.5").unwrap();
+        assert_eq!(doc.root["a"].as_int(), Some(3));
+        assert_eq!(doc.root["a"].as_float(), Some(3.0));
+        assert_eq!(doc.root["b"].as_float(), Some(3.5));
+        assert_eq!(doc.root["b"].as_int(), None);
+    }
+}

@@ -1,0 +1,93 @@
+//! Integration: the experiment coordinator end-to-end on one tiny dataset —
+//! metric collection, every table/figure renderer, config parsing, report
+//! writing. The paper's *shape* claims are asserted where they are scale-
+//! independent.
+
+use skipper::apram::cost::CostModel;
+use skipper::coordinator::config::RunConfig;
+use skipper::coordinator::datasets::{spec_by_name, Scale};
+use skipper::coordinator::experiments::{self as exp, collect_dataset};
+use skipper::coordinator::report::Report;
+
+fn metrics() -> Vec<exp::DatasetMetrics> {
+    let dir = std::env::temp_dir().join("skipper_it_exp");
+    let dir = dir.to_str().unwrap();
+    vec![
+        collect_dataset(spec_by_name("twitter10s").unwrap(), Scale::Tiny, dir, 2),
+        collect_dataset(spec_by_name("g500s").unwrap(), Scale::Tiny, dir, 2),
+    ]
+}
+
+#[test]
+fn full_experiment_pipeline() {
+    let m = metrics();
+    let cost = CostModel::default();
+    let mut report = Report::new();
+    report.add("table1", exp::table1(&m, &cost));
+    report.add("table2", exp::table2(&m));
+    report.add("fig3", exp::fig3(&m, &cost));
+    report.add("fig7", exp::fig7(&m));
+    report.add("fig8", exp::fig8(&m));
+    report.add("fig9", exp::fig9(&m, &cost));
+    report.add("fig10", exp::fig10(&m, &cost));
+    report.add("fig11", exp::fig11(&m));
+    // every section mentions both datasets
+    for (id, content) in report.sections() {
+        assert!(content.contains("twitter10"), "{id} missing twitter10");
+        assert!(content.contains("g500"), "{id} missing g500");
+    }
+    // reports write out
+    let dir = std::env::temp_dir().join("skipper_it_reports");
+    let dir_s = dir.to_str().unwrap();
+    let _ = std::fs::remove_dir_all(dir_s);
+    let files = report.write_dir(dir_s).unwrap();
+    assert_eq!(files.len(), 9); // 8 sections + summary.md
+    let _ = std::fs::remove_dir_all(dir_s);
+}
+
+#[test]
+fn paper_shape_claims_on_tiny_suite() {
+    let ms = metrics();
+    let cost = CostModel::default();
+    for m in &ms {
+        let name = m.spec.name;
+        // Fig 7 shape: SGMM < Skipper << SIDMM accesses
+        assert!(
+            m.sgmm_accesses < m.skipper_accesses_1t,
+            "{name}: SGMM should touch less than Skipper"
+        );
+        assert!(
+            m.sidmm_accesses > 5 * m.skipper_accesses_1t,
+            "{name}: SIDMM overhead missing ({} vs {})",
+            m.sidmm_accesses,
+            m.skipper_accesses_1t
+        );
+        // Table I shape: Skipper wins at t=64
+        let speedup = m.sidmm_par_seconds(&cost, 64) / m.skipper_par_seconds(&cost, 64);
+        assert!(speedup > 2.0, "{name}: Table I speedup only {speedup:.2}");
+        // Table II shape: conflicts are rare
+        let ratio = m.conflicts64.edges_with_conflicts as f64 / m.e_slots as f64;
+        assert!(ratio < 0.02, "{name}: conflict ratio {ratio}");
+        // Fig 11 shape: Skipper's serial slowdown is far below SIDMM's
+        let sk = m.skipper_wall_1t_s / m.sgmm_wall_s;
+        let sd = m.sidmm_wall_s / m.sgmm_wall_s;
+        assert!(
+            sk < sd,
+            "{name}: skipper serial slowdown {sk:.2} not below SIDMM {sd:.2}"
+        );
+    }
+}
+
+#[test]
+fn config_roundtrip_drives_pipeline() {
+    let cfg = RunConfig::parse(
+        r#"
+        scale = "tiny"
+        table2_runs = 1
+        datasets = ["twitter10s"]
+        "#,
+    )
+    .unwrap();
+    assert_eq!(cfg.scale, Scale::Tiny);
+    assert_eq!(cfg.datasets, vec!["twitter10s"]);
+}

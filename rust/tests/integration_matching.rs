@@ -1,0 +1,133 @@
+//! Integration: every matching algorithm × the whole (tiny-scale) analogue
+//! suite, all validated for validity + maximality, plus cross-algorithm
+//! sanity (any two maximal matchings are within 2× in size).
+
+use skipper::coordinator::datasets::{generate, Scale, SUITE};
+use skipper::graph::builder::{build, relabel, to_edge_list, BuildOptions};
+use skipper::matching::ems::auer_bisseling::AuerBisseling;
+use skipper::matching::ems::birn::Birn;
+use skipper::matching::ems::idmm::Idmm;
+use skipper::matching::ems::israeli_itai::IsraeliItai;
+use skipper::matching::ems::pbmm::Pbmm;
+use skipper::matching::ems::sidmm::Sidmm;
+use skipper::matching::sgmm::Sgmm;
+use skipper::matching::skipper::Skipper;
+use skipper::matching::{verify, MaximalMatcher, Matching};
+use skipper::util::rng::Xoshiro256pp;
+
+fn algorithms() -> Vec<Box<dyn MaximalMatcher>> {
+    vec![
+        Box::new(Sgmm),
+        Box::new(Skipper::new(1)),
+        Box::new(Skipper::new(4)),
+        Box::new(Sidmm::default()),
+        Box::new(Idmm::default()),
+        Box::new(Pbmm::default()),
+        Box::new(IsraeliItai::default()),
+        Box::new(Birn::default()),
+        Box::new(AuerBisseling::default()),
+    ]
+}
+
+#[test]
+fn every_algorithm_on_every_suite_dataset() {
+    for spec in &SUITE {
+        let g = generate(spec, Scale::Tiny);
+        let mut sizes: Vec<(String, usize)> = Vec::new();
+        for algo in algorithms() {
+            let m = algo.run(&g);
+            verify::check(&g, &m)
+                .unwrap_or_else(|e| panic!("{} invalid on {}: {e}", algo.name(), spec.name));
+            sizes.push((algo.name(), m.len()));
+        }
+        // maximal matchings are 2-approximations of each other
+        let max = sizes.iter().map(|(_, s)| *s).max().unwrap();
+        let min = sizes.iter().map(|(_, s)| *s).min().unwrap();
+        assert!(
+            min * 2 >= max,
+            "matching sizes diverge on {}: {:?}",
+            spec.name,
+            sizes
+        );
+    }
+}
+
+#[test]
+fn skipper_thread_counts_agree_on_size_band() {
+    let g = generate(&SUITE[1], Scale::Tiny); // g500s
+    let baseline = Skipper::new(1).run(&g).len();
+    for t in [2, 4, 8, 16] {
+        let m = Skipper::new(t).run(&g);
+        verify::check(&g, &m).unwrap();
+        let ratio = m.len() as f64 / baseline as f64;
+        assert!((0.9..1.12).contains(&ratio), "t={t} ratio {ratio}");
+    }
+}
+
+#[test]
+fn vertex_relabeling_preserves_validity() {
+    // Skipper's correctness is ordering-independent (§VI-A).
+    let g = generate(&SUITE[0], Scale::Tiny);
+    let mut rng = Xoshiro256pp::new(77);
+    let perm = rng.permutation(g.num_vertices());
+    let g2 = relabel(&g, &perm);
+    for algo in algorithms() {
+        let m = algo.run(&g2);
+        verify::check(&g2, &m).unwrap_or_else(|e| panic!("{} on relabeled: {e}", algo.name()));
+    }
+}
+
+#[test]
+fn skipper_on_directed_nonsymmetric_suite_inputs() {
+    // §V-C: no symmetrization required for Skipper.
+    for spec in SUITE.iter().take(3) {
+        let sym = generate(spec, Scale::Tiny);
+        let el = to_edge_list(&sym);
+        let directed = build(
+            &el,
+            BuildOptions {
+                symmetrize: false,
+                dedup: true,
+                drop_self_loops: true,
+            },
+        );
+        let m = Skipper::new(4).run(&directed);
+        verify::check(&sym, &m)
+            .unwrap_or_else(|e| panic!("directed skipper invalid on {}: {e}", spec.name));
+    }
+}
+
+#[test]
+fn deterministic_algorithms_are_deterministic() {
+    let g = generate(&SUITE[2], Scale::Tiny);
+    let pairs: Vec<Box<dyn MaximalMatcher>> = vec![
+        Box::new(Sgmm),
+        Box::new(Idmm::default()),
+        Box::new(Sidmm::default()),
+        Box::new(Pbmm::default()),
+    ];
+    for a in pairs {
+        let ma = a.run(&g);
+        let mb = a.run(&g);
+        assert_eq!(ma.to_sorted_vec(), mb.to_sorted_vec(), "{}", a.name());
+    }
+}
+
+#[test]
+fn skipper_output_buffers_have_sentinel_structure() {
+    let g = generate(&SUITE[3], Scale::Tiny);
+    let m: Matching = Skipper::new(4).run(&g);
+    // arena slots are a whole number of 1024-edge buffers
+    assert_eq!(m.slots_used() % skipper::matching::BUFFER_EDGES, 0);
+    // iterator yields exactly len() pairs
+    assert_eq!(m.iter().count(), m.len());
+}
+
+#[test]
+fn maximality_violation_counter_agrees_with_checker() {
+    let g = generate(&SUITE[4], Scale::Tiny);
+    let m = Skipper::new(2).run(&g);
+    assert_eq!(verify::count_maximality_violations(&g, &m, 2), 0);
+    let empty = Matching::from_pairs(vec![]);
+    assert!(verify::count_maximality_violations(&g, &empty, 2) > 0);
+}

@@ -1,0 +1,100 @@
+//! Integration: the AOT path end-to-end — HLO text artifacts produced by
+//! `python/compile/aot.py`, loaded and compiled by the PJRT CPU client,
+//! executed from rust, validated against the rust matchers.
+//!
+//! Skips (with a message) when `artifacts/` is absent; `make test` always
+//! builds artifacts first.
+
+use skipper::graph::builder::{build, BuildOptions};
+use skipper::graph::gen::{erdos_renyi, rmat, simple, GenConfig};
+use skipper::graph::EdgeList;
+use skipper::matching::ems::idmm::Idmm;
+use skipper::matching::{verify, MaximalMatcher};
+use skipper::runtime::{Manifest, XlaEmsMatcher};
+
+fn matcher_or_skip() -> Option<XlaEmsMatcher> {
+    match XlaEmsMatcher::from_default_artifacts() {
+        Ok(m) => Some(m),
+        Err(e) => {
+            eprintln!("SKIP (run `make artifacts`): {e:#}");
+            None
+        }
+    }
+}
+
+#[test]
+fn manifest_lists_shipped_variants() {
+    let dir = skipper::runtime::artifacts_dir();
+    let Ok(m) = Manifest::load(&dir) else {
+        eprintln!("SKIP: no artifacts");
+        return;
+    };
+    assert!(m.artifacts.len() >= 3);
+    for a in &m.artifacts {
+        assert!(std::path::Path::new(&m.full_path(a)).exists(), "{}", a.path);
+    }
+}
+
+#[test]
+fn xla_ems_matches_small_graphs() {
+    let Some(matcher) = matcher_or_skip() else { return };
+    for g in [
+        simple::path(40),
+        simple::cycle(41),
+        simple::star(64),
+        simple::complete(16),
+        erdos_renyi::generate(200, 400, 3),
+    ] {
+        let (m, rounds) = matcher.match_graph(&g).expect("xla run");
+        verify::check(&g, &m).expect("xla matching invalid");
+        assert!(rounds >= 1);
+    }
+}
+
+#[test]
+fn xla_ems_agrees_with_rust_idmm() {
+    // Same algorithm, same priorities (edge ids in canonical order) —
+    // the tensorized EMS must produce the identical deterministic matching.
+    let Some(matcher) = matcher_or_skip() else { return };
+    let g = rmat::generate(&GenConfig { scale: 7, avg_degree: 3, seed: 5 });
+    let (xla_m, _) = matcher.match_graph(&g).expect("xla run");
+    let rust_m = Idmm::default().run(&g);
+    assert_eq!(xla_m.to_sorted_vec(), rust_m.to_sorted_vec());
+}
+
+#[test]
+fn xla_ems_picks_fitting_variants() {
+    let Some(matcher) = matcher_or_skip() else { return };
+    let exe = matcher.executable_for(100, 500).expect("variant");
+    assert_eq!(exe.num_vertices, 256);
+    let exe = matcher.executable_for(1000, 4000).expect("variant");
+    assert_eq!(exe.num_vertices, 1024);
+    assert!(matcher.executable_for(1 << 20, 1).is_err());
+}
+
+#[test]
+fn xla_ems_handles_sparse_padding() {
+    // one real edge in a sea of padding
+    let Some(matcher) = matcher_or_skip() else { return };
+    let mut el = EdgeList::new(10);
+    el.push(3, 7);
+    let g = build(&el, BuildOptions::default());
+    let (m, _) = matcher.match_graph(&g).expect("xla run");
+    assert_eq!(m.to_sorted_vec(), vec![(3, 7)]);
+}
+
+#[test]
+fn xla_ems_empty_graph() {
+    let Some(matcher) = matcher_or_skip() else { return };
+    let g = skipper::graph::CsrGraph::from_parts(vec![0, 0, 0], vec![]).unwrap();
+    let (m, _) = matcher.match_graph(&g).expect("xla run");
+    assert_eq!(m.len(), 0);
+}
+
+#[test]
+fn padded_execution_rejects_bad_lengths() {
+    let Some(matcher) = matcher_or_skip() else { return };
+    let exe = matcher.executable_for(100, 500).expect("variant");
+    let bad = vec![0i32; 7];
+    assert!(exe.run_padded(&bad, &bad, &bad).is_err());
+}

@@ -1,0 +1,157 @@
+//! Property tests on the APRAM simulator and cost model: the simulated
+//! matchings obey the same invariants as real executions, simulation is
+//! deterministic, conflict counts scale sanely with thread count, and the
+//! cost model is monotone in its inputs.
+
+use skipper::apram::cost::{CostModel, WorkProfile};
+use skipper::apram::{simulate_skipper, SimConfig};
+use skipper::graph::gen::{erdos_renyi, rmat, GenConfig};
+use skipper::graph::CsrGraph;
+use skipper::matching::sgmm::Sgmm;
+use skipper::matching::{verify, MaximalMatcher};
+use skipper::util::qcheck::{check, Config};
+use skipper::util::rng::Xoshiro256pp;
+
+fn arb_graph(rng: &mut Xoshiro256pp) -> CsrGraph {
+    if rng.next_u64() & 1 == 0 {
+        let n = 32 + rng.next_usize(600);
+        erdos_renyi::generate(n, n * (1 + rng.next_usize(6)), rng.next_u64())
+    } else {
+        rmat::generate(&GenConfig {
+            scale: 6 + rng.next_usize(4) as u32,
+            avg_degree: 2 + rng.next_usize(8) as u32,
+            seed: rng.next_u64(),
+        })
+    }
+}
+
+fn cfg(cases: usize, seed: u64) -> Config {
+    Config {
+        cases,
+        seed,
+        max_shrink_steps: 0,
+    }
+}
+
+#[test]
+fn prop_sim_matchings_valid_maximal() {
+    check(&cfg(20, 0xC301), arb_graph, |g| {
+        let mut rng = Xoshiro256pp::new(g.num_vertices() as u64);
+        let t = 1 + rng.next_usize(64);
+        let rep = simulate_skipper(g, &SimConfig::new(t));
+        verify::check(g, &rep.matching).map_err(|e| format!("t={t}: {e}"))
+    });
+}
+
+#[test]
+fn prop_sim_deterministic() {
+    check(&cfg(12, 0xC302), arb_graph, |g| {
+        let c = SimConfig {
+            threads: 16,
+            blocks_per_thread: 8,
+            seed: 99,
+        };
+        let a = simulate_skipper(g, &c);
+        let b = simulate_skipper(g, &c);
+        if a.matching.to_sorted_vec() != b.matching.to_sorted_vec()
+            || a.per_thread_ops != b.per_thread_ops
+        {
+            return Err("nondeterministic simulation".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_sim_size_band_vs_sgmm() {
+    check(&cfg(16, 0xC303), arb_graph, |g| {
+        let s = Sgmm.run(g).len();
+        let m = simulate_skipper(g, &SimConfig::new(32)).matching.len();
+        if s == 0 && m == 0 {
+            return Ok(());
+        }
+        if s * 2 < m || m * 2 < s {
+            return Err(format!("sizes {m} vs SGMM {s}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_single_vthread_is_conflict_free() {
+    check(&cfg(12, 0xC304), arb_graph, |g| {
+        let rep = simulate_skipper(g, &SimConfig::new(1));
+        if rep.conflicts.total != 0 {
+            return Err(format!("t=1 produced {} conflicts", rep.conflicts.total));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_sim_work_linear_in_edges() {
+    // §V-B: expected total work O(|E| + |V|).
+    check(&cfg(12, 0xC305), arb_graph, |g| {
+        let rep = simulate_skipper(g, &SimConfig::new(32));
+        let bound = 6 * (g.num_edge_slots() as u64 + g.num_vertices() as u64) + 1000;
+        if rep.total_ops() > bound {
+            return Err(format!("ops {} > bound {bound}", rep.total_ops()));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_cost_model_monotone() {
+    let gen = |rng: &mut Xoshiro256pp| WorkProfile {
+        accesses: 1000 + rng.next_below(1_000_000),
+        l3_misses: rng.next_below(100_000),
+        iterations: rng.next_below(100),
+    };
+    check(&cfg(50, 0xC306), gen, |p| {
+        let m = CostModel::default();
+        // more accesses → more time
+        let mut p2 = *p;
+        p2.accesses += 1_000_000;
+        if m.par_seconds(&p2, 8) < m.par_seconds(p, 8) {
+            return Err("not monotone in accesses".into());
+        }
+        // more threads → no slower (given fixed profile)
+        if m.par_seconds(p, 64) > m.par_seconds(p, 8) + 1e-12 {
+            return Err("more threads made it slower".into());
+        }
+        // sequential >= parallel
+        if m.seq_seconds(p) + 1e-12 < m.par_seconds(p, 1) - p.iterations as f64 * m.barrier_us * 1e-6
+        {
+            return Err("seq faster than 1-thread parallel".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_calibration_reproduces_measurement() {
+    let gen = |rng: &mut Xoshiro256pp| {
+        (
+            0.001 + rng.next_f64() * 10.0,
+            WorkProfile {
+                accesses: 1_000 + rng.next_below(10_000_000),
+                l3_misses: rng.next_below(10_000),
+                iterations: 0,
+            },
+        )
+    };
+    check(&cfg(50, 0xC307), gen, |(secs, p)| {
+        let m = CostModel::calibrated(*secs, p);
+        let t = m.seq_seconds(p);
+        let rel = (t - secs).abs() / secs;
+        // clamped cases (miss-dominated) may deviate; others must match
+        if rel > 0.05 && m.ns_per_access > 0.0 {
+            let miss_ns = p.l3_misses as f64 * m.l3_miss_penalty_ns * 1e-9;
+            if miss_ns < secs * 0.9 {
+                return Err(format!("calibration error {rel:.3} (t={t}, want {secs})"));
+            }
+        }
+        Ok(())
+    });
+}

@@ -1,0 +1,162 @@
+//! Property tests on the graph substrate: builder invariants (symmetry,
+//! sorted+deduped neighbor lists, degree conservation), IO round-trips, and
+//! relabeling invariance.
+
+use skipper::graph::builder::{build, relabel, to_edge_list, BuildOptions};
+use skipper::graph::io::{binary, edgelist_txt, mtx};
+use skipper::graph::{CsrGraph, EdgeList};
+use skipper::util::qcheck::{check, Config};
+use skipper::util::rng::Xoshiro256pp;
+
+fn arb_edge_list(rng: &mut Xoshiro256pp) -> EdgeList {
+    let n = 2 + rng.next_usize(300);
+    let m = rng.next_usize(4 * n);
+    let mut el = EdgeList::new(n);
+    for _ in 0..m {
+        el.push(rng.next_usize(n) as u32, rng.next_usize(n) as u32);
+    }
+    el
+}
+
+fn cfg(seed: u64) -> Config {
+    Config {
+        cases: 40,
+        seed,
+        max_shrink_steps: 0,
+    }
+}
+
+#[test]
+fn prop_builder_produces_canonical_csr() {
+    check(&cfg(0x6701), arb_edge_list, |el| {
+        let g = build(el, BuildOptions::default());
+        if !g.is_symmetric() {
+            return Err("not symmetric".into());
+        }
+        for v in 0..g.num_vertices() as u32 {
+            let ns = g.neighbors(v);
+            if ns.windows(2).any(|w| w[0] >= w[1]) {
+                return Err(format!("neighbors of {v} not sorted+deduped: {ns:?}"));
+            }
+            if ns.contains(&v) {
+                return Err(format!("self-loop survived at {v}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_edge_conservation_without_dedup() {
+    // without dedup/self-loop-dropping, every input edge contributes
+    // exactly two slots (or one for self-loops).
+    check(&cfg(0x6702), arb_edge_list, |el| {
+        let g = build(
+            el,
+            BuildOptions {
+                symmetrize: true,
+                dedup: false,
+                drop_self_loops: true,
+            },
+        );
+        let loops = el.edges.iter().filter(|(u, v)| u == v).count();
+        let expect = 2 * (el.edges.len() - loops);
+        if g.num_edge_slots() != expect {
+            return Err(format!("slots {} != {expect}", g.num_edge_slots()));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_binary_io_roundtrip() {
+    check(&cfg(0x6703), arb_edge_list, |el| {
+        let g = build(el, BuildOptions::default());
+        let mut buf = Vec::new();
+        binary::write(&mut buf, &g).map_err(|e| e.to_string())?;
+        let back = binary::read(&buf[..]).map_err(|e| e.to_string())?;
+        if back != g {
+            return Err("binary roundtrip mismatch".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_text_io_roundtrips() {
+    check(&cfg(0x6704), arb_edge_list, |el| {
+        // edge-list text
+        let mut buf = Vec::new();
+        edgelist_txt::write(&mut buf, el).map_err(|e| e.to_string())?;
+        let back = edgelist_txt::read(&buf[..])?;
+        if back != *el {
+            return Err("edgelist roundtrip mismatch".into());
+        }
+        // matrix market
+        let mut buf = Vec::new();
+        mtx::write(&mut buf, el).map_err(|e| e.to_string())?;
+        let back = mtx::read(&buf[..])?;
+        if back != *el {
+            return Err("mtx roundtrip mismatch".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_relabel_preserves_degree_multiset() {
+    check(&cfg(0x6705), arb_edge_list, |el| {
+        let g = build(el, BuildOptions::default());
+        let mut rng = Xoshiro256pp::new(el.edges.len() as u64 + 1);
+        let perm = rng.permutation(g.num_vertices());
+        let g2 = relabel(&g, &perm);
+        let mut d1: Vec<usize> = (0..g.num_vertices() as u32).map(|v| g.degree(v)).collect();
+        let mut d2: Vec<usize> = (0..g2.num_vertices() as u32).map(|v| g2.degree(v)).collect();
+        d1.sort_unstable();
+        d2.sort_unstable();
+        if d1 != d2 {
+            return Err("degree multiset changed under relabeling".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_to_edge_list_canonical_and_complete() {
+    check(&cfg(0x6706), arb_edge_list, |el| {
+        let g = build(el, BuildOptions::default());
+        let canon = to_edge_list(&g);
+        if canon.edges.len() != g.num_undirected_edges() {
+            return Err("canonical edge count mismatch".into());
+        }
+        for &(u, v) in &canon.edges {
+            if u > v {
+                return Err(format!("non-canonical edge ({u},{v})"));
+            }
+        }
+        // rebuilding from the canonical list reproduces the graph
+        let g2 = build(&canon, BuildOptions::default());
+        if g2 != g {
+            return Err("rebuild from canonical list differs".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_csr_from_parts_validates_random_corruption() {
+    // corrupting a valid CSR is caught by from_parts
+    check(&cfg(0x6707), arb_edge_list, |el| {
+        let g = build(el, BuildOptions::default());
+        if g.num_edge_slots() == 0 {
+            return Ok(());
+        }
+        let mut offsets = g.offsets().to_vec();
+        let last = offsets.len() - 1;
+        offsets[last] += 1; // break the slot-count invariant
+        if CsrGraph::from_parts(offsets, g.neighbors_raw().to_vec()).is_ok() {
+            return Err("corrupted offsets accepted".into());
+        }
+        Ok(())
+    });
+}

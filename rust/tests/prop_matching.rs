@@ -1,0 +1,134 @@
+//! Property-based tests over the matching invariants (qcheck substrate):
+//! for arbitrary random graphs, every algorithm must emit a valid maximal
+//! matching; Skipper must do so under any thread count and scheduler
+//! assignment; matching sizes obey the 2-approximation bound.
+
+use skipper::graph::gen::{barabasi_albert, erdos_renyi, rmat, GenConfig};
+use skipper::graph::CsrGraph;
+use skipper::matching::ems::{
+    auer_bisseling::AuerBisseling, birn::Birn, idmm::Idmm, israeli_itai::IsraeliItai, pbmm::Pbmm,
+    sidmm::Sidmm,
+};
+use skipper::matching::sgmm::Sgmm;
+use skipper::matching::skipper::Skipper;
+use skipper::matching::{verify, MaximalMatcher};
+use skipper::par::scheduler::Assignment;
+use skipper::util::qcheck::{check, Config};
+use skipper::util::rng::Xoshiro256pp;
+
+/// Random graph family: mixes ER / RMAT / BA with random sizes.
+fn arb_graph(rng: &mut Xoshiro256pp) -> CsrGraph {
+    match rng.next_usize(3) {
+        0 => {
+            let n = 16 + rng.next_usize(512);
+            let m = n * (1 + rng.next_usize(8));
+            erdos_renyi::generate(n, m, rng.next_u64())
+        }
+        1 => rmat::generate(&GenConfig {
+            scale: 5 + rng.next_usize(5) as u32,
+            avg_degree: 2 + rng.next_usize(10) as u32,
+            seed: rng.next_u64(),
+        }),
+        _ => {
+            let n = 16 + rng.next_usize(512);
+            barabasi_albert::generate(n, 1 + rng.next_usize(5), rng.next_u64())
+        }
+    }
+}
+
+fn prop_cfg(cases: usize, seed: u64) -> Config {
+    Config {
+        cases,
+        seed,
+        max_shrink_steps: 0, // graphs don't shrink meaningfully
+    }
+}
+
+#[test]
+fn prop_all_algorithms_valid_and_maximal() {
+    check(&prop_cfg(24, 0xAB01), arb_graph, |g| {
+        let algos: Vec<Box<dyn MaximalMatcher>> = vec![
+            Box::new(Sgmm),
+            Box::new(Skipper::new(3)),
+            Box::new(Sidmm::default()),
+            Box::new(Idmm::default()),
+            Box::new(Pbmm::default()),
+            Box::new(IsraeliItai::default()),
+            Box::new(Birn::default()),
+            Box::new(AuerBisseling::default()),
+        ];
+        for a in algos {
+            let m = a.run(g);
+            verify::check(g, &m).map_err(|e| format!("{}: {e}", a.name()))?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_skipper_any_thread_count_and_assignment() {
+    check(&prop_cfg(24, 0xAB02), arb_graph, |g| {
+        let mut rng = Xoshiro256pp::new(g.num_edge_slots() as u64);
+        let t = 1 + rng.next_usize(16);
+        let a = [
+            Assignment::DispersedContiguous,
+            Assignment::Interleaved,
+            Assignment::SharedQueue,
+        ][rng.next_usize(3)];
+        let m = Skipper::new(t).with_assignment(a).run(g);
+        verify::check(g, &m).map_err(|e| format!("t={t} {a:?}: {e}"))
+    });
+}
+
+#[test]
+fn prop_two_approximation_bound() {
+    // any maximal matching is a 2-approximation of maximum matching, so
+    // two maximal matchings differ by at most 2x.
+    check(&prop_cfg(20, 0xAB03), arb_graph, |g| {
+        let a = Sgmm.run(g).len();
+        let b = Skipper::new(4).run(g).len();
+        if a == 0 && b == 0 {
+            return Ok(());
+        }
+        if a * 2 < b || b * 2 < a {
+            return Err(format!("sizes {a} vs {b} violate 2-approx"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_matched_vertices_cover_all_edges() {
+    // direct statement of maximality on the edge level
+    check(&prop_cfg(16, 0xAB04), arb_graph, |g| {
+        let m = Skipper::new(2).run(g);
+        let mut matched = vec![false; g.num_vertices()];
+        for (u, v) in m.iter() {
+            matched[u as usize] = true;
+            matched[v as usize] = true;
+        }
+        for (v, u) in g.iter_edges() {
+            if v != u && !matched[v as usize] && !matched[u as usize] {
+                return Err(format!("edge ({v},{u}) uncovered"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_conflict_totals_bounded_by_work() {
+    // CAS retries are charged to vertex state transitions: total conflicts
+    // cannot exceed a small multiple of |V| + |E| (§V-B worst case O(t|V|)).
+    check(&prop_cfg(12, 0xAB05), arb_graph, |g| {
+        let rep = Skipper::new(8).run_with_conflicts(g);
+        let bound = 8 * (g.num_vertices() as u64 + g.num_edge_slots() as u64);
+        if rep.conflicts.total > bound {
+            return Err(format!(
+                "conflicts {} exceed bound {bound}",
+                rep.conflicts.total
+            ));
+        }
+        Ok(())
+    });
+}
