@@ -1,0 +1,70 @@
+//! Bench: streaming ingest→match throughput vs the materialized-CSR path.
+//!
+//! Three measurements per suite graph (g500s at `SKIPPER_BENCH_SCALE`):
+//!   1. CSR driver on the in-memory graph (the paper's configuration),
+//!   2. streamed matching off the on-disk `.skg` (ingest overlaps matching),
+//!   3. streamed matching at several chunk sizes (queue hand-off overhead).
+//!
+//! Also prints the peak topology-resident bytes of each mode — the
+//! streaming pipeline's reason to exist.
+
+mod common;
+
+use skipper::coordinator::datasets::{generate_cached_path, spec_by_name};
+use skipper::graph::stream::SkgEdgeSource;
+use skipper::matching::skipper::Skipper;
+use skipper::matching::streaming::StreamingSkipper;
+use skipper::matching::MaximalMatcher;
+use skipper::util::benchlib::{bench, BenchConfig};
+
+fn main() {
+    let scale = common::bench_scale();
+    let cache = common::cache_dir();
+    let spec = spec_by_name("g500s").unwrap();
+    let (g, path) = generate_cached_path(spec, scale, &cache).expect("dataset cache");
+    let slots = g.num_edge_slots() as f64;
+    let cfg = BenchConfig {
+        warmup_iters: 1,
+        min_iters: 3,
+        max_seconds: 8.0,
+    };
+
+    eprintln!(
+        "[streaming_ingest] g500s {}: |V|={} slots={} csr_bytes={}",
+        scale.name(),
+        g.num_vertices(),
+        g.num_edge_slots(),
+        g.memory_bytes()
+    );
+
+    let threads = 4;
+    let r = bench("csr/skipper-t4", &cfg, || Skipper::new(threads).run(&g));
+    println!("{}  ({:.1} Medges/s)", r.row(), slots / r.median_s / 1e6);
+
+    let sk = StreamingSkipper::new(threads);
+    let r = bench("stream/skg-t4", &cfg, || {
+        sk.run(SkgEdgeSource::open(&path).expect("skg")).expect("stream")
+    });
+    println!("{}  ({:.1} Medges/s)", r.row(), slots / r.median_s / 1e6);
+
+    for chunk in [1024usize, 4096, 16384, 65536] {
+        let sk = StreamingSkipper::new(threads).with_chunk_edges(chunk);
+        let name = format!("stream/skg-t4-chunk{chunk}");
+        let r = bench(&name, &cfg, || {
+            sk.run(SkgEdgeSource::open(&path).expect("skg")).expect("stream")
+        });
+        println!("{}  ({:.1} Medges/s)", r.row(), slots / r.median_s / 1e6);
+    }
+
+    let rep = StreamingSkipper::new(threads)
+        .run(SkgEdgeSource::open(&path).expect("skg"))
+        .expect("stream");
+    println!(
+        "memory: stream peak {} B (state {} + buffers {}) vs CSR {} B -> {:.1}x reduction",
+        rep.peak_topology_bytes(),
+        rep.state_bytes,
+        rep.chunk_buffer_bytes,
+        g.memory_bytes(),
+        g.memory_bytes() as f64 / rep.peak_topology_bytes().max(1) as f64
+    );
+}

@@ -151,9 +151,16 @@ pub fn spec_by_name(name: &str) -> Option<&'static DatasetSpec> {
     SUITE.iter().find(|s| s.name == name || s.paper_name == name)
 }
 
+/// Canonical on-disk cache location of a (dataset, scale) pair — the one
+/// place the `.skg` naming convention lives (streaming runs open this path
+/// directly).
+pub fn cache_path(spec: &DatasetSpec, scale: Scale, cache_dir: &str) -> String {
+    format!("{cache_dir}/{}_{}.skg", spec.name, scale.name())
+}
+
 /// Generate with an on-disk cache under `cache_dir`.
 pub fn generate_cached(spec: &DatasetSpec, scale: Scale, cache_dir: &str) -> CsrGraph {
-    let path = format!("{cache_dir}/{}_{}.skg", spec.name, scale.name());
+    let path = cache_path(spec, scale, cache_dir);
     if let Ok(g) = binary::read_file(&path) {
         return g;
     }
@@ -161,6 +168,23 @@ pub fn generate_cached(spec: &DatasetSpec, scale: Scale, cache_dir: &str) -> Csr
     let _ = std::fs::create_dir_all(cache_dir);
     let _ = binary::write_file(&path, &g);
     g
+}
+
+/// Like [`generate_cached`], but also guarantees the `.skg` cache file
+/// exists on disk afterwards (streaming consumers read it back), returning
+/// its path alongside the graph.
+pub fn generate_cached_path(
+    spec: &DatasetSpec,
+    scale: Scale,
+    cache_dir: &str,
+) -> Result<(CsrGraph, String), String> {
+    let g = generate_cached(spec, scale, cache_dir);
+    let path = cache_path(spec, scale, cache_dir);
+    if !std::path::Path::new(&path).exists() {
+        let _ = std::fs::create_dir_all(cache_dir);
+        binary::write_file(&path, &g)?;
+    }
+    Ok((g, path))
 }
 
 #[cfg(test)]

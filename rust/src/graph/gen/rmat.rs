@@ -10,30 +10,43 @@ use crate::VertexId;
 /// Graph500 default partition probabilities.
 pub const GRAPH500_PROBS: (f64, f64, f64, f64) = (0.57, 0.19, 0.19, 0.05);
 
+/// Sample one RMAT edge by recursive quadrant descent. Exposed so the
+/// streaming [`crate::graph::stream::SyntheticEdgeSource`] can generate
+/// edges on the fly without materializing an edge list.
+#[inline]
+pub fn sample_edge(
+    rng: &mut Xoshiro256pp,
+    scale: u32,
+    probs: (f64, f64, f64, f64),
+) -> (VertexId, VertexId) {
+    let (a, b, c, _d) = probs;
+    let (mut u, mut v) = (0usize, 0usize);
+    for level in (0..scale).rev() {
+        let r = rng.next_f64();
+        let bit = 1usize << level;
+        if r < a {
+            // upper-left: nothing
+        } else if r < a + b {
+            v |= bit;
+        } else if r < a + b + c {
+            u |= bit;
+        } else {
+            u |= bit;
+            v |= bit;
+        }
+    }
+    (u as VertexId, v as VertexId)
+}
+
 /// Generate an RMAT edge list with the given quadrant probabilities.
 pub fn edges_with_probs(cfg: &GenConfig, probs: (f64, f64, f64, f64)) -> EdgeList {
-    let (a, b, c, _d) = probs;
     let n = cfg.num_vertices();
     let m = cfg.num_edges();
     let mut rng = Xoshiro256pp::new(cfg.seed);
     let mut el = EdgeList::new(n);
     for _ in 0..m {
-        let (mut u, mut v) = (0usize, 0usize);
-        for level in (0..cfg.scale).rev() {
-            let r = rng.next_f64();
-            let bit = 1usize << level;
-            if r < a {
-                // upper-left: nothing
-            } else if r < a + b {
-                v |= bit;
-            } else if r < a + b + c {
-                u |= bit;
-            } else {
-                u |= bit;
-                v |= bit;
-            }
-        }
-        el.push(u as VertexId, v as VertexId);
+        let (u, v) = sample_edge(&mut rng, cfg.scale, probs);
+        el.push(u, v);
     }
     el
 }

@@ -6,7 +6,12 @@ use crate::graph::CsrGraph;
 use crate::{EdgeIdx, VertexId};
 use std::io::{BufReader, BufWriter, Read, Write};
 
-const MAGIC: &[u8; 8] = b"SKPGRPH1";
+/// Shared with [`crate::graph::stream::SkgEdgeSource`], which re-reads this
+/// format with two streaming cursors — keep writer and readers in one place.
+pub(crate) const MAGIC: &[u8; 8] = b"SKPGRPH1";
+
+/// Bytes before the offsets array: magic + n + slots.
+pub(crate) const HEADER_BYTES: u64 = 8 + 8 + 8;
 
 pub fn write<W: Write>(w: &mut W, g: &CsrGraph) -> std::io::Result<()> {
     let mut w = BufWriter::new(w);
@@ -44,10 +49,16 @@ pub fn read<R: Read>(r: R) -> Result<CsrGraph, String> {
     CsrGraph::from_parts(offsets, neighbors)
 }
 
-fn read_u64<R: Read>(r: &mut R) -> Result<u64, String> {
+pub(crate) fn read_u64<R: Read>(r: &mut R) -> Result<u64, String> {
     let mut b = [0u8; 8];
     r.read_exact(&mut b).map_err(|e| format!("u64: {e}"))?;
     Ok(u64::from_le_bytes(b))
+}
+
+pub(crate) fn read_u32<R: Read>(r: &mut R) -> Result<u32, String> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b).map_err(|e| format!("u32: {e}"))?;
+    Ok(u32::from_le_bytes(b))
 }
 
 pub fn write_file(path: &str, g: &CsrGraph) -> Result<(), String> {

@@ -13,6 +13,7 @@ pub mod builder;
 pub mod gen;
 pub mod io;
 pub mod ordering;
+pub mod stream;
 
 use crate::{EdgeIdx, VertexId};
 

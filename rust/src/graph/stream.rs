@@ -1,0 +1,810 @@
+//! Streaming edge delivery — the [`EdgeSource`] abstraction.
+//!
+//! Skipper decides each edge's fate the moment it is seen (paper §IV), so
+//! the matcher never needs a materialized graph: any producer that can hand
+//! over `(u, v)` pairs *once*, in chunks, is a valid input. This module
+//! defines that contract plus sources for every ingest path the repo knows:
+//!
+//! * [`BatchEdgeSource`] — an in-memory slice (the incremental/batch-update
+//!   scenario, and the substrate for equivalence tests);
+//! * [`TextEdgeSource`] — whitespace `u v` edge lists (`.txt`/`.el`),
+//!   parsed line-by-line off disk;
+//! * [`MtxEdgeSource`] — Matrix Market coordinate files, streamed past the
+//!   size line;
+//! * [`SkgEdgeSource`] — the compact binary CSR cache format, streamed with
+//!   two sequential cursors (offsets + neighbors) so the arrays are never
+//!   resident;
+//! * [`SyntheticEdgeSource`] — Erdős–Rényi / RMAT generators emitting edges
+//!   on the fly;
+//! * [`CsrEdgeSource`] — adapter over an already-materialized
+//!   [`CsrGraph`] (for A/B comparisons against the CSR driver).
+//!
+//! Peak topology-resident memory of a streaming run is the chunk buffers
+//! plus Skipper's one byte of state per vertex — independent of |E| —
+//! versus `(|V|+1)·8 + slots·4` bytes for a CSR.
+
+use super::io::binary;
+use super::{CsrGraph, EdgeList};
+use crate::util::rng::Xoshiro256pp;
+use crate::VertexId;
+use std::fs::File;
+use std::io::{BufRead, BufReader, Read, Seek, SeekFrom};
+
+/// A one-shot, chunked producer of edges.
+///
+/// Contract: `vertex_bound()` is an exclusive upper bound on every vertex
+/// id the source will ever emit (consumers size per-vertex state from it);
+/// `next_chunk` appends up to `max_edges` edges to `chunk` (which it clears
+/// first) and returns how many were appended — `0` means the stream is
+/// exhausted. Each edge is delivered exactly once; sources backed by
+/// symmetric storage (e.g. `.skg`) deliver each *undirected* edge once per
+/// stored copy, which Skipper treats as already-covered on the second
+/// sighting.
+pub trait EdgeSource {
+    /// Exclusive upper bound on vertex ids this source emits.
+    fn vertex_bound(&self) -> usize;
+
+    /// Pull the next chunk. Clears `chunk`, appends up to `max_edges`
+    /// pairs, returns the number appended (0 = exhausted).
+    fn next_chunk(
+        &mut self,
+        chunk: &mut Vec<(VertexId, VertexId)>,
+        max_edges: usize,
+    ) -> Result<usize, String>;
+
+    /// Total edges this source expects to emit, when known up front.
+    fn edge_hint(&self) -> Option<u64> {
+        None
+    }
+}
+
+/// Drain a source into an [`EdgeList`] (testing / verification only — this
+/// materializes exactly what streaming avoids).
+pub fn collect_edges<S: EdgeSource>(mut source: S) -> Result<EdgeList, String> {
+    let mut el = EdgeList::new(source.vertex_bound());
+    let mut chunk = Vec::new();
+    while source.next_chunk(&mut chunk, 65_536)? > 0 {
+        el.edges.extend_from_slice(&chunk);
+    }
+    Ok(el)
+}
+
+// ---------------------------------------------------------------------------
+// In-memory batch
+// ---------------------------------------------------------------------------
+
+/// A borrowed in-memory batch of edges — the "edges arrive as updates"
+/// scenario that [`crate::matching::incremental`] rides on.
+pub struct BatchEdgeSource<'a> {
+    edges: &'a [(VertexId, VertexId)],
+    num_vertices: usize,
+    pos: usize,
+}
+
+impl<'a> BatchEdgeSource<'a> {
+    pub fn new(num_vertices: usize, edges: &'a [(VertexId, VertexId)]) -> Self {
+        Self { edges, num_vertices, pos: 0 }
+    }
+}
+
+impl EdgeSource for BatchEdgeSource<'_> {
+    fn vertex_bound(&self) -> usize {
+        self.num_vertices
+    }
+
+    fn next_chunk(
+        &mut self,
+        chunk: &mut Vec<(VertexId, VertexId)>,
+        max_edges: usize,
+    ) -> Result<usize, String> {
+        chunk.clear();
+        let end = (self.pos + max_edges).min(self.edges.len());
+        for &(u, v) in &self.edges[self.pos..end] {
+            if (u as usize) >= self.num_vertices || (v as usize) >= self.num_vertices {
+                return Err(format!(
+                    "edge ({u},{v}) out of range (vertex bound {})",
+                    self.num_vertices
+                ));
+            }
+            chunk.push((u, v));
+        }
+        let n = end - self.pos;
+        self.pos = end;
+        Ok(n)
+    }
+
+    fn edge_hint(&self) -> Option<u64> {
+        Some(self.edges.len() as u64)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Plain-text edge lists
+// ---------------------------------------------------------------------------
+
+/// Streaming reader for whitespace `u v` edge lists (`#` comments, optional
+/// `# vertices: N` header). Without the header the file is pre-scanned once
+/// to learn the vertex bound — an extra I/O pass, but still O(1) memory.
+pub struct TextEdgeSource {
+    reader: BufReader<File>,
+    num_vertices: usize,
+    lineno: usize,
+    line: String,
+}
+
+impl TextEdgeSource {
+    pub fn open(path: &str) -> Result<Self, String> {
+        let num_vertices = match Self::header_bound(path)? {
+            Some(n) => n,
+            None => Self::scan_bound(path)?,
+        };
+        let f = File::open(path).map_err(|e| format!("open {path}: {e}"))?;
+        Ok(Self {
+            reader: BufReader::new(f),
+            num_vertices,
+            lineno: 0,
+            line: String::new(),
+        })
+    }
+
+    /// Look for a `# vertices: N` header among the leading comment lines.
+    fn header_bound(path: &str) -> Result<Option<usize>, String> {
+        let f = File::open(path).map_err(|e| format!("open {path}: {e}"))?;
+        let mut r = BufReader::new(f);
+        let mut line = String::new();
+        loop {
+            line.clear();
+            let read = r.read_line(&mut line).map_err(|e| format!("read {path}: {e}"))?;
+            if read == 0 {
+                return Ok(None);
+            }
+            let t = line.trim();
+            if t.is_empty() {
+                continue;
+            }
+            match t.strip_prefix('#') {
+                Some(rest) => {
+                    if let Some(v) = rest.trim().strip_prefix("vertices:") {
+                        let n = v
+                            .trim()
+                            .parse()
+                            .map_err(|_| format!("{path}: bad vertices header"))?;
+                        return Ok(Some(n));
+                    }
+                }
+                None => return Ok(None), // first edge line before any header
+            }
+        }
+    }
+
+    /// One cheap streaming pass to find `max id + 1`.
+    fn scan_bound(path: &str) -> Result<usize, String> {
+        let f = File::open(path).map_err(|e| format!("open {path}: {e}"))?;
+        let mut r = BufReader::new(f);
+        let mut line = String::new();
+        let mut max_id: u64 = 0;
+        let mut any = false;
+        let mut lineno = 0usize;
+        loop {
+            line.clear();
+            let read = r.read_line(&mut line).map_err(|e| format!("read {path}: {e}"))?;
+            if read == 0 {
+                break;
+            }
+            lineno += 1;
+            if let Some((u, v)) = parse_edge_line(&line, lineno)? {
+                max_id = max_id.max(u as u64).max(v as u64);
+                any = true;
+            }
+        }
+        Ok(if any { max_id as usize + 1 } else { 0 })
+    }
+}
+
+/// Parse one text line into an edge; `Ok(None)` for comments/blank lines.
+fn parse_edge_line(line: &str, lineno: usize) -> Result<Option<(VertexId, VertexId)>, String> {
+    let t = line.trim();
+    if t.is_empty() || t.starts_with('#') {
+        return Ok(None);
+    }
+    let mut it = t.split_whitespace();
+    let u: u64 = it
+        .next()
+        .ok_or_else(|| format!("line {lineno}: missing src"))?
+        .parse()
+        .map_err(|_| format!("line {lineno}: bad src"))?;
+    let v: u64 = it
+        .next()
+        .ok_or_else(|| format!("line {lineno}: missing dst"))?
+        .parse()
+        .map_err(|_| format!("line {lineno}: bad dst"))?;
+    Ok(Some((u as VertexId, v as VertexId)))
+}
+
+impl EdgeSource for TextEdgeSource {
+    fn vertex_bound(&self) -> usize {
+        self.num_vertices
+    }
+
+    fn next_chunk(
+        &mut self,
+        chunk: &mut Vec<(VertexId, VertexId)>,
+        max_edges: usize,
+    ) -> Result<usize, String> {
+        chunk.clear();
+        while chunk.len() < max_edges {
+            self.line.clear();
+            let read = self
+                .reader
+                .read_line(&mut self.line)
+                .map_err(|e| format!("read error: {e}"))?;
+            if read == 0 {
+                break;
+            }
+            self.lineno += 1;
+            if let Some((u, v)) = parse_edge_line(&self.line, self.lineno)? {
+                if (u as usize) >= self.num_vertices || (v as usize) >= self.num_vertices {
+                    return Err(format!(
+                        "line {}: edge ({u},{v}) exceeds vertex bound {}",
+                        self.lineno, self.num_vertices
+                    ));
+                }
+                chunk.push((u, v));
+            }
+        }
+        Ok(chunk.len())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Matrix Market
+// ---------------------------------------------------------------------------
+
+/// Streaming reader for Matrix Market coordinate files. The size line gives
+/// the vertex bound and entry count up front; entries stream after it.
+pub struct MtxEdgeSource {
+    reader: BufReader<File>,
+    num_vertices: usize,
+    nnz: u64,
+    seen: u64,
+    line: String,
+}
+
+impl MtxEdgeSource {
+    pub fn open(path: &str) -> Result<Self, String> {
+        let f = File::open(path).map_err(|e| format!("open {path}: {e}"))?;
+        let mut reader = BufReader::new(f);
+        let mut line = String::new();
+        reader
+            .read_line(&mut line)
+            .map_err(|e| format!("read {path}: {e}"))?;
+        let head = line.to_ascii_lowercase();
+        if !head.starts_with("%%matrixmarket matrix coordinate") {
+            return Err(format!("unsupported MatrixMarket header: {}", line.trim()));
+        }
+        // skip comments, find the size line
+        loop {
+            line.clear();
+            let read = reader
+                .read_line(&mut line)
+                .map_err(|e| format!("read {path}: {e}"))?;
+            if read == 0 {
+                return Err("missing size line".into());
+            }
+            let t = line.trim();
+            if t.is_empty() || t.starts_with('%') {
+                continue;
+            }
+            break;
+        }
+        let mut it = line.split_whitespace();
+        let rows: usize = it
+            .next()
+            .ok_or("bad size line")?
+            .parse()
+            .map_err(|e| format!("{e}"))?;
+        let cols: usize = it
+            .next()
+            .ok_or("bad size line")?
+            .parse()
+            .map_err(|e| format!("{e}"))?;
+        let nnz: u64 = it
+            .next()
+            .ok_or("bad size line")?
+            .parse()
+            .map_err(|e| format!("{e}"))?;
+        Ok(Self {
+            reader,
+            num_vertices: rows.max(cols),
+            nnz,
+            seen: 0,
+            line: String::new(),
+        })
+    }
+}
+
+impl EdgeSource for MtxEdgeSource {
+    fn vertex_bound(&self) -> usize {
+        self.num_vertices
+    }
+
+    fn next_chunk(
+        &mut self,
+        chunk: &mut Vec<(VertexId, VertexId)>,
+        max_edges: usize,
+    ) -> Result<usize, String> {
+        chunk.clear();
+        while chunk.len() < max_edges {
+            self.line.clear();
+            let read = self
+                .reader
+                .read_line(&mut self.line)
+                .map_err(|e| format!("read error: {e}"))?;
+            if read == 0 {
+                if self.seen != self.nnz {
+                    return Err(format!("expected {} entries, found {}", self.nnz, self.seen));
+                }
+                break;
+            }
+            let t = self.line.trim();
+            if t.is_empty() || t.starts_with('%') {
+                continue;
+            }
+            let mut it = t.split_whitespace();
+            let i: usize = it
+                .next()
+                .ok_or("bad entry")?
+                .parse()
+                .map_err(|e| format!("{e}"))?;
+            let j: usize = it
+                .next()
+                .ok_or("bad entry")?
+                .parse()
+                .map_err(|e| format!("{e}"))?;
+            let n = self.num_vertices;
+            if i == 0 || j == 0 || i > n || j > n {
+                return Err(format!("index out of range: {i} {j} (n={n})"));
+            }
+            chunk.push(((i - 1) as VertexId, (j - 1) as VertexId));
+            self.seen += 1;
+        }
+        Ok(chunk.len())
+    }
+
+    fn edge_hint(&self) -> Option<u64> {
+        Some(self.nnz)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Binary .skg (CSR cache format)
+// ---------------------------------------------------------------------------
+
+/// Streaming reader for the `.skg` binary CSR format. Two file cursors
+/// advance in lockstep — one through the offsets array, one through the
+/// neighbors array — so neither array is ever memory-resident. Emits one
+/// `(v, neighbor)` pair per stored slot.
+pub struct SkgEdgeSource {
+    offsets: BufReader<File>,
+    neighbors: BufReader<File>,
+    n: u64,
+    slots: u64,
+    /// Vertex whose neighbor run is currently streaming.
+    cur: u64,
+    /// Next vertex whose offset has not been consumed yet.
+    next_v: u64,
+    prev_off: u64,
+    /// Neighbors remaining in `cur`'s run.
+    rem: u64,
+    emitted: u64,
+}
+
+impl SkgEdgeSource {
+    pub fn open(path: &str) -> Result<Self, String> {
+        let f = File::open(path).map_err(|e| format!("open {path}: {e}"))?;
+        let mut offsets = BufReader::new(f);
+        let mut magic = [0u8; 8];
+        offsets
+            .read_exact(&mut magic)
+            .map_err(|e| format!("magic: {e}"))?;
+        if &magic != binary::MAGIC {
+            return Err("bad magic (not a .skg file)".into());
+        }
+        let n = binary::read_u64(&mut offsets)?;
+        let slots = binary::read_u64(&mut offsets)?;
+        // offsets[0] must be 0
+        let first = binary::read_u64(&mut offsets)?;
+        if first != 0 {
+            return Err("offsets[0] must be 0".into());
+        }
+        let mut nf = File::open(path).map_err(|e| format!("open {path}: {e}"))?;
+        nf.seek(SeekFrom::Start(binary::HEADER_BYTES + (n + 1) * 8))
+            .map_err(|e| format!("seek {path}: {e}"))?;
+        Ok(Self {
+            offsets,
+            neighbors: BufReader::new(nf),
+            n,
+            slots,
+            cur: 0,
+            next_v: 0,
+            prev_off: 0,
+            rem: 0,
+            emitted: 0,
+        })
+    }
+}
+
+impl EdgeSource for SkgEdgeSource {
+    fn vertex_bound(&self) -> usize {
+        self.n as usize
+    }
+
+    fn next_chunk(
+        &mut self,
+        chunk: &mut Vec<(VertexId, VertexId)>,
+        max_edges: usize,
+    ) -> Result<usize, String> {
+        chunk.clear();
+        while chunk.len() < max_edges {
+            while self.rem == 0 {
+                if self.next_v >= self.n {
+                    if self.emitted != self.slots {
+                        return Err(format!(
+                            "offsets cover {} slots, header says {}",
+                            self.emitted, self.slots
+                        ));
+                    }
+                    return Ok(chunk.len());
+                }
+                let next_off = binary::read_u64(&mut self.offsets)?;
+                if next_off < self.prev_off || next_off > self.slots {
+                    return Err("offsets must be non-decreasing and <= slots".into());
+                }
+                self.rem = next_off - self.prev_off;
+                self.prev_off = next_off;
+                self.cur = self.next_v;
+                self.next_v += 1;
+            }
+            let nb = binary::read_u32(&mut self.neighbors)?;
+            if (nb as u64) >= self.n {
+                return Err(format!("neighbor id {nb} out of range (n={})", self.n));
+            }
+            chunk.push((self.cur as VertexId, nb));
+            self.rem -= 1;
+            self.emitted += 1;
+        }
+        Ok(chunk.len())
+    }
+
+    fn edge_hint(&self) -> Option<u64> {
+        Some(self.slots)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Synthetic generators
+// ---------------------------------------------------------------------------
+
+#[derive(Clone, Copy)]
+enum Synthetic {
+    Er { n: usize },
+    Rmat { scale: u32, probs: (f64, f64, f64, f64) },
+}
+
+/// Generator-backed source: edges are sampled on demand, so the "graph"
+/// never exists in memory at all. Deterministic given the seed and chunking
+/// (the RNG stream is consumed edge-by-edge regardless of chunk size).
+pub struct SyntheticEdgeSource {
+    kind: Synthetic,
+    rng: Xoshiro256pp,
+    remaining: u64,
+    total: u64,
+}
+
+impl SyntheticEdgeSource {
+    /// Erdős–Rényi G(n, m): `m` uniform random edges, the same stream as
+    /// [`crate::graph::gen::erdos_renyi::edges`].
+    pub fn erdos_renyi(n: usize, m: usize, seed: u64) -> Self {
+        Self {
+            kind: Synthetic::Er { n },
+            rng: Xoshiro256pp::new(seed),
+            remaining: m as u64,
+            total: m as u64,
+        }
+    }
+
+    /// RMAT with Graph500 probabilities, the same stream as
+    /// [`crate::graph::gen::rmat::edges_with_probs`].
+    pub fn rmat(cfg: &crate::graph::gen::GenConfig) -> Self {
+        Self {
+            kind: Synthetic::Rmat {
+                scale: cfg.scale,
+                probs: crate::graph::gen::rmat::GRAPH500_PROBS,
+            },
+            rng: Xoshiro256pp::new(cfg.seed),
+            remaining: cfg.num_edges() as u64,
+            total: cfg.num_edges() as u64,
+        }
+    }
+}
+
+impl EdgeSource for SyntheticEdgeSource {
+    fn vertex_bound(&self) -> usize {
+        match self.kind {
+            Synthetic::Er { n } => n,
+            Synthetic::Rmat { scale, .. } => 1usize << scale,
+        }
+    }
+
+    fn next_chunk(
+        &mut self,
+        chunk: &mut Vec<(VertexId, VertexId)>,
+        max_edges: usize,
+    ) -> Result<usize, String> {
+        chunk.clear();
+        let take = (max_edges as u64).min(self.remaining);
+        for _ in 0..take {
+            let e = match self.kind {
+                Synthetic::Er { n } => (
+                    self.rng.next_usize(n) as VertexId,
+                    self.rng.next_usize(n) as VertexId,
+                ),
+                Synthetic::Rmat { scale, probs } => {
+                    crate::graph::gen::rmat::sample_edge(&mut self.rng, scale, probs)
+                }
+            };
+            chunk.push(e);
+        }
+        self.remaining -= take;
+        Ok(chunk.len())
+    }
+
+    fn edge_hint(&self) -> Option<u64> {
+        Some(self.total)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// CSR adapter
+// ---------------------------------------------------------------------------
+
+/// Streams every stored slot of a materialized CSR in CSR order. Only
+/// useful for A/B comparisons — the CSR is obviously already resident.
+pub struct CsrEdgeSource<'a> {
+    g: &'a CsrGraph,
+    v: usize,
+    i: usize,
+}
+
+impl<'a> CsrEdgeSource<'a> {
+    pub fn new(g: &'a CsrGraph) -> Self {
+        Self { g, v: 0, i: 0 }
+    }
+}
+
+impl EdgeSource for CsrEdgeSource<'_> {
+    fn vertex_bound(&self) -> usize {
+        self.g.num_vertices()
+    }
+
+    fn next_chunk(
+        &mut self,
+        chunk: &mut Vec<(VertexId, VertexId)>,
+        max_edges: usize,
+    ) -> Result<usize, String> {
+        chunk.clear();
+        let n = self.g.num_vertices();
+        while chunk.len() < max_edges && self.v < n {
+            let ns = self.g.neighbors(self.v as VertexId);
+            if self.i >= ns.len() {
+                self.v += 1;
+                self.i = 0;
+                continue;
+            }
+            chunk.push((self.v as VertexId, ns[self.i]));
+            self.i += 1;
+        }
+        Ok(chunk.len())
+    }
+
+    fn edge_hint(&self) -> Option<u64> {
+        Some(self.g.num_edge_slots() as u64)
+    }
+}
+
+/// Open a file-backed [`EdgeSource`] by extension (`.skg`, `.mtx`,
+/// `.txt`/`.el`) — the streaming twin of the CLI's eager `load_graph`.
+pub fn open_path(path: &str) -> Result<Box<dyn EdgeSource + Send>, String> {
+    if path.ends_with(".skg") {
+        return Ok(Box::new(SkgEdgeSource::open(path)?));
+    }
+    if path.ends_with(".mtx") {
+        return Ok(Box::new(MtxEdgeSource::open(path)?));
+    }
+    if path.ends_with(".txt") || path.ends_with(".el") {
+        return Ok(Box::new(TextEdgeSource::open(path)?));
+    }
+    Err(format!("unknown edge-stream format {path:?} (.skg/.mtx/.txt/.el)"))
+}
+
+impl EdgeSource for Box<dyn EdgeSource + Send> {
+    fn vertex_bound(&self) -> usize {
+        (**self).vertex_bound()
+    }
+
+    fn next_chunk(
+        &mut self,
+        chunk: &mut Vec<(VertexId, VertexId)>,
+        max_edges: usize,
+    ) -> Result<usize, String> {
+        (**self).next_chunk(chunk, max_edges)
+    }
+
+    fn edge_hint(&self) -> Option<u64> {
+        (**self).edge_hint()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::gen::{erdos_renyi, rmat, GenConfig};
+    use crate::graph::io::{binary, edgelist_txt, mtx};
+
+    fn tmp(name: &str) -> String {
+        let dir = std::env::temp_dir().join("skipper_stream_tests");
+        let _ = std::fs::create_dir_all(&dir);
+        dir.join(name).to_str().unwrap().to_string()
+    }
+
+    fn drain<S: EdgeSource>(mut s: S, chunk_size: usize) -> Vec<(VertexId, VertexId)> {
+        let mut out = Vec::new();
+        let mut chunk = Vec::new();
+        while s.next_chunk(&mut chunk, chunk_size).unwrap() > 0 {
+            out.extend_from_slice(&chunk);
+        }
+        out
+    }
+
+    #[test]
+    fn batch_source_streams_all_edges_across_chunk_sizes() {
+        let edges: Vec<(VertexId, VertexId)> = (0..100u32).map(|i| (i, (i + 1) % 100)).collect();
+        for cs in [1, 7, 100, 1000] {
+            let s = BatchEdgeSource::new(100, &edges);
+            assert_eq!(drain(s, cs), edges, "chunk size {cs}");
+        }
+    }
+
+    #[test]
+    fn batch_source_rejects_out_of_bound_ids() {
+        let edges = [(0u32, 5u32)];
+        let mut s = BatchEdgeSource::new(3, &edges);
+        let mut chunk = Vec::new();
+        assert!(s.next_chunk(&mut chunk, 10).is_err());
+    }
+
+    #[test]
+    fn text_source_matches_eager_reader() {
+        let el = erdos_renyi::edges(200, 500, 11);
+        let path = tmp("stream_eq.txt");
+        edgelist_txt::write_file(&path, &el).unwrap();
+        let s = TextEdgeSource::open(&path).unwrap();
+        assert_eq!(s.vertex_bound(), 200);
+        let streamed = drain(s, 37);
+        let eager = edgelist_txt::read_file(&path).unwrap();
+        assert_eq!(streamed, eager.edges);
+    }
+
+    #[test]
+    fn text_source_without_header_prescans_bound() {
+        let path = tmp("stream_nohdr.txt");
+        std::fs::write(&path, "0 1\n5 2\n# comment\n3 7\n").unwrap();
+        let s = TextEdgeSource::open(&path).unwrap();
+        assert_eq!(s.vertex_bound(), 8);
+        assert_eq!(drain(s, 2), vec![(0, 1), (5, 2), (3, 7)]);
+    }
+
+    #[test]
+    fn mtx_source_matches_eager_reader() {
+        let el = erdos_renyi::edges(150, 400, 5);
+        let path = tmp("stream_eq.mtx");
+        let mut buf = Vec::new();
+        mtx::write(&mut buf, &el).unwrap();
+        std::fs::write(&path, &buf).unwrap();
+        let s = MtxEdgeSource::open(&path).unwrap();
+        assert_eq!(s.edge_hint(), Some(400));
+        let streamed = drain(s, 64);
+        let eager = mtx::read_file(&path).unwrap();
+        assert_eq!(streamed, eager.edges);
+        assert_eq!(streamed.len(), 400);
+    }
+
+    #[test]
+    fn mtx_source_detects_truncation() {
+        let path = tmp("stream_trunc.mtx");
+        std::fs::write(
+            &path,
+            "%%MatrixMarket matrix coordinate pattern general\n3 3 2\n1 2\n",
+        )
+        .unwrap();
+        let mut s = MtxEdgeSource::open(&path).unwrap();
+        let mut chunk = Vec::new();
+        assert!(s.next_chunk(&mut chunk, 16).is_err());
+    }
+
+    #[test]
+    fn skg_source_streams_every_slot_in_csr_order() {
+        let g = rmat::generate(&GenConfig { scale: 9, avg_degree: 6, seed: 4 });
+        let path = tmp("stream_eq.skg");
+        binary::write_file(&path, &g).unwrap();
+        let s = SkgEdgeSource::open(&path).unwrap();
+        assert_eq!(s.vertex_bound(), g.num_vertices());
+        assert_eq!(s.edge_hint(), Some(g.num_edge_slots() as u64));
+        let streamed = drain(s, 101);
+        let eager: Vec<_> = g.iter_edges().collect();
+        assert_eq!(streamed, eager);
+    }
+
+    #[test]
+    fn skg_source_handles_empty_and_isolated_vertices() {
+        let g = CsrGraph::from_parts(vec![0, 0, 2, 2, 2], vec![2, 3]).unwrap();
+        let path = tmp("stream_iso.skg");
+        binary::write_file(&path, &g).unwrap();
+        let s = SkgEdgeSource::open(&path).unwrap();
+        assert_eq!(drain(s, 1), vec![(1, 2), (1, 3)]);
+        let empty = CsrGraph::from_parts(vec![0], vec![]).unwrap();
+        let path = tmp("stream_empty.skg");
+        binary::write_file(&path, &empty).unwrap();
+        let s = SkgEdgeSource::open(&path).unwrap();
+        assert!(drain(s, 8).is_empty());
+    }
+
+    #[test]
+    fn skg_source_rejects_bad_magic() {
+        let path = tmp("stream_bad.skg");
+        std::fs::write(&path, b"NOTMAGIC\x00\x00\x00\x00\x00\x00\x00\x00").unwrap();
+        assert!(SkgEdgeSource::open(&path).is_err());
+    }
+
+    #[test]
+    fn synthetic_er_matches_materialized_generator() {
+        let el = erdos_renyi::edges(300, 1000, 42);
+        let s = SyntheticEdgeSource::erdos_renyi(300, 1000, 42);
+        assert_eq!(drain(s, 128), el.edges);
+    }
+
+    #[test]
+    fn synthetic_rmat_matches_materialized_generator() {
+        let cfg = GenConfig { scale: 8, avg_degree: 4, seed: 9 };
+        let el = rmat::edges_with_probs(&cfg, crate::graph::gen::rmat::GRAPH500_PROBS);
+        let s = SyntheticEdgeSource::rmat(&cfg);
+        assert_eq!(s.vertex_bound(), 256);
+        assert_eq!(drain(s, 333), el.edges);
+    }
+
+    #[test]
+    fn csr_adapter_equals_iter_edges() {
+        let g = rmat::generate(&GenConfig { scale: 8, avg_degree: 5, seed: 3 });
+        let s = CsrEdgeSource::new(&g);
+        let streamed = drain(s, 77);
+        let eager: Vec<_> = g.iter_edges().collect();
+        assert_eq!(streamed, eager);
+    }
+
+    #[test]
+    fn collect_edges_roundtrip() {
+        let edges: Vec<(VertexId, VertexId)> = vec![(0, 1), (2, 3), (1, 2)];
+        let el = collect_edges(BatchEdgeSource::new(4, &edges)).unwrap();
+        assert_eq!(el.num_vertices, 4);
+        assert_eq!(el.edges, edges);
+    }
+
+    #[test]
+    fn open_path_dispatches_by_extension() {
+        let el = erdos_renyi::edges(50, 100, 2);
+        let txt = tmp("dispatch.txt");
+        edgelist_txt::write_file(&txt, &el).unwrap();
+        assert_eq!(open_path(&txt).unwrap().vertex_bound(), 50);
+        assert!(open_path("graph.unknown").is_err());
+    }
+}

@@ -3,13 +3,19 @@
 //! A production-grade reproduction of the CS.DC 2025 paper by Mohsen Koohi
 //! Esfahani. The crate contains:
 //!
-//! * [`matching::skipper`] — the paper's contribution: a CAS-based,
-//!   single-pass, asynchronous maximal-matching algorithm (Algorithm 1).
+//! * [`matching::core`] — `SkipperCore`, the paper's per-edge state machine
+//!   (Algorithm 1), shared by every driver below.
+//! * [`matching::skipper`] — the paper's configuration: a CAS-based,
+//!   single-pass, asynchronous maximal matching over a materialized CSR.
+//! * [`matching::streaming`] — the streaming ingest→match pipeline: edges
+//!   pulled chunk-by-chunk from any [`graph::stream::EdgeSource`] (disk,
+//!   generator, batch) through a bounded queue; no CSR is ever built.
 //! * [`matching`] — every baseline the paper discusses: sequential greedy
 //!   (SGMM), IDMM, SIDMM (the GBBS comparator), PBMM, Israeli–Itai, Birn
 //!   et al., and Auer–Bisseling.
-//! * [`graph`] — the CSR/COO graph substrate, loaders, and the scaled
-//!   synthetic analogues of the paper's dataset suite.
+//! * [`graph`] — the CSR/COO graph substrate, loaders, streaming edge
+//!   sources, and the scaled synthetic analogues of the paper's dataset
+//!   suite.
 //! * [`par`] — the thread-dispersed locality-preserving block scheduler
 //!   with work stealing (paper §IV-C) on top of a scoped thread pool.
 //! * [`instrument`] — software memory-access counters and JIT-conflict

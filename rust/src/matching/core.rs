@@ -1,0 +1,246 @@
+//! **SkipperCore** — the per-edge state machine of Algorithm 1, factored out
+//! of any particular edge-delivery mechanism.
+//!
+//! The core owns exactly the algorithm's shared state: the one-byte-per-
+//! vertex array (`ACC`/`RSVD`/`MCHD`). Everything else — where edges come
+//! from and where matches go — is the driver's business:
+//!
+//! * [`super::skipper::Skipper`] walks a materialized CSR graph through the
+//!   thread-dispersed [`crate::par::scheduler::BlockScheduler`];
+//! * [`super::streaming::StreamingSkipper`] consumes `(u, v)` chunks pulled
+//!   from any [`crate::graph::stream::EdgeSource`] — a file, a generator,
+//!   or an in-memory batch — without ever building a CSR;
+//! * [`super::incremental::IncrementalMatcher`] keeps one core alive across
+//!   edge-insertion batches.
+//!
+//! All drivers share [`process_edge`] (Algorithm 1 lines 6–18), so JIT
+//! conflict resolution, telemetry, and the correctness argument are
+//! identical regardless of how edges arrive. This is what makes the paper's
+//! "single pass over edges" literal: the fate of an edge is decided the
+//! moment it is seen, never revisited, so *any* one-shot delivery order is
+//! a valid execution.
+
+use super::{MatchArena, MatchWriter, BUFFER_EDGES};
+use crate::instrument::conflicts::ConflictStats;
+use crate::instrument::{address, Probe};
+use crate::VertexId;
+use std::sync::atomic::{AtomicU8, Ordering};
+
+/// Vertex states (paper §IV, one byte per vertex).
+pub const ACC: u8 = 0;
+pub const RSVD: u8 = 1;
+pub const MCHD: u8 = 2;
+
+/// The shared algorithm state: one byte per vertex, nothing else.
+pub struct SkipperCore {
+    state: Vec<AtomicU8>,
+}
+
+impl SkipperCore {
+    /// Fresh core with all `num_vertices` vertices `ACC`.
+    pub fn new(num_vertices: usize) -> Self {
+        Self {
+            state: (0..num_vertices).map(|_| AtomicU8::new(ACC)).collect(),
+        }
+    }
+
+    #[inline]
+    pub fn num_vertices(&self) -> usize {
+        self.state.len()
+    }
+
+    /// Resident bytes of algorithm state — the paper's headline: |V| bytes,
+    /// independent of |E|.
+    #[inline]
+    pub fn state_bytes(&self) -> usize {
+        self.state.len()
+    }
+
+    /// Acquire-load check used for the vertex-level skip in the CSR driver
+    /// and for user-facing queries.
+    #[inline]
+    pub fn is_matched(&self, v: VertexId) -> bool {
+        self.state[v as usize].load(Ordering::Acquire) == MCHD
+    }
+
+    /// Relaxed check for the mid-neighbor-list skip (advisory only).
+    #[inline]
+    pub fn is_matched_relaxed(&self, v: VertexId) -> bool {
+        self.state[v as usize].load(Ordering::Relaxed) == MCHD
+    }
+
+    /// A match arena sized for this core's worst case (≤ |V|/2 matches)
+    /// plus one private buffer of slack per writer.
+    pub fn arena(&self, num_threads: usize) -> MatchArena {
+        MatchArena::with_capacity(
+            self.num_vertices() / 2 + (num_threads + 1) * BUFFER_EDGES,
+        )
+    }
+
+    /// Process one edge (Algorithm 1 lines 6–18); returns the JIT-conflict
+    /// count. Both endpoints must be `< num_vertices()`.
+    #[inline]
+    pub fn process_edge<P: Probe>(
+        &self,
+        x: VertexId,
+        y: VertexId,
+        writer: &mut MatchWriter<'_>,
+        probe: &mut P,
+    ) -> u64 {
+        process_edge(&self.state, x, y, writer, probe)
+    }
+
+    /// Drive one chunk of edges through the state machine, recording
+    /// per-edge conflict telemetry. This is the whole inner loop of the
+    /// chunk/streaming driver.
+    pub fn process_chunk<P: Probe>(
+        &self,
+        edges: &[(VertexId, VertexId)],
+        writer: &mut MatchWriter<'_>,
+        stats: &mut ConflictStats,
+        probe: &mut P,
+    ) {
+        for &(x, y) in edges {
+            let conflicts = self.process_edge(x, y, writer, probe);
+            stats.record_edge(conflicts);
+        }
+    }
+}
+
+/// Process one edge (Algorithm 1 lines 6–18). Returns the number of JIT
+/// conflicts (failed CASes) encountered.
+#[inline]
+pub fn process_edge<P: Probe>(
+    state: &[AtomicU8],
+    x: VertexId,
+    y: VertexId,
+    writer: &mut MatchWriter<'_>,
+    probe: &mut P,
+) -> u64 {
+    // Lines 6–7: skip self-loops.
+    if x == y {
+        return 0;
+    }
+    // Lines 8–9: reserve the lower endpoint first (deadlock avoidance).
+    let (u, v) = if x < y { (x, y) } else { (y, x) };
+    let su = &state[u as usize];
+    let sv = &state[v as usize];
+    let mut conflicts = 0u64;
+
+    // Line 10: while neither endpoint is matched.
+    loop {
+        probe.load(address::state(u as u64));
+        probe.load(address::state(v as u64));
+        if su.load(Ordering::Acquire) == MCHD || sv.load(Ordering::Acquire) == MCHD {
+            return conflicts;
+        }
+        // Lines 11–12: try to reserve u.
+        probe.rmw(address::state(u as u64));
+        if su
+            .compare_exchange(ACC, RSVD, Ordering::AcqRel, Ordering::Acquire)
+            .is_err()
+        {
+            conflicts += 1;
+            std::hint::spin_loop();
+            continue; // re-evaluate line 10
+        }
+        // u is exclusively ours. Lines 13–16: try to match v.
+        let mut matched = false;
+        loop {
+            probe.load(address::state(v as u64));
+            if sv.load(Ordering::Acquire) == MCHD {
+                break;
+            }
+            probe.rmw(address::state(v as u64));
+            match sv.compare_exchange(ACC, MCHD, Ordering::AcqRel, Ordering::Acquire) {
+                Ok(_) => {
+                    // Line 15: we hold u's reservation — plain store suffices.
+                    su.store(MCHD, Ordering::Release);
+                    probe.store(address::state(u as u64));
+                    // Line 16: race-free private buffer write.
+                    writer.push(u, v);
+                    probe.store(address::matches(0));
+                    matched = true;
+                    break;
+                }
+                Err(_) => {
+                    // v is RSVD by another thread (or just flipped): JIT
+                    // conflict — wait a few cycles for certainty.
+                    conflicts += 1;
+                    std::hint::spin_loop();
+                }
+            }
+        }
+        if matched {
+            return conflicts;
+        }
+        // Lines 17–18: v was matched elsewhere; release u (plain store —
+        // the reservation is ours).
+        su.store(ACC, Ordering::Release);
+        probe.store(address::state(u as u64));
+        // Loop back to line 10: it will observe v == MCHD and exit.
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::instrument::NoProbe;
+
+    #[test]
+    fn core_matches_a_path_sequentially() {
+        let core = SkipperCore::new(4);
+        let arena = core.arena(1);
+        let mut w = arena.writer();
+        let mut stats = ConflictStats::default();
+        core.process_chunk(&[(0, 1), (1, 2), (2, 3)], &mut w, &mut stats, &mut NoProbe);
+        drop(w);
+        assert!(core.is_matched(0) && core.is_matched(1));
+        assert!(core.is_matched(2) && core.is_matched(3));
+        assert_eq!(stats.total, 0, "no conflicts single-threaded");
+        let m = arena.into_matching();
+        assert_eq!(m.to_sorted_vec(), vec![(0, 1), (2, 3)]);
+    }
+
+    #[test]
+    fn core_skips_self_loops_and_covered_edges() {
+        let core = SkipperCore::new(3);
+        let arena = core.arena(1);
+        let mut w = arena.writer();
+        assert_eq!(core.process_edge(1, 1, &mut w, &mut NoProbe), 0);
+        assert!(!core.is_matched(1));
+        core.process_edge(0, 1, &mut w, &mut NoProbe);
+        // (1,2) is covered by 1; 2 must stay free
+        core.process_edge(1, 2, &mut w, &mut NoProbe);
+        assert!(!core.is_matched(2));
+        drop(w);
+        assert_eq!(arena.into_matching().len(), 1);
+    }
+
+    #[test]
+    fn state_bytes_is_one_per_vertex() {
+        assert_eq!(SkipperCore::new(12345).state_bytes(), 12345);
+    }
+
+    #[test]
+    fn edge_order_never_breaks_maximality_over_union() {
+        // any delivery order decides every edge exactly once
+        let edges = [(0u32, 1u32), (2, 3), (1, 2), (0, 3), (0, 2), (1, 3)];
+        let mut orders = vec![edges.to_vec()];
+        let mut rev = edges.to_vec();
+        rev.reverse();
+        orders.push(rev);
+        for order in orders {
+            let core = SkipperCore::new(4);
+            let arena = core.arena(1);
+            let mut w = arena.writer();
+            let mut stats = ConflictStats::default();
+            core.process_chunk(&order, &mut w, &mut stats, &mut NoProbe);
+            drop(w);
+            // every edge has a matched endpoint
+            for &(u, v) in &order {
+                assert!(core.is_matched(u) || core.is_matched(v), "({u},{v})");
+            }
+        }
+    }
+}

@@ -4,34 +4,37 @@
 //! *maintained* under edge insertions by running the same per-edge state
 //! machine on just the new edges — no recomputation over the old graph.
 //!
-//! This module provides [`IncrementalMatcher`]: it owns the vertex state
-//! array across batches; each `insert_batch` runs Algorithm 1 on the new
-//! edges only (in parallel) and appends any new matches.
+//! Since the streaming refactor this is a thin veneer over the shared
+//! machinery: one long-lived [`SkipperCore`] holds the vertex states across
+//! batches, and each `insert_batch` pushes the new edges through the
+//! [`StreamingSkipper`] chunk driver via a
+//! [`BatchEdgeSource`](crate::graph::stream::BatchEdgeSource) — the
+//! batch-update scenario is literally the streaming pipeline with an
+//! in-memory source.
 
-use super::skipper::{process_edge, ACC, MCHD};
-use super::{MatchArena, Matching};
-use crate::instrument::NoProbe;
-use crate::par::run_threads_collect;
+use super::core::SkipperCore;
+use super::streaming::StreamingSkipper;
+use super::{MatchArena, Matching, BUFFER_EDGES};
+use crate::graph::stream::BatchEdgeSource;
 use crate::VertexId;
-use std::sync::atomic::{AtomicU8, Ordering};
 
 pub struct IncrementalMatcher {
-    state: Vec<AtomicU8>,
+    core: SkipperCore,
+    driver: StreamingSkipper,
     matches: Vec<(VertexId, VertexId)>,
-    threads: usize,
 }
 
 impl IncrementalMatcher {
     pub fn new(num_vertices: usize, threads: usize) -> Self {
         Self {
-            state: (0..num_vertices).map(|_| AtomicU8::new(ACC)).collect(),
+            core: SkipperCore::new(num_vertices),
+            driver: StreamingSkipper::new(threads),
             matches: Vec::new(),
-            threads: threads.max(1),
         }
     }
 
     pub fn num_vertices(&self) -> usize {
-        self.state.len()
+        self.core.num_vertices()
     }
 
     /// Current matching (all batches so far).
@@ -40,7 +43,7 @@ impl IncrementalMatcher {
     }
 
     pub fn is_matched(&self, v: VertexId) -> bool {
-        self.state[v as usize].load(Ordering::Acquire) == MCHD
+        self.core.is_matched(v)
     }
 
     /// Insert a batch of edges; returns the number of new matches. Edges
@@ -49,19 +52,25 @@ impl IncrementalMatcher {
     /// has at least one matched endpoint.
     pub fn insert_batch(&mut self, edges: &[(VertexId, VertexId)]) -> usize {
         let arena = MatchArena::with_capacity(
-            edges.len().min(self.state.len()) + (self.threads + 1) * super::BUFFER_EDGES,
+            edges.len().min(self.core.num_vertices())
+                + (self.driver.threads + 1) * BUFFER_EDGES,
         );
-        let t = self.threads;
-        let chunk = edges.len().div_ceil(t);
-        let state = &self.state;
-        run_threads_collect(t, |tid| {
-            let mut writer = arena.writer();
-            let start = (tid * chunk).min(edges.len());
-            let end = ((tid + 1) * chunk).min(edges.len());
-            for &(x, y) in &edges[start..end] {
-                process_edge(state, x, y, &mut writer, &mut NoProbe);
-            }
-        });
+        // Size chunks so even a small batch spreads across all consumers
+        // instead of landing in one default-sized chunk.
+        let driver = StreamingSkipper {
+            chunk_edges: edges
+                .len()
+                .div_ceil(self.driver.threads)
+                .clamp(1, self.driver.chunk_edges),
+            ..self.driver
+        };
+        driver
+            .run_with_core(
+                &self.core,
+                &arena,
+                BatchEdgeSource::new(self.core.num_vertices(), edges),
+            )
+            .expect("batch insertion failed");
         let new = arena.into_matching();
         let added = new.len();
         self.matches.extend(new.iter());
@@ -75,6 +84,7 @@ mod tests {
     use crate::graph::builder::{build, BuildOptions};
     use crate::graph::gen::{erdos_renyi, simple};
     use crate::graph::EdgeList;
+    use crate::instrument::NoProbe;
     use crate::matching::verify;
     use crate::util::rng::Xoshiro256pp;
 

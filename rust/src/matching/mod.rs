@@ -1,17 +1,44 @@
 //! Maximal-matching algorithms and output plumbing.
 //!
+//! ## Core / driver split
+//!
+//! Skipper's per-edge state machine lives in [`core::SkipperCore`]: the
+//! one-byte-per-vertex state array plus `process_edge` (Algorithm 1 lines
+//! 6–18). The core is deliberately ignorant of *where edges come from*;
+//! three drivers feed it:
+//!
+//! * [`skipper::Skipper`] — the paper's configuration: a materialized CSR
+//!   graph walked through the thread-dispersed block scheduler
+//!   (`par::scheduler`), with vertex-level skips and full conflict/access
+//!   telemetry;
+//! * [`streaming::StreamingSkipper`] — the chunk driver: edges pulled from
+//!   any [`crate::graph::stream::EdgeSource`] (disk readers, generators,
+//!   in-memory batches) through a bounded queue, so matching overlaps
+//!   ingest I/O and no CSR is ever built;
+//! * [`incremental::IncrementalMatcher`] — one long-lived core fed
+//!   edge-insertion batches, maintaining maximality across updates.
+//!
+//! Because the core decides each edge exactly once and never revisits it,
+//! all drivers inherit the same correctness argument, and any one-shot
+//! delivery order (CSR order, stream order, batch order) is a valid
+//! execution of the same algorithm.
+//!
+//! ## Output plumbing
+//!
 //! The output container reproduces the paper's buffer scheme (§IV-C): one
 //! arena sized for the worst case is allocated up front; each thread
 //! bump-allocates private 1024-edge buffers from it and writes matches
 //! sequentially; unfilled tail slots carry the `-1` sentinel and are skipped
 //! on read-out.
 
+pub mod core;
 pub mod ems;
 pub mod incremental;
 pub mod mis;
 pub mod noreserve;
 pub mod sgmm;
 pub mod skipper;
+pub mod streaming;
 pub mod verify;
 
 use crate::graph::CsrGraph;
@@ -103,16 +130,30 @@ impl MatchArena {
         }
     }
 
-    /// Claim the next private buffer; returns its `[start, end)` range.
+    /// Claim the next private buffer; returns its non-empty `[start, end)`
+    /// range, `end <= capacity`.
+    ///
+    /// Checked claim: with many concurrent writers the bump pointer can
+    /// sail arbitrarily far past `capacity` (each racing `fetch_add`
+    /// advances it whether or not the claim is honored), so a claim can
+    /// start at or beyond `capacity`. Refusing it has always been the
+    /// behavior (the previous `assert!` fired before returning); this makes
+    /// the bound check explicit and *first* — no clamped-empty
+    /// `[capacity, capacity)` range is ever even computed — and the panic
+    /// names the claiming thread, the claimed range, and the capacity so an
+    /// exhaustion in a many-thread run is diagnosable.
     fn grab(&self) -> (usize, usize) {
         let start = self.next.fetch_add(BUFFER_EDGES, Ordering::Relaxed);
-        let end = (start + BUFFER_EDGES).min(self.capacity);
-        assert!(
-            start < self.capacity,
-            "match arena exhausted (capacity {})",
-            self.capacity
-        );
-        (start, end)
+        if start >= self.capacity {
+            panic!(
+                "match arena exhausted ({:?} claimed slots {}..{} past capacity {})",
+                std::thread::current().id(),
+                start,
+                start + BUFFER_EDGES,
+                self.capacity
+            );
+        }
+        (start, (start + BUFFER_EDGES).min(self.capacity))
     }
 
     /// A writer for one thread. Each writer must be used by a single thread.
@@ -231,6 +272,69 @@ mod tests {
         let mut w = arena.writer();
         for i in 0..(BUFFER_EDGES + 1) as u32 {
             w.push(i, i);
+        }
+    }
+
+    #[test]
+    fn overclaim_never_hands_out_empty_range() {
+        // Two writers, capacity for one buffer. The second writer's grab
+        // lands exactly at `capacity` and must fail loudly (never an empty
+        // [capacity, capacity) range), with a diagnosable message.
+        let arena = MatchArena::with_capacity(BUFFER_EDGES);
+        let mut w1 = arena.writer();
+        w1.push(0, 1); // claims [0, BUFFER_EDGES)
+        let mut w2 = arena.writer();
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            w2.push(2, 3);
+        }));
+        let err = result.unwrap_err();
+        let msg = err
+            .downcast_ref::<String>()
+            .cloned()
+            .unwrap_or_default();
+        assert!(msg.contains("match arena exhausted"), "{msg}");
+        assert!(msg.contains("capacity"), "{msg}");
+    }
+
+    #[test]
+    fn concurrent_overclaim_fails_loudly_and_valid_writes_survive() {
+        // Regression for the racing fetch_add: capacity fits exactly
+        // `threads` buffers; every thread fills one, then each tries one
+        // more push. All the overflow pushes must panic, and every write
+        // that was accepted must survive intact.
+        let threads = 4;
+        let arena = MatchArena::with_capacity(threads * BUFFER_EDGES);
+        let panics = std::sync::atomic::AtomicUsize::new(0);
+        let barrier = std::sync::Barrier::new(threads);
+        std::thread::scope(|s| {
+            for tid in 0..threads as u32 {
+                let arena = &arena;
+                let panics = &panics;
+                let barrier = &barrier;
+                s.spawn(move || {
+                    let mut w = arena.writer();
+                    // exactly fill one private buffer...
+                    for i in 0..BUFFER_EDGES as u32 {
+                        w.push(tid, i);
+                    }
+                    // ...wait until the arena is exactly full everywhere...
+                    barrier.wait();
+                    // ...then every further claim must fail loudly.
+                    let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                        w.push(tid, BUFFER_EDGES as u32);
+                    }));
+                    if result.is_err() {
+                        panics.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                    }
+                });
+            }
+        });
+        // every thread's (BUFFER_EDGES+1)-th push overflows
+        assert_eq!(panics.load(std::sync::atomic::Ordering::Relaxed), threads);
+        let m = arena.into_matching();
+        assert_eq!(m.len(), threads * BUFFER_EDGES);
+        for tid in 0..threads as u32 {
+            assert_eq!(m.iter().filter(|&(u, _)| u == tid).count(), BUFFER_EDGES);
         }
     }
 

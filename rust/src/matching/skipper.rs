@@ -1,5 +1,7 @@
 //! **Skipper** (paper §IV, Algorithm 1): asynchronous maximal matching with
-//! a single pass over edges and Just-In-Time conflict resolution.
+//! a single pass over edges and Just-In-Time conflict resolution — the
+//! CSR/BlockScheduler *driver* over the shared [`SkipperCore`] state
+//! machine (see [`super::core`] for the core/driver split).
 //!
 //! Per-vertex state is one byte: `ACC(0)`, `RSVD(1)`, `MCHD(2)`. Matching an
 //! edge `(u,v)` with `u < v` (deadlock avoidance, lines 8–9):
@@ -18,18 +20,14 @@
 //! locality-preserving scheduler (§IV-C) and matches go to private
 //! 1024-edge buffers carved from a shared arena.
 
+pub use super::core::{process_edge, ACC, MCHD, RSVD};
+use super::core::SkipperCore;
 use super::{MatchArena, MaximalMatcher, Matching};
 use crate::graph::CsrGraph;
 use crate::instrument::conflicts::ConflictStats;
 use crate::instrument::{address, NoProbe, Probe};
 use crate::par::scheduler::{Assignment, BlockScheduler};
 use crate::par::run_threads_collect;
-use crate::VertexId;
-use std::sync::atomic::{AtomicU8, Ordering};
-
-pub const ACC: u8 = 0;
-pub const RSVD: u8 = 1;
-pub const MCHD: u8 = 2;
 
 /// Skipper configuration. The paper stresses there are **no tuning
 /// parameters**; `blocks_per_thread` only shapes the scheduler's work
@@ -63,7 +61,7 @@ impl Skipper {
     ) -> (Matching, ConflictStats, Vec<P>) {
         let n = g.num_vertices();
         // Lines 1–4: state array, all ACC. One byte per vertex.
-        let state: Vec<AtomicU8> = (0..n).map(|_| AtomicU8::new(ACC)).collect();
+        let core = SkipperCore::new(n);
         let sched = BlockScheduler::new(g, self.threads, self.blocks_per_thread, self.assignment);
         let arena = MatchArena::for_graph(g, self.threads);
 
@@ -78,7 +76,7 @@ impl Skipper {
                     // by x itself (maximality) and are still visible from
                     // their other endpoints.
                     probe.load(address::state(x as u64));
-                    if state[x as usize].load(Ordering::Acquire) == MCHD {
+                    if core.is_matched(x) {
                         continue;
                     }
                     probe.load(address::offsets(x as u64));
@@ -86,11 +84,10 @@ impl Skipper {
                     let base = g.offsets()[x as usize];
                     for (i, &y) in g.neighbors(x).iter().enumerate() {
                         probe.load(address::neighbors(base + i as u64));
-                        let conflicts =
-                            process_edge(&state, x, y, &mut writer, &mut probe);
+                        let conflicts = core.process_edge(x, y, &mut writer, &mut probe);
                         stats.record_edge(conflicts);
                         // If x got matched meanwhile, skip its remaining edges.
-                        if state[x as usize].load(Ordering::Relaxed) == MCHD {
+                        if core.is_matched_relaxed(x) {
                             probe.load(address::state(x as u64));
                             break;
                         }
@@ -107,81 +104,6 @@ impl Skipper {
             probes.push(p);
         }
         (arena.into_matching(), stats, probes)
-    }
-}
-
-/// Process one edge (Algorithm 1 lines 6–18). Returns the number of JIT
-/// conflicts (failed CASes) encountered.
-#[inline]
-pub fn process_edge<P: Probe>(
-    state: &[AtomicU8],
-    x: VertexId,
-    y: VertexId,
-    writer: &mut super::MatchWriter<'_>,
-    probe: &mut P,
-) -> u64 {
-    // Lines 6–7: skip self-loops.
-    if x == y {
-        return 0;
-    }
-    // Lines 8–9: reserve the lower endpoint first (deadlock avoidance).
-    let (u, v) = if x < y { (x, y) } else { (y, x) };
-    let su = &state[u as usize];
-    let sv = &state[v as usize];
-    let mut conflicts = 0u64;
-
-    // Line 10: while neither endpoint is matched.
-    loop {
-        probe.load(address::state(u as u64));
-        probe.load(address::state(v as u64));
-        if su.load(Ordering::Acquire) == MCHD || sv.load(Ordering::Acquire) == MCHD {
-            return conflicts;
-        }
-        // Lines 11–12: try to reserve u.
-        probe.rmw(address::state(u as u64));
-        if su
-            .compare_exchange(ACC, RSVD, Ordering::AcqRel, Ordering::Acquire)
-            .is_err()
-        {
-            conflicts += 1;
-            std::hint::spin_loop();
-            continue; // re-evaluate line 10
-        }
-        // u is exclusively ours. Lines 13–16: try to match v.
-        let mut matched = false;
-        loop {
-            probe.load(address::state(v as u64));
-            if sv.load(Ordering::Acquire) == MCHD {
-                break;
-            }
-            probe.rmw(address::state(v as u64));
-            match sv.compare_exchange(ACC, MCHD, Ordering::AcqRel, Ordering::Acquire) {
-                Ok(_) => {
-                    // Line 15: we hold u's reservation — plain store suffices.
-                    su.store(MCHD, Ordering::Release);
-                    probe.store(address::state(u as u64));
-                    // Line 16: race-free private buffer write.
-                    writer.push(u, v);
-                    probe.store(address::matches(0));
-                    matched = true;
-                    break;
-                }
-                Err(_) => {
-                    // v is RSVD by another thread (or just flipped): JIT
-                    // conflict — wait a few cycles for certainty.
-                    conflicts += 1;
-                    std::hint::spin_loop();
-                }
-            }
-        }
-        if matched {
-            return conflicts;
-        }
-        // Lines 17–18: v was matched elsewhere; release u (plain store —
-        // the reservation is ours).
-        su.store(ACC, Ordering::Release);
-        probe.store(address::state(u as u64));
-        // Loop back to line 10: it will observe v == MCHD and exit.
     }
 }
 

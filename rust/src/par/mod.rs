@@ -5,6 +5,7 @@
 //! interleaving, while the [`crate::apram`] simulator reproduces the
 //! *t-thread performance shape* (see DESIGN.md §3).
 
+pub mod pump;
 pub mod scheduler;
 
 /// Run `f(tid)` on `t` scoped threads and join. `f` observes its thread id.

@@ -1,0 +1,211 @@
+//! Bounded chunk hand-off between an ingest producer and matcher consumers.
+//!
+//! [`BoundedQueue`] is a small Mutex+Condvar MPMC queue with close
+//! semantics: `push` blocks while the queue is at capacity (back-pressure
+//! on the reader so ingest can never race ahead of matching by more than
+//! `capacity` chunks of memory), `pop` blocks while it is empty, and
+//! `close` wakes everyone — pending `pop`s drain the remaining items and
+//! then observe end-of-stream. The capacity bound is what makes streaming
+//! memory O(chunk · capacity) instead of O(|E|).
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+
+struct Inner<T> {
+    items: VecDeque<T>,
+    closed: bool,
+}
+
+/// Bounded multi-producer/multi-consumer queue with close semantics.
+pub struct BoundedQueue<T> {
+    inner: Mutex<Inner<T>>,
+    not_empty: Condvar,
+    not_full: Condvar,
+    capacity: usize,
+}
+
+impl<T> BoundedQueue<T> {
+    /// `capacity` is clamped to at least 1.
+    pub fn new(capacity: usize) -> Self {
+        Self {
+            inner: Mutex::new(Inner {
+                items: VecDeque::new(),
+                closed: false,
+            }),
+            not_empty: Condvar::new(),
+            not_full: Condvar::new(),
+            capacity: capacity.max(1),
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Blocking push; returns the item back if the queue was closed.
+    pub fn push(&self, item: T) -> Result<(), T> {
+        let mut inner = self.inner.lock().unwrap();
+        while inner.items.len() >= self.capacity && !inner.closed {
+            inner = self.not_full.wait(inner).unwrap();
+        }
+        if inner.closed {
+            return Err(item);
+        }
+        inner.items.push_back(item);
+        drop(inner);
+        self.not_empty.notify_one();
+        Ok(())
+    }
+
+    /// Blocking pop; `None` once the queue is closed *and* drained.
+    pub fn pop(&self) -> Option<T> {
+        let mut inner = self.inner.lock().unwrap();
+        loop {
+            if let Some(item) = inner.items.pop_front() {
+                drop(inner);
+                self.not_full.notify_one();
+                return Some(item);
+            }
+            if inner.closed {
+                return None;
+            }
+            inner = self.not_empty.wait(inner).unwrap();
+        }
+    }
+
+    /// Non-blocking pop: `None` when currently empty (closed or not).
+    pub fn try_pop(&self) -> Option<T> {
+        let mut inner = self.inner.lock().unwrap();
+        let item = inner.items.pop_front();
+        if item.is_some() {
+            drop(inner);
+            self.not_full.notify_one();
+        }
+        item
+    }
+
+    /// Close the queue: pending and future `push`es fail, `pop`s drain the
+    /// backlog then return `None`. Idempotent.
+    pub fn close(&self) {
+        let mut inner = self.inner.lock().unwrap();
+        inner.closed = true;
+        drop(inner);
+        self.not_empty.notify_all();
+        self.not_full.notify_all();
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// Closes the queue when dropped — attached to every consumer so a panicking
+/// consumer unblocks the producer instead of deadlocking the pipeline.
+pub struct CloseOnDrop<'a, T>(pub &'a BoundedQueue<T>);
+
+impl<T> Drop for CloseOnDrop<'_, T> {
+    fn drop(&mut self) {
+        self.0.close();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::par::run_threads;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn fifo_single_thread() {
+        let q = BoundedQueue::new(4);
+        q.push(1).unwrap();
+        q.push(2).unwrap();
+        assert_eq!(q.len(), 2);
+        assert_eq!(q.try_pop(), Some(1));
+        assert_eq!(q.pop(), Some(2));
+        assert_eq!(q.try_pop(), None);
+        q.close();
+        assert_eq!(q.pop(), None);
+        assert!(q.push(3).is_err());
+    }
+
+    #[test]
+    fn producer_consumer_transfers_everything() {
+        let q: BoundedQueue<usize> = BoundedQueue::new(3);
+        let sum = AtomicUsize::new(0);
+        let count = AtomicUsize::new(0);
+        let total = 10_000usize;
+        std::thread::scope(|s| {
+            for _ in 0..3 {
+                s.spawn(|| {
+                    while let Some(x) = q.pop() {
+                        sum.fetch_add(x, Ordering::Relaxed);
+                        count.fetch_add(1, Ordering::Relaxed);
+                    }
+                });
+            }
+            for i in 0..total {
+                q.push(i).unwrap();
+            }
+            q.close();
+        });
+        assert_eq!(count.load(Ordering::Relaxed), total);
+        assert_eq!(sum.load(Ordering::Relaxed), total * (total - 1) / 2);
+    }
+
+    #[test]
+    fn push_blocks_at_capacity_until_pop() {
+        let q: BoundedQueue<u32> = BoundedQueue::new(2);
+        q.push(1).unwrap();
+        q.push(2).unwrap();
+        let pushed = AtomicUsize::new(0);
+        std::thread::scope(|s| {
+            s.spawn(|| {
+                q.push(3).unwrap(); // must block until the pop below
+                pushed.store(1, Ordering::SeqCst);
+            });
+            std::thread::sleep(std::time::Duration::from_millis(30));
+            assert_eq!(pushed.load(Ordering::SeqCst), 0, "push went through while full");
+            assert_eq!(q.pop(), Some(1));
+        });
+        assert_eq!(pushed.load(Ordering::SeqCst), 1);
+        assert_eq!(q.len(), 2);
+    }
+
+    #[test]
+    fn close_drains_backlog_before_none() {
+        let q = BoundedQueue::new(8);
+        q.push("a").unwrap();
+        q.push("b").unwrap();
+        q.close();
+        assert_eq!(q.pop(), Some("a"));
+        assert_eq!(q.pop(), Some("b"));
+        assert_eq!(q.pop(), None);
+    }
+
+    #[test]
+    fn close_wakes_blocked_poppers() {
+        let q: BoundedQueue<u32> = BoundedQueue::new(2);
+        run_threads(4, |tid| {
+            if tid == 0 {
+                std::thread::sleep(std::time::Duration::from_millis(20));
+                q.close();
+            } else {
+                assert_eq!(q.pop(), None);
+            }
+        });
+    }
+
+    #[test]
+    fn close_on_drop_guard_closes() {
+        let q: BoundedQueue<u32> = BoundedQueue::new(1);
+        {
+            let _guard = CloseOnDrop(&q);
+        }
+        assert!(q.push(1).is_err());
+    }
+}

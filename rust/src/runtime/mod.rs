@@ -4,6 +4,10 @@
 //! hot path. Python never runs at request time — the HLO text is compiled
 //! by the in-process PJRT CPU client and executed directly.
 
+#[cfg(feature = "xla")]
+pub mod ems_xla;
+#[cfg(not(feature = "xla"))]
+#[path = "ems_stub.rs"]
 pub mod ems_xla;
 pub mod manifest;
 

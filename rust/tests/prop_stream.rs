@@ -1,0 +1,128 @@
+//! Property tests for the streaming ingest→match pipeline: for arbitrary
+//! random graphs, matching over ANY chunking and ANY permutation of the
+//! edge stream must verify as a valid maximal matching against the
+//! materialized union graph — i.e. the chunk driver is behaviorally
+//! interchangeable with the CSR driver, for every delivery order.
+
+use skipper::graph::builder::{build, to_edge_list, BuildOptions};
+use skipper::graph::gen::{rmat, GenConfig};
+use skipper::graph::stream::{BatchEdgeSource, CsrEdgeSource};
+use skipper::graph::EdgeList;
+use skipper::matching::streaming::StreamingSkipper;
+use skipper::matching::{verify, MaximalMatcher};
+use skipper::util::qcheck::{check, Config};
+use skipper::util::rng::Xoshiro256pp;
+use skipper::VertexId;
+
+#[derive(Clone, Debug)]
+struct StreamCase {
+    n: usize,
+    edges: Vec<(VertexId, VertexId)>,
+    chunk_edges: usize,
+    threads: usize,
+}
+
+/// Random multigraph (self-loops and duplicates allowed) with a random
+/// stream permutation, chunk size, and consumer count.
+fn arb_case(rng: &mut Xoshiro256pp) -> StreamCase {
+    let n = 2 + rng.next_usize(500);
+    let m = rng.next_usize(4 * n + 1);
+    let mut edges: Vec<(VertexId, VertexId)> = (0..m)
+        .map(|_| (rng.next_usize(n) as VertexId, rng.next_usize(n) as VertexId))
+        .collect();
+    rng.shuffle(&mut edges);
+    StreamCase {
+        n,
+        edges,
+        chunk_edges: 1 + rng.next_usize(300),
+        threads: 1 + rng.next_usize(4),
+    }
+}
+
+fn union_graph(n: usize, edges: &[(VertexId, VertexId)]) -> skipper::graph::CsrGraph {
+    let mut el = EdgeList::new(n);
+    for &(u, v) in edges {
+        el.push(u, v);
+    }
+    build(&el, BuildOptions::default())
+}
+
+#[test]
+fn any_chunking_and_permutation_is_maximal_on_the_union_graph() {
+    check(
+        &Config { cases: 48, ..Default::default() },
+        arb_case,
+        |case| {
+            let sk = StreamingSkipper::new(case.threads).with_chunk_edges(case.chunk_edges);
+            let rep = sk
+                .run(BatchEdgeSource::new(case.n, &case.edges))
+                .map_err(|e| format!("stream run failed: {e}"))?;
+            if rep.edges_streamed != case.edges.len() as u64 {
+                return Err(format!(
+                    "streamed {} of {} edges",
+                    rep.edges_streamed,
+                    case.edges.len()
+                ));
+            }
+            let g = union_graph(case.n, &case.edges);
+            verify::check(&g, &rep.matching)
+                .map_err(|e| format!("chunk={} t={}: {e}", case.chunk_edges, case.threads))
+        },
+    );
+}
+
+#[test]
+fn streamed_and_csr_drivers_agree_on_size_band() {
+    // both drivers are maximal on the same graph, so sizes are within 2x
+    check(
+        &Config { cases: 24, ..Default::default() },
+        |rng| {
+            let scale = 7 + rng.next_usize(3) as u32;
+            let g = rmat::generate(&GenConfig {
+                scale,
+                avg_degree: 2 + rng.next_usize(7) as u32,
+                seed: rng.next_u64(),
+            });
+            (g, 1 + rng.next_usize(3))
+        },
+        |(g, threads)| {
+            let csr_m = skipper::matching::skipper::Skipper::new(*threads).run(g);
+            let rep = StreamingSkipper::new(*threads)
+                .with_chunk_edges(777)
+                .run(CsrEdgeSource::new(g))
+                .map_err(|e| format!("stream run failed: {e}"))?;
+            verify::check(g, &rep.matching).map_err(|e| format!("streamed: {e}"))?;
+            let (a, b) = (csr_m.len().max(1), rep.matching.len().max(1));
+            if a * 2 < b || b * 2 < a {
+                return Err(format!("sizes diverge: csr {a} vs stream {b}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn canonical_edge_stream_of_a_real_graph_is_maximal() {
+    // stream each undirected edge exactly once (canonical u<v order),
+    // randomly permuted — the non-symmetrized single-copy regime of §V-C
+    check(
+        &Config { cases: 16, ..Default::default() },
+        |rng| {
+            let g = rmat::generate(&GenConfig {
+                scale: 8,
+                avg_degree: 4,
+                seed: rng.next_u64(),
+            });
+            let mut edges = to_edge_list(&g).edges;
+            rng.shuffle(&mut edges);
+            (g, edges, 1 + rng.next_usize(200))
+        },
+        |(g, edges, chunk)| {
+            let rep = StreamingSkipper::new(2)
+                .with_chunk_edges(*chunk)
+                .run(BatchEdgeSource::new(g.num_vertices(), edges))
+                .map_err(|e| format!("stream run failed: {e}"))?;
+            verify::check(g, &rep.matching).map_err(|e| format!("chunk={chunk}: {e}"))
+        },
+    );
+}
