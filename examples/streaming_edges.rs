@@ -94,7 +94,7 @@ fn main() {
         el.push(u, v);
     }
     let union = build(&el, BuildOptions::default());
-    verify::check(&union, &inc.matching()).expect("incrementally-maintained matching is maximal");
+    verify::check(&union, &inc.to_matching()).expect("incrementally-maintained matching is maximal");
     println!(
         "[3] incremental twin: {} edges over 10 batches -> |M|={} (same core, same pipeline; verified maximal)",
         all_edges.len(),

@@ -1,0 +1,99 @@
+//! Bench: fully dynamic churn throughput and repair cost.
+//!
+//! Three questions, measured on an RMAT population at
+//! `SKIPPER_BENCH_SCALE`-dependent size:
+//!   1. insert-only epochs (the §V-C incremental regime) — updates/s,
+//!   2. 50/50 insert/delete epochs — updates/s including repair sweeps,
+//!   3. repair scaling — how repair work grows with the delete batch size
+//!      (the sublinearity claim: fraction of live edges, not |E|).
+
+mod common;
+
+use skipper::coordinator::datasets::Scale;
+use skipper::dynamic::churn::ChurnGen;
+use skipper::dynamic::{DynamicMatcher, Update};
+use skipper::util::benchlib::{bench, BenchConfig};
+use skipper::util::rng::Xoshiro256pp;
+
+fn main() {
+    let scale = common::bench_scale();
+    let exp: u32 = match scale {
+        Scale::Tiny => 12,
+        Scale::Small => 15,
+        Scale::Medium => 18,
+        Scale::Large => 20,
+    };
+    let gen = ChurnGen::Rmat { scale: exp, avg_degree: 8 };
+    let n = gen.num_vertices();
+    let population = gen.population(7);
+    eprintln!(
+        "[dynamic_churn] rmat {}: |V|={n} population={} edges",
+        scale.name(),
+        population.len()
+    );
+    let cfg = BenchConfig { warmup_iters: 1, min_iters: 3, max_seconds: 8.0 };
+    let threads = 4;
+    let batch = 20_000.min(population.len() / 4).max(1);
+
+    // 1. insert-only epochs over the whole population
+    let r = bench("dynamic/insert-only-t4", &cfg, || {
+        let mut m = DynamicMatcher::new(n, threads);
+        for chunk in population.chunks(batch) {
+            let ups: Vec<Update> = chunk.iter().map(|&(u, v)| Update::Insert(u, v)).collect();
+            m.apply_epoch(&ups).expect("insert epoch");
+        }
+        m.matched_vertices()
+    });
+    println!(
+        "{}  ({:.2} Mupdates/s)",
+        r.row(),
+        population.len() as f64 / r.median_s / 1e6
+    );
+
+    // 2. 50/50 churn epochs against a warm engine
+    let mut warm = DynamicMatcher::new(n, threads);
+    let warm_ups: Vec<Update> = population.iter().map(|&(u, v)| Update::Insert(u, v)).collect();
+    warm.apply_epoch(&warm_ups).expect("warmup");
+    let mut rng = Xoshiro256pp::new(99);
+    let live: Vec<(u32, u32)> = warm.live_edge_iter().collect();
+    let churn_epochs = 5usize;
+    let r = bench("dynamic/churn-50-50-t4", &cfg, || {
+        let mut total_repair = 0u64;
+        for e in 0..churn_epochs {
+            let mut ups: Vec<Update> = Vec::with_capacity(batch);
+            for i in 0..batch / 2 {
+                let (u, v) = live[(rng.next_usize(live.len()) + e + i) % live.len()];
+                ups.push(Update::Delete(u, v));
+                ups.push(Update::Insert(u, v));
+            }
+            let rep = warm.apply_epoch(&ups).expect("churn epoch");
+            total_repair += rep.repair_edges as u64;
+        }
+        total_repair
+    });
+    println!(
+        "{}  ({:.2} Mupdates/s)",
+        r.row(),
+        (churn_epochs * batch) as f64 / r.median_s / 1e6
+    );
+
+    // 3. repair scaling with delete-batch size
+    println!("repair scaling (delete batch -> repair edges / live edges):");
+    for del in [100usize, 1000, 10_000] {
+        let mut m = DynamicMatcher::new(n, threads);
+        m.apply_epoch(&warm_ups).expect("warmup");
+        let live: Vec<(u32, u32)> = m.live_edge_iter().collect();
+        let del = del.min(live.len());
+        let ups: Vec<Update> = (0..del).map(|i| {
+            let (u, v) = live[(i * 7919) % live.len()];
+            Update::Delete(u, v)
+        }).collect();
+        let rep = m.apply_epoch(&ups).expect("delete epoch");
+        println!(
+            "  del={del:>6}: repair_edges={:>8} live={:>9} frac={:.5}",
+            rep.repair_edges,
+            rep.live_edges,
+            rep.repair_fraction()
+        );
+    }
+}

@@ -1,0 +1,307 @@
+//! Compact mutable adjacency sidecar for the dynamic engine.
+//!
+//! The Skipper core deliberately keeps *no* topology — one state byte per
+//! vertex is the paper's whole memory story. That is exactly why deletions
+//! need a sidecar: when a matched edge disappears, the repair sweep must
+//! re-run the reservation state machine over the freed endpoints' *surviving*
+//! incident edges, and something has to remember what those are.
+//!
+//! [`DynamicAdjacency`] is that something: per-vertex edge lists that grow
+//! in amortized-O(1) pushes, delete by **tombstoning** (the slot is
+//! overwritten with [`INVALID_VERTEX`] instead of shifting the tail), and
+//! reclaim tombstones with **periodic per-vertex compaction** once they
+//! outnumber the live entries. Deletes therefore cost one scan of the
+//! endpoint's list, inserts cost a membership scan (the structure maintains
+//! *set* semantics — the live graph either has an edge or it doesn't, which
+//! is what the delete path and the maximality verifier need), and iteration
+//! skips tombstones in place. Self-loops are rejected at insert: the matcher
+//! skips them anyway (Algorithm 1 lines 6–7), so they can never affect
+//! maximality and keeping them live would only pollute repair sweeps.
+
+use crate::{VertexId, INVALID_VERTEX};
+
+/// Per-vertex slots start compacting once at least this many tombstones
+/// accumulate (and tombstones outnumber live entries) — small lists just
+/// tolerate their holes.
+const COMPACT_MIN_DEAD: u32 = 8;
+
+#[derive(Default)]
+struct AdjList {
+    /// Neighbor slots; deleted ones hold [`INVALID_VERTEX`].
+    slots: Vec<VertexId>,
+    /// Tombstone count in `slots`.
+    dead: u32,
+}
+
+impl AdjList {
+    #[inline]
+    fn live_len(&self) -> usize {
+        self.slots.len() - self.dead as usize
+    }
+
+    fn contains(&self, v: VertexId) -> bool {
+        self.slots.iter().any(|&s| s == v)
+    }
+
+    fn push(&mut self, v: VertexId) {
+        // Reuse a tombstone when one is handy at the tail, else append.
+        if self.dead > 0 && self.slots.last() == Some(&INVALID_VERTEX) {
+            *self.slots.last_mut().unwrap() = v;
+            self.dead -= 1;
+        } else {
+            self.slots.push(v);
+        }
+    }
+
+    /// Tombstone the first slot holding `v`; false if absent.
+    fn remove(&mut self, v: VertexId) -> bool {
+        match self.slots.iter().position(|&s| s == v) {
+            Some(i) => {
+                self.slots[i] = INVALID_VERTEX;
+                self.dead += 1;
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Drop tombstones in place when they dominate the list. The capacity
+    /// is deliberately kept: under steady churn the list regrows to the
+    /// same size, and shrinking here would just thrash the allocator on
+    /// every hub compaction.
+    fn maybe_compact(&mut self) -> bool {
+        if self.dead >= COMPACT_MIN_DEAD && (self.dead as usize) > self.live_len() {
+            self.slots.retain(|&s| s != INVALID_VERTEX);
+            self.dead = 0;
+            true
+        } else {
+            false
+        }
+    }
+}
+
+/// Mutable adjacency over a fixed vertex universe `0..num_vertices`, with
+/// set semantics on undirected edges (each edge stored in both endpoint
+/// lists) and tombstoned deletes.
+pub struct DynamicAdjacency {
+    lists: Vec<AdjList>,
+    live_edges: u64,
+    compactions: u64,
+}
+
+impl DynamicAdjacency {
+    pub fn new(num_vertices: usize) -> Self {
+        let mut lists = Vec::new();
+        lists.resize_with(num_vertices, AdjList::default);
+        Self { lists, live_edges: 0, compactions: 0 }
+    }
+
+    #[inline]
+    pub fn num_vertices(&self) -> usize {
+        self.lists.len()
+    }
+
+    /// Live undirected edge count.
+    #[inline]
+    pub fn num_live_edges(&self) -> u64 {
+        self.live_edges
+    }
+
+    /// Tombstoned slots currently awaiting compaction (both directions).
+    pub fn tombstones(&self) -> u64 {
+        self.lists.iter().map(|l| l.dead as u64).sum()
+    }
+
+    /// Per-vertex compactions performed so far.
+    pub fn compactions(&self) -> u64 {
+        self.compactions
+    }
+
+    #[inline]
+    pub fn live_degree(&self, v: VertexId) -> usize {
+        self.lists[v as usize].live_len()
+    }
+
+    pub fn contains(&self, u: VertexId, v: VertexId) -> bool {
+        let (u, v) = (u as usize, v as usize);
+        if u >= self.lists.len() || v >= self.lists.len() {
+            return false;
+        }
+        // scan the sparser endpoint
+        if self.lists[u].slots.len() <= self.lists[v].slots.len() {
+            self.lists[u].contains(v as VertexId)
+        } else {
+            self.lists[v].contains(u as VertexId)
+        }
+    }
+
+    /// Insert edge `{u,v}`; false if it is a self-loop, out of range, or
+    /// already live.
+    pub fn insert(&mut self, u: VertexId, v: VertexId) -> bool {
+        if u == v
+            || u as usize >= self.lists.len()
+            || v as usize >= self.lists.len()
+            || self.contains(u, v)
+        {
+            return false;
+        }
+        self.lists[u as usize].push(v);
+        self.lists[v as usize].push(u);
+        self.live_edges += 1;
+        true
+    }
+
+    /// Delete edge `{u,v}`; false if it was not live. Compacts either
+    /// endpoint's list when its tombstones dominate.
+    pub fn delete(&mut self, u: VertexId, v: VertexId) -> bool {
+        if u == v || u as usize >= self.lists.len() || v as usize >= self.lists.len() {
+            return false;
+        }
+        if !self.lists[u as usize].remove(v) {
+            return false;
+        }
+        let removed = self.lists[v as usize].remove(u);
+        debug_assert!(removed, "adjacency asymmetry: ({u},{v}) stored one-way");
+        self.live_edges -= 1;
+        for w in [u, v] {
+            if self.lists[w as usize].maybe_compact() {
+                self.compactions += 1;
+            }
+        }
+        true
+    }
+
+    /// Live neighbors of `v` (tombstones skipped), in slot order.
+    pub fn live_neighbors(&self, v: VertexId) -> impl Iterator<Item = VertexId> + '_ {
+        self.lists[v as usize]
+            .slots
+            .iter()
+            .copied()
+            .filter(|&s| s != INVALID_VERTEX)
+    }
+
+    /// All live edges, canonicalized `(min, max)`, each exactly once — the
+    /// input [`crate::matching::verify::verify_maximal_dynamic`] wants.
+    pub fn live_edge_iter(&self) -> impl Iterator<Item = (VertexId, VertexId)> + '_ {
+        self.lists.iter().enumerate().flat_map(|(u, l)| {
+            let u = u as VertexId;
+            l.slots
+                .iter()
+                .copied()
+                .filter(move |&v| v != INVALID_VERTEX && u < v)
+                .map(move |v| (u, v))
+        })
+    }
+
+    /// Resident bytes of the sidecar (slot storage only).
+    pub fn memory_bytes(&self) -> usize {
+        self.lists
+            .iter()
+            .map(|l| l.slots.capacity() * std::mem::size_of::<VertexId>())
+            .sum::<usize>()
+            + self.lists.capacity() * std::mem::size_of::<AdjList>()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn insert_delete_roundtrip_with_set_semantics() {
+        let mut a = DynamicAdjacency::new(5);
+        assert!(a.insert(0, 1));
+        assert!(!a.insert(1, 0), "reinsert of the reverse orientation");
+        assert!(a.insert(1, 2));
+        assert_eq!(a.num_live_edges(), 2);
+        assert!(a.contains(0, 1) && a.contains(1, 0));
+        assert!(a.delete(1, 0));
+        assert!(!a.delete(0, 1), "double delete");
+        assert_eq!(a.num_live_edges(), 1);
+        assert!(!a.contains(0, 1));
+        assert_eq!(a.live_degree(1), 1);
+        assert_eq!(a.live_neighbors(1).collect::<Vec<_>>(), vec![2]);
+    }
+
+    #[test]
+    fn self_loops_and_out_of_range_rejected() {
+        let mut a = DynamicAdjacency::new(3);
+        assert!(!a.insert(1, 1));
+        assert!(!a.insert(0, 7));
+        assert!(!a.delete(0, 7));
+        assert_eq!(a.num_live_edges(), 0);
+    }
+
+    #[test]
+    fn tombstones_are_skipped_and_reused() {
+        let mut a = DynamicAdjacency::new(4);
+        a.insert(0, 1);
+        a.insert(0, 2);
+        a.insert(0, 3);
+        a.delete(0, 3); // tail slot becomes a tombstone...
+        assert_eq!(a.tombstones(), 2);
+        a.insert(0, 3); // ...and is reused by the next push
+        assert_eq!(a.live_degree(0), 3);
+        a.delete(0, 2);
+        assert_eq!(
+            a.live_neighbors(0).collect::<Vec<_>>(),
+            vec![1, 3],
+            "tombstone skipped mid-list"
+        );
+    }
+
+    #[test]
+    fn compaction_reclaims_dominating_tombstones() {
+        let n = 64;
+        let mut a = DynamicAdjacency::new(n + 1);
+        for v in 1..=n {
+            a.insert(0, v as VertexId);
+        }
+        for v in 1..=n - 4 {
+            a.delete(0, v as VertexId);
+        }
+        assert!(a.compactions() > 0, "hub list should have compacted");
+        assert_eq!(a.live_degree(0), 4);
+        // vertex 0's list really shrank
+        assert!(a.lists[0].slots.len() <= 8, "slots {}", a.lists[0].slots.len());
+        assert_eq!(a.num_live_edges(), 4);
+    }
+
+    #[test]
+    fn live_edge_iter_is_canonical_and_complete() {
+        let mut a = DynamicAdjacency::new(6);
+        for &(u, v) in &[(3u32, 1u32), (1, 2), (4, 5), (2, 3)] {
+            a.insert(u, v);
+        }
+        a.delete(1, 2);
+        let mut edges: Vec<_> = a.live_edge_iter().collect();
+        edges.sort_unstable();
+        assert_eq!(edges, vec![(1, 3), (2, 3), (4, 5)]);
+    }
+
+    #[test]
+    fn churn_keeps_counts_consistent() {
+        use crate::util::rng::Xoshiro256pp;
+        let n = 50;
+        let mut a = DynamicAdjacency::new(n);
+        let mut reference: std::collections::HashSet<(VertexId, VertexId)> =
+            std::collections::HashSet::new();
+        let mut rng = Xoshiro256pp::new(7);
+        for _ in 0..20_000 {
+            let u = rng.next_usize(n) as VertexId;
+            let v = rng.next_usize(n) as VertexId;
+            let key = (u.min(v), u.max(v));
+            if rng.next_usize(2) == 0 {
+                assert_eq!(a.insert(u, v), u != v && reference.insert(key));
+            } else {
+                assert_eq!(a.delete(u, v), reference.remove(&key));
+            }
+        }
+        assert_eq!(a.num_live_edges(), reference.len() as u64);
+        let mut live: Vec<_> = a.live_edge_iter().collect();
+        live.sort_unstable();
+        let mut want: Vec<_> = reference.into_iter().collect();
+        want.sort_unstable();
+        assert_eq!(live, want);
+    }
+}

@@ -1,0 +1,340 @@
+//! Insert/delete churn driver over the [`DynamicMatcher`] — the shared
+//! workload loop behind `skipper-cli churn`, the `dynamic` coordinator
+//! experiment, and `benches/dynamic_churn.rs`.
+//!
+//! The schedule is generator-faithful: the edge *population* comes from one
+//! of the synthetic generators, so degree structure (power-law hubs for
+//! RMAT/BA, bounded degree for grids) carries into the churn. A warmup
+//! phase inserts the population in a few large epochs; each churn epoch
+//! then mixes `batch × delete_frac` deletions of uniformly random live
+//! edges with insertions drawn from the not-yet-live population (deleted
+//! edges are recycled once the population runs dry, so arbitrarily long
+//! runs never starve).
+
+use super::engine::{DynamicMatcher, EpochReport, Update};
+use crate::graph::gen::{barabasi_albert, erdos_renyi, grid, rmat, GenConfig};
+use crate::util::rng::Xoshiro256pp;
+use crate::VertexId;
+
+/// Which synthetic generator supplies the churn's edge population.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ChurnGen {
+    /// Erdős–Rényi G(n, m).
+    Er { n: usize, m: usize },
+    /// Barabási–Albert preferential attachment.
+    Ba { n: usize, m_per_vertex: usize },
+    /// 2-D grid (rows × cols), no torus wrap.
+    Grid { rows: usize, cols: usize },
+    /// RMAT with Graph500 probabilities.
+    Rmat { scale: u32, avg_degree: u32 },
+}
+
+impl ChurnGen {
+    /// Parse a generator family name with size knobs.
+    pub fn parse(name: &str, scale: u32, avg_degree: u32) -> Result<Self, String> {
+        let n = 1usize << scale;
+        Ok(match name {
+            "er" => ChurnGen::Er { n, m: n * avg_degree as usize },
+            "ba" => ChurnGen::Ba { n, m_per_vertex: (avg_degree as usize / 2).max(1) },
+            "grid" => {
+                let side = (n as f64).sqrt().ceil() as usize;
+                ChurnGen::Grid { rows: side, cols: side }
+            }
+            "rmat" => ChurnGen::Rmat { scale, avg_degree },
+            other => return Err(format!("unknown generator {other:?} (er|ba|grid|rmat)")),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ChurnGen::Er { .. } => "er",
+            ChurnGen::Ba { .. } => "ba",
+            ChurnGen::Grid { .. } => "grid",
+            ChurnGen::Rmat { .. } => "rmat",
+        }
+    }
+
+    pub fn num_vertices(&self) -> usize {
+        match *self {
+            ChurnGen::Er { n, .. } | ChurnGen::Ba { n, .. } => n,
+            ChurnGen::Grid { rows, cols } => rows * cols,
+            ChurnGen::Rmat { scale, .. } => 1usize << scale,
+        }
+    }
+
+    /// Materialize the canonical deduplicated edge population.
+    pub fn population(&self, seed: u64) -> Vec<(VertexId, VertexId)> {
+        let raw = match *self {
+            ChurnGen::Er { n, m } => erdos_renyi::edges(n, m, seed).edges,
+            ChurnGen::Ba { n, m_per_vertex } => barabasi_albert::edges(n, m_per_vertex, seed).edges,
+            ChurnGen::Grid { rows, cols } => grid::edges(rows, cols, false).edges,
+            ChurnGen::Rmat { scale, avg_degree } => {
+                rmat::edges_with_probs(
+                    &GenConfig { scale, avg_degree, seed },
+                    rmat::GRAPH500_PROBS,
+                )
+                .edges
+            }
+        };
+        let mut canon: Vec<(VertexId, VertexId)> = raw
+            .into_iter()
+            .filter(|&(u, v)| u != v)
+            .map(|(u, v)| (u.min(v), u.max(v)))
+            .collect();
+        canon.sort_unstable();
+        canon.dedup();
+        canon
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct ChurnConfig {
+    pub gen: ChurnGen,
+    pub seed: u64,
+    /// Matcher threads.
+    pub threads: usize,
+    /// Churn epochs after warmup.
+    pub epochs: usize,
+    /// Updates per churn epoch.
+    pub batch: usize,
+    /// Fraction of each batch that deletes live edges (0.5 = the 50/50
+    /// schedule of the acceptance run).
+    pub delete_frac: f64,
+    /// Warmup epochs that insert the initial population.
+    pub warmup_epochs: usize,
+    /// Verify maximality over the live set after every epoch.
+    pub verify: bool,
+}
+
+impl ChurnConfig {
+    pub fn new(gen: ChurnGen) -> Self {
+        Self {
+            gen,
+            seed: 1,
+            threads: 4,
+            epochs: 10,
+            batch: 10_000,
+            delete_frac: 0.5,
+            warmup_epochs: 8,
+            verify: true,
+        }
+    }
+}
+
+/// Outcome of one epoch, as handed to the per-epoch observer.
+pub struct ChurnEpoch {
+    pub report: EpochReport,
+    pub warmup: bool,
+    /// `None` when verification is off.
+    pub verified: Option<Result<(), String>>,
+}
+
+/// Run summary across all epochs.
+#[derive(Clone, Debug, Default)]
+pub struct ChurnSummary {
+    pub epochs: usize,
+    pub warmup_epochs: usize,
+    pub total_inserts: usize,
+    pub total_deletes: usize,
+    pub total_repair_edges: usize,
+    pub destroyed_pairs: usize,
+    /// Mean/max repair fraction over the *churn* (post-warmup) epochs.
+    pub repair_frac_mean: f64,
+    pub repair_frac_max: f64,
+    /// Per-epoch wall seconds, churn epochs only (for p50/p99 reporting).
+    pub epoch_wall_s: Vec<f64>,
+    pub final_live_edges: u64,
+    pub final_matched_vertices: usize,
+    pub verified_epochs: usize,
+}
+
+/// Drive a full warmup + churn schedule, invoking `observe` after every
+/// epoch. Fails on the first verification violation.
+pub fn run_churn(
+    cfg: &ChurnConfig,
+    mut observe: impl FnMut(&ChurnEpoch),
+) -> Result<ChurnSummary, String> {
+    let n = cfg.gen.num_vertices();
+    let mut rng = Xoshiro256pp::new(cfg.seed ^ 0x5eed);
+    let mut pending = cfg.gen.population(cfg.seed);
+    rng.shuffle(&mut pending);
+    if pending.is_empty() {
+        return Err("generator produced no edges".into());
+    }
+    let mut engine = DynamicMatcher::new(n, cfg.threads);
+    let mut live: Vec<(VertexId, VertexId)> = Vec::with_capacity(pending.len());
+    let mut graveyard: Vec<(VertexId, VertexId)> = Vec::new();
+    let mut summary = ChurnSummary::default();
+
+    let mut step = |engine: &mut DynamicMatcher,
+                    updates: &[Update],
+                    warmup: bool,
+                    summary: &mut ChurnSummary,
+                    observe: &mut dyn FnMut(&ChurnEpoch)|
+     -> Result<(), String> {
+        let report = engine.apply_epoch(updates)?;
+        summary.total_inserts += report.inserts;
+        summary.total_deletes += report.deletes;
+        summary.total_repair_edges += report.repair_edges;
+        summary.destroyed_pairs += report.destroyed_pairs;
+        if warmup {
+            summary.warmup_epochs += 1;
+        } else {
+            summary.epochs += 1;
+            summary.repair_frac_mean += report.repair_fraction();
+            summary.repair_frac_max = summary.repair_frac_max.max(report.repair_fraction());
+            summary.epoch_wall_s.push(report.wall_s);
+        }
+        let verified = cfg.verify.then(|| engine.verify());
+        let failure = match &verified {
+            Some(Err(e)) => Some(e.clone()),
+            _ => None,
+        };
+        if verified.is_some() && failure.is_none() {
+            summary.verified_epochs += 1;
+        }
+        let epoch = report.epoch;
+        // the observer sees the failing epoch too (CLI prints verify=FAIL)
+        // before the run aborts
+        observe(&ChurnEpoch { report, warmup, verified });
+        match failure {
+            Some(e) => Err(format!("epoch {epoch}: maximality violated: {e}")),
+            None => Ok(()),
+        }
+    };
+
+    // --- warmup: insert the population in a few large epochs (0 = start
+    // churning against the empty graph; inserts then come from `pending`) --
+    if cfg.warmup_epochs > 0 {
+        let per_warmup = pending.len().div_ceil(cfg.warmup_epochs);
+        for _ in 0..cfg.warmup_epochs {
+            if pending.is_empty() {
+                break;
+            }
+            let take = per_warmup.min(pending.len());
+            let batch: Vec<Update> = pending
+                .drain(pending.len() - take..)
+                .map(|(u, v)| Update::Insert(u, v))
+                .collect();
+            for upd in &batch {
+                if let Update::Insert(u, v) = *upd {
+                    live.push((u, v));
+                }
+            }
+            step(&mut engine, &batch, true, &mut summary, &mut observe)?;
+        }
+    }
+
+    // --- churn: mixed delete/insert epochs --------------------------------
+    for _ in 0..cfg.epochs {
+        let deletes = ((cfg.batch as f64 * cfg.delete_frac) as usize).min(live.len());
+        let inserts = cfg.batch - deletes;
+        let mut updates: Vec<Update> = Vec::with_capacity(cfg.batch);
+        for _ in 0..deletes {
+            let i = rng.next_usize(live.len());
+            let (u, v) = live.swap_remove(i);
+            graveyard.push((u, v));
+            updates.push(Update::Delete(u, v));
+        }
+        for _ in 0..inserts {
+            if pending.is_empty() {
+                // recycle deleted edges so long runs never starve — but not
+                // ones deleted in THIS epoch (insert-after-delete within an
+                // epoch is legal but would skew the schedule's intent)
+                let recycle_from = graveyard.len().saturating_sub(deletes);
+                if recycle_from == 0 {
+                    break;
+                }
+                pending.extend(graveyard.drain(..recycle_from));
+                rng.shuffle(&mut pending);
+            }
+            match pending.pop() {
+                Some((u, v)) => {
+                    live.push((u, v));
+                    updates.push(Update::Insert(u, v));
+                }
+                None => break,
+            }
+        }
+        rng.shuffle(&mut updates);
+        step(&mut engine, &updates, false, &mut summary, &mut observe)?;
+    }
+
+    if summary.epochs > 0 {
+        summary.repair_frac_mean /= summary.epochs as f64;
+    }
+    summary.final_live_edges = engine.num_live_edges();
+    summary.final_matched_vertices = engine.matched_vertices();
+    Ok(summary)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn churn_runs_verified_on_every_generator_family() {
+        for gen in [
+            ChurnGen::Er { n: 512, m: 2048 },
+            ChurnGen::Ba { n: 512, m_per_vertex: 3 },
+            ChurnGen::Grid { rows: 24, cols: 24 },
+            ChurnGen::Rmat { scale: 9, avg_degree: 4 },
+        ] {
+            let cfg = ChurnConfig {
+                epochs: 5,
+                batch: 200,
+                warmup_epochs: 3,
+                threads: 2,
+                ..ChurnConfig::new(gen)
+            };
+            let mut seen = 0;
+            let summary = run_churn(&cfg, |e| {
+                seen += 1;
+                assert!(matches!(e.verified, Some(Ok(()))), "{:?}", gen);
+            })
+            .unwrap_or_else(|e| panic!("{gen:?}: {e}"));
+            assert_eq!(summary.epochs, 5, "{gen:?}");
+            assert_eq!(seen, summary.epochs + summary.warmup_epochs);
+            assert!(summary.final_live_edges > 0);
+            assert!(summary.final_matched_vertices > 0);
+        }
+    }
+
+    #[test]
+    fn fifty_fifty_schedule_holds_live_count_steady() {
+        let cfg = ChurnConfig {
+            epochs: 6,
+            batch: 100,
+            delete_frac: 0.5,
+            warmup_epochs: 2,
+            threads: 1,
+            ..ChurnConfig::new(ChurnGen::Er { n: 400, m: 1600 })
+        };
+        let before_after: std::cell::RefCell<Vec<u64>> = Default::default();
+        let summary = run_churn(&cfg, |e| {
+            if !e.warmup {
+                before_after.borrow_mut().push(e.report.live_edges);
+            }
+        })
+        .unwrap();
+        let counts = before_after.into_inner();
+        let (min, max) = (counts.iter().min().unwrap(), counts.iter().max().unwrap());
+        assert!(max - min <= 2 * cfg.batch as u64, "live count drifted: {counts:?}");
+        assert!(summary.repair_frac_mean > 0.0, "deletes must cause some repair");
+        assert!(summary.repair_frac_max <= 1.0);
+    }
+
+    #[test]
+    fn gen_parse_families() {
+        assert_eq!(
+            ChurnGen::parse("rmat", 10, 8).unwrap(),
+            ChurnGen::Rmat { scale: 10, avg_degree: 8 }
+        );
+        assert_eq!(
+            ChurnGen::parse("er", 8, 4).unwrap(),
+            ChurnGen::Er { n: 256, m: 1024 }
+        );
+        assert!(matches!(ChurnGen::parse("grid", 8, 4).unwrap(), ChurnGen::Grid { .. }));
+        assert!(ChurnGen::parse("nope", 8, 4).is_err());
+    }
+}

@@ -1,0 +1,484 @@
+//! Epoch-based fully dynamic maximal-matching engine.
+//!
+//! ## The repair-sweep invariant
+//!
+//! Paper §V-C observes that Skipper is *incremental in expectation*: an
+//! insertion is one `process_edge` call against the live vertex states.
+//! Deletions are the part the single-pass story doesn't cover — removing a
+//! matched edge leaves both endpoints free, and any of their surviving
+//! neighbors that relied on them for coverage may now violate maximality.
+//!
+//! The engine's epoch loop restores the invariant with work proportional to
+//! the *affected neighborhoods*, never a global recompute:
+//!
+//! 1. **Mutate** (sequential): apply the epoch's updates to the
+//!    [`DynamicAdjacency`] in arrival order. Each delete that destroys a
+//!    matched pair releases both endpoints in the [`SkipperCore`]
+//!    (`MCHD → ACC`) and records them as *freed*.
+//! 2. **Insert pass** (parallel): the epoch's surviving new edges go through
+//!    the ordinary [`StreamingSkipper`] chunk driver — the same
+//!    `process_chunk` fast path every other driver uses.
+//! 3. **Repair sweep** (parallel): the surviving incident edges of every
+//!    still-unmatched freed vertex are re-run through the same Algorithm-1
+//!    reservation state machine.
+//!
+//! Why this suffices: matched vertices only become free in step 1, and only
+//! the recorded freed vertices do. Take any live edge `(a,b)` with both
+//! endpoints free after the epoch. If it was inserted this epoch, step 2
+//! processed it after all frees — `process_edge` leaves an edge unmatched
+//! only by observing a matched endpoint, and matched states are stable for
+//! the rest of the epoch; contradiction. If it predates the epoch, the
+//! pre-epoch matching was maximal, so one endpoint was matched then and must
+//! have been freed this epoch — so step 3 re-processed `(a,b)`;
+//! contradiction again. Hence the matching is maximal over the live edge
+//! set after every epoch, which is exactly what
+//! [`crate::matching::verify::verify_maximal_dynamic`] checks and
+//! `rust/tests/prop_dynamic.rs` hammers on.
+
+use super::adjacency::DynamicAdjacency;
+use crate::graph::stream::BatchEdgeSource;
+use crate::matching::core::SkipperCore;
+use crate::matching::streaming::StreamingSkipper;
+use crate::matching::{verify, MatchArena, BUFFER_EDGES};
+use crate::{VertexId, INVALID_VERTEX};
+use std::time::Instant;
+
+/// One mutation of the live edge set.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Update {
+    Insert(VertexId, VertexId),
+    Delete(VertexId, VertexId),
+}
+
+/// Telemetry of one applied epoch.
+#[derive(Clone, Debug, Default)]
+pub struct EpochReport {
+    pub epoch: u64,
+    /// Insert/delete updates received (before dedup against the live set).
+    pub inserts: usize,
+    pub deletes: usize,
+    /// Inserts that actually created a live edge and survived to the end of
+    /// the mutate phase.
+    pub inserted_live: usize,
+    /// Deletes that removed a live edge.
+    pub deleted_live: usize,
+    /// Matched pairs destroyed by deletes.
+    pub destroyed_pairs: usize,
+    /// Vertices released back to `ACC` (= 2 × destroyed pairs).
+    pub freed_vertices: usize,
+    /// Surviving incident edges the repair sweep re-processed.
+    pub repair_edges: usize,
+    /// Matches created this epoch (insert pass + repair sweep).
+    pub new_matches: usize,
+    /// JIT conflicts across both parallel passes.
+    pub conflicts: u64,
+    /// Live undirected edges after the epoch.
+    pub live_edges: u64,
+    /// Matched vertices after the epoch.
+    pub matched_vertices: usize,
+    pub wall_s: f64,
+}
+
+impl EpochReport {
+    /// Repair work as a fraction of the live edge set — the headline
+    /// "no global recompute" number: for small batches this stays far below
+    /// 1 because only affected neighborhoods are touched.
+    pub fn repair_fraction(&self) -> f64 {
+        self.repair_edges as f64 / (self.live_edges.max(1)) as f64
+    }
+}
+
+/// Fully dynamic maximal matching: a long-lived [`SkipperCore`] plus the
+/// adjacency sidecar, mutated in epochs of mixed inserts and deletes.
+pub struct DynamicMatcher {
+    core: SkipperCore,
+    adj: DynamicAdjacency,
+    /// `partner[v]` is `v`'s matched partner, [`INVALID_VERTEX`] when free.
+    partner: Vec<VertexId>,
+    driver: StreamingSkipper,
+    epoch: u64,
+    matched_vertices: usize,
+}
+
+impl DynamicMatcher {
+    pub fn new(num_vertices: usize, threads: usize) -> Self {
+        Self {
+            core: SkipperCore::new(num_vertices),
+            adj: DynamicAdjacency::new(num_vertices),
+            partner: vec![INVALID_VERTEX; num_vertices],
+            driver: StreamingSkipper::new(threads),
+            epoch: 0,
+            matched_vertices: 0,
+        }
+    }
+
+    #[inline]
+    pub fn num_vertices(&self) -> usize {
+        self.partner.len()
+    }
+
+    #[inline]
+    pub fn epochs_applied(&self) -> u64 {
+        self.epoch
+    }
+
+    #[inline]
+    pub fn num_live_edges(&self) -> u64 {
+        self.adj.num_live_edges()
+    }
+
+    #[inline]
+    pub fn matched_vertices(&self) -> usize {
+        self.matched_vertices
+    }
+
+    #[inline]
+    pub fn is_matched(&self, v: VertexId) -> bool {
+        self.partner[v as usize] != INVALID_VERTEX
+    }
+
+    /// `v`'s current partner, if matched.
+    pub fn partner(&self, v: VertexId) -> Option<VertexId> {
+        if (v as usize) < self.partner.len() && self.partner[v as usize] != INVALID_VERTEX {
+            Some(self.partner[v as usize])
+        } else {
+            None
+        }
+    }
+
+    /// Current matching as canonical `(min, max)` pairs.
+    pub fn matching_pairs(&self) -> Vec<(VertexId, VertexId)> {
+        self.partner
+            .iter()
+            .enumerate()
+            .filter_map(|(u, &p)| {
+                (p != INVALID_VERTEX && (u as VertexId) < p).then_some((u as VertexId, p))
+            })
+            .collect()
+    }
+
+    /// The live edge set (canonical, each edge once) — for verification and
+    /// the service's audit path.
+    pub fn live_edge_iter(&self) -> impl Iterator<Item = (VertexId, VertexId)> + '_ {
+        self.adj.live_edge_iter()
+    }
+
+    /// Adjacency-sidecar health for telemetry.
+    pub fn adjacency_bytes(&self) -> usize {
+        self.adj.memory_bytes()
+    }
+
+    pub fn adjacency_tombstones(&self) -> u64 {
+        self.adj.tombstones()
+    }
+
+    /// Full dynamic validity check: matching ⊆ live edges, endpoint-disjoint,
+    /// and maximal over the live set.
+    pub fn verify(&self) -> Result<(), String> {
+        verify::verify_maximal_dynamic(
+            self.num_vertices(),
+            self.adj.live_edge_iter(),
+            &self.matching_pairs(),
+        )
+    }
+
+    /// Apply one epoch of mixed updates. Update order within the batch is
+    /// respected against the live set (insert-then-delete of the same edge
+    /// in one epoch nets out to nothing). Errors on out-of-range vertices,
+    /// with no mutation applied.
+    pub fn apply_epoch(&mut self, updates: &[Update]) -> Result<EpochReport, String> {
+        let n = self.num_vertices();
+        if let Some(bad) = updates.iter().find(|u| {
+            let (Update::Insert(a, b) | Update::Delete(a, b)) = **u;
+            a as usize >= n || b as usize >= n
+        }) {
+            return Err(format!("update {bad:?} out of range (|V|={n})"));
+        }
+        let t0 = Instant::now();
+        self.epoch += 1;
+        let mut rep = EpochReport {
+            epoch: self.epoch,
+            ..EpochReport::default()
+        };
+
+        // --- phase 1: mutate the live set, free broken pairs -------------
+        let mut fresh: Vec<(VertexId, VertexId)> = Vec::new();
+        let mut freed: Vec<VertexId> = Vec::new();
+        for &upd in updates {
+            match upd {
+                Update::Insert(u, v) => {
+                    rep.inserts += 1;
+                    if self.adj.insert(u, v) {
+                        fresh.push((u.min(v), u.max(v)));
+                    }
+                }
+                Update::Delete(u, v) => {
+                    rep.deletes += 1;
+                    if self.adj.delete(u, v) {
+                        rep.deleted_live += 1;
+                        if self.partner[u as usize] == v {
+                            // the deleted edge was matched: both endpoints
+                            // re-enter the state machine
+                            self.partner[u as usize] = INVALID_VERTEX;
+                            self.partner[v as usize] = INVALID_VERTEX;
+                            self.core.release(u);
+                            self.core.release(v);
+                            self.matched_vertices -= 2;
+                            rep.destroyed_pairs += 1;
+                            freed.push(u);
+                            freed.push(v);
+                        }
+                    }
+                }
+            }
+        }
+        // An edge inserted then deleted within the epoch is in `fresh` but
+        // no longer live — it must not be offered to the matcher. An edge
+        // inserted, deleted, and re-inserted is in `fresh` twice — dedup.
+        fresh.sort_unstable();
+        fresh.dedup();
+        fresh.retain(|&(u, v)| self.adj.contains(u, v));
+        rep.inserted_live = fresh.len();
+
+        // --- phase 2: insert pass through the streaming fast path --------
+        let (m, c) = self.run_pass(&fresh);
+        rep.new_matches += m;
+        rep.conflicts += c;
+
+        // --- phase 3: repair sweep over affected neighborhoods -----------
+        let mut repair: Vec<(VertexId, VertexId)> = Vec::new();
+        freed.sort_unstable();
+        freed.dedup();
+        rep.freed_vertices = freed.len();
+        for &f in &freed {
+            // the insert pass may already have re-matched a freed vertex
+            if self.partner[f as usize] != INVALID_VERTEX {
+                continue;
+            }
+            for nb in self.adj.live_neighbors(f) {
+                repair.push((f.min(nb), f.max(nb)));
+            }
+        }
+        // both-endpoints-freed edges show up twice; fresh edges were just
+        // decided in phase 2 and need no second look
+        repair.sort_unstable();
+        repair.dedup();
+        rep.repair_edges = repair.len();
+        let (m, c) = self.run_pass(&repair);
+        rep.new_matches += m;
+        rep.conflicts += c;
+
+        rep.live_edges = self.adj.num_live_edges();
+        rep.matched_vertices = self.matched_vertices;
+        rep.wall_s = t0.elapsed().as_secs_f64();
+        Ok(rep)
+    }
+
+    /// Drive `edges` through the Algorithm-1 state machine against the live
+    /// core, then harvest the new matches into the partner map. Returns
+    /// `(new_matches, jit_conflicts)`. Small batches run inline — spawning
+    /// the producer/consumer scope costs more than the matching itself and
+    /// would dominate the service's per-epoch latency; large batches go
+    /// through the shared [`StreamingSkipper`] chunk driver.
+    fn run_pass(&mut self, edges: &[(VertexId, VertexId)]) -> (usize, u64) {
+        const SEQUENTIAL_PASS_MAX: usize = 2048;
+        if edges.is_empty() {
+            return (0, 0);
+        }
+        let arena = MatchArena::with_capacity(
+            edges.len().min(self.num_vertices())
+                + (self.driver.threads + 1) * BUFFER_EDGES,
+        );
+        let conflicts = if edges.len() <= SEQUENTIAL_PASS_MAX || self.driver.threads == 1 {
+            let mut writer = arena.writer();
+            let mut stats = crate::instrument::conflicts::ConflictStats::default();
+            self.core
+                .process_chunk(edges, &mut writer, &mut stats, &mut crate::instrument::NoProbe);
+            stats
+        } else {
+            let driver = StreamingSkipper {
+                chunk_edges: edges
+                    .len()
+                    .div_ceil(self.driver.threads)
+                    .clamp(1, self.driver.chunk_edges),
+                ..self.driver
+            };
+            driver
+                .run_with_core(
+                    &self.core,
+                    &arena,
+                    BatchEdgeSource::new(self.num_vertices(), edges),
+                )
+                .expect("dynamic pass failed")
+                .conflicts
+        };
+        let new = arena.into_matching();
+        for (u, v) in new.iter() {
+            debug_assert!(self.partner[u as usize] == INVALID_VERTEX);
+            debug_assert!(self.partner[v as usize] == INVALID_VERTEX);
+            self.partner[u as usize] = v;
+            self.partner[v as usize] = u;
+        }
+        self.matched_vertices += 2 * new.len();
+        (new.len(), conflicts.total)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use Update::{Delete, Insert};
+
+    fn pairs(m: &DynamicMatcher) -> Vec<(VertexId, VertexId)> {
+        m.matching_pairs()
+    }
+
+    #[test]
+    fn delete_of_matched_edge_triggers_repair() {
+        // path 0-1-2-3, one matcher thread so the stream order is the
+        // match order: skipper matches (0,1) and (2,3).
+        let mut m = DynamicMatcher::new(4, 1);
+        let r = m
+            .apply_epoch(&[Insert(0, 1), Insert(1, 2), Insert(2, 3)])
+            .unwrap();
+        assert_eq!(r.new_matches, 2);
+        assert_eq!(pairs(&m), vec![(0, 1), (2, 3)]);
+        m.verify().unwrap();
+        // deleting (0,1) frees 0 and 1; the repair sweep re-examines 1's
+        // surviving edge (1,2), finds 2 still matched, and correctly leaves
+        // 1 free — maximality holds because every live edge of a freed
+        // vertex has a matched endpoint.
+        let r = m.apply_epoch(&[Delete(0, 1)]).unwrap();
+        assert_eq!(r.destroyed_pairs, 1);
+        assert_eq!(r.freed_vertices, 2);
+        assert_eq!(r.repair_edges, 1, "only (1,2) needs re-examination");
+        assert!(!m.is_matched(0) && !m.is_matched(1));
+        assert!(m.is_matched(2) && m.is_matched(3));
+        m.verify().unwrap();
+        // now delete (2,3) too: repair re-runs (1,2) and must re-match it.
+        let r = m.apply_epoch(&[Delete(2, 3)]).unwrap();
+        assert_eq!(r.destroyed_pairs, 1);
+        assert_eq!(r.new_matches, 1, "repair re-matched (1,2)");
+        assert!(m.is_matched(1) && m.is_matched(2));
+        assert!(!m.is_matched(3));
+        m.verify().unwrap();
+        assert_eq!(m.partner(1), Some(2));
+    }
+
+    #[test]
+    fn delete_unmatched_edge_is_free_of_repair() {
+        let mut m = DynamicMatcher::new(4, 1);
+        m.apply_epoch(&[Insert(0, 1), Insert(0, 2), Insert(0, 3)]).unwrap();
+        // star: exactly one matched pair, say (0,x)
+        assert_eq!(m.matched_vertices(), 2);
+        let unmatched_edge = [(0, 1), (0, 2), (0, 3)]
+            .into_iter()
+            .find(|&(_, v)| !m.is_matched(v))
+            .unwrap();
+        let r = m
+            .apply_epoch(&[Delete(unmatched_edge.0, unmatched_edge.1)])
+            .unwrap();
+        assert_eq!(r.destroyed_pairs, 0);
+        assert_eq!(r.repair_edges, 0);
+        m.verify().unwrap();
+    }
+
+    #[test]
+    fn insert_then_delete_in_one_epoch_nets_nothing() {
+        let mut m = DynamicMatcher::new(4, 2);
+        let r = m.apply_epoch(&[Insert(0, 1), Delete(0, 1)]).unwrap();
+        assert_eq!(r.inserted_live, 0);
+        assert_eq!(r.new_matches, 0);
+        assert_eq!(m.num_live_edges(), 0);
+        assert_eq!(m.matched_vertices(), 0);
+        m.verify().unwrap();
+        // and delete-then-reinsert of a matched edge within one epoch
+        m.apply_epoch(&[Insert(0, 1)]).unwrap();
+        let r = m.apply_epoch(&[Delete(0, 1), Insert(0, 1)]).unwrap();
+        assert_eq!(r.destroyed_pairs, 1);
+        m.verify().unwrap();
+        assert!(m.is_matched(0) && m.is_matched(1), "re-inserted pair re-matches");
+    }
+
+    #[test]
+    fn duplicate_and_phantom_updates_are_inert() {
+        let mut m = DynamicMatcher::new(4, 1);
+        let r = m
+            .apply_epoch(&[Insert(0, 1), Insert(1, 0), Insert(0, 1), Delete(2, 3)])
+            .unwrap();
+        assert_eq!(r.inserted_live, 1, "one live edge from three insert updates");
+        assert_eq!(r.deleted_live, 0, "phantom delete ignored");
+        assert_eq!(m.num_live_edges(), 1);
+        m.verify().unwrap();
+    }
+
+    #[test]
+    fn out_of_range_update_is_rejected_without_mutation() {
+        let mut m = DynamicMatcher::new(4, 1);
+        m.apply_epoch(&[Insert(0, 1)]).unwrap();
+        let err = m.apply_epoch(&[Insert(2, 3), Insert(0, 99)]).unwrap_err();
+        assert!(err.contains("out of range"), "{err}");
+        assert_eq!(m.num_live_edges(), 1, "failed epoch must not half-apply");
+        assert!(!m.adj_contains_for_test(2, 3));
+    }
+
+    #[test]
+    fn cascading_churn_stays_maximal() {
+        use crate::util::rng::Xoshiro256pp;
+        let n = 300;
+        let mut m = DynamicMatcher::new(n, 3);
+        let mut rng = Xoshiro256pp::new(11);
+        let mut live: Vec<(VertexId, VertexId)> = Vec::new();
+        for epoch in 0..30 {
+            let mut batch = Vec::new();
+            for _ in 0..40 {
+                if !live.is_empty() && rng.next_usize(2) == 0 {
+                    let i = rng.next_usize(live.len());
+                    let (u, v) = live.swap_remove(i);
+                    batch.push(Delete(u, v));
+                } else {
+                    let u = rng.next_usize(n) as VertexId;
+                    let v = rng.next_usize(n) as VertexId;
+                    batch.push(Insert(u, v));
+                    if u != v && !live.contains(&(u.min(v), u.max(v))) {
+                        live.push((u.min(v), u.max(v)));
+                    }
+                }
+            }
+            let r = m.apply_epoch(&batch).unwrap();
+            assert_eq!(m.num_live_edges(), live.len() as u64, "epoch {epoch}");
+            m.verify().unwrap_or_else(|e| panic!("epoch {epoch}: {e}"));
+            assert_eq!(r.matched_vertices, m.matched_vertices());
+        }
+    }
+
+    #[test]
+    fn repair_fraction_is_sublinear_for_small_batches() {
+        use crate::graph::gen::erdos_renyi;
+        let n = 4000;
+        let el = erdos_renyi::edges(n, 8 * n, 5);
+        let mut m = DynamicMatcher::new(n, 2);
+        let all: Vec<Update> = el.edges.iter().map(|&(u, v)| Insert(u, v)).collect();
+        m.apply_epoch(&all).unwrap();
+        m.verify().unwrap();
+        // delete 100 random live edges; repair work must touch a small
+        // fraction of the ~24k live edges
+        let live: Vec<_> = m.live_edge_iter().take(100).collect();
+        let dels: Vec<Update> = live.iter().map(|&(u, v)| Delete(u, v)).collect();
+        let r = m.apply_epoch(&dels).unwrap();
+        m.verify().unwrap();
+        assert!(
+            r.repair_fraction() < 0.25,
+            "repair fraction {} not sublinear (repair {} of {} live)",
+            r.repair_fraction(),
+            r.repair_edges,
+            r.live_edges
+        );
+    }
+
+    impl DynamicMatcher {
+        fn adj_contains_for_test(&self, u: VertexId, v: VertexId) -> bool {
+            self.adj.contains(u, v)
+        }
+    }
+}

@@ -1,0 +1,32 @@
+//! Fully dynamic maximal matching — inserts **and deletes** (ISSUE 2; the
+//! regime of Ghaffari & Trygub's *Parallel Dynamic Maximal Matching*,
+//! motivated here by paper §V-C's observation that Skipper is already
+//! incremental in expectation).
+//!
+//! The paper's single-pass contract ("an edge's fate is decided the moment
+//! it is seen, never revisited") makes insertions nearly free — one
+//! `process_edge` against the live one-byte-per-vertex state. Deletions are
+//! the missing half: removing a matched edge frees two vertices, and
+//! maximality over the *live* edge set may break in their neighborhoods.
+//! This module restores it without global recomputation:
+//!
+//! * [`adjacency`] — the compact mutable topology sidecar (chunked
+//!   per-vertex lists, tombstoned deletes, periodic compaction) that
+//!   remembers each vertex's surviving incident edges;
+//! * [`engine`] — the epoch-based update engine: mixed insert/delete
+//!   batches, freed-vertex tracking, and the parallel **repair sweep** that
+//!   re-runs the Algorithm-1 reservation state machine over only the
+//!   affected neighborhoods (see `engine.rs` for the invariant proof);
+//! * [`churn`] — the reusable insert/delete workload driver behind
+//!   `skipper-cli churn`, the `dynamic` coordinator experiment, and the
+//!   `dynamic_churn` bench.
+//!
+//! The long-running service layer in [`crate::service`] owns one
+//! [`engine::DynamicMatcher`] and feeds it coalesced client batches.
+
+pub mod adjacency;
+pub mod churn;
+pub mod engine;
+
+pub use adjacency::DynamicAdjacency;
+pub use engine::{DynamicMatcher, EpochReport, Update};

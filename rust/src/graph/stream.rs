@@ -79,11 +79,25 @@ pub struct BatchEdgeSource<'a> {
     edges: &'a [(VertexId, VertexId)],
     num_vertices: usize,
     pos: usize,
+    /// When set, edges already seen in this batch (either orientation) are
+    /// skipped instead of delivered again.
+    seen: Option<std::collections::HashSet<(VertexId, VertexId)>>,
 }
 
 impl<'a> BatchEdgeSource<'a> {
     pub fn new(num_vertices: usize, edges: &'a [(VertexId, VertexId)]) -> Self {
-        Self { edges, num_vertices, pos: 0 }
+        Self { edges, num_vertices, pos: 0, seen: None }
+    }
+
+    /// Skip duplicate edges within the batch, counting `(u,v)` and `(v,u)`
+    /// as the same edge. The update paths (incremental inserts, the dynamic
+    /// engine) enable this so a client repeating an insert doesn't inflate
+    /// the per-batch "edges processed" telemetry; the exact-replay paths
+    /// (stream-equivalence tests) leave it off because the *multiset* of
+    /// delivered edges is what they compare.
+    pub fn with_dedup(mut self) -> Self {
+        self.seen = Some(std::collections::HashSet::new());
+        self
     }
 }
 
@@ -98,19 +112,23 @@ impl EdgeSource for BatchEdgeSource<'_> {
         max_edges: usize,
     ) -> Result<usize, String> {
         chunk.clear();
-        let end = (self.pos + max_edges).min(self.edges.len());
-        for &(u, v) in &self.edges[self.pos..end] {
+        while chunk.len() < max_edges && self.pos < self.edges.len() {
+            let (u, v) = self.edges[self.pos];
+            self.pos += 1;
             if (u as usize) >= self.num_vertices || (v as usize) >= self.num_vertices {
                 return Err(format!(
                     "edge ({u},{v}) out of range (vertex bound {})",
                     self.num_vertices
                 ));
             }
+            if let Some(seen) = &mut self.seen {
+                if !seen.insert((u.min(v), u.max(v))) {
+                    continue;
+                }
+            }
             chunk.push((u, v));
         }
-        let n = end - self.pos;
-        self.pos = end;
-        Ok(n)
+        Ok(chunk.len())
     }
 
     fn edge_hint(&self) -> Option<u64> {
@@ -673,6 +691,22 @@ mod tests {
             let s = BatchEdgeSource::new(100, &edges);
             assert_eq!(drain(s, cs), edges, "chunk size {cs}");
         }
+    }
+
+    #[test]
+    fn batch_source_dedup_skips_repeats_in_both_orientations() {
+        let edges = [(0u32, 1u32), (1, 0), (0, 1), (2, 3), (3, 2), (0, 2)];
+        // default: the full multiset streams through
+        assert_eq!(drain(BatchEdgeSource::new(4, &edges), 2).len(), 6);
+        // dedup: one copy per undirected edge, first orientation wins
+        let deduped = drain(BatchEdgeSource::new(4, &edges).with_dedup(), 2);
+        assert_eq!(deduped, vec![(0, 1), (2, 3), (0, 2)]);
+        // an all-duplicate tail must read as exhaustion, not an early stop
+        let dup_tail = [(0u32, 1u32), (1, 0), (1, 0), (1, 0)];
+        assert_eq!(
+            drain(BatchEdgeSource::new(2, &dup_tail).with_dedup(), 1),
+            vec![(0, 1)]
+        );
     }
 
     #[test]

@@ -10,6 +10,14 @@
 //! * [`matching::streaming`] — the streaming ingest→match pipeline: edges
 //!   pulled chunk-by-chunk from any [`graph::stream::EdgeSource`] (disk,
 //!   generator, batch) through a bounded queue; no CSR is ever built.
+//! * [`dynamic`] — the fully dynamic engine: a mutable adjacency sidecar
+//!   plus an epoch-based insert/delete update engine whose repair sweep
+//!   re-runs the reservation state machine over only the neighborhoods a
+//!   deletion disturbed.
+//! * [`service`] — the long-running match server: a line-delimited
+//!   `INSERT`/`DELETE`/`QUERY`/`STATS`/`EPOCH` protocol over stdin or TCP,
+//!   with a sharded front-end queue coalescing client batches into engine
+//!   epochs.
 //! * [`matching`] — every baseline the paper discusses: sequential greedy
 //!   (SGMM), IDMM, SIDMM (the GBBS comparator), PBMM, Israeli–Itai, Birn
 //!   et al., and Auer–Bisseling.
@@ -46,11 +54,13 @@
 pub mod apram;
 pub mod cachesim;
 pub mod coordinator;
+pub mod dynamic;
 pub mod graph;
 pub mod instrument;
 pub mod matching;
 pub mod par;
 pub mod runtime;
+pub mod service;
 pub mod util;
 
 /// Vertex identifier. The paper's suite reaches 3.6G vertices; our scaled

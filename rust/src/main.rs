@@ -5,8 +5,12 @@
 //!   run         run a matching algorithm on a graph and report stats; with
 //!               --stream, match while edges stream in (no CSR materialized)
 //!   experiment  regenerate one paper table/figure (table1, table2, fig3,
-//!               fig7, fig8, fig9, fig10, fig11, stream, xla-ems)
+//!               fig7, fig8, fig9, fig10, fig11, stream, dynamic, xla-ems)
 //!   suite       run every experiment and write reports/
+//!   serve       long-running match service (stdin pipe or TCP): INSERT/
+//!               DELETE/QUERY/STATS/EPOCH over the fully dynamic engine
+//!   churn       insert/delete churn driver over the dynamic engine with
+//!               per-epoch maximality verification and repair telemetry
 //!   info        print dataset/suite information
 
 use skipper::apram::{simulate_skipper, SimConfig};
@@ -30,6 +34,8 @@ use skipper::matching::sgmm::Sgmm;
 use skipper::matching::skipper::Skipper;
 use skipper::matching::streaming::{StreamingSkipper, DEFAULT_CHUNK_EDGES};
 use skipper::matching::{verify, MaximalMatcher};
+use skipper::dynamic::churn::{run_churn, ChurnConfig, ChurnGen};
+use skipper::service::{serve_lines, serve_tcp, ServiceConfig};
 use skipper::util::cli::Args;
 use std::time::Instant;
 
@@ -43,14 +49,22 @@ USAGE:
   skipper-cli run --graph <file|dataset> --stream [--threads N] [--chunk-edges N] [--verify]
               (match while edges stream off disk — no CSR is materialized;
                reports peak topology-resident bytes vs the CSR equivalent)
-  skipper-cli experiment <id> [--config cfg.toml] [--scale S]   (ids: table1 table2 fig3 fig7 fig8 fig9 fig10 fig11 stream xla-ems)
+  skipper-cli experiment <id> [--config cfg.toml] [--scale S]   (ids: table1 table2 fig3 fig7 fig8 fig9 fig10 fig11 stream dynamic xla-ems)
   skipper-cli suite [--config cfg.toml] [--scale S]
+  skipper-cli serve [--vertices N] [--threads N] [--tcp HOST:PORT] [--shards N]
+              (line protocol INSERT/DELETE/QUERY/STATS/EPOCH/QUIT/SHUTDOWN;
+               stdin pipe by default, concurrent clients with --tcp)
+  skipper-cli churn [--gen rmat|er|ba|grid] [--scale LOG2_V] [--avg-degree D]
+              [--epochs E] [--batch B] [--delete-frac F] [--threads N]
+              [--warmup-epochs W] [--seed S] [--no-verify]
+              (mixed insert/delete epochs over the dynamic engine; verifies
+               maximality over the LIVE edge set after every epoch)
   skipper-cli info
 ";
 
 fn main() {
     let raw: Vec<String> = std::env::args().skip(1).collect();
-    let args = match Args::parse(raw, &["verify", "conflicts", "sim", "stream", "help"]) {
+    let args = match Args::parse(raw, &["verify", "conflicts", "sim", "stream", "no-verify", "help"]) {
         Ok(a) => a,
         Err(e) => {
             eprintln!("error: {e}\n{USAGE}");
@@ -67,6 +81,8 @@ fn main() {
         "run" => cmd_run(&args),
         "experiment" => cmd_experiment(&args),
         "suite" => cmd_suite(&args),
+        "serve" => cmd_serve(&args),
+        "churn" => cmd_churn(&args),
         "info" => cmd_info(),
         other => Err(format!("unknown command {other:?}\n{USAGE}")),
     };
@@ -268,7 +284,9 @@ fn cmd_run_stream(
 }
 
 fn run_experiments(ids: &[&str], cfg: &RunConfig) -> Result<(), String> {
-    let needs_metrics = ids.iter().any(|&id| id != "xla-ems" && id != "stream");
+    let needs_metrics = ids
+        .iter()
+        .any(|&id| id != "xla-ems" && id != "stream" && id != "dynamic");
     let mut report = Report::new();
     let metrics;
     let cost;
@@ -318,6 +336,12 @@ fn run_experiments(ids: &[&str], cfg: &RunConfig) -> Result<(), String> {
                     .unwrap_or(4);
                 exp::stream_vs_csr(cfg.scale, &cfg.cache_dir, cfg.threads.min(host))?
             }
+            "dynamic" => {
+                let host = std::thread::available_parallelism()
+                    .map(|n| n.get())
+                    .unwrap_or(4);
+                exp::dynamic_churn(cfg.scale, cfg.threads.min(host))?
+            }
             // artifact-dependent: inside a multi-experiment run, skip (with
             // the reason in the report) rather than sinking the whole suite;
             // an explicit `experiment xla-ems` still fails loudly
@@ -340,7 +364,7 @@ fn cmd_experiment(args: &Args) -> Result<(), String> {
     let id = args
         .positional
         .get(1)
-        .ok_or("experiment id required (table1 table2 fig3 fig7 fig8 fig9 fig10 fig11 stream xla-ems)")?;
+        .ok_or("experiment id required (table1 table2 fig3 fig7 fig8 fig9 fig10 fig11 stream dynamic xla-ems)")?;
     let cfg = load_config(args)?;
     run_experiments(&[id.as_str()], &cfg)
 }
@@ -350,10 +374,122 @@ fn cmd_suite(args: &Args) -> Result<(), String> {
     run_experiments(
         &[
             "table1", "table2", "fig3", "fig7", "fig8", "fig9", "fig10", "fig11", "stream",
-            "xla-ems",
+            "dynamic", "xla-ems",
         ],
         &cfg,
     )
+}
+
+/// Long-running match service: stdin pipe by default (one client — the CI
+/// smoke path and anything scriptable), or `--tcp HOST:PORT` for concurrent
+/// clients, each on its own connection thread and queue shard.
+fn cmd_serve(args: &Args) -> Result<(), String> {
+    let defaults = ServiceConfig::default();
+    let cfg = ServiceConfig {
+        num_vertices: args.get_parse("vertices", defaults.num_vertices)?,
+        threads: args.get_parse("threads", defaults.threads)?,
+        shards: args.get_parse("shards", defaults.shards)?,
+        shard_capacity: args.get_parse("shard-capacity", defaults.shard_capacity)?,
+        epoch_max_requests: defaults.epoch_max_requests,
+        epoch_max_updates: args.get_parse("epoch-max-updates", defaults.epoch_max_updates)?,
+    };
+    let summary = match args.get("tcp") {
+        Some(addr) => serve_tcp(&cfg, addr, |bound| {
+            eprintln!("serving |V|={} on tcp://{bound} (SHUTDOWN to stop)", cfg.num_vertices);
+        })?,
+        None => {
+            eprintln!(
+                "serving |V|={} on stdin (INSERT/DELETE/QUERY/STATS/EPOCH; QUIT or EOF to stop)",
+                cfg.num_vertices
+            );
+            let stdin = std::io::stdin();
+            let mut stdout = std::io::stdout();
+            serve_lines(&cfg, stdin.lock(), &mut stdout)
+        }
+    };
+    eprintln!(
+        "served {} epochs: +{} -{} updates, repair {} edges; final |M|={} over {} live edges, maximal={}",
+        summary.epochs,
+        summary.total_inserts,
+        summary.total_deletes,
+        summary.total_repair_edges,
+        summary.matched_vertices / 2,
+        summary.live_edges,
+        summary.maximal
+    );
+    if !summary.maximal {
+        return Err("final matching failed the live-set maximality audit".into());
+    }
+    Ok(())
+}
+
+/// Insert/delete churn over the dynamic engine with per-epoch verification —
+/// the acceptance run: `churn --gen rmat --scale 20 --delete-frac 0.5`.
+fn cmd_churn(args: &Args) -> Result<(), String> {
+    let scale: u32 = args.get_parse("scale", 16u32)?;
+    let avg_degree: u32 = args.get_parse("avg-degree", 8u32)?;
+    let gen = ChurnGen::parse(args.get_or("gen", "rmat"), scale, avg_degree)?;
+    let cfg = ChurnConfig {
+        seed: args.get_parse("seed", 1u64)?,
+        threads: args.get_parse("threads", 4usize)?,
+        epochs: args.get_parse("epochs", 10usize)?,
+        batch: args.get_parse("batch", 20_000usize)?,
+        delete_frac: args.get_parse("delete-frac", 0.5f64)?,
+        warmup_epochs: args.get_parse("warmup-epochs", 8usize)?,
+        verify: !args.flag("no-verify"),
+        ..ChurnConfig::new(gen)
+    };
+    if !(0.0..=1.0).contains(&cfg.delete_frac) {
+        return Err(format!("--delete-frac {} not in [0,1]", cfg.delete_frac));
+    }
+    println!(
+        "churn {} |V|={} t={}: {} warmup epochs, then {} epochs of {} updates ({:.0}% deletes){}",
+        gen.name(),
+        gen.num_vertices(),
+        cfg.threads,
+        cfg.warmup_epochs,
+        cfg.epochs,
+        cfg.batch,
+        cfg.delete_frac * 100.0,
+        if cfg.verify { "" } else { " [verification OFF]" }
+    );
+    let summary = run_churn(&cfg, |e| {
+        let r = &e.report;
+        let tag = if e.warmup { "warmup" } else { "epoch" };
+        let verdict = match &e.verified {
+            Some(Ok(())) => " verify=OK",
+            Some(Err(_)) => " verify=FAIL",
+            None => "",
+        };
+        println!(
+            "{tag} {}: +{} -{} destroyed={} freed={} repair_edges={} repair_frac={:.5} |M|={} live={} conflicts={} {:.1}ms{verdict}",
+            r.epoch,
+            r.inserts,
+            r.deletes,
+            r.destroyed_pairs,
+            r.freed_vertices,
+            r.repair_edges,
+            r.repair_fraction(),
+            r.matched_vertices / 2,
+            r.live_edges,
+            r.conflicts,
+            r.wall_s * 1e3,
+        );
+    })?;
+    let p50 = skipper::util::stats::percentile(&summary.epoch_wall_s, 50.0) * 1e3;
+    let p99 = skipper::util::stats::percentile(&summary.epoch_wall_s, 99.0) * 1e3;
+    println!(
+        "summary: {} churn epochs over {} live edges: repair_frac mean={:.5} max={:.5} (batch/live={:.5}); epoch latency p50={p50:.1}ms p99={p99:.1}ms; |M|={}; verified {}/{} epochs",
+        summary.epochs,
+        summary.final_live_edges,
+        summary.repair_frac_mean,
+        summary.repair_frac_max,
+        cfg.batch as f64 / summary.final_live_edges.max(1) as f64,
+        summary.final_matched_vertices / 2,
+        summary.verified_epochs,
+        summary.epochs + summary.warmup_epochs,
+    );
+    Ok(())
 }
 
 fn cmd_info() -> Result<(), String> {

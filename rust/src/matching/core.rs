@@ -11,7 +11,11 @@
 //!   from any [`crate::graph::stream::EdgeSource`] — a file, a generator,
 //!   or an in-memory batch — without ever building a CSR;
 //! * [`super::incremental::IncrementalMatcher`] keeps one core alive across
-//!   edge-insertion batches.
+//!   edge-insertion batches;
+//! * [`crate::dynamic::DynamicMatcher`] keeps one core alive under mixed
+//!   inserts *and deletes*, releasing the endpoints of deleted matched
+//!   pairs (`release`) and re-running this same state machine over their
+//!   surviving incident edges.
 //!
 //! All drivers share [`process_edge`] (Algorithm 1 lines 6–18), so JIT
 //! conflict resolution, telemetry, and the correctness argument are
@@ -67,6 +71,19 @@ impl SkipperCore {
     #[inline]
     pub fn is_matched_relaxed(&self, v: VertexId) -> bool {
         self.state[v as usize].load(Ordering::Relaxed) == MCHD
+    }
+
+    /// Free a vertex back to `ACC` — the dynamic engine's delete path: when
+    /// a matched edge is removed from the live graph, both endpoints are
+    /// released and re-enter the Algorithm-1 state machine via the repair
+    /// sweep. **Quiescent-only**: callers must guarantee no concurrent
+    /// `process_edge` is running (the dynamic engine applies deletes
+    /// strictly between its parallel matching phases). No vertex is `RSVD`
+    /// between phases — every reservation in `process_edge` resolves to
+    /// `MCHD` or back to `ACC` before the call returns.
+    #[inline]
+    pub fn release(&self, v: VertexId) {
+        self.state[v as usize].store(ACC, Ordering::Release);
     }
 
     /// A match arena sized for this core's worst case (≤ |V|/2 matches)
@@ -215,6 +232,22 @@ mod tests {
         assert!(!core.is_matched(2));
         drop(w);
         assert_eq!(arena.into_matching().len(), 1);
+    }
+
+    #[test]
+    fn release_reopens_a_matched_vertex() {
+        let core = SkipperCore::new(4);
+        let arena = core.arena(1);
+        let mut w = arena.writer();
+        core.process_edge(0, 1, &mut w, &mut NoProbe);
+        assert!(core.is_matched(0) && core.is_matched(1));
+        core.release(0);
+        core.release(1);
+        assert!(!core.is_matched(0) && !core.is_matched(1));
+        // the freed pair can re-match through the normal state machine
+        core.process_edge(1, 2, &mut w, &mut NoProbe);
+        assert!(core.is_matched(1) && core.is_matched(2));
+        assert!(!core.is_matched(0));
     }
 
     #[test]

@@ -37,8 +37,15 @@ impl IncrementalMatcher {
         self.core.num_vertices()
     }
 
-    /// Current matching (all batches so far).
-    pub fn matching(&self) -> Matching {
+    /// Current matching (all batches so far), borrowed — no per-call copy
+    /// of the pair vector.
+    pub fn matching(&self) -> &[(VertexId, VertexId)] {
+        &self.matches
+    }
+
+    /// Owned [`Matching`] for callers that need one (e.g. the `verify`
+    /// helpers); this is the only place the pairs are cloned.
+    pub fn to_matching(&self) -> Matching {
         Matching::from_pairs(self.matches.clone())
     }
 
@@ -68,7 +75,9 @@ impl IncrementalMatcher {
             .run_with_core(
                 &self.core,
                 &arena,
-                BatchEdgeSource::new(self.core.num_vertices(), edges),
+                // dedup: a client repeating an insert within the batch gets
+                // one edge processed, not several counted.
+                BatchEdgeSource::new(self.core.num_vertices(), edges).with_dedup(),
             )
             .expect("batch insertion failed");
         let new = arena.into_matching();
@@ -90,13 +99,13 @@ mod tests {
 
     /// Validate the incremental matching against the union of all edges
     /// inserted so far.
-    fn check_against(edges: &[(VertexId, VertexId)], n: usize, m: &Matching) {
+    fn check_against(edges: &[(VertexId, VertexId)], n: usize, inc: &IncrementalMatcher) {
         let mut el = EdgeList::new(n);
         for &(u, v) in edges {
             el.push(u, v);
         }
         let g = build(&el, BuildOptions::default());
-        verify::check(&g, m).expect("incremental matching invalid");
+        verify::check(&g, &inc.to_matching()).expect("incremental matching invalid");
     }
 
     #[test]
@@ -105,7 +114,7 @@ mod tests {
         let edges: Vec<_> = crate::matching::ems::canonical_edges(&g);
         let mut inc = IncrementalMatcher::new(64, 2);
         inc.insert_batch(&edges);
-        check_against(&edges, 64, &inc.matching());
+        check_against(&edges, 64, &inc);
     }
 
     #[test]
@@ -126,7 +135,7 @@ mod tests {
             let before = inc.matching().len();
             let added = inc.insert_batch(&edges);
             all.extend(&edges);
-            check_against(&all, n, &inc.matching());
+            check_against(&all, n, &inc);
             assert_eq!(inc.matching().len(), before + added, "batch {batch}");
         }
     }
@@ -166,6 +175,6 @@ mod tests {
             .len();
         let m = inc.matching().len();
         assert!(m * 2 >= scratch && scratch * 2 >= m, "{m} vs {scratch}");
-        verify::check(&g, &inc.matching()).unwrap();
+        verify::check(&g, &inc.to_matching()).unwrap();
     }
 }

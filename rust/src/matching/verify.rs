@@ -2,11 +2,20 @@
 //! matching iff (a) no two output edges share an endpoint and every output
 //! edge exists in the graph, and (b) every graph edge has at least one
 //! matched endpoint.
+//!
+//! [`check`] validates against a materialized [`CsrGraph`] — correct for the
+//! one-shot and insert-only regimes, where the graph is the union of every
+//! edge ever seen. Under *deletions* that union over-approximates the live
+//! graph, so [`verify_maximal_dynamic`] checks the same two conditions
+//! against an explicit live edge set instead: the matching must be a subset
+//! of the edges that still exist, and maximality is required only over
+//! those.
 
 use super::Matching;
 use crate::graph::CsrGraph;
 use crate::par::par_for_range;
 use crate::VertexId;
+use std::collections::HashSet;
 use std::sync::atomic::{AtomicU64, Ordering};
 
 /// Full validity + maximality check. Returns a description of the first
@@ -38,6 +47,62 @@ pub fn check(g: &CsrGraph, m: &Matching) -> Result<(), String> {
         if v != u && !matched[v as usize] && !matched[u as usize] {
             return Err(format!("edge ({v},{u}) unmatched on both endpoints"));
         }
+    }
+    Ok(())
+}
+
+/// Maximality check against an edge set *after deletions* — the fully
+/// dynamic regime, where the insert-only union graph [`check`] assumes no
+/// longer describes what exists. `live_edges` is consumed in a single pass
+/// (an adjacency iterator is fine; duplicates and both orientations are
+/// tolerated); `matching` holds the claimed pairs.
+///
+/// Verifies, in order: every matched pair is in range, loop-free, and
+/// endpoint-disjoint; every live edge has at least one matched endpoint
+/// (maximality); and every matched pair was actually seen among the live
+/// edges (matching ⊆ live — a deleted edge may not stay matched).
+pub fn verify_maximal_dynamic<I>(
+    num_vertices: usize,
+    live_edges: I,
+    matching: &[(VertexId, VertexId)],
+) -> Result<(), String>
+where
+    I: IntoIterator<Item = (VertexId, VertexId)>,
+{
+    let n = num_vertices;
+    let mut matched = vec![false; n];
+    let mut unseen: HashSet<(VertexId, VertexId)> = HashSet::with_capacity(matching.len());
+    for &(u, v) in matching {
+        if u as usize >= n || v as usize >= n {
+            return Err(format!("match ({u},{v}) out of range (|V|={n})"));
+        }
+        if u == v {
+            return Err(format!("self-loop ({u},{u}) in matching"));
+        }
+        if matched[u as usize] {
+            return Err(format!("vertex {u} matched twice"));
+        }
+        if matched[v as usize] {
+            return Err(format!("vertex {v} matched twice"));
+        }
+        matched[u as usize] = true;
+        matched[v as usize] = true;
+        unseen.insert((u.min(v), u.max(v)));
+    }
+    for (u, v) in live_edges {
+        if u as usize >= n || v as usize >= n {
+            return Err(format!("live edge ({u},{v}) out of range (|V|={n})"));
+        }
+        if u == v {
+            continue;
+        }
+        if !matched[u as usize] && !matched[v as usize] {
+            return Err(format!("live edge ({u},{v}) unmatched on both endpoints"));
+        }
+        unseen.remove(&(u.min(v), u.max(v)));
+    }
+    if let Some(&(u, v)) = unseen.iter().next() {
+        return Err(format!("match ({u},{v}) is not a live edge"));
     }
     Ok(())
 }
@@ -125,6 +190,50 @@ mod tests {
         let g = simple::path(4);
         assert!(check(&g, &Matching::from_pairs(vec![(2, 2)])).is_err());
         assert!(check(&g, &Matching::from_pairs(vec![(0, 9)])).is_err());
+    }
+
+    #[test]
+    fn dynamic_verifier_accepts_live_set_after_deletions() {
+        // union graph was the path 0-1-2-3; edge (1,2) was deleted.
+        let live = vec![(0u32, 1u32), (2, 3)];
+        assert!(verify_maximal_dynamic(4, live.iter().copied(), &[(0, 1), (2, 3)]).is_ok());
+        // the static verifier over the union would also accept this, but the
+        // dynamic one must reject a matching that kept the deleted edge:
+        let err = verify_maximal_dynamic(4, live.iter().copied(), &[(1, 2)]).unwrap_err();
+        assert!(err.contains("unmatched on both") || err.contains("not a live edge"), "{err}");
+    }
+
+    #[test]
+    fn dynamic_verifier_rejects_matched_pair_not_live() {
+        // (0,1) was deleted but the matching still claims it; (2,3) keeps
+        // the remaining edge covered, so the failure is subset, not
+        // maximality.
+        let live = vec![(2u32, 3u32)];
+        let err = verify_maximal_dynamic(4, live, &[(0, 1), (2, 3)]).unwrap_err();
+        assert!(err.contains("not a live edge"), "{err}");
+    }
+
+    #[test]
+    fn dynamic_verifier_rejects_uncovered_live_edge() {
+        let live = vec![(0u32, 1u32), (2, 3)];
+        let err = verify_maximal_dynamic(4, live, &[(0, 1)]).unwrap_err();
+        assert!(err.contains("unmatched on both"), "{err}");
+    }
+
+    #[test]
+    fn dynamic_verifier_tolerates_both_orientations_and_duplicates() {
+        let live = vec![(0u32, 1u32), (1, 0), (0, 1)];
+        assert!(verify_maximal_dynamic(2, live, &[(1, 0)]).is_ok());
+    }
+
+    #[test]
+    fn dynamic_verifier_rejects_double_matching_and_loops() {
+        assert!(verify_maximal_dynamic(3, vec![(0u32, 1u32)], &[(0, 1), (1, 2)])
+            .unwrap_err()
+            .contains("matched twice"));
+        assert!(verify_maximal_dynamic(3, Vec::<(u32, u32)>::new(), &[(1, 1)])
+            .unwrap_err()
+            .contains("self-loop"));
     }
 
     #[test]

@@ -73,6 +73,20 @@ impl<T> BoundedQueue<T> {
         }
     }
 
+    /// Non-blocking push: `Err` back immediately when the queue is full or
+    /// closed. The service layer's doorbell rides on this — ringing an
+    /// already-rung doorbell must not block the ringer.
+    pub fn try_push(&self, item: T) -> Result<(), T> {
+        let mut inner = self.inner.lock().unwrap();
+        if inner.closed || inner.items.len() >= self.capacity {
+            return Err(item);
+        }
+        inner.items.push_back(item);
+        drop(inner);
+        self.not_empty.notify_one();
+        Ok(())
+    }
+
     /// Non-blocking pop: `None` when currently empty (closed or not).
     pub fn try_pop(&self) -> Option<T> {
         let mut inner = self.inner.lock().unwrap();
@@ -174,6 +188,20 @@ mod tests {
         });
         assert_eq!(pushed.load(Ordering::SeqCst), 1);
         assert_eq!(q.len(), 2);
+    }
+
+    #[test]
+    fn try_push_rejects_full_and_closed_without_blocking() {
+        let q = BoundedQueue::new(1);
+        assert!(q.try_push(1).is_ok());
+        assert_eq!(q.try_push(2), Err(2), "full queue must bounce, not block");
+        assert_eq!(q.pop(), Some(1));
+        assert!(q.try_push(3).is_ok());
+        q.close();
+        assert_eq!(q.try_push(4), Err(4));
+        // backlog still drains after close
+        assert_eq!(q.pop(), Some(3));
+        assert_eq!(q.pop(), None);
     }
 
     #[test]

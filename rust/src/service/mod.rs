@@ -1,0 +1,227 @@
+//! Long-running match service over the fully dynamic engine.
+//!
+//! Architecture (one engine, many clients):
+//!
+//! ```text
+//! client conns ──parse──▶ ShardedQueue ──drain──▶ engine thread
+//!   (stdio or TCP,          (per-shard              one DynamicMatcher,
+//!    thread each)         BoundedQueues +           coalesces queued
+//!                           doorbell)               batches into epochs
+//! ```
+//!
+//! * [`protocol`] — the line-delimited command/JSON-reply wire format;
+//! * [`server`] — connection front-ends (stdin pipe, TCP), the engine
+//!   thread, and per-epoch telemetry (repair fraction, matched count,
+//!   p50/p99 batch latency);
+//! * this module — the two coordination primitives they share:
+//!   [`ShardedQueue`], the front-end fan-in built from
+//!   [`BoundedQueue`](crate::par::pump::BoundedQueue)s (per-shard
+//!   back-pressure, so one flooding client stalls itself, not the world),
+//!   and [`Promise`], a one-shot reply slot (a capacity-1 `BoundedQueue`
+//!   underneath).
+//!
+//! Updates are acknowledged at enqueue time and applied when the engine
+//! coalesces them into the next epoch; `EPOCH`/`QUERY`/`STATS` ride the
+//! same queue and are answered in order, after everything the same client
+//! sent before them.
+
+pub mod protocol;
+pub mod server;
+
+use crate::par::pump::BoundedQueue;
+use std::sync::Arc;
+
+pub use server::{serve_lines, serve_tcp, ServiceConfig, ServiceSummary};
+
+/// One-shot reply slot: the engine thread fulfills, the client thread
+/// waits. A capacity-1 [`BoundedQueue`] gives blocking hand-off and a
+/// `None` (instead of a hang) if the engine shuts down without answering.
+pub struct Promise<T> {
+    q: BoundedQueue<T>,
+}
+
+impl<T> Default for Promise<T> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<T> Promise<T> {
+    pub fn new() -> Self {
+        Self { q: BoundedQueue::new(1) }
+    }
+
+    /// Shared handle, one end for the fulfiller, one for the waiter.
+    pub fn shared() -> Arc<Self> {
+        Arc::new(Self::new())
+    }
+
+    /// Fulfill the promise. A promise is fulfilled at most once; a second
+    /// fulfillment or one after abandonment is dropped.
+    pub fn fulfill(&self, value: T) {
+        let _ = self.q.try_push(value);
+    }
+
+    /// Block until fulfilled; `None` if the fulfilling side abandoned it.
+    pub fn wait(&self) -> Option<T> {
+        self.q.pop()
+    }
+
+    /// Abandon: wake any waiter with `None`.
+    pub fn abandon(&self) {
+        self.q.close();
+    }
+}
+
+/// Fan-in queue for client requests: each shard is its own bounded queue
+/// (back-pressure is per shard), and a capacity-1 doorbell wakes the single
+/// consumer without making any ringer wait.
+pub struct ShardedQueue<T> {
+    shards: Vec<BoundedQueue<T>>,
+    doorbell: BoundedQueue<()>,
+}
+
+impl<T> ShardedQueue<T> {
+    /// `shards` queues of `per_shard_capacity` each (both clamped ≥ 1).
+    pub fn new(shards: usize, per_shard_capacity: usize) -> Self {
+        Self {
+            shards: (0..shards.max(1))
+                .map(|_| BoundedQueue::new(per_shard_capacity))
+                .collect(),
+            doorbell: BoundedQueue::new(1),
+        }
+    }
+
+    pub fn num_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Blocking push onto `shard % num_shards`; `Err` once closed. Rings
+    /// the doorbell after a successful push.
+    pub fn push(&self, shard: usize, item: T) -> Result<(), T> {
+        self.shards[shard % self.shards.len()].push(item)?;
+        let _ = self.doorbell.try_push(()); // already-rung is fine
+        Ok(())
+    }
+
+    /// Drain up to `max` items round-robin across shards into `out`
+    /// (appended). Non-blocking; returns how many were taken.
+    pub fn drain(&self, out: &mut Vec<T>, max: usize) -> usize {
+        let mut taken = 0;
+        while taken < max {
+            let mut any = false;
+            for shard in &self.shards {
+                if taken >= max {
+                    break;
+                }
+                if let Some(item) = shard.try_pop() {
+                    out.push(item);
+                    taken += 1;
+                    any = true;
+                }
+            }
+            if !any {
+                break;
+            }
+        }
+        taken
+    }
+
+    /// Block until someone rings (true) or the queue is closed (false).
+    /// Spurious wakes are fine — callers loop around `drain`.
+    pub fn wait(&self) -> bool {
+        self.doorbell.pop().is_some()
+    }
+
+    /// Close every shard and the doorbell: producers start failing,
+    /// `drain` still empties the backlog, `wait` returns false.
+    pub fn close(&self) {
+        for shard in &self.shards {
+            shard.close();
+        }
+        self.doorbell.close();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn promise_roundtrip_and_abandon() {
+        let p = Promise::shared();
+        p.fulfill(42);
+        assert_eq!(p.wait(), Some(42));
+        let p2: Arc<Promise<i32>> = Promise::shared();
+        p2.abandon();
+        assert_eq!(p2.wait(), None);
+        // fulfill-after-abandon is a no-op, not a panic
+        p2.fulfill(1);
+    }
+
+    #[test]
+    fn promise_hands_off_across_threads() {
+        let p = Promise::shared();
+        std::thread::scope(|s| {
+            let p2 = Arc::clone(&p);
+            s.spawn(move || p2.fulfill("done"));
+            assert_eq!(p.wait(), Some("done"));
+        });
+    }
+
+    #[test]
+    fn sharded_drain_is_round_robin_and_bounded() {
+        let q: ShardedQueue<u32> = ShardedQueue::new(3, 8);
+        for i in 0..9u32 {
+            q.push(i as usize, i).unwrap();
+        }
+        let mut out = Vec::new();
+        assert_eq!(q.drain(&mut out, 5), 5);
+        // round-robin: one from each shard per cycle
+        assert_eq!(out, vec![0, 1, 2, 3, 4]);
+        assert_eq!(q.drain(&mut out, 100), 4);
+        assert_eq!(q.drain(&mut out, 100), 0);
+    }
+
+    #[test]
+    fn doorbell_wakes_consumer_and_close_stops_it() {
+        let q: ShardedQueue<u32> = ShardedQueue::new(2, 4);
+        std::thread::scope(|s| {
+            let consumer = s.spawn(|| {
+                let mut got = Vec::new();
+                loop {
+                    let mut out = Vec::new();
+                    q.drain(&mut out, 16);
+                    got.extend(out);
+                    if got.len() >= 3 {
+                        return got;
+                    }
+                    if !q.wait() {
+                        return got;
+                    }
+                }
+            });
+            for i in 0..3 {
+                std::thread::sleep(std::time::Duration::from_millis(5));
+                q.push(i as usize, i).unwrap();
+            }
+            let got = consumer.join().unwrap();
+            assert_eq!(got.len(), 3);
+        });
+        q.close();
+        assert!(q.push(0, 9).is_err());
+        assert!(!q.wait());
+    }
+
+    #[test]
+    fn per_shard_backpressure_does_not_cross_shards() {
+        let q: ShardedQueue<u32> = ShardedQueue::new(2, 1);
+        q.push(0, 10).unwrap(); // shard 0 now full
+        // shard 1 must accept immediately even though shard 0 is full
+        q.push(1, 20).unwrap();
+        let mut out = Vec::new();
+        q.drain(&mut out, 10);
+        out.sort_unstable();
+        assert_eq!(out, vec![10, 20]);
+    }
+}

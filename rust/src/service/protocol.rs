@@ -1,0 +1,341 @@
+//! Wire protocol of the match service: newline-delimited text commands in,
+//! newline-delimited JSON objects out.
+//!
+//! Commands (case-insensitive verb, whitespace-separated operands):
+//!
+//! ```text
+//! INSERT u v [u v ...]     queue edge insertions
+//! DELETE u v [u v ...]     queue edge deletions
+//! EPOCH                    flush queued updates as one engine epoch,
+//!                          reply with the epoch report
+//! QUERY v                  partner of v (flushes queued updates first, so
+//!                          the answer reflects everything sent before it)
+//! STATS                    service telemetry + live-set maximality audit.
+//!                          The audit walks the whole live edge set —
+//!                          O(|V|+|E_live|) on the engine thread — so poll
+//!                          it like a health check, not a metrics scrape
+//! QUIT                     close this connection
+//! SHUTDOWN                 stop the whole server (TCP mode)
+//! ```
+//!
+//! Every reply is one JSON line with an `"ok"` field, e.g.
+//! `{"ok":true,"op":"epoch","epoch":3,"repair_edges":12,...}` or
+//! `{"ok":false,"error":"..."}` — parseable by anything, greppable by CI.
+
+use crate::dynamic::{EpochReport, Update};
+use crate::VertexId;
+
+/// A parsed client command.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Command {
+    /// Mixed updates, in order (INSERT and DELETE lines both map here).
+    Updates(Vec<Update>),
+    Epoch,
+    Query(VertexId),
+    Stats,
+    Quit,
+    Shutdown,
+}
+
+impl Command {
+    /// Parse one input line; `Ok(None)` for blank/comment lines.
+    pub fn parse(line: &str) -> Result<Option<Command>, String> {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            return Ok(None);
+        }
+        let mut it = line.split_whitespace();
+        let verb = it.next().unwrap().to_ascii_uppercase();
+        let cmd = match verb.as_str() {
+            "INSERT" | "DELETE" => {
+                let ids: Vec<VertexId> = it
+                    .map(|t| {
+                        t.parse::<VertexId>()
+                            .map_err(|_| format!("bad vertex id {t:?}"))
+                    })
+                    .collect::<Result<_, _>>()?;
+                if ids.is_empty() || ids.len() % 2 != 0 {
+                    return Err(format!(
+                        "{verb} expects an even, non-zero number of vertex ids (got {})",
+                        ids.len()
+                    ));
+                }
+                let make = |u, v| {
+                    if verb == "INSERT" {
+                        Update::Insert(u, v)
+                    } else {
+                        Update::Delete(u, v)
+                    }
+                };
+                Command::Updates(ids.chunks(2).map(|p| make(p[0], p[1])).collect())
+            }
+            "EPOCH" => no_operands(&mut it, "EPOCH", Command::Epoch)?,
+            "QUERY" => {
+                let v = it
+                    .next()
+                    .ok_or("QUERY expects a vertex id")?
+                    .parse::<VertexId>()
+                    .map_err(|_| "QUERY expects a vertex id".to_string())?;
+                no_operands(&mut it, "QUERY", Command::Query(v))?
+            }
+            "STATS" => no_operands(&mut it, "STATS", Command::Stats)?,
+            "QUIT" => no_operands(&mut it, "QUIT", Command::Quit)?,
+            "SHUTDOWN" => no_operands(&mut it, "SHUTDOWN", Command::Shutdown)?,
+            other => return Err(format!("unknown command {other:?}")),
+        };
+        Ok(Some(cmd))
+    }
+}
+
+fn no_operands<'a>(
+    it: &mut impl Iterator<Item = &'a str>,
+    verb: &str,
+    cmd: Command,
+) -> Result<Command, String> {
+    match it.next() {
+        Some(extra) => Err(format!("{verb} takes no operands (got {extra:?})")),
+        None => Ok(cmd),
+    }
+}
+
+/// Minimal flat-object JSON line builder (serde is unavailable offline).
+/// All keys this service emits are plain identifiers and all strings are
+/// error messages, so escaping covers quotes, backslashes, and control
+/// characters only.
+pub struct JsonLine {
+    buf: String,
+}
+
+impl Default for JsonLine {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl JsonLine {
+    pub fn new() -> Self {
+        Self { buf: String::from("{") }
+    }
+
+    fn key(&mut self, k: &str) -> &mut Self {
+        if self.buf.len() > 1 {
+            self.buf.push(',');
+        }
+        self.buf.push('"');
+        self.buf.push_str(k);
+        self.buf.push_str("\":");
+        self
+    }
+
+    pub fn bool(&mut self, k: &str, v: bool) -> &mut Self {
+        self.key(k).buf.push_str(if v { "true" } else { "false" });
+        self
+    }
+
+    pub fn u64(&mut self, k: &str, v: u64) -> &mut Self {
+        let s = v.to_string();
+        self.key(k).buf.push_str(&s);
+        self
+    }
+
+    pub fn f64(&mut self, k: &str, v: f64) -> &mut Self {
+        let s = if v.is_finite() { format!("{v:.6}") } else { "null".into() };
+        self.key(k).buf.push_str(&s);
+        self
+    }
+
+    pub fn str(&mut self, k: &str, v: &str) -> &mut Self {
+        self.key(k).buf.push('"');
+        for c in v.chars() {
+            match c {
+                '"' => self.buf.push_str("\\\""),
+                '\\' => self.buf.push_str("\\\\"),
+                c if (c as u32) < 0x20 => {
+                    self.buf.push_str(&format!("\\u{:04x}", c as u32));
+                }
+                c => self.buf.push(c),
+            }
+        }
+        self.buf.push('"');
+        self
+    }
+
+    pub fn finish(&self) -> String {
+        let mut s = self.buf.clone();
+        s.push('}');
+        s
+    }
+}
+
+/// Service-level roll-up rendered by `STATS`.
+#[derive(Clone, Debug, Default)]
+pub struct StatsSnapshot {
+    pub epochs: u64,
+    pub live_edges: u64,
+    pub matched_vertices: usize,
+    pub total_inserts: u64,
+    pub total_deletes: u64,
+    pub total_repair_edges: u64,
+    pub repair_frac_last: f64,
+    pub repair_frac_mean: f64,
+    /// Batch queue→applied latency percentiles, milliseconds.
+    pub p50_batch_ms: f64,
+    pub p99_batch_ms: f64,
+    /// Live-set maximality audit result.
+    pub maximal: bool,
+    pub adjacency_bytes: usize,
+}
+
+/// A reply ready to be rendered onto the wire.
+#[derive(Clone, Debug)]
+pub enum Response {
+    Queued { count: usize },
+    Epoch(EpochReport),
+    /// `EPOCH` barrier with nothing pending: no engine epoch ran.
+    EpochIdle { epochs_applied: u64, live_edges: u64, matched_vertices: usize },
+    Query { vertex: VertexId, partner: Option<VertexId> },
+    Stats(StatsSnapshot),
+    Bye,
+    ShuttingDown,
+    Error(String),
+}
+
+impl Response {
+    pub fn render(&self) -> String {
+        let mut j = JsonLine::new();
+        match self {
+            Response::Queued { count } => {
+                j.bool("ok", true).str("op", "queued").u64("count", *count as u64);
+            }
+            Response::Epoch(r) => {
+                j.bool("ok", true)
+                    .str("op", "epoch")
+                    .u64("epoch", r.epoch)
+                    .u64("inserts", r.inserts as u64)
+                    .u64("deletes", r.deletes as u64)
+                    .u64("inserted_live", r.inserted_live as u64)
+                    .u64("deleted_live", r.deleted_live as u64)
+                    .u64("destroyed_pairs", r.destroyed_pairs as u64)
+                    .u64("freed", r.freed_vertices as u64)
+                    .u64("repair_edges", r.repair_edges as u64)
+                    .f64("repair_frac", r.repair_fraction())
+                    .u64("new_matches", r.new_matches as u64)
+                    .u64("conflicts", r.conflicts)
+                    .u64("live_edges", r.live_edges)
+                    .u64("matched", r.matched_vertices as u64)
+                    .f64("wall_ms", r.wall_s * 1e3);
+            }
+            Response::EpochIdle { epochs_applied, live_edges, matched_vertices } => {
+                j.bool("ok", true)
+                    .str("op", "epoch")
+                    .bool("empty", true)
+                    .u64("epochs_applied", *epochs_applied)
+                    .u64("live_edges", *live_edges)
+                    .u64("matched", *matched_vertices as u64);
+            }
+            Response::Query { vertex, partner } => {
+                j.bool("ok", true)
+                    .str("op", "query")
+                    .u64("vertex", *vertex as u64)
+                    .bool("matched", partner.is_some());
+                if let Some(p) = partner {
+                    j.u64("partner", *p as u64);
+                }
+            }
+            Response::Stats(s) => {
+                j.bool("ok", true)
+                    .str("op", "stats")
+                    .u64("epochs", s.epochs)
+                    .u64("live_edges", s.live_edges)
+                    .u64("matched", s.matched_vertices as u64)
+                    .u64("total_inserts", s.total_inserts)
+                    .u64("total_deletes", s.total_deletes)
+                    .u64("total_repair_edges", s.total_repair_edges)
+                    .f64("repair_frac_last", s.repair_frac_last)
+                    .f64("repair_frac_mean", s.repair_frac_mean)
+                    .f64("p50_batch_ms", s.p50_batch_ms)
+                    .f64("p99_batch_ms", s.p99_batch_ms)
+                    .u64("adjacency_bytes", s.adjacency_bytes as u64)
+                    .bool("maximal", s.maximal);
+            }
+            Response::Bye => {
+                j.bool("ok", true).str("op", "bye");
+            }
+            Response::ShuttingDown => {
+                j.bool("ok", true).str("op", "shutdown");
+            }
+            Response::Error(e) => {
+                j.bool("ok", false).str("error", e);
+            }
+        }
+        j.finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dynamic::Update::{Delete, Insert};
+
+    #[test]
+    fn parses_update_batches() {
+        assert_eq!(
+            Command::parse("INSERT 0 1 2 3").unwrap(),
+            Some(Command::Updates(vec![Insert(0, 1), Insert(2, 3)]))
+        );
+        assert_eq!(
+            Command::parse("delete 5 6").unwrap(),
+            Some(Command::Updates(vec![Delete(5, 6)]))
+        );
+        assert!(Command::parse("INSERT 0 1 2").unwrap_err().contains("even"));
+        assert!(Command::parse("INSERT").unwrap_err().contains("even"));
+        assert!(Command::parse("INSERT a b").unwrap_err().contains("bad vertex id"));
+    }
+
+    #[test]
+    fn parses_control_commands_strictly() {
+        assert_eq!(Command::parse("EPOCH").unwrap(), Some(Command::Epoch));
+        assert_eq!(Command::parse("QUERY 7").unwrap(), Some(Command::Query(7)));
+        assert_eq!(Command::parse("stats").unwrap(), Some(Command::Stats));
+        assert_eq!(Command::parse("QUIT").unwrap(), Some(Command::Quit));
+        assert_eq!(Command::parse("SHUTDOWN").unwrap(), Some(Command::Shutdown));
+        assert!(Command::parse("EPOCH now").is_err());
+        assert!(Command::parse("QUERY").is_err());
+        assert!(Command::parse("FROB 1").is_err());
+        assert_eq!(Command::parse("  ").unwrap(), None);
+        assert_eq!(Command::parse("# comment").unwrap(), None);
+    }
+
+    #[test]
+    fn responses_render_parseable_json_lines() {
+        let q = Response::Queued { count: 4 }.render();
+        assert_eq!(q, r#"{"ok":true,"op":"queued","count":4}"#);
+        let m = Response::Query { vertex: 3, partner: Some(9) }.render();
+        assert!(m.contains(r#""matched":true"#) && m.contains(r#""partner":9"#), "{m}");
+        let u = Response::Query { vertex: 3, partner: None }.render();
+        assert!(u.contains(r#""matched":false"#) && !u.contains("partner"), "{u}");
+        let e = Response::Error("bad \"id\"\n".into()).render();
+        assert_eq!(e, "{\"ok\":false,\"error\":\"bad \\\"id\\\"\\u000a\"}");
+    }
+
+    #[test]
+    fn idle_epoch_is_marked_empty_not_fabricated() {
+        let r = Response::EpochIdle { epochs_applied: 3, live_edges: 7, matched_vertices: 4 };
+        let line = r.render();
+        assert!(line.contains(r#""empty":true"#), "{line}");
+        assert!(line.contains(r#""epochs_applied":3"#), "{line}");
+        assert!(!line.contains(r#""epoch":"#), "{line}");
+    }
+
+    #[test]
+    fn epoch_and_stats_surface_repair_telemetry() {
+        let mut rep = EpochReport { epoch: 2, repair_edges: 25, live_edges: 1000, ..Default::default() };
+        rep.destroyed_pairs = 3;
+        let line = Response::Epoch(rep).render();
+        assert!(line.contains(r#""repair_edges":25"#), "{line}");
+        assert!(line.contains(r#""repair_frac":0.025"#), "{line}");
+        assert!(line.contains(r#""destroyed_pairs":3"#), "{line}");
+        let s = Response::Stats(StatsSnapshot { maximal: true, ..Default::default() }).render();
+        assert!(s.contains(r#""maximal":true"#), "{s}");
+    }
+}

@@ -1,0 +1,704 @@
+//! The long-running match server: connection front-ends, the single engine
+//! thread, and service telemetry.
+//!
+//! One [`DynamicMatcher`] lives on a dedicated engine thread. Client
+//! connections (one thread each in TCP mode; the calling thread in stdio
+//! mode) parse lines into [`Command`]s and push requests onto the
+//! [`ShardedQueue`]; the engine drains all shards round-robin and
+//! **coalesces** every update batch found in a drain round into one engine
+//! epoch — concurrent clients share epochs instead of serializing one
+//! engine pass per request. `EPOCH`, `QUERY`, and `STATS` ride the same
+//! queue (so they observe everything their client sent earlier) and are
+//! answered through one-shot [`Promise`]s.
+//!
+//! Updates are acknowledged at enqueue time (`{"op":"queued"}`); the
+//! per-shard bounded queues push back on flooding clients without stalling
+//! the others.
+
+use super::protocol::{Command, Response, StatsSnapshot};
+use super::{Promise, ShardedQueue};
+use crate::dynamic::{DynamicMatcher, Update};
+use crate::util::stats::percentile;
+use crate::VertexId;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+#[derive(Clone, Debug)]
+pub struct ServiceConfig {
+    /// Vertex universe `0..num_vertices` (fixed for the server's lifetime).
+    pub num_vertices: usize,
+    /// Matcher threads inside the engine's parallel passes.
+    pub threads: usize,
+    /// Front-end queue shards (connections hash onto these).
+    pub shards: usize,
+    /// Per-shard queue capacity (requests) — the back-pressure window.
+    pub shard_capacity: usize,
+    /// Max requests coalesced per engine drain round.
+    pub epoch_max_requests: usize,
+    /// Coalescing threshold: pending updates are applied as an epoch once
+    /// this many accumulate, even without an explicit `EPOCH` barrier.
+    pub epoch_max_updates: usize,
+}
+
+impl Default for ServiceConfig {
+    fn default() -> Self {
+        Self {
+            num_vertices: 1 << 20,
+            threads: 4,
+            shards: 4,
+            shard_capacity: 64,
+            epoch_max_requests: 256,
+            epoch_max_updates: 8192,
+        }
+    }
+}
+
+/// What the server did over its lifetime — returned to the CLI on exit.
+#[derive(Clone, Debug, Default)]
+pub struct ServiceSummary {
+    pub epochs: u64,
+    pub total_inserts: u64,
+    pub total_deletes: u64,
+    pub total_repair_edges: u64,
+    pub live_edges: u64,
+    pub matched_vertices: usize,
+    /// Final live-set maximality audit.
+    pub maximal: bool,
+}
+
+enum Request {
+    Updates { updates: Vec<Update>, enqueued: Instant },
+    Epoch(ReplySlot),
+    Query(VertexId, ReplySlot),
+    Stats(ReplySlot),
+    Shutdown,
+}
+
+/// The engine's end of a [`Promise`]: guarantees the waiting client wakes
+/// even when the slot is dropped unfulfilled (engine panic, shutdown
+/// unwind, a dropped request buffer) — dropping abandons the promise, which
+/// the client's `wait()` observes as `None`. Abandoning after a fulfill is
+/// harmless: the fulfilled value still drains to the waiter.
+struct ReplySlot(Arc<Promise<Response>>);
+
+impl ReplySlot {
+    fn fulfill(&self, r: Response) {
+        self.0.fulfill(r);
+    }
+}
+
+impl Drop for ReplySlot {
+    fn drop(&mut self) {
+        self.0.abandon();
+    }
+}
+
+/// Raises the stop flag, closes the queue, and drops (→ abandons) any
+/// queued requests when the engine thread exits — normally or by panic —
+/// so neither clients nor the accept loop ever wait on a dead engine.
+struct EngineGuard<'a> {
+    queue: &'a ShardedQueue<Request>,
+    stop: &'a AtomicBool,
+}
+
+impl Drop for EngineGuard<'_> {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        self.queue.close();
+        let mut buf = Vec::new();
+        while self.queue.drain(&mut buf, 1024) > 0 {
+            buf.clear(); // dropping a ReplySlot wakes its waiter
+        }
+    }
+}
+
+/// Fixed-size ring of recent batch latencies (ms) for p50/p99 reporting.
+struct LatencyRing {
+    buf: Vec<f64>,
+    pos: usize,
+}
+
+const LATENCY_RING: usize = 4096;
+
+impl LatencyRing {
+    fn new() -> Self {
+        Self { buf: Vec::new(), pos: 0 }
+    }
+
+    fn push(&mut self, ms: f64) {
+        if self.buf.len() < LATENCY_RING {
+            self.buf.push(ms);
+        } else {
+            self.buf[self.pos] = ms;
+            self.pos = (self.pos + 1) % LATENCY_RING;
+        }
+    }
+
+    fn percentile(&self, p: f64) -> f64 {
+        if self.buf.is_empty() {
+            return 0.0;
+        }
+        percentile(&self.buf, p)
+    }
+}
+
+#[derive(Default)]
+struct Telemetry {
+    total_inserts: u64,
+    total_deletes: u64,
+    total_repair_edges: u64,
+    repair_frac_last: f64,
+    repair_frac_sum: f64,
+    epochs_with_updates: u64,
+}
+
+/// The engine thread: drain → coalesce → apply → answer, until the queue
+/// closes or a `SHUTDOWN` arrives.
+fn engine_loop(
+    cfg: &ServiceConfig,
+    queue: &ShardedQueue<Request>,
+    stop: &AtomicBool,
+) -> ServiceSummary {
+    let _guard = EngineGuard { queue, stop };
+    let mut engine = DynamicMatcher::new(cfg.num_vertices, cfg.threads);
+    let mut tel = Telemetry::default();
+    let mut latencies = LatencyRing::new();
+    let mut buf: Vec<Request> = Vec::new();
+    let mut pending: Vec<Update> = Vec::new();
+    let mut pending_stamps: Vec<Instant> = Vec::new();
+
+    let flush = |engine: &mut DynamicMatcher,
+                 pending: &mut Vec<Update>,
+                 stamps: &mut Vec<Instant>,
+                 tel: &mut Telemetry,
+                 latencies: &mut LatencyRing| {
+        if pending.is_empty() {
+            return None;
+        }
+        // Connections validate vertex ranges before enqueueing, so the only
+        // failure left is a bug — surface it without killing the service.
+        let report = match engine.apply_epoch(pending) {
+            Ok(r) => r,
+            Err(e) => {
+                eprintln!("engine: dropped bad epoch: {e}");
+                pending.clear();
+                stamps.clear();
+                return None;
+            }
+        };
+        pending.clear();
+        let now = Instant::now();
+        for s in stamps.drain(..) {
+            latencies.push(now.duration_since(s).as_secs_f64() * 1e3);
+        }
+        tel.total_inserts += report.inserts as u64;
+        tel.total_deletes += report.deletes as u64;
+        tel.total_repair_edges += report.repair_edges as u64;
+        tel.repair_frac_last = report.repair_fraction();
+        tel.repair_frac_sum += report.repair_fraction();
+        tel.epochs_with_updates += 1;
+        Some(report)
+    };
+
+    // Updates coalesce in `pending` until a barrier request (EPOCH / QUERY /
+    // STATS) arrives, the coalescing threshold trips, or the queue closes.
+    // Deliberately NO flush-on-idle: a client's `INSERT ... / EPOCH` pair
+    // must deterministically see its inserts applied *at the barrier*, not
+    // racily swept up in between.
+    let mut shutdown = false;
+    'outer: loop {
+        buf.clear();
+        queue.drain(&mut buf, cfg.epoch_max_requests);
+        if buf.is_empty() {
+            if !queue.wait() {
+                break;
+            }
+            continue;
+        }
+        for req in buf.drain(..) {
+            match req {
+                Request::Updates { updates, enqueued } => {
+                    pending.extend(updates);
+                    pending_stamps.push(enqueued);
+                    if pending.len() >= cfg.epoch_max_updates {
+                        let _ = flush(&mut engine, &mut pending, &mut pending_stamps, &mut tel, &mut latencies);
+                    }
+                }
+                Request::Epoch(p) => {
+                    let rep = flush(
+                        &mut engine,
+                        &mut pending,
+                        &mut pending_stamps,
+                        &mut tel,
+                        &mut latencies,
+                    );
+                    p.fulfill(match rep {
+                        Some(r) => Response::Epoch(r),
+                        // flush of nothing: say so instead of fabricating a
+                        // zero-count report under the previous epoch number
+                        None => Response::EpochIdle {
+                            epochs_applied: engine.epochs_applied(),
+                            live_edges: engine.num_live_edges(),
+                            matched_vertices: engine.matched_vertices(),
+                        },
+                    });
+                }
+                Request::Query(v, p) => {
+                    let _ = flush(&mut engine, &mut pending, &mut pending_stamps, &mut tel, &mut latencies);
+                    p.fulfill(Response::Query { vertex: v, partner: engine.partner(v) });
+                }
+                Request::Stats(p) => {
+                    let _ = flush(&mut engine, &mut pending, &mut pending_stamps, &mut tel, &mut latencies);
+                    p.fulfill(Response::Stats(snapshot(&engine, &tel, &latencies)));
+                }
+                Request::Shutdown => {
+                    // finish answering the rest of this round first — a
+                    // mid-buffer break would strand promises un-fulfilled
+                    stop.store(true, Ordering::Relaxed);
+                    shutdown = true;
+                }
+            }
+        }
+        if shutdown {
+            break 'outer;
+        }
+    }
+
+    // Drain stragglers so no client hangs on an unanswered promise, then
+    // apply any last updates.
+    queue.close();
+    loop {
+        buf.clear();
+        if queue.drain(&mut buf, usize::MAX) == 0 {
+            break;
+        }
+        for req in buf.drain(..) {
+            match req {
+                Request::Updates { updates, enqueued } => {
+                    pending.extend(updates);
+                    pending_stamps.push(enqueued);
+                }
+                Request::Epoch(p) | Request::Stats(p) => {
+                    p.fulfill(Response::Error("server shutting down".into()))
+                }
+                Request::Query(v, p) => {
+                    // honor the ordering guarantee even during shutdown: the
+                    // client's earlier updates (drained just above) must be
+                    // visible to its query
+                    let _ = flush(&mut engine, &mut pending, &mut pending_stamps, &mut tel, &mut latencies);
+                    p.fulfill(Response::Query { vertex: v, partner: engine.partner(v) })
+                }
+                Request::Shutdown => {}
+            }
+        }
+    }
+    let _ = flush(&mut engine, &mut pending, &mut pending_stamps, &mut tel, &mut latencies);
+
+    ServiceSummary {
+        epochs: engine.epochs_applied(),
+        total_inserts: tel.total_inserts,
+        total_deletes: tel.total_deletes,
+        total_repair_edges: tel.total_repair_edges,
+        live_edges: engine.num_live_edges(),
+        matched_vertices: engine.matched_vertices(),
+        maximal: engine.verify().is_ok(),
+    }
+}
+
+fn snapshot(engine: &DynamicMatcher, tel: &Telemetry, lat: &LatencyRing) -> StatsSnapshot {
+    StatsSnapshot {
+        epochs: engine.epochs_applied(),
+        live_edges: engine.num_live_edges(),
+        matched_vertices: engine.matched_vertices(),
+        total_inserts: tel.total_inserts,
+        total_deletes: tel.total_deletes,
+        total_repair_edges: tel.total_repair_edges,
+        repair_frac_last: tel.repair_frac_last,
+        repair_frac_mean: if tel.epochs_with_updates > 0 {
+            tel.repair_frac_sum / tel.epochs_with_updates as f64
+        } else {
+            0.0
+        },
+        p50_batch_ms: lat.percentile(50.0),
+        p99_batch_ms: lat.percentile(99.0),
+        maximal: engine.verify().is_ok(),
+        adjacency_bytes: engine.adjacency_bytes(),
+    }
+}
+
+struct ConnOutcome {
+    shutdown: bool,
+}
+
+/// Serve one client on `reader`/`writer` through shard `shard`.
+fn handle_conn<R: BufRead, W: Write>(
+    cfg: &ServiceConfig,
+    shard: usize,
+    queue: &ShardedQueue<Request>,
+    reader: R,
+    writer: &mut W,
+) -> ConnOutcome {
+    let mut outcome = ConnOutcome { shutdown: false };
+    let mut reply = |writer: &mut W, resp: &Response| -> bool {
+        writeln!(writer, "{}", resp.render()).and_then(|_| writer.flush()).is_ok()
+    };
+    for line in reader.lines() {
+        let line = match line {
+            Ok(l) => l,
+            Err(_) => break, // client went away
+        };
+        let cmd = match Command::parse(&line) {
+            Ok(None) => continue,
+            Ok(Some(c)) => c,
+            Err(e) => {
+                if !reply(writer, &Response::Error(e)) {
+                    break;
+                }
+                continue;
+            }
+        };
+        match cmd {
+            Command::Updates(updates) => {
+                let n = cfg.num_vertices;
+                if let Some(bad) = updates.iter().find(|u| {
+                    let (Update::Insert(a, b) | Update::Delete(a, b)) = **u;
+                    a as usize >= n || b as usize >= n
+                }) {
+                    let err = format!("{bad:?} out of range (|V|={n})");
+                    if !reply(writer, &Response::Error(err)) {
+                        break;
+                    }
+                    continue;
+                }
+                let count = updates.len();
+                let req = Request::Updates { updates, enqueued: Instant::now() };
+                if queue.push(shard, req).is_err() {
+                    let _ = reply(writer, &Response::Error("server shutting down".into()));
+                    break;
+                }
+                if !reply(writer, &Response::Queued { count }) {
+                    break;
+                }
+            }
+            Command::Epoch | Command::Stats | Command::Query(_) => {
+                let p = Promise::shared();
+                let req = match &cmd {
+                    Command::Epoch => Request::Epoch(ReplySlot(Arc::clone(&p))),
+                    Command::Stats => Request::Stats(ReplySlot(Arc::clone(&p))),
+                    Command::Query(v) => {
+                        if *v as usize >= cfg.num_vertices {
+                            let err = format!("vertex {v} out of range (|V|={})", cfg.num_vertices);
+                            if !reply(writer, &Response::Error(err)) {
+                                break;
+                            }
+                            continue;
+                        }
+                        Request::Query(*v, ReplySlot(Arc::clone(&p)))
+                    }
+                    _ => unreachable!(),
+                };
+                if queue.push(shard, req).is_err() {
+                    let _ = reply(writer, &Response::Error("server shutting down".into()));
+                    break;
+                }
+                match p.wait() {
+                    Some(resp) => {
+                        if !reply(writer, &resp) {
+                            break;
+                        }
+                    }
+                    None => {
+                        let _ = reply(writer, &Response::Error("server shutting down".into()));
+                        break;
+                    }
+                }
+            }
+            Command::Quit => {
+                let _ = reply(writer, &Response::Bye);
+                break;
+            }
+            Command::Shutdown => {
+                let _ = queue.push(shard, Request::Shutdown);
+                let _ = reply(writer, &Response::ShuttingDown);
+                outcome.shutdown = true;
+                break;
+            }
+        }
+    }
+    outcome
+}
+
+/// Serve a single client over any line stream — `skipper-cli serve` on a
+/// stdin pipe, and the CI smoke test. Returns when the stream ends or the
+/// client sends `QUIT`/`SHUTDOWN`.
+pub fn serve_lines<R: BufRead, W: Write>(
+    cfg: &ServiceConfig,
+    reader: R,
+    writer: &mut W,
+) -> ServiceSummary {
+    let queue: ShardedQueue<Request> = ShardedQueue::new(cfg.shards, cfg.shard_capacity);
+    let stop = AtomicBool::new(false);
+    std::thread::scope(|s| {
+        let engine = s.spawn(|| engine_loop(cfg, &queue, &stop));
+        handle_conn(cfg, 0, &queue, reader, writer);
+        queue.close();
+        engine.join().expect("engine thread panicked")
+    })
+}
+
+/// Serve concurrent clients over TCP. Binds `addr` (use port 0 for an
+/// ephemeral port), invokes `on_ready` with the bound address, and runs
+/// until a client sends `SHUTDOWN`. Each connection gets its own thread
+/// and queue shard.
+pub fn serve_tcp(
+    cfg: &ServiceConfig,
+    addr: &str,
+    on_ready: impl FnOnce(SocketAddr),
+) -> Result<ServiceSummary, String> {
+    let listener = TcpListener::bind(addr).map_err(|e| format!("bind {addr}: {e}"))?;
+    listener
+        .set_nonblocking(true)
+        .map_err(|e| format!("nonblocking: {e}"))?;
+    let local = listener.local_addr().map_err(|e| format!("local_addr: {e}"))?;
+    on_ready(local);
+
+    let queue: ShardedQueue<Request> = ShardedQueue::new(cfg.shards, cfg.shard_capacity);
+    let stop = AtomicBool::new(false);
+    // every accepted socket, keyed by connection id, so shutdown can
+    // unblock handlers parked in a blocking read; each handler removes its
+    // own entry on exit — otherwise the dup'd fd would hold the connection
+    // established after QUIT (no FIN for the client) and leak one fd per
+    // connection
+    let open_conns: Mutex<std::collections::HashMap<usize, TcpStream>> =
+        Mutex::new(std::collections::HashMap::new());
+    let summary = std::thread::scope(|s| {
+        let engine = s.spawn(|| engine_loop(cfg, &queue, &stop));
+        let mut conn_id = 0usize;
+        while !stop.load(Ordering::Relaxed) {
+            match listener.accept() {
+                Ok((stream, _peer)) => {
+                    conn_id += 1;
+                    let shard = conn_id;
+                    match stream.try_clone() {
+                        Ok(clone) => {
+                            open_conns.lock().unwrap().insert(shard, clone);
+                        }
+                        // without a registry dup this handler could never be
+                        // woken at shutdown — refuse the connection instead
+                        Err(_) => continue,
+                    }
+                    let queue = &queue;
+                    let stop = &stop;
+                    let open_conns = &open_conns;
+                    s.spawn(move || {
+                        // the listener is nonblocking and some platforms
+                        // (BSD/macOS) let accepted sockets inherit that —
+                        // reads here must block
+                        let _ = stream.set_nonblocking(false);
+                        let _ = stream.set_nodelay(true);
+                        let reader = match stream.try_clone() {
+                            Ok(c) => BufReader::new(c),
+                            Err(_) => {
+                                open_conns.lock().unwrap().remove(&shard);
+                                return;
+                            }
+                        };
+                        let mut writer = stream;
+                        let out = handle_conn(cfg, shard, queue, reader, &mut writer);
+                        // drop our registry dup so closing `writer` really
+                        // closes the connection (FIN reaches the client)
+                        open_conns.lock().unwrap().remove(&shard);
+                        if out.shutdown {
+                            stop.store(true, Ordering::Relaxed);
+                        }
+                    });
+                }
+                Err(e)
+                    if matches!(
+                        e.kind(),
+                        std::io::ErrorKind::WouldBlock | std::io::ErrorKind::Interrupted
+                    ) =>
+                {
+                    std::thread::sleep(std::time::Duration::from_millis(20));
+                }
+                Err(e) => {
+                    eprintln!("accept: {e}");
+                    stop.store(true, Ordering::Relaxed);
+                }
+            }
+        }
+        // wake handlers blocked mid-read so the scope can actually close
+        for (_, c) in open_conns.lock().unwrap().drain() {
+            let _ = c.shutdown(Shutdown::Both);
+        }
+        queue.close();
+        engine.join().expect("engine thread panicked")
+    });
+    Ok(summary)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::{Read as _, Write as _};
+
+    fn drive(cfg: &ServiceConfig, script: &str) -> (Vec<String>, ServiceSummary) {
+        let mut out: Vec<u8> = Vec::new();
+        let summary = serve_lines(cfg, script.as_bytes(), &mut out);
+        let lines = String::from_utf8(out)
+            .unwrap()
+            .lines()
+            .map(String::from)
+            .collect();
+        (lines, summary)
+    }
+
+    fn small_cfg() -> ServiceConfig {
+        // threads: 1 -> deterministic matching order over the wire
+        ServiceConfig { num_vertices: 16, threads: 1, ..Default::default() }
+    }
+
+    #[test]
+    fn stdio_session_runs_mixed_epochs_and_stays_maximal() {
+        let script = "\
+INSERT 0 1 1 2 2 3\n\
+EPOCH\n\
+DELETE 1 2\n\
+EPOCH\n\
+INSERT 3 4 0 2\n\
+EPOCH\n\
+QUERY 0\n\
+STATS\n\
+QUIT\n";
+        let (lines, summary) = drive(&small_cfg(), script);
+        assert!(lines[0].contains(r#""op":"queued","count":3"#), "{}", lines[0]);
+        assert!(lines[1].contains(r#""op":"epoch""#) && lines[1].contains(r#""new_matches":2"#),
+            "{}", lines[1]);
+        // with one matcher thread the stream order matches (0,1) and (2,3);
+        // deleting (1,2) therefore removes an unmatched edge: no repair
+        assert!(lines[3].contains(r#""destroyed_pairs":0"#), "{}", lines[3]);
+        let stats = lines.iter().find(|l| l.contains(r#""op":"stats""#)).unwrap();
+        assert!(stats.contains(r#""maximal":true"#), "{stats}");
+        assert!(lines.last().unwrap().contains(r#""op":"bye""#));
+        assert_eq!(summary.epochs, 3);
+        assert!(summary.maximal);
+        assert_eq!(summary.total_inserts, 5);
+        assert_eq!(summary.total_deletes, 1);
+    }
+
+    #[test]
+    fn delete_of_matched_edge_reports_repair_over_the_wire() {
+        // triangle + pendant: 0-1, 1-2, 2-0, 2-3
+        let script = "\
+INSERT 0 1 1 2 2 0 2 3\n\
+EPOCH\n\
+DELETE 0 1\n\
+EPOCH\n\
+STATS\n\
+QUIT\n";
+        let (lines, summary) = drive(&small_cfg(), script);
+        // (0,1) matches first in the single-threaded epoch; its deletion
+        // must free both endpoints and re-examine their surviving edges
+        // (0,2) and (1,2)
+        let second_epoch = &lines[3];
+        assert!(second_epoch.contains(r#""destroyed_pairs":1"#), "{second_epoch}");
+        assert!(second_epoch.contains(r#""freed":2"#), "{second_epoch}");
+        assert!(second_epoch.contains(r#""repair_edges":2"#), "{second_epoch}");
+        let stats = lines.iter().find(|l| l.contains(r#""op":"stats""#)).unwrap();
+        assert!(stats.contains(r#""maximal":true"#), "{stats}");
+        assert!(summary.maximal);
+    }
+
+    #[test]
+    fn query_reflects_all_prior_updates_without_explicit_epoch() {
+        let script = "INSERT 4 5\nQUERY 4\nQUERY 6\nQUIT\n";
+        let (lines, _) = drive(&small_cfg(), script);
+        let q4 = &lines[1];
+        assert!(q4.contains(r#""matched":true"#) && q4.contains(r#""partner":5"#), "{q4}");
+        assert!(lines[2].contains(r#""matched":false"#), "{}", lines[2]);
+    }
+
+    #[test]
+    fn malformed_and_out_of_range_lines_get_errors_not_death() {
+        let script = "FROB\nINSERT 1\nINSERT 0 99\nQUERY 99\nINSERT 0 1\nQUERY 0\nQUIT\n";
+        let (lines, summary) = drive(&small_cfg(), script);
+        assert!(lines[0].contains(r#""ok":false"#));
+        assert!(lines[1].contains("even"));
+        assert!(lines[2].contains("out of range"));
+        assert!(lines[3].contains("out of range"));
+        assert!(lines[4].contains(r#""op":"queued""#));
+        assert!(lines[5].contains(r#""matched":true"#), "{}", lines[5]);
+        assert!(summary.maximal);
+    }
+
+    #[test]
+    fn eof_without_quit_flushes_pending_updates() {
+        let (_, summary) = drive(&small_cfg(), "INSERT 0 1 2 3\n");
+        assert_eq!(summary.total_inserts, 2);
+        assert_eq!(summary.matched_vertices, 4);
+        assert!(summary.maximal);
+        assert!(summary.epochs >= 1);
+    }
+
+    #[test]
+    fn tcp_serves_concurrent_clients_and_shuts_down() {
+        // sandboxes without loopback can't exercise the TCP front-end; the
+        // stdio tests above cover everything but the socket plumbing
+        if std::net::TcpListener::bind("127.0.0.1:0").is_err() {
+            eprintln!("skipping TCP test: loopback unavailable");
+            return;
+        }
+        let cfg = ServiceConfig { num_vertices: 64, threads: 2, ..Default::default() };
+        let (addr_tx, addr_rx) = std::sync::mpsc::channel();
+        let server = std::thread::spawn(move || {
+            serve_tcp(&cfg, "127.0.0.1:0", move |a| addr_tx.send(a).unwrap()).unwrap()
+        });
+        let addr = addr_rx.recv().unwrap();
+
+        let ask = |script: &str| -> Vec<String> {
+            let mut s = std::net::TcpStream::connect(addr).unwrap();
+            s.write_all(script.as_bytes()).unwrap();
+            s.shutdown(std::net::Shutdown::Write).unwrap();
+            let mut buf = String::new();
+            s.read_to_string(&mut buf).unwrap();
+            buf.lines().map(String::from).collect()
+        };
+
+        // two sequential clients mutating the same engine
+        let a = ask("INSERT 0 1 2 3\nEPOCH\nQUIT\n");
+        assert!(a[1].contains(r#""new_matches":2"#), "{:?}", a);
+        let b = ask("DELETE 0 1\nEPOCH\nQUERY 0\nSTATS\nQUIT\n");
+        assert!(b[1].contains(r#""destroyed_pairs":1"#), "{:?}", b);
+        assert!(b[2].contains(r#""matched":false"#), "{:?}", b);
+        assert!(b[3].contains(r#""maximal":true"#), "{:?}", b);
+
+        // a swarm of parallel clients, then shutdown
+        let mut clients = Vec::new();
+        for i in 0..4u32 {
+            let addr = addr;
+            clients.push(std::thread::spawn(move || {
+                let base = 8 * (i + 1);
+                let mut s = std::net::TcpStream::connect(addr).unwrap();
+                let script =
+                    format!("INSERT {} {} {} {}\nEPOCH\nQUIT\n", base, base + 1, base + 2, base + 3);
+                s.write_all(script.as_bytes()).unwrap();
+                s.shutdown(std::net::Shutdown::Write).unwrap();
+                let mut buf = String::new();
+                s.read_to_string(&mut buf).unwrap();
+                assert!(buf.contains(r#""op":"epoch""#), "{buf}");
+            }));
+        }
+        for c in clients {
+            c.join().unwrap();
+        }
+        let bye = ask("SHUTDOWN\n");
+        assert!(bye[0].contains(r#""op":"shutdown""#), "{:?}", bye);
+        let summary = server.join().unwrap();
+        assert!(summary.maximal);
+        assert_eq!(summary.total_inserts, 2 + 16);
+        assert_eq!(summary.total_deletes, 1);
+    }
+}

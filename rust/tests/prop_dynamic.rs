@@ -1,0 +1,191 @@
+//! Property tests for the fully dynamic engine: for random insert/delete
+//! schedules over every generator family, after EVERY epoch the maintained
+//! matching must be (a) a subset of the live edge set, (b) endpoint-
+//! disjoint, and (c) maximal over the live edges — checked with
+//! `verify_maximal_dynamic`, the deletion-aware verifier, against an
+//! independently maintained model of the live edge set.
+
+use skipper::dynamic::{DynamicMatcher, Update};
+use skipper::graph::gen::{barabasi_albert, erdos_renyi, grid};
+use skipper::matching::verify::verify_maximal_dynamic;
+use skipper::util::qcheck::{check, Config};
+use skipper::util::rng::Xoshiro256pp;
+use skipper::VertexId;
+
+#[derive(Clone, Debug)]
+struct Schedule {
+    family: &'static str,
+    n: usize,
+    /// Edge population the schedule draws from.
+    population: Vec<(VertexId, VertexId)>,
+    /// Per-epoch update counts and the delete bias in percent.
+    epochs: usize,
+    batch: usize,
+    delete_pct: usize,
+    threads: usize,
+    seed: u64,
+}
+
+fn arb_schedule(rng: &mut Xoshiro256pp) -> Schedule {
+    let pick = rng.next_usize(3);
+    let (family, n, el) = match pick {
+        0 => {
+            let n = 16 + rng.next_usize(400);
+            let m = 2 * n + rng.next_usize(4 * n);
+            ("er", n, erdos_renyi::edges(n, m, rng.next_u64()))
+        }
+        1 => {
+            let n = 16 + rng.next_usize(300);
+            ("ba", n, barabasi_albert::edges(n, 1 + rng.next_usize(4), rng.next_u64()))
+        }
+        _ => {
+            let rows = 3 + rng.next_usize(18);
+            let cols = 3 + rng.next_usize(18);
+            ("grid", rows * cols, grid::edges(rows, cols, false))
+        }
+    };
+    let mut population: Vec<(VertexId, VertexId)> = el
+        .edges
+        .iter()
+        .filter(|&&(u, v)| u != v)
+        .map(|&(u, v)| (u.min(v), u.max(v)))
+        .collect();
+    population.sort_unstable();
+    population.dedup();
+    rng.shuffle(&mut population);
+    Schedule {
+        family,
+        n,
+        population,
+        epochs: 3 + rng.next_usize(10),
+        batch: 5 + rng.next_usize(120),
+        delete_pct: 20 + rng.next_usize(60),
+        threads: 1 + rng.next_usize(4),
+        seed: rng.next_u64(),
+    }
+}
+
+/// Run the schedule; error on the first invariant violation.
+fn run_schedule(s: &Schedule) -> Result<(), String> {
+    let mut rng = Xoshiro256pp::new(s.seed);
+    let mut engine = DynamicMatcher::new(s.n, s.threads);
+    // reference model of the live graph; a Vec suffices (and samples in
+    // O(1)) because `pool` and `live` stay disjoint by construction, so an
+    // insert can never duplicate a live edge
+    let mut live: Vec<(VertexId, VertexId)> = Vec::new();
+    let mut pool = s.population.clone(); // not-yet-live edges
+    let mut dead: Vec<(VertexId, VertexId)> = Vec::new();
+
+    for epoch in 0..s.epochs {
+        let mut updates = Vec::with_capacity(s.batch);
+        for _ in 0..s.batch {
+            let deleting = !live.is_empty() && rng.next_usize(100) < s.delete_pct;
+            if deleting {
+                let k = rng.next_usize(live.len());
+                let (u, v) = live.swap_remove(k);
+                dead.push((u, v));
+                updates.push(Update::Delete(u, v));
+            } else {
+                if pool.is_empty() {
+                    pool.append(&mut dead);
+                    rng.shuffle(&mut pool);
+                }
+                match pool.pop() {
+                    Some((u, v)) => {
+                        live.push((u, v));
+                        updates.push(Update::Insert(u, v));
+                    }
+                    None => break, // population exhausted and nothing dead
+                }
+            }
+        }
+        let report = engine
+            .apply_epoch(&updates)
+            .map_err(|e| format!("{} epoch {epoch}: {e}", s.family))?;
+
+        // live-set agreement between engine and model
+        if engine.num_live_edges() != live.len() as u64 {
+            return Err(format!(
+                "{} epoch {epoch}: engine live {} != model live {}",
+                s.family,
+                engine.num_live_edges(),
+                live.len()
+            ));
+        }
+        // matching ⊆ live ∧ endpoint-disjoint ∧ maximal — via the dynamic
+        // verifier fed from the *model's* live set, so the adjacency
+        // sidecar is cross-checked too
+        let pairs = engine.matching_pairs();
+        verify_maximal_dynamic(s.n, live.iter().copied(), &pairs)
+            .map_err(|e| format!("{} epoch {epoch} (batch {}): {e}", s.family, s.batch))?;
+        // engine's own audit must agree
+        engine
+            .verify()
+            .map_err(|e| format!("{} epoch {epoch}: self-audit: {e}", s.family))?;
+        // matched-vertex bookkeeping
+        if report.matched_vertices != 2 * pairs.len() {
+            return Err(format!(
+                "{} epoch {epoch}: matched_vertices {} != 2×{}",
+                s.family,
+                report.matched_vertices,
+                pairs.len()
+            ));
+        }
+    }
+    Ok(())
+}
+
+#[test]
+fn random_interleavings_stay_maximal_on_every_family() {
+    check(
+        &Config { cases: 40, ..Default::default() },
+        arb_schedule,
+        run_schedule,
+    );
+}
+
+#[test]
+fn delete_heavy_schedules_stay_maximal() {
+    // deletions dominate: most epochs tear matched pairs apart, so the
+    // repair sweep carries the maximality invariant almost alone
+    check(
+        &Config { cases: 25, seed: 0xDE1E7E, ..Default::default() },
+        |rng| {
+            let mut s = arb_schedule(rng);
+            s.delete_pct = 75 + rng.next_usize(21); // 75..=95
+            s
+        },
+        run_schedule,
+    );
+}
+
+#[test]
+fn drain_to_empty_then_refill_stays_maximal() {
+    // insert everything, delete everything (matching must end empty), then
+    // refill — exercises repair down to the empty graph and back
+    let el = erdos_renyi::edges(200, 800, 3);
+    let mut population: Vec<(VertexId, VertexId)> = el
+        .edges
+        .iter()
+        .filter(|&&(u, v)| u != v)
+        .map(|&(u, v)| (u.min(v), u.max(v)))
+        .collect();
+    population.sort_unstable();
+    population.dedup();
+    let mut engine = DynamicMatcher::new(200, 2);
+    let ins: Vec<Update> = population.iter().map(|&(u, v)| Update::Insert(u, v)).collect();
+    engine.apply_epoch(&ins).unwrap();
+    engine.verify().unwrap();
+    assert!(engine.matched_vertices() > 0);
+    for chunk in population.chunks(97) {
+        let dels: Vec<Update> = chunk.iter().map(|&(u, v)| Update::Delete(u, v)).collect();
+        engine.apply_epoch(&dels).unwrap();
+        engine.verify().unwrap();
+    }
+    assert_eq!(engine.num_live_edges(), 0);
+    assert_eq!(engine.matched_vertices(), 0, "no live edges, no matches");
+    assert!(engine.matching_pairs().is_empty());
+    engine.apply_epoch(&ins).unwrap();
+    engine.verify().unwrap();
+    assert!(engine.matched_vertices() > 0, "engine recovers after total drain");
+}
