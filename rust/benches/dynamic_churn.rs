@@ -1,17 +1,20 @@
 //! Bench: fully dynamic churn throughput and repair cost.
 //!
-//! Three questions, measured on an RMAT population at
+//! Four questions, measured on an RMAT population at
 //! `SKIPPER_BENCH_SCALE`-dependent size:
 //!   1. insert-only epochs (the §V-C incremental regime) — updates/s,
 //!   2. 50/50 insert/delete epochs — updates/s including repair sweeps,
 //!   3. repair scaling — how repair work grows with the delete batch size
-//!      (the sublinearity claim: fraction of live edges, not |E|).
+//!      (the sublinearity claim: fraction of live edges, not |E|),
+//!   4. engine-shard scaling — the same 50/50 churn at P = 1/2/4/8 vertex
+//!      shards, reporting epoch throughput AND the mutate-phase wall time,
+//!      the phase that was single-threaded before the sharding refactor.
 
 mod common;
 
 use skipper::coordinator::datasets::Scale;
 use skipper::dynamic::churn::ChurnGen;
-use skipper::dynamic::{DynamicMatcher, Update};
+use skipper::dynamic::{DynamicMatcher, ShardedDynamicMatcher, Update};
 use skipper::util::benchlib::{bench, BenchConfig};
 use skipper::util::rng::Xoshiro256pp;
 
@@ -94,6 +97,41 @@ fn main() {
             rep.repair_edges,
             rep.live_edges,
             rep.repair_fraction()
+        );
+    }
+
+    // 4. engine-shard sweep: identical 50/50 churn at P = 1/2/4/8. The
+    // mutate column is the proof-of-refactor: it is the phase that ran on
+    // one thread before vertex partitioning, now timed per epoch.
+    println!("engine-shard sweep (50/50 churn, batch={batch}, {churn_epochs} epochs/iter):");
+    for shards in [1usize, 2, 4, 8] {
+        let engine = ShardedDynamicMatcher::new(n, threads, shards);
+        engine.apply_epoch(&warm_ups).expect("warmup");
+        let live: Vec<(u32, u32)> = engine.live_edges();
+        let mut rng = Xoshiro256pp::new(101);
+        let mut epoch_s = Vec::new();
+        let mut mutate_s = Vec::new();
+        let iters = 3usize;
+        for e in 0..iters * churn_epochs {
+            let mut ups: Vec<Update> = Vec::with_capacity(batch);
+            for i in 0..batch / 2 {
+                let (u, v) = live[(rng.next_usize(live.len()) + e + i) % live.len()];
+                ups.push(Update::Delete(u, v));
+                ups.push(Update::Insert(u, v));
+            }
+            let rep = engine.apply_epoch(&ups).expect("churn epoch");
+            epoch_s.push(rep.wall_s);
+            mutate_s.push(rep.mutate_wall_s);
+        }
+        let wall: f64 = epoch_s.iter().sum();
+        let mutate: f64 = mutate_s.iter().sum();
+        let updates = (epoch_s.len() * batch) as f64;
+        println!(
+            "  P={shards}: {:>7.2} Mupdates/s  epoch={:>8.2}ms  mutate={:>8.2}ms ({:>4.1}% of epoch)",
+            updates / wall.max(1e-9) / 1e6,
+            wall / epoch_s.len() as f64 * 1e3,
+            mutate / mutate_s.len() as f64 * 1e3,
+            100.0 * mutate / wall.max(1e-9),
         );
     }
 }

@@ -510,6 +510,66 @@ pub fn dynamic_churn(scale: Scale, threads: usize) -> Result<String, String> {
     ))
 }
 
+/// Shard-count scaling experiment (`experiment scale`): the same RMAT churn
+/// schedule driven through the vertex-partitioned engine at
+/// `engine_shards ∈ {1, 2, 4, 8}`, with maximality verified over the live
+/// set after every epoch. Reports epoch throughput and — the point of the
+/// sharding refactor — the mutate-phase wall time, which was the engine's
+/// only serial phase before vertex partitioning.
+pub fn shard_scale(scale: Scale, threads: usize) -> Result<String, String> {
+    use crate::dynamic::churn::{run_churn, ChurnConfig, ChurnGen};
+    use crate::util::stats::percentile;
+    let exp: u32 = match scale {
+        Scale::Tiny => 10,
+        Scale::Small => 13,
+        Scale::Medium => 16,
+        Scale::Large => 19,
+    };
+    let n = 1usize << exp;
+    let gen = ChurnGen::Rmat { scale: exp, avg_degree: 8 };
+    let mut t = Table::new(&[
+        "shards", "epochs", "batch", "updates/s", "epoch p50 ms", "mutate p50 ms",
+        "mutate share", "repair frac (mean)", "|M|", "verified",
+    ]);
+    for shards in [1usize, 2, 4, 8] {
+        let cfg = ChurnConfig {
+            epochs: 6,
+            batch: (n / 8).max(64),
+            delete_frac: 0.5,
+            warmup_epochs: 3,
+            threads,
+            engine_shards: shards,
+            verify: true,
+            ..ChurnConfig::new(gen)
+        };
+        let summary = run_churn(&cfg, |_| {})
+            .map_err(|e| format!("scale P={shards} churn failed: {e}"))?;
+        let wall: f64 = summary.epoch_wall_s.iter().sum();
+        let mutate: f64 = summary.epoch_mutate_s.iter().sum();
+        let updates = (summary.epochs * cfg.batch) as f64;
+        t.row(&[
+            shards.to_string(),
+            format!("{}+{}", summary.warmup_epochs, summary.epochs),
+            cfg.batch.to_string(),
+            format!("{:.0}", updates / wall.max(1e-9)),
+            format!("{:.2}", percentile(&summary.epoch_wall_s, 50.0) * 1e3),
+            format!("{:.2}", percentile(&summary.epoch_mutate_s, 50.0) * 1e3),
+            format!("{:.1}%", 100.0 * mutate / wall.max(1e-9)),
+            format!("{:.4}", summary.repair_frac_mean),
+            (summary.final_matched_vertices / 2).to_string(),
+            format!(
+                "{}/{} epochs",
+                summary.verified_epochs,
+                summary.warmup_epochs + summary.epochs
+            ),
+        ]);
+    }
+    Ok(format!(
+        "Engine-shard scaling — identical rmat 50/50 churn at engine_shards ∈ {{1,2,4,8}}, |V|={n} (t={threads}; maximality verified after every epoch)\n{}\nmutate share = parallel per-shard mutate phase / epoch wall; before sharding this phase was single-threaded\n",
+        t.render()
+    ))
+}
+
 /// Cross-layer experiment: the XLA-backed (L1 Pallas + L2 JAX) EMS matcher
 /// vs Skipper and SGMM on padded small graphs. Requires `make artifacts`.
 pub fn xla_ems(cache_dir: &str) -> Result<String, String> {
@@ -588,6 +648,19 @@ mod tests {
         }
         assert!(s.contains("12/12 epochs"), "unverified epochs in: {s}");
         assert!(s.contains("repair fraction"), "{s}");
+    }
+
+    #[test]
+    fn shard_scale_renders_all_shard_counts_verified() {
+        let s = shard_scale(Scale::Tiny, 2).unwrap();
+        // one fully verified row per shard count
+        assert_eq!(
+            s.matches("9/9 epochs").count(),
+            4,
+            "expected 4 verified rows in: {s}"
+        );
+        assert!(s.contains("engine_shards"), "{s}");
+        assert!(s.contains("mutate share"), "{s}");
     }
 
     #[test]

@@ -1,4 +1,4 @@
-//! Compact mutable adjacency sidecar for the dynamic engine.
+//! Compact mutable adjacency sidecars for the dynamic engine.
 //!
 //! The Skipper core deliberately keeps *no* topology — one state byte per
 //! vertex is the paper's whole memory story. That is exactly why deletions
@@ -6,17 +6,32 @@
 //! re-run the reservation state machine over the freed endpoints' *surviving*
 //! incident edges, and something has to remember what those are.
 //!
-//! [`DynamicAdjacency`] is that something: per-vertex edge lists that grow
-//! in amortized-O(1) pushes, delete by **tombstoning** (the slot is
-//! overwritten with [`INVALID_VERTEX`] instead of shifting the tail), and
+//! Two layers live here:
+//!
+//! * [`HalfAdjacency`] — per-vertex edge lists over a contiguous *owned*
+//!   vertex range `[start, start+len)`. Each owned vertex stores its full
+//!   neighbor list (neighbors may live anywhere in the universe); an
+//!   undirected edge is live iff **every owner of an endpoint stores its
+//!   half**, which callers maintain by applying each edit on each owned
+//!   endpoint. This is the unit the vertex-partitioned
+//!   [`super::ShardedDynamicMatcher`] gives every shard.
+//! * [`DynamicAdjacency`] — the single-owner (whole-universe) convenience
+//!   wrapper: one `HalfAdjacency` covering `0..num_vertices` with symmetric
+//!   insert/delete and whole-graph iteration, used by tests and any caller
+//!   that wants plain set-semantics edge storage.
+//!
+//! Lists grow in amortized-O(1) pushes, delete by **tombstoning** (the slot
+//! is overwritten with [`INVALID_VERTEX`] instead of shifting the tail), and
 //! reclaim tombstones with **periodic per-vertex compaction** once they
 //! outnumber the live entries. Deletes therefore cost one scan of the
-//! endpoint's list, inserts cost a membership scan (the structure maintains
+//! endpoint's list, inserts cost a membership scan (the structures maintain
 //! *set* semantics — the live graph either has an edge or it doesn't, which
 //! is what the delete path and the maximality verifier need), and iteration
-//! skips tombstones in place. Self-loops are rejected at insert: the matcher
-//! skips them anyway (Algorithm 1 lines 6–7), so they can never affect
-//! maximality and keeping them live would only pollute repair sweeps.
+//! skips tombstones in place. Self-loops are rejected at the
+//! [`DynamicAdjacency`] level: the matcher skips them anyway (Algorithm 1
+//! lines 6–7), so they can never affect maximality and keeping them live
+//! would only pollute repair sweeps; the sharded engine filters them before
+//! its half-edge edits for the same reason.
 
 use crate::{VertexId, INVALID_VERTEX};
 
@@ -80,34 +95,117 @@ impl AdjList {
     }
 }
 
-/// Mutable adjacency over a fixed vertex universe `0..num_vertices`, with
-/// set semantics on undirected edges (each edge stored in both endpoint
-/// lists) and tombstoned deletes.
-pub struct DynamicAdjacency {
+/// Half-edge adjacency over the contiguous owned vertex range
+/// `[start, start+len)`: tombstoned per-vertex neighbor lists with periodic
+/// compaction, edited one endpoint at a time.
+///
+/// `HalfAdjacency` does **not** enforce set semantics on its own —
+/// [`insert_half`](Self::insert_half) pushes unconditionally so a caller
+/// that already ran [`contains_half`](Self::contains_half) (to decide
+/// whether the edge is fresh) never pays a second membership scan. Callers
+/// keep the two endpoint halves of every undirected edge in agreement by
+/// applying each edit on every owned endpoint, in a consistent order per
+/// edge.
+pub struct HalfAdjacency {
+    start: usize,
     lists: Vec<AdjList>,
-    live_edges: u64,
+    /// Live directed half-edges stored here (each undirected edge
+    /// contributes one per stored endpoint).
+    half_edges: u64,
     compactions: u64,
 }
 
-impl DynamicAdjacency {
-    pub fn new(num_vertices: usize) -> Self {
+impl HalfAdjacency {
+    /// Empty lists for the owned range `[start, start+len)`.
+    pub fn new(start: VertexId, len: usize) -> Self {
         let mut lists = Vec::new();
-        lists.resize_with(num_vertices, AdjList::default);
-        Self { lists, live_edges: 0, compactions: 0 }
+        lists.resize_with(len, AdjList::default);
+        Self { start: start as usize, lists, half_edges: 0, compactions: 0 }
+    }
+
+    /// First owned vertex.
+    #[inline]
+    pub fn start(&self) -> VertexId {
+        self.start as VertexId
+    }
+
+    /// One past the last owned vertex.
+    #[inline]
+    pub fn end(&self) -> VertexId {
+        (self.start + self.lists.len()) as VertexId
     }
 
     #[inline]
-    pub fn num_vertices(&self) -> usize {
-        self.lists.len()
+    pub fn owns(&self, v: VertexId) -> bool {
+        let v = v as usize;
+        v >= self.start && v < self.start + self.lists.len()
     }
 
-    /// Live undirected edge count.
     #[inline]
-    pub fn num_live_edges(&self) -> u64 {
-        self.live_edges
+    fn list(&self, v: VertexId) -> &AdjList {
+        &self.lists[v as usize - self.start]
     }
 
-    /// Tombstoned slots currently awaiting compaction (both directions).
+    #[inline]
+    fn list_mut(&mut self, v: VertexId) -> &mut AdjList {
+        &mut self.lists[v as usize - self.start]
+    }
+
+    /// Is the half-edge `v → nb` stored? `v` must be owned.
+    #[inline]
+    pub fn contains_half(&self, v: VertexId, nb: VertexId) -> bool {
+        self.list(v).contains(nb)
+    }
+
+    /// Store the half-edge `v → nb` unconditionally (no membership scan —
+    /// see the type docs). `v` must be owned.
+    #[inline]
+    pub fn insert_half(&mut self, v: VertexId, nb: VertexId) {
+        self.list_mut(v).push(nb);
+        self.half_edges += 1;
+    }
+
+    /// Tombstone the half-edge `v → nb`; false if it was not stored.
+    /// Compacts `v`'s list when its tombstones dominate.
+    pub fn remove_half(&mut self, v: VertexId, nb: VertexId) -> bool {
+        if !self.list_mut(v).remove(nb) {
+            return false;
+        }
+        self.half_edges -= 1;
+        if self.list_mut(v).maybe_compact() {
+            self.compactions += 1;
+        }
+        true
+    }
+
+    /// Live neighbors of owned vertex `v` (tombstones skipped), slot order.
+    pub fn neighbors(&self, v: VertexId) -> impl Iterator<Item = VertexId> + '_ {
+        self.list(v)
+            .slots
+            .iter()
+            .copied()
+            .filter(|&s| s != INVALID_VERTEX)
+    }
+
+    #[inline]
+    pub fn live_degree(&self, v: VertexId) -> usize {
+        self.list(v).live_len()
+    }
+
+    /// Raw slot count of `v`'s list, tombstones included — lets callers
+    /// pick the sparser endpoint for a membership scan.
+    #[inline]
+    pub(crate) fn slots_len(&self, v: VertexId) -> usize {
+        self.list(v).slots.len()
+    }
+
+    /// Live directed half-edges stored in this range.
+    #[inline]
+    pub fn half_edges(&self) -> u64 {
+        self.half_edges
+    }
+
+    /// Tombstoned slots currently awaiting compaction.
     pub fn tombstones(&self) -> u64 {
         self.lists.iter().map(|l| l.dead as u64).sum()
     }
@@ -117,89 +215,109 @@ impl DynamicAdjacency {
         self.compactions
     }
 
-    #[inline]
-    pub fn live_degree(&self, v: VertexId) -> usize {
-        self.lists[v as usize].live_len()
-    }
-
-    pub fn contains(&self, u: VertexId, v: VertexId) -> bool {
-        let (u, v) = (u as usize, v as usize);
-        if u >= self.lists.len() || v >= self.lists.len() {
-            return false;
-        }
-        // scan the sparser endpoint
-        if self.lists[u].slots.len() <= self.lists[v].slots.len() {
-            self.lists[u].contains(v as VertexId)
-        } else {
-            self.lists[v].contains(u as VertexId)
-        }
-    }
-
-    /// Insert edge `{u,v}`; false if it is a self-loop, out of range, or
-    /// already live.
-    pub fn insert(&mut self, u: VertexId, v: VertexId) -> bool {
-        if u == v
-            || u as usize >= self.lists.len()
-            || v as usize >= self.lists.len()
-            || self.contains(u, v)
-        {
-            return false;
-        }
-        self.lists[u as usize].push(v);
-        self.lists[v as usize].push(u);
-        self.live_edges += 1;
-        true
-    }
-
-    /// Delete edge `{u,v}`; false if it was not live. Compacts either
-    /// endpoint's list when its tombstones dominate.
-    pub fn delete(&mut self, u: VertexId, v: VertexId) -> bool {
-        if u == v || u as usize >= self.lists.len() || v as usize >= self.lists.len() {
-            return false;
-        }
-        if !self.lists[u as usize].remove(v) {
-            return false;
-        }
-        let removed = self.lists[v as usize].remove(u);
-        debug_assert!(removed, "adjacency asymmetry: ({u},{v}) stored one-way");
-        self.live_edges -= 1;
-        for w in [u, v] {
-            if self.lists[w as usize].maybe_compact() {
-                self.compactions += 1;
-            }
-        }
-        true
-    }
-
-    /// Live neighbors of `v` (tombstones skipped), in slot order.
-    pub fn live_neighbors(&self, v: VertexId) -> impl Iterator<Item = VertexId> + '_ {
-        self.lists[v as usize]
-            .slots
-            .iter()
-            .copied()
-            .filter(|&s| s != INVALID_VERTEX)
-    }
-
-    /// All live edges, canonicalized `(min, max)`, each exactly once — the
-    /// input [`crate::matching::verify::verify_maximal_dynamic`] wants.
-    pub fn live_edge_iter(&self) -> impl Iterator<Item = (VertexId, VertexId)> + '_ {
-        self.lists.iter().enumerate().flat_map(|(u, l)| {
-            let u = u as VertexId;
-            l.slots
-                .iter()
-                .copied()
-                .filter(move |&v| v != INVALID_VERTEX && u < v)
-                .map(move |v| (u, v))
-        })
-    }
-
-    /// Resident bytes of the sidecar (slot storage only).
+    /// Resident bytes (slot storage plus list headers).
     pub fn memory_bytes(&self) -> usize {
         self.lists
             .iter()
             .map(|l| l.slots.capacity() * std::mem::size_of::<VertexId>())
             .sum::<usize>()
             + self.lists.capacity() * std::mem::size_of::<AdjList>()
+    }
+}
+
+/// Mutable adjacency over a fixed vertex universe `0..num_vertices`, with
+/// set semantics on undirected edges (each edge stored in both endpoint
+/// lists) and tombstoned deletes — a whole-universe [`HalfAdjacency`] with
+/// the symmetry maintained internally.
+pub struct DynamicAdjacency {
+    half: HalfAdjacency,
+}
+
+impl DynamicAdjacency {
+    pub fn new(num_vertices: usize) -> Self {
+        Self { half: HalfAdjacency::new(0, num_vertices) }
+    }
+
+    #[inline]
+    pub fn num_vertices(&self) -> usize {
+        self.half.end() as usize
+    }
+
+    /// Live undirected edge count.
+    #[inline]
+    pub fn num_live_edges(&self) -> u64 {
+        self.half.half_edges() / 2
+    }
+
+    /// Tombstoned slots currently awaiting compaction (both directions).
+    pub fn tombstones(&self) -> u64 {
+        self.half.tombstones()
+    }
+
+    /// Per-vertex compactions performed so far.
+    pub fn compactions(&self) -> u64 {
+        self.half.compactions()
+    }
+
+    #[inline]
+    pub fn live_degree(&self, v: VertexId) -> usize {
+        self.half.live_degree(v)
+    }
+
+    pub fn contains(&self, u: VertexId, v: VertexId) -> bool {
+        if !self.half.owns(u) || !self.half.owns(v) {
+            return false;
+        }
+        // scan the sparser endpoint
+        if self.half.slots_len(u) <= self.half.slots_len(v) {
+            self.half.contains_half(u, v)
+        } else {
+            self.half.contains_half(v, u)
+        }
+    }
+
+    /// Insert edge `{u,v}`; false if it is a self-loop, out of range, or
+    /// already live.
+    pub fn insert(&mut self, u: VertexId, v: VertexId) -> bool {
+        if u == v || !self.half.owns(u) || !self.half.owns(v) || self.contains(u, v) {
+            return false;
+        }
+        self.half.insert_half(u, v);
+        self.half.insert_half(v, u);
+        true
+    }
+
+    /// Delete edge `{u,v}`; false if it was not live. Compacts either
+    /// endpoint's list when its tombstones dominate.
+    pub fn delete(&mut self, u: VertexId, v: VertexId) -> bool {
+        if u == v || !self.half.owns(u) || !self.half.owns(v) {
+            return false;
+        }
+        if !self.half.remove_half(u, v) {
+            return false;
+        }
+        let removed = self.half.remove_half(v, u);
+        debug_assert!(removed, "adjacency asymmetry: ({u},{v}) stored one-way");
+        true
+    }
+
+    /// Live neighbors of `v` (tombstones skipped), in slot order.
+    pub fn live_neighbors(&self, v: VertexId) -> impl Iterator<Item = VertexId> + '_ {
+        self.half.neighbors(v)
+    }
+
+    /// All live edges, canonicalized `(min, max)`, each exactly once — the
+    /// input [`crate::matching::verify::verify_maximal_dynamic`] wants.
+    pub fn live_edge_iter(&self) -> impl Iterator<Item = (VertexId, VertexId)> + '_ {
+        (0..self.num_vertices()).flat_map(move |u| {
+            let u = u as VertexId;
+            self.half.neighbors(u).filter(move |&v| u < v).map(move |v| (u, v))
+        })
+    }
+
+    /// Resident bytes of the sidecar (slot storage only).
+    pub fn memory_bytes(&self) -> usize {
+        self.half.memory_bytes()
     }
 }
 
@@ -263,7 +381,7 @@ mod tests {
         assert!(a.compactions() > 0, "hub list should have compacted");
         assert_eq!(a.live_degree(0), 4);
         // vertex 0's list really shrank
-        assert!(a.lists[0].slots.len() <= 8, "slots {}", a.lists[0].slots.len());
+        assert!(a.half.slots_len(0) <= 8, "slots {}", a.half.slots_len(0));
         assert_eq!(a.num_live_edges(), 4);
     }
 
@@ -303,5 +421,75 @@ mod tests {
         let mut want: Vec<_> = reference.into_iter().collect();
         want.sort_unstable();
         assert_eq!(live, want);
+    }
+
+    #[test]
+    fn half_adjacency_owns_only_its_range() {
+        let mut h = HalfAdjacency::new(8, 4);
+        assert_eq!(h.start(), 8);
+        assert_eq!(h.end(), 12);
+        assert!(h.owns(8) && h.owns(11));
+        assert!(!h.owns(7) && !h.owns(12));
+        // neighbors may lie outside the owned range
+        h.insert_half(9, 1000);
+        h.insert_half(9, 3);
+        assert_eq!(h.half_edges(), 2);
+        assert!(h.contains_half(9, 1000));
+        assert!(!h.contains_half(9, 4));
+        assert!(h.remove_half(9, 3));
+        assert!(!h.remove_half(9, 3), "double remove of a half-edge");
+        assert_eq!(h.half_edges(), 1);
+        assert_eq!(h.neighbors(9).collect::<Vec<_>>(), vec![1000]);
+        assert_eq!(h.live_degree(9), 1);
+    }
+
+    #[test]
+    fn half_adjacency_compacts_like_the_full_sidecar() {
+        let mut h = HalfAdjacency::new(0, 1);
+        for v in 1..=64u32 {
+            h.insert_half(0, v);
+        }
+        for v in 1..=60u32 {
+            assert!(h.remove_half(0, v));
+        }
+        assert!(h.compactions() > 0);
+        assert_eq!(h.live_degree(0), 4);
+        assert!(h.slots_len(0) <= 8, "slots {}", h.slots_len(0));
+        assert!(h.tombstones() <= 4);
+    }
+
+    #[test]
+    fn two_halves_compose_into_one_edge_set() {
+        // the sharded engine's storage invariant in miniature: shard A owns
+        // 0..2, shard B owns 2..4; every edge edit lands on each owner
+        let mut a = HalfAdjacency::new(0, 2);
+        let mut b = HalfAdjacency::new(2, 2);
+        for &(u, v) in &[(0u32, 1u32), (1, 2), (2, 3), (0, 3)] {
+            for h in [&mut a, &mut b] {
+                if h.owns(u) {
+                    h.insert_half(u, v);
+                }
+                if h.owns(v) {
+                    h.insert_half(v, u);
+                }
+            }
+        }
+        // (0,1) intra-A: two halves in A; (2,3) intra-B; cross edges split
+        assert_eq!(a.half_edges() + b.half_edges(), 8);
+        assert_eq!(a.half_edges(), 4); // 0→1, 1→0, 1→2, 0→3
+        assert_eq!(b.half_edges(), 4); // 2→1, 2→3, 3→2, 3→0
+        // canonical live-edge collection: owner of the min endpoint emits
+        let mut edges: Vec<(u32, u32)> = Vec::new();
+        for h in [&a, &b] {
+            for w in h.start()..h.end() {
+                for nb in h.neighbors(w) {
+                    if w < nb {
+                        edges.push((w, nb));
+                    }
+                }
+            }
+        }
+        edges.sort_unstable();
+        assert_eq!(edges, vec![(0, 1), (0, 3), (1, 2), (2, 3)]);
     }
 }

@@ -1,6 +1,6 @@
-//! Insert/delete churn driver over the [`DynamicMatcher`] — the shared
-//! workload loop behind `skipper-cli churn`, the `dynamic` coordinator
-//! experiment, and `benches/dynamic_churn.rs`.
+//! Insert/delete churn driver over the [`ShardedDynamicMatcher`] — the
+//! shared workload loop behind `skipper-cli churn`, the `dynamic` and
+//! `scale` coordinator experiments, and `benches/dynamic_churn.rs`.
 //!
 //! The schedule is generator-faithful: the edge *population* comes from one
 //! of the synthetic generators, so degree structure (power-law hubs for
@@ -11,7 +11,8 @@
 //! edges are recycled once the population runs dry, so arbitrarily long
 //! runs never starve).
 
-use super::engine::{DynamicMatcher, EpochReport, Update};
+use super::engine::{EpochReport, Update};
+use super::partition::ShardedDynamicMatcher;
 use crate::graph::gen::{barabasi_albert, erdos_renyi, grid, rmat, GenConfig};
 use crate::util::rng::Xoshiro256pp;
 use crate::VertexId;
@@ -93,6 +94,9 @@ pub struct ChurnConfig {
     pub seed: u64,
     /// Matcher threads.
     pub threads: usize,
+    /// Engine shards (`P`): vertex-partitioned parallel mutate phase.
+    /// `1` reproduces the single-shard [`super::DynamicMatcher`] behavior.
+    pub engine_shards: usize,
     /// Churn epochs after warmup.
     pub epochs: usize,
     /// Updates per churn epoch.
@@ -112,6 +116,7 @@ impl ChurnConfig {
             gen,
             seed: 1,
             threads: 4,
+            engine_shards: 1,
             epochs: 10,
             batch: 10_000,
             delete_frac: 0.5,
@@ -143,6 +148,9 @@ pub struct ChurnSummary {
     pub repair_frac_max: f64,
     /// Per-epoch wall seconds, churn epochs only (for p50/p99 reporting).
     pub epoch_wall_s: Vec<f64>,
+    /// Per-epoch mutate-phase wall seconds, churn epochs only — the phase
+    /// `engine_shards` parallelizes.
+    pub epoch_mutate_s: Vec<f64>,
     pub final_live_edges: u64,
     pub final_matched_vertices: usize,
     pub verified_epochs: usize,
@@ -161,12 +169,12 @@ pub fn run_churn(
     if pending.is_empty() {
         return Err("generator produced no edges".into());
     }
-    let mut engine = DynamicMatcher::new(n, cfg.threads);
+    let engine = ShardedDynamicMatcher::new(n, cfg.threads, cfg.engine_shards);
     let mut live: Vec<(VertexId, VertexId)> = Vec::with_capacity(pending.len());
     let mut graveyard: Vec<(VertexId, VertexId)> = Vec::new();
     let mut summary = ChurnSummary::default();
 
-    let mut step = |engine: &mut DynamicMatcher,
+    let mut step = |engine: &ShardedDynamicMatcher,
                     updates: &[Update],
                     warmup: bool,
                     summary: &mut ChurnSummary,
@@ -184,6 +192,7 @@ pub fn run_churn(
             summary.repair_frac_mean += report.repair_fraction();
             summary.repair_frac_max = summary.repair_frac_max.max(report.repair_fraction());
             summary.epoch_wall_s.push(report.wall_s);
+            summary.epoch_mutate_s.push(report.mutate_wall_s);
         }
         let verified = cfg.verify.then(|| engine.verify());
         let failure = match &verified {
@@ -221,7 +230,7 @@ pub fn run_churn(
                     live.push((u, v));
                 }
             }
-            step(&mut engine, &batch, true, &mut summary, &mut observe)?;
+            step(&engine, &batch, true, &mut summary, &mut observe)?;
         }
     }
 
@@ -257,7 +266,7 @@ pub fn run_churn(
             }
         }
         rng.shuffle(&mut updates);
-        step(&mut engine, &updates, false, &mut summary, &mut observe)?;
+        step(&engine, &updates, false, &mut summary, &mut observe)?;
     }
 
     if summary.epochs > 0 {
@@ -322,6 +331,29 @@ mod tests {
         assert!(max - min <= 2 * cfg.batch as u64, "live count drifted: {counts:?}");
         assert!(summary.repair_frac_mean > 0.0, "deletes must cause some repair");
         assert!(summary.repair_frac_max <= 1.0);
+    }
+
+    #[test]
+    fn sharded_churn_stays_verified_and_times_mutate() {
+        // the same schedule at P ∈ {1, 4}: every epoch verified, and the
+        // per-epoch mutate-phase timings are recorded for both
+        for shards in [1usize, 4] {
+            let cfg = ChurnConfig {
+                epochs: 4,
+                batch: 200,
+                warmup_epochs: 2,
+                threads: 2,
+                engine_shards: shards,
+                ..ChurnConfig::new(ChurnGen::Er { n: 512, m: 2048 })
+            };
+            let summary = run_churn(&cfg, |e| {
+                assert!(matches!(e.verified, Some(Ok(()))), "P={shards}");
+            })
+            .unwrap_or_else(|e| panic!("P={shards}: {e}"));
+            assert_eq!(summary.epochs, 4, "P={shards}");
+            assert_eq!(summary.epoch_mutate_s.len(), summary.epochs);
+            assert!(summary.epoch_mutate_s.iter().all(|&s| s > 0.0));
+        }
     }
 
     #[test]

@@ -11,13 +11,15 @@
 //! The engine's epoch loop restores the invariant with work proportional to
 //! the *affected neighborhoods*, never a global recompute:
 //!
-//! 1. **Mutate** (sequential): apply the epoch's updates to the
-//!    [`DynamicAdjacency`] in arrival order. Each delete that destroys a
-//!    matched pair releases both endpoints in the [`SkipperCore`]
-//!    (`MCHD → ACC`) and records them as *freed*.
+//! 1. **Mutate** (parallel across shards): apply the epoch's updates to the
+//!    adjacency sidecar in arrival order. Each delete that destroys a
+//!    matched pair releases both endpoints in the
+//!    [`SkipperCore`](crate::matching::core::SkipperCore) (`MCHD → ACC`)
+//!    and records them as *freed*.
 //! 2. **Insert pass** (parallel): the epoch's surviving new edges go through
-//!    the ordinary [`StreamingSkipper`] chunk driver — the same
-//!    `process_chunk` fast path every other driver uses.
+//!    the ordinary [`StreamingSkipper`](crate::matching::streaming::StreamingSkipper)
+//!    chunk driver — the same `process_chunk` fast path every other driver
+//!    uses.
 //! 3. **Repair sweep** (parallel): the surviving incident edges of every
 //!    still-unmatched freed vertex are re-run through the same Algorithm-1
 //!    reservation state machine.
@@ -34,14 +36,18 @@
 //! set after every epoch, which is exactly what
 //! [`crate::matching::verify::verify_maximal_dynamic`] checks and
 //! `rust/tests/prop_dynamic.rs` hammers on.
+//!
+//! The argument never depends on the mutate phase running on one thread —
+//! only on every free being recorded and on the sweeps running after the
+//! mutate barrier. That is what lets
+//! [`ShardedDynamicMatcher`](super::ShardedDynamicMatcher) partition the
+//! mutate phase by vertex owner (see `partition.rs` for the cross-shard
+//! agreement argument); [`DynamicMatcher`] here is its `P = 1`
+//! specialization, kept as the stable single-shard API so existing callers
+//! and this proof carry over unchanged.
 
-use super::adjacency::DynamicAdjacency;
-use crate::graph::stream::BatchEdgeSource;
-use crate::matching::core::SkipperCore;
-use crate::matching::streaming::StreamingSkipper;
-use crate::matching::{verify, MatchArena, BUFFER_EDGES};
-use crate::{VertexId, INVALID_VERTEX};
-use std::time::Instant;
+use super::partition::ShardedDynamicMatcher;
+use crate::VertexId;
 
 /// One mutation of the live edge set.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -77,6 +83,13 @@ pub struct EpochReport {
     /// Matched vertices after the epoch.
     pub matched_vertices: usize,
     pub wall_s: f64,
+    /// Wall seconds of the per-shard parallel mutate phase (adjacency
+    /// edits, partner bookkeeping, freed collection).
+    pub mutate_wall_s: f64,
+    /// Wall seconds of the insert sweep (phase 2).
+    pub insert_wall_s: f64,
+    /// Wall seconds of repair collection plus the repair sweep (phase 3).
+    pub repair_wall_s: f64,
 }
 
 impl EpochReport {
@@ -86,100 +99,91 @@ impl EpochReport {
     pub fn repair_fraction(&self) -> f64 {
         self.repair_edges as f64 / (self.live_edges.max(1)) as f64
     }
+
+    /// Mutate-phase share of the epoch wall time — the fraction sharding
+    /// parallelizes (the sweeps were already parallel).
+    pub fn mutate_fraction(&self) -> f64 {
+        if self.wall_s > 0.0 {
+            self.mutate_wall_s / self.wall_s
+        } else {
+            0.0
+        }
+    }
 }
 
-/// Fully dynamic maximal matching: a long-lived [`SkipperCore`] plus the
-/// adjacency sidecar, mutated in epochs of mixed inserts and deletes.
+/// Fully dynamic maximal matching: a long-lived
+/// [`SkipperCore`](crate::matching::core::SkipperCore) plus the adjacency
+/// sidecar, mutated in epochs of mixed inserts and deletes.
+///
+/// This is the single-shard (`P = 1`) specialization of
+/// [`ShardedDynamicMatcher`] — one owner for every vertex, so the mutate
+/// phase runs inline on the calling thread exactly as the invariant proof
+/// above narrates, and all epoch behavior (ordering, netting, counters) is
+/// the stable reference the property tests cross-check higher shard counts
+/// against.
 pub struct DynamicMatcher {
-    core: SkipperCore,
-    adj: DynamicAdjacency,
-    /// `partner[v]` is `v`'s matched partner, [`INVALID_VERTEX`] when free.
-    partner: Vec<VertexId>,
-    driver: StreamingSkipper,
-    epoch: u64,
-    matched_vertices: usize,
+    inner: ShardedDynamicMatcher,
 }
 
 impl DynamicMatcher {
     pub fn new(num_vertices: usize, threads: usize) -> Self {
-        Self {
-            core: SkipperCore::new(num_vertices),
-            adj: DynamicAdjacency::new(num_vertices),
-            partner: vec![INVALID_VERTEX; num_vertices],
-            driver: StreamingSkipper::new(threads),
-            epoch: 0,
-            matched_vertices: 0,
-        }
+        Self { inner: ShardedDynamicMatcher::new(num_vertices, threads, 1) }
     }
 
     #[inline]
     pub fn num_vertices(&self) -> usize {
-        self.partner.len()
+        self.inner.num_vertices()
     }
 
     #[inline]
     pub fn epochs_applied(&self) -> u64 {
-        self.epoch
+        self.inner.epochs_applied()
     }
 
     #[inline]
     pub fn num_live_edges(&self) -> u64 {
-        self.adj.num_live_edges()
+        self.inner.num_live_edges()
     }
 
     #[inline]
     pub fn matched_vertices(&self) -> usize {
-        self.matched_vertices
+        self.inner.matched_vertices()
     }
 
     #[inline]
     pub fn is_matched(&self, v: VertexId) -> bool {
-        self.partner[v as usize] != INVALID_VERTEX
+        self.inner.is_matched(v)
     }
 
     /// `v`'s current partner, if matched.
     pub fn partner(&self, v: VertexId) -> Option<VertexId> {
-        if (v as usize) < self.partner.len() && self.partner[v as usize] != INVALID_VERTEX {
-            Some(self.partner[v as usize])
-        } else {
-            None
-        }
+        self.inner.partner(v)
     }
 
     /// Current matching as canonical `(min, max)` pairs.
     pub fn matching_pairs(&self) -> Vec<(VertexId, VertexId)> {
-        self.partner
-            .iter()
-            .enumerate()
-            .filter_map(|(u, &p)| {
-                (p != INVALID_VERTEX && (u as VertexId) < p).then_some((u as VertexId, p))
-            })
-            .collect()
+        self.inner.matching_pairs()
     }
 
     /// The live edge set (canonical, each edge once) — for verification and
     /// the service's audit path.
     pub fn live_edge_iter(&self) -> impl Iterator<Item = (VertexId, VertexId)> + '_ {
-        self.adj.live_edge_iter()
+        self.inner.live_edges().into_iter()
     }
 
     /// Adjacency-sidecar health for telemetry.
     pub fn adjacency_bytes(&self) -> usize {
-        self.adj.memory_bytes()
+        self.inner.adjacency_bytes()
     }
 
     pub fn adjacency_tombstones(&self) -> u64 {
-        self.adj.tombstones()
+        self.inner.adjacency_tombstones()
     }
 
     /// Full dynamic validity check: matching ⊆ live edges, endpoint-disjoint,
     /// and maximal over the live set.
     pub fn verify(&self) -> Result<(), String> {
-        verify::verify_maximal_dynamic(
-            self.num_vertices(),
-            self.adj.live_edge_iter(),
-            &self.matching_pairs(),
-        )
+        self.inner.verify()
     }
 
     /// Apply one epoch of mixed updates. Update order within the batch is
@@ -187,140 +191,7 @@ impl DynamicMatcher {
     /// in one epoch nets out to nothing). Errors on out-of-range vertices,
     /// with no mutation applied.
     pub fn apply_epoch(&mut self, updates: &[Update]) -> Result<EpochReport, String> {
-        let n = self.num_vertices();
-        if let Some(bad) = updates.iter().find(|u| {
-            let (Update::Insert(a, b) | Update::Delete(a, b)) = **u;
-            a as usize >= n || b as usize >= n
-        }) {
-            return Err(format!("update {bad:?} out of range (|V|={n})"));
-        }
-        let t0 = Instant::now();
-        self.epoch += 1;
-        let mut rep = EpochReport {
-            epoch: self.epoch,
-            ..EpochReport::default()
-        };
-
-        // --- phase 1: mutate the live set, free broken pairs -------------
-        let mut fresh: Vec<(VertexId, VertexId)> = Vec::new();
-        let mut freed: Vec<VertexId> = Vec::new();
-        for &upd in updates {
-            match upd {
-                Update::Insert(u, v) => {
-                    rep.inserts += 1;
-                    if self.adj.insert(u, v) {
-                        fresh.push((u.min(v), u.max(v)));
-                    }
-                }
-                Update::Delete(u, v) => {
-                    rep.deletes += 1;
-                    if self.adj.delete(u, v) {
-                        rep.deleted_live += 1;
-                        if self.partner[u as usize] == v {
-                            // the deleted edge was matched: both endpoints
-                            // re-enter the state machine
-                            self.partner[u as usize] = INVALID_VERTEX;
-                            self.partner[v as usize] = INVALID_VERTEX;
-                            self.core.release(u);
-                            self.core.release(v);
-                            self.matched_vertices -= 2;
-                            rep.destroyed_pairs += 1;
-                            freed.push(u);
-                            freed.push(v);
-                        }
-                    }
-                }
-            }
-        }
-        // An edge inserted then deleted within the epoch is in `fresh` but
-        // no longer live — it must not be offered to the matcher. An edge
-        // inserted, deleted, and re-inserted is in `fresh` twice — dedup.
-        fresh.sort_unstable();
-        fresh.dedup();
-        fresh.retain(|&(u, v)| self.adj.contains(u, v));
-        rep.inserted_live = fresh.len();
-
-        // --- phase 2: insert pass through the streaming fast path --------
-        let (m, c) = self.run_pass(&fresh);
-        rep.new_matches += m;
-        rep.conflicts += c;
-
-        // --- phase 3: repair sweep over affected neighborhoods -----------
-        let mut repair: Vec<(VertexId, VertexId)> = Vec::new();
-        freed.sort_unstable();
-        freed.dedup();
-        rep.freed_vertices = freed.len();
-        for &f in &freed {
-            // the insert pass may already have re-matched a freed vertex
-            if self.partner[f as usize] != INVALID_VERTEX {
-                continue;
-            }
-            for nb in self.adj.live_neighbors(f) {
-                repair.push((f.min(nb), f.max(nb)));
-            }
-        }
-        // both-endpoints-freed edges show up twice; fresh edges were just
-        // decided in phase 2 and need no second look
-        repair.sort_unstable();
-        repair.dedup();
-        rep.repair_edges = repair.len();
-        let (m, c) = self.run_pass(&repair);
-        rep.new_matches += m;
-        rep.conflicts += c;
-
-        rep.live_edges = self.adj.num_live_edges();
-        rep.matched_vertices = self.matched_vertices;
-        rep.wall_s = t0.elapsed().as_secs_f64();
-        Ok(rep)
-    }
-
-    /// Drive `edges` through the Algorithm-1 state machine against the live
-    /// core, then harvest the new matches into the partner map. Returns
-    /// `(new_matches, jit_conflicts)`. Small batches run inline — spawning
-    /// the producer/consumer scope costs more than the matching itself and
-    /// would dominate the service's per-epoch latency; large batches go
-    /// through the shared [`StreamingSkipper`] chunk driver.
-    fn run_pass(&mut self, edges: &[(VertexId, VertexId)]) -> (usize, u64) {
-        const SEQUENTIAL_PASS_MAX: usize = 2048;
-        if edges.is_empty() {
-            return (0, 0);
-        }
-        let arena = MatchArena::with_capacity(
-            edges.len().min(self.num_vertices())
-                + (self.driver.threads + 1) * BUFFER_EDGES,
-        );
-        let conflicts = if edges.len() <= SEQUENTIAL_PASS_MAX || self.driver.threads == 1 {
-            let mut writer = arena.writer();
-            let mut stats = crate::instrument::conflicts::ConflictStats::default();
-            self.core
-                .process_chunk(edges, &mut writer, &mut stats, &mut crate::instrument::NoProbe);
-            stats
-        } else {
-            let driver = StreamingSkipper {
-                chunk_edges: edges
-                    .len()
-                    .div_ceil(self.driver.threads)
-                    .clamp(1, self.driver.chunk_edges),
-                ..self.driver
-            };
-            driver
-                .run_with_core(
-                    &self.core,
-                    &arena,
-                    BatchEdgeSource::new(self.num_vertices(), edges),
-                )
-                .expect("dynamic pass failed")
-                .conflicts
-        };
-        let new = arena.into_matching();
-        for (u, v) in new.iter() {
-            debug_assert!(self.partner[u as usize] == INVALID_VERTEX);
-            debug_assert!(self.partner[v as usize] == INVALID_VERTEX);
-            self.partner[u as usize] = v;
-            self.partner[v as usize] = u;
-        }
-        self.matched_vertices += 2 * new.len();
-        (new.len(), conflicts.total)
+        self.inner.apply_epoch(updates)
     }
 }
 
@@ -419,7 +290,7 @@ mod tests {
         let err = m.apply_epoch(&[Insert(2, 3), Insert(0, 99)]).unwrap_err();
         assert!(err.contains("out of range"), "{err}");
         assert_eq!(m.num_live_edges(), 1, "failed epoch must not half-apply");
-        assert!(!m.adj_contains_for_test(2, 3));
+        assert!(!m.inner.contains_edge(2, 3));
     }
 
     #[test]
@@ -474,11 +345,5 @@ mod tests {
             r.repair_edges,
             r.live_edges
         );
-    }
-
-    impl DynamicMatcher {
-        fn adj_contains_for_test(&self, u: VertexId, v: VertexId) -> bool {
-            self.adj.contains(u, v)
-        }
     }
 }

@@ -1,7 +1,8 @@
 //! Fully dynamic maximal matching — inserts **and deletes** (ISSUE 2; the
 //! regime of Ghaffari & Trygub's *Parallel Dynamic Maximal Matching*,
 //! motivated here by paper §V-C's observation that Skipper is already
-//! incremental in expectation).
+//! incremental in expectation), sharded so that epochs are parallel in
+//! every phase (ISSUE 3).
 //!
 //! The paper's single-pass contract ("an edge's fate is decided the moment
 //! it is seen, never revisited") makes insertions nearly free — one
@@ -10,23 +11,34 @@
 //! maximality over the *live* edge set may break in their neighborhoods.
 //! This module restores it without global recomputation:
 //!
-//! * [`adjacency`] — the compact mutable topology sidecar (chunked
-//!   per-vertex lists, tombstoned deletes, periodic compaction) that
-//!   remembers each vertex's surviving incident edges;
-//! * [`engine`] — the epoch-based update engine: mixed insert/delete
-//!   batches, freed-vertex tracking, and the parallel **repair sweep** that
-//!   re-runs the Algorithm-1 reservation state machine over only the
-//!   affected neighborhoods (see `engine.rs` for the invariant proof);
+//! * [`adjacency`] — the compact mutable topology sidecars: [`HalfAdjacency`]
+//!   (per-vertex lists over an owned contiguous range, tombstoned deletes,
+//!   periodic compaction) and the whole-universe [`DynamicAdjacency`]
+//!   wrapper;
+//! * [`partition`] — the vertex-partitioned engine:
+//!   [`ShardedDynamicMatcher`] splits vertices into `P` contiguous shards
+//!   ([`VertexPartition`]), routes each update to its owner shard(s) via
+//!   per-shard mailboxes ([`ShardMailboxes`]), runs the mutate phase in
+//!   parallel across shards, and feeds the per-shard insert/repair work
+//!   lists into the shared one-byte-per-vertex `SkipperCore` sweeps — the
+//!   atomic state array needs no sharding at all;
+//! * [`engine`] — the epoch-based update API: [`Update`], [`EpochReport`]
+//!   (with per-phase wall times), the repair-sweep invariant proof, and
+//!   [`DynamicMatcher`] — the stable `P = 1` specialization existing
+//!   callers use;
 //! * [`churn`] — the reusable insert/delete workload driver behind
-//!   `skipper-cli churn`, the `dynamic` coordinator experiment, and the
-//!   `dynamic_churn` bench.
+//!   `skipper-cli churn`, the `dynamic`/`scale` coordinator experiments,
+//!   and the `dynamic_churn` bench.
 //!
 //! The long-running service layer in [`crate::service`] owns one
-//! [`engine::DynamicMatcher`] and feeds it coalesced client batches.
+//! [`ShardedDynamicMatcher`] and feeds it coalesced client batches through
+//! the same mailbox routing.
 
 pub mod adjacency;
 pub mod churn;
 pub mod engine;
+pub mod partition;
 
-pub use adjacency::DynamicAdjacency;
+pub use adjacency::{DynamicAdjacency, HalfAdjacency};
 pub use engine::{DynamicMatcher, EpochReport, Update};
+pub use partition::{ShardMailboxes, ShardedDynamicMatcher, VertexPartition};

@@ -1,0 +1,867 @@
+//! Vertex-partitioned sharding for the dynamic engine: parallel epochs in
+//! every phase, not just the matching sweeps.
+//!
+//! ## Why sharding the *engine* is cheap
+//!
+//! Skipper's shared algorithm state is one atomic byte per vertex, so the
+//! matching sweeps already tolerate any thread interleaving — the
+//! [`SkipperCore`] needs no sharding at all, which is the whole trick. What
+//! the dynamic engine serialized until now was everything *around* the
+//! core: the mutate phase (adjacency edits, `partner[]` bookkeeping,
+//! freed-vertex collection) ran on one thread. Ghaffari & Trygub's
+//! *Parallel Dynamic Maximal Matching* shows batch updates parallelize with
+//! work proportional to affected neighborhoods, and Blelloch et al. justify
+//! partition-local greedy processing; this module is that program applied
+//! to Skipper's epoch loop.
+//!
+//! ## Architecture
+//!
+//! Vertices are split into `P` contiguous shards by a [`VertexPartition`]
+//! (the equal-split idea of [`crate::par::scheduler::split_equal_edges`],
+//! with [`VertexPartition::from_weights`] available when per-vertex degree
+//! hints exist). Each shard exclusively owns
+//!
+//! * its slice of the adjacency sidecar (a [`HalfAdjacency`] — the shard
+//!   stores the half-edges of its owned endpoints),
+//! * its owned entries of the global `partner[]` array,
+//! * its freed-vertex set for the current epoch.
+//!
+//! An epoch runs in barriered phases:
+//!
+//! ```text
+//!            route (≤2 shards per edge)
+//! updates ──────────────▶ per-shard mailboxes
+//!                              │ parallel mutate: half-edge edits,
+//!                              │ partner[] clears (owner-written),
+//!                              │ core.release of freed endpoints
+//!                              ▼  ── barrier ──
+//!              fresh-edge work lists (owner of min endpoint)
+//!                              │ shared-core insert sweep (StreamingSkipper)
+//!                              ▼  ── barrier ──
+//!              per-shard repair lists from freed neighborhoods
+//!                              │ shared-core repair sweep
+//!                              ▼
+//!                      epoch report (per-phase wall times)
+//! ```
+//!
+//! ## Why cross-shard updates need no coordination
+//!
+//! An edge `{u,v}` touches at most two shards, and the router appends every
+//! update to *each* touched mailbox in arrival order, so for any single
+//! edge both owners observe the same update subsequence. Liveness is
+//! decided from the shard's own half (`contains_half`), and the two halves
+//! are edited by exactly the same op sequence — they agree without
+//! messages. The matched-pair check on a delete is equally local: the
+//! engine's standing invariant `partner[u] == v ⟺ partner[v] == u` lets
+//! each owner detect the destroyed pair from its own entry, clear it
+//! (owner-written, so the mutate phase never races on `partner[]`), release
+//! its own endpoint in the shared core (an atomic store, quiescent w.r.t.
+//! `process_edge` between sweeps), and record its own freed vertex. The
+//! release hand-shake the design sketch called for degenerates to two
+//! independent local decisions — the symmetric invariant *is* the message.
+//!
+//! The maximality argument is unchanged from [`super::engine`]: mutate
+//! only frees recorded vertices, the insert sweep processes every fresh
+//! edge after all frees, and the repair sweep re-processes every surviving
+//! edge of a still-free freed vertex; the proof in `engine.rs` carries over
+//! verbatim with "the mutate loop" replaced by "the per-shard mutate loops,
+//! which partition the work by endpoint owner".
+//!
+//! [`super::DynamicMatcher`] is the `P = 1` specialization of
+//! [`ShardedDynamicMatcher`] — same code path, one shard, no spawns.
+
+use super::adjacency::HalfAdjacency;
+use super::engine::{EpochReport, Update};
+use crate::graph::stream::BatchEdgeSource;
+use crate::matching::core::SkipperCore;
+use crate::matching::streaming::StreamingSkipper;
+use crate::matching::{MatchArena, BUFFER_EDGES};
+use crate::par::run_threads_collect;
+use crate::{VertexId, INVALID_VERTEX};
+use std::sync::atomic::{AtomicU32, AtomicU64, AtomicUsize, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+/// A split of the vertex universe `0..n` into contiguous shard ranges.
+#[derive(Clone, Debug)]
+pub struct VertexPartition {
+    /// `shards + 1` boundaries: shard `i` owns `[starts[i], starts[i+1])`.
+    starts: Vec<VertexId>,
+}
+
+impl VertexPartition {
+    /// Equal-size contiguous split (trailing shards may be empty when
+    /// `shards` does not divide `num_vertices`).
+    pub fn equal(num_vertices: usize, shards: usize) -> Self {
+        let p = shards.max(1);
+        let per = num_vertices.div_ceil(p).max(1);
+        let starts = (0..=p)
+            .map(|i| (i * per).min(num_vertices) as VertexId)
+            .collect();
+        Self { starts }
+    }
+
+    /// Contiguous split with ≈equal total *weight* per shard — the
+    /// [`crate::par::scheduler::split_equal_edges`] idea applied to any
+    /// per-vertex weight (expected degree, observed degree, ...). Falls
+    /// back to trailing empty shards when the weight mass runs out early.
+    pub fn from_weights(weights: &[u64], shards: usize) -> Self {
+        let n = weights.len();
+        let p = shards.max(1);
+        let total: u64 = weights.iter().sum();
+        let per = (total / p as u64).max(1);
+        let mut starts: Vec<VertexId> = vec![0];
+        let mut acc = 0u64;
+        let mut next_cut = per;
+        for (v, &w) in weights.iter().enumerate() {
+            acc += w;
+            if acc >= next_cut && starts.len() < p && v + 1 > *starts.last().unwrap() as usize {
+                starts.push((v + 1) as VertexId);
+                next_cut = acc + per;
+            }
+        }
+        while starts.len() <= p {
+            starts.push(n as VertexId);
+        }
+        Self { starts }
+    }
+
+    #[inline]
+    pub fn num_shards(&self) -> usize {
+        self.starts.len() - 1
+    }
+
+    #[inline]
+    pub fn num_vertices(&self) -> usize {
+        *self.starts.last().unwrap() as usize
+    }
+
+    /// Owned range `[start, end)` of shard `i`.
+    #[inline]
+    pub fn range(&self, shard: usize) -> (VertexId, VertexId) {
+        (self.starts[shard], self.starts[shard + 1])
+    }
+
+    /// The shard owning vertex `v` (`v` must be `< num_vertices`).
+    #[inline]
+    pub fn owner(&self, v: VertexId) -> usize {
+        debug_assert!((v as usize) < self.num_vertices());
+        self.starts.partition_point(|&s| s <= v) - 1
+    }
+}
+
+/// Epoch-scoped per-shard update queues, filled by
+/// [`ShardedDynamicMatcher::route_into`]. An edge touches at most two
+/// shards; the router appends the update to each touched mailbox in
+/// arrival order, which is all the cross-shard consistency the mutate
+/// phase needs (see the module docs). Reusable across epochs — the service
+/// routes straight out of its drain loop and flushes at barriers.
+pub struct ShardMailboxes {
+    boxes: Vec<Vec<Update>>,
+    inserts: usize,
+    deletes: usize,
+}
+
+impl ShardMailboxes {
+    /// Insert updates routed since the last [`clear`](Self::clear).
+    #[inline]
+    pub fn inserts(&self) -> usize {
+        self.inserts
+    }
+
+    /// Delete updates routed since the last [`clear`](Self::clear).
+    #[inline]
+    pub fn deletes(&self) -> usize {
+        self.deletes
+    }
+
+    /// Updates routed (each counted once, even when mailed to two shards).
+    #[inline]
+    pub fn num_updates(&self) -> usize {
+        self.inserts + self.deletes
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.num_updates() == 0
+    }
+
+    /// Empty every mailbox, keeping capacity for the next epoch.
+    pub fn clear(&mut self) {
+        for b in &mut self.boxes {
+            b.clear();
+        }
+        self.inserts = 0;
+        self.deletes = 0;
+    }
+}
+
+/// State exclusively owned by one shard: its adjacency slice and the freed
+/// vertices of the epoch in flight. Behind a `Mutex` only so the engine can
+/// hand disjoint shards to scoped threads through `&self`; the lock is
+/// uncontended by construction (each phase touches each shard from exactly
+/// one thread).
+struct ShardState {
+    adj: HalfAdjacency,
+    /// Owned vertices freed by this epoch's deletes; consumed by the
+    /// repair-collection phase.
+    freed: Vec<VertexId>,
+}
+
+/// What one shard's mutate pass reports back to the epoch coordinator.
+#[derive(Default)]
+struct MutateOut {
+    /// Fresh live edges owned by this shard (it owns the min endpoint),
+    /// deduped and still live at the end of the phase.
+    fresh: Vec<(VertexId, VertexId)>,
+    deleted_live: usize,
+    destroyed_pairs: usize,
+    freed: usize,
+}
+
+/// Vertex-partitioned fully dynamic maximal matching: `P` shards each own a
+/// slice of the adjacency sidecar and of `partner[]`, epochs run the mutate
+/// phase in parallel across shards, and the matching sweeps run against the
+/// one shared [`SkipperCore`] exactly as in the single-threaded engine.
+///
+/// All methods take `&self`: shard state sits behind per-shard mutexes and
+/// the cross-shard state (`partner[]`, counters, the core's state bytes) is
+/// atomic, so a service can answer partner queries from any thread while an
+/// epoch is in flight.
+pub struct ShardedDynamicMatcher {
+    partition: VertexPartition,
+    shards: Vec<Mutex<ShardState>>,
+    /// `partner[v]` is `v`'s matched partner, [`INVALID_VERTEX`] when free.
+    /// Owner-written during mutate; harvest writes happen between parallel
+    /// phases. Atomic so readers never block on an epoch.
+    partner: Vec<AtomicU32>,
+    core: SkipperCore,
+    driver: StreamingSkipper,
+    /// Serializes epoch application: `apply_epoch`/`apply_mailboxes` take
+    /// `&self` so readers stay lock-free, but two concurrent epochs would
+    /// race mutate against harvest — this gate makes them queue instead.
+    epoch_gate: Mutex<()>,
+    epoch: AtomicU64,
+    matched: AtomicUsize,
+}
+
+impl ShardedDynamicMatcher {
+    /// `engine_shards` contiguous equal-size shards over `0..num_vertices`,
+    /// `threads` matcher threads inside the shared-core sweeps.
+    pub fn new(num_vertices: usize, threads: usize, engine_shards: usize) -> Self {
+        Self::with_partition(VertexPartition::equal(num_vertices, engine_shards), threads)
+    }
+
+    pub fn with_partition(partition: VertexPartition, threads: usize) -> Self {
+        let n = partition.num_vertices();
+        let shards = (0..partition.num_shards())
+            .map(|i| {
+                let (s, e) = partition.range(i);
+                Mutex::new(ShardState {
+                    adj: HalfAdjacency::new(s, (e - s) as usize),
+                    freed: Vec::new(),
+                })
+            })
+            .collect();
+        Self {
+            partition,
+            shards,
+            partner: (0..n).map(|_| AtomicU32::new(INVALID_VERTEX)).collect(),
+            core: SkipperCore::new(n),
+            driver: StreamingSkipper::new(threads),
+            epoch_gate: Mutex::new(()),
+            epoch: AtomicU64::new(0),
+            matched: AtomicUsize::new(0),
+        }
+    }
+
+    #[inline]
+    pub fn num_vertices(&self) -> usize {
+        self.partner.len()
+    }
+
+    #[inline]
+    pub fn num_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    #[inline]
+    pub fn partition(&self) -> &VertexPartition {
+        &self.partition
+    }
+
+    #[inline]
+    pub fn epochs_applied(&self) -> u64 {
+        self.epoch.load(Ordering::Relaxed)
+    }
+
+    #[inline]
+    pub fn matched_vertices(&self) -> usize {
+        self.matched.load(Ordering::Relaxed)
+    }
+
+    #[inline]
+    pub fn is_matched(&self, v: VertexId) -> bool {
+        self.partner[v as usize].load(Ordering::Acquire) != INVALID_VERTEX
+    }
+
+    /// `v`'s current partner, if matched. Lock-free: safe to call from any
+    /// thread, including while an epoch is mid-flight (the answer is then a
+    /// point-in-time read of `v`'s slot).
+    pub fn partner(&self, v: VertexId) -> Option<VertexId> {
+        if (v as usize) >= self.partner.len() {
+            return None;
+        }
+        let p = self.partner[v as usize].load(Ordering::Acquire);
+        (p != INVALID_VERTEX).then_some(p)
+    }
+
+    /// Current matching as canonical `(min, max)` pairs.
+    pub fn matching_pairs(&self) -> Vec<(VertexId, VertexId)> {
+        self.partner
+            .iter()
+            .enumerate()
+            .filter_map(|(u, p)| {
+                let p = p.load(Ordering::Acquire);
+                (p != INVALID_VERTEX && (u as VertexId) < p).then_some((u as VertexId, p))
+            })
+            .collect()
+    }
+
+    /// Live undirected edge count (sums per-shard half-edge counters).
+    pub fn num_live_edges(&self) -> u64 {
+        let halves: u64 = self
+            .shards
+            .iter()
+            .map(|s| s.lock().unwrap().adj.half_edges())
+            .sum();
+        debug_assert_eq!(halves % 2, 0, "half-edge storage out of sync");
+        halves / 2
+    }
+
+    /// The live edge set, canonicalized `(min, max)`, each edge exactly
+    /// once (the owner of the min endpoint emits it) — for verification and
+    /// the service's audit path.
+    pub fn live_edges(&self) -> Vec<(VertexId, VertexId)> {
+        let mut edges = Vec::new();
+        for shard in &self.shards {
+            let st = shard.lock().unwrap();
+            for w in st.adj.start()..st.adj.end() {
+                for nb in st.adj.neighbors(w) {
+                    if w < nb {
+                        edges.push((w, nb));
+                    }
+                }
+            }
+        }
+        edges
+    }
+
+    /// Is `{u,v}` live? (Asks the owner of `u` for its half.)
+    pub fn contains_edge(&self, u: VertexId, v: VertexId) -> bool {
+        if u == v || (u as usize) >= self.num_vertices() || (v as usize) >= self.num_vertices() {
+            return false;
+        }
+        let st = self.shards[self.partition.owner(u)].lock().unwrap();
+        st.adj.contains_half(u, v)
+    }
+
+    /// Adjacency-sidecar resident bytes, summed over shards.
+    pub fn adjacency_bytes(&self) -> usize {
+        self.shards
+            .iter()
+            .map(|s| s.lock().unwrap().adj.memory_bytes())
+            .sum()
+    }
+
+    /// Tombstoned adjacency slots awaiting compaction, summed over shards.
+    pub fn adjacency_tombstones(&self) -> u64 {
+        self.shards
+            .iter()
+            .map(|s| s.lock().unwrap().adj.tombstones())
+            .sum()
+    }
+
+    /// Full dynamic validity check: matching ⊆ live edges, endpoint-
+    /// disjoint, and maximal over the live set.
+    pub fn verify(&self) -> Result<(), String> {
+        crate::matching::verify::verify_maximal_dynamic(
+            self.num_vertices(),
+            self.live_edges().into_iter(),
+            &self.matching_pairs(),
+        )
+    }
+
+    /// Fresh reusable mailboxes matching this engine's shard count.
+    pub fn mailboxes(&self) -> ShardMailboxes {
+        ShardMailboxes {
+            boxes: (0..self.num_shards()).map(|_| Vec::new()).collect(),
+            inserts: 0,
+            deletes: 0,
+        }
+    }
+
+    /// Route `updates` into per-shard mailboxes (each update reaches the
+    /// owner of each endpoint — at most two shards). Errors on out-of-range
+    /// vertices with nothing routed, so a failed call never half-fills the
+    /// mailboxes.
+    pub fn route_into(
+        &self,
+        updates: &[Update],
+        mailboxes: &mut ShardMailboxes,
+    ) -> Result<(), String> {
+        let n = self.num_vertices();
+        if let Some(bad) = updates.iter().find(|u| {
+            let (Update::Insert(a, b) | Update::Delete(a, b)) = **u;
+            a as usize >= n || b as usize >= n
+        }) {
+            return Err(format!("update {bad:?} out of range (|V|={n})"));
+        }
+        for &upd in updates {
+            let (Update::Insert(a, b) | Update::Delete(a, b)) = upd;
+            match upd {
+                Update::Insert(..) => mailboxes.inserts += 1,
+                Update::Delete(..) => mailboxes.deletes += 1,
+            }
+            let sa = self.partition.owner(a);
+            mailboxes.boxes[sa].push(upd);
+            let sb = self.partition.owner(b);
+            if sb != sa {
+                mailboxes.boxes[sb].push(upd);
+            }
+        }
+        Ok(())
+    }
+
+    /// Apply one epoch of mixed updates. Update order within the batch is
+    /// respected against the live set (insert-then-delete of the same edge
+    /// in one epoch nets out to nothing). Errors on out-of-range vertices,
+    /// with no mutation applied.
+    pub fn apply_epoch(&self, updates: &[Update]) -> Result<EpochReport, String> {
+        let mut mailboxes = self.mailboxes();
+        self.route_into(updates, &mut mailboxes)?;
+        Ok(self.apply_mailboxes(&mut mailboxes))
+    }
+
+    /// Run one epoch over already-routed mailboxes (they are drained and
+    /// left empty for reuse). This is the service's flush path; epoch
+    /// numbering, counters, and the report are identical to
+    /// [`apply_epoch`](Self::apply_epoch).
+    ///
+    /// Concurrent callers serialize on an internal gate (queries stay
+    /// lock-free throughout); within one epoch the phases are barriered,
+    /// so every reader between epochs observes a quiescent engine.
+    pub fn apply_mailboxes(&self, mailboxes: &mut ShardMailboxes) -> EpochReport {
+        let _epoch_exclusive = self.epoch_gate.lock().unwrap();
+        let t0 = Instant::now();
+        let epoch = self.epoch.fetch_add(1, Ordering::Relaxed) + 1;
+        let mut rep = EpochReport {
+            epoch,
+            inserts: mailboxes.inserts(),
+            deletes: mailboxes.deletes(),
+            ..EpochReport::default()
+        };
+
+        // --- phase 1: parallel mutate, one thread per shard --------------
+        // run_threads_collect is the epoch barrier: every shard's half-edge
+        // edits, partner clears, and core releases complete before any
+        // matching sweep observes them.
+        let p = self.num_shards();
+        let tm = Instant::now();
+        let boxes = &mailboxes.boxes;
+        let outs: Vec<MutateOut> = run_threads_collect(p, |i| self.mutate_shard(i, &boxes[i]));
+        rep.mutate_wall_s = tm.elapsed().as_secs_f64();
+        let mut fresh: Vec<(VertexId, VertexId)> = Vec::new();
+        for out in outs {
+            rep.deleted_live += out.deleted_live;
+            rep.destroyed_pairs += out.destroyed_pairs;
+            rep.freed_vertices += out.freed;
+            fresh.extend(out.fresh);
+        }
+        self.matched.fetch_sub(rep.freed_vertices, Ordering::Relaxed);
+        rep.inserted_live = fresh.len();
+
+        // --- phase 2: insert pass through the streaming fast path --------
+        let ti = Instant::now();
+        let (m, c) = self.run_pass(&fresh);
+        rep.new_matches += m;
+        rep.conflicts += c;
+        rep.insert_wall_s = ti.elapsed().as_secs_f64();
+
+        // --- phase 3: repair sweep over affected neighborhoods -----------
+        // collection is again parallel per shard; the global sort+dedup
+        // removes the duplicates a both-endpoints-freed cross-shard edge
+        // produces (each owner emits it once). Insert-only epochs (the
+        // steady-state service workload) freed nothing and skip the
+        // fork/join entirely.
+        let tr = Instant::now();
+        let mut repair: Vec<(VertexId, VertexId)> = Vec::new();
+        if rep.freed_vertices > 0 {
+            for list in run_threads_collect(p, |i| self.collect_repair(i)) {
+                repair.extend(list);
+            }
+        }
+        repair.sort_unstable();
+        repair.dedup();
+        rep.repair_edges = repair.len();
+        let (m, c) = self.run_pass(&repair);
+        rep.new_matches += m;
+        rep.conflicts += c;
+        rep.repair_wall_s = tr.elapsed().as_secs_f64();
+
+        rep.live_edges = self.num_live_edges();
+        rep.matched_vertices = self.matched.load(Ordering::Relaxed);
+        rep.wall_s = t0.elapsed().as_secs_f64();
+        mailboxes.clear();
+        rep
+    }
+
+    /// One shard's mutate pass: apply its mailbox in arrival order to the
+    /// owned halves, clear owned `partner[]` entries of destroyed pairs,
+    /// release the freed endpoints in the shared core, and hand back the
+    /// shard's fresh-edge work list. Per-edge counters (`deleted_live`,
+    /// `destroyed_pairs`, fresh edges) are reported by the owner of the
+    /// *min* endpoint so cross-shard edges are never double-counted.
+    fn mutate_shard(&self, i: usize, ops: &[Update]) -> MutateOut {
+        let mut st = self.shards[i].lock().unwrap();
+        let st = &mut *st;
+        let mut out = MutateOut::default();
+        for &op in ops {
+            match op {
+                Update::Insert(a, b) => {
+                    if a == b {
+                        continue; // self-loops can never affect maximality
+                    }
+                    let (u, v) = (a.min(b), a.max(b));
+                    let is_rep = st.adj.owns(u);
+                    // set-semantics check against whichever half we own;
+                    // both owners see the same op subsequence for this
+                    // edge, so their verdicts agree
+                    let (own, nb) = if is_rep { (u, v) } else { (v, u) };
+                    if st.adj.contains_half(own, nb) {
+                        continue; // already live
+                    }
+                    if st.adj.owns(u) {
+                        st.adj.insert_half(u, v);
+                    }
+                    if st.adj.owns(v) {
+                        st.adj.insert_half(v, u);
+                    }
+                    if is_rep {
+                        out.fresh.push((u, v));
+                    }
+                }
+                Update::Delete(a, b) => {
+                    if a == b {
+                        continue;
+                    }
+                    let (u, v) = (a.min(b), a.max(b));
+                    let is_rep = st.adj.owns(u);
+                    let (own, nb) = if is_rep { (u, v) } else { (v, u) };
+                    if !st.adj.contains_half(own, nb) {
+                        continue; // not live: phantom delete
+                    }
+                    if st.adj.owns(u) {
+                        let removed = st.adj.remove_half(u, v);
+                        debug_assert!(removed, "half ({u},{v}) missing");
+                    }
+                    if st.adj.owns(v) {
+                        let removed = st.adj.remove_half(v, u);
+                        debug_assert!(removed, "half ({v},{u}) missing");
+                    }
+                    if is_rep {
+                        out.deleted_live += 1;
+                    }
+                    // Matched-pair detection from owned partner entries
+                    // only: `partner[u] == v ⟺ partner[v] == u`, so both
+                    // owners reach the same verdict without a message.
+                    for (w, other) in [(u, v), (v, u)] {
+                        if st.adj.owns(w)
+                            && self.partner[w as usize].load(Ordering::Acquire) == other
+                        {
+                            self.partner[w as usize].store(INVALID_VERTEX, Ordering::Release);
+                            self.core.release(w);
+                            st.freed.push(w);
+                            out.freed += 1;
+                            if w == u {
+                                out.destroyed_pairs += 1;
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        // An edge inserted then deleted within the epoch is in `fresh` but
+        // no longer live — it must not be offered to the matcher. An edge
+        // inserted, deleted, and re-inserted is in `fresh` twice — dedup.
+        out.fresh.sort_unstable();
+        out.fresh.dedup();
+        out.fresh.retain(|&(u, v)| {
+            let (own, nb) = if st.adj.owns(u) { (u, v) } else { (v, u) };
+            st.adj.contains_half(own, nb)
+        });
+        out
+    }
+
+    /// One shard's repair collection: surviving incident edges of its freed
+    /// vertices that the insert pass left unmatched, canonicalized.
+    fn collect_repair(&self, i: usize) -> Vec<(VertexId, VertexId)> {
+        let mut st = self.shards[i].lock().unwrap();
+        let st = &mut *st;
+        let mut repair = Vec::new();
+        for &f in &st.freed {
+            // the insert pass may already have re-matched a freed vertex
+            if self.partner[f as usize].load(Ordering::Acquire) != INVALID_VERTEX {
+                continue;
+            }
+            for nb in st.adj.neighbors(f) {
+                repair.push((f.min(nb), f.max(nb)));
+            }
+        }
+        st.freed.clear();
+        repair
+    }
+
+    /// Drive `edges` through the Algorithm-1 state machine against the live
+    /// core, then harvest the new matches into the partner map. Returns
+    /// `(new_matches, jit_conflicts)`. Small batches run inline — spawning
+    /// the producer/consumer scope costs more than the matching itself and
+    /// would dominate the service's per-epoch latency; large batches go
+    /// through the shared [`StreamingSkipper`] chunk driver.
+    fn run_pass(&self, edges: &[(VertexId, VertexId)]) -> (usize, u64) {
+        const SEQUENTIAL_PASS_MAX: usize = 2048;
+        if edges.is_empty() {
+            return (0, 0);
+        }
+        let arena = MatchArena::with_capacity(
+            edges.len().min(self.num_vertices()) + (self.driver.threads + 1) * BUFFER_EDGES,
+        );
+        let conflicts = if edges.len() <= SEQUENTIAL_PASS_MAX || self.driver.threads == 1 {
+            let mut writer = arena.writer();
+            let mut stats = crate::instrument::conflicts::ConflictStats::default();
+            self.core
+                .process_chunk(edges, &mut writer, &mut stats, &mut crate::instrument::NoProbe);
+            stats
+        } else {
+            let driver = StreamingSkipper {
+                chunk_edges: edges
+                    .len()
+                    .div_ceil(self.driver.threads)
+                    .clamp(1, self.driver.chunk_edges),
+                ..self.driver
+            };
+            driver
+                .run_with_core(
+                    &self.core,
+                    &arena,
+                    BatchEdgeSource::new(self.num_vertices(), edges),
+                )
+                .expect("dynamic pass failed")
+                .conflicts
+        };
+        let new = arena.into_matching();
+        for (u, v) in new.iter() {
+            debug_assert_eq!(self.partner[u as usize].load(Ordering::Acquire), INVALID_VERTEX);
+            debug_assert_eq!(self.partner[v as usize].load(Ordering::Acquire), INVALID_VERTEX);
+            self.partner[u as usize].store(v, Ordering::Release);
+            self.partner[v as usize].store(u, Ordering::Release);
+        }
+        self.matched.fetch_add(2 * new.len(), Ordering::Relaxed);
+        (new.len(), conflicts.total)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use Update::{Delete, Insert};
+
+    #[test]
+    fn equal_partition_covers_contiguously() {
+        let p = VertexPartition::equal(10, 4);
+        assert_eq!(p.num_shards(), 4);
+        assert_eq!(p.num_vertices(), 10);
+        let mut covered = 0usize;
+        for i in 0..p.num_shards() {
+            let (s, e) = p.range(i);
+            assert!(s <= e);
+            covered += (e - s) as usize;
+            for v in s..e {
+                assert_eq!(p.owner(v), i, "vertex {v}");
+            }
+        }
+        assert_eq!(covered, 10);
+        // more shards than vertices: trailing shards are empty, every
+        // vertex still has exactly one owner
+        let p = VertexPartition::equal(2, 4);
+        assert_eq!(p.num_shards(), 4);
+        assert_eq!(p.owner(0), 0);
+        assert_eq!(p.owner(1), 1);
+    }
+
+    #[test]
+    fn weighted_partition_balances_mass() {
+        // one hub holding half the mass: it must end a shard on its own
+        let mut w = vec![1u64; 64];
+        w[0] = 64;
+        let p = VertexPartition::from_weights(&w, 4);
+        assert_eq!(p.num_shards(), 4);
+        assert_eq!(p.num_vertices(), 64);
+        let (s, e) = p.range(0);
+        assert_eq!((s, e), (0, 1), "hub shard is just the hub");
+        // every shard's weight is within one vertex of the target
+        let total: u64 = w.iter().sum();
+        let per = total / 4;
+        for i in 0..4 {
+            let (s, e) = p.range(i);
+            let mass: u64 = (s..e).map(|v| w[v as usize]).sum();
+            assert!(mass <= per + 64, "shard {i} mass {mass}");
+        }
+    }
+
+    #[test]
+    fn routing_reaches_each_owner_once() {
+        let m = ShardedDynamicMatcher::new(8, 1, 2); // shards: 0..4, 4..8
+        let mut mb = m.mailboxes();
+        m.route_into(
+            &[Insert(0, 1), Insert(1, 5), Delete(6, 7), Insert(5, 2)],
+            &mut mb,
+        )
+        .unwrap();
+        assert_eq!(mb.inserts(), 3);
+        assert_eq!(mb.deletes(), 1);
+        assert_eq!(mb.boxes[0], vec![Insert(0, 1), Insert(1, 5), Insert(5, 2)]);
+        assert_eq!(mb.boxes[1], vec![Insert(1, 5), Delete(6, 7), Insert(5, 2)]);
+        // out-of-range routes nothing
+        let mut mb2 = m.mailboxes();
+        assert!(m.route_into(&[Insert(0, 99)], &mut mb2).is_err());
+        assert!(mb2.is_empty() && mb2.boxes.iter().all(|b| b.is_empty()));
+    }
+
+    #[test]
+    fn cross_shard_matched_delete_frees_both_owners() {
+        // shards 0..2 and 2..4; edge (1,2) crosses them
+        let m = ShardedDynamicMatcher::new(4, 1, 2);
+        let r = m.apply_epoch(&[Insert(1, 2)]).unwrap();
+        assert_eq!(r.new_matches, 1);
+        assert_eq!(m.partner(1), Some(2));
+        assert_eq!(m.partner(2), Some(1));
+        let r = m.apply_epoch(&[Delete(1, 2)]).unwrap();
+        assert_eq!(r.destroyed_pairs, 1, "counted once, not once per owner");
+        assert_eq!(r.freed_vertices, 2);
+        assert_eq!(r.deleted_live, 1);
+        assert!(!m.is_matched(1) && !m.is_matched(2));
+        assert_eq!(m.num_live_edges(), 0);
+        m.verify().unwrap();
+    }
+
+    #[test]
+    fn cross_shard_repair_reexamines_surviving_edges() {
+        // path 0-1-2-3 over two shards {0,1} and {2,3}: matching is
+        // (0,1),(2,3); deleting both matched edges forces the repair sweep
+        // to re-match the cross-shard middle edge (1,2).
+        let m = ShardedDynamicMatcher::new(4, 1, 2);
+        m.apply_epoch(&[Insert(0, 1), Insert(1, 2), Insert(2, 3)]).unwrap();
+        assert_eq!(m.matching_pairs(), vec![(0, 1), (2, 3)]);
+        let r = m.apply_epoch(&[Delete(0, 1), Delete(2, 3)]).unwrap();
+        assert_eq!(r.destroyed_pairs, 2);
+        assert_eq!(r.freed_vertices, 4);
+        // (1,2) survives, both endpoints freed in different shards — the
+        // global dedup collapses the two owners' emissions to one edge
+        assert_eq!(r.repair_edges, 1);
+        assert_eq!(r.new_matches, 1, "repair re-matched (1,2)");
+        assert_eq!(m.partner(1), Some(2));
+        m.verify().unwrap();
+    }
+
+    #[test]
+    fn insert_delete_netting_holds_across_shards() {
+        let m = ShardedDynamicMatcher::new(4, 2, 2);
+        let r = m.apply_epoch(&[Insert(1, 2), Delete(1, 2)]).unwrap();
+        assert_eq!(r.inserted_live, 0);
+        assert_eq!(r.new_matches, 0);
+        assert_eq!(m.num_live_edges(), 0);
+        // delete-then-reinsert of a matched cross-shard edge in one epoch
+        m.apply_epoch(&[Insert(1, 2)]).unwrap();
+        let r = m.apply_epoch(&[Delete(1, 2), Insert(1, 2)]).unwrap();
+        assert_eq!(r.destroyed_pairs, 1);
+        assert!(m.is_matched(1) && m.is_matched(2), "re-inserted pair re-matches");
+        m.verify().unwrap();
+    }
+
+    #[test]
+    fn shard_counts_agree_on_random_churn() {
+        use crate::util::rng::Xoshiro256pp;
+        let n = 200;
+        let engines: Vec<ShardedDynamicMatcher> = [1usize, 2, 4]
+            .iter()
+            .map(|&p| ShardedDynamicMatcher::new(n, 2, p))
+            .collect();
+        let mut rng = Xoshiro256pp::new(42);
+        let mut live: Vec<(VertexId, VertexId)> = Vec::new();
+        for epoch in 0..15 {
+            let mut batch = Vec::new();
+            for _ in 0..30 {
+                if !live.is_empty() && rng.next_usize(2) == 0 {
+                    let i = rng.next_usize(live.len());
+                    let (u, v) = live.swap_remove(i);
+                    batch.push(Delete(u, v));
+                } else {
+                    let u = rng.next_usize(n) as VertexId;
+                    let v = rng.next_usize(n) as VertexId;
+                    batch.push(Insert(u, v));
+                    if u != v && !live.contains(&(u.min(v), u.max(v))) {
+                        live.push((u.min(v), u.max(v)));
+                    }
+                }
+            }
+            for (pi, m) in engines.iter().enumerate() {
+                let r = m.apply_epoch(&batch).unwrap();
+                assert_eq!(
+                    m.num_live_edges(),
+                    live.len() as u64,
+                    "epoch {epoch} shards {pi}"
+                );
+                let mut got = m.live_edges();
+                got.sort_unstable();
+                let mut want = live.clone();
+                want.sort_unstable();
+                assert_eq!(got, want, "epoch {epoch} shards {pi}");
+                m.verify()
+                    .unwrap_or_else(|e| panic!("epoch {epoch} shards {pi}: {e}"));
+                assert_eq!(r.matched_vertices, m.matched_vertices());
+                assert_eq!(r.matched_vertices, 2 * m.matching_pairs().len());
+            }
+            // all shard counts see the same live set; matchings may differ
+            // (different fresh-edge orders) but all must be maximal
+            let e0 = engines[0].num_live_edges();
+            assert!(engines.iter().all(|m| m.num_live_edges() == e0));
+        }
+    }
+
+    #[test]
+    fn single_shard_is_the_sequential_engine() {
+        // P=1 must reproduce the exact deterministic behavior the
+        // DynamicMatcher unit tests pin down (threads=1, path graph)
+        let m = ShardedDynamicMatcher::new(4, 1, 1);
+        let r = m
+            .apply_epoch(&[Insert(0, 1), Insert(1, 2), Insert(2, 3)])
+            .unwrap();
+        assert_eq!(r.new_matches, 2);
+        assert_eq!(m.matching_pairs(), vec![(0, 1), (2, 3)]);
+        let r = m.apply_epoch(&[Delete(0, 1)]).unwrap();
+        assert_eq!(r.repair_edges, 1, "only (1,2) needs re-examination");
+        assert!(!m.is_matched(0) && !m.is_matched(1));
+        m.verify().unwrap();
+    }
+
+    #[test]
+    fn phase_timings_are_populated() {
+        let m = ShardedDynamicMatcher::new(64, 2, 4);
+        let ups: Vec<Update> = (0..32).map(|i| Insert(i, i + 32)).collect();
+        let r = m.apply_epoch(&ups).unwrap();
+        assert!(r.mutate_wall_s > 0.0);
+        assert!(r.insert_wall_s > 0.0);
+        assert!(r.wall_s >= r.mutate_wall_s);
+    }
+}

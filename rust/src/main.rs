@@ -49,14 +49,23 @@ USAGE:
   skipper-cli run --graph <file|dataset> --stream [--threads N] [--chunk-edges N] [--verify]
               (match while edges stream off disk — no CSR is materialized;
                reports peak topology-resident bytes vs the CSR equivalent)
-  skipper-cli experiment <id> [--config cfg.toml] [--scale S]   (ids: table1 table2 fig3 fig7 fig8 fig9 fig10 fig11 stream dynamic xla-ems)
+  skipper-cli experiment <id> [--config cfg.toml] [--scale S]   (ids: table1 table2 fig3 fig7 fig8 fig9 fig10 fig11 stream dynamic scale xla-ems)
   skipper-cli suite [--config cfg.toml] [--scale S]
-  skipper-cli serve [--vertices N] [--threads N] [--tcp HOST:PORT] [--shards N]
-              (line protocol INSERT/DELETE/QUERY/STATS/EPOCH/QUIT/SHUTDOWN;
-               stdin pipe by default, concurrent clients with --tcp)
+  skipper-cli serve [--vertices N] [--threads N] [--tcp HOST:PORT]
+              [--engine-shards P] [--shards N] [--shard-capacity N]
+              [--epoch-max-updates N] [--epoch-max-requests N]
+              (line protocol INSERT/DELETE/QUERY/STATS[ full]/EPOCH/QUIT/
+               SHUTDOWN; stdin pipe by default, concurrent clients with
+               --tcp. --engine-shards P partitions the engine's vertices so
+               every epoch's mutate phase runs P-way parallel. Coalescing:
+               queued updates flush as one epoch at an EPOCH barrier, or
+               once --epoch-max-updates accumulate; --epoch-max-requests
+               caps requests drained per coordinator round. STATS returns
+               cheap counters; STATS full adds the O(|V|+|E|) maximality
+               audit)
   skipper-cli churn [--gen rmat|er|ba|grid] [--scale LOG2_V] [--avg-degree D]
               [--epochs E] [--batch B] [--delete-frac F] [--threads N]
-              [--warmup-epochs W] [--seed S] [--no-verify]
+              [--engine-shards P] [--warmup-epochs W] [--seed S] [--no-verify]
               (mixed insert/delete epochs over the dynamic engine; verifies
                maximality over the LIVE edge set after every epoch)
   skipper-cli info
@@ -286,7 +295,7 @@ fn cmd_run_stream(
 fn run_experiments(ids: &[&str], cfg: &RunConfig) -> Result<(), String> {
     let needs_metrics = ids
         .iter()
-        .any(|&id| id != "xla-ems" && id != "stream" && id != "dynamic");
+        .any(|&id| id != "xla-ems" && id != "stream" && id != "dynamic" && id != "scale");
     let mut report = Report::new();
     let metrics;
     let cost;
@@ -342,6 +351,12 @@ fn run_experiments(ids: &[&str], cfg: &RunConfig) -> Result<(), String> {
                     .unwrap_or(4);
                 exp::dynamic_churn(cfg.scale, cfg.threads.min(host))?
             }
+            "scale" => {
+                let host = std::thread::available_parallelism()
+                    .map(|n| n.get())
+                    .unwrap_or(4);
+                exp::shard_scale(cfg.scale, cfg.threads.min(host))?
+            }
             // artifact-dependent: inside a multi-experiment run, skip (with
             // the reason in the report) rather than sinking the whole suite;
             // an explicit `experiment xla-ems` still fails loudly
@@ -364,7 +379,7 @@ fn cmd_experiment(args: &Args) -> Result<(), String> {
     let id = args
         .positional
         .get(1)
-        .ok_or("experiment id required (table1 table2 fig3 fig7 fig8 fig9 fig10 fig11 stream dynamic xla-ems)")?;
+        .ok_or("experiment id required (table1 table2 fig3 fig7 fig8 fig9 fig10 fig11 stream dynamic scale xla-ems)")?;
     let cfg = load_config(args)?;
     run_experiments(&[id.as_str()], &cfg)
 }
@@ -374,7 +389,7 @@ fn cmd_suite(args: &Args) -> Result<(), String> {
     run_experiments(
         &[
             "table1", "table2", "fig3", "fig7", "fig8", "fig9", "fig10", "fig11", "stream",
-            "dynamic", "xla-ems",
+            "dynamic", "scale", "xla-ems",
         ],
         &cfg,
     )
@@ -388,19 +403,26 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
     let cfg = ServiceConfig {
         num_vertices: args.get_parse("vertices", defaults.num_vertices)?,
         threads: args.get_parse("threads", defaults.threads)?,
+        engine_shards: args.get_parse("engine-shards", defaults.engine_shards)?,
         shards: args.get_parse("shards", defaults.shards)?,
         shard_capacity: args.get_parse("shard-capacity", defaults.shard_capacity)?,
-        epoch_max_requests: defaults.epoch_max_requests,
+        epoch_max_requests: args.get_parse("epoch-max-requests", defaults.epoch_max_requests)?,
         epoch_max_updates: args.get_parse("epoch-max-updates", defaults.epoch_max_updates)?,
     };
+    if cfg.engine_shards == 0 || cfg.epoch_max_updates == 0 || cfg.epoch_max_requests == 0 {
+        return Err("--engine-shards/--epoch-max-updates/--epoch-max-requests must be >= 1".into());
+    }
     let summary = match args.get("tcp") {
         Some(addr) => serve_tcp(&cfg, addr, |bound| {
-            eprintln!("serving |V|={} on tcp://{bound} (SHUTDOWN to stop)", cfg.num_vertices);
+            eprintln!(
+                "serving |V|={} (P={} engine shards) on tcp://{bound} (SHUTDOWN to stop)",
+                cfg.num_vertices, cfg.engine_shards
+            );
         })?,
         None => {
             eprintln!(
-                "serving |V|={} on stdin (INSERT/DELETE/QUERY/STATS/EPOCH; QUIT or EOF to stop)",
-                cfg.num_vertices
+                "serving |V|={} (P={} engine shards) on stdin (INSERT/DELETE/QUERY/STATS[ full]/EPOCH; QUIT or EOF to stop)",
+                cfg.num_vertices, cfg.engine_shards
             );
             let stdin = std::io::stdin();
             let mut stdout = std::io::stdout();
@@ -432,6 +454,7 @@ fn cmd_churn(args: &Args) -> Result<(), String> {
     let cfg = ChurnConfig {
         seed: args.get_parse("seed", 1u64)?,
         threads: args.get_parse("threads", 4usize)?,
+        engine_shards: args.get_parse("engine-shards", 1usize)?,
         epochs: args.get_parse("epochs", 10usize)?,
         batch: args.get_parse("batch", 20_000usize)?,
         delete_frac: args.get_parse("delete-frac", 0.5f64)?,
@@ -442,11 +465,15 @@ fn cmd_churn(args: &Args) -> Result<(), String> {
     if !(0.0..=1.0).contains(&cfg.delete_frac) {
         return Err(format!("--delete-frac {} not in [0,1]", cfg.delete_frac));
     }
+    if cfg.engine_shards == 0 {
+        return Err("--engine-shards must be >= 1".into());
+    }
     println!(
-        "churn {} |V|={} t={}: {} warmup epochs, then {} epochs of {} updates ({:.0}% deletes){}",
+        "churn {} |V|={} t={} P={}: {} warmup epochs, then {} epochs of {} updates ({:.0}% deletes){}",
         gen.name(),
         gen.num_vertices(),
         cfg.threads,
+        cfg.engine_shards,
         cfg.warmup_epochs,
         cfg.epochs,
         cfg.batch,
@@ -462,7 +489,7 @@ fn cmd_churn(args: &Args) -> Result<(), String> {
             None => "",
         };
         println!(
-            "{tag} {}: +{} -{} destroyed={} freed={} repair_edges={} repair_frac={:.5} |M|={} live={} conflicts={} {:.1}ms{verdict}",
+            "{tag} {}: +{} -{} destroyed={} freed={} repair_edges={} repair_frac={:.5} |M|={} live={} conflicts={} {:.1}ms (mutate {:.1}ms){verdict}",
             r.epoch,
             r.inserts,
             r.deletes,
@@ -474,17 +501,20 @@ fn cmd_churn(args: &Args) -> Result<(), String> {
             r.live_edges,
             r.conflicts,
             r.wall_s * 1e3,
+            r.mutate_wall_s * 1e3,
         );
     })?;
     let p50 = skipper::util::stats::percentile(&summary.epoch_wall_s, 50.0) * 1e3;
     let p99 = skipper::util::stats::percentile(&summary.epoch_wall_s, 99.0) * 1e3;
+    let mutate_p50 = skipper::util::stats::percentile(&summary.epoch_mutate_s, 50.0) * 1e3;
     println!(
-        "summary: {} churn epochs over {} live edges: repair_frac mean={:.5} max={:.5} (batch/live={:.5}); epoch latency p50={p50:.1}ms p99={p99:.1}ms; |M|={}; verified {}/{} epochs",
+        "summary: {} churn epochs over {} live edges: repair_frac mean={:.5} max={:.5} (batch/live={:.5}); epoch latency p50={p50:.1}ms p99={p99:.1}ms (mutate p50={mutate_p50:.1}ms, P={}); |M|={}; verified {}/{} epochs",
         summary.epochs,
         summary.final_live_edges,
         summary.repair_frac_mean,
         summary.repair_frac_max,
         cfg.batch as f64 / summary.final_live_edges.max(1) as f64,
+        cfg.engine_shards,
         summary.final_matched_vertices / 2,
         summary.verified_epochs,
         summary.epochs + summary.warmup_epochs,

@@ -1,18 +1,23 @@
-//! Long-running match service over the fully dynamic engine.
+//! Long-running match service over the sharded fully dynamic engine.
 //!
-//! Architecture (one engine, many clients):
+//! Architecture (one engine-shard pool, many clients):
 //!
 //! ```text
-//! client conns ──parse──▶ ShardedQueue ──drain──▶ engine thread
-//!   (stdio or TCP,          (per-shard              one DynamicMatcher,
-//!    thread each)         BoundedQueues +           coalesces queued
-//!                           doorbell)               batches into epochs
+//! client conns ──parse──▶ ShardedQueue ──drain/route──▶ coordinator thread
+//!   (stdio or TCP,          (per-shard                     │ per-shard
+//!    thread each)         BoundedQueues +                  ▼ mailboxes
+//!      │                    doorbell)            ┌─ parallel mutate ─┐
+//!      │ QUERY fast path                         │ shard 0 … shard P │
+//!      └──── atomic partner[] reads ────────────▶└──── barrier ──────┘
+//!                                                shared-core sweeps
+//!                                                (insert + repair)
 //! ```
 //!
 //! * [`protocol`] — the line-delimited command/JSON-reply wire format;
-//! * [`server`] — connection front-ends (stdin pipe, TCP), the engine
-//!   thread, and per-epoch telemetry (repair fraction, matched count,
-//!   p50/p99 batch latency);
+//! * [`server`] — connection front-ends (stdin pipe, TCP), the epoch
+//!   coordinator plus the engine-shard pool it fans each flush out to, and
+//!   per-epoch telemetry (repair fraction, matched count, p50/p99 batch
+//!   latency, per-phase wall times);
 //! * this module — the two coordination primitives they share:
 //!   [`ShardedQueue`], the front-end fan-in built from
 //!   [`BoundedQueue`](crate::par::pump::BoundedQueue)s (per-shard
@@ -20,10 +25,12 @@
 //!   and [`Promise`], a one-shot reply slot (a capacity-1 `BoundedQueue`
 //!   underneath).
 //!
-//! Updates are acknowledged at enqueue time and applied when the engine
-//! coalesces them into the next epoch; `EPOCH`/`QUERY`/`STATS` ride the
-//! same queue and are answered in order, after everything the same client
-//! sent before them.
+//! Updates are acknowledged at enqueue time and routed straight into the
+//! engine's per-shard mailboxes, which double as the coalescing buffer;
+//! `EPOCH`/`STATS` ride the queue and are answered in order, after
+//! everything the same client sent before them. `QUERY` from a connection
+//! with nothing pending is answered lock-free from the owner shard's
+//! atomic `partner[]` slot, never stalling an in-flight epoch.
 
 pub mod protocol;
 pub mod server;

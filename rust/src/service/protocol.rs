@@ -8,10 +8,16 @@
 //! DELETE u v [u v ...]     queue edge deletions
 //! EPOCH                    flush queued updates as one engine epoch,
 //!                          reply with the epoch report
-//! QUERY v                  partner of v (flushes queued updates first, so
-//!                          the answer reflects everything sent before it)
-//! STATS                    service telemetry + live-set maximality audit.
-//!                          The audit walks the whole live edge set —
+//! QUERY v                  partner of v. When this connection has queued
+//!                          updates, the query rides the engine queue so
+//!                          the answer reflects everything sent before it;
+//!                          otherwise it is answered immediately from the
+//!                          owner shard's atomic partner state, without
+//!                          stalling any in-flight epoch
+//! STATS                    cheap service counters (no graph walk) — safe
+//!                          to poll as a metrics scrape
+//! STATS full               counters + the live-set maximality audit. The
+//!                          audit walks the whole live edge set —
 //!                          O(|V|+|E_live|) on the engine thread — so poll
 //!                          it like a health check, not a metrics scrape
 //! QUIT                     close this connection
@@ -32,7 +38,8 @@ pub enum Command {
     Updates(Vec<Update>),
     Epoch,
     Query(VertexId),
-    Stats,
+    /// `full` additionally runs the O(|V|+|E_live|) maximality audit.
+    Stats { full: bool },
     Quit,
     Shutdown,
 }
@@ -78,7 +85,15 @@ impl Command {
                     .map_err(|_| "QUERY expects a vertex id".to_string())?;
                 no_operands(&mut it, "QUERY", Command::Query(v))?
             }
-            "STATS" => no_operands(&mut it, "STATS", Command::Stats)?,
+            "STATS" => match it.next() {
+                None => Command::Stats { full: false },
+                Some(arg) if arg.eq_ignore_ascii_case("full") => {
+                    no_operands(&mut it, "STATS full", Command::Stats { full: true })?
+                }
+                Some(other) => {
+                    return Err(format!("STATS takes no operand or `full` (got {other:?})"))
+                }
+            },
             "QUIT" => no_operands(&mut it, "QUIT", Command::Quit)?,
             "SHUTDOWN" => no_operands(&mut it, "SHUTDOWN", Command::Shutdown)?,
             other => return Err(format!("unknown command {other:?}")),
@@ -181,9 +196,12 @@ pub struct StatsSnapshot {
     /// Batch queue→applied latency percentiles, milliseconds.
     pub p50_batch_ms: f64,
     pub p99_batch_ms: f64,
-    /// Live-set maximality audit result.
-    pub maximal: bool,
+    /// Live-set maximality audit result — `None` when the cheap `STATS`
+    /// form skipped the O(|V|+|E_live|) walk (`STATS full` runs it).
+    pub maximal: Option<bool>,
     pub adjacency_bytes: usize,
+    /// Engine shards (`P`) of the vertex-partitioned engine.
+    pub engine_shards: usize,
 }
 
 /// A reply ready to be rendered onto the wire.
@@ -223,7 +241,10 @@ impl Response {
                     .u64("conflicts", r.conflicts)
                     .u64("live_edges", r.live_edges)
                     .u64("matched", r.matched_vertices as u64)
-                    .f64("wall_ms", r.wall_s * 1e3);
+                    .f64("wall_ms", r.wall_s * 1e3)
+                    .f64("mutate_ms", r.mutate_wall_s * 1e3)
+                    .f64("insert_ms", r.insert_wall_s * 1e3)
+                    .f64("repair_ms", r.repair_wall_s * 1e3);
             }
             Response::EpochIdle { epochs_applied, live_edges, matched_vertices } => {
                 j.bool("ok", true)
@@ -256,7 +277,10 @@ impl Response {
                     .f64("p50_batch_ms", s.p50_batch_ms)
                     .f64("p99_batch_ms", s.p99_batch_ms)
                     .u64("adjacency_bytes", s.adjacency_bytes as u64)
-                    .bool("maximal", s.maximal);
+                    .u64("engine_shards", s.engine_shards as u64);
+                if let Some(maximal) = s.maximal {
+                    j.bool("maximal", maximal);
+                }
             }
             Response::Bye => {
                 j.bool("ok", true).str("op", "bye");
@@ -296,7 +320,20 @@ mod tests {
     fn parses_control_commands_strictly() {
         assert_eq!(Command::parse("EPOCH").unwrap(), Some(Command::Epoch));
         assert_eq!(Command::parse("QUERY 7").unwrap(), Some(Command::Query(7)));
-        assert_eq!(Command::parse("stats").unwrap(), Some(Command::Stats));
+        assert_eq!(
+            Command::parse("stats").unwrap(),
+            Some(Command::Stats { full: false })
+        );
+        assert_eq!(
+            Command::parse("STATS full").unwrap(),
+            Some(Command::Stats { full: true })
+        );
+        assert_eq!(
+            Command::parse("stats FULL").unwrap(),
+            Some(Command::Stats { full: true })
+        );
+        assert!(Command::parse("STATS quick").is_err());
+        assert!(Command::parse("STATS full now").is_err());
         assert_eq!(Command::parse("QUIT").unwrap(), Some(Command::Quit));
         assert_eq!(Command::parse("SHUTDOWN").unwrap(), Some(Command::Shutdown));
         assert!(Command::parse("EPOCH now").is_err());
@@ -331,11 +368,26 @@ mod tests {
     fn epoch_and_stats_surface_repair_telemetry() {
         let mut rep = EpochReport { epoch: 2, repair_edges: 25, live_edges: 1000, ..Default::default() };
         rep.destroyed_pairs = 3;
+        rep.mutate_wall_s = 0.004;
         let line = Response::Epoch(rep).render();
         assert!(line.contains(r#""repair_edges":25"#), "{line}");
         assert!(line.contains(r#""repair_frac":0.025"#), "{line}");
         assert!(line.contains(r#""destroyed_pairs":3"#), "{line}");
-        let s = Response::Stats(StatsSnapshot { maximal: true, ..Default::default() }).render();
+        assert!(line.contains(r#""mutate_ms":4.000000"#), "{line}");
+        let s = Response::Stats(StatsSnapshot {
+            maximal: Some(true),
+            engine_shards: 4,
+            ..Default::default()
+        })
+        .render();
         assert!(s.contains(r#""maximal":true"#), "{s}");
+        assert!(s.contains(r#""engine_shards":4"#), "{s}");
+    }
+
+    #[test]
+    fn cheap_stats_omits_the_audit_field() {
+        let s = Response::Stats(StatsSnapshot { maximal: None, ..Default::default() }).render();
+        assert!(!s.contains("maximal"), "{s}");
+        assert!(s.contains(r#""epochs":0"#), "{s}");
     }
 }

@@ -1,15 +1,27 @@
-//! The long-running match server: connection front-ends, the single engine
-//! thread, and service telemetry.
+//! The long-running match server: connection front-ends, the sharded
+//! engine, and service telemetry.
 //!
-//! One [`DynamicMatcher`] lives on a dedicated engine thread. Client
-//! connections (one thread each in TCP mode; the calling thread in stdio
-//! mode) parse lines into [`Command`]s and push requests onto the
-//! [`ShardedQueue`]; the engine drains all shards round-robin and
-//! **coalesces** every update batch found in a drain round into one engine
-//! epoch — concurrent clients share epochs instead of serializing one
-//! engine pass per request. `EPOCH`, `QUERY`, and `STATS` ride the same
-//! queue (so they observe everything their client sent earlier) and are
-//! answered through one-shot [`Promise`]s.
+//! One [`ShardedDynamicMatcher`] is shared by every thread in the process.
+//! Client connections (one thread each in TCP mode; the calling thread in
+//! stdio mode) parse lines into [`Command`]s and push requests onto the
+//! [`ShardedQueue`]; the epoch **coordinator** thread drains all front-end
+//! shards round-robin and routes every update straight into the engine's
+//! per-shard mailboxes — the mailboxes *are* the coalescing buffer, so
+//! concurrent clients share epochs instead of serializing one engine pass
+//! per request. At a barrier (an explicit `EPOCH`, a queue-riding `QUERY`/
+//! `STATS`, or the coalescing threshold) the coordinator flushes the
+//! mailboxes as one engine epoch: the mutate phase fans out across the
+//! engine-shard pool (one scoped worker per shard, the fork/join being the
+//! epoch barrier), and the insert/repair sweeps run against the shared
+//! one-byte-per-vertex core. `EPOCH` and `STATS` ride the queue (so they
+//! observe everything their client sent earlier) and are answered through
+//! one-shot [`Promise`]s.
+//!
+//! `QUERY` has a fast path: when the querying connection has no updates
+//! queued since its last barrier, the answer comes straight from the owner
+//! shard's atomic `partner[]` slot — lock-free, without stalling (or
+//! waiting for) any in-flight epoch. A connection with queued updates still
+//! rides the queue, preserving the read-your-writes guarantee.
 //!
 //! Updates are acknowledged at enqueue time (`{"op":"queued"}`); the
 //! per-shard bounded queues push back on flooding clients without stalling
@@ -17,7 +29,7 @@
 
 use super::protocol::{Command, Response, StatsSnapshot};
 use super::{Promise, ShardedQueue};
-use crate::dynamic::{DynamicMatcher, Update};
+use crate::dynamic::{ShardMailboxes, ShardedDynamicMatcher, Update};
 use crate::util::stats::percentile;
 use crate::VertexId;
 use std::io::{BufRead, BufReader, Write};
@@ -30,8 +42,12 @@ use std::time::Instant;
 pub struct ServiceConfig {
     /// Vertex universe `0..num_vertices` (fixed for the server's lifetime).
     pub num_vertices: usize,
-    /// Matcher threads inside the engine's parallel passes.
+    /// Matcher threads inside the engine's parallel sweeps.
     pub threads: usize,
+    /// Engine shards (`P`): the vertex partition of the dynamic engine.
+    /// Each epoch's mutate phase runs one worker per shard; `1` is the
+    /// single-shard engine.
+    pub engine_shards: usize,
     /// Front-end queue shards (connections hash onto these).
     pub shards: usize,
     /// Per-shard queue capacity (requests) — the back-pressure window.
@@ -48,6 +64,7 @@ impl Default for ServiceConfig {
         Self {
             num_vertices: 1 << 20,
             threads: 4,
+            engine_shards: 1,
             shards: 4,
             shard_capacity: 64,
             epoch_max_requests: 256,
@@ -73,7 +90,8 @@ enum Request {
     Updates { updates: Vec<Update>, enqueued: Instant },
     Epoch(ReplySlot),
     Query(VertexId, ReplySlot),
-    Stats(ReplySlot),
+    /// `bool`: run the full maximality audit (`STATS full`).
+    Stats(bool, ReplySlot),
     Shutdown,
 }
 
@@ -97,8 +115,8 @@ impl Drop for ReplySlot {
 }
 
 /// Raises the stop flag, closes the queue, and drops (→ abandons) any
-/// queued requests when the engine thread exits — normally or by panic —
-/// so neither clients nor the accept loop ever wait on a dead engine.
+/// queued requests when the coordinator thread exits — normally or by panic
+/// — so neither clients nor the accept loop ever wait on a dead engine.
 struct EngineGuard<'a> {
     queue: &'a ShardedQueue<Request>,
     stop: &'a AtomicBool,
@@ -155,41 +173,35 @@ struct Telemetry {
     epochs_with_updates: u64,
 }
 
-/// The engine thread: drain → coalesce → apply → answer, until the queue
-/// closes or a `SHUTDOWN` arrives.
+/// The epoch coordinator: drain → route into shard mailboxes → flush at
+/// barriers → answer, until the queue closes or a `SHUTDOWN` arrives. The
+/// heavy phases of every flush fan out across the engine-shard pool inside
+/// [`ShardedDynamicMatcher::apply_mailboxes`].
 fn engine_loop(
     cfg: &ServiceConfig,
+    engine: &ShardedDynamicMatcher,
     queue: &ShardedQueue<Request>,
     stop: &AtomicBool,
 ) -> ServiceSummary {
     let _guard = EngineGuard { queue, stop };
-    let mut engine = DynamicMatcher::new(cfg.num_vertices, cfg.threads);
     let mut tel = Telemetry::default();
     let mut latencies = LatencyRing::new();
     let mut buf: Vec<Request> = Vec::new();
-    let mut pending: Vec<Update> = Vec::new();
+    // The engine's per-shard mailboxes double as the coalescing buffer:
+    // updates are routed to their owner shard(s) at drain time, so a flush
+    // hands each mutate worker its work list with no extra pass.
+    let mut pending = engine.mailboxes();
     let mut pending_stamps: Vec<Instant> = Vec::new();
 
-    let flush = |engine: &mut DynamicMatcher,
-                 pending: &mut Vec<Update>,
+    let flush = |engine: &ShardedDynamicMatcher,
+                 pending: &mut ShardMailboxes,
                  stamps: &mut Vec<Instant>,
                  tel: &mut Telemetry,
                  latencies: &mut LatencyRing| {
         if pending.is_empty() {
             return None;
         }
-        // Connections validate vertex ranges before enqueueing, so the only
-        // failure left is a bug — surface it without killing the service.
-        let report = match engine.apply_epoch(pending) {
-            Ok(r) => r,
-            Err(e) => {
-                eprintln!("engine: dropped bad epoch: {e}");
-                pending.clear();
-                stamps.clear();
-                return None;
-            }
-        };
-        pending.clear();
+        let report = engine.apply_mailboxes(pending);
         let now = Instant::now();
         for s in stamps.drain(..) {
             latencies.push(now.duration_since(s).as_secs_f64() * 1e3);
@@ -203,11 +215,11 @@ fn engine_loop(
         Some(report)
     };
 
-    // Updates coalesce in `pending` until a barrier request (EPOCH / QUERY /
-    // STATS) arrives, the coalescing threshold trips, or the queue closes.
-    // Deliberately NO flush-on-idle: a client's `INSERT ... / EPOCH` pair
-    // must deterministically see its inserts applied *at the barrier*, not
-    // racily swept up in between.
+    // Updates coalesce in the mailboxes until a barrier request (EPOCH /
+    // queue-riding QUERY / STATS) arrives, the coalescing threshold trips,
+    // or the queue closes. Deliberately NO flush-on-idle: a client's
+    // `INSERT ... / EPOCH` pair must deterministically see its inserts
+    // applied *at the barrier*, not racily swept up in between.
     let mut shutdown = false;
     'outer: loop {
         buf.clear();
@@ -221,20 +233,20 @@ fn engine_loop(
         for req in buf.drain(..) {
             match req {
                 Request::Updates { updates, enqueued } => {
-                    pending.extend(updates);
+                    // Connections validate vertex ranges before enqueueing,
+                    // so the only failure left is a bug — surface it
+                    // without killing the service (nothing was routed).
+                    if let Err(e) = engine.route_into(&updates, &mut pending) {
+                        eprintln!("engine: dropped bad batch: {e}");
+                        continue;
+                    }
                     pending_stamps.push(enqueued);
-                    if pending.len() >= cfg.epoch_max_updates {
-                        let _ = flush(&mut engine, &mut pending, &mut pending_stamps, &mut tel, &mut latencies);
+                    if pending.num_updates() >= cfg.epoch_max_updates {
+                        let _ = flush(engine, &mut pending, &mut pending_stamps, &mut tel, &mut latencies);
                     }
                 }
                 Request::Epoch(p) => {
-                    let rep = flush(
-                        &mut engine,
-                        &mut pending,
-                        &mut pending_stamps,
-                        &mut tel,
-                        &mut latencies,
-                    );
+                    let rep = flush(engine, &mut pending, &mut pending_stamps, &mut tel, &mut latencies);
                     p.fulfill(match rep {
                         Some(r) => Response::Epoch(r),
                         // flush of nothing: say so instead of fabricating a
@@ -247,12 +259,12 @@ fn engine_loop(
                     });
                 }
                 Request::Query(v, p) => {
-                    let _ = flush(&mut engine, &mut pending, &mut pending_stamps, &mut tel, &mut latencies);
+                    let _ = flush(engine, &mut pending, &mut pending_stamps, &mut tel, &mut latencies);
                     p.fulfill(Response::Query { vertex: v, partner: engine.partner(v) });
                 }
-                Request::Stats(p) => {
-                    let _ = flush(&mut engine, &mut pending, &mut pending_stamps, &mut tel, &mut latencies);
-                    p.fulfill(Response::Stats(snapshot(&engine, &tel, &latencies)));
+                Request::Stats(full, p) => {
+                    let _ = flush(engine, &mut pending, &mut pending_stamps, &mut tel, &mut latencies);
+                    p.fulfill(Response::Stats(snapshot(engine, &tel, &latencies, full)));
                 }
                 Request::Shutdown => {
                     // finish answering the rest of this round first — a
@@ -278,24 +290,25 @@ fn engine_loop(
         for req in buf.drain(..) {
             match req {
                 Request::Updates { updates, enqueued } => {
-                    pending.extend(updates);
-                    pending_stamps.push(enqueued);
+                    if engine.route_into(&updates, &mut pending).is_ok() {
+                        pending_stamps.push(enqueued);
+                    }
                 }
-                Request::Epoch(p) | Request::Stats(p) => {
+                Request::Epoch(p) | Request::Stats(_, p) => {
                     p.fulfill(Response::Error("server shutting down".into()))
                 }
                 Request::Query(v, p) => {
                     // honor the ordering guarantee even during shutdown: the
                     // client's earlier updates (drained just above) must be
                     // visible to its query
-                    let _ = flush(&mut engine, &mut pending, &mut pending_stamps, &mut tel, &mut latencies);
+                    let _ = flush(engine, &mut pending, &mut pending_stamps, &mut tel, &mut latencies);
                     p.fulfill(Response::Query { vertex: v, partner: engine.partner(v) })
                 }
                 Request::Shutdown => {}
             }
         }
     }
-    let _ = flush(&mut engine, &mut pending, &mut pending_stamps, &mut tel, &mut latencies);
+    let _ = flush(engine, &mut pending, &mut pending_stamps, &mut tel, &mut latencies);
 
     ServiceSummary {
         epochs: engine.epochs_applied(),
@@ -308,7 +321,12 @@ fn engine_loop(
     }
 }
 
-fn snapshot(engine: &DynamicMatcher, tel: &Telemetry, lat: &LatencyRing) -> StatsSnapshot {
+fn snapshot(
+    engine: &ShardedDynamicMatcher,
+    tel: &Telemetry,
+    lat: &LatencyRing,
+    audit: bool,
+) -> StatsSnapshot {
     StatsSnapshot {
         epochs: engine.epochs_applied(),
         live_edges: engine.num_live_edges(),
@@ -324,8 +342,11 @@ fn snapshot(engine: &DynamicMatcher, tel: &Telemetry, lat: &LatencyRing) -> Stat
         },
         p50_batch_ms: lat.percentile(50.0),
         p99_batch_ms: lat.percentile(99.0),
-        maximal: engine.verify().is_ok(),
+        // the O(|V|+|E_live|) walk only on `STATS full` — cheap polls must
+        // not stall epochs on big graphs
+        maximal: audit.then(|| engine.verify().is_ok()),
         adjacency_bytes: engine.adjacency_bytes(),
+        engine_shards: engine.num_shards(),
     }
 }
 
@@ -337,6 +358,7 @@ struct ConnOutcome {
 fn handle_conn<R: BufRead, W: Write>(
     cfg: &ServiceConfig,
     shard: usize,
+    engine: &ShardedDynamicMatcher,
     queue: &ShardedQueue<Request>,
     reader: R,
     writer: &mut W,
@@ -345,6 +367,11 @@ fn handle_conn<R: BufRead, W: Write>(
     let mut reply = |writer: &mut W, resp: &Response| -> bool {
         writeln!(writer, "{}", resp.render()).and_then(|_| writer.flush()).is_ok()
     };
+    // Updates this connection queued since its last barrier reply. While
+    // clean, a QUERY needs no engine round-trip: read-your-writes is
+    // trivially satisfied, so it is answered from the owner shard's atomic
+    // partner slot without stalling in-flight epochs.
+    let mut dirty = false;
     for line in reader.lines() {
         let line = match line {
             Ok(l) => l,
@@ -379,15 +406,31 @@ fn handle_conn<R: BufRead, W: Write>(
                     let _ = reply(writer, &Response::Error("server shutting down".into()));
                     break;
                 }
+                dirty = true;
                 if !reply(writer, &Response::Queued { count }) {
                     break;
                 }
             }
-            Command::Epoch | Command::Stats | Command::Query(_) => {
+            Command::Query(v) if !dirty => {
+                // fast path: nothing of ours is pending, answer lock-free
+                // from the atomic partner state
+                let resp = if (v as usize) < cfg.num_vertices {
+                    Response::Query { vertex: v, partner: engine.partner(v) }
+                } else {
+                    Response::Error(format!(
+                        "vertex {v} out of range (|V|={})",
+                        cfg.num_vertices
+                    ))
+                };
+                if !reply(writer, &resp) {
+                    break;
+                }
+            }
+            Command::Epoch | Command::Stats { .. } | Command::Query(_) => {
                 let p = Promise::shared();
                 let req = match &cmd {
                     Command::Epoch => Request::Epoch(ReplySlot(Arc::clone(&p))),
-                    Command::Stats => Request::Stats(ReplySlot(Arc::clone(&p))),
+                    Command::Stats { full } => Request::Stats(*full, ReplySlot(Arc::clone(&p))),
                     Command::Query(v) => {
                         if *v as usize >= cfg.num_vertices {
                             let err = format!("vertex {v} out of range (|V|={})", cfg.num_vertices);
@@ -406,6 +449,14 @@ fn handle_conn<R: BufRead, W: Write>(
                 }
                 match p.wait() {
                     Some(resp) => {
+                        // a successful barrier reply means the coordinator
+                        // flushed everything we queued earlier; an Error
+                        // (e.g. the shutdown drain answering without a
+                        // flush) proves nothing, so the connection must
+                        // stay dirty to preserve read-your-writes
+                        if !matches!(resp, Response::Error(_)) {
+                            dirty = false;
+                        }
                         if !reply(writer, &resp) {
                             break;
                         }
@@ -439,13 +490,14 @@ pub fn serve_lines<R: BufRead, W: Write>(
     reader: R,
     writer: &mut W,
 ) -> ServiceSummary {
+    let engine = ShardedDynamicMatcher::new(cfg.num_vertices, cfg.threads, cfg.engine_shards);
     let queue: ShardedQueue<Request> = ShardedQueue::new(cfg.shards, cfg.shard_capacity);
     let stop = AtomicBool::new(false);
     std::thread::scope(|s| {
-        let engine = s.spawn(|| engine_loop(cfg, &queue, &stop));
-        handle_conn(cfg, 0, &queue, reader, writer);
+        let coordinator = s.spawn(|| engine_loop(cfg, &engine, &queue, &stop));
+        handle_conn(cfg, 0, &engine, &queue, reader, writer);
         queue.close();
-        engine.join().expect("engine thread panicked")
+        coordinator.join().expect("engine thread panicked")
     })
 }
 
@@ -465,6 +517,7 @@ pub fn serve_tcp(
     let local = listener.local_addr().map_err(|e| format!("local_addr: {e}"))?;
     on_ready(local);
 
+    let engine = ShardedDynamicMatcher::new(cfg.num_vertices, cfg.threads, cfg.engine_shards);
     let queue: ShardedQueue<Request> = ShardedQueue::new(cfg.shards, cfg.shard_capacity);
     let stop = AtomicBool::new(false);
     // every accepted socket, keyed by connection id, so shutdown can
@@ -475,7 +528,7 @@ pub fn serve_tcp(
     let open_conns: Mutex<std::collections::HashMap<usize, TcpStream>> =
         Mutex::new(std::collections::HashMap::new());
     let summary = std::thread::scope(|s| {
-        let engine = s.spawn(|| engine_loop(cfg, &queue, &stop));
+        let coordinator = s.spawn(|| engine_loop(cfg, &engine, &queue, &stop));
         let mut conn_id = 0usize;
         while !stop.load(Ordering::Relaxed) {
             match listener.accept() {
@@ -490,6 +543,7 @@ pub fn serve_tcp(
                         // woken at shutdown — refuse the connection instead
                         Err(_) => continue,
                     }
+                    let engine = &engine;
                     let queue = &queue;
                     let stop = &stop;
                     let open_conns = &open_conns;
@@ -507,7 +561,7 @@ pub fn serve_tcp(
                             }
                         };
                         let mut writer = stream;
-                        let out = handle_conn(cfg, shard, queue, reader, &mut writer);
+                        let out = handle_conn(cfg, shard, engine, queue, reader, &mut writer);
                         // drop our registry dup so closing `writer` really
                         // closes the connection (FIN reaches the client)
                         open_conns.lock().unwrap().remove(&shard);
@@ -535,7 +589,7 @@ pub fn serve_tcp(
             let _ = c.shutdown(Shutdown::Both);
         }
         queue.close();
-        engine.join().expect("engine thread panicked")
+        coordinator.join().expect("engine thread panicked")
     });
     Ok(summary)
 }
@@ -571,7 +625,7 @@ EPOCH\n\
 INSERT 3 4 0 2\n\
 EPOCH\n\
 QUERY 0\n\
-STATS\n\
+STATS full\n\
 QUIT\n";
         let (lines, summary) = drive(&small_cfg(), script);
         assert!(lines[0].contains(r#""op":"queued","count":3"#), "{}", lines[0]);
@@ -597,7 +651,7 @@ INSERT 0 1 1 2 2 0 2 3\n\
 EPOCH\n\
 DELETE 0 1\n\
 EPOCH\n\
-STATS\n\
+STATS full\n\
 QUIT\n";
         let (lines, summary) = drive(&small_cfg(), script);
         // (0,1) matches first in the single-threaded epoch; its deletion
@@ -618,7 +672,50 @@ QUIT\n";
         let (lines, _) = drive(&small_cfg(), script);
         let q4 = &lines[1];
         assert!(q4.contains(r#""matched":true"#) && q4.contains(r#""partner":5"#), "{q4}");
+        // the second query takes the lock-free fast path (the connection is
+        // clean after its barrier) and must still see the applied state
         assert!(lines[2].contains(r#""matched":false"#), "{}", lines[2]);
+    }
+
+    #[test]
+    fn cheap_stats_skips_the_audit_and_reports_counters() {
+        let script = "INSERT 0 1 2 3\nEPOCH\nSTATS\nSTATS full\nQUIT\n";
+        let (lines, summary) = drive(&small_cfg(), script);
+        let cheap = &lines[2];
+        assert!(cheap.contains(r#""op":"stats""#), "{cheap}");
+        assert!(!cheap.contains("maximal"), "cheap STATS must skip the audit: {cheap}");
+        assert!(cheap.contains(r#""total_inserts":2"#), "{cheap}");
+        assert!(cheap.contains(r#""engine_shards":1"#), "{cheap}");
+        let full = &lines[3];
+        assert!(full.contains(r#""maximal":true"#), "{full}");
+        assert!(summary.maximal);
+    }
+
+    #[test]
+    fn sharded_engine_serves_epochs_and_stays_maximal() {
+        let cfg = ServiceConfig {
+            num_vertices: 64,
+            threads: 2,
+            engine_shards: 4,
+            ..Default::default()
+        };
+        let script = "\
+INSERT 0 1 1 2 2 3 3 4 10 40 41 11 20 50\n\
+EPOCH\n\
+DELETE 1 2 10 40\n\
+EPOCH\n\
+INSERT 5 6 40 42\n\
+EPOCH\n\
+STATS full\n\
+QUIT\n";
+        let (lines, summary) = drive(&cfg, script);
+        let stats = lines.iter().find(|l| l.contains(r#""op":"stats""#)).unwrap();
+        assert!(stats.contains(r#""maximal":true"#), "{stats}");
+        assert!(stats.contains(r#""engine_shards":4"#), "{stats}");
+        assert!(summary.maximal);
+        assert_eq!(summary.epochs, 3);
+        assert_eq!(summary.total_inserts, 9);
+        assert_eq!(summary.total_deletes, 2);
     }
 
     #[test]
@@ -651,7 +748,12 @@ QUIT\n";
             eprintln!("skipping TCP test: loopback unavailable");
             return;
         }
-        let cfg = ServiceConfig { num_vertices: 64, threads: 2, ..Default::default() };
+        let cfg = ServiceConfig {
+            num_vertices: 64,
+            threads: 2,
+            engine_shards: 2,
+            ..Default::default()
+        };
         let (addr_tx, addr_rx) = std::sync::mpsc::channel();
         let server = std::thread::spawn(move || {
             serve_tcp(&cfg, "127.0.0.1:0", move |a| addr_tx.send(a).unwrap()).unwrap()
@@ -670,7 +772,7 @@ QUIT\n";
         // two sequential clients mutating the same engine
         let a = ask("INSERT 0 1 2 3\nEPOCH\nQUIT\n");
         assert!(a[1].contains(r#""new_matches":2"#), "{:?}", a);
-        let b = ask("DELETE 0 1\nEPOCH\nQUERY 0\nSTATS\nQUIT\n");
+        let b = ask("DELETE 0 1\nEPOCH\nQUERY 0\nSTATS full\nQUIT\n");
         assert!(b[1].contains(r#""destroyed_pairs":1"#), "{:?}", b);
         assert!(b[2].contains(r#""matched":false"#), "{:?}", b);
         assert!(b[3].contains(r#""maximal":true"#), "{:?}", b);

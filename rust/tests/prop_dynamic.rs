@@ -4,13 +4,23 @@
 //! disjoint, and (c) maximal over the live edges — checked with
 //! `verify_maximal_dynamic`, the deletion-aware verifier, against an
 //! independently maintained model of the live edge set.
+//!
+//! Every schedule is replayed at `engine_shards ∈ {1, 2, 4}` — the
+//! single-shard reference engine and two vertex-partitioned configurations
+//! — and each replay is cross-checked against the same live-graph model.
+//! Matchings may legitimately differ between shard counts (fresh-edge
+//! delivery order differs), but the live set must agree exactly and every
+//! invariant must hold at every shard count.
 
-use skipper::dynamic::{DynamicMatcher, Update};
+use skipper::dynamic::{ShardedDynamicMatcher, Update};
 use skipper::graph::gen::{barabasi_albert, erdos_renyi, grid};
 use skipper::matching::verify::verify_maximal_dynamic;
 use skipper::util::qcheck::{check, Config};
 use skipper::util::rng::Xoshiro256pp;
 use skipper::VertexId;
+
+/// Shard counts every schedule is replayed at.
+const SHARD_SWEEP: [usize; 3] = [1, 2, 4];
 
 #[derive(Clone, Debug)]
 struct Schedule {
@@ -65,10 +75,13 @@ fn arb_schedule(rng: &mut Xoshiro256pp) -> Schedule {
     }
 }
 
-/// Run the schedule; error on the first invariant violation.
-fn run_schedule(s: &Schedule) -> Result<(), String> {
+/// Run the schedule at one shard count; error on the first invariant
+/// violation. The update stream is regenerated from `s.seed`, so every
+/// shard count sees the identical schedule.
+fn run_schedule_sharded(s: &Schedule, engine_shards: usize) -> Result<(), String> {
+    let tag = |msg: String| format!("{} P={engine_shards}: {msg}", s.family);
     let mut rng = Xoshiro256pp::new(s.seed);
-    let mut engine = DynamicMatcher::new(s.n, s.threads);
+    let engine = ShardedDynamicMatcher::new(s.n, s.threads, engine_shards);
     // reference model of the live graph; a Vec suffices (and samples in
     // O(1)) because `pool` and `live` stay disjoint by construction, so an
     // insert can never duplicate a live edge
@@ -101,36 +114,50 @@ fn run_schedule(s: &Schedule) -> Result<(), String> {
         }
         let report = engine
             .apply_epoch(&updates)
-            .map_err(|e| format!("{} epoch {epoch}: {e}", s.family))?;
+            .map_err(|e| tag(format!("epoch {epoch}: {e}")))?;
 
         // live-set agreement between engine and model
         if engine.num_live_edges() != live.len() as u64 {
-            return Err(format!(
-                "{} epoch {epoch}: engine live {} != model live {}",
-                s.family,
+            return Err(tag(format!(
+                "epoch {epoch}: engine live {} != model live {}",
                 engine.num_live_edges(),
                 live.len()
-            ));
+            )));
         }
         // matching ⊆ live ∧ endpoint-disjoint ∧ maximal — via the dynamic
-        // verifier fed from the *model's* live set, so the adjacency
-        // sidecar is cross-checked too
+        // verifier fed from the *model's* live set, so the sharded
+        // adjacency slices are cross-checked too
         let pairs = engine.matching_pairs();
         verify_maximal_dynamic(s.n, live.iter().copied(), &pairs)
-            .map_err(|e| format!("{} epoch {epoch} (batch {}): {e}", s.family, s.batch))?;
+            .map_err(|e| tag(format!("epoch {epoch} (batch {}): {e}", s.batch)))?;
         // engine's own audit must agree
         engine
             .verify()
-            .map_err(|e| format!("{} epoch {epoch}: self-audit: {e}", s.family))?;
+            .map_err(|e| tag(format!("epoch {epoch}: self-audit: {e}")))?;
         // matched-vertex bookkeeping
         if report.matched_vertices != 2 * pairs.len() {
-            return Err(format!(
-                "{} epoch {epoch}: matched_vertices {} != 2×{}",
-                s.family,
+            return Err(tag(format!(
+                "epoch {epoch}: matched_vertices {} != 2×{}",
                 report.matched_vertices,
                 pairs.len()
-            ));
+            )));
         }
+        // the engine's own live-edge collection must equal the model's set
+        let mut got = engine.live_edges();
+        got.sort_unstable();
+        let mut want = live.clone();
+        want.sort_unstable();
+        if got != want {
+            return Err(tag(format!("epoch {epoch}: live edge sets diverge")));
+        }
+    }
+    Ok(())
+}
+
+/// Replay the schedule at every shard count in the sweep.
+fn run_schedule(s: &Schedule) -> Result<(), String> {
+    for &p in &SHARD_SWEEP {
+        run_schedule_sharded(s, p)?;
     }
     Ok(())
 }
@@ -162,7 +189,8 @@ fn delete_heavy_schedules_stay_maximal() {
 #[test]
 fn drain_to_empty_then_refill_stays_maximal() {
     // insert everything, delete everything (matching must end empty), then
-    // refill — exercises repair down to the empty graph and back
+    // refill — exercises repair down to the empty graph and back, at every
+    // shard count in the sweep
     let el = erdos_renyi::edges(200, 800, 3);
     let mut population: Vec<(VertexId, VertexId)> = el
         .edges
@@ -172,20 +200,25 @@ fn drain_to_empty_then_refill_stays_maximal() {
         .collect();
     population.sort_unstable();
     population.dedup();
-    let mut engine = DynamicMatcher::new(200, 2);
-    let ins: Vec<Update> = population.iter().map(|&(u, v)| Update::Insert(u, v)).collect();
-    engine.apply_epoch(&ins).unwrap();
-    engine.verify().unwrap();
-    assert!(engine.matched_vertices() > 0);
-    for chunk in population.chunks(97) {
-        let dels: Vec<Update> = chunk.iter().map(|&(u, v)| Update::Delete(u, v)).collect();
-        engine.apply_epoch(&dels).unwrap();
+    for &p in &SHARD_SWEEP {
+        let engine = ShardedDynamicMatcher::new(200, 2, p);
+        let ins: Vec<Update> = population.iter().map(|&(u, v)| Update::Insert(u, v)).collect();
+        engine.apply_epoch(&ins).unwrap();
         engine.verify().unwrap();
+        assert!(engine.matched_vertices() > 0, "P={p}");
+        for chunk in population.chunks(97) {
+            let dels: Vec<Update> = chunk.iter().map(|&(u, v)| Update::Delete(u, v)).collect();
+            engine.apply_epoch(&dels).unwrap();
+            engine.verify().unwrap();
+        }
+        assert_eq!(engine.num_live_edges(), 0, "P={p}");
+        assert_eq!(engine.matched_vertices(), 0, "P={p}: no live edges, no matches");
+        assert!(engine.matching_pairs().is_empty(), "P={p}");
+        engine.apply_epoch(&ins).unwrap();
+        engine.verify().unwrap();
+        assert!(
+            engine.matched_vertices() > 0,
+            "P={p}: engine recovers after total drain"
+        );
     }
-    assert_eq!(engine.num_live_edges(), 0);
-    assert_eq!(engine.matched_vertices(), 0, "no live edges, no matches");
-    assert!(engine.matching_pairs().is_empty());
-    engine.apply_epoch(&ins).unwrap();
-    engine.verify().unwrap();
-    assert!(engine.matched_vertices() > 0, "engine recovers after total drain");
 }
