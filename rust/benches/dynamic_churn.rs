@@ -7,16 +7,21 @@
 //!   3. repair scaling — how repair work grows with the delete batch size
 //!      (the sublinearity claim: fraction of live edges, not |E|),
 //!   4. engine-shard scaling — the same 50/50 churn at P = 1/2/4/8 vertex
-//!      shards, reporting epoch throughput AND the mutate-phase wall time,
-//!      the phase that was single-threaded before the sharding refactor.
+//!      shards under both dispatch policies (forked threads per epoch vs
+//!      the persistent worker pool), reporting epoch throughput, the
+//!      mutate-phase wall time, and its spawn-vs-run decomposition,
+//!   5. small-epoch dispatch — tiny batches where the per-epoch spawn cost
+//!      dominates: the regime the pool exists for, forked vs pooled mutate
+//!      p50 side by side.
 
 mod common;
 
 use skipper::coordinator::datasets::Scale;
 use skipper::dynamic::churn::ChurnGen;
-use skipper::dynamic::{DynamicMatcher, ShardedDynamicMatcher, Update};
+use skipper::dynamic::{DynamicMatcher, ShardExec, ShardedDynamicMatcher, Update};
 use skipper::util::benchlib::{bench, BenchConfig};
 use skipper::util::rng::Xoshiro256pp;
+use skipper::util::stats::percentile;
 
 fn main() {
     let scale = common::bench_scale();
@@ -100,38 +105,85 @@ fn main() {
         );
     }
 
-    // 4. engine-shard sweep: identical 50/50 churn at P = 1/2/4/8. The
-    // mutate column is the proof-of-refactor: it is the phase that ran on
-    // one thread before vertex partitioning, now timed per epoch.
+    // 4. engine-shard sweep: identical 50/50 churn at P = 1/2/4/8 under
+    // both dispatch policies. The mutate column is the proof-of-refactor:
+    // it is the phase that ran on one thread before vertex partitioning;
+    // the run/spawn split shows what forking vs waking the workers costs.
     println!("engine-shard sweep (50/50 churn, batch={batch}, {churn_epochs} epochs/iter):");
     for shards in [1usize, 2, 4, 8] {
-        let engine = ShardedDynamicMatcher::new(n, threads, shards);
-        engine.apply_epoch(&warm_ups).expect("warmup");
-        let live: Vec<(u32, u32)> = engine.live_edges();
-        let mut rng = Xoshiro256pp::new(101);
-        let mut epoch_s = Vec::new();
-        let mut mutate_s = Vec::new();
-        let iters = 3usize;
-        for e in 0..iters * churn_epochs {
-            let mut ups: Vec<Update> = Vec::with_capacity(batch);
-            for i in 0..batch / 2 {
-                let (u, v) = live[(rng.next_usize(live.len()) + e + i) % live.len()];
-                ups.push(Update::Delete(u, v));
-                ups.push(Update::Insert(u, v));
+        for exec in [ShardExec::Fork, ShardExec::Pool] {
+            let engine = ShardedDynamicMatcher::with_exec(n, threads, shards, exec);
+            engine.apply_epoch(&warm_ups).expect("warmup");
+            let live: Vec<(u32, u32)> = engine.live_edges();
+            let mut rng = Xoshiro256pp::new(101);
+            let mut epoch_s = Vec::new();
+            let mut mutate_s = Vec::new();
+            let mut run_s = Vec::new();
+            let iters = 3usize;
+            for e in 0..iters * churn_epochs {
+                let mut ups: Vec<Update> = Vec::with_capacity(batch);
+                for i in 0..batch / 2 {
+                    let (u, v) = live[(rng.next_usize(live.len()) + e + i) % live.len()];
+                    ups.push(Update::Delete(u, v));
+                    ups.push(Update::Insert(u, v));
+                }
+                let rep = engine.apply_epoch(&ups).expect("churn epoch");
+                epoch_s.push(rep.wall_s);
+                mutate_s.push(rep.mutate_wall_s);
+                run_s.push(rep.mutate_run_s);
             }
-            let rep = engine.apply_epoch(&ups).expect("churn epoch");
-            epoch_s.push(rep.wall_s);
-            mutate_s.push(rep.mutate_wall_s);
+            let wall: f64 = epoch_s.iter().sum();
+            let mutate: f64 = mutate_s.iter().sum();
+            let run: f64 = run_s.iter().sum();
+            let updates = (epoch_s.len() * batch) as f64;
+            println!(
+                "  P={shards} {:<4}: {:>7.2} Mupdates/s  epoch={:>8.2}ms  mutate={:>8.2}ms = run {:>7.2}ms + spawn {:>6.3}ms ({:>4.1}% of epoch)",
+                exec.name(),
+                updates / wall.max(1e-9) / 1e6,
+                wall / epoch_s.len() as f64 * 1e3,
+                mutate / mutate_s.len() as f64 * 1e3,
+                run / run_s.len() as f64 * 1e3,
+                (mutate - run).max(0.0) / mutate_s.len() as f64 * 1e3,
+                100.0 * mutate / wall.max(1e-9),
+            );
         }
-        let wall: f64 = epoch_s.iter().sum();
-        let mutate: f64 = mutate_s.iter().sum();
-        let updates = (epoch_s.len() * batch) as f64;
-        println!(
-            "  P={shards}: {:>7.2} Mupdates/s  epoch={:>8.2}ms  mutate={:>8.2}ms ({:>4.1}% of epoch)",
-            updates / wall.max(1e-9) / 1e6,
-            wall / epoch_s.len() as f64 * 1e3,
-            mutate / mutate_s.len() as f64 * 1e3,
-            100.0 * mutate / wall.max(1e-9),
-        );
+    }
+
+    // 5. small-epoch dispatch: the spawn-cost regime. Hundreds of tiny
+    // epochs against a warm engine — mutate p50 under the forked baseline
+    // vs the persistent pool is the headline number the pool exists to
+    // improve ("measure first" per the ROADMAP: this IS the measurement).
+    println!("small-epoch dispatch (tiny batches, P=4, mutate p50 forked vs pooled):");
+    for small_batch in [16usize, 128, 1024] {
+        let mut line = format!("  batch={small_batch:>5}:");
+        for exec in [ShardExec::Fork, ShardExec::Pool] {
+            let engine = ShardedDynamicMatcher::with_exec(n, threads, 4, exec);
+            engine.apply_epoch(&warm_ups).expect("warmup");
+            let live: Vec<(u32, u32)> = engine.live_edges();
+            let mut rng = Xoshiro256pp::new(202);
+            let mut mutate_s = Vec::new();
+            let mut run_s = Vec::new();
+            for e in 0..120 {
+                let mut ups: Vec<Update> = Vec::with_capacity(small_batch);
+                for i in 0..small_batch / 2 {
+                    let (u, v) = live[(rng.next_usize(live.len()) + e + i) % live.len()];
+                    ups.push(Update::Delete(u, v));
+                    ups.push(Update::Insert(u, v));
+                }
+                let rep = engine.apply_epoch(&ups).expect("small epoch");
+                mutate_s.push(rep.mutate_wall_s);
+                run_s.push(rep.mutate_run_s);
+            }
+            let mutate_p50 = percentile(&mutate_s, 50.0);
+            let run_p50 = percentile(&run_s, 50.0);
+            line.push_str(&format!(
+                "  {}: mutate p50={:>7.1}us (run {:>6.1}us, spawn {:>6.1}us)",
+                exec.name(),
+                mutate_p50 * 1e6,
+                run_p50 * 1e6,
+                (mutate_p50 - run_p50).max(0.0) * 1e6,
+            ));
+        }
+        println!("{line}");
     }
 }

@@ -18,6 +18,8 @@
 //! work.
 
 #[derive(Clone, Copy, Debug)]
+/// Analytic cost model turning counted memory accesses + simulated L3
+/// misses into seconds (the APRAM performance model of DESIGN.md §3).
 pub struct CostModel {
     /// Cost of a cache-resident memory access (ns).
     pub ns_per_access: f64,
@@ -46,7 +48,9 @@ impl Default for CostModel {
 /// Work profile of one algorithm execution.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct WorkProfile {
+    /// Counted loads + stores.
     pub accesses: u64,
+    /// Cache-simulated L3 misses.
     pub l3_misses: u64,
     /// Synchronized iterations (EMS algorithms); 0 for Skipper/SGMM.
     pub iterations: u64,

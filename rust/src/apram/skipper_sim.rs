@@ -16,13 +16,18 @@ use crate::util::rng::Xoshiro256pp;
 use crate::VertexId;
 
 #[derive(Clone, Copy, Debug)]
+/// APRAM simulation knobs (virtual threads, scheduler shape, seed).
 pub struct SimConfig {
+    /// Simulated (virtual) thread count.
     pub threads: usize,
+    /// Scheduler blocks per virtual thread.
     pub blocks_per_thread: usize,
+    /// Interleaving seed — every schedule is reproducible.
     pub seed: u64,
 }
 
 impl SimConfig {
+    /// Default configuration for `threads` virtual threads.
     pub fn new(threads: usize) -> Self {
         Self {
             threads,
@@ -33,19 +38,26 @@ impl SimConfig {
 }
 
 #[derive(Debug)]
+/// Outcome of one simulated Skipper run: the matching, conflict
+/// telemetry, and per-virtual-thread operation counts.
 pub struct SimReport {
+    /// The computed maximal matching.
     pub matching: Matching,
+    /// JIT-conflict telemetry across the simulated run.
     pub conflicts: ConflictStats,
     /// Shared-memory operations executed per virtual thread.
     pub per_thread_ops: Vec<u64>,
+    /// Work-steal events between virtual threads.
     pub steals: u64,
 }
 
 impl SimReport {
+    /// Simulated makespan: the maximum per-thread operation count.
     pub fn makespan_ops(&self) -> u64 {
         self.per_thread_ops.iter().copied().max().unwrap_or(0)
     }
 
+    /// Total operations across all virtual threads.
     pub fn total_ops(&self) -> u64 {
         self.per_thread_ops.iter().sum()
     }

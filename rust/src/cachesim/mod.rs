@@ -11,27 +11,35 @@
 use crate::instrument::TracingProbe;
 
 #[derive(Clone, Copy, Debug)]
+/// Geometry of one cache level.
 pub struct CacheConfig {
+    /// Total capacity in bytes.
     pub size_bytes: usize,
+    /// Cache-line size in bytes.
     pub line_bytes: usize,
+    /// Ways per set.
     pub associativity: usize,
 }
 
 impl CacheConfig {
+    /// Number of sets this geometry yields.
     pub fn num_sets(&self) -> usize {
         self.size_bytes / (self.line_bytes * self.associativity)
     }
 
+    /// 48 KiB 12-way L1D of the paper testbed (Xeon 6438Y+).
     pub const XEON_L1D: CacheConfig = CacheConfig {
         size_bytes: 48 * 1024,
         line_bytes: 64,
         associativity: 12,
     };
+    /// 2 MiB 16-way per-core L2 of the paper testbed.
     pub const XEON_L2: CacheConfig = CacheConfig {
         size_bytes: 2 * 1024 * 1024,
         line_bytes: 64,
         associativity: 16,
     };
+    /// 60 MiB shared L3 of the paper testbed.
     pub const XEON_L3: CacheConfig = CacheConfig {
         size_bytes: 60 * 1024 * 1024,
         line_bytes: 64,
@@ -52,11 +60,15 @@ pub struct Cache {
     clock: u64,
     num_sets: u64,
     set_shift: u32,
+    /// Lookups served by this level.
     pub accesses: u64,
+    /// Lookups that missed this level.
     pub misses: u64,
 }
 
 impl Cache {
+    /// Empty cache of the given geometry (set count rounded to a power of
+    /// two, as in real bit-field-indexed caches).
     pub fn new(cfg: CacheConfig) -> Self {
         let sets = cfg.num_sets();
         assert!(sets > 0, "cache too small for its geometry");
@@ -117,6 +129,7 @@ impl Cache {
         false
     }
 
+    /// Misses / accesses at this level (0 when idle).
     pub fn miss_rate(&self) -> f64 {
         if self.accesses == 0 {
             0.0
@@ -129,13 +142,18 @@ impl Cache {
 /// Replay statistics for a three-level hierarchy.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct ReplayStats {
+    /// Total replayed accesses.
     pub accesses: u64,
+    /// Misses at L1.
     pub l1_misses: u64,
+    /// Misses at L2 (i.e. missed L1 and L2).
     pub l2_misses: u64,
+    /// Misses at L3 — DRAM transactions (the Fig 8 metric).
     pub l3_misses: u64,
 }
 
 impl ReplayStats {
+    /// L3 misses / total accesses.
     pub fn l3_miss_rate(&self) -> f64 {
         if self.accesses == 0 {
             0.0
@@ -144,6 +162,7 @@ impl ReplayStats {
         }
     }
 
+    /// Accumulate another replay’s counters into this one.
     pub fn merge(&mut self, o: &ReplayStats) {
         self.accesses += o.accesses;
         self.l1_misses += o.l1_misses;
@@ -155,12 +174,16 @@ impl ReplayStats {
 /// Cache geometry for one replay.
 #[derive(Clone, Copy, Debug)]
 pub struct Geometry {
+    /// L1 data-cache geometry.
     pub l1: CacheConfig,
+    /// L2 geometry.
     pub l2: CacheConfig,
+    /// L3 geometry (shared in sharded replays).
     pub l3: CacheConfig,
 }
 
 impl Geometry {
+    /// The paper-testbed Xeon geometry.
     pub fn xeon() -> Self {
         Self {
             l1: CacheConfig::XEON_L1D,
@@ -200,16 +223,21 @@ impl Geometry {
 
 /// Three-level hierarchy (lookup cascades on miss).
 pub struct Hierarchy {
+    /// L1 level.
     pub l1: Cache,
+    /// L2 level.
     pub l2: Cache,
+    /// L3 level.
     pub l3: Cache,
 }
 
 impl Hierarchy {
+    /// Hierarchy with the full Xeon geometry.
     pub fn xeon() -> Self {
         Self::with_geometry(Geometry::xeon())
     }
 
+    /// Hierarchy with an explicit geometry.
     pub fn with_geometry(geo: Geometry) -> Self {
         Self {
             l1: Cache::new(geo.l1),
@@ -218,12 +246,14 @@ impl Hierarchy {
         }
     }
 
+    /// One memory access: lookup cascades L1 → L2 → L3 on miss.
     pub fn access(&mut self, addr: u64) {
         if !self.l1.access(addr) && !self.l2.access(addr) {
             self.l3.access(addr);
         }
     }
 
+    /// Counters accumulated so far.
     pub fn stats(&self) -> ReplayStats {
         ReplayStats {
             accesses: self.l1.accesses,
@@ -253,6 +283,7 @@ impl Hierarchy {
         Self::replay_sharded_with(traces, Geometry::xeon())
     }
 
+    /// [`replay_sharded`](Self::replay_sharded) with an explicit geometry.
     pub fn replay_sharded_with(traces: &[TracingProbe], geo: Geometry) -> ReplayStats {
         let mut l1l2: Vec<(Cache, Cache)> = traces
             .iter()

@@ -6,6 +6,8 @@ use crate::coordinator::datasets::Scale;
 use crate::util::tomlite::Document;
 
 #[derive(Clone, Debug)]
+/// Coordinator run configuration (scale, threads, directories, dataset
+/// filter) with defaults that work without any config file.
 pub struct RunConfig {
     /// Suite scale (tiny|small|medium|large).
     pub scale: Scale,
@@ -35,6 +37,7 @@ impl Default for RunConfig {
 }
 
 impl RunConfig {
+    /// Parse from TOML-subset text; unknown keys are ignored.
     pub fn parse(text: &str) -> Result<Self, String> {
         let doc = Document::parse(text)?;
         let mut cfg = RunConfig::default();
@@ -67,6 +70,7 @@ impl RunConfig {
         Ok(cfg)
     }
 
+    /// Load and parse a config file.
     pub fn load(path: &str) -> Result<Self, String> {
         let text = std::fs::read_to_string(path).map_err(|e| format!("read {path}: {e}"))?;
         Self::parse(&text)

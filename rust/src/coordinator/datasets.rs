@@ -13,13 +13,18 @@ use crate::graph::{io::binary, CsrGraph};
 /// runtime budget is available.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Scale {
+    /// 1/16 of medium — trace/cachesim scale.
     Tiny,
+    /// 1/4 of medium — the default.
     Small,
+    /// The reference scale.
     Medium,
+    /// 4× medium.
     Large,
 }
 
 impl Scale {
+    /// Parse a scale name (`tiny|small|medium|large`).
     pub fn parse(s: &str) -> Result<Self, String> {
         match s {
             "tiny" => Ok(Scale::Tiny),
@@ -40,6 +45,7 @@ impl Scale {
         }
     }
 
+    /// The lowercase scale name.
     pub fn name(&self) -> &'static str {
         match self {
             Scale::Tiny => "tiny",
@@ -76,10 +82,13 @@ pub struct DatasetSpec {
     pub paper_name: &'static str,
     /// Our analogue's name.
     pub name: &'static str,
+    /// Category label from the paper’s Table I (Social/Synth/Bio/Web).
     pub kind: &'static str,
+    /// Generator seed — datasets are bit-reproducible.
     pub seed: u64,
 }
 
+/// The seven scaled analogues of the paper’s Table I suite.
 pub const SUITE: [DatasetSpec; 7] = [
     DatasetSpec { paper_name: "twitter10", name: "twitter10s", kind: "Social", seed: 101 },
     DatasetSpec { paper_name: "g500", name: "g500s", kind: "Synth", seed: 102 },
@@ -147,6 +156,7 @@ pub fn generate(spec: &DatasetSpec, scale: Scale) -> CsrGraph {
     }
 }
 
+/// Find a suite entry by our name or the paper’s dataset name.
 pub fn spec_by_name(name: &str) -> Option<&'static DatasetSpec> {
     SUITE.iter().find(|s| s.name == name || s.paper_name == name)
 }

@@ -27,42 +27,64 @@ pub const PAPER_THREADS: usize = 64;
 /// Everything the figures/tables need, measured once per dataset.
 #[derive(Clone, Debug)]
 pub struct DatasetMetrics {
+    /// The dataset these metrics describe.
     pub spec: &'static DatasetSpec,
+    /// Vertices.
     pub v: usize,
+    /// Stored CSR edge slots (2× undirected edges).
     pub e_slots: usize,
     // --- real measured wall-clock, single thread ---
+    /// Measured single-thread SGMM wall seconds.
     pub sgmm_wall_s: f64,
+    /// Measured single-thread SIDMM wall seconds.
     pub sidmm_wall_s: f64,
+    /// Measured single-thread Skipper wall seconds.
     pub skipper_wall_1t_s: f64,
     // --- counted memory accesses ---
+    /// Counted SGMM memory accesses.
     pub sgmm_accesses: u64,
+    /// Counted SIDMM memory accesses.
     pub sidmm_accesses: u64,
+    /// SIDMM sampling iterations (synchronized rounds).
     pub sidmm_iterations: u64,
+    /// Counted single-thread Skipper accesses.
     pub skipper_accesses_1t: u64,
     // --- cache-simulated L3 miss rates (tiny-twin traces) ---
+    /// Cache-simulated SGMM L3 miss rate.
     pub sgmm_miss_rate: f64,
+    /// Cache-simulated SIDMM L3 miss rate.
     pub sidmm_miss_rate: f64,
+    /// Cache-simulated Skipper L3 miss rate.
     pub skipper_miss_rate: f64,
     // --- APRAM simulation at PAPER_THREADS ---
+    /// APRAM-simulated makespan at 64 virtual threads.
     pub skipper_sim64_makespan: u64,
+    /// APRAM-simulated total ops at 64 virtual threads.
     pub skipper_sim64_total: u64,
+    /// JIT conflicts at 64 simulated threads (Table II).
     pub conflicts64: ConflictStats,
+    /// JIT conflicts at 16 simulated threads.
     pub conflicts16: ConflictStats,
     // --- matching sizes (for validation reporting) ---
+    /// |M| of the validated Skipper run.
     pub matching_size: usize,
 }
 
 impl DatasetMetrics {
+    /// Modeled SGMM L3 misses (rate × accesses).
     pub fn sgmm_l3_misses(&self) -> u64 {
         (self.sgmm_miss_rate * self.sgmm_accesses as f64) as u64
     }
+    /// Modeled SIDMM L3 misses (rate × accesses).
     pub fn sidmm_l3_misses(&self) -> u64 {
         (self.sidmm_miss_rate * self.sidmm_accesses as f64) as u64
     }
+    /// Modeled Skipper L3 misses for the simulated 64-thread run.
     pub fn skipper_l3_misses_sim64(&self) -> u64 {
         (self.skipper_miss_rate * self.skipper_sim64_total as f64) as u64
     }
 
+    /// SIDMM work profile for the cost model.
     pub fn sidmm_profile(&self) -> WorkProfile {
         WorkProfile {
             accesses: self.sidmm_accesses,
@@ -71,6 +93,7 @@ impl DatasetMetrics {
         }
     }
 
+    /// SGMM work profile for the cost model.
     pub fn sgmm_profile(&self) -> WorkProfile {
         WorkProfile {
             accesses: self.sgmm_accesses,
@@ -90,6 +113,7 @@ impl DatasetMetrics {
     pub fn sidmm_par_seconds(&self, cost: &CostModel, t: usize) -> f64 {
         cost.par_seconds(&self.sidmm_profile(), t)
     }
+    /// Simulated Skipper parallel time at `t` threads.
     pub fn skipper_par_seconds(&self, cost: &CostModel, t: usize) -> f64 {
         cost.skipper_seconds(self.skipper_sim64_makespan, self.skipper_l3_misses_sim64(), t)
     }
@@ -527,45 +551,67 @@ pub fn shard_scale(scale: Scale, threads: usize) -> Result<String, String> {
     };
     let n = 1usize << exp;
     let gen = ChurnGen::Rmat { scale: exp, avg_degree: 8 };
+    // Two batch regimes: the large batch shows throughput scaling with P,
+    // the small batch is where per-epoch dispatch cost dominates — exactly
+    // the regime the persistent pool exists for, so spawn-vs-run is
+    // reported for both dispatch policies side by side.
     let mut t = Table::new(&[
-        "shards", "epochs", "batch", "updates/s", "epoch p50 ms", "mutate p50 ms",
-        "mutate share", "repair frac (mean)", "|M|", "verified",
+        "shards", "workers", "batch", "epochs", "updates/s", "epoch p50 ms",
+        "mutate p50 ms", "run p50 ms", "spawn ovh p50 ms", "mutate share",
+        "repair frac (mean)", "|M|", "verified",
     ]);
-    for shards in [1usize, 2, 4, 8] {
-        let cfg = ChurnConfig {
-            epochs: 6,
-            batch: (n / 8).max(64),
-            delete_frac: 0.5,
-            warmup_epochs: 3,
-            threads,
-            engine_shards: shards,
-            verify: true,
-            ..ChurnConfig::new(gen)
-        };
-        let summary = run_churn(&cfg, |_| {})
-            .map_err(|e| format!("scale P={shards} churn failed: {e}"))?;
-        let wall: f64 = summary.epoch_wall_s.iter().sum();
-        let mutate: f64 = summary.epoch_mutate_s.iter().sum();
-        let updates = (summary.epochs * cfg.batch) as f64;
-        t.row(&[
-            shards.to_string(),
-            format!("{}+{}", summary.warmup_epochs, summary.epochs),
-            cfg.batch.to_string(),
-            format!("{:.0}", updates / wall.max(1e-9)),
-            format!("{:.2}", percentile(&summary.epoch_wall_s, 50.0) * 1e3),
-            format!("{:.2}", percentile(&summary.epoch_mutate_s, 50.0) * 1e3),
-            format!("{:.1}%", 100.0 * mutate / wall.max(1e-9)),
-            format!("{:.4}", summary.repair_frac_mean),
-            (summary.final_matched_vertices / 2).to_string(),
-            format!(
-                "{}/{} epochs",
-                summary.verified_epochs,
-                summary.warmup_epochs + summary.epochs
-            ),
-        ]);
+    // `large` ≥ 512 keeps the two regimes ordered even at Scale::Tiny
+    // (n=1024, where n/8 would undercut the small batch).
+    for &batch in &[(n / 8).max(512), 128] {
+        for shards in [1usize, 2, 4, 8] {
+            for pool in [false, true] {
+                let cfg = ChurnConfig {
+                    epochs: 6,
+                    batch,
+                    delete_frac: 0.5,
+                    warmup_epochs: 3,
+                    threads,
+                    engine_shards: shards,
+                    pool,
+                    verify: true,
+                    ..ChurnConfig::new(gen)
+                };
+                let summary = run_churn(&cfg, |_| {}).map_err(|e| {
+                    format!("scale P={shards} {} churn failed: {e}", cfg.shard_exec().name())
+                })?;
+                let wall: f64 = summary.epoch_wall_s.iter().sum();
+                let mutate: f64 = summary.epoch_mutate_s.iter().sum();
+                let spawn_overhead: Vec<f64> = summary
+                    .epoch_mutate_s
+                    .iter()
+                    .zip(summary.epoch_mutate_run_s.iter())
+                    .map(|(w, r)| (w - r).max(0.0))
+                    .collect();
+                let updates = (summary.epochs * cfg.batch) as f64;
+                t.row(&[
+                    shards.to_string(),
+                    cfg.shard_exec().name().to_string(),
+                    cfg.batch.to_string(),
+                    format!("{}+{}", summary.warmup_epochs, summary.epochs),
+                    format!("{:.0}", updates / wall.max(1e-9)),
+                    format!("{:.2}", percentile(&summary.epoch_wall_s, 50.0) * 1e3),
+                    format!("{:.2}", percentile(&summary.epoch_mutate_s, 50.0) * 1e3),
+                    format!("{:.2}", percentile(&summary.epoch_mutate_run_s, 50.0) * 1e3),
+                    format!("{:.3}", percentile(&spawn_overhead, 50.0) * 1e3),
+                    format!("{:.1}%", 100.0 * mutate / wall.max(1e-9)),
+                    format!("{:.4}", summary.repair_frac_mean),
+                    (summary.final_matched_vertices / 2).to_string(),
+                    format!(
+                        "{}/{} epochs",
+                        summary.verified_epochs,
+                        summary.warmup_epochs + summary.epochs
+                    ),
+                ]);
+            }
+        }
     }
     Ok(format!(
-        "Engine-shard scaling — identical rmat 50/50 churn at engine_shards ∈ {{1,2,4,8}}, |V|={n} (t={threads}; maximality verified after every epoch)\n{}\nmutate share = parallel per-shard mutate phase / epoch wall; before sharding this phase was single-threaded\n",
+        "Engine-shard scaling — identical rmat 50/50 churn at engine_shards ∈ {{1,2,4,8}} × workers ∈ {{fork,pool}}, |V|={n} (t={threads}; maximality verified after every epoch)\n{}\nmutate share = parallel per-shard mutate phase / epoch wall; before sharding this phase was single-threaded.\nspawn ovh = mutate wall − longest per-shard run: per-epoch thread spawn+join cost for forked workers, doorbell wake + countdown for the persistent pool — the small-batch rows are where the pool earns its keep\n",
         t.render()
     ))
 }
@@ -653,14 +699,17 @@ mod tests {
     #[test]
     fn shard_scale_renders_all_shard_counts_verified() {
         let s = shard_scale(Scale::Tiny, 2).unwrap();
-        // one fully verified row per shard count
+        // one fully verified row per (batch, shard count, worker mode)
         assert_eq!(
             s.matches("9/9 epochs").count(),
-            4,
-            "expected 4 verified rows in: {s}"
+            16,
+            "expected 2 batches × 4 shard counts × 2 worker modes in: {s}"
         );
         assert!(s.contains("engine_shards"), "{s}");
         assert!(s.contains("mutate share"), "{s}");
+        assert!(s.contains("spawn ovh"), "{s}");
+        assert!(s.contains("fork"), "{s}");
+        assert!(s.contains("pool"), "{s}");
     }
 
     #[test]

@@ -4,19 +4,23 @@
 use std::io::Write;
 
 #[derive(Default)]
+/// Ordered collection of experiment outputs, written as text + markdown.
 pub struct Report {
     sections: Vec<(String, String)>,
 }
 
 impl Report {
+    /// Empty report.
     pub fn new() -> Self {
         Self::default()
     }
 
+    /// Append one experiment’s rendered output under `id`.
     pub fn add(&mut self, id: &str, content: String) {
         self.sections.push((id.to_string(), content));
     }
 
+    /// The collected `(id, content)` sections, in insertion order.
     pub fn sections(&self) -> &[(String, String)] {
         &self.sections
     }

@@ -136,6 +136,7 @@ impl HalfAdjacency {
     }
 
     #[inline]
+    /// Does this sidecar own vertex `v`’s list?
     pub fn owns(&self, v: VertexId) -> bool {
         let v = v as usize;
         v >= self.start && v < self.start + self.lists.len()
@@ -188,6 +189,7 @@ impl HalfAdjacency {
     }
 
     #[inline]
+    /// Live (non-tombstoned) neighbor count of owned vertex `v`.
     pub fn live_degree(&self, v: VertexId) -> usize {
         self.list(v).live_len()
     }
@@ -234,11 +236,13 @@ pub struct DynamicAdjacency {
 }
 
 impl DynamicAdjacency {
+    /// Empty adjacency over `0..num_vertices`.
     pub fn new(num_vertices: usize) -> Self {
         Self { half: HalfAdjacency::new(0, num_vertices) }
     }
 
     #[inline]
+    /// Size of the vertex universe.
     pub fn num_vertices(&self) -> usize {
         self.half.end() as usize
     }
@@ -260,10 +264,12 @@ impl DynamicAdjacency {
     }
 
     #[inline]
+    /// Live neighbor count of `v`.
     pub fn live_degree(&self, v: VertexId) -> usize {
         self.half.live_degree(v)
     }
 
+    /// Is undirected edge `{u,v}` live? (Scans the sparser endpoint.)
     pub fn contains(&self, u: VertexId, v: VertexId) -> bool {
         if !self.half.owns(u) || !self.half.owns(v) {
             return false;

@@ -12,7 +12,7 @@
 //! runs never starve).
 
 use super::engine::{EpochReport, Update};
-use super::partition::ShardedDynamicMatcher;
+use super::partition::{ShardExec, ShardedDynamicMatcher};
 use crate::graph::gen::{barabasi_albert, erdos_renyi, grid, rmat, GenConfig};
 use crate::util::rng::Xoshiro256pp;
 use crate::VertexId;
@@ -46,6 +46,7 @@ impl ChurnGen {
         })
     }
 
+    /// The family name (`er`/`ba`/`grid`/`rmat`).
     pub fn name(&self) -> &'static str {
         match self {
             ChurnGen::Er { .. } => "er",
@@ -55,6 +56,7 @@ impl ChurnGen {
         }
     }
 
+    /// Vertex-universe size of the generated population.
     pub fn num_vertices(&self) -> usize {
         match *self {
             ChurnGen::Er { n, .. } | ChurnGen::Ba { n, .. } => n,
@@ -88,15 +90,22 @@ impl ChurnGen {
     }
 }
 
+/// Everything one churn run needs: the population generator, the schedule
+/// shape, and the engine configuration.
 #[derive(Clone, Debug)]
 pub struct ChurnConfig {
+    /// Edge-population generator family and size.
     pub gen: ChurnGen,
+    /// Schedule seed (population shuffle + per-epoch sampling).
     pub seed: u64,
     /// Matcher threads.
     pub threads: usize,
     /// Engine shards (`P`): vertex-partitioned parallel mutate phase.
     /// `1` reproduces the single-shard [`super::DynamicMatcher`] behavior.
     pub engine_shards: usize,
+    /// Dispatch shard phases to the persistent worker pool (default);
+    /// `false` forks scoped threads per epoch — the measured baseline.
+    pub pool: bool,
     /// Churn epochs after warmup.
     pub epochs: usize,
     /// Updates per churn epoch.
@@ -111,12 +120,15 @@ pub struct ChurnConfig {
 }
 
 impl ChurnConfig {
+    /// Defaults matching the acceptance run: 10 epochs of 10k updates at
+    /// 50/50 insert/delete, verified, pooled single-shard engine.
     pub fn new(gen: ChurnGen) -> Self {
         Self {
             gen,
             seed: 1,
             threads: 4,
             engine_shards: 1,
+            pool: true,
             epochs: 10,
             batch: 10_000,
             delete_frac: 0.5,
@@ -124,11 +136,18 @@ impl ChurnConfig {
             verify: true,
         }
     }
+
+    /// The engine shard-dispatch policy this config selects.
+    pub fn shard_exec(&self) -> ShardExec {
+        ShardExec::from_pool_flag(self.pool)
+    }
 }
 
 /// Outcome of one epoch, as handed to the per-epoch observer.
 pub struct ChurnEpoch {
+    /// The engine's epoch report.
     pub report: EpochReport,
+    /// True for population-insertion (warmup) epochs.
     pub warmup: bool,
     /// `None` when verification is off.
     pub verified: Option<Result<(), String>>,
@@ -137,22 +156,38 @@ pub struct ChurnEpoch {
 /// Run summary across all epochs.
 #[derive(Clone, Debug, Default)]
 pub struct ChurnSummary {
+    /// Churn (post-warmup) epochs run.
     pub epochs: usize,
+    /// Warmup epochs run.
     pub warmup_epochs: usize,
+    /// Insert updates issued across all epochs.
     pub total_inserts: usize,
+    /// Delete updates issued across all epochs.
     pub total_deletes: usize,
+    /// Edges re-examined by repair sweeps across all epochs.
     pub total_repair_edges: usize,
+    /// Matched pairs destroyed by deletes across all epochs.
     pub destroyed_pairs: usize,
     /// Mean/max repair fraction over the *churn* (post-warmup) epochs.
     pub repair_frac_mean: f64,
+    /// See [`repair_frac_mean`](Self::repair_frac_mean).
     pub repair_frac_max: f64,
     /// Per-epoch wall seconds, churn epochs only (for p50/p99 reporting).
     pub epoch_wall_s: Vec<f64>,
     /// Per-epoch mutate-phase wall seconds, churn epochs only — the phase
     /// `engine_shards` parallelizes.
     pub epoch_mutate_s: Vec<f64>,
+    /// Per-epoch longest single-shard busy seconds inside the mutate phase
+    /// — the "run" half of spawn-vs-run; `epoch_mutate_s[i] -
+    /// epoch_mutate_run_s[i]` is that epoch's dispatch overhead.
+    pub epoch_mutate_run_s: Vec<f64>,
+    /// Per-epoch routing wall seconds (building the per-shard mailboxes).
+    pub epoch_route_s: Vec<f64>,
+    /// Live undirected edges at the end of the run.
     pub final_live_edges: u64,
+    /// Matched vertices at the end of the run.
     pub final_matched_vertices: usize,
+    /// Epochs whose post-epoch verification passed.
     pub verified_epochs: usize,
 }
 
@@ -169,7 +204,8 @@ pub fn run_churn(
     if pending.is_empty() {
         return Err("generator produced no edges".into());
     }
-    let engine = ShardedDynamicMatcher::new(n, cfg.threads, cfg.engine_shards);
+    let engine =
+        ShardedDynamicMatcher::with_exec(n, cfg.threads, cfg.engine_shards, cfg.shard_exec());
     let mut live: Vec<(VertexId, VertexId)> = Vec::with_capacity(pending.len());
     let mut graveyard: Vec<(VertexId, VertexId)> = Vec::new();
     let mut summary = ChurnSummary::default();
@@ -193,6 +229,8 @@ pub fn run_churn(
             summary.repair_frac_max = summary.repair_frac_max.max(report.repair_fraction());
             summary.epoch_wall_s.push(report.wall_s);
             summary.epoch_mutate_s.push(report.mutate_wall_s);
+            summary.epoch_mutate_run_s.push(report.mutate_run_s);
+            summary.epoch_route_s.push(report.route_wall_s);
         }
         let verified = cfg.verify.then(|| engine.verify());
         let failure = match &verified {
@@ -335,24 +373,38 @@ mod tests {
 
     #[test]
     fn sharded_churn_stays_verified_and_times_mutate() {
-        // the same schedule at P ∈ {1, 4}: every epoch verified, and the
-        // per-epoch mutate-phase timings are recorded for both
+        // the same schedule at P ∈ {1, 4} under both shard-dispatch
+        // policies: every epoch verified, and the per-epoch mutate wall,
+        // mutate run, and route timings are all recorded
         for shards in [1usize, 4] {
-            let cfg = ChurnConfig {
-                epochs: 4,
-                batch: 200,
-                warmup_epochs: 2,
-                threads: 2,
-                engine_shards: shards,
-                ..ChurnConfig::new(ChurnGen::Er { n: 512, m: 2048 })
-            };
-            let summary = run_churn(&cfg, |e| {
-                assert!(matches!(e.verified, Some(Ok(()))), "P={shards}");
-            })
-            .unwrap_or_else(|e| panic!("P={shards}: {e}"));
-            assert_eq!(summary.epochs, 4, "P={shards}");
-            assert_eq!(summary.epoch_mutate_s.len(), summary.epochs);
-            assert!(summary.epoch_mutate_s.iter().all(|&s| s > 0.0));
+            for pool in [true, false] {
+                let cfg = ChurnConfig {
+                    epochs: 4,
+                    batch: 200,
+                    warmup_epochs: 2,
+                    threads: 2,
+                    engine_shards: shards,
+                    pool,
+                    ..ChurnConfig::new(ChurnGen::Er { n: 512, m: 2048 })
+                };
+                let summary = run_churn(&cfg, |e| {
+                    assert!(matches!(e.verified, Some(Ok(()))), "P={shards} pool={pool}");
+                })
+                .unwrap_or_else(|e| panic!("P={shards} pool={pool}: {e}"));
+                assert_eq!(summary.epochs, 4, "P={shards} pool={pool}");
+                assert_eq!(summary.epoch_mutate_s.len(), summary.epochs);
+                assert_eq!(summary.epoch_mutate_run_s.len(), summary.epochs);
+                assert_eq!(summary.epoch_route_s.len(), summary.epochs);
+                assert!(summary.epoch_mutate_s.iter().all(|&s| s > 0.0));
+                assert!(summary.epoch_mutate_run_s.iter().all(|&s| s > 0.0));
+                for (wall, run) in summary
+                    .epoch_mutate_s
+                    .iter()
+                    .zip(summary.epoch_mutate_run_s.iter())
+                {
+                    assert!(run <= &(wall + 1e-9), "run {run} > wall {wall}");
+                }
+            }
         }
     }
 

@@ -52,16 +52,20 @@ use crate::VertexId;
 /// One mutation of the live edge set.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Update {
+    /// Make edge `{u, v}` live (no-op if it already is).
     Insert(VertexId, VertexId),
+    /// Remove edge `{u, v}` from the live set (no-op if it is not live).
     Delete(VertexId, VertexId),
 }
 
 /// Telemetry of one applied epoch.
 #[derive(Clone, Debug, Default)]
 pub struct EpochReport {
+    /// 1-based epoch number on this engine.
     pub epoch: u64,
-    /// Insert/delete updates received (before dedup against the live set).
+    /// Insert updates received (before dedup against the live set).
     pub inserts: usize,
+    /// Delete updates received (before dedup against the live set).
     pub deletes: usize,
     /// Inserts that actually created a live edge and survived to the end of
     /// the mutate phase.
@@ -82,14 +86,34 @@ pub struct EpochReport {
     pub live_edges: u64,
     /// Matched vertices after the epoch.
     pub matched_vertices: usize,
+    /// Wall seconds of the whole epoch (mutate + insert + repair phases).
     pub wall_s: f64,
-    /// Wall seconds of the per-shard parallel mutate phase (adjacency
-    /// edits, partner bookkeeping, freed collection).
+    /// Wall seconds of the per-shard parallel mutate phase, barrier to
+    /// barrier (adjacency edits, partner bookkeeping, freed collection —
+    /// including the cost of waking or spawning the shard workers).
     pub mutate_wall_s: f64,
     /// Wall seconds of the insert sweep (phase 2).
     pub insert_wall_s: f64,
     /// Wall seconds of repair collection plus the repair sweep (phase 3).
     pub repair_wall_s: f64,
+    /// Longest single-shard busy time *inside* the mutate phase — the
+    /// "run" half of spawn-vs-run. The difference to [`mutate_wall_s`]
+    /// (see [`mutate_spawn_overhead_s`](Self::mutate_spawn_overhead_s)) is
+    /// pure dispatch cost: thread spawn+join for
+    /// [`ShardExec::Fork`](super::ShardExec::Fork), run-queue doorbell
+    /// wake + countdown for [`ShardExec::Pool`](super::ShardExec::Pool).
+    ///
+    /// [`mutate_wall_s`]: Self::mutate_wall_s
+    pub mutate_run_s: f64,
+    /// Wall seconds spent routing this epoch's updates into per-shard
+    /// mailboxes. Filled by `apply_epoch` (which routes internally) or by
+    /// the service's router for mailbox flushes.
+    pub route_wall_s: f64,
+    /// Portion of [`route_wall_s`](Self::route_wall_s) that overlapped a
+    /// concurrently running engine flush — nonzero only on the service's
+    /// pipelined path, where routing epoch `N+1` proceeds while epoch `N`
+    /// is being applied.
+    pub route_overlap_s: f64,
 }
 
 impl EpochReport {
@@ -109,6 +133,16 @@ impl EpochReport {
             0.0
         }
     }
+
+    /// Dispatch ("spawn") overhead of the mutate phase: barrier-to-barrier
+    /// wall time minus the longest per-shard busy time. For very small
+    /// epochs under the forked baseline this is the dominant cost — the
+    /// persistent worker pool exists to make it disappear, and this number
+    /// is how the `scale` experiment and `dynamic_churn` bench show it
+    /// doing so.
+    pub fn mutate_spawn_overhead_s(&self) -> f64 {
+        (self.mutate_wall_s - self.mutate_run_s).max(0.0)
+    }
 }
 
 /// Fully dynamic maximal matching: a long-lived
@@ -121,35 +155,61 @@ impl EpochReport {
 /// above narrates, and all epoch behavior (ordering, netting, counters) is
 /// the stable reference the property tests cross-check higher shard counts
 /// against.
+///
+/// # Example
+///
+/// One matcher thread makes the sweep order deterministic: on the path
+/// `0-1-2`, edge `(0,1)` arrives first and matches, and deleting it later
+/// frees both endpoints so the repair sweep re-matches `(1,2)`:
+///
+/// ```
+/// use skipper::dynamic::{DynamicMatcher, Update};
+///
+/// let mut m = DynamicMatcher::new(4, 1);
+/// m.apply_epoch(&[Update::Insert(0, 1), Update::Insert(1, 2)]).unwrap();
+/// assert_eq!(m.partner(0), Some(1));
+///
+/// let report = m.apply_epoch(&[Update::Delete(0, 1)]).unwrap();
+/// assert_eq!(report.destroyed_pairs, 1);
+/// assert_eq!(m.partner(1), Some(2), "repair re-matched the surviving edge");
+/// m.verify().unwrap();
+/// ```
 pub struct DynamicMatcher {
     inner: ShardedDynamicMatcher,
 }
 
 impl DynamicMatcher {
+    /// Engine over the fixed vertex universe `0..num_vertices` with
+    /// `threads` matcher threads inside the insert/repair sweeps.
     pub fn new(num_vertices: usize, threads: usize) -> Self {
         Self { inner: ShardedDynamicMatcher::new(num_vertices, threads, 1) }
     }
 
+    /// Size of the vertex universe.
     #[inline]
     pub fn num_vertices(&self) -> usize {
         self.inner.num_vertices()
     }
 
+    /// Epochs applied so far.
     #[inline]
     pub fn epochs_applied(&self) -> u64 {
         self.inner.epochs_applied()
     }
 
+    /// Live undirected edge count.
     #[inline]
     pub fn num_live_edges(&self) -> u64 {
         self.inner.num_live_edges()
     }
 
+    /// Currently matched vertices (2 × matched pairs).
     #[inline]
     pub fn matched_vertices(&self) -> usize {
         self.inner.matched_vertices()
     }
 
+    /// Is `v` currently matched?
     #[inline]
     pub fn is_matched(&self, v: VertexId) -> bool {
         self.inner.is_matched(v)
@@ -176,6 +236,7 @@ impl DynamicMatcher {
         self.inner.adjacency_bytes()
     }
 
+    /// Tombstoned adjacency slots awaiting compaction.
     pub fn adjacency_tombstones(&self) -> u64 {
         self.inner.adjacency_tombstones()
     }

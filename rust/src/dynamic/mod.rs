@@ -19,7 +19,9 @@
 //!   [`ShardedDynamicMatcher`] splits vertices into `P` contiguous shards
 //!   ([`VertexPartition`]), routes each update to its owner shard(s) via
 //!   per-shard mailboxes ([`ShardMailboxes`]), runs the mutate phase in
-//!   parallel across shards, and feeds the per-shard insert/repair work
+//!   parallel across shards — on a persistent
+//!   [`WorkerPool`](crate::par::pool::WorkerPool) by default, see
+//!   [`ShardExec`] — and feeds the per-shard insert/repair work
 //!   lists into the shared one-byte-per-vertex `SkipperCore` sweeps — the
 //!   atomic state array needs no sharding at all;
 //! * [`engine`] — the epoch-based update API: [`Update`], [`EpochReport`]
@@ -41,4 +43,4 @@ pub mod partition;
 
 pub use adjacency::{DynamicAdjacency, HalfAdjacency};
 pub use engine::{DynamicMatcher, EpochReport, Update};
-pub use partition::{ShardMailboxes, ShardedDynamicMatcher, VertexPartition};
+pub use partition::{ShardExec, ShardMailboxes, ShardedDynamicMatcher, VertexPartition};

@@ -1,5 +1,5 @@
 //! Vertex-partitioned sharding for the dynamic engine: parallel epochs in
-//! every phase, not just the matching sweeps.
+//! every phase, executed by a **persistent shard-worker pool**.
 //!
 //! ## Why sharding the *engine* is cheap
 //!
@@ -44,6 +44,21 @@
 //!                      epoch report (per-phase wall times)
 //! ```
 //!
+//! ## Persistent shard workers ([`ShardExec`])
+//!
+//! The parallel phases dispatch one job per shard. Under the default
+//! [`ShardExec::Pool`] those jobs run on a standing
+//! [`WorkerPool`](crate::par::pool::WorkerPool): worker `i` owns shard `i`
+//! for the engine's lifetime, parks between epochs, and is woken by its run
+//! queue's doorbell — so a small epoch pays two condvar wakes per shard
+//! instead of a thread spawn and join. [`ShardExec::Fork`] keeps the old
+//! scoped fork/join (one `std::thread` per shard per epoch) as the measured
+//! baseline; the `scale` experiment and `dynamic_churn` bench run both and
+//! report the dispatch ("spawn") overhead separately from the per-shard
+//! busy ("run") time, via [`EpochReport::mutate_run_s`] and
+//! [`EpochReport::mutate_spawn_overhead_s`]. `P = 1` runs inline on the
+//! calling thread under either policy.
+//!
 //! ## Why cross-shard updates need no coordination
 //!
 //! An edge `{u,v}` touches at most two shards, and the router appends every
@@ -65,10 +80,16 @@
 //! edge after all frees, and the repair sweep re-processes every surviving
 //! edge of a still-free freed vertex; the proof in `engine.rs` carries over
 //! verbatim with "the mutate loop" replaced by "the per-shard mutate loops,
-//! which partition the work by endpoint owner".
+//! which partition the work by endpoint owner". Which *thread* runs a
+//! shard's loop — a freshly forked one or a parked pool worker — never
+//! enters the argument; the countdown barrier provides the same
+//! happens-before edge the fork/join did.
 //!
 //! [`super::DynamicMatcher`] is the `P = 1` specialization of
 //! [`ShardedDynamicMatcher`] — same code path, one shard, no spawns.
+//!
+//! The full system walk-through (with this engine in context) lives in
+//! `docs/ARCHITECTURE.md`.
 
 use super::adjacency::HalfAdjacency;
 use super::engine::{EpochReport, Update};
@@ -76,10 +97,11 @@ use crate::graph::stream::BatchEdgeSource;
 use crate::matching::core::SkipperCore;
 use crate::matching::streaming::StreamingSkipper;
 use crate::matching::{MatchArena, BUFFER_EDGES};
+use crate::par::pool::{ArriveOnDrop, Countdown, WorkerPool};
 use crate::par::run_threads_collect;
 use crate::{VertexId, INVALID_VERTEX};
 use std::sync::atomic::{AtomicU32, AtomicU64, AtomicUsize, Ordering};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 /// A split of the vertex universe `0..n` into contiguous shard ranges.
@@ -126,11 +148,13 @@ impl VertexPartition {
         Self { starts }
     }
 
+    /// Number of shards in the partition.
     #[inline]
     pub fn num_shards(&self) -> usize {
         self.starts.len() - 1
     }
 
+    /// Size of the partitioned vertex universe.
     #[inline]
     pub fn num_vertices(&self) -> usize {
         *self.starts.last().unwrap() as usize
@@ -147,6 +171,38 @@ impl VertexPartition {
     pub fn owner(&self, v: VertexId) -> usize {
         debug_assert!((v as usize) < self.num_vertices());
         self.starts.partition_point(|&s| s <= v) - 1
+    }
+}
+
+/// How the engine dispatches its per-shard parallel phases.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ShardExec {
+    /// Fork one scoped thread per shard per epoch (the pre-pool baseline;
+    /// kept so spawn cost stays measurable).
+    Fork,
+    /// Submit to a persistent [`WorkerPool`](crate::par::pool::WorkerPool):
+    /// worker `i` owns shard `i`, parks between epochs, and is woken by a
+    /// run-queue doorbell — no per-epoch thread spawn. The default.
+    Pool,
+}
+
+impl ShardExec {
+    /// The policy a boolean "use the pool" knob (CLI `--no-pool`, config
+    /// `pool` fields) selects — the single home of that mapping.
+    pub fn from_pool_flag(pool: bool) -> Self {
+        if pool {
+            ShardExec::Pool
+        } else {
+            ShardExec::Fork
+        }
+    }
+
+    /// Short lowercase label for reports and CLI output.
+    pub fn name(&self) -> &'static str {
+        match self {
+            ShardExec::Fork => "fork",
+            ShardExec::Pool => "pool",
+        }
     }
 }
 
@@ -181,6 +237,7 @@ impl ShardMailboxes {
         self.inserts + self.deletes
     }
 
+    /// True when nothing has been routed since the last clear.
     #[inline]
     pub fn is_empty(&self) -> bool {
         self.num_updates() == 0
@@ -198,7 +255,7 @@ impl ShardMailboxes {
 
 /// State exclusively owned by one shard: its adjacency slice and the freed
 /// vertices of the epoch in flight. Behind a `Mutex` only so the engine can
-/// hand disjoint shards to scoped threads through `&self`; the lock is
+/// hand disjoint shards to worker threads through `&self`; the lock is
 /// uncontended by construction (each phase touches each shard from exactly
 /// one thread).
 struct ShardState {
@@ -219,16 +276,10 @@ struct MutateOut {
     freed: usize,
 }
 
-/// Vertex-partitioned fully dynamic maximal matching: `P` shards each own a
-/// slice of the adjacency sidecar and of `partner[]`, epochs run the mutate
-/// phase in parallel across shards, and the matching sweeps run against the
-/// one shared [`SkipperCore`] exactly as in the single-threaded engine.
-///
-/// All methods take `&self`: shard state sits behind per-shard mutexes and
-/// the cross-shard state (`partner[]`, counters, the core's state bytes) is
-/// atomic, so a service can answer partner queries from any thread while an
-/// epoch is in flight.
-pub struct ShardedDynamicMatcher {
+/// The cross-thread engine state: everything a per-shard job needs. Jobs on
+/// the persistent pool are `'static`, so this lives behind an `Arc` that
+/// each job clones — the engine facade and the workers share it.
+struct EngineShared {
     partition: VertexPartition,
     shards: Vec<Mutex<ShardState>>,
     /// `partner[v]` is `v`'s matched partner, [`INVALID_VERTEX`] when free.
@@ -236,286 +287,10 @@ pub struct ShardedDynamicMatcher {
     /// phases. Atomic so readers never block on an epoch.
     partner: Vec<AtomicU32>,
     core: SkipperCore,
-    driver: StreamingSkipper,
-    /// Serializes epoch application: `apply_epoch`/`apply_mailboxes` take
-    /// `&self` so readers stay lock-free, but two concurrent epochs would
-    /// race mutate against harvest — this gate makes them queue instead.
-    epoch_gate: Mutex<()>,
-    epoch: AtomicU64,
     matched: AtomicUsize,
 }
 
-impl ShardedDynamicMatcher {
-    /// `engine_shards` contiguous equal-size shards over `0..num_vertices`,
-    /// `threads` matcher threads inside the shared-core sweeps.
-    pub fn new(num_vertices: usize, threads: usize, engine_shards: usize) -> Self {
-        Self::with_partition(VertexPartition::equal(num_vertices, engine_shards), threads)
-    }
-
-    pub fn with_partition(partition: VertexPartition, threads: usize) -> Self {
-        let n = partition.num_vertices();
-        let shards = (0..partition.num_shards())
-            .map(|i| {
-                let (s, e) = partition.range(i);
-                Mutex::new(ShardState {
-                    adj: HalfAdjacency::new(s, (e - s) as usize),
-                    freed: Vec::new(),
-                })
-            })
-            .collect();
-        Self {
-            partition,
-            shards,
-            partner: (0..n).map(|_| AtomicU32::new(INVALID_VERTEX)).collect(),
-            core: SkipperCore::new(n),
-            driver: StreamingSkipper::new(threads),
-            epoch_gate: Mutex::new(()),
-            epoch: AtomicU64::new(0),
-            matched: AtomicUsize::new(0),
-        }
-    }
-
-    #[inline]
-    pub fn num_vertices(&self) -> usize {
-        self.partner.len()
-    }
-
-    #[inline]
-    pub fn num_shards(&self) -> usize {
-        self.shards.len()
-    }
-
-    #[inline]
-    pub fn partition(&self) -> &VertexPartition {
-        &self.partition
-    }
-
-    #[inline]
-    pub fn epochs_applied(&self) -> u64 {
-        self.epoch.load(Ordering::Relaxed)
-    }
-
-    #[inline]
-    pub fn matched_vertices(&self) -> usize {
-        self.matched.load(Ordering::Relaxed)
-    }
-
-    #[inline]
-    pub fn is_matched(&self, v: VertexId) -> bool {
-        self.partner[v as usize].load(Ordering::Acquire) != INVALID_VERTEX
-    }
-
-    /// `v`'s current partner, if matched. Lock-free: safe to call from any
-    /// thread, including while an epoch is mid-flight (the answer is then a
-    /// point-in-time read of `v`'s slot).
-    pub fn partner(&self, v: VertexId) -> Option<VertexId> {
-        if (v as usize) >= self.partner.len() {
-            return None;
-        }
-        let p = self.partner[v as usize].load(Ordering::Acquire);
-        (p != INVALID_VERTEX).then_some(p)
-    }
-
-    /// Current matching as canonical `(min, max)` pairs.
-    pub fn matching_pairs(&self) -> Vec<(VertexId, VertexId)> {
-        self.partner
-            .iter()
-            .enumerate()
-            .filter_map(|(u, p)| {
-                let p = p.load(Ordering::Acquire);
-                (p != INVALID_VERTEX && (u as VertexId) < p).then_some((u as VertexId, p))
-            })
-            .collect()
-    }
-
-    /// Live undirected edge count (sums per-shard half-edge counters).
-    pub fn num_live_edges(&self) -> u64 {
-        let halves: u64 = self
-            .shards
-            .iter()
-            .map(|s| s.lock().unwrap().adj.half_edges())
-            .sum();
-        debug_assert_eq!(halves % 2, 0, "half-edge storage out of sync");
-        halves / 2
-    }
-
-    /// The live edge set, canonicalized `(min, max)`, each edge exactly
-    /// once (the owner of the min endpoint emits it) — for verification and
-    /// the service's audit path.
-    pub fn live_edges(&self) -> Vec<(VertexId, VertexId)> {
-        let mut edges = Vec::new();
-        for shard in &self.shards {
-            let st = shard.lock().unwrap();
-            for w in st.adj.start()..st.adj.end() {
-                for nb in st.adj.neighbors(w) {
-                    if w < nb {
-                        edges.push((w, nb));
-                    }
-                }
-            }
-        }
-        edges
-    }
-
-    /// Is `{u,v}` live? (Asks the owner of `u` for its half.)
-    pub fn contains_edge(&self, u: VertexId, v: VertexId) -> bool {
-        if u == v || (u as usize) >= self.num_vertices() || (v as usize) >= self.num_vertices() {
-            return false;
-        }
-        let st = self.shards[self.partition.owner(u)].lock().unwrap();
-        st.adj.contains_half(u, v)
-    }
-
-    /// Adjacency-sidecar resident bytes, summed over shards.
-    pub fn adjacency_bytes(&self) -> usize {
-        self.shards
-            .iter()
-            .map(|s| s.lock().unwrap().adj.memory_bytes())
-            .sum()
-    }
-
-    /// Tombstoned adjacency slots awaiting compaction, summed over shards.
-    pub fn adjacency_tombstones(&self) -> u64 {
-        self.shards
-            .iter()
-            .map(|s| s.lock().unwrap().adj.tombstones())
-            .sum()
-    }
-
-    /// Full dynamic validity check: matching ⊆ live edges, endpoint-
-    /// disjoint, and maximal over the live set.
-    pub fn verify(&self) -> Result<(), String> {
-        crate::matching::verify::verify_maximal_dynamic(
-            self.num_vertices(),
-            self.live_edges().into_iter(),
-            &self.matching_pairs(),
-        )
-    }
-
-    /// Fresh reusable mailboxes matching this engine's shard count.
-    pub fn mailboxes(&self) -> ShardMailboxes {
-        ShardMailboxes {
-            boxes: (0..self.num_shards()).map(|_| Vec::new()).collect(),
-            inserts: 0,
-            deletes: 0,
-        }
-    }
-
-    /// Route `updates` into per-shard mailboxes (each update reaches the
-    /// owner of each endpoint — at most two shards). Errors on out-of-range
-    /// vertices with nothing routed, so a failed call never half-fills the
-    /// mailboxes.
-    pub fn route_into(
-        &self,
-        updates: &[Update],
-        mailboxes: &mut ShardMailboxes,
-    ) -> Result<(), String> {
-        let n = self.num_vertices();
-        if let Some(bad) = updates.iter().find(|u| {
-            let (Update::Insert(a, b) | Update::Delete(a, b)) = **u;
-            a as usize >= n || b as usize >= n
-        }) {
-            return Err(format!("update {bad:?} out of range (|V|={n})"));
-        }
-        for &upd in updates {
-            let (Update::Insert(a, b) | Update::Delete(a, b)) = upd;
-            match upd {
-                Update::Insert(..) => mailboxes.inserts += 1,
-                Update::Delete(..) => mailboxes.deletes += 1,
-            }
-            let sa = self.partition.owner(a);
-            mailboxes.boxes[sa].push(upd);
-            let sb = self.partition.owner(b);
-            if sb != sa {
-                mailboxes.boxes[sb].push(upd);
-            }
-        }
-        Ok(())
-    }
-
-    /// Apply one epoch of mixed updates. Update order within the batch is
-    /// respected against the live set (insert-then-delete of the same edge
-    /// in one epoch nets out to nothing). Errors on out-of-range vertices,
-    /// with no mutation applied.
-    pub fn apply_epoch(&self, updates: &[Update]) -> Result<EpochReport, String> {
-        let mut mailboxes = self.mailboxes();
-        self.route_into(updates, &mut mailboxes)?;
-        Ok(self.apply_mailboxes(&mut mailboxes))
-    }
-
-    /// Run one epoch over already-routed mailboxes (they are drained and
-    /// left empty for reuse). This is the service's flush path; epoch
-    /// numbering, counters, and the report are identical to
-    /// [`apply_epoch`](Self::apply_epoch).
-    ///
-    /// Concurrent callers serialize on an internal gate (queries stay
-    /// lock-free throughout); within one epoch the phases are barriered,
-    /// so every reader between epochs observes a quiescent engine.
-    pub fn apply_mailboxes(&self, mailboxes: &mut ShardMailboxes) -> EpochReport {
-        let _epoch_exclusive = self.epoch_gate.lock().unwrap();
-        let t0 = Instant::now();
-        let epoch = self.epoch.fetch_add(1, Ordering::Relaxed) + 1;
-        let mut rep = EpochReport {
-            epoch,
-            inserts: mailboxes.inserts(),
-            deletes: mailboxes.deletes(),
-            ..EpochReport::default()
-        };
-
-        // --- phase 1: parallel mutate, one thread per shard --------------
-        // run_threads_collect is the epoch barrier: every shard's half-edge
-        // edits, partner clears, and core releases complete before any
-        // matching sweep observes them.
-        let p = self.num_shards();
-        let tm = Instant::now();
-        let boxes = &mailboxes.boxes;
-        let outs: Vec<MutateOut> = run_threads_collect(p, |i| self.mutate_shard(i, &boxes[i]));
-        rep.mutate_wall_s = tm.elapsed().as_secs_f64();
-        let mut fresh: Vec<(VertexId, VertexId)> = Vec::new();
-        for out in outs {
-            rep.deleted_live += out.deleted_live;
-            rep.destroyed_pairs += out.destroyed_pairs;
-            rep.freed_vertices += out.freed;
-            fresh.extend(out.fresh);
-        }
-        self.matched.fetch_sub(rep.freed_vertices, Ordering::Relaxed);
-        rep.inserted_live = fresh.len();
-
-        // --- phase 2: insert pass through the streaming fast path --------
-        let ti = Instant::now();
-        let (m, c) = self.run_pass(&fresh);
-        rep.new_matches += m;
-        rep.conflicts += c;
-        rep.insert_wall_s = ti.elapsed().as_secs_f64();
-
-        // --- phase 3: repair sweep over affected neighborhoods -----------
-        // collection is again parallel per shard; the global sort+dedup
-        // removes the duplicates a both-endpoints-freed cross-shard edge
-        // produces (each owner emits it once). Insert-only epochs (the
-        // steady-state service workload) freed nothing and skip the
-        // fork/join entirely.
-        let tr = Instant::now();
-        let mut repair: Vec<(VertexId, VertexId)> = Vec::new();
-        if rep.freed_vertices > 0 {
-            for list in run_threads_collect(p, |i| self.collect_repair(i)) {
-                repair.extend(list);
-            }
-        }
-        repair.sort_unstable();
-        repair.dedup();
-        rep.repair_edges = repair.len();
-        let (m, c) = self.run_pass(&repair);
-        rep.new_matches += m;
-        rep.conflicts += c;
-        rep.repair_wall_s = tr.elapsed().as_secs_f64();
-
-        rep.live_edges = self.num_live_edges();
-        rep.matched_vertices = self.matched.load(Ordering::Relaxed);
-        rep.wall_s = t0.elapsed().as_secs_f64();
-        mailboxes.clear();
-        rep
-    }
-
+impl EngineShared {
     /// One shard's mutate pass: apply its mailbox in arrival order to the
     /// owned halves, clear owned `partner[]` entries of destroyed pairs,
     /// release the freed endpoints in the shared core, and hand back the
@@ -621,6 +396,452 @@ impl ShardedDynamicMatcher {
         st.freed.clear();
         repair
     }
+}
+
+/// Vertex-partitioned fully dynamic maximal matching: `P` shards each own a
+/// slice of the adjacency sidecar and of `partner[]`, epochs run the mutate
+/// phase in parallel across shards (on a persistent worker pool by
+/// default — see [`ShardExec`]), and the matching sweeps run against the
+/// one shared [`SkipperCore`] exactly as in the single-threaded engine.
+///
+/// All methods take `&self`: shard state sits behind per-shard mutexes and
+/// the cross-shard state (`partner[]`, counters, the core's state bytes) is
+/// atomic, so a service can answer partner queries from any thread while an
+/// epoch is in flight.
+pub struct ShardedDynamicMatcher {
+    shared: Arc<EngineShared>,
+    driver: StreamingSkipper,
+    exec: ShardExec,
+    /// The standing shard workers (`None` for `P = 1` or [`ShardExec::Fork`]).
+    pool: Option<WorkerPool>,
+    /// Serializes epoch application: `apply_epoch`/`apply_mailboxes` take
+    /// `&self` so readers stay lock-free, but two concurrent epochs would
+    /// race mutate against harvest — this gate makes them queue instead.
+    epoch_gate: Mutex<()>,
+    epoch: AtomicU64,
+}
+
+impl ShardedDynamicMatcher {
+    /// `engine_shards` contiguous equal-size shards over `0..num_vertices`,
+    /// `threads` matcher threads inside the shared-core sweeps. Shard
+    /// phases run on the persistent pool ([`ShardExec::Pool`]).
+    pub fn new(num_vertices: usize, threads: usize, engine_shards: usize) -> Self {
+        Self::with_exec(num_vertices, threads, engine_shards, ShardExec::Pool)
+    }
+
+    /// Like [`new`](Self::new) with an explicit shard-dispatch policy.
+    pub fn with_exec(
+        num_vertices: usize,
+        threads: usize,
+        engine_shards: usize,
+        exec: ShardExec,
+    ) -> Self {
+        Self::with_partition_exec(VertexPartition::equal(num_vertices, engine_shards), threads, exec)
+    }
+
+    /// Engine over an explicit partition, pooled shard dispatch.
+    pub fn with_partition(partition: VertexPartition, threads: usize) -> Self {
+        Self::with_partition_exec(partition, threads, ShardExec::Pool)
+    }
+
+    /// Engine over an explicit partition and shard-dispatch policy.
+    pub fn with_partition_exec(
+        partition: VertexPartition,
+        threads: usize,
+        exec: ShardExec,
+    ) -> Self {
+        let n = partition.num_vertices();
+        let shards: Vec<Mutex<ShardState>> = (0..partition.num_shards())
+            .map(|i| {
+                let (s, e) = partition.range(i);
+                Mutex::new(ShardState {
+                    adj: HalfAdjacency::new(s, (e - s) as usize),
+                    freed: Vec::new(),
+                })
+            })
+            .collect();
+        let num_shards = shards.len();
+        let pool = (exec == ShardExec::Pool && num_shards > 1)
+            .then(|| WorkerPool::new(num_shards));
+        Self {
+            shared: Arc::new(EngineShared {
+                partition,
+                shards,
+                partner: (0..n).map(|_| AtomicU32::new(INVALID_VERTEX)).collect(),
+                core: SkipperCore::new(n),
+                matched: AtomicUsize::new(0),
+            }),
+            driver: StreamingSkipper::new(threads),
+            exec,
+            pool,
+            epoch_gate: Mutex::new(()),
+            epoch: AtomicU64::new(0),
+        }
+    }
+
+    /// Size of the vertex universe `0..n`.
+    #[inline]
+    pub fn num_vertices(&self) -> usize {
+        self.shared.partner.len()
+    }
+
+    /// Number of vertex shards (`P`).
+    #[inline]
+    pub fn num_shards(&self) -> usize {
+        self.shared.shards.len()
+    }
+
+    /// The shard-dispatch policy this engine was built with.
+    #[inline]
+    pub fn exec(&self) -> ShardExec {
+        self.exec
+    }
+
+    /// Is a standing worker pool actually serving the shard phases? False
+    /// for [`ShardExec::Fork`] *and* for `P = 1`, which always runs inline
+    /// regardless of policy.
+    #[inline]
+    pub fn pooled(&self) -> bool {
+        self.pool.is_some()
+    }
+
+    /// The vertex partition backing the shards.
+    #[inline]
+    pub fn partition(&self) -> &VertexPartition {
+        &self.shared.partition
+    }
+
+    /// Epochs applied so far.
+    #[inline]
+    pub fn epochs_applied(&self) -> u64 {
+        self.epoch.load(Ordering::Relaxed)
+    }
+
+    /// Currently matched vertices (2 × matched pairs).
+    #[inline]
+    pub fn matched_vertices(&self) -> usize {
+        self.shared.matched.load(Ordering::Relaxed)
+    }
+
+    /// Is `v` currently matched? Lock-free.
+    #[inline]
+    pub fn is_matched(&self, v: VertexId) -> bool {
+        self.shared.partner[v as usize].load(Ordering::Acquire) != INVALID_VERTEX
+    }
+
+    /// `v`'s current partner, if matched. Lock-free: safe to call from any
+    /// thread, including while an epoch is mid-flight (the answer is then a
+    /// point-in-time read of `v`'s slot).
+    pub fn partner(&self, v: VertexId) -> Option<VertexId> {
+        if (v as usize) >= self.shared.partner.len() {
+            return None;
+        }
+        let p = self.shared.partner[v as usize].load(Ordering::Acquire);
+        (p != INVALID_VERTEX).then_some(p)
+    }
+
+    /// Current matching as canonical `(min, max)` pairs.
+    pub fn matching_pairs(&self) -> Vec<(VertexId, VertexId)> {
+        self.shared
+            .partner
+            .iter()
+            .enumerate()
+            .filter_map(|(u, p)| {
+                let p = p.load(Ordering::Acquire);
+                (p != INVALID_VERTEX && (u as VertexId) < p).then_some((u as VertexId, p))
+            })
+            .collect()
+    }
+
+    /// Live undirected edge count (sums per-shard half-edge counters).
+    pub fn num_live_edges(&self) -> u64 {
+        let halves: u64 = self
+            .shared
+            .shards
+            .iter()
+            .map(|s| s.lock().unwrap().adj.half_edges())
+            .sum();
+        debug_assert_eq!(halves % 2, 0, "half-edge storage out of sync");
+        halves / 2
+    }
+
+    /// The live edge set, canonicalized `(min, max)`, each edge exactly
+    /// once (the owner of the min endpoint emits it) — for verification and
+    /// the service's audit path.
+    pub fn live_edges(&self) -> Vec<(VertexId, VertexId)> {
+        let mut edges = Vec::new();
+        for shard in &self.shared.shards {
+            let st = shard.lock().unwrap();
+            for w in st.adj.start()..st.adj.end() {
+                for nb in st.adj.neighbors(w) {
+                    if w < nb {
+                        edges.push((w, nb));
+                    }
+                }
+            }
+        }
+        edges
+    }
+
+    /// Is `{u,v}` live? (Asks the owner of `u` for its half.)
+    pub fn contains_edge(&self, u: VertexId, v: VertexId) -> bool {
+        if u == v || (u as usize) >= self.num_vertices() || (v as usize) >= self.num_vertices() {
+            return false;
+        }
+        let st = self.shared.shards[self.shared.partition.owner(u)].lock().unwrap();
+        st.adj.contains_half(u, v)
+    }
+
+    /// Adjacency-sidecar resident bytes, summed over shards.
+    pub fn adjacency_bytes(&self) -> usize {
+        self.shared
+            .shards
+            .iter()
+            .map(|s| s.lock().unwrap().adj.memory_bytes())
+            .sum()
+    }
+
+    /// Tombstoned adjacency slots awaiting compaction, summed over shards.
+    pub fn adjacency_tombstones(&self) -> u64 {
+        self.shared
+            .shards
+            .iter()
+            .map(|s| s.lock().unwrap().adj.tombstones())
+            .sum()
+    }
+
+    /// Full dynamic validity check: matching ⊆ live edges, endpoint-
+    /// disjoint, and maximal over the live set.
+    pub fn verify(&self) -> Result<(), String> {
+        crate::matching::verify::verify_maximal_dynamic(
+            self.num_vertices(),
+            self.live_edges().into_iter(),
+            &self.matching_pairs(),
+        )
+    }
+
+    /// Fresh reusable mailboxes matching this engine's shard count.
+    pub fn mailboxes(&self) -> ShardMailboxes {
+        ShardMailboxes {
+            boxes: (0..self.num_shards()).map(|_| Vec::new()).collect(),
+            inserts: 0,
+            deletes: 0,
+        }
+    }
+
+    /// Route `updates` into per-shard mailboxes (each update reaches the
+    /// owner of each endpoint — at most two shards). Errors on out-of-range
+    /// vertices with nothing routed, so a failed call never half-fills the
+    /// mailboxes.
+    pub fn route_into(
+        &self,
+        updates: &[Update],
+        mailboxes: &mut ShardMailboxes,
+    ) -> Result<(), String> {
+        let n = self.num_vertices();
+        if let Some(bad) = updates.iter().find(|u| {
+            let (Update::Insert(a, b) | Update::Delete(a, b)) = **u;
+            a as usize >= n || b as usize >= n
+        }) {
+            return Err(format!("update {bad:?} out of range (|V|={n})"));
+        }
+        for &upd in updates {
+            let (Update::Insert(a, b) | Update::Delete(a, b)) = upd;
+            match upd {
+                Update::Insert(..) => mailboxes.inserts += 1,
+                Update::Delete(..) => mailboxes.deletes += 1,
+            }
+            let sa = self.shared.partition.owner(a);
+            mailboxes.boxes[sa].push(upd);
+            let sb = self.shared.partition.owner(b);
+            if sb != sa {
+                mailboxes.boxes[sb].push(upd);
+            }
+        }
+        Ok(())
+    }
+
+    /// Apply one epoch of mixed updates. Update order within the batch is
+    /// respected against the live set (insert-then-delete of the same edge
+    /// in one epoch nets out to nothing). Errors on out-of-range vertices,
+    /// with no mutation applied.
+    pub fn apply_epoch(&self, updates: &[Update]) -> Result<EpochReport, String> {
+        let mut mailboxes = self.mailboxes();
+        let t = Instant::now();
+        self.route_into(updates, &mut mailboxes)?;
+        let route_s = t.elapsed().as_secs_f64();
+        let mut rep = self.apply_mailboxes(&mut mailboxes);
+        rep.route_wall_s = route_s;
+        Ok(rep)
+    }
+
+    /// Run one epoch over already-routed mailboxes (they are drained and
+    /// left empty for reuse). This is the service's flush path; epoch
+    /// numbering, counters, and the report are identical to
+    /// [`apply_epoch`](Self::apply_epoch), except that the route timings
+    /// belong to the service's router and are filled in by it.
+    ///
+    /// Concurrent callers serialize on an internal gate (queries stay
+    /// lock-free throughout); within one epoch the phases are barriered,
+    /// so every reader between epochs observes a quiescent engine.
+    pub fn apply_mailboxes(&self, mailboxes: &mut ShardMailboxes) -> EpochReport {
+        let _epoch_exclusive = self.epoch_gate.lock().unwrap();
+        let t0 = Instant::now();
+        let epoch = self.epoch.fetch_add(1, Ordering::Relaxed) + 1;
+        let mut rep = EpochReport {
+            epoch,
+            inserts: mailboxes.inserts(),
+            deletes: mailboxes.deletes(),
+            ..EpochReport::default()
+        };
+
+        // --- phase 1: parallel mutate, one shard worker per shard --------
+        // The countdown barrier (pool) or join (fork) is the epoch barrier:
+        // every shard's half-edge edits, partner clears, and core releases
+        // complete before any matching sweep observes them.
+        let tm = Instant::now();
+        let outs = self.mutate_all(&mut mailboxes.boxes);
+        rep.mutate_wall_s = tm.elapsed().as_secs_f64();
+        let mut fresh: Vec<(VertexId, VertexId)> = Vec::new();
+        for (out, busy_s) in outs {
+            rep.mutate_run_s = rep.mutate_run_s.max(busy_s);
+            rep.deleted_live += out.deleted_live;
+            rep.destroyed_pairs += out.destroyed_pairs;
+            rep.freed_vertices += out.freed;
+            fresh.extend(out.fresh);
+        }
+        self.shared.matched.fetch_sub(rep.freed_vertices, Ordering::Relaxed);
+        rep.inserted_live = fresh.len();
+
+        // --- phase 2: insert pass through the streaming fast path --------
+        let ti = Instant::now();
+        let (m, c) = self.run_pass(&fresh);
+        rep.new_matches += m;
+        rep.conflicts += c;
+        rep.insert_wall_s = ti.elapsed().as_secs_f64();
+
+        // --- phase 3: repair sweep over affected neighborhoods -----------
+        // collection is again parallel per shard; the global sort+dedup
+        // removes the duplicates a both-endpoints-freed cross-shard edge
+        // produces (each owner emits it once). Insert-only epochs (the
+        // steady-state service workload) freed nothing and skip the
+        // dispatch entirely.
+        let tr = Instant::now();
+        let mut repair: Vec<(VertexId, VertexId)> = Vec::new();
+        if rep.freed_vertices > 0 {
+            for list in self.collect_repair_all() {
+                repair.extend(list);
+            }
+        }
+        repair.sort_unstable();
+        repair.dedup();
+        rep.repair_edges = repair.len();
+        let (m, c) = self.run_pass(&repair);
+        rep.new_matches += m;
+        rep.conflicts += c;
+        rep.repair_wall_s = tr.elapsed().as_secs_f64();
+
+        rep.live_edges = self.num_live_edges();
+        rep.matched_vertices = self.shared.matched.load(Ordering::Relaxed);
+        rep.wall_s = t0.elapsed().as_secs_f64();
+        mailboxes.clear();
+        rep
+    }
+
+    /// Run one per-shard job on every pool worker and harvest the results
+    /// in shard order — the shared scaffolding of every pooled phase:
+    /// countdown barrier, result slots, arrive-on-drop panic containment.
+    /// `make_job(i)` builds shard `i`'s job, moving in whatever per-shard
+    /// data it needs; the job runs against the shared engine state on
+    /// worker `i`.
+    fn pool_dispatch<T, J>(&self, pool: &WorkerPool, mut make_job: impl FnMut(usize) -> J) -> Vec<T>
+    where
+        T: Send + 'static,
+        J: FnOnce(&EngineShared) -> T + Send + 'static,
+    {
+        let p = self.num_shards();
+        let done = Arc::new(Countdown::new(p));
+        let slots: Arc<Vec<Mutex<Option<T>>>> =
+            Arc::new((0..p).map(|_| Mutex::new(None)).collect());
+        for i in 0..p {
+            let job = make_job(i);
+            let shared = Arc::clone(&self.shared);
+            let slots = Arc::clone(&slots);
+            let arrive = ArriveOnDrop(Arc::clone(&done));
+            pool.submit(i, move || {
+                let _arrive = arrive;
+                let out = job(shared.as_ref());
+                *slots[i].lock().unwrap() = Some(out);
+            });
+        }
+        done.wait();
+        slots
+            .iter()
+            .enumerate()
+            .map(|(i, slot)| {
+                slot.lock()
+                    .unwrap()
+                    .take()
+                    .unwrap_or_else(|| panic!("shard worker {i} panicked mid-phase"))
+            })
+            .collect()
+    }
+
+    /// Dispatch the mutate phase: one job per shard, on the persistent
+    /// pool, forked scoped threads, or inline for `P = 1`. Returns each
+    /// shard's [`MutateOut`] plus its busy seconds (the "run" part of
+    /// spawn-vs-run); the mailbox buffers come back with their capacity
+    /// intact in every mode.
+    fn mutate_all(&self, boxes: &mut [Vec<Update>]) -> Vec<(MutateOut, f64)> {
+        let p = self.num_shards();
+        if p == 1 {
+            let t = Instant::now();
+            let out = self.shared.mutate_shard(0, &boxes[0]);
+            return vec![(out, t.elapsed().as_secs_f64())];
+        }
+        match &self.pool {
+            Some(pool) => {
+                let outs: Vec<(MutateOut, Vec<Update>, f64)> =
+                    self.pool_dispatch(pool, |i| {
+                        let ops = std::mem::take(&mut boxes[i]);
+                        move |shared: &EngineShared| {
+                            let t = Instant::now();
+                            let out = shared.mutate_shard(i, &ops);
+                            (out, ops, t.elapsed().as_secs_f64())
+                        }
+                    });
+                let mut res = Vec::with_capacity(p);
+                for (i, (out, ops, busy_s)) in outs.into_iter().enumerate() {
+                    boxes[i] = ops; // hand the buffer back for mailbox reuse
+                    res.push((out, busy_s));
+                }
+                res
+            }
+            None => {
+                let boxes: &[Vec<Update>] = boxes;
+                run_threads_collect(p, |i| {
+                    let t = Instant::now();
+                    let out = self.shared.mutate_shard(i, &boxes[i]);
+                    (out, t.elapsed().as_secs_f64())
+                })
+            }
+        }
+    }
+
+    /// Dispatch the repair-collection phase across shards (same execution
+    /// policy as [`mutate_all`](Self::mutate_all)).
+    fn collect_repair_all(&self) -> Vec<Vec<(VertexId, VertexId)>> {
+        let p = self.num_shards();
+        if p == 1 {
+            return vec![self.shared.collect_repair(0)];
+        }
+        match &self.pool {
+            Some(pool) => self.pool_dispatch(pool, |i| {
+                move |shared: &EngineShared| shared.collect_repair(i)
+            }),
+            None => run_threads_collect(p, |i| self.shared.collect_repair(i)),
+        }
+    }
 
     /// Drive `edges` through the Algorithm-1 state machine against the live
     /// core, then harvest the new matches into the partner map. Returns
@@ -639,8 +860,12 @@ impl ShardedDynamicMatcher {
         let conflicts = if edges.len() <= SEQUENTIAL_PASS_MAX || self.driver.threads == 1 {
             let mut writer = arena.writer();
             let mut stats = crate::instrument::conflicts::ConflictStats::default();
-            self.core
-                .process_chunk(edges, &mut writer, &mut stats, &mut crate::instrument::NoProbe);
+            self.shared.core.process_chunk(
+                edges,
+                &mut writer,
+                &mut stats,
+                &mut crate::instrument::NoProbe,
+            );
             stats
         } else {
             let driver = StreamingSkipper {
@@ -652,7 +877,7 @@ impl ShardedDynamicMatcher {
             };
             driver
                 .run_with_core(
-                    &self.core,
+                    &self.shared.core,
                     &arena,
                     BatchEdgeSource::new(self.num_vertices(), edges),
                 )
@@ -661,12 +886,18 @@ impl ShardedDynamicMatcher {
         };
         let new = arena.into_matching();
         for (u, v) in new.iter() {
-            debug_assert_eq!(self.partner[u as usize].load(Ordering::Acquire), INVALID_VERTEX);
-            debug_assert_eq!(self.partner[v as usize].load(Ordering::Acquire), INVALID_VERTEX);
-            self.partner[u as usize].store(v, Ordering::Release);
-            self.partner[v as usize].store(u, Ordering::Release);
+            debug_assert_eq!(
+                self.shared.partner[u as usize].load(Ordering::Acquire),
+                INVALID_VERTEX
+            );
+            debug_assert_eq!(
+                self.shared.partner[v as usize].load(Ordering::Acquire),
+                INVALID_VERTEX
+            );
+            self.shared.partner[u as usize].store(v, Ordering::Release);
+            self.shared.partner[v as usize].store(u, Ordering::Release);
         }
-        self.matched.fetch_add(2 * new.len(), Ordering::Relaxed);
+        self.shared.matched.fetch_add(2 * new.len(), Ordering::Relaxed);
         (new.len(), conflicts.total)
     }
 }
@@ -840,6 +1071,66 @@ mod tests {
     }
 
     #[test]
+    fn forked_and_pooled_engines_take_identical_decisions() {
+        // Same schedule, threads=1 (deterministic sweep order), P=4: the
+        // pooled engine must reproduce the forked engine's matching and
+        // counters exactly — per-shard processing order and fresh-edge
+        // collection order are identical by construction; only the thread
+        // that runs each shard differs.
+        use crate::util::rng::Xoshiro256pp;
+        let n = 120;
+        let fork = ShardedDynamicMatcher::with_exec(n, 1, 4, ShardExec::Fork);
+        let pool = ShardedDynamicMatcher::with_exec(n, 1, 4, ShardExec::Pool);
+        assert_eq!(fork.exec(), ShardExec::Fork);
+        assert_eq!(pool.exec(), ShardExec::Pool);
+        let mut rng = Xoshiro256pp::new(77);
+        let mut live: Vec<(VertexId, VertexId)> = Vec::new();
+        for epoch in 0..12 {
+            let mut batch = Vec::new();
+            for _ in 0..25 {
+                if !live.is_empty() && rng.next_usize(3) == 0 {
+                    let i = rng.next_usize(live.len());
+                    let (u, v) = live.swap_remove(i);
+                    batch.push(Delete(u, v));
+                } else {
+                    let u = rng.next_usize(n) as VertexId;
+                    let v = rng.next_usize(n) as VertexId;
+                    batch.push(Insert(u, v));
+                    if u != v && !live.contains(&(u.min(v), u.max(v))) {
+                        live.push((u.min(v), u.max(v)));
+                    }
+                }
+            }
+            let rf = fork.apply_epoch(&batch).unwrap();
+            let rp = pool.apply_epoch(&batch).unwrap();
+            assert_eq!(rf.new_matches, rp.new_matches, "epoch {epoch}");
+            assert_eq!(rf.destroyed_pairs, rp.destroyed_pairs, "epoch {epoch}");
+            assert_eq!(rf.repair_edges, rp.repair_edges, "epoch {epoch}");
+            assert_eq!(fork.matching_pairs(), pool.matching_pairs(), "epoch {epoch}");
+            assert_eq!(fork.num_live_edges(), pool.num_live_edges(), "epoch {epoch}");
+            fork.verify().unwrap();
+            pool.verify().unwrap();
+        }
+    }
+
+    #[test]
+    fn pool_workers_persist_across_many_small_epochs() {
+        // hundreds of tiny epochs through one pooled engine: the standing
+        // workers must serve all of them (a fork-per-epoch bug or a dead
+        // worker would hang or panic here)
+        let m = ShardedDynamicMatcher::new(64, 1, 4);
+        for e in 0..200u32 {
+            let u = (e * 7) % 64;
+            let v = (e * 7 + 1) % 64; // consecutive mod 64: never equal to u
+            m.apply_epoch(&[Insert(u, v)]).unwrap();
+            m.apply_epoch(&[Delete(u, v)]).unwrap();
+        }
+        assert_eq!(m.num_live_edges(), 0);
+        assert_eq!(m.matched_vertices(), 0);
+        assert_eq!(m.epochs_applied(), 400);
+    }
+
+    #[test]
     fn single_shard_is_the_sequential_engine() {
         // P=1 must reproduce the exact deterministic behavior the
         // DynamicMatcher unit tests pin down (threads=1, path graph)
@@ -863,5 +1154,14 @@ mod tests {
         assert!(r.mutate_wall_s > 0.0);
         assert!(r.insert_wall_s > 0.0);
         assert!(r.wall_s >= r.mutate_wall_s);
+        // spawn-vs-run decomposition: the run part is positive, never
+        // exceeds the barrier-to-barrier wall, and the derived overhead is
+        // non-negative
+        assert!(r.mutate_run_s > 0.0);
+        assert!(r.mutate_run_s <= r.mutate_wall_s + 1e-9);
+        assert!(r.mutate_spawn_overhead_s() >= 0.0);
+        // apply_epoch routed the updates itself, so route time is recorded
+        assert!(r.route_wall_s > 0.0);
+        assert_eq!(r.route_overlap_s, 0.0, "no pipelining on the direct path");
     }
 }

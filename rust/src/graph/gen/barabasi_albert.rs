@@ -29,6 +29,7 @@ pub fn edges(n: usize, m_per_vertex: usize, seed: u64) -> EdgeList {
     el
 }
 
+/// Generate and build the CSR in one step.
 pub fn generate(n: usize, m_per_vertex: usize, seed: u64) -> CsrGraph {
     build(&edges(n, m_per_vertex, seed), BuildOptions::default())
 }

@@ -6,6 +6,8 @@ use crate::graph::{CsrGraph, EdgeList};
 use crate::util::rng::Xoshiro256pp;
 use crate::VertexId;
 
+/// `m` uniform random pairs over `0..n` (duplicates/self-loops allowed;
+/// the builder normalizes).
 pub fn edges(n: usize, m: usize, seed: u64) -> EdgeList {
     let mut rng = Xoshiro256pp::new(seed);
     let mut el = EdgeList::new(n);
@@ -17,6 +19,7 @@ pub fn edges(n: usize, m: usize, seed: u64) -> EdgeList {
     el
 }
 
+/// Generate and build the CSR in one step.
 pub fn generate(n: usize, m: usize, seed: u64) -> CsrGraph {
     build(&edges(n, m, seed), BuildOptions::default())
 }

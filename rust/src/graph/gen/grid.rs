@@ -6,6 +6,7 @@ use crate::graph::builder::{build, BuildOptions};
 use crate::graph::{CsrGraph, EdgeList};
 use crate::VertexId;
 
+/// Grid edge list; `torus` adds wrap-around links on both axes.
 pub fn edges(rows: usize, cols: usize, torus: bool) -> EdgeList {
     let n = rows * cols;
     let mut el = EdgeList::new(n);
@@ -27,6 +28,7 @@ pub fn edges(rows: usize, cols: usize, torus: bool) -> EdgeList {
     el
 }
 
+/// Generate and build the CSR in one step.
 pub fn generate(rows: usize, cols: usize, torus: bool) -> CsrGraph {
     build(&edges(rows, cols, torus), BuildOptions::default())
 }

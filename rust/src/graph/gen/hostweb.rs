@@ -10,16 +10,22 @@ use crate::util::rng::Xoshiro256pp;
 use crate::VertexId;
 
 #[derive(Clone, Copy, Debug)]
+/// Web-graph generator knobs: host blocks with dense intra-host locality
+/// plus power-law cross-host links.
 pub struct HostWebConfig {
+    /// Number of host blocks.
     pub num_hosts: usize,
+    /// Pages per host block.
     pub vertices_per_host: usize,
     /// Intra-host edges per vertex (locality component).
     pub intra_degree: u32,
     /// Cross-host edges per vertex (power-law target hosts).
     pub inter_degree: u32,
+    /// Generator seed.
     pub seed: u64,
 }
 
+/// Host-web edge list per the config.
 pub fn edges(cfg: &HostWebConfig) -> EdgeList {
     let n = cfg.num_hosts * cfg.vertices_per_host;
     let mut rng = Xoshiro256pp::new(cfg.seed);
@@ -55,6 +61,7 @@ pub fn edges(cfg: &HostWebConfig) -> EdgeList {
     el
 }
 
+/// Generate and build the CSR in one step.
 pub fn generate(cfg: &HostWebConfig) -> CsrGraph {
     build(&edges(cfg), BuildOptions::default())
 }

@@ -10,15 +10,22 @@ use crate::util::rng::Xoshiro256pp;
 use crate::VertexId;
 
 #[derive(Clone, Copy, Debug)]
+/// Banded k-NN overlap generator knobs (the msa10 analogue: sequence-
+/// similarity links inside a sliding window).
 pub struct KnnConfig {
+    /// Vertices.
     pub n: usize,
+    /// Links per vertex.
     pub k: u32,
+    /// Similarity window width.
     pub window: usize,
     /// Probability that a link escapes the window (long-range similarity).
     pub long_range_p: f64,
+    /// Generator seed.
     pub seed: u64,
 }
 
+/// Banded k-NN edge list per the config.
 pub fn edges(cfg: &KnnConfig) -> EdgeList {
     let mut rng = Xoshiro256pp::new(cfg.seed);
     let mut el = EdgeList::new(cfg.n);
@@ -37,6 +44,7 @@ pub fn edges(cfg: &KnnConfig) -> EdgeList {
     el
 }
 
+/// Generate and build the CSR in one step.
 pub fn generate(cfg: &KnnConfig) -> CsrGraph {
     build(&edges(cfg), BuildOptions::default())
 }

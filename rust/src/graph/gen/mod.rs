@@ -24,14 +24,17 @@ pub struct GenConfig {
     pub scale: u32,
     /// Average (undirected) degree target.
     pub avg_degree: u32,
+    /// Generator seed (deterministic output).
     pub seed: u64,
 }
 
 impl GenConfig {
+    /// `2^scale` vertices.
     pub fn num_vertices(&self) -> usize {
         1usize << self.scale
     }
 
+    /// Target edge count (`vertices × avg_degree`).
     pub fn num_edges(&self) -> usize {
         self.num_vertices() * self.avg_degree as usize
     }

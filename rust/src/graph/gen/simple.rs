@@ -7,6 +7,7 @@ use crate::graph::{CsrGraph, EdgeList};
 use crate::util::rng::Xoshiro256pp;
 use crate::VertexId;
 
+/// Path graph `0-1-…-(n-1)`.
 pub fn path(n: usize) -> CsrGraph {
     let mut el = EdgeList::new(n);
     for v in 1..n {
@@ -15,6 +16,7 @@ pub fn path(n: usize) -> CsrGraph {
     build(&el, BuildOptions::default())
 }
 
+/// Cycle on `n ≥ 3` vertices.
 pub fn cycle(n: usize) -> CsrGraph {
     assert!(n >= 3);
     let mut el = EdgeList::new(n);
@@ -35,6 +37,7 @@ pub fn star(n: usize) -> CsrGraph {
     build(&el, BuildOptions::default())
 }
 
+/// Complete graph K_n.
 pub fn complete(n: usize) -> CsrGraph {
     let mut el = EdgeList::new(n);
     for u in 0..n {

@@ -10,15 +10,19 @@ use crate::util::rng::Xoshiro256pp;
 use crate::VertexId;
 
 #[derive(Clone, Copy, Debug)]
+/// Watts–Strogatz small-world generator knobs.
 pub struct WsConfig {
+    /// Vertices on the ring.
     pub n: usize,
     /// Each vertex connects to `k` nearest neighbors on each side (ring).
     pub k: usize,
     /// Rewiring probability.
     pub beta: f64,
+    /// Generator seed.
     pub seed: u64,
 }
 
+/// Small-world edge list per the config.
 pub fn edges(cfg: &WsConfig) -> EdgeList {
     assert!(cfg.n > 2 * cfg.k, "n must exceed 2k");
     let mut rng = Xoshiro256pp::new(cfg.seed);
@@ -39,6 +43,7 @@ pub fn edges(cfg: &WsConfig) -> EdgeList {
     el
 }
 
+/// Generate and build the CSR in one step.
 pub fn generate(cfg: &WsConfig) -> CsrGraph {
     build(&edges(cfg), BuildOptions::default())
 }

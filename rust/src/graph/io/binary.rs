@@ -13,6 +13,7 @@ pub(crate) const MAGIC: &[u8; 8] = b"SKPGRPH1";
 /// Bytes before the offsets array: magic + n + slots.
 pub(crate) const HEADER_BYTES: u64 = 8 + 8 + 8;
 
+/// Write a CSR in `.skg` format.
 pub fn write<W: Write>(w: &mut W, g: &CsrGraph) -> std::io::Result<()> {
     let mut w = BufWriter::new(w);
     w.write_all(MAGIC)?;
@@ -27,6 +28,7 @@ pub fn write<W: Write>(w: &mut W, g: &CsrGraph) -> std::io::Result<()> {
     w.flush()
 }
 
+/// Read a `.skg` stream back into a CSR.
 pub fn read<R: Read>(r: R) -> Result<CsrGraph, String> {
     let mut r = BufReader::new(r);
     let mut magic = [0u8; 8];
@@ -61,11 +63,13 @@ pub(crate) fn read_u32<R: Read>(r: &mut R) -> Result<u32, String> {
     Ok(u32::from_le_bytes(b))
 }
 
+/// Write `g` to `path` in `.skg` format.
 pub fn write_file(path: &str, g: &CsrGraph) -> Result<(), String> {
     let mut f = std::fs::File::create(path).map_err(|e| format!("create {path}: {e}"))?;
     write(&mut f, g).map_err(|e| format!("write {path}: {e}"))
 }
 
+/// Read the `.skg` file at `path`.
 pub fn read_file(path: &str) -> Result<CsrGraph, String> {
     let f = std::fs::File::open(path).map_err(|e| format!("open {path}: {e}"))?;
     read(f)

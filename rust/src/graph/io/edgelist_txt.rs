@@ -5,6 +5,7 @@ use crate::graph::EdgeList;
 use crate::VertexId;
 use std::io::{BufRead, BufReader, Read, Write};
 
+/// Parse a text edge list (one `u v` per line, `#` comments).
 pub fn read<R: Read>(r: R) -> Result<EdgeList, String> {
     let reader = BufReader::new(r);
     let mut edges: Vec<(VertexId, VertexId)> = Vec::new();
@@ -50,6 +51,7 @@ pub fn read<R: Read>(r: R) -> Result<EdgeList, String> {
     })
 }
 
+/// Write an edge list as text, with a `# vertices: N` header.
 pub fn write<W: Write>(w: &mut W, el: &EdgeList) -> std::io::Result<()> {
     writeln!(w, "# vertices: {}", el.num_vertices)?;
     for &(u, v) in &el.edges {
@@ -58,11 +60,13 @@ pub fn write<W: Write>(w: &mut W, el: &EdgeList) -> std::io::Result<()> {
     Ok(())
 }
 
+/// Read the text edge list at `path`.
 pub fn read_file(path: &str) -> Result<EdgeList, String> {
     let f = std::fs::File::open(path).map_err(|e| format!("open {path}: {e}"))?;
     read(f)
 }
 
+/// Write `el` to `path` as text.
 pub fn write_file(path: &str, el: &EdgeList) -> Result<(), String> {
     let mut f = std::fs::File::create(path).map_err(|e| format!("create {path}: {e}"))?;
     write(&mut f, el).map_err(|e| format!("write {path}: {e}"))

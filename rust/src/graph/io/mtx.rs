@@ -6,6 +6,7 @@ use crate::graph::EdgeList;
 use crate::VertexId;
 use std::io::{BufRead, BufReader, Read, Write};
 
+/// Parse a Matrix Market coordinate stream.
 pub fn read<R: Read>(r: R) -> Result<EdgeList, String> {
     let reader = BufReader::new(r);
     let mut lines = reader.lines();
@@ -58,6 +59,7 @@ pub fn read<R: Read>(r: R) -> Result<EdgeList, String> {
     Ok(el)
 }
 
+/// Write an edge list as a `pattern general` Matrix Market file.
 pub fn write<W: Write>(w: &mut W, el: &EdgeList) -> std::io::Result<()> {
     writeln!(w, "%%MatrixMarket matrix coordinate pattern general")?;
     writeln!(w, "{} {} {}", el.num_vertices, el.num_vertices, el.edges.len())?;
@@ -67,6 +69,7 @@ pub fn write<W: Write>(w: &mut W, el: &EdgeList) -> std::io::Result<()> {
     Ok(())
 }
 
+/// Read the Matrix Market file at `path`.
 pub fn read_file(path: &str) -> Result<EdgeList, String> {
     let f = std::fs::File::open(path).map_err(|e| format!("open {path}: {e}"))?;
     read(f)

@@ -69,21 +69,25 @@ impl CsrGraph {
     }
 
     #[inline]
+    /// Stored degree of `v`.
     pub fn degree(&self, v: VertexId) -> usize {
         (self.offsets[v as usize + 1] - self.offsets[v as usize]) as usize
     }
 
     #[inline]
+    /// `v`’s neighbor slice.
     pub fn neighbors(&self, v: VertexId) -> &[VertexId] {
         &self.neighbors[self.offsets[v as usize] as usize..self.offsets[v as usize + 1] as usize]
     }
 
     #[inline]
+    /// The raw CSR offsets array (`|V|+1` entries).
     pub fn offsets(&self) -> &[EdgeIdx] {
         &self.offsets
     }
 
     #[inline]
+    /// The raw concatenated neighbors array.
     pub fn neighbors_raw(&self) -> &[VertexId] {
         &self.neighbors
     }
@@ -139,11 +143,14 @@ impl CsrGraph {
 /// at this stage; [`builder`] normalizes on conversion to CSR.
 #[derive(Clone, Debug, Default, PartialEq)]
 pub struct EdgeList {
+    /// Vertex universe `0..num_vertices`.
     pub num_vertices: usize,
+    /// Edge pairs in arrival order (may contain duplicates/self-loops).
     pub edges: Vec<(VertexId, VertexId)>,
 }
 
 impl EdgeList {
+    /// Empty list over `0..num_vertices`.
     pub fn new(num_vertices: usize) -> Self {
         Self {
             num_vertices,
@@ -151,15 +158,18 @@ impl EdgeList {
         }
     }
 
+    /// Append one edge (both endpoints must be in range).
     pub fn push(&mut self, u: VertexId, v: VertexId) {
         debug_assert!((u as usize) < self.num_vertices && (v as usize) < self.num_vertices);
         self.edges.push((u, v));
     }
 
+    /// Number of stored pairs.
     pub fn len(&self) -> usize {
         self.edges.len()
     }
 
+    /// True when no pairs are stored.
     pub fn is_empty(&self) -> bool {
         self.edges.is_empty()
     }

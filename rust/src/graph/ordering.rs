@@ -12,6 +12,7 @@ use crate::VertexId;
 use std::collections::VecDeque;
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
+/// A vertex (re)ordering policy for ordering-sensitivity sweeps.
 pub enum Ordering {
     /// Keep IDs as generated/published.
     Natural,
@@ -26,6 +27,7 @@ pub enum Ordering {
 }
 
 impl Ordering {
+    /// Every ordering, in sweep order.
     pub const ALL: [Ordering; 5] = [
         Ordering::Natural,
         Ordering::Random,
@@ -34,6 +36,7 @@ impl Ordering {
         Ordering::Bfs,
     ];
 
+    /// Short name used in tables and bench labels.
     pub fn name(&self) -> &'static str {
         match self {
             Ordering::Natural => "natural",

@@ -40,6 +40,28 @@ use std::io::{BufRead, BufReader, Read, Seek, SeekFrom};
 /// symmetric storage (e.g. `.skg`) deliver each *undirected* edge once per
 /// stored copy, which Skipper treats as already-covered on the second
 /// sighting.
+///
+/// # Example
+///
+/// Pull chunks by hand, or hand any source to the streaming matcher:
+///
+/// ```
+/// use skipper::graph::stream::{BatchEdgeSource, EdgeSource};
+/// use skipper::matching::streaming::StreamingSkipper;
+///
+/// let edges = [(0, 1), (2, 3)];
+/// let mut source = BatchEdgeSource::new(4, &edges);
+/// assert_eq!(source.vertex_bound(), 4);
+/// let mut chunk = Vec::new();
+/// assert_eq!(source.next_chunk(&mut chunk, 64).unwrap(), 2);
+/// assert_eq!(source.next_chunk(&mut chunk, 64).unwrap(), 0, "one-shot");
+///
+/// // ingest→match without ever materializing a graph
+/// let report = StreamingSkipper::new(2)
+///     .run(BatchEdgeSource::new(4, &edges))
+///     .unwrap();
+/// assert_eq!(report.matching.len(), 2);
+/// ```
 pub trait EdgeSource {
     /// Exclusive upper bound on vertex ids this source emits.
     fn vertex_bound(&self) -> usize;
@@ -85,6 +107,7 @@ pub struct BatchEdgeSource<'a> {
 }
 
 impl<'a> BatchEdgeSource<'a> {
+    /// Source over a borrowed edge slice with vertex bound `num_vertices`.
     pub fn new(num_vertices: usize, edges: &'a [(VertexId, VertexId)]) -> Self {
         Self { edges, num_vertices, pos: 0, seen: None }
     }
@@ -151,6 +174,8 @@ pub struct TextEdgeSource {
 }
 
 impl TextEdgeSource {
+    /// Open a text edge-list file, learning the vertex bound from the
+    /// header or a pre-scan.
     pub fn open(path: &str) -> Result<Self, String> {
         let num_vertices = match Self::header_bound(path)? {
             Some(n) => n,
@@ -289,6 +314,7 @@ pub struct MtxEdgeSource {
 }
 
 impl MtxEdgeSource {
+    /// Open a Matrix Market file and parse its size line.
     pub fn open(path: &str) -> Result<Self, String> {
         let f = File::open(path).map_err(|e| format!("open {path}: {e}"))?;
         let mut reader = BufReader::new(f);
@@ -418,6 +444,8 @@ pub struct SkgEdgeSource {
 }
 
 impl SkgEdgeSource {
+    /// Open a `.skg` CSR cache with two sequential cursors (offsets +
+    /// neighbors) so neither array is ever resident.
     pub fn open(path: &str) -> Result<Self, String> {
         let f = File::open(path).map_err(|e| format!("open {path}: {e}"))?;
         let mut offsets = BufReader::new(f);
@@ -595,6 +623,7 @@ pub struct CsrEdgeSource<'a> {
 }
 
 impl<'a> CsrEdgeSource<'a> {
+    /// Stream the stored edge slots of an already-materialized CSR.
     pub fn new(g: &'a CsrGraph) -> Self {
         Self { g, v: 0, i: 0 }
     }

@@ -8,10 +8,15 @@ pub const BUCKET_LABELS: [&str; 10] =
     ["1", "2", "3-4", "5-8", "9-16", "17-32", "33-64", "65-128", "129-256", ">256"];
 
 #[derive(Default, Clone, Debug, PartialEq, Eq)]
+/// Aggregated per-edge JIT-conflict statistics (Table II’s columns).
 pub struct ConflictStats {
+    /// Largest conflict count observed on a single edge.
     pub max_per_edge: u64,
+    /// Total conflicts across all edges.
     pub total: u64,
+    /// Edges that experienced at least one conflict.
     pub edges_with_conflicts: u64,
+    /// Histogram over [`BUCKET_LABELS`].
     pub buckets: [u64; 10],
 }
 
@@ -54,6 +59,7 @@ impl ConflictStats {
         }
     }
 
+    /// Accumulate another thread’s statistics into this one.
     pub fn merge(&mut self, other: &ConflictStats) {
         self.max_per_edge = self.max_per_edge.max(other.max_per_edge);
         self.total += other.total;

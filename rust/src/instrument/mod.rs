@@ -26,14 +26,17 @@ pub mod address {
     pub const AUX2_BASE: u64 = 0x5000_0000_0000;
 
     #[inline(always)]
+    /// Byte address of CSR offset entry `i`.
     pub fn offsets(i: u64) -> u64 {
         OFFSETS_BASE + i * 8
     }
     #[inline(always)]
+    /// Byte address of CSR neighbor slot `i`.
     pub fn neighbors(i: u64) -> u64 {
         NEIGHBORS_BASE + i * 4
     }
     #[inline(always)]
+    /// Byte address of vertex `v`’s state byte.
     pub fn state(v: u64) -> u64 {
         STATE_BASE + v
     }
@@ -43,14 +46,17 @@ pub mod address {
         STATE_BASE + v / 8
     }
     #[inline(always)]
+    /// Byte address of match-output record `i`.
     pub fn matches(i: u64) -> u64 {
         MATCHES_BASE + i * 8
     }
     #[inline(always)]
+    /// Byte address of auxiliary entry `i`.
     pub fn aux(i: u64) -> u64 {
         AUX_BASE + i * 8
     }
     #[inline(always)]
+    /// Byte address in the second auxiliary region.
     pub fn aux2(i: u64) -> u64 {
         AUX2_BASE + i * 8
     }
@@ -61,8 +67,10 @@ pub mod address {
 /// instructions" metric; [`TracingProbe`] records addresses for cache
 /// simulation.
 pub trait Probe {
+    /// Record one load at synthetic address `_addr`.
     #[inline(always)]
     fn load(&mut self, _addr: u64) {}
+    /// Record one store at synthetic address `_addr`.
     #[inline(always)]
     fn store(&mut self, _addr: u64) {}
     /// An atomic RMW (CAS / fetch-op): one load + one store at `addr`.
@@ -81,7 +89,9 @@ impl Probe for NoProbe {}
 /// Counts loads and stores (paper Figs 3 & 7).
 #[derive(Default, Clone, Copy, Debug)]
 pub struct CountingProbe {
+    /// Counted loads.
     pub loads: u64,
+    /// Counted stores.
     pub stores: u64,
 }
 
@@ -97,10 +107,12 @@ impl Probe for CountingProbe {
 }
 
 impl CountingProbe {
+    /// Loads + stores.
     pub fn total(&self) -> u64 {
         self.loads + self.stores
     }
 
+    /// Sum per-thread probes into one total.
     pub fn merge(probes: &[CountingProbe]) -> CountingProbe {
         let mut out = CountingProbe::default();
         for p in probes {
@@ -115,9 +127,11 @@ impl CountingProbe {
 /// flag lives in bit 63 (synthetic addresses stay far below it).
 #[derive(Default, Clone, Debug)]
 pub struct TracingProbe {
+    /// Recorded accesses: address with the store flag in bit 63.
     pub events: Vec<u64>,
 }
 
+/// Bit 63 marks a store in [`TracingProbe::events`].
 pub const TRACE_STORE_BIT: u64 = 1 << 63;
 
 impl Probe for TracingProbe {
@@ -132,6 +146,7 @@ impl Probe for TracingProbe {
 }
 
 impl TracingProbe {
+    /// Iterate `(address, is_store)` events in record order.
     pub fn iter(&self) -> impl Iterator<Item = (u64, bool)> + '_ {
         self.events
             .iter()

@@ -50,6 +50,13 @@
 //! let m = Skipper::new(4).run(&g);
 //! verify::check(&g, &m).expect("valid maximal matching");
 //! ```
+//!
+//! A top-to-bottom architecture tour — every layer from [`graph::stream`]'s
+//! `EdgeSource` to the [`service`] wire protocol, with the per-layer
+//! invariants collected in one place — lives in `docs/ARCHITECTURE.md`;
+//! the service wire format is specified in `docs/PROTOCOL.md`.
+
+#![warn(missing_docs)]
 
 pub mod apram;
 pub mod cachesim;

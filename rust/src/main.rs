@@ -52,28 +52,41 @@ USAGE:
   skipper-cli experiment <id> [--config cfg.toml] [--scale S]   (ids: table1 table2 fig3 fig7 fig8 fig9 fig10 fig11 stream dynamic scale xla-ems)
   skipper-cli suite [--config cfg.toml] [--scale S]
   skipper-cli serve [--vertices N] [--threads N] [--tcp HOST:PORT]
-              [--engine-shards P] [--shards N] [--shard-capacity N]
-              [--epoch-max-updates N] [--epoch-max-requests N]
+              [--engine-shards P] [--no-pool] [--no-pipeline] [--shards N]
+              [--shard-capacity N] [--epoch-max-updates N]
+              [--epoch-max-requests N]
               (line protocol INSERT/DELETE/QUERY/STATS[ full]/EPOCH/QUIT/
-               SHUTDOWN; stdin pipe by default, concurrent clients with
-               --tcp. --engine-shards P partitions the engine's vertices so
-               every epoch's mutate phase runs P-way parallel. Coalescing:
-               queued updates flush as one epoch at an EPOCH barrier, or
-               once --epoch-max-updates accumulate; --epoch-max-requests
-               caps requests drained per coordinator round. STATS returns
-               cheap counters; STATS full adds the O(|V|+|E|) maximality
-               audit)
+               SHUTDOWN, specified in docs/PROTOCOL.md; stdin pipe by
+               default, concurrent clients with --tcp. --engine-shards P
+               (default 1) partitions the engine's vertices so every
+               epoch's mutate phase runs P-way parallel on a persistent
+               shard-worker pool; --no-pool forks scoped threads per epoch
+               instead (the measured baseline). The coordinator pipelines
+               by default — epoch N+1's updates are parsed/routed while
+               epoch N is applied on a flusher thread; --no-pipeline runs
+               flushes inline on the router. Coalescing: queued updates
+               flush as one epoch at an EPOCH barrier, or once
+               --epoch-max-updates (default 8192) accumulate;
+               --epoch-max-requests (default 256) caps requests drained per
+               router round. STATS returns cheap counters; STATS full adds
+               the O(|V|+|E|) maximality audit)
   skipper-cli churn [--gen rmat|er|ba|grid] [--scale LOG2_V] [--avg-degree D]
               [--epochs E] [--batch B] [--delete-frac F] [--threads N]
-              [--engine-shards P] [--warmup-epochs W] [--seed S] [--no-verify]
+              [--engine-shards P] [--no-pool] [--warmup-epochs W] [--seed S]
+              [--no-verify]
               (mixed insert/delete epochs over the dynamic engine; verifies
-               maximality over the LIVE edge set after every epoch)
+               maximality over the LIVE edge set after every epoch and
+               reports spawn-vs-run mutate timings — --no-pool selects the
+               forked per-epoch baseline for comparison)
   skipper-cli info
 ";
 
 fn main() {
     let raw: Vec<String> = std::env::args().skip(1).collect();
-    let args = match Args::parse(raw, &["verify", "conflicts", "sim", "stream", "no-verify", "help"]) {
+    let args = match Args::parse(
+        raw,
+        &["verify", "conflicts", "sim", "stream", "no-verify", "no-pool", "no-pipeline", "help"],
+    ) {
         Ok(a) => a,
         Err(e) => {
             eprintln!("error: {e}\n{USAGE}");
@@ -404,6 +417,8 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
         num_vertices: args.get_parse("vertices", defaults.num_vertices)?,
         threads: args.get_parse("threads", defaults.threads)?,
         engine_shards: args.get_parse("engine-shards", defaults.engine_shards)?,
+        pool: !args.flag("no-pool"),
+        pipeline: !args.flag("no-pipeline"),
         shards: args.get_parse("shards", defaults.shards)?,
         shard_capacity: args.get_parse("shard-capacity", defaults.shard_capacity)?,
         epoch_max_requests: args.get_parse("epoch-max-requests", defaults.epoch_max_requests)?,
@@ -412,16 +427,28 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
     if cfg.engine_shards == 0 || cfg.epoch_max_updates == 0 || cfg.epoch_max_requests == 0 {
         return Err("--engine-shards/--epoch-max-updates/--epoch-max-requests must be >= 1".into());
     }
+    // P = 1 runs its single shard inline whatever the policy says
+    let workers = if cfg.engine_shards == 1 {
+        "inline single-shard"
+    } else if cfg.pool {
+        "pooled"
+    } else {
+        "forked"
+    };
+    let mode = format!(
+        "{workers} shard workers, {} coordinator",
+        if cfg.pipeline { "pipelined" } else { "inline" }
+    );
     let summary = match args.get("tcp") {
         Some(addr) => serve_tcp(&cfg, addr, |bound| {
             eprintln!(
-                "serving |V|={} (P={} engine shards) on tcp://{bound} (SHUTDOWN to stop)",
+                "serving |V|={} (P={} engine shards; {mode}) on tcp://{bound} (SHUTDOWN to stop)",
                 cfg.num_vertices, cfg.engine_shards
             );
         })?,
         None => {
             eprintln!(
-                "serving |V|={} (P={} engine shards) on stdin (INSERT/DELETE/QUERY/STATS[ full]/EPOCH; QUIT or EOF to stop)",
+                "serving |V|={} (P={} engine shards; {mode}) on stdin (INSERT/DELETE/QUERY/STATS[ full]/EPOCH; QUIT or EOF to stop)",
                 cfg.num_vertices, cfg.engine_shards
             );
             let stdin = std::io::stdin();
@@ -455,6 +482,7 @@ fn cmd_churn(args: &Args) -> Result<(), String> {
         seed: args.get_parse("seed", 1u64)?,
         threads: args.get_parse("threads", 4usize)?,
         engine_shards: args.get_parse("engine-shards", 1usize)?,
+        pool: !args.flag("no-pool"),
         epochs: args.get_parse("epochs", 10usize)?,
         batch: args.get_parse("batch", 20_000usize)?,
         delete_frac: args.get_parse("delete-frac", 0.5f64)?,
@@ -469,11 +497,12 @@ fn cmd_churn(args: &Args) -> Result<(), String> {
         return Err("--engine-shards must be >= 1".into());
     }
     println!(
-        "churn {} |V|={} t={} P={}: {} warmup epochs, then {} epochs of {} updates ({:.0}% deletes){}",
+        "churn {} |V|={} t={} P={} ({} shard workers): {} warmup epochs, then {} epochs of {} updates ({:.0}% deletes){}",
         gen.name(),
         gen.num_vertices(),
         cfg.threads,
         cfg.engine_shards,
+        cfg.shard_exec().name(),
         cfg.warmup_epochs,
         cfg.epochs,
         cfg.batch,
@@ -489,7 +518,7 @@ fn cmd_churn(args: &Args) -> Result<(), String> {
             None => "",
         };
         println!(
-            "{tag} {}: +{} -{} destroyed={} freed={} repair_edges={} repair_frac={:.5} |M|={} live={} conflicts={} {:.1}ms (mutate {:.1}ms){verdict}",
+            "{tag} {}: +{} -{} destroyed={} freed={} repair_edges={} repair_frac={:.5} |M|={} live={} conflicts={} {:.1}ms (mutate {:.2}ms = run {:.2}ms + spawn {:.3}ms){verdict}",
             r.epoch,
             r.inserts,
             r.deletes,
@@ -502,18 +531,30 @@ fn cmd_churn(args: &Args) -> Result<(), String> {
             r.conflicts,
             r.wall_s * 1e3,
             r.mutate_wall_s * 1e3,
+            r.mutate_run_s * 1e3,
+            r.mutate_spawn_overhead_s() * 1e3,
         );
     })?;
     let p50 = skipper::util::stats::percentile(&summary.epoch_wall_s, 50.0) * 1e3;
     let p99 = skipper::util::stats::percentile(&summary.epoch_wall_s, 99.0) * 1e3;
     let mutate_p50 = skipper::util::stats::percentile(&summary.epoch_mutate_s, 50.0) * 1e3;
+    let run_p50 = skipper::util::stats::percentile(&summary.epoch_mutate_run_s, 50.0) * 1e3;
+    let route_p50 = skipper::util::stats::percentile(&summary.epoch_route_s, 50.0) * 1e3;
+    let spawn_overhead: Vec<f64> = summary
+        .epoch_mutate_s
+        .iter()
+        .zip(summary.epoch_mutate_run_s.iter())
+        .map(|(wall, run)| (wall - run).max(0.0))
+        .collect();
+    let spawn_p50 = skipper::util::stats::percentile(&spawn_overhead, 50.0) * 1e3;
     println!(
-        "summary: {} churn epochs over {} live edges: repair_frac mean={:.5} max={:.5} (batch/live={:.5}); epoch latency p50={p50:.1}ms p99={p99:.1}ms (mutate p50={mutate_p50:.1}ms, P={}); |M|={}; verified {}/{} epochs",
+        "summary: {} churn epochs over {} live edges: repair_frac mean={:.5} max={:.5} (batch/live={:.5}); epoch latency p50={p50:.1}ms p99={p99:.1}ms (mutate p50={mutate_p50:.2}ms = run {run_p50:.2}ms + spawn overhead {spawn_p50:.3}ms [{} dispatch]; route p50={route_p50:.2}ms; P={}); |M|={}; verified {}/{} epochs",
         summary.epochs,
         summary.final_live_edges,
         summary.repair_frac_mean,
         summary.repair_frac_max,
         cfg.batch as f64 / summary.final_live_edges.max(1) as f64,
+        cfg.shard_exec().name(),
         cfg.engine_shards,
         summary.final_matched_vertices / 2,
         summary.verified_epochs,

@@ -32,10 +32,33 @@ use std::sync::atomic::{AtomicU8, Ordering};
 
 /// Vertex states (paper §IV, one byte per vertex).
 pub const ACC: u8 = 0;
+/// Reserved by a thread mid-`process_edge` (transient).
 pub const RSVD: u8 = 1;
+/// Matched (final for the static pass; the dynamic engine may release).
 pub const MCHD: u8 = 2;
 
 /// The shared algorithm state: one byte per vertex, nothing else.
+///
+/// # Example
+///
+/// Drive a chunk of edges through the Algorithm-1 state machine and
+/// harvest the matching from the arena (on one thread the chunk order is
+/// the match order, so the path `0-1-2-3` matches `(0,1)` and `(2,3)`):
+///
+/// ```
+/// use skipper::instrument::{conflicts::ConflictStats, NoProbe};
+/// use skipper::matching::core::SkipperCore;
+///
+/// let core = SkipperCore::new(4);
+/// let arena = core.arena(1);
+/// let mut writer = arena.writer();
+/// let mut stats = ConflictStats::default();
+/// core.process_chunk(&[(0, 1), (1, 2), (2, 3)], &mut writer, &mut stats, &mut NoProbe);
+/// drop(writer);
+///
+/// assert!(core.is_matched(0) && core.is_matched(3));
+/// assert_eq!(arena.into_matching().len(), 2);
+/// ```
 pub struct SkipperCore {
     state: Vec<AtomicU8>,
 }
@@ -49,6 +72,7 @@ impl SkipperCore {
     }
 
     #[inline]
+    /// Size of the vertex universe.
     pub fn num_vertices(&self) -> usize {
         self.state.len()
     }

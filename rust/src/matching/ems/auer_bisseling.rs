@@ -10,7 +10,9 @@ use crate::util::rng::Xoshiro256pp;
 use crate::VertexId;
 
 #[derive(Clone, Copy, Debug)]
+/// Auer–Bisseling red/blue proposal matching (EMS baseline).
 pub struct AuerBisseling {
+    /// Coloring/proposal seed.
     pub seed: u64,
 }
 
@@ -21,6 +23,7 @@ impl Default for AuerBisseling {
 }
 
 impl AuerBisseling {
+    /// Run with an access probe; returns the matching and iteration count.
     pub fn run_probed<P: Probe>(&self, g: &CsrGraph, probe: &mut P) -> (Matching, usize) {
         let n = g.num_vertices();
         let mut rng = Xoshiro256pp::new(self.seed);

@@ -11,7 +11,9 @@ use crate::util::rng::SplitMix64;
 use crate::VertexId;
 
 #[derive(Clone, Copy, Debug)]
+/// Birn et al. local-max edge matching (EMS baseline).
 pub struct Birn {
+    /// Stateless per-iteration weight seed.
     pub seed: u64,
 }
 
@@ -30,6 +32,7 @@ fn weight(seed: u64, iter: u64, edge: u32) -> u64 {
 }
 
 impl Birn {
+    /// Run with an access probe; returns the matching and iteration count.
     pub fn run_probed<P: Probe>(&self, g: &CsrGraph, probe: &mut P) -> (Matching, usize) {
         let edges = canonical_edges(g);
         let n = g.num_vertices();

@@ -14,6 +14,7 @@ use crate::util::rng::Xoshiro256pp;
 use crate::VertexId;
 
 #[derive(Clone, Debug)]
+/// Incremental deterministic maximal matching (EMS baseline).
 pub struct Idmm {
     /// Edge priorities; `None` uses edge IDs (the IDMM default). A random
     /// permutation gives the expected O(log) round count.
@@ -27,6 +28,7 @@ impl Default for Idmm {
 }
 
 impl Idmm {
+    /// Random edge priorities → expected O(log) rounds.
     pub fn with_random_priorities(num_edges: usize, seed: u64) -> Self {
         let mut rng = Xoshiro256pp::new(seed);
         Self {
@@ -34,6 +36,7 @@ impl Idmm {
         }
     }
 
+    /// Run with an access probe; returns the matching and round count.
     pub fn run_probed<P: Probe>(&self, g: &CsrGraph, probe: &mut P) -> (Matching, usize) {
         let edges = canonical_edges(g);
         // extraction itself reads the topology once

@@ -15,10 +15,12 @@ use crate::util::rng::Xoshiro256pp;
 use crate::VertexId;
 
 #[derive(Clone, Copy, Debug)]
+/// Priority-based maximal matching (EMS baseline).
 pub struct Pbmm {
     /// Fresh edges admitted per iteration; 0 → `max(|E|/50, 256)` (the
     /// PBMM paper's suggested fraction).
     pub granularity: usize,
+    /// Priority-permutation seed.
     pub seed: u64,
 }
 
@@ -32,6 +34,7 @@ impl Default for Pbmm {
 }
 
 impl Pbmm {
+    /// Run with an access probe; returns the matching and round count.
     pub fn run_probed<P: Probe>(&self, g: &CsrGraph, probe: &mut P) -> (Matching, usize) {
         let edges = canonical_edges(g);
         let ne = edges.len();

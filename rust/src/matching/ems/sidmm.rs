@@ -22,11 +22,13 @@ use crate::util::rng::Xoshiro256pp;
 use crate::VertexId;
 
 #[derive(Clone, Copy, Debug)]
+/// Sampling-based IDMM — the paper’s GBBS comparator.
 pub struct Sidmm {
     /// Samples drawn per iteration; 0 → `max(|V|/8, 512)` (a GBBS-style
     /// "small constant fraction of n": smaller samples mean more sampling
     /// iterations — the work-inefficiency the paper's Figs 3/7 measure).
     pub samples_per_iter: usize,
+    /// Sampling seed.
     pub seed: u64,
 }
 
@@ -40,13 +42,18 @@ impl Default for Sidmm {
 }
 
 #[derive(Debug, Default, Clone, Copy)]
+/// Work counters of one SIDMM run (feeds the Fig 3 overhead plot).
 pub struct SidmmTelemetry {
+    /// Sampling iterations.
     pub iterations: usize,
+    /// Rounds of the final IDMM cleanup.
     pub idmm_rounds: usize,
+    /// Total edges drawn by sampling.
     pub sampled_edges: u64,
 }
 
 impl Sidmm {
+    /// Run with an access probe; returns the matching and work telemetry.
     pub fn run_probed<P: Probe>(&self, g: &CsrGraph, probe: &mut P) -> (Matching, SidmmTelemetry) {
         let n = g.num_vertices();
         let k_default = (n / 8).max(512);

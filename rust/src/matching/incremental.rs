@@ -18,6 +18,8 @@ use super::{MatchArena, Matching, BUFFER_EDGES};
 use crate::graph::stream::BatchEdgeSource;
 use crate::VertexId;
 
+/// Insert-only maintenance of a maximal matching: one long-lived core,
+/// batches pushed through the streaming driver.
 pub struct IncrementalMatcher {
     core: SkipperCore,
     driver: StreamingSkipper,
@@ -25,6 +27,7 @@ pub struct IncrementalMatcher {
 }
 
 impl IncrementalMatcher {
+    /// Matcher over `0..num_vertices` with `threads` sweep threads.
     pub fn new(num_vertices: usize, threads: usize) -> Self {
         Self {
             core: SkipperCore::new(num_vertices),
@@ -33,6 +36,7 @@ impl IncrementalMatcher {
         }
     }
 
+    /// Size of the vertex universe.
     pub fn num_vertices(&self) -> usize {
         self.core.num_vertices()
     }
@@ -49,6 +53,7 @@ impl IncrementalMatcher {
         Matching::from_pairs(self.matches.clone())
     }
 
+    /// Is `v` matched after the batches applied so far?
     pub fn is_matched(&self, v: VertexId) -> bool {
         self.core.is_matched(v)
     }

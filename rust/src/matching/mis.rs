@@ -22,17 +22,24 @@ use crate::par::scheduler::{Assignment, BlockScheduler};
 use crate::VertexId;
 use std::sync::atomic::{AtomicU8, Ordering};
 
+/// Not yet decided.
 pub const UNDECIDED: u8 = 0;
+/// In the independent set.
 pub const IN: u8 = 1;
+/// Excluded by an IN neighbor.
 pub const OUT: u8 = 2;
 
 #[derive(Clone, Copy, Debug)]
+/// Maximal-independent-set variant of the Skipper reservation scheme.
 pub struct SkipperMis {
+    /// Worker threads.
     pub threads: usize,
+    /// Scheduler blocks per thread.
     pub blocks_per_thread: usize,
 }
 
 impl SkipperMis {
+    /// Default configuration at `threads` threads.
     pub fn new(threads: usize) -> Self {
         Self {
             threads,

@@ -72,6 +72,7 @@ impl Matching {
         self.num_matches
     }
 
+    /// True when no edges are matched.
     pub fn is_empty(&self) -> bool {
         self.num_matches == 0
     }
@@ -122,6 +123,7 @@ impl MatchArena {
         Self::with_capacity(g.num_vertices() / 2 + (num_threads + 1) * BUFFER_EDGES)
     }
 
+    /// Arena with an explicit slot capacity (sentinel-filled).
     pub fn with_capacity(capacity: usize) -> Self {
         Self {
             slots: UnsafeCell::new(vec![(INVALID_VERTEX, INVALID_VERTEX); capacity]),
@@ -184,6 +186,8 @@ pub struct MatchWriter<'a> {
 
 impl MatchWriter<'_> {
     #[inline]
+    /// Record one matched edge, claiming a fresh private buffer when the
+    /// current one is full.
     pub fn push(&mut self, u: VertexId, v: VertexId) {
         if self.pos == self.end {
             let (s, e) = self.arena.grab();
@@ -201,7 +205,9 @@ impl MatchWriter<'_> {
 
 /// Common interface for all matching algorithms in this crate.
 pub trait MaximalMatcher {
+    /// Display name (with configuration), for tables and bench labels.
     fn name(&self) -> String;
+    /// Compute a maximal matching of `g`.
     fn run(&self, g: &CsrGraph) -> Matching;
 }
 

@@ -25,10 +25,12 @@ use std::sync::atomic::{AtomicU8, Ordering};
 /// use for real work — see module docs).
 #[derive(Clone, Copy, Debug)]
 pub struct NoReserveMatcher {
+    /// Worker threads.
     pub threads: usize,
 }
 
 impl NoReserveMatcher {
+    /// Ablation matcher at `threads` threads.
     pub fn new(threads: usize) -> Self {
         Self { threads }
     }

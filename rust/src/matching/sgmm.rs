@@ -12,9 +12,11 @@ use crate::util::bitset::Bitset;
 use crate::VertexId;
 
 #[derive(Default, Clone, Copy, Debug)]
+/// Sequential greedy maximal matching (the work-efficiency reference).
 pub struct Sgmm;
 
 impl Sgmm {
+    /// Run with an access-counting probe (the Figs 3/7 measurement path).
     pub fn run_probed<P: Probe>(&self, g: &CsrGraph, probe: &mut P) -> Matching {
         let n = g.num_vertices();
         let mut status = Bitset::new(n);

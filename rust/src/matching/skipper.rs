@@ -34,12 +34,16 @@ use crate::par::run_threads_collect;
 /// granularity and the default is used everywhere.
 #[derive(Clone, Copy, Debug)]
 pub struct Skipper {
+    /// Worker threads.
     pub threads: usize,
+    /// Scheduler blocks per thread (work granularity only).
     pub blocks_per_thread: usize,
+    /// Block-to-thread assignment policy (§IV-C).
     pub assignment: Assignment,
 }
 
 impl Skipper {
+    /// The paper’s configuration at `threads` threads.
     pub fn new(threads: usize) -> Self {
         Self {
             threads,
@@ -48,6 +52,7 @@ impl Skipper {
         }
     }
 
+    /// Override the scheduler assignment policy (ablation benches).
     pub fn with_assignment(mut self, a: Assignment) -> Self {
         self.assignment = a;
         self
@@ -109,7 +114,9 @@ impl Skipper {
 
 /// Result bundle for experiment drivers.
 pub struct SkipperReport {
+    /// The computed matching.
     pub matching: Matching,
+    /// JIT-conflict telemetry of the run.
     pub conflicts: ConflictStats,
 }
 

@@ -44,8 +44,11 @@ pub struct StreamingSkipper {
 /// Telemetry of one streaming run against an existing core/arena.
 #[derive(Clone, Debug, Default)]
 pub struct StreamStats {
+    /// JIT-conflict telemetry of the run.
     pub conflicts: ConflictStats,
+    /// Edges pulled from the source.
     pub edges_streamed: u64,
+    /// Chunks handed across the queue.
     pub chunks: u64,
     /// Chunk buffers ever allocated (the recycling pool's high-water mark).
     pub buffers_allocated: usize,
@@ -53,10 +56,15 @@ pub struct StreamStats {
 
 /// Full result of a from-scratch streaming run.
 pub struct StreamReport {
+    /// The computed maximal matching.
     pub matching: Matching,
+    /// JIT-conflict telemetry of the run.
     pub conflicts: ConflictStats,
+    /// Edges pulled from the source.
     pub edges_streamed: u64,
+    /// Chunks handed across the queue.
     pub chunks: u64,
+    /// The source’s exclusive vertex-id bound.
     pub vertex_bound: usize,
     /// Skipper state bytes (= vertex bound; one byte per vertex).
     pub state_bytes: usize,
@@ -83,6 +91,7 @@ impl StreamReport {
 }
 
 impl StreamingSkipper {
+    /// Driver with `threads` consumers and default chunking.
     pub fn new(threads: usize) -> Self {
         let threads = threads.max(1);
         Self {
@@ -92,11 +101,13 @@ impl StreamingSkipper {
         }
     }
 
+    /// Override edges per chunk (clamped ≥ 1).
     pub fn with_chunk_edges(mut self, chunk_edges: usize) -> Self {
         self.chunk_edges = chunk_edges.max(1);
         self
     }
 
+    /// Override the bounded-queue capacity in chunks (clamped ≥ 1).
     pub fn with_queue_chunks(mut self, queue_chunks: usize) -> Self {
         self.queue_chunks = queue_chunks.max(1);
         self

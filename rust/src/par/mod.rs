@@ -5,6 +5,7 @@
 //! interleaving, while the [`crate::apram`] simulator reproduces the
 //! *t-thread performance shape* (see DESIGN.md §3).
 
+pub mod pool;
 pub mod pump;
 pub mod scheduler;
 

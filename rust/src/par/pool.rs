@@ -1,0 +1,299 @@
+//! Persistent shard-worker pool: standing threads with per-worker run
+//! queues, parked between epochs, woken by their queue's condvar doorbell.
+//!
+//! ## Why a standing pool
+//!
+//! The sharded dynamic engine used to fork one scoped thread per shard per
+//! epoch (`std::thread::scope` inside `apply_epoch`). For large epochs the
+//! spawn cost vanishes into the mutate work, but the service's steady state
+//! is the opposite regime: many *small* coalesced epochs, where forking P
+//! threads can cost more than the adjacency edits they perform. The paper's
+//! whole argument is about removing synchronization overhead from the inner
+//! loop (APRAM relaxation, single-pass reservation); re-paying a thread
+//! spawn per epoch at the orchestration layer squanders that. A
+//! [`WorkerPool`] keeps one thread per shard alive for the engine's
+//! lifetime:
+//!
+//! * **per-worker run queues** — each worker owns a
+//!   [`BoundedQueue`](crate::par::pump::BoundedQueue) of boxed jobs, so
+//!   shard `i`'s work always lands on worker `i` (stable shard→thread
+//!   affinity, the precondition for NUMA pinning later);
+//! * **parked workers, doorbell wakeups** — an idle worker blocks in
+//!   `pop()` on its queue's condvar; submitting a job is one lock + one
+//!   `notify_one`, the same doorbell discipline the service's
+//!   [`ShardedQueue`](crate::service::ShardedQueue) uses;
+//! * **epoch barrier via a shared countdown** — dispatchers pair each batch
+//!   of jobs with a [`Countdown`]; every job arrives on completion (via a
+//!   drop guard, so even a panicking job releases the barrier) and the
+//!   dispatcher's `wait()` is the phase barrier that `run_threads_collect`'s
+//!   join used to provide.
+//!
+//! Jobs are `'static` closures: callers move `Arc`s of their shared state
+//! (and any per-shard owned data) into the job and get results back through
+//! slots they also share — see
+//! [`ShardedDynamicMatcher`](crate::dynamic::ShardedDynamicMatcher) for the
+//! canonical dispatch pattern. A worker that observes its queue closed
+//! exits; dropping the pool closes every queue and joins every thread.
+
+use super::pump::BoundedQueue;
+use std::panic::AssertUnwindSafe;
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+/// A unit of work submitted to one worker.
+pub type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// Per-worker run-queue depth. Dispatch is phase-at-a-time (mutate, then
+/// repair), so one slot would suffice; a second gives slack for a caller
+/// that pre-queues the next phase.
+const RUN_QUEUE_DEPTH: usize = 2;
+
+/// A fixed-size pool of named, persistent worker threads with per-worker
+/// run queues.
+///
+/// Workers park on their queue's condvar when idle and are woken by the
+/// push that submits a job — no spinning, no per-epoch thread spawn. A job
+/// that panics is contained to the job (the worker catches the unwind and
+/// keeps serving); callers that wait on a [`Countdown`] observe the panic
+/// as a missing result and surface it on their own thread.
+pub struct WorkerPool {
+    queues: Vec<Arc<BoundedQueue<Job>>>,
+    handles: Vec<JoinHandle<()>>,
+}
+
+impl WorkerPool {
+    /// Spawn `workers` (clamped ≥ 1) parked threads, each with its own run
+    /// queue. Threads are named `skipper-pool-<i>` for debuggability.
+    pub fn new(workers: usize) -> Self {
+        let queues: Vec<Arc<BoundedQueue<Job>>> = (0..workers.max(1))
+            .map(|_| Arc::new(BoundedQueue::new(RUN_QUEUE_DEPTH)))
+            .collect();
+        let handles = queues
+            .iter()
+            .enumerate()
+            .map(|(i, q)| {
+                let q = Arc::clone(q);
+                std::thread::Builder::new()
+                    .name(format!("skipper-pool-{i}"))
+                    .spawn(move || {
+                        while let Some(job) = q.pop() {
+                            // Contain job panics to the job: the worker must
+                            // survive to serve the next epoch, and the
+                            // dispatcher's countdown guard (dropped during
+                            // the unwind) releases the barrier so the
+                            // coordinator can report the failure. The
+                            // payload is surfaced here — the dispatcher only
+                            // knows *that* shard i died, not why.
+                            if let Err(payload) =
+                                std::panic::catch_unwind(AssertUnwindSafe(job))
+                            {
+                                let msg = payload
+                                    .downcast_ref::<&str>()
+                                    .map(|s| s.to_string())
+                                    .or_else(|| payload.downcast_ref::<String>().cloned())
+                                    .unwrap_or_else(|| "<non-string panic>".into());
+                                eprintln!(
+                                    "{}: job panicked: {msg}",
+                                    std::thread::current().name().unwrap_or("skipper-pool")
+                                );
+                            }
+                        }
+                    })
+                    .expect("spawn pool worker")
+            })
+            .collect();
+        Self { queues, handles }
+    }
+
+    /// Number of workers in the pool.
+    pub fn workers(&self) -> usize {
+        self.queues.len()
+    }
+
+    /// Submit `job` to worker `worker % workers()`. Blocks only when that
+    /// worker's run queue is full (a small fixed depth); panics if the pool
+    /// is shutting down, which cannot happen while the caller holds a
+    /// reference to it.
+    pub fn submit(&self, worker: usize, job: impl FnOnce() + Send + 'static) {
+        let q = &self.queues[worker % self.queues.len()];
+        if q.push(Box::new(job)).is_err() {
+            panic!("submit to a shut-down worker pool");
+        }
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        for q in &self.queues {
+            q.close();
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// A one-shot countdown barrier: `new(n)`, `n` calls to [`arrive`]
+/// (typically one per pool job, via [`ArriveOnDrop`]), and [`wait`] blocks
+/// until all have arrived.
+///
+/// [`arrive`]: Countdown::arrive
+/// [`wait`]: Countdown::wait
+pub struct Countdown {
+    remaining: Mutex<usize>,
+    zero: Condvar,
+}
+
+impl Countdown {
+    /// A barrier expecting `n` arrivals.
+    pub fn new(n: usize) -> Self {
+        Self { remaining: Mutex::new(n), zero: Condvar::new() }
+    }
+
+    /// Record one arrival; wakes waiters when the count reaches zero.
+    /// Saturating (never panics), so it is safe to call from a drop guard
+    /// running during a panic unwind.
+    pub fn arrive(&self) {
+        let mut r = self.remaining.lock().unwrap();
+        *r = r.saturating_sub(1);
+        let done = *r == 0;
+        drop(r);
+        if done {
+            self.zero.notify_all();
+        }
+    }
+
+    /// Block until every expected arrival has happened.
+    pub fn wait(&self) {
+        let mut r = self.remaining.lock().unwrap();
+        while *r > 0 {
+            r = self.zero.wait(r).unwrap();
+        }
+    }
+}
+
+/// Calls [`Countdown::arrive`] when dropped. Jobs hold one so the barrier
+/// is released even when the job panics — the dispatcher then finds the
+/// job's result slot empty and reports the failure from its own thread
+/// instead of hanging.
+pub struct ArriveOnDrop(pub Arc<Countdown>);
+
+impl Drop for ArriveOnDrop {
+    fn drop(&mut self) {
+        self.0.arrive();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn jobs_run_and_barrier_releases() {
+        let pool = WorkerPool::new(4);
+        let hits = Arc::new(AtomicUsize::new(0));
+        let done = Arc::new(Countdown::new(8));
+        for i in 0..8 {
+            let hits = Arc::clone(&hits);
+            let done = Arc::clone(&done);
+            pool.submit(i, move || {
+                let _g = ArriveOnDrop(done);
+                hits.fetch_add(1, Ordering::Relaxed);
+            });
+        }
+        done.wait();
+        assert_eq!(hits.load(Ordering::Relaxed), 8);
+    }
+
+    #[test]
+    fn workers_persist_across_epochs() {
+        // many rounds through the same pool: every round's jobs complete,
+        // proving workers park and wake instead of exiting
+        let pool = WorkerPool::new(2);
+        let total = Arc::new(AtomicUsize::new(0));
+        for round in 0..50 {
+            let done = Arc::new(Countdown::new(2));
+            for w in 0..2 {
+                let total = Arc::clone(&total);
+                let done = Arc::clone(&done);
+                pool.submit(w, move || {
+                    let _g = ArriveOnDrop(done);
+                    total.fetch_add(round + w, Ordering::Relaxed);
+                });
+            }
+            done.wait();
+        }
+        let expect: usize = (0..50).map(|r| r + r + 1).sum();
+        assert_eq!(total.load(Ordering::Relaxed), expect);
+    }
+
+    #[test]
+    fn shard_affinity_lands_on_the_submitted_worker() {
+        let pool = WorkerPool::new(3);
+        let done = Arc::new(Countdown::new(3));
+        let names = Arc::new(Mutex::new(Vec::new()));
+        for w in 0..3 {
+            let done = Arc::clone(&done);
+            let names = Arc::clone(&names);
+            pool.submit(w, move || {
+                let _g = ArriveOnDrop(done);
+                let name = std::thread::current().name().unwrap_or("?").to_string();
+                names.lock().unwrap().push((w, name));
+            });
+        }
+        done.wait();
+        for (w, name) in names.lock().unwrap().iter() {
+            assert_eq!(name, &format!("skipper-pool-{w}"), "job {w} ran on {name}");
+        }
+    }
+
+    #[test]
+    fn panicking_job_releases_barrier_and_worker_survives() {
+        let pool = WorkerPool::new(1);
+        let done = Arc::new(Countdown::new(1));
+        {
+            let done = Arc::clone(&done);
+            pool.submit(0, move || {
+                let _g = ArriveOnDrop(done);
+                panic!("job panic must not kill the worker");
+            });
+        }
+        done.wait(); // released by the drop guard during the unwind
+        // the same worker still serves jobs
+        let done2 = Arc::new(Countdown::new(1));
+        let ok = Arc::new(AtomicUsize::new(0));
+        {
+            let done2 = Arc::clone(&done2);
+            let ok = Arc::clone(&ok);
+            pool.submit(0, move || {
+                let _g = ArriveOnDrop(done2);
+                ok.store(1, Ordering::Relaxed);
+            });
+        }
+        done2.wait();
+        assert_eq!(ok.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn drop_joins_all_workers() {
+        let pool = WorkerPool::new(4);
+        let done = Arc::new(Countdown::new(4));
+        for w in 0..4 {
+            let done = Arc::clone(&done);
+            pool.submit(w, move || {
+                let _g = ArriveOnDrop(done);
+            });
+        }
+        done.wait();
+        drop(pool); // must not hang: queues close, workers exit, joins return
+    }
+
+    #[test]
+    fn countdown_of_zero_never_blocks() {
+        let c = Countdown::new(0);
+        c.wait();
+        c.arrive(); // saturating: no panic
+        c.wait();
+    }
+}

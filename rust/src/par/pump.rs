@@ -38,6 +38,7 @@ impl<T> BoundedQueue<T> {
         }
     }
 
+    /// The fixed capacity bound.
     pub fn capacity(&self) -> usize {
         self.capacity
     }
@@ -108,10 +109,12 @@ impl<T> BoundedQueue<T> {
         self.not_full.notify_all();
     }
 
+    /// Items currently queued.
     pub fn len(&self) -> usize {
         self.inner.lock().unwrap().items.len()
     }
 
+    /// True when nothing is queued.
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }

@@ -27,6 +27,7 @@ pub enum Assignment {
 /// A block of consecutive vertices `[start, end)`.
 pub type Block = (VertexId, VertexId);
 
+/// The thread-dispersed block scheduler with work stealing (§IV-C).
 pub struct BlockScheduler {
     blocks: Vec<Block>,
     /// Per-thread `[lo, hi)` index ranges into `blocks` plus a cursor.
@@ -48,6 +49,7 @@ impl BlockScheduler {
         Self::from_blocks(blocks, num_threads, policy)
     }
 
+    /// Scheduler over pre-split blocks, assigned per `policy`.
     pub fn from_blocks(mut blocks: Vec<Block>, num_threads: usize, policy: Assignment) -> Self {
         match policy {
             Assignment::DispersedContiguous => {
@@ -93,10 +95,12 @@ impl BlockScheduler {
         }
     }
 
+    /// Total blocks under management.
     pub fn num_blocks(&self) -> usize {
         self.blocks.len()
     }
 
+    /// Steal events observed so far.
     pub fn steal_count(&self) -> usize {
         self.steals.load(Ordering::Relaxed)
     }

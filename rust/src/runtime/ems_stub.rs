@@ -15,7 +15,9 @@ const UNAVAILABLE: &str =
 
 /// Stub of one compiled (V, E) variant. Never instantiated.
 pub struct EmsExecutable {
+    /// Compiled vertex capacity of the variant.
     pub num_vertices: usize,
+    /// Compiled edge capacity of the variant.
     pub num_edges: usize,
 }
 
@@ -43,18 +45,22 @@ pub struct XlaEmsMatcher {
 }
 
 impl XlaEmsMatcher {
+    /// Always errors in the stub (no XLA runtime compiled in).
     pub fn from_default_artifacts() -> Result<Self, String> {
         Err(UNAVAILABLE.into())
     }
 
+    /// Always errors in the stub.
     pub fn from_dir(_dir: &str) -> Result<Self, String> {
         Err(UNAVAILABLE.into())
     }
 
+    /// Compiled shape variants (unreachable: construction always fails).
     pub fn variants(&self) -> &[ArtifactEntry] {
         &self.variants
     }
 
+    /// Always errors in the stub.
     pub fn executable_for(
         &self,
         _v: usize,
@@ -63,6 +69,7 @@ impl XlaEmsMatcher {
         Err(UNAVAILABLE.into())
     }
 
+    /// Always errors in the stub.
     pub fn match_graph(&self, _g: &CsrGraph) -> Result<(Matching, i32), String> {
         Err(UNAVAILABLE.into())
     }

@@ -17,11 +17,14 @@ use anyhow::{anyhow, Context, Result};
 /// One compiled (V, E) variant.
 pub struct EmsExecutable {
     exe: xla::PjRtLoadedExecutable,
+    /// Compiled vertex capacity of the variant.
     pub num_vertices: usize,
+    /// Compiled edge capacity of the variant.
     pub num_edges: usize,
 }
 
 impl EmsExecutable {
+    /// Compile one HLO artifact on the PJRT client.
     pub fn load(client: &xla::PjRtClient, path: &str, entry: &ArtifactEntry) -> Result<Self> {
         let proto = xla::HloModuleProto::from_text_file(path)
             .with_context(|| format!("parse HLO text {path}"))?;
@@ -115,6 +118,7 @@ impl XlaEmsMatcher {
         Self::from_dir(&super::artifacts_dir())
     }
 
+    /// Load from an explicit artifacts directory.
     pub fn from_dir(dir: &str) -> Result<Self> {
         let manifest = Manifest::load(dir).map_err(|e| anyhow!(e))?;
         let client = xla::PjRtClient::cpu()?;
@@ -125,6 +129,7 @@ impl XlaEmsMatcher {
         })
     }
 
+    /// Compiled shape variants listed in the manifest.
     pub fn variants(&self) -> &[ArtifactEntry] {
         &self.manifest.artifacts
     }
@@ -150,6 +155,8 @@ impl XlaEmsMatcher {
         Ok(exe)
     }
 
+    /// Match `g` through the best-fitting compiled variant; returns the
+    /// matching and the device-reported round count.
     pub fn match_graph(&self, g: &CsrGraph) -> Result<(Matching, i32)> {
         let edges = canonical_edges(g).len();
         let exe = self.executable_for(g.num_vertices(), edges)?;

@@ -5,20 +5,27 @@
 use crate::util::tomlite::Document;
 
 #[derive(Clone, Debug, PartialEq, Eq)]
+/// One compiled (V, E) shape variant listed in the manifest.
 pub struct ArtifactEntry {
+    /// HLO artifact path (relative to the manifest).
     pub path: String,
+    /// Compiled vertex capacity.
     pub vertices: usize,
+    /// Compiled edge capacity.
     pub edges: usize,
 }
 
 #[derive(Clone, Debug, Default)]
+/// Parsed artifact manifest.
 pub struct Manifest {
+    /// All compiled variants, as listed.
     pub artifacts: Vec<ArtifactEntry>,
     /// Directory the entries' paths are relative to.
     pub base_dir: String,
 }
 
 impl Manifest {
+    /// Parse manifest text; paths stay relative to `base_dir`.
     pub fn parse(text: &str, base_dir: &str) -> Result<Self, String> {
         let doc = Document::parse(text)?;
         let mut artifacts = Vec::new();
@@ -47,6 +54,7 @@ impl Manifest {
         })
     }
 
+    /// Load `<dir>/manifest.toml`.
     pub fn load(dir: &str) -> Result<Self, String> {
         let path = format!("{dir}/manifest.toml");
         let text = std::fs::read_to_string(&path)
@@ -63,6 +71,7 @@ impl Manifest {
             .min_by_key(|a| (a.vertices, a.edges))
     }
 
+    /// Absolute-ish path of one entry (base dir + relative path).
     pub fn full_path(&self, entry: &ArtifactEntry) -> String {
         format!("{}/{}", self.base_dir, entry.path)
     }

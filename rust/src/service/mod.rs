@@ -1,23 +1,31 @@
-//! Long-running match service over the sharded fully dynamic engine.
+//! Long-running match service over the pooled sharded dynamic engine.
 //!
-//! Architecture (one engine-shard pool, many clients):
+//! Architecture (many clients, a router thread, a flusher thread, and the
+//! engine's persistent shard workers):
 //!
 //! ```text
-//! client conns ──parse──▶ ShardedQueue ──drain/route──▶ coordinator thread
-//!   (stdio or TCP,          (per-shard                     │ per-shard
-//!    thread each)         BoundedQueues +                  ▼ mailboxes
-//!      │                    doorbell)            ┌─ parallel mutate ─┐
-//!      │ QUERY fast path                         │ shard 0 … shard P │
-//!      └──── atomic partner[] reads ────────────▶└──── barrier ──────┘
+//! client conns ──parse──▶ ShardedQueue ──drain/route──▶ router thread
+//!   (stdio or TCP,          (per-shard                    │ mailbox
+//!    thread each)         BoundedQueues +                 ▼ generation N+1
+//!      │                    doorbell)           flush jobs (capacity-1
+//!      │ QUERY fast path                            hand-off queue)
+//!      │                                                  │
+//!      │                                          flusher thread: apply
+//!      │                                            generation N
+//!      │                                 ┌─ parallel mutate (worker pool) ─┐
+//!      │                                 │ shard 0 … shard P, parked,      │
+//!      │                                 │ doorbell-woken, countdown join  │
+//!      └── atomic partner[] reads ──────▶└─────────── barrier ────────────┘
 //!                                                shared-core sweeps
 //!                                                (insert + repair)
 //! ```
 //!
-//! * [`protocol`] — the line-delimited command/JSON-reply wire format;
-//! * [`server`] — connection front-ends (stdin pipe, TCP), the epoch
-//!   coordinator plus the engine-shard pool it fans each flush out to, and
-//!   per-epoch telemetry (repair fraction, matched count, p50/p99 batch
-//!   latency, per-phase wall times);
+//! * [`protocol`] — the line-delimited command/JSON-reply wire format
+//!   (specified field by field in `docs/PROTOCOL.md`);
+//! * [`server`] — connection front-ends (stdin pipe, TCP), the pipelined
+//!   router/flusher coordinator pair, and per-epoch telemetry (repair
+//!   fraction, matched count, p50/p99 batch latency, per-phase wall times,
+//!   spawn-vs-run and route-overlap decompositions);
 //! * this module — the two coordination primitives they share:
 //!   [`ShardedQueue`], the front-end fan-in built from
 //!   [`BoundedQueue`](crate::par::pump::BoundedQueue)s (per-shard
@@ -26,11 +34,14 @@
 //!   underneath).
 //!
 //! Updates are acknowledged at enqueue time and routed straight into the
-//! engine's per-shard mailboxes, which double as the coalescing buffer;
-//! `EPOCH`/`STATS` ride the queue and are answered in order, after
-//! everything the same client sent before them. `QUERY` from a connection
-//! with nothing pending is answered lock-free from the owner shard's
-//! atomic `partner[]` slot, never stalling an in-flight epoch.
+//! engine's per-shard mailboxes, which double as the coalescing buffer.
+//! With pipelining on (default) the router keeps routing the next mailbox
+//! generation while the flusher applies the previous one, so parse/route
+//! overlaps matching; `EPOCH`/`STATS` barriers ride the same FIFO hand-off
+//! and are answered in order, after everything the same client sent before
+//! them. `QUERY` from a connection with nothing pending is answered
+//! lock-free from the owner shard's atomic `partner[]` slot, never
+//! stalling an in-flight epoch.
 
 pub mod protocol;
 pub mod server;
@@ -54,6 +65,7 @@ impl<T> Default for Promise<T> {
 }
 
 impl<T> Promise<T> {
+    /// An unfulfilled promise.
     pub fn new() -> Self {
         Self { q: BoundedQueue::new(1) }
     }
@@ -99,6 +111,7 @@ impl<T> ShardedQueue<T> {
         }
     }
 
+    /// Number of front-end shards.
     pub fn num_shards(&self) -> usize {
         self.shards.len()
     }

@@ -27,6 +27,12 @@
 //! Every reply is one JSON line with an `"ok"` field, e.g.
 //! `{"ok":true,"op":"epoch","epoch":3,"repair_edges":12,...}` or
 //! `{"ok":false,"error":"..."}` — parseable by anything, greppable by CI.
+//!
+//! The authoritative wire-format specification — every command, every
+//! reply schema field by field, backpressure and ordering guarantees, and
+//! a worked session transcript — is `docs/PROTOCOL.md` in the repository
+//! root. This module is its implementation; when they disagree, fix one of
+//! them in the same change.
 
 use crate::dynamic::{EpochReport, Update};
 use crate::VertexId;
@@ -36,11 +42,18 @@ use crate::VertexId;
 pub enum Command {
     /// Mixed updates, in order (INSERT and DELETE lines both map here).
     Updates(Vec<Update>),
+    /// Flush queued updates as one engine epoch.
     Epoch,
+    /// Partner lookup for one vertex.
     Query(VertexId),
     /// `full` additionally runs the O(|V|+|E_live|) maximality audit.
-    Stats { full: bool },
+    Stats {
+        /// Run the full audit walk, not just the cheap counters.
+        full: bool,
+    },
+    /// Close this connection.
     Quit,
+    /// Stop the whole server.
     Shutdown,
 }
 
@@ -128,6 +141,7 @@ impl Default for JsonLine {
 }
 
 impl JsonLine {
+    /// Start an empty JSON object.
     pub fn new() -> Self {
         Self { buf: String::from("{") }
     }
@@ -142,23 +156,27 @@ impl JsonLine {
         self
     }
 
+    /// Append a boolean field.
     pub fn bool(&mut self, k: &str, v: bool) -> &mut Self {
         self.key(k).buf.push_str(if v { "true" } else { "false" });
         self
     }
 
+    /// Append an unsigned integer field.
     pub fn u64(&mut self, k: &str, v: u64) -> &mut Self {
         let s = v.to_string();
         self.key(k).buf.push_str(&s);
         self
     }
 
+    /// Append a float field with 6 decimals (`null` when non-finite).
     pub fn f64(&mut self, k: &str, v: f64) -> &mut Self {
         let s = if v.is_finite() { format!("{v:.6}") } else { "null".into() };
         self.key(k).buf.push_str(&s);
         self
     }
 
+    /// Append a string field, escaping quotes, backslashes, and controls.
     pub fn str(&mut self, k: &str, v: &str) -> &mut Self {
         self.key(k).buf.push('"');
         for c in v.chars() {
@@ -175,6 +193,7 @@ impl JsonLine {
         self
     }
 
+    /// Close the object and return the rendered line.
     pub fn finish(&self) -> String {
         let mut s = self.buf.clone();
         s.push('}');
@@ -185,40 +204,85 @@ impl JsonLine {
 /// Service-level roll-up rendered by `STATS`.
 #[derive(Clone, Debug, Default)]
 pub struct StatsSnapshot {
+    /// Engine epochs applied so far.
     pub epochs: u64,
+    /// Live undirected edges.
     pub live_edges: u64,
+    /// Currently matched vertices (2 × matched pairs).
     pub matched_vertices: usize,
+    /// Insert updates received over the service lifetime.
     pub total_inserts: u64,
+    /// Delete updates received over the service lifetime.
     pub total_deletes: u64,
+    /// Edges re-examined by repair sweeps over the service lifetime.
     pub total_repair_edges: u64,
+    /// Repair fraction of the most recent epoch.
     pub repair_frac_last: f64,
+    /// Mean repair fraction over all update-carrying epochs.
     pub repair_frac_mean: f64,
     /// Batch queue→applied latency percentiles, milliseconds.
     pub p50_batch_ms: f64,
+    /// See [`p50_batch_ms`](Self::p50_batch_ms).
     pub p99_batch_ms: f64,
     /// Live-set maximality audit result — `None` when the cheap `STATS`
     /// form skipped the O(|V|+|E_live|) walk (`STATS full` runs it).
     pub maximal: Option<bool>,
+    /// Resident bytes of the mutable adjacency sidecar.
     pub adjacency_bytes: usize,
     /// Engine shards (`P`) of the vertex-partitioned engine.
     pub engine_shards: usize,
+    /// True when a standing worker pool is actually serving the engine's
+    /// shard phases — false for the forked baseline *and* for `P = 1`,
+    /// which always runs inline regardless of policy.
+    pub pooled: bool,
+    /// True when the coordinator routes the next epoch while the previous
+    /// one is applied on the flusher thread.
+    pub pipelined: bool,
+    /// Total router wall seconds spent routing updates into mailboxes.
+    pub route_s: f64,
+    /// Portion of [`route_s`](Self::route_s) that overlapped a running
+    /// flush — the pipelining win.
+    pub route_overlap_s: f64,
 }
 
 /// A reply ready to be rendered onto the wire.
 #[derive(Clone, Debug)]
 pub enum Response {
-    Queued { count: usize },
+    /// Updates acknowledged at enqueue time.
+    Queued {
+        /// Updates accepted from this line.
+        count: usize,
+    },
+    /// The report of the epoch an `EPOCH` barrier flushed.
     Epoch(EpochReport),
     /// `EPOCH` barrier with nothing pending: no engine epoch ran.
-    EpochIdle { epochs_applied: u64, live_edges: u64, matched_vertices: usize },
-    Query { vertex: VertexId, partner: Option<VertexId> },
+    EpochIdle {
+        /// Epochs applied before this idle barrier.
+        epochs_applied: u64,
+        /// Live undirected edges.
+        live_edges: u64,
+        /// Currently matched vertices.
+        matched_vertices: usize,
+    },
+    /// Partner lookup answer.
+    Query {
+        /// The queried vertex.
+        vertex: VertexId,
+        /// Its matched partner, if any.
+        partner: Option<VertexId>,
+    },
+    /// Service counters (and, for `STATS full`, the audit verdict).
     Stats(StatsSnapshot),
+    /// Reply to `QUIT`.
     Bye,
+    /// Reply to `SHUTDOWN`.
     ShuttingDown,
+    /// Any per-line failure; the connection stays usable.
     Error(String),
 }
 
 impl Response {
+    /// Render as one JSON line (no trailing newline).
     pub fn render(&self) -> String {
         let mut j = JsonLine::new();
         match self {
@@ -243,8 +307,12 @@ impl Response {
                     .u64("matched", r.matched_vertices as u64)
                     .f64("wall_ms", r.wall_s * 1e3)
                     .f64("mutate_ms", r.mutate_wall_s * 1e3)
+                    .f64("mutate_run_ms", r.mutate_run_s * 1e3)
+                    .f64("spawn_overhead_ms", r.mutate_spawn_overhead_s() * 1e3)
                     .f64("insert_ms", r.insert_wall_s * 1e3)
-                    .f64("repair_ms", r.repair_wall_s * 1e3);
+                    .f64("repair_ms", r.repair_wall_s * 1e3)
+                    .f64("route_ms", r.route_wall_s * 1e3)
+                    .f64("route_overlap_ms", r.route_overlap_s * 1e3);
             }
             Response::EpochIdle { epochs_applied, live_edges, matched_vertices } => {
                 j.bool("ok", true)
@@ -277,7 +345,11 @@ impl Response {
                     .f64("p50_batch_ms", s.p50_batch_ms)
                     .f64("p99_batch_ms", s.p99_batch_ms)
                     .u64("adjacency_bytes", s.adjacency_bytes as u64)
-                    .u64("engine_shards", s.engine_shards as u64);
+                    .u64("engine_shards", s.engine_shards as u64)
+                    .bool("pooled", s.pooled)
+                    .bool("pipelined", s.pipelined)
+                    .f64("route_s", s.route_s)
+                    .f64("route_overlap_s", s.route_overlap_s);
                 if let Some(maximal) = s.maximal {
                     j.bool("maximal", maximal);
                 }

@@ -1,21 +1,31 @@
-//! The long-running match server: connection front-ends, the sharded
-//! engine, and service telemetry.
+//! The long-running match server: connection front-ends, the pooled
+//! sharded engine, and the pipelined epoch coordinator.
 //!
 //! One [`ShardedDynamicMatcher`] is shared by every thread in the process.
 //! Client connections (one thread each in TCP mode; the calling thread in
 //! stdio mode) parse lines into [`Command`]s and push requests onto the
-//! [`ShardedQueue`]; the epoch **coordinator** thread drains all front-end
-//! shards round-robin and routes every update straight into the engine's
-//! per-shard mailboxes — the mailboxes *are* the coalescing buffer, so
-//! concurrent clients share epochs instead of serializing one engine pass
-//! per request. At a barrier (an explicit `EPOCH`, a queue-riding `QUERY`/
-//! `STATS`, or the coalescing threshold) the coordinator flushes the
-//! mailboxes as one engine epoch: the mutate phase fans out across the
-//! engine-shard pool (one scoped worker per shard, the fork/join being the
-//! epoch barrier), and the insert/repair sweeps run against the shared
-//! one-byte-per-vertex core. `EPOCH` and `STATS` ride the queue (so they
-//! observe everything their client sent earlier) and are answered through
-//! one-shot [`Promise`]s.
+//! [`ShardedQueue`]. The **router** thread drains all front-end shards
+//! round-robin and routes every update straight into a *generation* of the
+//! engine's per-shard mailboxes — the mailboxes *are* the coalescing
+//! buffer, so concurrent clients share epochs instead of serializing one
+//! engine pass per request.
+//!
+//! At a barrier (an explicit `EPOCH`, a queue-riding `QUERY`/`STATS`, or
+//! the coalescing threshold) the routed generation becomes a flush job.
+//! With pipelining on (the default), flush jobs cross a capacity-1 hand-off
+//! queue to the **flusher** thread, and the router immediately starts
+//! routing the *next* generation into a recycled mailbox set — parse/route
+//! work overlaps matching, and the per-epoch overlap is reported in
+//! [`EpochReport::route_overlap_s`](crate::dynamic::EpochReport). With
+//! pipelining off the same jobs execute inline on the router thread, which
+//! is exactly the previous serial coordinator. Either way a flush applies
+//! one engine epoch: the mutate phase fans out across the engine's
+//! persistent shard workers (or forked threads — see
+//! [`ShardExec`](crate::dynamic::ShardExec)), and the insert/repair sweeps
+//! run against the shared one-byte-per-vertex core. Barrier jobs ride the
+//! same FIFO hand-off as the flushes they follow, so `EPOCH`/`STATS`
+//! observe everything their client sent earlier and are answered through
+//! one-shot [`Promise`]s in order.
 //!
 //! `QUERY` has a fast path: when the querying connection has no updates
 //! queued since its last barrier, the answer comes straight from the owner
@@ -25,11 +35,15 @@
 //!
 //! Updates are acknowledged at enqueue time (`{"op":"queued"}`); the
 //! per-shard bounded queues push back on flooding clients without stalling
-//! the others.
+//! the others, and the capacity-1 flush hand-off keeps the router at most
+//! one generation ahead of the engine.
+//!
+//! The wire protocol itself is specified in `docs/PROTOCOL.md`.
 
 use super::protocol::{Command, Response, StatsSnapshot};
 use super::{Promise, ShardedQueue};
-use crate::dynamic::{ShardMailboxes, ShardedDynamicMatcher, Update};
+use crate::dynamic::{EpochReport, ShardExec, ShardMailboxes, ShardedDynamicMatcher, Update};
+use crate::par::pump::{BoundedQueue, CloseOnDrop};
 use crate::util::stats::percentile;
 use crate::VertexId;
 use std::io::{BufRead, BufReader, Write};
@@ -38,6 +52,8 @@ use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
+/// Tunables of one service instance (see `skipper-cli serve --help` for
+/// the CLI spellings and defaults).
 #[derive(Clone, Debug)]
 pub struct ServiceConfig {
     /// Vertex universe `0..num_vertices` (fixed for the server's lifetime).
@@ -48,6 +64,14 @@ pub struct ServiceConfig {
     /// Each epoch's mutate phase runs one worker per shard; `1` is the
     /// single-shard engine.
     pub engine_shards: usize,
+    /// Use the persistent shard-worker pool for the engine's per-shard
+    /// phases (default). `false` forks one scoped thread per shard per
+    /// epoch — the measured baseline (`--no-pool`).
+    pub pool: bool,
+    /// Pipelined coordinator (default): route the next epoch's updates on
+    /// the router thread while the flusher thread applies the current one.
+    /// `false` runs flushes inline on the router (`--no-pipeline`).
+    pub pipeline: bool,
     /// Front-end queue shards (connections hash onto these).
     pub shards: usize,
     /// Per-shard queue capacity (requests) — the back-pressure window.
@@ -65,6 +89,8 @@ impl Default for ServiceConfig {
             num_vertices: 1 << 20,
             threads: 4,
             engine_shards: 1,
+            pool: true,
+            pipeline: true,
             shards: 4,
             shard_capacity: 64,
             epoch_max_requests: 256,
@@ -73,14 +99,27 @@ impl Default for ServiceConfig {
     }
 }
 
+impl ServiceConfig {
+    /// The engine shard-dispatch policy this config selects.
+    pub fn shard_exec(&self) -> ShardExec {
+        ShardExec::from_pool_flag(self.pool)
+    }
+}
+
 /// What the server did over its lifetime — returned to the CLI on exit.
 #[derive(Clone, Debug, Default)]
 pub struct ServiceSummary {
+    /// Engine epochs applied.
     pub epochs: u64,
+    /// Insert updates received across all epochs.
     pub total_inserts: u64,
+    /// Delete updates received across all epochs.
     pub total_deletes: u64,
+    /// Edges re-examined by repair sweeps across all epochs.
     pub total_repair_edges: u64,
+    /// Live undirected edges at shutdown.
     pub live_edges: u64,
+    /// Matched vertices at shutdown.
     pub matched_vertices: usize,
     /// Final live-set maximality audit.
     pub maximal: bool,
@@ -171,55 +210,243 @@ struct Telemetry {
     repair_frac_last: f64,
     repair_frac_sum: f64,
     epochs_with_updates: u64,
+    total_route_s: f64,
+    total_route_overlap_s: f64,
 }
 
-/// The epoch coordinator: drain → route into shard mailboxes → flush at
-/// barriers → answer, until the queue closes or a `SHUTDOWN` arrives. The
-/// heavy phases of every flush fan out across the engine-shard pool inside
-/// [`ShardedDynamicMatcher::apply_mailboxes`].
-fn engine_loop(
+/// One routed-but-unflushed generation of updates. The engine's per-shard
+/// mailboxes double as the coalescing buffer: updates are routed to their
+/// owner shard(s) at drain time, so a flush hands each shard worker its
+/// work list with no extra pass. In pipelined mode a second generation is
+/// being routed while the previous one is applied.
+struct PendingGen {
+    mailboxes: ShardMailboxes,
+    /// Enqueue stamps of the update requests coalesced into this
+    /// generation, for the batch-latency percentiles.
+    stamps: Vec<Instant>,
+    /// Router wall seconds spent routing this generation.
+    route_s: f64,
+    /// Portion of `route_s` spent while a flush was running — the
+    /// pipelining overlap.
+    overlap_s: f64,
+}
+
+impl PendingGen {
+    fn new(mailboxes: ShardMailboxes) -> Self {
+        Self { mailboxes, stamps: Vec::new(), route_s: 0.0, overlap_s: 0.0 }
+    }
+}
+
+/// Work handed from the router to the flush executor. Barrier jobs carry
+/// the generation they must flush first, so FIFO handling reproduces the
+/// serial coordinator's semantics exactly — a barrier reply always reflects
+/// every update its client sent before it.
+enum FlushJob {
+    /// Coalescing-threshold flush: apply, no reply.
+    Apply(PendingGen),
+    Epoch(Option<PendingGen>, ReplySlot),
+    Query(Option<PendingGen>, VertexId, ReplySlot),
+    Stats(Option<PendingGen>, bool, ReplySlot),
+}
+
+/// The flush executor: owns service telemetry and the latency ring, applies
+/// generations to the engine, and answers barrier requests. Runs inline on
+/// the router thread when pipelining is off, or on the dedicated flusher
+/// thread when it is on.
+struct FlushExec<'a> {
+    cfg: &'a ServiceConfig,
+    engine: &'a ShardedDynamicMatcher,
+    /// True while `apply_mailboxes` runs — the router reads it to attribute
+    /// route time to the pipelining overlap.
+    flushing: &'a AtomicBool,
+    /// Drained mailbox generations go back here for the router to reuse.
+    spares: &'a BoundedQueue<ShardMailboxes>,
+    tel: Telemetry,
+    latencies: LatencyRing,
+}
+
+impl<'a> FlushExec<'a> {
+    fn new(
+        cfg: &'a ServiceConfig,
+        engine: &'a ShardedDynamicMatcher,
+        flushing: &'a AtomicBool,
+        spares: &'a BoundedQueue<ShardMailboxes>,
+    ) -> Self {
+        Self {
+            cfg,
+            engine,
+            flushing,
+            spares,
+            tel: Telemetry::default(),
+            latencies: LatencyRing::new(),
+        }
+    }
+
+    fn flush(&mut self, gen: PendingGen) -> Option<EpochReport> {
+        let PendingGen { mut mailboxes, mut stamps, route_s, overlap_s } = gen;
+        if mailboxes.is_empty() {
+            // unreachable via take_gen (which never yields an empty
+            // generation); a future direct caller would silently lose this
+            // generation's stamps and route telemetry — catch it in tests
+            debug_assert!(false, "flush() called with an empty generation");
+            let _ = self.spares.try_push(mailboxes);
+            return None;
+        }
+        self.flushing.store(true, Ordering::Relaxed);
+        let mut report = self.engine.apply_mailboxes(&mut mailboxes);
+        self.flushing.store(false, Ordering::Relaxed);
+        report.route_wall_s = route_s;
+        report.route_overlap_s = overlap_s;
+        let now = Instant::now();
+        for s in stamps.drain(..) {
+            self.latencies.push(now.duration_since(s).as_secs_f64() * 1e3);
+        }
+        // recycle the drained mailbox set; a full rack just drops it
+        let _ = self.spares.try_push(mailboxes);
+        self.tel.total_inserts += report.inserts as u64;
+        self.tel.total_deletes += report.deletes as u64;
+        self.tel.total_repair_edges += report.repair_edges as u64;
+        self.tel.repair_frac_last = report.repair_fraction();
+        self.tel.repair_frac_sum += report.repair_fraction();
+        self.tel.total_route_s += route_s;
+        self.tel.total_route_overlap_s += overlap_s;
+        self.tel.epochs_with_updates += 1;
+        Some(report)
+    }
+
+    fn handle(&mut self, job: FlushJob) {
+        match job {
+            FlushJob::Apply(gen) => {
+                self.flush(gen);
+            }
+            FlushJob::Epoch(gen, p) => {
+                let rep = gen.and_then(|g| self.flush(g));
+                p.fulfill(match rep {
+                    Some(r) => Response::Epoch(r),
+                    // flush of nothing: say so instead of fabricating a
+                    // zero-count report under the previous epoch number
+                    None => Response::EpochIdle {
+                        epochs_applied: self.engine.epochs_applied(),
+                        live_edges: self.engine.num_live_edges(),
+                        matched_vertices: self.engine.matched_vertices(),
+                    },
+                });
+            }
+            FlushJob::Query(gen, v, p) => {
+                if let Some(g) = gen {
+                    self.flush(g);
+                }
+                p.fulfill(Response::Query { vertex: v, partner: self.engine.partner(v) });
+            }
+            FlushJob::Stats(gen, full, p) => {
+                if let Some(g) = gen {
+                    self.flush(g);
+                }
+                p.fulfill(Response::Stats(snapshot(
+                    self.cfg,
+                    self.engine,
+                    &self.tel,
+                    &self.latencies,
+                    full,
+                )));
+            }
+        }
+    }
+
+    fn summary(self) -> ServiceSummary {
+        ServiceSummary {
+            epochs: self.engine.epochs_applied(),
+            total_inserts: self.tel.total_inserts,
+            total_deletes: self.tel.total_deletes,
+            total_repair_edges: self.tel.total_repair_edges,
+            live_edges: self.engine.num_live_edges(),
+            matched_vertices: self.engine.matched_vertices(),
+            maximal: self.engine.verify().is_ok(),
+        }
+    }
+}
+
+/// Where the router sends flush work: straight into the executor
+/// (pipelining off) or across the hand-off queue to the flusher thread.
+enum FlushSink<'e, 'q> {
+    Inline(FlushExec<'e>),
+    Pipe(&'q BoundedQueue<FlushJob>),
+}
+
+impl FlushSink<'_, '_> {
+    fn send(&mut self, job: FlushJob) {
+        match self {
+            FlushSink::Inline(ex) => ex.handle(job),
+            // a closed hand-off means the flusher died; dropping the job
+            // abandons its promises, so waiting clients wake with an error
+            // instead of hanging
+            FlushSink::Pipe(q) => {
+                let _ = q.push(job);
+            }
+        }
+    }
+}
+
+/// Spare mailbox generations kept in rotation (one applying, one being
+/// routed, plus recycling slack).
+const MAILBOX_GENERATIONS: usize = 4;
+
+/// The request router: drain → route into the current mailbox generation →
+/// hand flush jobs to the sink at barriers, until the queue closes or a
+/// `SHUTDOWN` arrives.
+fn route_loop(
     cfg: &ServiceConfig,
     engine: &ShardedDynamicMatcher,
     queue: &ShardedQueue<Request>,
     stop: &AtomicBool,
-) -> ServiceSummary {
+    flushing: &AtomicBool,
+    spares: &BoundedQueue<ShardMailboxes>,
+    sink: &mut FlushSink<'_, '_>,
+) {
     let _guard = EngineGuard { queue, stop };
-    let mut tel = Telemetry::default();
-    let mut latencies = LatencyRing::new();
     let mut buf: Vec<Request> = Vec::new();
-    // The engine's per-shard mailboxes double as the coalescing buffer:
-    // updates are routed to their owner shard(s) at drain time, so a flush
-    // hands each mutate worker its work list with no extra pass.
-    let mut pending = engine.mailboxes();
-    let mut pending_stamps: Vec<Instant> = Vec::new();
+    let mut gen = PendingGen::new(engine.mailboxes());
 
-    let flush = |engine: &ShardedDynamicMatcher,
-                 pending: &mut ShardMailboxes,
-                 stamps: &mut Vec<Instant>,
-                 tel: &mut Telemetry,
-                 latencies: &mut LatencyRing| {
-        if pending.is_empty() {
+    // Take the current generation for a flush, swapping in a recycled (or
+    // fresh) mailbox set so routing can continue immediately.
+    let take_gen = |gen: &mut PendingGen| -> Option<PendingGen> {
+        if gen.mailboxes.is_empty() {
             return None;
         }
-        let report = engine.apply_mailboxes(pending);
-        let now = Instant::now();
-        for s in stamps.drain(..) {
-            latencies.push(now.duration_since(s).as_secs_f64() * 1e3);
-        }
-        tel.total_inserts += report.inserts as u64;
-        tel.total_deletes += report.deletes as u64;
-        tel.total_repair_edges += report.repair_edges as u64;
-        tel.repair_frac_last = report.repair_fraction();
-        tel.repair_frac_sum += report.repair_fraction();
-        tel.epochs_with_updates += 1;
-        Some(report)
+        let fresh = spares.try_pop().unwrap_or_else(|| engine.mailboxes());
+        Some(std::mem::replace(gen, PendingGen::new(fresh)))
     };
 
-    // Updates coalesce in the mailboxes until a barrier request (EPOCH /
-    // queue-riding QUERY / STATS) arrives, the coalescing threshold trips,
-    // or the queue closes. Deliberately NO flush-on-idle: a client's
-    // `INSERT ... / EPOCH` pair must deterministically see its inserts
-    // applied *at the barrier*, not racily swept up in between.
+    // Route one update batch into the current generation, attributing the
+    // route time (and, when a flush is running concurrently, the overlap).
+    let route = |gen: &mut PendingGen, updates: &[Update], enqueued: Instant| -> bool {
+        let t = Instant::now();
+        let res = engine.route_into(updates, &mut gen.mailboxes);
+        let dt = t.elapsed().as_secs_f64();
+        gen.route_s += dt;
+        if flushing.load(Ordering::Relaxed) {
+            gen.overlap_s += dt;
+        }
+        match res {
+            Ok(()) => {
+                gen.stamps.push(enqueued);
+                true
+            }
+            // Connections validate vertex ranges before enqueueing, so the
+            // only failure left is a bug — surface it without killing the
+            // service (nothing was routed).
+            Err(e) => {
+                eprintln!("engine: dropped bad batch: {e}");
+                false
+            }
+        }
+    };
+
+    // Updates coalesce in the current generation until a barrier request
+    // (EPOCH / queue-riding QUERY / STATS) arrives, the coalescing
+    // threshold trips, or the queue closes. Deliberately NO flush-on-idle:
+    // a client's `INSERT ... / EPOCH` pair must deterministically see its
+    // inserts applied *at the barrier*, not racily swept up in between.
     let mut shutdown = false;
     'outer: loop {
         buf.clear();
@@ -233,38 +460,18 @@ fn engine_loop(
         for req in buf.drain(..) {
             match req {
                 Request::Updates { updates, enqueued } => {
-                    // Connections validate vertex ranges before enqueueing,
-                    // so the only failure left is a bug — surface it
-                    // without killing the service (nothing was routed).
-                    if let Err(e) = engine.route_into(&updates, &mut pending) {
-                        eprintln!("engine: dropped bad batch: {e}");
-                        continue;
-                    }
-                    pending_stamps.push(enqueued);
-                    if pending.num_updates() >= cfg.epoch_max_updates {
-                        let _ = flush(engine, &mut pending, &mut pending_stamps, &mut tel, &mut latencies);
+                    if route(&mut gen, &updates, enqueued)
+                        && gen.mailboxes.num_updates() >= cfg.epoch_max_updates
+                    {
+                        if let Some(g) = take_gen(&mut gen) {
+                            sink.send(FlushJob::Apply(g));
+                        }
                     }
                 }
-                Request::Epoch(p) => {
-                    let rep = flush(engine, &mut pending, &mut pending_stamps, &mut tel, &mut latencies);
-                    p.fulfill(match rep {
-                        Some(r) => Response::Epoch(r),
-                        // flush of nothing: say so instead of fabricating a
-                        // zero-count report under the previous epoch number
-                        None => Response::EpochIdle {
-                            epochs_applied: engine.epochs_applied(),
-                            live_edges: engine.num_live_edges(),
-                            matched_vertices: engine.matched_vertices(),
-                        },
-                    });
-                }
-                Request::Query(v, p) => {
-                    let _ = flush(engine, &mut pending, &mut pending_stamps, &mut tel, &mut latencies);
-                    p.fulfill(Response::Query { vertex: v, partner: engine.partner(v) });
-                }
+                Request::Epoch(p) => sink.send(FlushJob::Epoch(take_gen(&mut gen), p)),
+                Request::Query(v, p) => sink.send(FlushJob::Query(take_gen(&mut gen), v, p)),
                 Request::Stats(full, p) => {
-                    let _ = flush(engine, &mut pending, &mut pending_stamps, &mut tel, &mut latencies);
-                    p.fulfill(Response::Stats(snapshot(engine, &tel, &latencies, full)));
+                    sink.send(FlushJob::Stats(take_gen(&mut gen), full, p))
                 }
                 Request::Shutdown => {
                     // finish answering the rest of this round first — a
@@ -280,7 +487,7 @@ fn engine_loop(
     }
 
     // Drain stragglers so no client hangs on an unanswered promise, then
-    // apply any last updates.
+    // hand over any last updates.
     queue.close();
     loop {
         buf.clear();
@@ -290,9 +497,7 @@ fn engine_loop(
         for req in buf.drain(..) {
             match req {
                 Request::Updates { updates, enqueued } => {
-                    if engine.route_into(&updates, &mut pending).is_ok() {
-                        pending_stamps.push(enqueued);
-                    }
+                    route(&mut gen, &updates, enqueued);
                 }
                 Request::Epoch(p) | Request::Stats(_, p) => {
                     p.fulfill(Response::Error("server shutting down".into()))
@@ -301,27 +506,65 @@ fn engine_loop(
                     // honor the ordering guarantee even during shutdown: the
                     // client's earlier updates (drained just above) must be
                     // visible to its query
-                    let _ = flush(engine, &mut pending, &mut pending_stamps, &mut tel, &mut latencies);
-                    p.fulfill(Response::Query { vertex: v, partner: engine.partner(v) })
+                    sink.send(FlushJob::Query(take_gen(&mut gen), v, p))
                 }
                 Request::Shutdown => {}
             }
         }
     }
-    let _ = flush(engine, &mut pending, &mut pending_stamps, &mut tel, &mut latencies);
+    if let Some(g) = take_gen(&mut gen) {
+        sink.send(FlushJob::Apply(g));
+    }
+}
 
-    ServiceSummary {
-        epochs: engine.epochs_applied(),
-        total_inserts: tel.total_inserts,
-        total_deletes: tel.total_deletes,
-        total_repair_edges: tel.total_repair_edges,
-        live_edges: engine.num_live_edges(),
-        matched_vertices: engine.matched_vertices(),
-        maximal: engine.verify().is_ok(),
+/// The epoch coordinator: run the router, inline or pipelined against a
+/// flusher thread, and produce the lifetime summary. The heavy phases of
+/// every flush fan out across the engine's shard workers inside
+/// [`ShardedDynamicMatcher::apply_mailboxes`].
+fn engine_loop(
+    cfg: &ServiceConfig,
+    engine: &ShardedDynamicMatcher,
+    queue: &ShardedQueue<Request>,
+    stop: &AtomicBool,
+) -> ServiceSummary {
+    let flushing = AtomicBool::new(false);
+    let spares: BoundedQueue<ShardMailboxes> = BoundedQueue::new(MAILBOX_GENERATIONS);
+    if !cfg.pipeline {
+        let mut sink = FlushSink::Inline(FlushExec::new(cfg, engine, &flushing, &spares));
+        route_loop(cfg, engine, queue, stop, &flushing, &spares, &mut sink);
+        match sink {
+            FlushSink::Inline(ex) => ex.summary(),
+            FlushSink::Pipe(_) => unreachable!("inline sink cannot become a pipe"),
+        }
+    } else {
+        // capacity-1 hand-off: at most one generation queued behind the one
+        // being applied, so parse/route overlaps matching without letting
+        // the router run unboundedly ahead of the engine
+        let jobs: BoundedQueue<FlushJob> = BoundedQueue::new(1);
+        std::thread::scope(|s| {
+            let flusher = s.spawn(|| {
+                // closing on exit (including panic) keeps the router from
+                // blocking on a dead flusher; jobs it then fails to send are
+                // dropped, abandoning their promises and waking the waiters
+                let _close = CloseOnDrop(&jobs);
+                let mut ex = FlushExec::new(cfg, engine, &flushing, &spares);
+                while let Some(job) = jobs.pop() {
+                    ex.handle(job);
+                }
+                ex.summary()
+            });
+            {
+                let mut sink = FlushSink::Pipe(&jobs);
+                route_loop(cfg, engine, queue, stop, &flushing, &spares, &mut sink);
+            }
+            jobs.close();
+            flusher.join().expect("flusher thread panicked")
+        })
     }
 }
 
 fn snapshot(
+    cfg: &ServiceConfig,
     engine: &ShardedDynamicMatcher,
     tel: &Telemetry,
     lat: &LatencyRing,
@@ -347,6 +590,12 @@ fn snapshot(
         maximal: audit.then(|| engine.verify().is_ok()),
         adjacency_bytes: engine.adjacency_bytes(),
         engine_shards: engine.num_shards(),
+        // the live fact, not the configured policy: P = 1 runs inline, so
+        // no pool exists there even under the default ShardExec::Pool
+        pooled: engine.pooled(),
+        pipelined: cfg.pipeline,
+        route_s: tel.total_route_s,
+        route_overlap_s: tel.total_route_overlap_s,
     }
 }
 
@@ -490,7 +739,12 @@ pub fn serve_lines<R: BufRead, W: Write>(
     reader: R,
     writer: &mut W,
 ) -> ServiceSummary {
-    let engine = ShardedDynamicMatcher::new(cfg.num_vertices, cfg.threads, cfg.engine_shards);
+    let engine = ShardedDynamicMatcher::with_exec(
+        cfg.num_vertices,
+        cfg.threads,
+        cfg.engine_shards,
+        cfg.shard_exec(),
+    );
     let queue: ShardedQueue<Request> = ShardedQueue::new(cfg.shards, cfg.shard_capacity);
     let stop = AtomicBool::new(false);
     std::thread::scope(|s| {
@@ -517,7 +771,12 @@ pub fn serve_tcp(
     let local = listener.local_addr().map_err(|e| format!("local_addr: {e}"))?;
     on_ready(local);
 
-    let engine = ShardedDynamicMatcher::new(cfg.num_vertices, cfg.threads, cfg.engine_shards);
+    let engine = ShardedDynamicMatcher::with_exec(
+        cfg.num_vertices,
+        cfg.threads,
+        cfg.engine_shards,
+        cfg.shard_exec(),
+    );
     let queue: ShardedQueue<Request> = ShardedQueue::new(cfg.shards, cfg.shard_capacity);
     let stop = AtomicBool::new(false);
     // every accepted socket, keyed by connection id, so shutdown can
@@ -716,6 +975,98 @@ QUIT\n";
         assert_eq!(summary.epochs, 3);
         assert_eq!(summary.total_inserts, 9);
         assert_eq!(summary.total_deletes, 2);
+    }
+
+    #[test]
+    fn stats_reports_pool_and_pipeline_modes() {
+        // `pooled` reports the live fact: a standing pool exists only for
+        // P > 1 under the pool policy — P = 1 always runs inline
+        let sharded = ServiceConfig { engine_shards: 4, ..small_cfg() };
+        let (lines, _) = drive(&sharded, "STATS\nQUIT\n");
+        assert!(lines[0].contains(r#""pooled":true"#), "{}", lines[0]);
+        assert!(lines[0].contains(r#""pipelined":true"#), "{}", lines[0]);
+        let single = small_cfg(); // engine_shards = 1: inline despite pool=true
+        let (lines, _) = drive(&single, "STATS\nQUIT\n");
+        assert!(lines[0].contains(r#""pooled":false"#), "{}", lines[0]);
+        let off = ServiceConfig {
+            engine_shards: 4,
+            pool: false,
+            pipeline: false,
+            ..small_cfg()
+        };
+        let (lines, _) = drive(&off, "STATS\nQUIT\n");
+        assert!(lines[0].contains(r#""pooled":false"#), "{}", lines[0]);
+        assert!(lines[0].contains(r#""pipelined":false"#), "{}", lines[0]);
+    }
+
+    #[test]
+    fn every_mode_combination_serves_the_same_session() {
+        // pooled/forked × pipelined/inline over a sharded engine: the wire
+        // semantics (epoch boundaries, query answers, counters, audit) must
+        // be mode-independent — only the timing fields may differ
+        let script = "\
+INSERT 0 1 1 2 2 3 3 4\n\
+EPOCH\n\
+DELETE 1 2 0 1\n\
+EPOCH\n\
+QUERY 2\n\
+STATS full\n\
+QUIT\n";
+        let mut reference: Option<(String, ServiceSummary)> = None;
+        for pool in [true, false] {
+            for pipeline in [true, false] {
+                let cfg = ServiceConfig {
+                    num_vertices: 16,
+                    threads: 1,
+                    engine_shards: 4,
+                    pool,
+                    pipeline,
+                    ..Default::default()
+                };
+                let (lines, summary) = drive(&cfg, script);
+                let query = lines
+                    .iter()
+                    .find(|l| l.contains(r#""op":"query""#))
+                    .unwrap()
+                    .clone();
+                let stats = lines.iter().find(|l| l.contains(r#""op":"stats""#)).unwrap();
+                assert!(stats.contains(r#""maximal":true"#), "pool={pool} pipe={pipeline}: {stats}");
+                match &reference {
+                    None => reference = Some((query, summary)),
+                    Some((q0, s0)) => {
+                        assert_eq!(&query, q0, "pool={pool} pipe={pipeline}");
+                        assert_eq!(summary.epochs, s0.epochs, "pool={pool} pipe={pipeline}");
+                        assert_eq!(
+                            summary.total_inserts, s0.total_inserts,
+                            "pool={pool} pipe={pipeline}"
+                        );
+                        assert_eq!(
+                            summary.total_deletes, s0.total_deletes,
+                            "pool={pool} pipe={pipeline}"
+                        );
+                        assert_eq!(
+                            summary.live_edges, s0.live_edges,
+                            "pool={pool} pipe={pipeline}"
+                        );
+                        assert!(summary.maximal, "pool={pool} pipe={pipeline}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn pipelined_epochs_report_route_timings() {
+        // the EPOCH reply must carry the router's route time; overlap may
+        // legitimately be zero in a lock-step stdio session, but the field
+        // must be present and sane
+        let script = "INSERT 0 1 2 3 4 5\nEPOCH\nQUIT\n";
+        let (lines, _) = drive(&small_cfg(), script);
+        let epoch = lines.iter().find(|l| l.contains(r#""op":"epoch""#)).unwrap();
+        assert!(epoch.contains(r#""route_ms":"#), "{epoch}");
+        assert!(epoch.contains(r#""route_overlap_ms":"#), "{epoch}");
+        assert!(epoch.contains(r#""mutate_run_ms":"#), "{epoch}");
+        assert!(epoch.contains(r#""spawn_overhead_ms":"#), "{epoch}");
     }
 
     #[test]

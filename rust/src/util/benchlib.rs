@@ -8,7 +8,9 @@ use super::stats;
 use std::time::Instant;
 
 #[derive(Clone, Debug)]
+/// Iteration policy for one measurement.
 pub struct BenchConfig {
+    /// Untimed warmup iterations.
     pub warmup_iters: usize,
     /// Minimum timed iterations.
     pub min_iters: usize,
@@ -27,16 +29,24 @@ impl Default for BenchConfig {
 }
 
 #[derive(Clone, Debug)]
+/// Aggregated timings of one measurement.
 pub struct BenchResult {
+    /// Bench label.
     pub name: String,
+    /// Timed iterations run.
     pub iters: usize,
+    /// Median seconds per iteration.
     pub median_s: f64,
+    /// Mean seconds per iteration.
     pub mean_s: f64,
+    /// Sample standard deviation (seconds).
     pub stddev_s: f64,
+    /// Fastest iteration (seconds).
     pub min_s: f64,
 }
 
 impl BenchResult {
+    /// One formatted result line for bench output.
     pub fn row(&self) -> String {
         format!(
             "{:<44} {:>4} iters  median {:>10.4} s  mean {:>10.4} s  sd {:>8.4}",
@@ -81,6 +91,7 @@ pub struct Table {
 }
 
 impl Table {
+    /// Table with the given column headers.
     pub fn new(headers: &[&str]) -> Self {
         Self {
             headers: headers.iter().map(|s| s.to_string()).collect(),
@@ -88,11 +99,13 @@ impl Table {
         }
     }
 
+    /// Append one row (must match the header count).
     pub fn row(&mut self, cells: &[String]) {
         assert_eq!(cells.len(), self.headers.len(), "column count mismatch");
         self.rows.push(cells.to_vec());
     }
 
+    /// Render the table with aligned fixed-width columns.
     pub fn render(&self) -> String {
         let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
         for row in &self.rows {

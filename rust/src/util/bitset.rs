@@ -12,6 +12,7 @@ pub struct Bitset {
 }
 
 impl Bitset {
+    /// All-zero bitset of `len` bits.
     pub fn new(len: usize) -> Self {
         Self {
             words: vec![0; len.div_ceil(64)],
@@ -20,37 +21,44 @@ impl Bitset {
     }
 
     #[inline]
+    /// Number of bits.
     pub fn len(&self) -> usize {
         self.len
     }
 
     #[inline]
+    /// True for a zero-length bitset.
     pub fn is_empty(&self) -> bool {
         self.len == 0
     }
 
     #[inline]
+    /// Read bit `i`.
     pub fn get(&self, i: usize) -> bool {
         debug_assert!(i < self.len);
         (self.words[i >> 6] >> (i & 63)) & 1 == 1
     }
 
     #[inline]
+    /// Set bit `i`.
     pub fn set(&mut self, i: usize) {
         debug_assert!(i < self.len);
         self.words[i >> 6] |= 1u64 << (i & 63);
     }
 
     #[inline]
+    /// Clear bit `i`.
     pub fn clear(&mut self, i: usize) {
         debug_assert!(i < self.len);
         self.words[i >> 6] &= !(1u64 << (i & 63));
     }
 
+    /// Zero every bit, keeping the length.
     pub fn clear_all(&mut self) {
         self.words.fill(0);
     }
 
+    /// Number of set bits.
     pub fn count_ones(&self) -> usize {
         self.words.iter().map(|w| w.count_ones() as usize).sum()
     }
@@ -79,6 +87,7 @@ pub struct AtomicBitset {
 }
 
 impl AtomicBitset {
+    /// All-zero atomic bitset of `len` bits.
     pub fn new(len: usize) -> Self {
         Self {
             words: (0..len.div_ceil(64)).map(|_| AtomicU64::new(0)).collect(),
@@ -87,16 +96,19 @@ impl AtomicBitset {
     }
 
     #[inline]
+    /// Number of bits.
     pub fn len(&self) -> usize {
         self.len
     }
 
     #[inline]
+    /// True for a zero-length bitset.
     pub fn is_empty(&self) -> bool {
         self.len == 0
     }
 
     #[inline]
+    /// Read bit `i` (acquire).
     pub fn get(&self, i: usize) -> bool {
         (self.words[i >> 6].load(Ordering::Acquire) >> (i & 63)) & 1 == 1
     }
@@ -110,6 +122,7 @@ impl AtomicBitset {
         prev & mask == 0
     }
 
+    /// Number of set bits.
     pub fn count_ones(&self) -> usize {
         self.words
             .iter()

@@ -6,9 +6,13 @@
 use std::collections::BTreeMap;
 
 #[derive(Debug, Default, Clone)]
+/// Parsed command line: positionals, `--key value` options, bare flags.
 pub struct Args {
+    /// Positional arguments, in order.
     pub positional: Vec<String>,
+    /// `--key value` / `--key=value` options.
     pub options: BTreeMap<String, String>,
+    /// Bare flags that were present.
     pub flags: Vec<String>,
 }
 
@@ -45,18 +49,22 @@ impl Args {
         Ok(out)
     }
 
+    /// Was the bare flag `name` given?
     pub fn flag(&self, name: &str) -> bool {
         self.flags.iter().any(|f| f == name)
     }
 
+    /// The value of option `key`, if given.
     pub fn get(&self, key: &str) -> Option<&str> {
         self.options.get(key).map(|s| s.as_str())
     }
 
+    /// Option value with a default.
     pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
         self.get(key).unwrap_or(default)
     }
 
+    /// Parse option `key` into `T`, with a default when absent.
     pub fn get_parse<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T, String> {
         match self.get(key) {
             None => Ok(default),

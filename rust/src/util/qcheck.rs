@@ -10,8 +10,11 @@ use super::rng::Xoshiro256pp;
 /// Configuration for a property run.
 #[derive(Clone, Debug)]
 pub struct Config {
+    /// Generated cases per property.
     pub cases: usize,
+    /// Base seed (reported on failure for reproduction).
     pub seed: u64,
+    /// Cap on greedy shrink iterations.
     pub max_shrink_steps: usize,
 }
 

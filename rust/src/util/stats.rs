@@ -12,6 +12,7 @@ pub fn geomean(xs: &[f64]) -> Option<f64> {
     Some((log_sum / xs.len() as f64).exp())
 }
 
+/// Arithmetic mean (`NaN` on empty input).
 pub fn mean(xs: &[f64]) -> f64 {
     if xs.is_empty() {
         return f64::NAN;
@@ -46,6 +47,7 @@ pub fn percentile(xs: &[f64], p: f64) -> f64 {
     v[lo] + (v[hi] - v[lo]) * frac
 }
 
+/// Median (50th percentile).
 pub fn median(xs: &[f64]) -> f64 {
     percentile(xs, 50.0)
 }

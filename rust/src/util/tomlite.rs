@@ -9,27 +9,36 @@
 use std::collections::BTreeMap;
 
 #[derive(Debug, Clone, PartialEq)]
+/// A parsed TOML-subset value.
 pub enum Value {
+    /// Quoted string.
     Str(String),
+    /// Integer literal.
     Int(i64),
+    /// Float literal.
     Float(f64),
+    /// `true`/`false`.
     Bool(bool),
+    /// Flat array of values.
     Array(Vec<Value>),
 }
 
 impl Value {
+    /// String contents, if this is a string.
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Value::Str(s) => Some(s),
             _ => None,
         }
     }
+    /// Integer contents, if this is an integer.
     pub fn as_int(&self) -> Option<i64> {
         match self {
             Value::Int(i) => Some(*i),
             _ => None,
         }
     }
+    /// Float contents (integers coerce).
     pub fn as_float(&self) -> Option<f64> {
         match self {
             Value::Float(f) => Some(*f),
@@ -37,12 +46,14 @@ impl Value {
             _ => None,
         }
     }
+    /// Boolean contents, if this is a boolean.
     pub fn as_bool(&self) -> Option<bool> {
         match self {
             Value::Bool(b) => Some(*b),
             _ => None,
         }
     }
+    /// Array contents, if this is an array.
     pub fn as_array(&self) -> Option<&[Value]> {
         match self {
             Value::Array(a) => Some(a),
@@ -57,12 +68,16 @@ pub type TableData = BTreeMap<String, Value>;
 /// Parsed document: the root table, named sections, and arrays of tables.
 #[derive(Debug, Default, Clone)]
 pub struct Document {
+    /// Keys above the first section header.
     pub root: TableData,
+    /// `[section]` tables by name.
     pub sections: BTreeMap<String, TableData>,
+    /// `[[array-of-tables]]` entries by name.
     pub table_arrays: BTreeMap<String, Vec<TableData>>,
 }
 
 impl Document {
+    /// Parse a TOML-subset document.
     pub fn parse(text: &str) -> Result<Self, String> {
         let mut doc = Document::default();
         enum Target {

@@ -5,14 +5,17 @@
 //! `verify_maximal_dynamic`, the deletion-aware verifier, against an
 //! independently maintained model of the live edge set.
 //!
-//! Every schedule is replayed at `engine_shards ∈ {1, 2, 4}` — the
-//! single-shard reference engine and two vertex-partitioned configurations
-//! — and each replay is cross-checked against the same live-graph model.
-//! Matchings may legitimately differ between shard counts (fresh-edge
-//! delivery order differs), but the live set must agree exactly and every
-//! invariant must hold at every shard count.
+//! Every schedule is replayed at `engine_shards ∈ {1, 2, 4}` on the pooled
+//! engine — the single-shard reference and two vertex-partitioned
+//! configurations whose mutate phases run on the persistent shard-worker
+//! pool — plus once at `P = 4` under the forked (`ShardExec::Fork`)
+//! baseline, and each replay is cross-checked against the same live-graph
+//! model. Matchings may legitimately differ between shard counts
+//! (fresh-edge delivery order differs), but the live set must agree exactly
+//! and every invariant must hold at every shard count and under either
+//! dispatch policy.
 
-use skipper::dynamic::{ShardedDynamicMatcher, Update};
+use skipper::dynamic::{ShardExec, ShardedDynamicMatcher, Update};
 use skipper::graph::gen::{barabasi_albert, erdos_renyi, grid};
 use skipper::matching::verify::verify_maximal_dynamic;
 use skipper::util::qcheck::{check, Config};
@@ -75,13 +78,13 @@ fn arb_schedule(rng: &mut Xoshiro256pp) -> Schedule {
     }
 }
 
-/// Run the schedule at one shard count; error on the first invariant
-/// violation. The update stream is regenerated from `s.seed`, so every
-/// shard count sees the identical schedule.
-fn run_schedule_sharded(s: &Schedule, engine_shards: usize) -> Result<(), String> {
-    let tag = |msg: String| format!("{} P={engine_shards}: {msg}", s.family);
+/// Run the schedule at one shard count and dispatch policy; error on the
+/// first invariant violation. The update stream is regenerated from
+/// `s.seed`, so every configuration sees the identical schedule.
+fn run_schedule_sharded(s: &Schedule, engine_shards: usize, exec: ShardExec) -> Result<(), String> {
+    let tag = |msg: String| format!("{} P={engine_shards} {}: {msg}", s.family, exec.name());
     let mut rng = Xoshiro256pp::new(s.seed);
-    let engine = ShardedDynamicMatcher::new(s.n, s.threads, engine_shards);
+    let engine = ShardedDynamicMatcher::with_exec(s.n, s.threads, engine_shards, exec);
     // reference model of the live graph; a Vec suffices (and samples in
     // O(1)) because `pool` and `live` stay disjoint by construction, so an
     // insert can never duplicate a live edge
@@ -154,11 +157,13 @@ fn run_schedule_sharded(s: &Schedule, engine_shards: usize) -> Result<(), String
     Ok(())
 }
 
-/// Replay the schedule at every shard count in the sweep.
+/// Replay the schedule at every shard count in the sweep (pooled engine),
+/// plus once under the forked dispatch baseline.
 fn run_schedule(s: &Schedule) -> Result<(), String> {
     for &p in &SHARD_SWEEP {
-        run_schedule_sharded(s, p)?;
+        run_schedule_sharded(s, p, ShardExec::Pool)?;
     }
+    run_schedule_sharded(s, 4, ShardExec::Fork)?;
     Ok(())
 }
 
