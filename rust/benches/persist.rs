@@ -1,0 +1,138 @@
+//! Bench: durability costs on rmat-warmed engines.
+//!
+//! Three questions, at `SKIPPER_BENCH_SCALE`-dependent size:
+//!   1. snapshot write and load+restore throughput — how fast the engine's
+//!      durable state (live adjacency + matching) streams to and from disk,
+//!   2. WAL append latency per churn epoch, buffered vs fsync — the price
+//!      of the write-ahead guarantee on the flusher's critical path,
+//!   3. cold crash recovery — snapshot restore + WAL replay + maximality
+//!      audit, as a function of the replayed epoch count.
+
+mod common;
+
+use skipper::coordinator::datasets::Scale;
+use skipper::dynamic::churn::{recycle_batch, ChurnGen};
+use skipper::dynamic::{ShardedDynamicMatcher, Update};
+use skipper::persist::recovery;
+use skipper::persist::snapshot::{self, SnapshotData};
+use skipper::persist::wal::{Wal, WalOptions};
+use skipper::util::benchlib::{bench, BenchConfig};
+use skipper::util::rng::Xoshiro256pp;
+use skipper::util::stats::percentile;
+use std::path::{Path, PathBuf};
+use std::time::Instant;
+
+fn fresh_dir(base: &Path, tag: &str) -> PathBuf {
+    let dir = base.join(tag);
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).expect("bench dir");
+    dir
+}
+
+fn main() {
+    let scale = common::bench_scale();
+    let exp: u32 = match scale {
+        Scale::Tiny => 12,
+        Scale::Small => 15,
+        Scale::Medium => 18,
+        Scale::Large => 20,
+    };
+    let gen = ChurnGen::Rmat { scale: exp, avg_degree: 8 };
+    let n = gen.num_vertices();
+    let population = gen.population(7);
+    let base = std::env::temp_dir().join(format!("skipper_bench_persist_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&base);
+    std::fs::create_dir_all(&base).expect("bench dir");
+    eprintln!(
+        "[persist] rmat {}: |V|={n} population={} edges",
+        scale.name(),
+        population.len()
+    );
+    let cfg = BenchConfig { warmup_iters: 1, min_iters: 3, max_seconds: 8.0 };
+    let threads = 4;
+
+    // warm engine once; every section snapshots/logs this state
+    let engine = ShardedDynamicMatcher::new(n, threads, 1);
+    let warm_ups: Vec<Update> = population.iter().map(|&(u, v)| Update::Insert(u, v)).collect();
+    engine.apply_epoch(&warm_ups).expect("warmup");
+    let data = SnapshotData::capture(&engine);
+    let live: Vec<(u32, u32)> = engine.live_edges();
+
+    // 1a. snapshot write throughput
+    let snap_dir = fresh_dir(&base, "snap");
+    let path = snap_dir.join(snapshot::file_name(data.epoch));
+    let mut bytes = 0u64;
+    let r = bench("persist/snapshot-write", &cfg, || {
+        bytes = snapshot::write_file(&path, &data).expect("snapshot write");
+        bytes
+    });
+    println!(
+        "{}  ({:.1} MB at {:.0} MB/s)",
+        r.row(),
+        bytes as f64 / 1e6,
+        bytes as f64 / r.median_s / 1e6
+    );
+
+    // 1b. snapshot load + exact-matching restore into a fresh engine
+    let r = bench("persist/snapshot-load-restore", &cfg, || {
+        let snap = snapshot::read_file(&path).expect("snapshot read");
+        let fresh = ShardedDynamicMatcher::new(n, threads, 1);
+        recovery::restore_into(&fresh, &snap).expect("restore");
+        fresh.matched_vertices()
+    });
+    println!(
+        "{}  ({:.0} MB/s)",
+        r.row(),
+        bytes as f64 / r.median_s / 1e6
+    );
+
+    // 2. WAL append latency per churn epoch, buffered vs fsync
+    let batch = 4096.min(live.len()).max(2);
+    let epochs = 64usize;
+    for fsync in [false, true] {
+        let tag = if fsync { "fsync" } else { "buffered" };
+        let dir = fresh_dir(&base, &format!("wal_{tag}"));
+        let (mut wal, _) = Wal::open(&dir, WalOptions { fsync, ..WalOptions::default() })
+            .expect("wal open");
+        let mut rng = Xoshiro256pp::new(99);
+        let mut lat_s = Vec::with_capacity(epochs);
+        for e in 0..epochs {
+            let ups = recycle_batch(&live, &mut rng, e, batch);
+            let t0 = Instant::now();
+            wal.append_epoch(e as u64 + 1, &ups).expect("wal append");
+            lat_s.push(t0.elapsed().as_secs_f64());
+        }
+        println!(
+            "persist/wal-append-{tag:<8} batch={batch}: p50={:>8.1}us  p99={:>8.1}us  ({:.1} MB logged)",
+            percentile(&lat_s, 50.0) * 1e6,
+            percentile(&lat_s, 99.0) * 1e6,
+            wal.bytes_appended() as f64 / 1e6
+        );
+    }
+
+    // 3. cold recovery vs replayed WAL length
+    for k in [4usize, 32] {
+        let dir = fresh_dir(&base, &format!("recover_{k}"));
+        let snap_dir = recovery::snapshot_dir(&dir);
+        std::fs::create_dir_all(&snap_dir).expect("snap dir");
+        snapshot::write_file(&snap_dir.join(snapshot::file_name(data.epoch)), &data)
+            .expect("snapshot write");
+        let (mut wal, _) =
+            Wal::open(&recovery::wal_dir(&dir), WalOptions::default()).expect("wal open");
+        let mut rng = Xoshiro256pp::new(7);
+        for e in 0..k {
+            let ups = recycle_batch(&live, &mut rng, e, batch);
+            wal.append_epoch(data.epoch + e as u64 + 1, &ups).expect("wal append");
+        }
+        drop(wal);
+        let r = bench(&format!("persist/recover-{k}-epochs"), &cfg, || {
+            let fresh = ShardedDynamicMatcher::new(n, threads, 1);
+            let (_, report) =
+                recovery::recover(&fresh, &dir, WalOptions::default()).expect("recover");
+            assert_eq!(report.replayed_epochs, k as u64);
+            fresh.num_live_edges()
+        });
+        println!("{}", r.row());
+    }
+    let _ = std::fs::remove_dir_all(&base);
+}

@@ -616,6 +616,151 @@ pub fn shard_scale(scale: Scale, threads: usize) -> Result<String, String> {
     ))
 }
 
+/// Durability experiment (`experiment durability`), two questions:
+///
+/// 1. **Logging overhead** — identical rmat 50/50 churn epochs through the
+///    engine with the WAL off / buffered / fsync'd per record, reporting
+///    update throughput, epoch p50, logged bytes, and the slowdown vs the
+///    volatile baseline.
+/// 2. **Recovery time vs WAL length** — snapshot a warmed engine once, log
+///    `K` further churn epochs, "crash", and time a cold
+///    [`crate::persist::recovery::recover`] (snapshot restore + WAL replay +
+///    maximality audit) into a fresh engine.
+pub fn durability(scale: Scale, threads: usize) -> Result<String, String> {
+    use crate::dynamic::churn::{recycle_batch, ChurnGen};
+    use crate::dynamic::{ShardedDynamicMatcher, Update};
+    use crate::persist::recovery;
+    use crate::persist::snapshot::{self, SnapshotData};
+    use crate::persist::wal::{Wal, WalOptions};
+    use crate::util::rng::Xoshiro256pp;
+    use crate::util::stats::percentile;
+
+    let exp: u32 = match scale {
+        Scale::Tiny => 10,
+        Scale::Small => 13,
+        Scale::Medium => 16,
+        Scale::Large => 19,
+    };
+    let n = 1usize << exp;
+    let gen = ChurnGen::Rmat { scale: exp, avg_degree: 8 };
+    let population = gen.population(17);
+    let batch = (n / 8).max(256);
+    let epochs = 8usize;
+    let base =
+        std::env::temp_dir().join(format!("skipper_durability_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&base);
+    std::fs::create_dir_all(&base).map_err(|e| format!("mkdir {}: {e}", base.display()))?;
+
+    let warm_engine = || -> Result<ShardedDynamicMatcher, String> {
+        let engine = ShardedDynamicMatcher::new(n, threads, 1);
+        let ups: Vec<Update> =
+            population.iter().map(|&(u, v)| Update::Insert(u, v)).collect();
+        engine.apply_epoch(&ups)?;
+        Ok(engine)
+    };
+
+    // --- (1) logging overhead: off vs buffered vs fsync ------------------
+    let mut t = Table::new(&[
+        "wal", "epochs", "batch", "updates/s", "epoch p50 ms", "wal MB", "slowdown vs off",
+    ]);
+    let mut off_updates_s = 0.0f64;
+    for mode in ["off", "buffered", "fsync"] {
+        let engine = warm_engine()?;
+        let live: Vec<(u32, u32)> = engine.live_edges();
+        let mut rng = Xoshiro256pp::new(23);
+        let mut wal = match mode {
+            "off" => None,
+            _ => {
+                let opts =
+                    WalOptions { fsync: mode == "fsync", ..WalOptions::default() };
+                Some(Wal::open(&base.join(format!("wal_{mode}")), opts)?.0)
+            }
+        };
+        let mut epoch_s = Vec::new();
+        for e in 0..epochs {
+            let ups = recycle_batch(&live, &mut rng, e, batch);
+            let t0 = Instant::now();
+            if let Some(w) = wal.as_mut() {
+                w.append_epoch(engine.epochs_applied() + 1, &ups)?;
+            }
+            engine.apply_epoch(&ups)?;
+            epoch_s.push(t0.elapsed().as_secs_f64());
+        }
+        engine.verify()?;
+        let wall: f64 = epoch_s.iter().sum();
+        let updates_s = (epochs * batch) as f64 / wall.max(1e-9);
+        if mode == "off" {
+            off_updates_s = updates_s;
+        }
+        let wal_mb =
+            wal.as_ref().map_or(0.0, |w| w.bytes_appended() as f64 / 1e6);
+        t.row(&[
+            mode.into(),
+            epochs.to_string(),
+            batch.to_string(),
+            format!("{updates_s:.0}"),
+            format!("{:.2}", percentile(&epoch_s, 50.0) * 1e3),
+            format!("{wal_mb:.2}"),
+            if mode == "off" {
+                "1.00x".into()
+            } else {
+                format!("{:.2}x", off_updates_s / updates_s.max(1e-9))
+            },
+        ]);
+    }
+
+    // --- (2) recovery time vs WAL length ---------------------------------
+    let mut r = Table::new(&[
+        "wal epochs", "updates replayed", "snapshot MB", "recover ms", "recovered",
+    ]);
+    for k in [2usize, 8, 32] {
+        let dir = base.join(format!("recover_{k}"));
+        let snap_dir = recovery::snapshot_dir(&dir);
+        std::fs::create_dir_all(&snap_dir)
+            .map_err(|e| format!("mkdir {}: {e}", snap_dir.display()))?;
+        let engine = warm_engine()?;
+        let snap = SnapshotData::capture(&engine);
+        let snap_bytes = snapshot::write_file(
+            &snap_dir.join(snapshot::file_name(snap.epoch)),
+            &snap,
+        )?;
+        let live: Vec<(u32, u32)> = engine.live_edges();
+        let mut rng = Xoshiro256pp::new(29);
+        let (mut wal, _) =
+            Wal::open(&recovery::wal_dir(&dir), WalOptions::default())?;
+        let mut replayed_updates = 0usize;
+        for e in 0..k {
+            let ups = recycle_batch(&live, &mut rng, e, batch);
+            replayed_updates += ups.len();
+            wal.append_epoch(engine.epochs_applied() + 1, &ups)?;
+            engine.apply_epoch(&ups)?;
+        }
+        drop(wal);
+        drop(engine); // the crash: no final snapshot, WAL left as-is
+        let fresh = ShardedDynamicMatcher::new(n, threads, 1);
+        let t0 = Instant::now();
+        let (_, report) = recovery::recover(&fresh, &dir, WalOptions::default())?;
+        let recover_s = t0.elapsed().as_secs_f64();
+        r.row(&[
+            k.to_string(),
+            replayed_updates.to_string(),
+            format!("{:.2}", snap_bytes as f64 / 1e6),
+            format!("{:.2}", recover_s * 1e3),
+            format!(
+                "snap@{} + {} epochs, maximal",
+                report.snapshot_epoch.unwrap_or(0),
+                report.replayed_epochs
+            ),
+        ]);
+    }
+    let _ = std::fs::remove_dir_all(&base);
+    Ok(format!(
+        "Durability — WAL logging overhead and crash-recovery cost (rmat |V|={n}, t={threads})\n{}\nrecovery = newest valid snapshot restore + WAL replay through real engine epochs + maximality audit\n{}\nbuffered = flushed to the OS per epoch; fsync = forced to media per epoch (the power-loss-safe mode)\n",
+        t.render(),
+        r.render()
+    ))
+}
+
 /// Cross-layer experiment: the XLA-backed (L1 Pallas + L2 JAX) EMS matcher
 /// vs Skipper and SGMM on padded small graphs. Requires `make artifacts`.
 pub fn xla_ems(cache_dir: &str) -> Result<String, String> {
@@ -710,6 +855,21 @@ mod tests {
         assert!(s.contains("spawn ovh"), "{s}");
         assert!(s.contains("fork"), "{s}");
         assert!(s.contains("pool"), "{s}");
+    }
+
+    #[test]
+    fn durability_renders_modes_and_recovery_rows() {
+        let s = durability(Scale::Tiny, 2).unwrap();
+        for mode in ["off", "buffered", "fsync"] {
+            assert!(s.contains(mode), "missing {mode} row in: {s}");
+        }
+        assert!(s.contains("slowdown vs off"), "{s}");
+        assert!(s.contains("recover ms"), "{s}");
+        assert_eq!(
+            s.matches("maximal").count(),
+            4,
+            "3 recovery rows verified + legend in: {s}"
+        );
     }
 
     #[test]

@@ -90,6 +90,27 @@ impl ChurnGen {
     }
 }
 
+/// One steady-state churn batch: `batch/2` random live edges, each deleted
+/// and immediately re-inserted — the live count is invariant, so repeated
+/// batches measure sustained churn without draining the graph. Shared by
+/// the `durability` experiment and `benches/persist.rs` (the
+/// warmed-engine logging/recovery workloads), so they provably measure the
+/// same schedule shape.
+pub fn recycle_batch(
+    live: &[(VertexId, VertexId)],
+    rng: &mut Xoshiro256pp,
+    round: usize,
+    batch: usize,
+) -> Vec<Update> {
+    let mut ups = Vec::with_capacity(batch);
+    for i in 0..batch / 2 {
+        let (u, v) = live[(rng.next_usize(live.len()) + round + i) % live.len()];
+        ups.push(Update::Delete(u, v));
+        ups.push(Update::Insert(u, v));
+    }
+    ups
+}
+
 /// Everything one churn run needs: the population generator, the schedule
 /// shape, and the engine configuration.
 #[derive(Clone, Debug)]
@@ -117,6 +138,14 @@ pub struct ChurnConfig {
     pub warmup_epochs: usize,
     /// Verify maximality over the live set after every epoch.
     pub verify: bool,
+    /// Write the engine's end-of-run state to this snapshot file
+    /// ([`crate::persist::snapshot`] format), so a warmed-up workload can
+    /// restart instantly via [`load`](Self::load).
+    pub save: Option<String>,
+    /// Restore the engine from this snapshot file instead of running the
+    /// warmup phase (the snapshot's live edges become the live set; its
+    /// universe must match the generator's).
+    pub load: Option<String>,
 }
 
 impl ChurnConfig {
@@ -134,6 +163,8 @@ impl ChurnConfig {
             delete_frac: 0.5,
             warmup_epochs: 8,
             verify: true,
+            save: None,
+            load: None,
         }
     }
 
@@ -250,9 +281,25 @@ pub fn run_churn(
         }
     };
 
+    // --- load: restore a saved warm state instead of warming up ----------
+    if let Some(path) = &cfg.load {
+        let snap = crate::persist::snapshot::read_file(std::path::Path::new(path))?;
+        if snap.num_vertices as usize != n {
+            return Err(format!(
+                "{path}: snapshot universe |V|={} does not match generator |V|={n}",
+                snap.num_vertices
+            ));
+        }
+        crate::persist::recovery::restore_into(&engine, &snap)?;
+        live = snap.live_edges;
+        let live_set: std::collections::HashSet<(VertexId, VertexId)> =
+            live.iter().copied().collect();
+        pending.retain(|e| !live_set.contains(e));
+    }
+
     // --- warmup: insert the population in a few large epochs (0 = start
     // churning against the empty graph; inserts then come from `pending`) --
-    if cfg.warmup_epochs > 0 {
+    if cfg.load.is_none() && cfg.warmup_epochs > 0 {
         let per_warmup = pending.len().div_ceil(cfg.warmup_epochs);
         for _ in 0..cfg.warmup_epochs {
             if pending.is_empty() {
@@ -312,6 +359,12 @@ pub fn run_churn(
     }
     summary.final_live_edges = engine.num_live_edges();
     summary.final_matched_vertices = engine.matched_vertices();
+
+    // --- save: persist the warmed/churned state for instant restarts -----
+    if let Some(path) = &cfg.save {
+        let data = crate::persist::snapshot::SnapshotData::capture(&engine);
+        crate::persist::snapshot::write_file(std::path::Path::new(path), &data)?;
+    }
     Ok(summary)
 }
 
@@ -406,6 +459,58 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn save_then_load_skips_warmup_and_stays_verified() {
+        let dir = std::env::temp_dir().join(format!(
+            "skipper_churn_saveload_{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("warm.skps").to_string_lossy().into_owned();
+        let gen = ChurnGen::Er { n: 512, m: 2048 };
+        // run 1: warm up, churn a little, save
+        let cfg = ChurnConfig {
+            epochs: 2,
+            batch: 100,
+            warmup_epochs: 2,
+            threads: 2,
+            save: Some(path.clone()),
+            ..ChurnConfig::new(gen)
+        };
+        let saved = run_churn(&cfg, |_| {}).unwrap();
+        assert!(saved.final_live_edges > 0);
+        // run 2: load replaces warmup — same live state, every epoch still
+        // verified against the model
+        let cfg = ChurnConfig {
+            epochs: 3,
+            batch: 100,
+            warmup_epochs: 5, // ignored under load
+            threads: 2,
+            load: Some(path.clone()),
+            ..ChurnConfig::new(gen)
+        };
+        let mut warmups = 0;
+        let loaded = run_churn(&cfg, |e| {
+            if e.warmup {
+                warmups += 1;
+            }
+            assert!(matches!(e.verified, Some(Ok(()))));
+        })
+        .unwrap();
+        assert_eq!(warmups, 0, "load must replace the warmup phase");
+        assert_eq!(loaded.epochs, 3);
+        // 50/50 churn holds the live count near the restored state
+        let drift = loaded.final_live_edges.abs_diff(saved.final_live_edges);
+        assert!(drift <= 2 * cfg.batch as u64, "drift {drift}");
+        // universe mismatch is rejected up front
+        let bad = ChurnConfig {
+            load: Some(path),
+            ..ChurnConfig::new(ChurnGen::Er { n: 256, m: 512 })
+        };
+        assert!(run_churn(&bad, |_| {}).unwrap_err().contains("universe"));
     }
 
     #[test]

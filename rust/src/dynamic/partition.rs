@@ -517,6 +517,16 @@ impl ShardedDynamicMatcher {
         self.epoch.load(Ordering::Relaxed)
     }
 
+    /// Reset the epoch counter — the recovery hook
+    /// ([`crate::persist::recovery`]). Rebuilding a snapshot and replaying
+    /// the WAL consume engine epochs of their own; recovery calls this once,
+    /// at boot, to resume the *durable* epoch timeline so post-recovery WAL
+    /// records keep strictly increasing epoch numbers across crashes. Must
+    /// only be called between epochs (nothing in flight).
+    pub fn set_epoch_base(&self, epoch: u64) {
+        self.epoch.store(epoch, Ordering::Relaxed);
+    }
+
     /// Currently matched vertices (2 × matched pairs).
     #[inline]
     pub fn matched_vertices(&self) -> usize {

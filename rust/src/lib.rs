@@ -18,6 +18,10 @@
 //!   `INSERT`/`DELETE`/`QUERY`/`STATS`/`EPOCH` protocol over stdin or TCP,
 //!   with a sharded front-end queue coalescing client batches into engine
 //!   epochs.
+//! * [`persist`] — durability for the service: a CRC-checked epoch
+//!   write-ahead log with segment rotation, atomic binary snapshots written
+//!   by a background thread, and the crash-recovery boot path (newest valid
+//!   snapshot + WAL replay through the real engine epochs).
 //! * [`matching`] — every baseline the paper discusses: sequential greedy
 //!   (SGMM), IDMM, SIDMM (the GBBS comparator), PBMM, Israeli–Itai, Birn
 //!   et al., and Auer–Bisseling.
@@ -66,6 +70,7 @@ pub mod graph;
 pub mod instrument;
 pub mod matching;
 pub mod par;
+pub mod persist;
 pub mod runtime;
 pub mod service;
 pub mod util;

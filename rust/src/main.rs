@@ -49,35 +49,48 @@ USAGE:
   skipper-cli run --graph <file|dataset> --stream [--threads N] [--chunk-edges N] [--verify]
               (match while edges stream off disk — no CSR is materialized;
                reports peak topology-resident bytes vs the CSR equivalent)
-  skipper-cli experiment <id> [--config cfg.toml] [--scale S]   (ids: table1 table2 fig3 fig7 fig8 fig9 fig10 fig11 stream dynamic scale xla-ems)
+  skipper-cli experiment <id> [--config cfg.toml] [--scale S]   (ids: table1 table2 fig3 fig7 fig8 fig9 fig10 fig11 stream dynamic scale durability xla-ems)
   skipper-cli suite [--config cfg.toml] [--scale S]
   skipper-cli serve [--vertices N] [--threads N] [--tcp HOST:PORT]
               [--engine-shards P] [--no-pool] [--no-pipeline] [--shards N]
               [--shard-capacity N] [--epoch-max-updates N]
-              [--epoch-max-requests N]
-              (line protocol INSERT/DELETE/QUERY/STATS[ full]/EPOCH/QUIT/
-               SHUTDOWN, specified in docs/PROTOCOL.md; stdin pipe by
-               default, concurrent clients with --tcp. --engine-shards P
-               (default 1) partitions the engine's vertices so every
-               epoch's mutate phase runs P-way parallel on a persistent
-               shard-worker pool; --no-pool forks scoped threads per epoch
-               instead (the measured baseline). The coordinator pipelines
-               by default — epoch N+1's updates are parsed/routed while
-               epoch N is applied on a flusher thread; --no-pipeline runs
-               flushes inline on the router. Coalescing: queued updates
-               flush as one epoch at an EPOCH barrier, or once
-               --epoch-max-updates (default 8192) accumulate;
+              [--epoch-max-requests N] [--data-dir DIR] [--no-wal]
+              [--fsync] [--snapshot-every E] [--debug-commands]
+              (line protocol INSERT/DELETE/QUERY/STATS[ full]/SNAPSHOT/
+               EPOCH/QUIT/SHUTDOWN, specified in docs/PROTOCOL.md; stdin
+               pipe by default, concurrent clients with --tcp.
+               --engine-shards P (default 1) partitions the engine's
+               vertices so every epoch's mutate phase runs P-way parallel
+               on a persistent shard-worker pool; --no-pool forks scoped
+               threads per epoch instead (the measured baseline). The
+               coordinator pipelines by default — epoch N+1's updates are
+               parsed/routed while epoch N is applied on a flusher thread;
+               --no-pipeline runs flushes inline on the router. Coalescing:
+               queued updates flush as one epoch at an EPOCH barrier, or
+               once --epoch-max-updates (default 8192) accumulate;
                --epoch-max-requests (default 256) caps requests drained per
                router round. STATS returns cheap counters; STATS full adds
-               the O(|V|+|E|) maximality audit)
+               the O(|V|+|E|) maximality audit.
+               Durability: --data-dir DIR makes the service crash-safe —
+               every epoch's update batch is logged to a CRC-checked WAL
+               before it is applied (--fsync forces each record to media;
+               --no-wal disables logging), SNAPSHOT/--snapshot-every E
+               write binary snapshots in the background, SHUTDOWN/EOF
+               drain and write a final snapshot, and the next boot
+               recovers: newest valid snapshot + WAL replay, verified
+               maximal before going live. --debug-commands enables the
+               CRASH fault-injection command for recovery testing)
   skipper-cli churn [--gen rmat|er|ba|grid] [--scale LOG2_V] [--avg-degree D]
               [--epochs E] [--batch B] [--delete-frac F] [--threads N]
               [--engine-shards P] [--no-pool] [--warmup-epochs W] [--seed S]
-              [--no-verify]
+              [--no-verify] [--save FILE] [--load FILE]
               (mixed insert/delete epochs over the dynamic engine; verifies
                maximality over the LIVE edge set after every epoch and
                reports spawn-vs-run mutate timings — --no-pool selects the
-               forked per-epoch baseline for comparison)
+               forked per-epoch baseline for comparison. --save FILE writes
+               the warmed engine state as a snapshot at the end; --load
+               FILE restores one instead of running warmup, so a warmed-up
+               workload restarts instantly)
   skipper-cli info
 ";
 
@@ -85,7 +98,19 @@ fn main() {
     let raw: Vec<String> = std::env::args().skip(1).collect();
     let args = match Args::parse(
         raw,
-        &["verify", "conflicts", "sim", "stream", "no-verify", "no-pool", "no-pipeline", "help"],
+        &[
+            "verify",
+            "conflicts",
+            "sim",
+            "stream",
+            "no-verify",
+            "no-pool",
+            "no-pipeline",
+            "no-wal",
+            "fsync",
+            "debug-commands",
+            "help",
+        ],
     ) {
         Ok(a) => a,
         Err(e) => {
@@ -306,9 +331,9 @@ fn cmd_run_stream(
 }
 
 fn run_experiments(ids: &[&str], cfg: &RunConfig) -> Result<(), String> {
-    let needs_metrics = ids
-        .iter()
-        .any(|&id| id != "xla-ems" && id != "stream" && id != "dynamic" && id != "scale");
+    let needs_metrics = ids.iter().any(|&id| {
+        id != "xla-ems" && id != "stream" && id != "dynamic" && id != "scale" && id != "durability"
+    });
     let mut report = Report::new();
     let metrics;
     let cost;
@@ -370,6 +395,12 @@ fn run_experiments(ids: &[&str], cfg: &RunConfig) -> Result<(), String> {
                     .unwrap_or(4);
                 exp::shard_scale(cfg.scale, cfg.threads.min(host))?
             }
+            "durability" => {
+                let host = std::thread::available_parallelism()
+                    .map(|n| n.get())
+                    .unwrap_or(4);
+                exp::durability(cfg.scale, cfg.threads.min(host))?
+            }
             // artifact-dependent: inside a multi-experiment run, skip (with
             // the reason in the report) rather than sinking the whole suite;
             // an explicit `experiment xla-ems` still fails loudly
@@ -392,7 +423,7 @@ fn cmd_experiment(args: &Args) -> Result<(), String> {
     let id = args
         .positional
         .get(1)
-        .ok_or("experiment id required (table1 table2 fig3 fig7 fig8 fig9 fig10 fig11 stream dynamic scale xla-ems)")?;
+        .ok_or("experiment id required (table1 table2 fig3 fig7 fig8 fig9 fig10 fig11 stream dynamic scale durability xla-ems)")?;
     let cfg = load_config(args)?;
     run_experiments(&[id.as_str()], &cfg)
 }
@@ -402,7 +433,7 @@ fn cmd_suite(args: &Args) -> Result<(), String> {
     run_experiments(
         &[
             "table1", "table2", "fig3", "fig7", "fig8", "fig9", "fig10", "fig11", "stream",
-            "dynamic", "scale", "xla-ems",
+            "dynamic", "scale", "durability", "xla-ems",
         ],
         &cfg,
     )
@@ -423,9 +454,20 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
         shard_capacity: args.get_parse("shard-capacity", defaults.shard_capacity)?,
         epoch_max_requests: args.get_parse("epoch-max-requests", defaults.epoch_max_requests)?,
         epoch_max_updates: args.get_parse("epoch-max-updates", defaults.epoch_max_updates)?,
+        data_dir: args.get("data-dir").map(String::from),
+        wal: !args.flag("no-wal"),
+        wal_fsync: args.flag("fsync"),
+        snapshot_every: args.get_parse("snapshot-every", defaults.snapshot_every)?,
+        debug_commands: args.flag("debug-commands"),
+        exit_on_panic: true,
     };
     if cfg.engine_shards == 0 || cfg.epoch_max_updates == 0 || cfg.epoch_max_requests == 0 {
         return Err("--engine-shards/--epoch-max-updates/--epoch-max-requests must be >= 1".into());
+    }
+    if cfg.data_dir.is_none()
+        && (args.flag("no-wal") || args.flag("fsync") || args.get("snapshot-every").is_some())
+    {
+        return Err("--no-wal/--fsync/--snapshot-every require --data-dir".into());
     }
     // P = 1 runs its single shard inline whatever the policy says
     let workers = if cfg.engine_shards == 1 {
@@ -435,8 +477,17 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
     } else {
         "forked"
     };
+    let durability = match &cfg.data_dir {
+        Some(dir) => format!(
+            "; durable in {dir} (wal {}{}, snapshot-every {})",
+            if cfg.wal { "on" } else { "off" },
+            if cfg.wal_fsync { "+fsync" } else { "" },
+            cfg.snapshot_every
+        ),
+        None => String::new(),
+    };
     let mode = format!(
-        "{workers} shard workers, {} coordinator",
+        "{workers} shard workers, {} coordinator{durability}",
         if cfg.pipeline { "pipelined" } else { "inline" }
     );
     let summary = match args.get("tcp") {
@@ -448,12 +499,12 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
         })?,
         None => {
             eprintln!(
-                "serving |V|={} (P={} engine shards; {mode}) on stdin (INSERT/DELETE/QUERY/STATS[ full]/EPOCH; QUIT or EOF to stop)",
+                "serving |V|={} (P={} engine shards; {mode}) on stdin (INSERT/DELETE/QUERY/STATS[ full]/SNAPSHOT/EPOCH; QUIT or EOF to stop)",
                 cfg.num_vertices, cfg.engine_shards
             );
             let stdin = std::io::stdin();
             let mut stdout = std::io::stdout();
-            serve_lines(&cfg, stdin.lock(), &mut stdout)
+            serve_lines(&cfg, stdin.lock(), &mut stdout)?
         }
     };
     eprintln!(
@@ -466,6 +517,12 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
         summary.live_edges,
         summary.maximal
     );
+    if cfg.data_dir.is_some() {
+        eprintln!(
+            "durability: recovery replayed {} wal epochs at boot; {} epochs logged this run; final snapshot at epoch {}",
+            summary.recovery_replayed, summary.wal_epochs, summary.last_snapshot_epoch
+        );
+    }
     if !summary.maximal {
         return Err("final matching failed the live-set maximality audit".into());
     }
@@ -488,6 +545,8 @@ fn cmd_churn(args: &Args) -> Result<(), String> {
         delete_frac: args.get_parse("delete-frac", 0.5f64)?,
         warmup_epochs: args.get_parse("warmup-epochs", 8usize)?,
         verify: !args.flag("no-verify"),
+        save: args.get("save").map(String::from),
+        load: args.get("load").map(String::from),
         ..ChurnConfig::new(gen)
     };
     if !(0.0..=1.0).contains(&cfg.delete_frac) {
@@ -497,13 +556,16 @@ fn cmd_churn(args: &Args) -> Result<(), String> {
         return Err("--engine-shards must be >= 1".into());
     }
     println!(
-        "churn {} |V|={} t={} P={} ({} shard workers): {} warmup epochs, then {} epochs of {} updates ({:.0}% deletes){}",
+        "churn {} |V|={} t={} P={} ({} shard workers): {}, then {} epochs of {} updates ({:.0}% deletes){}",
         gen.name(),
         gen.num_vertices(),
         cfg.threads,
         cfg.engine_shards,
         cfg.shard_exec().name(),
-        cfg.warmup_epochs,
+        match &cfg.load {
+            Some(path) => format!("warm state loaded from {path}"),
+            None => format!("{} warmup epochs", cfg.warmup_epochs),
+        },
         cfg.epochs,
         cfg.batch,
         cfg.delete_frac * 100.0,
@@ -560,6 +622,13 @@ fn cmd_churn(args: &Args) -> Result<(), String> {
         summary.verified_epochs,
         summary.epochs + summary.warmup_epochs,
     );
+    if let Some(path) = &cfg.save {
+        println!(
+            "saved engine state ({} live edges, |M|={}) to {path}",
+            summary.final_live_edges,
+            summary.final_matched_vertices / 2
+        );
+    }
     Ok(())
 }
 

@@ -1,0 +1,442 @@
+//! Durability for the dynamic matching engine: epoch write-ahead log,
+//! snapshots, and crash recovery.
+//!
+//! Skipper's one-byte-per-vertex design makes the engine's durable state
+//! unusually small: the live adjacency, the `partner[]` matching, and the
+//! epoch counter are everything a restart needs — the core's state bytes
+//! are *derived* (a matched vertex is `MCHD`, everything else `ACC` at a
+//! quiescent point), so they are never persisted. Batch-dynamic epochs
+//! (Ghaffari & Trygub, *Parallel Dynamic Maximal Matching*) are the natural
+//! unit of logging, and the external-memory lineage (Birn et al.) shows
+//! matching state streams to disk cheaply; this module combines both:
+//!
+//! * [`wal`] — a length-prefixed, CRC-checked append-only log of epoch
+//!   update batches, with segment rotation and torn-tail truncation on
+//!   open. The service's flusher appends each epoch's updates *before*
+//!   applying them, so every applied epoch is on disk first.
+//! * [`snapshot`] — a binary snapshot of the durable state (vertex
+//!   universe, live edge set, `partner[]` matching), CRC-trailed and
+//!   published atomically via tmp-file + rename, written by a background
+//!   thread from a consistent barrier copy.
+//! * [`recovery`] — the boot path: load the newest valid snapshot, replay
+//!   WAL epochs through the real engine epoch machinery, verify
+//!   maximality, then go live.
+//!
+//! ## Durability invariants
+//!
+//! 1. **WAL-before-apply:** an epoch's updates reach the log (flushed, and
+//!    fsynced under `--fsync`) before the engine applies them. A crash
+//!    between log and apply replays an epoch the pre-crash process never
+//!    finished — identical to the uninterrupted run having applied it.
+//! 2. **Epoch contiguity:** WAL records carry contiguous, strictly
+//!    increasing epoch numbers; recovery refuses a gapped history (replay
+//!    must start at `snapshot_epoch + 1` and step by one) and resumes the
+//!    engine's epoch counter at `max(snapshot_epoch, last WAL epoch)` so
+//!    post-recovery appends stay contiguous across any number of crashes.
+//!    The flip side: a failed WAL append is fatal to the service — an
+//!    applied-but-unlogged epoch would be exactly such a gap.
+//! 3. **Atomic snapshots:** a snapshot file is complete and CRC-valid or
+//!    it does not exist under its final name (tmp + rename); a torn
+//!    snapshot write is invisible to recovery, which falls back to the
+//!    previous one.
+//! 4. **Prune-after-publish, lagged by one:** the newest **two** snapshots
+//!    are retained and WAL segments are deleted only once the
+//!    *predecessor* snapshot covers their last epoch, so both the newest
+//!    snapshot and its fallback reconstruct every applied epoch from the
+//!    remaining WAL.
+//! 5. **Single writer:** a `LOCK` file (PID + liveness check) makes a
+//!    second server on the same data dir fail at boot instead of
+//!    truncating the holder's in-flight WAL record as a torn tail.
+//!
+//! The service wiring (flusher-side logging overlapped with the router
+//! exactly like the epoch pipeline, `SNAPSHOT`/`SHUTDOWN` commands, STATS
+//! durability counters) lives in [`crate::service::server`]; the
+//! architecture chapter is `docs/ARCHITECTURE.md`.
+
+pub mod recovery;
+pub mod snapshot;
+pub mod wal;
+
+use crate::dynamic::{ShardedDynamicMatcher, Update};
+use recovery::RecoveryReport;
+use snapshot::{SnapshotData, SnapshotWriter};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use wal::{Wal, WalOptions};
+
+/// IEEE CRC-32 lookup table, built at compile time (the crate vendors its
+/// own checksum because it is dependency-free).
+const fn crc32_table() -> [u32; 256] {
+    let mut table = [0u32; 256];
+    let mut i = 0;
+    while i < 256 {
+        let mut c = i as u32;
+        let mut k = 0;
+        while k < 8 {
+            c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            k += 1;
+        }
+        table[i] = c;
+        i += 1;
+    }
+    table
+}
+
+static CRC32_TABLE: [u32; 256] = crc32_table();
+
+/// IEEE CRC-32 over `data` — guards every WAL record and snapshot body.
+pub fn crc32(data: &[u8]) -> u32 {
+    let mut c = 0xFFFF_FFFFu32;
+    for &b in data {
+        c = CRC32_TABLE[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+    }
+    c ^ 0xFFFF_FFFF
+}
+
+/// Lifetime durability counters, shared between the flusher (writer), the
+/// background snapshotter, and `STATS` (reader). All relaxed: these are
+/// monitoring counters, not synchronization.
+#[derive(Debug, Default)]
+pub struct DurabilityCounters {
+    /// Epoch records appended to the WAL since boot.
+    pub wal_epochs: AtomicU64,
+    /// Bytes appended to the WAL since boot.
+    pub wal_bytes: AtomicU64,
+    /// Epoch of the newest durably published snapshot (0 = none yet).
+    pub last_snapshot_epoch: AtomicU64,
+    /// WAL epochs replayed by recovery at boot.
+    pub recovery_replayed: AtomicU64,
+}
+
+/// Configuration of one durable service instance (the CLI spellings are
+/// `--data-dir`, `--no-wal`, `--fsync`, `--snapshot-every`).
+#[derive(Clone, Debug)]
+pub struct DurableOptions {
+    /// Root directory holding `wal/` and `snapshots/`.
+    pub data_dir: PathBuf,
+    /// Append epoch batches to the WAL (`--no-wal` disables logging but
+    /// recovery still replays any log found on disk).
+    pub wal: bool,
+    /// `fsync` every WAL append (durable against power loss, not just
+    /// process death).
+    pub fsync: bool,
+    /// Automatically snapshot every this many applied epochs (0 = only on
+    /// `SNAPSHOT` commands and shutdown).
+    pub snapshot_every: u64,
+}
+
+/// Advisory single-writer lock on a data dir: a `LOCK` file holding the
+/// owner's PID, taken with an atomic `create_new` and removed on drop. Two
+/// live servers appending to one WAL would corrupt each other (the second
+/// open truncates the first's in-flight record as a "torn tail"), so a
+/// second opener fails loudly while the holder is alive. A lock naming a
+/// provably dead process (the `kill -9` path, checked via `/proc/<pid>`)
+/// is stolen with a warning; anything short of that proof — a live or
+/// unknown-liveness holder, or an unreadable lock that may belong to a
+/// concurrent booter mid-write — refuses, telling the operator what to
+/// remove if the holder is really gone.
+struct DirLock {
+    path: PathBuf,
+}
+
+/// Is `pid` an existing process? `None` when the platform offers no way
+/// to tell (no `/proc`).
+fn process_alive(pid: u32) -> Option<bool> {
+    let proc_root = Path::new("/proc");
+    if !proc_root.exists() {
+        return None;
+    }
+    Some(proc_root.join(pid.to_string()).exists())
+}
+
+impl DirLock {
+    fn acquire(data_dir: &Path) -> Result<Self, String> {
+        std::fs::create_dir_all(data_dir)
+            .map_err(|e| format!("mkdir {}: {e}", data_dir.display()))?;
+        let path = data_dir.join("LOCK");
+        for attempt in 0..2 {
+            match std::fs::OpenOptions::new().write(true).create_new(true).open(&path) {
+                Ok(mut f) => {
+                    use std::io::Write as _;
+                    let _ = write!(f, "{}", std::process::id());
+                    let _ = f.sync_all();
+                    return Ok(Self { path });
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::AlreadyExists => {
+                    let holder = std::fs::read_to_string(&path)
+                        .ok()
+                        .and_then(|s| s.trim().parse::<u32>().ok());
+                    match holder {
+                        // a lock is stolen ONLY when it names a provably
+                        // dead process; an empty/unreadable lock may be a
+                        // concurrent booter between its create_new and its
+                        // PID write, and stealing it would put two live
+                        // servers on one WAL — refuse and let the operator
+                        // (or the next boot, once the PID lands) decide
+                        Some(pid) if process_alive(pid) == Some(false) => {
+                            if attempt == 0 {
+                                // steal by RENAME, not remove: rename is
+                                // atomic, so of N concurrent booters that
+                                // all observed the dead holder, exactly one
+                                // wins it — the losers' renames fail and
+                                // their retry sees the winner's fresh lock.
+                                // A bare remove here could delete a LOCK the
+                                // winner already re-created (TOCTOU).
+                                let aside =
+                                    data_dir.join(format!("LOCK.stale.{}", std::process::id()));
+                                if std::fs::rename(&path, &aside).is_ok() {
+                                    eprintln!(
+                                        "durability: removing stale lock {} (holder {pid} is gone)",
+                                        path.display()
+                                    );
+                                    let _ = std::fs::remove_file(&aside);
+                                }
+                            }
+                        }
+                        Some(pid) => {
+                            return Err(format!(
+                                "data dir {} is locked by process {pid} ({}); two servers on one WAL would corrupt it — remove {} if that process is really gone",
+                                data_dir.display(),
+                                if process_alive(pid).is_some() { "alive" } else { "liveness unknown on this platform" },
+                                path.display()
+                            ));
+                        }
+                        None => {
+                            return Err(format!(
+                                "data dir {} holds an unreadable lock {} — either another server is booting right now, or a crash left it empty; retry, or remove it if no server is running",
+                                data_dir.display(),
+                                path.display()
+                            ));
+                        }
+                    }
+                }
+                Err(e) => return Err(format!("lock {}: {e}", path.display())),
+            }
+        }
+        Err(format!(
+            "data dir {} lock contended — another server grabbed it first",
+            data_dir.display()
+        ))
+    }
+}
+
+impl Drop for DirLock {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_file(&self.path);
+    }
+}
+
+/// The service-facing durability bundle: recovery at open, WAL appends and
+/// snapshot scheduling per epoch, and the final snapshot at shutdown. Owned
+/// by the service's flush executor, so every call happens at an epoch
+/// barrier — the engine is quiescent whenever state is captured.
+pub struct DurableService {
+    wal: Wal,
+    log_enabled: bool,
+    writer: SnapshotWriter,
+    counters: Arc<DurabilityCounters>,
+    snapshot_every: u64,
+    report: RecoveryReport,
+    /// Newest published snapshot the WAL has already been pruned against.
+    /// Pruning lags one snapshot behind publication so the predecessor
+    /// snapshot stays fully replayable — the corrupt-newest fallback in
+    /// recovery needs the WAL from `predecessor + 1` onward.
+    seen_published: u64,
+    /// Held for the service's lifetime; declared last so it releases only
+    /// after the WAL handle and the snapshot writer have shut down.
+    _lock: DirLock,
+}
+
+impl DurableService {
+    /// Lock `opts.data_dir` (creating it if absent), recover `engine`, and
+    /// open the WAL for appending. On return the engine holds the durable
+    /// state, verified maximal, and the recovery counters are populated.
+    /// Fails if another live server holds the data dir.
+    pub fn open(opts: &DurableOptions, engine: &ShardedDynamicMatcher) -> Result<Self, String> {
+        let lock = DirLock::acquire(&opts.data_dir)?;
+        let counters = Arc::new(DurabilityCounters::default());
+        let wal_opts = WalOptions { fsync: opts.fsync, ..WalOptions::default() };
+        let (wal, report) = recovery::recover(engine, &opts.data_dir, wal_opts)?;
+        counters
+            .recovery_replayed
+            .store(report.replayed_epochs, Ordering::Relaxed);
+        if let Some(e) = report.snapshot_epoch {
+            counters.last_snapshot_epoch.store(e, Ordering::Relaxed);
+        }
+        let writer = SnapshotWriter::spawn(
+            recovery::snapshot_dir(&opts.data_dir),
+            Arc::clone(&counters),
+        );
+        Ok(Self {
+            wal,
+            log_enabled: opts.wal,
+            writer,
+            counters,
+            snapshot_every: opts.snapshot_every,
+            seen_published: report.snapshot_epoch.unwrap_or(0),
+            report,
+            _lock: lock,
+        })
+    }
+
+    /// Is WAL logging active? (Recovery replays an existing log either way;
+    /// this only gates new appends.)
+    #[inline]
+    pub fn log_enabled(&self) -> bool {
+        self.log_enabled
+    }
+
+    /// What recovery did at boot.
+    #[inline]
+    pub fn recovery(&self) -> &RecoveryReport {
+        &self.report
+    }
+
+    /// The shared durability counters (for `STATS`).
+    #[inline]
+    pub fn counters(&self) -> &Arc<DurabilityCounters> {
+        &self.counters
+    }
+
+    /// Append one epoch's update batch to the WAL (no-op when logging is
+    /// disabled). Called by the flusher *before* the epoch is applied.
+    pub fn log_epoch(&mut self, epoch: u64, updates: &[Update]) -> Result<(), String> {
+        if !self.log_enabled || updates.is_empty() {
+            return Ok(());
+        }
+        let bytes = self.wal.append_epoch(epoch, updates)?;
+        self.counters.wal_epochs.fetch_add(1, Ordering::Relaxed);
+        self.counters.wal_bytes.fetch_add(bytes, Ordering::Relaxed);
+        Ok(())
+    }
+
+    /// Is the background snapshot writer mid-write? Callers check this
+    /// before building a barrier copy, so a busy writer costs nothing.
+    pub fn snapshot_busy(&self) -> bool {
+        self.writer.is_busy()
+    }
+
+    /// Post-apply hook: schedule an automatic snapshot when the cadence
+    /// says so, and prune WAL segments — lagging one snapshot behind
+    /// publication, so the retained predecessor snapshot (see
+    /// [`snapshot::prune_keep`]) keeps a fully replayable WAL behind it
+    /// and the corrupt-newest recovery fallback can actually recover.
+    pub fn after_epoch(&mut self, engine: &ShardedDynamicMatcher) {
+        let epoch = engine.epochs_applied();
+        if self.snapshot_every > 0 && epoch % self.snapshot_every == 0 {
+            if self.writer.is_busy() {
+                eprintln!(
+                    "snapshot: writer busy, skipping automatic snapshot at epoch {epoch}"
+                );
+            } else if !self.writer.request(SnapshotData::capture(engine)) {
+                // lost the tiny is_busy/try_send race: same outcome
+                eprintln!(
+                    "snapshot: writer busy, skipping automatic snapshot at epoch {epoch}"
+                );
+            }
+        }
+        let published = self.counters.last_snapshot_epoch.load(Ordering::Relaxed);
+        if published > self.seen_published {
+            let floor = self.seen_published;
+            self.seen_published = published;
+            if floor > 0 {
+                self.wal.prune_below(floor);
+            }
+        }
+    }
+
+    /// Hand a barrier-consistent copy to the background snapshot writer
+    /// (the `SNAPSHOT` command). Returns false when the writer is still
+    /// busy with a previous snapshot (the request is skipped, not queued;
+    /// probe [`snapshot_busy`](Self::snapshot_busy) first to skip the
+    /// capture too).
+    pub fn request_snapshot(&mut self, data: SnapshotData) -> bool {
+        self.writer.request(data)
+    }
+
+    /// Graceful shutdown: write a final snapshot of the engine's current
+    /// state synchronously, then prune the WAL its *predecessor* covers —
+    /// a subsequent boot recovers from the final snapshot alone with zero
+    /// WAL replay (the epochs kept between the two retained snapshots are
+    /// all covered, hence skipped), while a bit-rotted final snapshot can
+    /// still fall back to the predecessor and replay forward.
+    ///
+    /// Returns the epoch of the newest *durably published* snapshot after
+    /// the attempt — normally the final epoch, but the previous one (or 0)
+    /// when the final write failed (e.g. disk full), so callers never
+    /// report a snapshot that does not exist; nothing is pruned in that
+    /// case.
+    pub fn shutdown(mut self, engine: &ShardedDynamicMatcher) -> u64 {
+        let data = SnapshotData::capture(engine);
+        let epoch = data.epoch;
+        let prev = self.counters.last_snapshot_epoch.load(Ordering::Relaxed);
+        self.writer.finish(Some(data));
+        let published = self.counters.last_snapshot_epoch.load(Ordering::Relaxed);
+        if published >= epoch && prev > 0 {
+            self.wal.prune_below(prev);
+        }
+        published
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn crc32_matches_known_vectors() {
+        // standard IEEE CRC-32 check values
+        assert_eq!(crc32(b""), 0);
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b"The quick brown fox jumps over the lazy dog"), 0x414F_A339);
+    }
+
+    #[test]
+    fn data_dir_lock_refuses_second_opener_and_steals_stale_locks() {
+        let dir = std::env::temp_dir().join(format!(
+            "skipper_dirlock_{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        let opts = DurableOptions {
+            data_dir: dir.clone(),
+            wal: true,
+            fsync: false,
+            snapshot_every: 0,
+        };
+        let e1 = ShardedDynamicMatcher::new(8, 1, 1);
+        let d1 = DurableService::open(&opts, &e1).unwrap();
+        // a second live opener must fail loudly, not corrupt the WAL
+        let e2 = ShardedDynamicMatcher::new(8, 1, 1);
+        let err = match DurableService::open(&opts, &e2) {
+            Ok(_) => panic!("second opener must be refused"),
+            Err(e) => e,
+        };
+        assert!(err.contains("locked by process"), "{err}");
+        drop(d1);
+        assert!(!dir.join("LOCK").exists(), "lock released on drop");
+        // a stale lock from a crashed process (dead pid) is stolen — only
+        // checkable where /proc can prove the holder is gone
+        if Path::new("/proc").exists() {
+            std::fs::write(dir.join("LOCK"), format!("{}", u32::MAX)).unwrap();
+            let e3 = ShardedDynamicMatcher::new(8, 1, 1);
+            let d3 = DurableService::open(&opts, &e3).unwrap();
+            drop(d3);
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn crc32_detects_single_bit_flips() {
+        let data = b"epoch 7: INSERT 0 1 DELETE 2 3".to_vec();
+        let base = crc32(&data);
+        for byte in 0..data.len() {
+            for bit in 0..8 {
+                let mut corrupt = data.clone();
+                corrupt[byte] ^= 1 << bit;
+                assert_ne!(crc32(&corrupt), base, "flip at {byte}:{bit} undetected");
+            }
+        }
+    }
+}

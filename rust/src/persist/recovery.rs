@@ -1,0 +1,388 @@
+//! Crash recovery: load the newest valid snapshot, replay the WAL through
+//! the real engine epoch machinery, verify maximality, then go live.
+//!
+//! ## The recovery state machine
+//!
+//! ```text
+//!           ┌────────────┐  none found        ┌──────────────┐
+//!  boot ──▶ │ FindSnap   │──────────────────▶ │ OpenWal      │
+//!           └─────┬──────┘                    │ (torn-tail   │
+//!        newest   │ CRC-valid                 │  truncation) │
+//!        valid    ▼                           └──────┬───────┘
+//!           ┌────────────┐                           │ records
+//!           │ Restore    │  2 engine epochs          ▼
+//!           │ (matching, │─────────────────▶ ┌──────────────┐
+//!           │ then rest) │                   │ ReplayWal    │
+//!           └────────────┘                   │ epoch >      │
+//!                                            │ snap_epoch   │
+//!                                            └──────┬───────┘
+//!                                                   ▼
+//!                                   ┌────────────────────────────┐
+//!                                   │ Verify (maximality audit)  │──▶ Live
+//!                                   └────────────────────────────┘
+//! ```
+//!
+//! ## Why two epochs restore the exact matching
+//!
+//! [`restore_into`] rebuilds the snapshot through ordinary
+//! [`ShardedDynamicMatcher::apply_epoch`] calls — no private state surgery:
+//!
+//! 1. **Epoch A** inserts exactly the snapshot's matched pairs. The pairs
+//!    are endpoint-disjoint, so every edge meets two free (`ACC`) vertices
+//!    and Algorithm 1 matches it *along that edge*, deterministically,
+//!    regardless of thread count or processing order — the rebuilt
+//!    `partner[]` equals the snapshot's.
+//! 2. **Epoch B** inserts the remaining live edges. The snapshot's
+//!    matching was maximal over its live set, so every remaining edge has
+//!    at least one matched endpoint and the insert sweep matches nothing —
+//!    the adjacency fills in, the matching is untouched.
+//!
+//! The core's one-byte states come out right automatically: a vertex is
+//! `MCHD` iff it is matched, which is exactly the state a quiescent engine
+//! would hold — nothing else needs persisting.
+//!
+//! WAL records with `epoch > snapshot_epoch` are then replayed in order
+//! through the same `apply_epoch` path, the engine's epoch counter resumes
+//! at `max(snapshot_epoch, last replayed epoch)` (so post-recovery WAL
+//! appends stay monotone), and a full maximality audit gates going live.
+
+use super::snapshot::{self, SnapshotData};
+use super::wal::{Wal, WalOptions};
+use crate::dynamic::{ShardedDynamicMatcher, Update};
+use std::collections::HashSet;
+use std::path::{Path, PathBuf};
+
+/// The `snapshots/` directory under a service data dir.
+pub fn snapshot_dir(data_dir: &Path) -> PathBuf {
+    data_dir.join("snapshots")
+}
+
+/// The `wal/` directory under a service data dir.
+pub fn wal_dir(data_dir: &Path) -> PathBuf {
+    data_dir.join("wal")
+}
+
+/// What recovery did at boot.
+#[derive(Clone, Debug, Default)]
+pub struct RecoveryReport {
+    /// Epoch of the snapshot restored, if one was found.
+    pub snapshot_epoch: Option<u64>,
+    /// Live edges restored from the snapshot.
+    pub snapshot_live_edges: u64,
+    /// WAL epochs replayed on top of the snapshot.
+    pub replayed_epochs: u64,
+    /// Updates contained in the replayed epochs.
+    pub replayed_updates: u64,
+    /// The epoch counter the engine resumed at.
+    pub resumed_epoch: u64,
+}
+
+/// Rebuild a snapshot's state in `engine` (which must be freshly
+/// constructed over the same vertex universe) through two ordinary engine
+/// epochs — matched pairs first, then the remaining live edges. See the
+/// module docs for why this reproduces the exact `partner[]` assignment.
+pub fn restore_into(
+    engine: &ShardedDynamicMatcher,
+    snap: &SnapshotData,
+) -> Result<(), String> {
+    if snap.num_vertices as usize != engine.num_vertices() {
+        return Err(format!(
+            "snapshot universe |V|={} does not match engine |V|={}",
+            snap.num_vertices,
+            engine.num_vertices()
+        ));
+    }
+    if engine.num_live_edges() != 0 || engine.epochs_applied() != 0 {
+        return Err("snapshot restore requires a fresh engine".into());
+    }
+    if !snap.matching.is_empty() {
+        let pairs: Vec<Update> = snap
+            .matching
+            .iter()
+            .map(|&(u, v)| Update::Insert(u, v))
+            .collect();
+        engine.apply_epoch(&pairs)?;
+    }
+    let matched: HashSet<(u32, u32)> = snap.matching.iter().copied().collect();
+    let rest: Vec<Update> = snap
+        .live_edges
+        .iter()
+        .filter(|e| !matched.contains(e))
+        .map(|&(u, v)| Update::Insert(u, v))
+        .collect();
+    if !rest.is_empty() {
+        engine.apply_epoch(&rest)?;
+    }
+    // cross-check the reconstruction against the snapshot's own counts; a
+    // mismatch means the snapshot was internally inconsistent (e.g. a
+    // non-maximal matching, which epoch B would have extended)
+    if engine.num_live_edges() != snap.live_edges.len() as u64 {
+        return Err(format!(
+            "snapshot restore diverged: {} live edges rebuilt, snapshot holds {}",
+            engine.num_live_edges(),
+            snap.live_edges.len()
+        ));
+    }
+    if engine.matched_vertices() != 2 * snap.matching.len() {
+        return Err(format!(
+            "snapshot restore diverged: {} matched vertices rebuilt, snapshot matching has {} pairs",
+            engine.matched_vertices(),
+            snap.matching.len()
+        ));
+    }
+    debug_assert_eq!(
+        {
+            let mut got = engine.matching_pairs();
+            got.sort_unstable();
+            got
+        },
+        {
+            let mut want = snap.matching.clone();
+            want.sort_unstable();
+            want
+        },
+        "restore must reproduce the snapshot matching exactly"
+    );
+    Ok(())
+}
+
+/// The full boot path over `data_dir`: restore the newest valid snapshot
+/// (if any) into the fresh `engine`, open the WAL (truncating a torn
+/// tail), replay every record newer than the snapshot, resume the epoch
+/// counter, and verify maximality. Returns the opened WAL positioned for
+/// appending plus the report.
+pub fn recover(
+    engine: &ShardedDynamicMatcher,
+    data_dir: &Path,
+    wal_opts: WalOptions,
+) -> Result<(Wal, RecoveryReport), String> {
+    let snap_dir = snapshot_dir(data_dir);
+    std::fs::create_dir_all(&snap_dir)
+        .map_err(|e| format!("mkdir {}: {e}", snap_dir.display()))?;
+    let mut report = RecoveryReport::default();
+
+    // FindSnap → Restore
+    if let Some((path, snap)) = snapshot::load_latest(&snap_dir)? {
+        restore_into(engine, &snap)
+            .map_err(|e| format!("restore {}: {e}", path.display()))?;
+        report.snapshot_epoch = Some(snap.epoch);
+        report.snapshot_live_edges = snap.live_edges.len() as u64;
+    }
+    let snap_epoch = report.snapshot_epoch.unwrap_or(0);
+
+    // OpenWal → ReplayWal. Every applied epoch is logged (WAL-before-
+    // apply), so the replayable epochs are *contiguous* from
+    // `snapshot_epoch + 1`: a gap means history was lost — e.g. the
+    // snapshot that justified pruning those epochs later failed its CRC
+    // and recovery fell back past it — and replaying across it would
+    // silently serve a diverged live set. Refuse instead. Records stream
+    // out of the scan one at a time and are applied immediately (covered
+    // ones, epoch ≤ snapshot, are CRC-validated but never materialized),
+    // so replay memory is one epoch regardless of log length.
+    let mut last_replayed = snap_epoch;
+    let wal = {
+        let report = &mut report;
+        let last_replayed = &mut last_replayed;
+        Wal::open_replaying(&wal_dir(data_dir), wal_opts, snap_epoch, &mut |rec| {
+            if rec.epoch != *last_replayed + 1 {
+                return Err(format!(
+                    "wal epoch {} follows {}: epochs {}..{} are missing (out-of-order or pruned \
+                     alongside a snapshot that no longer loads) — refusing to replay a gapped history",
+                    rec.epoch,
+                    *last_replayed,
+                    *last_replayed + 1,
+                    rec.epoch.saturating_sub(1)
+                ));
+            }
+            engine
+                .apply_epoch(&rec.updates)
+                .map_err(|e| format!("replay wal epoch {}: {e}", rec.epoch))?;
+            report.replayed_epochs += 1;
+            report.replayed_updates += rec.updates.len() as u64;
+            *last_replayed = rec.epoch;
+            Ok(())
+        })?
+    };
+
+    // resume the durable epoch timeline (restore/replay consumed engine
+    // epochs of their own; the durable numbering is what must continue)
+    report.resumed_epoch = last_replayed.max(snap_epoch);
+    engine.set_epoch_base(report.resumed_epoch);
+
+    // Verify → Live
+    engine
+        .verify()
+        .map_err(|e| format!("recovery produced an invalid matching: {e}"))?;
+    Ok((wal, report))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicU64, Ordering};
+
+    static DIR_ID: AtomicU64 = AtomicU64::new(0);
+
+    fn fresh_dir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!(
+            "skipper_recovery_{}_{}_{}",
+            std::process::id(),
+            tag,
+            DIR_ID.fetch_add(1, Ordering::Relaxed)
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    #[test]
+    fn restore_reproduces_the_exact_matching() {
+        // path 0-1-2-3-4 plus an isolated matched pair (6,7): matching
+        // (0,1), (2,3), (6,7); edges (1,2), (3,4) unmatched
+        let snap = SnapshotData {
+            epoch: 42,
+            num_vertices: 8,
+            live_edges: vec![(0, 1), (1, 2), (2, 3), (3, 4), (6, 7)],
+            matching: vec![(0, 1), (2, 3), (6, 7)],
+        };
+        for shards in [1usize, 4] {
+            let engine = ShardedDynamicMatcher::new(8, 2, shards);
+            restore_into(&engine, &snap).unwrap();
+            let mut pairs = engine.matching_pairs();
+            pairs.sort_unstable();
+            assert_eq!(pairs, snap.matching, "P={shards}");
+            assert_eq!(engine.num_live_edges(), 5, "P={shards}");
+            engine.verify().unwrap();
+        }
+    }
+
+    #[test]
+    fn restore_rejects_wrong_universe_and_dirty_engine() {
+        let snap = SnapshotData {
+            epoch: 1,
+            num_vertices: 8,
+            live_edges: vec![(0, 1)],
+            matching: vec![(0, 1)],
+        };
+        let wrong = ShardedDynamicMatcher::new(16, 1, 1);
+        assert!(restore_into(&wrong, &snap).unwrap_err().contains("|V|"));
+        let dirty = ShardedDynamicMatcher::new(8, 1, 1);
+        dirty.apply_epoch(&[Update::Insert(2, 3)]).unwrap();
+        assert!(restore_into(&dirty, &snap).unwrap_err().contains("fresh"));
+    }
+
+    #[test]
+    fn recover_from_empty_dir_is_a_fresh_start() {
+        let dir = fresh_dir("fresh");
+        let engine = ShardedDynamicMatcher::new(8, 1, 1);
+        let (_wal, report) = recover(&engine, &dir, WalOptions::default()).unwrap();
+        assert_eq!(report.snapshot_epoch, None);
+        assert_eq!(report.replayed_epochs, 0);
+        assert_eq!(report.resumed_epoch, 0);
+        assert_eq!(engine.epochs_applied(), 0);
+    }
+
+    #[test]
+    fn recover_replays_wal_on_top_of_snapshot() {
+        let dir = fresh_dir("replay");
+        // first life: snapshot at epoch 2, then two more logged epochs
+        {
+            let engine = ShardedDynamicMatcher::new(16, 1, 4);
+            let (mut wal, _) = recover(&engine, &dir, WalOptions::default()).unwrap();
+            let e1 = vec![Update::Insert(0, 1), Update::Insert(2, 3)];
+            wal.append_epoch(1, &e1).unwrap();
+            engine.apply_epoch(&e1).unwrap();
+            let e2 = vec![Update::Insert(4, 5)];
+            wal.append_epoch(2, &e2).unwrap();
+            engine.apply_epoch(&e2).unwrap();
+            snapshot::write_file(
+                &snapshot_dir(&dir).join(snapshot::file_name(2)),
+                &SnapshotData::capture(&engine),
+            )
+            .unwrap();
+            let e3 = vec![Update::Delete(0, 1), Update::Insert(8, 9)];
+            wal.append_epoch(3, &e3).unwrap();
+            engine.apply_epoch(&e3).unwrap();
+            let e4 = vec![Update::Delete(4, 5)];
+            wal.append_epoch(4, &e4).unwrap();
+            engine.apply_epoch(&e4).unwrap();
+        } // crash: no final snapshot
+        let engine = ShardedDynamicMatcher::new(16, 1, 4);
+        let (_wal, report) = recover(&engine, &dir, WalOptions::default()).unwrap();
+        assert_eq!(report.snapshot_epoch, Some(2));
+        assert_eq!(report.replayed_epochs, 2, "epochs 3 and 4 replayed");
+        assert_eq!(report.resumed_epoch, 4);
+        assert_eq!(engine.epochs_applied(), 4, "counter resumes the timeline");
+        let mut live = engine.live_edges();
+        live.sort_unstable();
+        assert_eq!(live, vec![(2, 3), (8, 9)]);
+        engine.verify().unwrap();
+        // the next life logs epoch 5 without tripping the monotonicity check
+    }
+
+    #[test]
+    fn out_of_order_wal_is_refused() {
+        let dir = fresh_dir("order");
+        {
+            let (mut wal, _) =
+                Wal::open(&wal_dir(&dir), WalOptions::default()).unwrap();
+            wal.append_epoch(3, &[Update::Insert(0, 1)]).unwrap();
+            // bypass the debug assertion by reopening
+            drop(wal);
+            let (mut wal, _) =
+                Wal::open(&wal_dir(&dir), WalOptions { segment_bytes: 1, ..WalOptions::default() })
+                    .unwrap();
+            // segment_bytes=1 forces rotation, so the out-of-order record
+            // lands in a fresh segment and survives the scan
+            wal.append_epoch(2, &[Update::Insert(2, 3)]).unwrap();
+        }
+        let engine = ShardedDynamicMatcher::new(8, 1, 1);
+        let err = match recover(&engine, &dir, WalOptions::default()) {
+            Ok(_) => panic!("out-of-order wal must not recover"),
+            Err(e) => e,
+        };
+        assert!(err.contains("gapped history"), "{err}");
+    }
+
+    #[test]
+    fn gapped_wal_after_a_lost_snapshot_is_refused() {
+        // epochs 1..4 logged and applied, snapshot at 2 published, WAL
+        // segments ≤ 2 pruned — then the snapshot file is lost (the
+        // corrupt-newest fallback scenario): recovery must refuse to
+        // replay 3..4 onto an empty engine rather than serve a state
+        // missing the first two epochs
+        let dir = fresh_dir("lost_snap");
+        {
+            let engine = ShardedDynamicMatcher::new(16, 1, 1);
+            let opts = WalOptions { segment_bytes: 1, ..WalOptions::default() };
+            let (mut wal, _) = Wal::open(&wal_dir(&dir), opts).unwrap();
+            for e in 1..=4u64 {
+                let ups = vec![Update::Insert(2 * e as u32 - 2, 2 * e as u32 - 1)];
+                wal.append_epoch(e, &ups).unwrap();
+                engine.apply_epoch(&ups).unwrap();
+            }
+            let snap_dir = snapshot_dir(&dir);
+            std::fs::create_dir_all(&snap_dir).unwrap();
+            snapshot::write_file(
+                &snap_dir.join(snapshot::file_name(2)),
+                &SnapshotData {
+                    epoch: 2,
+                    num_vertices: 16,
+                    live_edges: vec![(0, 1), (2, 3)],
+                    matching: vec![(0, 1), (2, 3)],
+                },
+            )
+            .unwrap();
+            wal.prune_below(2);
+        }
+        // the snapshot vanishes (corruption fallback / deletion)
+        std::fs::remove_file(snapshot_dir(&dir).join(snapshot::file_name(2))).unwrap();
+        let engine = ShardedDynamicMatcher::new(16, 1, 1);
+        let err = match recover(&engine, &dir, WalOptions::default()) {
+            Ok(_) => panic!("gapped wal must not recover"),
+            Err(e) => e,
+        };
+        assert!(err.contains("missing"), "{err}");
+        // with the snapshot intact the same dir recovers fine
+    }
+}

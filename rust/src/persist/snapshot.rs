@@ -1,0 +1,416 @@
+//! Binary snapshots of the engine's durable state, published atomically
+//! and written by a background thread.
+//!
+//! ## On-disk format (`snap-<epoch:012>.skps`)
+//!
+//! Little-endian throughout, following the [`crate::graph::io::binary`]
+//! conventions (magic, u64 counts, u32 vertex ids):
+//!
+//! ```text
+//! magic "SKPSNAP1"                     (8 bytes)
+//! body:
+//!   epoch: u64 | num_vertices: u64 | live_edges: u64 | matched_pairs: u64
+//!   live_edges × (u: u32, v: u32)        canonical (min, max)
+//!   matched_pairs × (u: u32, v: u32)     canonical (min, max)
+//! crc32(body): u32
+//! ```
+//!
+//! A snapshot is written to `<name>.tmp`, fsynced, then renamed into place:
+//! under its final name a snapshot is either complete and CRC-valid or
+//! absent, so recovery never sees a torn snapshot
+//! ([`load_latest`] additionally skips files whose CRC fails, falling back
+//! to the previous epoch's file).
+//!
+//! The matching is stored alongside the live edge set so
+//! [`crate::persist::recovery::restore_into`] can rebuild the *exact*
+//! pre-crash `partner[]` assignment through ordinary engine epochs — see
+//! that module for why two epochs suffice.
+
+use super::{crc32, DurabilityCounters};
+use crate::dynamic::ShardedDynamicMatcher;
+use crate::VertexId;
+use std::io::Write;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::Ordering;
+use std::sync::mpsc::{sync_channel, SyncSender, TrySendError};
+use std::sync::Arc;
+
+/// Snapshot file magic, first 8 bytes of every `.skps` file.
+pub const SNAPSHOT_MAGIC: &[u8; 8] = b"SKPSNAP1";
+
+/// A barrier-consistent copy of the engine's durable state.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct SnapshotData {
+    /// Engine epoch this state corresponds to.
+    pub epoch: u64,
+    /// Vertex universe size the engine was built with.
+    pub num_vertices: u64,
+    /// The live edge set, canonical `(min, max)` pairs.
+    pub live_edges: Vec<(VertexId, VertexId)>,
+    /// The matching, canonical `(min, max)` pairs (⊆ `live_edges`).
+    pub matching: Vec<(VertexId, VertexId)>,
+}
+
+impl SnapshotData {
+    /// Capture the engine's durable state. Must be called at an epoch
+    /// barrier (no epoch in flight) so the copy is consistent; the
+    /// service's flush executor and the churn driver both satisfy this by
+    /// construction.
+    pub fn capture(engine: &ShardedDynamicMatcher) -> Self {
+        Self {
+            epoch: engine.epochs_applied(),
+            num_vertices: engine.num_vertices() as u64,
+            live_edges: engine.live_edges(),
+            matching: engine.matching_pairs(),
+        }
+    }
+}
+
+fn serialize_body(s: &SnapshotData) -> Vec<u8> {
+    let mut body =
+        Vec::with_capacity(32 + 8 * (s.live_edges.len() + s.matching.len()));
+    body.extend_from_slice(&s.epoch.to_le_bytes());
+    body.extend_from_slice(&s.num_vertices.to_le_bytes());
+    body.extend_from_slice(&(s.live_edges.len() as u64).to_le_bytes());
+    body.extend_from_slice(&(s.matching.len() as u64).to_le_bytes());
+    for &(u, v) in s.live_edges.iter().chain(s.matching.iter()) {
+        body.extend_from_slice(&u.to_le_bytes());
+        body.extend_from_slice(&v.to_le_bytes());
+    }
+    body
+}
+
+/// Write `s` to `path` atomically (tmp + fsync + rename). Returns the
+/// file's size in bytes.
+pub fn write_file(path: &Path, s: &SnapshotData) -> Result<u64, String> {
+    let body = serialize_body(s);
+    let crc = crc32(&body);
+    let tmp = path.with_extension("tmp");
+    {
+        let mut f = std::fs::File::create(&tmp)
+            .map_err(|e| format!("create {}: {e}", tmp.display()))?;
+        f.write_all(SNAPSHOT_MAGIC)
+            .and_then(|_| f.write_all(&body))
+            .and_then(|_| f.write_all(&crc.to_le_bytes()))
+            .and_then(|_| f.sync_all())
+            .map_err(|e| format!("write {}: {e}", tmp.display()))?;
+    }
+    std::fs::rename(&tmp, path)
+        .map_err(|e| format!("rename {} -> {}: {e}", tmp.display(), path.display()))?;
+    // best effort: make the rename itself durable
+    if let Some(dir) = path.parent() {
+        if let Ok(d) = std::fs::File::open(dir) {
+            let _ = d.sync_all();
+        }
+    }
+    Ok(8 + body.len() as u64 + 4)
+}
+
+/// Read and validate the snapshot at `path`.
+pub fn read_file(path: &Path) -> Result<SnapshotData, String> {
+    let bytes =
+        std::fs::read(path).map_err(|e| format!("read {}: {e}", path.display()))?;
+    if bytes.len() < 8 + 32 + 4 || &bytes[0..8] != SNAPSHOT_MAGIC {
+        return Err(format!("{}: not a snapshot file", path.display()));
+    }
+    let body = &bytes[8..bytes.len() - 4];
+    let stored_crc =
+        u32::from_le_bytes(bytes[bytes.len() - 4..].try_into().unwrap());
+    if crc32(body) != stored_crc {
+        return Err(format!("{}: snapshot CRC mismatch", path.display()));
+    }
+    let epoch = u64::from_le_bytes(body[0..8].try_into().unwrap());
+    let num_vertices = u64::from_le_bytes(body[8..16].try_into().unwrap());
+    let m = u64::from_le_bytes(body[16..24].try_into().unwrap()) as usize;
+    let k = u64::from_le_bytes(body[24..32].try_into().unwrap()) as usize;
+    if body.len() != 32 + 8 * (m + k) {
+        return Err(format!("{}: snapshot length inconsistent", path.display()));
+    }
+    let mut pairs = Vec::with_capacity(m + k);
+    for i in 0..m + k {
+        let off = 32 + 8 * i;
+        let u = u32::from_le_bytes(body[off..off + 4].try_into().unwrap());
+        let v = u32::from_le_bytes(body[off + 4..off + 8].try_into().unwrap());
+        pairs.push((u, v));
+    }
+    let matching = pairs.split_off(m);
+    Ok(SnapshotData { epoch, num_vertices, live_edges: pairs, matching })
+}
+
+/// Canonical file name of the snapshot for `epoch`.
+pub fn file_name(epoch: u64) -> String {
+    format!("snap-{epoch:012}.skps")
+}
+
+fn parse_epoch(name: &str) -> Option<u64> {
+    name.strip_prefix("snap-")
+        .and_then(|s| s.strip_suffix(".skps"))
+        .and_then(|s| s.parse::<u64>().ok())
+}
+
+/// Load the newest valid snapshot in `dir`, skipping (with a warning) any
+/// whose CRC or structure fails — a torn or bit-rotted newest file falls
+/// back to its predecessor. `Ok(None)` when the directory holds none.
+pub fn load_latest(dir: &Path) -> Result<Option<(PathBuf, SnapshotData)>, String> {
+    let mut found: Vec<(u64, PathBuf)> = Vec::new();
+    let entries = match std::fs::read_dir(dir) {
+        Ok(e) => e,
+        Err(ref e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(None),
+        Err(e) => return Err(format!("read {}: {e}", dir.display())),
+    };
+    for entry in entries {
+        let entry = entry.map_err(|e| format!("read {}: {e}", dir.display()))?;
+        if let Some(epoch) = parse_epoch(&entry.file_name().to_string_lossy()) {
+            found.push((epoch, entry.path()));
+        }
+    }
+    found.sort_unstable_by(|a, b| b.0.cmp(&a.0));
+    for (_, path) in found {
+        match read_file(&path) {
+            Ok(s) => return Ok(Some((path, s))),
+            Err(e) => eprintln!("snapshot: skipping invalid {e}"),
+        }
+    }
+    Ok(None)
+}
+
+/// Delete all but the `keep` newest snapshots. The writer keeps **two**:
+/// the newest plus its predecessor, so [`load_latest`]'s corrupt-newest
+/// fallback always has somewhere real to land (the WAL pruner lags one
+/// snapshot for the same reason — see
+/// [`crate::persist::DurableService::after_epoch`]).
+pub fn prune_keep(dir: &Path, keep: usize) {
+    let entries = match std::fs::read_dir(dir) {
+        Ok(e) => e,
+        Err(_) => return,
+    };
+    let mut found: Vec<(u64, PathBuf)> = entries
+        .flatten()
+        .filter_map(|e| {
+            parse_epoch(&e.file_name().to_string_lossy()).map(|epoch| (epoch, e.path()))
+        })
+        .collect();
+    found.sort_unstable_by(|a, b| b.0.cmp(&a.0));
+    for (_, path) in found.into_iter().skip(keep) {
+        if let Err(e) = std::fs::remove_file(path) {
+            eprintln!("snapshot prune: {e}");
+        }
+    }
+}
+
+/// Background snapshot writer: serialization and disk IO happen off the
+/// flusher thread, so an automatic snapshot never stalls epoch
+/// application — the flusher only pays for the barrier copy. At most one
+/// snapshot is in flight; a request arriving while one is being written is
+/// skipped (the next cadence point retries with fresher state).
+pub struct SnapshotWriter {
+    tx: Option<SyncSender<SnapshotData>>,
+    handle: Option<std::thread::JoinHandle<()>>,
+    /// True from a successful hand-off until the writer finishes that
+    /// snapshot — lets callers skip the O(|V|+|E|) state capture entirely
+    /// while one is in flight.
+    busy: Arc<std::sync::atomic::AtomicBool>,
+}
+
+impl SnapshotWriter {
+    /// Start the writer thread over `dir`, publishing completion through
+    /// `counters.last_snapshot_epoch` and pruning superseded snapshots
+    /// (keeping the newest two — see [`prune_keep`]).
+    pub fn spawn(dir: PathBuf, counters: Arc<DurabilityCounters>) -> Self {
+        let (tx, rx) = sync_channel::<SnapshotData>(1);
+        let busy = Arc::new(std::sync::atomic::AtomicBool::new(false));
+        let busy_writer = Arc::clone(&busy);
+        let handle = std::thread::Builder::new()
+            .name("skipper-snapshot".into())
+            .spawn(move || {
+                while let Ok(data) = rx.recv() {
+                    let epoch = data.epoch;
+                    let path = dir.join(file_name(epoch));
+                    match write_file(&path, &data) {
+                        Ok(_) => {
+                            counters
+                                .last_snapshot_epoch
+                                .store(epoch, Ordering::Relaxed);
+                            prune_keep(&dir, 2);
+                        }
+                        Err(e) => eprintln!("snapshot: {e}"),
+                    }
+                    busy_writer.store(false, Ordering::Relaxed);
+                }
+            })
+            .expect("spawn snapshot writer");
+        Self { tx: Some(tx), handle: Some(handle), busy }
+    }
+
+    /// Is a snapshot currently being serialized/written? Callers use this
+    /// to avoid capturing a state copy that would only be discarded.
+    pub fn is_busy(&self) -> bool {
+        self.busy.load(Ordering::Relaxed)
+    }
+
+    /// Hand a snapshot to the writer; false when one is already in flight
+    /// (the request is dropped, not queued behind stale state). The busy
+    /// flag is claimed *before* the send — claiming after would race the
+    /// writer's clear and could latch `busy` true forever, silently
+    /// disabling every future snapshot.
+    pub fn request(&self, data: SnapshotData) -> bool {
+        if self.busy.swap(true, Ordering::Relaxed) {
+            return false; // one already in flight
+        }
+        match self.tx.as_ref().expect("writer finished").try_send(data) {
+            Ok(()) => true,
+            Err(TrySendError::Full(_)) | Err(TrySendError::Disconnected(_)) => {
+                self.busy.store(false, Ordering::Relaxed);
+                false
+            }
+        }
+    }
+
+    /// Send an optional final snapshot (blocking until the writer accepts
+    /// it), then drain and join the writer thread. All snapshots handed
+    /// over before this call are durably on disk when it returns.
+    pub fn finish(&mut self, final_data: Option<SnapshotData>) {
+        if let Some(tx) = self.tx.take() {
+            if let Some(data) = final_data {
+                let _ = tx.send(data);
+            }
+            drop(tx); // writer drains the channel and exits
+        }
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for SnapshotWriter {
+    fn drop(&mut self) {
+        self.finish(None);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    static DIR_ID: AtomicU64 = AtomicU64::new(0);
+
+    fn fresh_dir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!(
+            "skipper_snap_{}_{}_{}",
+            std::process::id(),
+            tag,
+            DIR_ID.fetch_add(1, Ordering::Relaxed)
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    fn sample(epoch: u64) -> SnapshotData {
+        SnapshotData {
+            epoch,
+            num_vertices: 16,
+            live_edges: vec![(0, 1), (1, 2), (4, 5)],
+            matching: vec![(0, 1), (4, 5)],
+        }
+    }
+
+    #[test]
+    fn roundtrip_and_no_tmp_left_behind() {
+        let dir = fresh_dir("roundtrip");
+        let path = dir.join(file_name(7));
+        write_file(&path, &sample(7)).unwrap();
+        assert_eq!(read_file(&path).unwrap(), sample(7));
+        let leftovers: Vec<_> = std::fs::read_dir(&dir)
+            .unwrap()
+            .flatten()
+            .filter(|e| e.path().extension().is_some_and(|x| x == "tmp"))
+            .collect();
+        assert!(leftovers.is_empty(), "tmp file survived the rename");
+    }
+
+    #[test]
+    fn corrupt_body_is_rejected() {
+        let dir = fresh_dir("corrupt");
+        let path = dir.join(file_name(3));
+        write_file(&path, &sample(3)).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        bytes[20] ^= 0x01;
+        std::fs::write(&path, &bytes).unwrap();
+        let err = read_file(&path).unwrap_err();
+        assert!(err.contains("CRC"), "{err}");
+    }
+
+    #[test]
+    fn load_latest_falls_back_past_a_corrupt_newest() {
+        let dir = fresh_dir("fallback");
+        write_file(&dir.join(file_name(5)), &sample(5)).unwrap();
+        write_file(&dir.join(file_name(9)), &sample(9)).unwrap();
+        // corrupt the newest: recovery must fall back to epoch 5
+        let newest = dir.join(file_name(9));
+        let mut bytes = std::fs::read(&newest).unwrap();
+        let last = bytes.len() - 1;
+        bytes[last] ^= 0xFF;
+        std::fs::write(&newest, &bytes).unwrap();
+        let (path, data) = load_latest(&dir).unwrap().unwrap();
+        assert_eq!(data.epoch, 5);
+        assert_eq!(path, dir.join(file_name(5)));
+        // empty dir → None
+        let empty = fresh_dir("empty");
+        assert!(load_latest(&empty).unwrap().is_none());
+    }
+
+    #[test]
+    fn prune_keep_retains_newest_and_its_fallback() {
+        let dir = fresh_dir("prune");
+        for e in [2u64, 4, 6] {
+            write_file(&dir.join(file_name(e)), &sample(e)).unwrap();
+        }
+        prune_keep(&dir, 2);
+        let (path, data) = load_latest(&dir).unwrap().unwrap();
+        assert_eq!(data.epoch, 6);
+        assert_eq!(path, dir.join(file_name(6)));
+        assert!(dir.join(file_name(4)).exists(), "predecessor kept for fallback");
+        assert!(!dir.join(file_name(2)).exists(), "older snapshots pruned");
+        // corrupting the newest must still leave a loadable fallback
+        let newest = dir.join(file_name(6));
+        let mut bytes = std::fs::read(&newest).unwrap();
+        let last = bytes.len() - 1;
+        bytes[last] ^= 0xFF;
+        std::fs::write(&newest, &bytes).unwrap();
+        let (_, data) = load_latest(&dir).unwrap().unwrap();
+        assert_eq!(data.epoch, 4);
+    }
+
+    #[test]
+    fn background_writer_publishes_and_prunes() {
+        let dir = fresh_dir("writer");
+        // a stale third snapshot the writer must prune past keep-2
+        write_file(&dir.join(file_name(1)), &sample(1)).unwrap();
+        let counters = Arc::new(DurabilityCounters::default());
+        let mut w = SnapshotWriter::spawn(dir.clone(), Arc::clone(&counters));
+        assert!(w.request(sample(4)));
+        w.finish(Some(sample(8)));
+        assert_eq!(counters.last_snapshot_epoch.load(Ordering::Relaxed), 8);
+        assert!(!w.is_busy(), "writer idle after finish");
+        let (_, data) = load_latest(&dir).unwrap().unwrap();
+        assert_eq!(data.epoch, 8);
+        assert!(dir.join(file_name(4)).exists(), "fallback predecessor kept");
+        assert!(!dir.join(file_name(1)).exists(), "third-newest pruned");
+    }
+
+    #[test]
+    fn empty_state_snapshots_roundtrip() {
+        let dir = fresh_dir("empty_state");
+        let s = SnapshotData {
+            epoch: 0,
+            num_vertices: 8,
+            live_edges: Vec::new(),
+            matching: Vec::new(),
+        };
+        let path = dir.join(file_name(0));
+        write_file(&path, &s).unwrap();
+        assert_eq!(read_file(&path).unwrap(), s);
+    }
+}

@@ -20,8 +20,17 @@
 //!                          audit walks the whole live edge set —
 //!                          O(|V|+|E_live|) on the engine thread — so poll
 //!                          it like a health check, not a metrics scrape
+//! SNAPSHOT                 barrier: flush pending updates, then hand a
+//!                          consistent copy of the durable state to the
+//!                          background snapshot writer (requires
+//!                          --data-dir)
 //! QUIT                     close this connection
-//! SHUTDOWN                 stop the whole server (TCP mode)
+//! SHUTDOWN                 stop the whole server: drain, apply remaining
+//!                          updates, write a final snapshot when
+//!                          durability is on
+//! CRASH [router|flusher]   debug fault injection (requires
+//!                          --debug-commands): panic the named coordinator
+//!                          thread to exercise the panic-exit path
 //! ```
 //!
 //! Every reply is one JSON line with an `"ok"` field, e.g.
@@ -51,10 +60,24 @@ pub enum Command {
         /// Run the full audit walk, not just the cheap counters.
         full: bool,
     },
+    /// Barrier + hand the durable state to the background snapshot writer.
+    Snapshot,
     /// Close this connection.
     Quit,
-    /// Stop the whole server.
+    /// Stop the whole server (graceful drain; final snapshot when durable).
     Shutdown,
+    /// Debug fault injection (gated behind `--debug-commands`): panic the
+    /// named coordinator thread.
+    Crash(CrashTarget),
+}
+
+/// Which coordinator thread a debug `CRASH` command panics.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CrashTarget {
+    /// The request router thread.
+    Router,
+    /// The epoch flusher (inline on the router when pipelining is off).
+    Flusher,
 }
 
 impl Command {
@@ -107,8 +130,21 @@ impl Command {
                     return Err(format!("STATS takes no operand or `full` (got {other:?})"))
                 }
             },
+            "SNAPSHOT" => no_operands(&mut it, "SNAPSHOT", Command::Snapshot)?,
             "QUIT" => no_operands(&mut it, "QUIT", Command::Quit)?,
             "SHUTDOWN" => no_operands(&mut it, "SHUTDOWN", Command::Shutdown)?,
+            "CRASH" => match it.next() {
+                None => Command::Crash(CrashTarget::Router),
+                Some(t) if t.eq_ignore_ascii_case("router") => {
+                    no_operands(&mut it, "CRASH router", Command::Crash(CrashTarget::Router))?
+                }
+                Some(t) if t.eq_ignore_ascii_case("flusher") => {
+                    no_operands(&mut it, "CRASH flusher", Command::Crash(CrashTarget::Flusher))?
+                }
+                Some(other) => {
+                    return Err(format!("CRASH takes `router` or `flusher` (got {other:?})"))
+                }
+            },
             other => return Err(format!("unknown command {other:?}")),
         };
         Ok(Some(cmd))
@@ -243,6 +279,18 @@ pub struct StatsSnapshot {
     /// Portion of [`route_s`](Self::route_s) that overlapped a running
     /// flush — the pipelining win.
     pub route_overlap_s: f64,
+    /// True when the service runs with a `--data-dir` (WAL + snapshots +
+    /// recovery); the durability counters below are 0 otherwise.
+    pub durable: bool,
+    /// Epoch records appended to the WAL since boot.
+    pub wal_epochs: u64,
+    /// Bytes appended to the WAL since boot.
+    pub wal_bytes: u64,
+    /// Epoch of the newest durably published snapshot (0 = none yet).
+    pub last_snapshot_epoch: u64,
+    /// WAL epochs recovery replayed at boot (0 on a fresh start or a clean
+    /// snapshot-only restart).
+    pub recovery_replayed: u64,
 }
 
 /// A reply ready to be rendered onto the wire.
@@ -273,6 +321,19 @@ pub enum Response {
     },
     /// Service counters (and, for `STATS full`, the audit verdict).
     Stats(StatsSnapshot),
+    /// Reply to `SNAPSHOT`: the barrier-consistent state handed to the
+    /// background writer.
+    Snapshot {
+        /// Epoch the snapshot captures.
+        epoch: u64,
+        /// Live undirected edges in the captured state.
+        live_edges: u64,
+        /// Matched vertices in the captured state.
+        matched_vertices: usize,
+        /// False when the writer was still busy with a previous snapshot
+        /// and this request was skipped.
+        accepted: bool,
+    },
     /// Reply to `QUIT`.
     Bye,
     /// Reply to `SHUTDOWN`.
@@ -349,10 +410,23 @@ impl Response {
                     .bool("pooled", s.pooled)
                     .bool("pipelined", s.pipelined)
                     .f64("route_s", s.route_s)
-                    .f64("route_overlap_s", s.route_overlap_s);
+                    .f64("route_overlap_s", s.route_overlap_s)
+                    .bool("durable", s.durable)
+                    .u64("wal_epochs", s.wal_epochs)
+                    .u64("wal_bytes", s.wal_bytes)
+                    .u64("last_snapshot_epoch", s.last_snapshot_epoch)
+                    .u64("recovery_replayed", s.recovery_replayed);
                 if let Some(maximal) = s.maximal {
                     j.bool("maximal", maximal);
                 }
+            }
+            Response::Snapshot { epoch, live_edges, matched_vertices, accepted } => {
+                j.bool("ok", true)
+                    .str("op", "snapshot")
+                    .u64("epoch", *epoch)
+                    .u64("live_edges", *live_edges)
+                    .u64("matched", *matched_vertices as u64)
+                    .bool("accepted", *accepted);
             }
             Response::Bye => {
                 j.bool("ok", true).str("op", "bye");
@@ -408,6 +482,17 @@ mod tests {
         assert!(Command::parse("STATS full now").is_err());
         assert_eq!(Command::parse("QUIT").unwrap(), Some(Command::Quit));
         assert_eq!(Command::parse("SHUTDOWN").unwrap(), Some(Command::Shutdown));
+        assert_eq!(Command::parse("SNAPSHOT").unwrap(), Some(Command::Snapshot));
+        assert!(Command::parse("SNAPSHOT now").is_err());
+        assert_eq!(
+            Command::parse("CRASH").unwrap(),
+            Some(Command::Crash(CrashTarget::Router))
+        );
+        assert_eq!(
+            Command::parse("crash flusher").unwrap(),
+            Some(Command::Crash(CrashTarget::Flusher))
+        );
+        assert!(Command::parse("CRASH engine").is_err());
         assert!(Command::parse("EPOCH now").is_err());
         assert!(Command::parse("QUERY").is_err());
         assert!(Command::parse("FROB 1").is_err());
@@ -461,5 +546,43 @@ mod tests {
         let s = Response::Stats(StatsSnapshot { maximal: None, ..Default::default() }).render();
         assert!(!s.contains("maximal"), "{s}");
         assert!(s.contains(r#""epochs":0"#), "{s}");
+    }
+
+    #[test]
+    fn stats_render_durability_counters() {
+        let s = Response::Stats(StatsSnapshot {
+            durable: true,
+            wal_epochs: 7,
+            wal_bytes: 1234,
+            last_snapshot_epoch: 5,
+            recovery_replayed: 2,
+            ..Default::default()
+        })
+        .render();
+        assert!(s.contains(r#""durable":true"#), "{s}");
+        assert!(s.contains(r#""wal_epochs":7"#), "{s}");
+        assert!(s.contains(r#""wal_bytes":1234"#), "{s}");
+        assert!(s.contains(r#""last_snapshot_epoch":5"#), "{s}");
+        assert!(s.contains(r#""recovery_replayed":2"#), "{s}");
+        // volatile services still render the fields, zeroed, so scrapers
+        // need no schema branch
+        let off = Response::Stats(StatsSnapshot::default()).render();
+        assert!(off.contains(r#""durable":false"#), "{off}");
+        assert!(off.contains(r#""wal_epochs":0"#), "{off}");
+    }
+
+    #[test]
+    fn snapshot_reply_renders() {
+        let r = Response::Snapshot {
+            epoch: 9,
+            live_edges: 42,
+            matched_vertices: 10,
+            accepted: true,
+        }
+        .render();
+        assert_eq!(
+            r,
+            r#"{"ok":true,"op":"snapshot","epoch":9,"live_edges":42,"matched":10,"accepted":true}"#
+        );
     }
 }

@@ -40,14 +40,17 @@
 //!
 //! The wire protocol itself is specified in `docs/PROTOCOL.md`.
 
-use super::protocol::{Command, Response, StatsSnapshot};
+use super::protocol::{Command, CrashTarget, Response, StatsSnapshot};
 use super::{Promise, ShardedQueue};
 use crate::dynamic::{EpochReport, ShardExec, ShardMailboxes, ShardedDynamicMatcher, Update};
 use crate::par::pump::{BoundedQueue, CloseOnDrop};
+use crate::persist::snapshot::SnapshotData;
+use crate::persist::{DurableOptions, DurableService};
 use crate::util::stats::percentile;
 use crate::VertexId;
 use std::io::{BufRead, BufReader, Write};
 use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
@@ -81,6 +84,28 @@ pub struct ServiceConfig {
     /// Coalescing threshold: pending updates are applied as an epoch once
     /// this many accumulate, even without an explicit `EPOCH` barrier.
     pub epoch_max_updates: usize,
+    /// Durability root holding `wal/` and `snapshots/` (`--data-dir`).
+    /// `None` = fully volatile service, no recovery at boot.
+    pub data_dir: Option<String>,
+    /// Append each epoch's update batch to the WAL before applying it
+    /// (default with a data dir; `--no-wal` disables logging — recovery
+    /// still replays whatever log is on disk).
+    pub wal: bool,
+    /// `fsync` every WAL append (`--fsync`): durable against power loss,
+    /// not just process death, at per-epoch fsync cost.
+    pub wal_fsync: bool,
+    /// Automatically snapshot every this many applied epochs
+    /// (`--snapshot-every`; 0 = only on `SNAPSHOT` commands and at
+    /// shutdown).
+    pub snapshot_every: u64,
+    /// Accept the debug fault-injection command `CRASH`
+    /// (`--debug-commands`) — a testing aid, off by default.
+    pub debug_commands: bool,
+    /// When a coordinator (router/flusher) thread panics, print a
+    /// diagnostic and exit the process (code 70) instead of leaving a
+    /// half-dead server with hanging clients. On by default; in-process
+    /// tests disable it to observe the panic directly.
+    pub exit_on_panic: bool,
 }
 
 impl Default for ServiceConfig {
@@ -95,6 +120,12 @@ impl Default for ServiceConfig {
             shard_capacity: 64,
             epoch_max_requests: 256,
             epoch_max_updates: 8192,
+            data_dir: None,
+            wal: true,
+            wal_fsync: false,
+            snapshot_every: 0,
+            debug_commands: false,
+            exit_on_panic: true,
         }
     }
 }
@@ -123,6 +154,14 @@ pub struct ServiceSummary {
     pub matched_vertices: usize,
     /// Final live-set maximality audit.
     pub maximal: bool,
+    /// WAL epochs recovery replayed at boot (0 when volatile or clean).
+    pub recovery_replayed: u64,
+    /// Epoch records appended to the WAL over this run (0 when volatile).
+    pub wal_epochs: u64,
+    /// Epoch of the newest durably published snapshot at shutdown —
+    /// normally the final shutdown snapshot; earlier (or 0) when that
+    /// final write failed, and 0 when volatile.
+    pub last_snapshot_epoch: u64,
 }
 
 enum Request {
@@ -131,7 +170,36 @@ enum Request {
     Query(VertexId, ReplySlot),
     /// `bool`: run the full maximality audit (`STATS full`).
     Stats(bool, ReplySlot),
+    /// Barrier + hand the durable state to the background snapshot writer.
+    Snapshot(ReplySlot),
+    /// Debug fault injection: panic the named coordinator thread.
+    Crash(CrashTarget),
     Shutdown,
+}
+
+/// Escorts a coordinator thread: if the thread unwinds with a panic while
+/// `enabled`, print a diagnostic and exit the whole process — a half-dead
+/// server that accepts connections but never answers is strictly worse
+/// than a visible crash, and `EngineGuard`'s cleanup cannot reach clients
+/// that connect *after* the panic.
+struct ExitOnPanic {
+    role: &'static str,
+    enabled: bool,
+}
+
+/// Exit code used when a coordinator thread dies (EX_SOFTWARE).
+pub const PANIC_EXIT_CODE: i32 = 70;
+
+impl Drop for ExitOnPanic {
+    fn drop(&mut self) {
+        if self.enabled && std::thread::panicking() {
+            eprintln!(
+                "fatal: service {} thread panicked; exiting so clients are not left hanging (panic message above)",
+                self.role
+            );
+            std::process::exit(PANIC_EXIT_CODE);
+        }
+    }
 }
 
 /// The engine's end of a [`Promise`]: guarantees the waiting client wakes
@@ -224,6 +292,10 @@ struct PendingGen {
     /// Enqueue stamps of the update requests coalesced into this
     /// generation, for the batch-latency percentiles.
     stamps: Vec<Instant>,
+    /// The generation's updates in arrival order, kept only when WAL
+    /// logging is on — the flusher writes this flat list (mailboxes
+    /// double-store cross-shard updates and lose the global order).
+    wal_log: Vec<Update>,
     /// Router wall seconds spent routing this generation.
     route_s: f64,
     /// Portion of `route_s` spent while a flush was running — the
@@ -233,7 +305,13 @@ struct PendingGen {
 
 impl PendingGen {
     fn new(mailboxes: ShardMailboxes) -> Self {
-        Self { mailboxes, stamps: Vec::new(), route_s: 0.0, overlap_s: 0.0 }
+        Self {
+            mailboxes,
+            stamps: Vec::new(),
+            wal_log: Vec::new(),
+            route_s: 0.0,
+            overlap_s: 0.0,
+        }
     }
 }
 
@@ -247,6 +325,9 @@ enum FlushJob {
     Epoch(Option<PendingGen>, ReplySlot),
     Query(Option<PendingGen>, VertexId, ReplySlot),
     Stats(Option<PendingGen>, bool, ReplySlot),
+    Snapshot(Option<PendingGen>, ReplySlot),
+    /// Debug fault injection: panic on the flush executor's thread.
+    Crash,
 }
 
 /// The flush executor: owns service telemetry and the latency ring, applies
@@ -261,6 +342,10 @@ struct FlushExec<'a> {
     flushing: &'a AtomicBool,
     /// Drained mailbox generations go back here for the router to reuse.
     spares: &'a BoundedQueue<ShardMailboxes>,
+    /// Durability bundle (WAL + snapshotter + counters); `None` when the
+    /// service runs volatile. Owned here so every append and every state
+    /// capture happens at an epoch barrier on the flush thread.
+    dur: Option<DurableService>,
     tel: Telemetry,
     latencies: LatencyRing,
 }
@@ -271,19 +356,21 @@ impl<'a> FlushExec<'a> {
         engine: &'a ShardedDynamicMatcher,
         flushing: &'a AtomicBool,
         spares: &'a BoundedQueue<ShardMailboxes>,
+        dur: Option<DurableService>,
     ) -> Self {
         Self {
             cfg,
             engine,
             flushing,
             spares,
+            dur,
             tel: Telemetry::default(),
             latencies: LatencyRing::new(),
         }
     }
 
     fn flush(&mut self, gen: PendingGen) -> Option<EpochReport> {
-        let PendingGen { mut mailboxes, mut stamps, route_s, overlap_s } = gen;
+        let PendingGen { mut mailboxes, mut stamps, wal_log, route_s, overlap_s } = gen;
         if mailboxes.is_empty() {
             // unreachable via take_gen (which never yields an empty
             // generation); a future direct caller would silently lose this
@@ -292,9 +379,24 @@ impl<'a> FlushExec<'a> {
             let _ = self.spares.try_push(mailboxes);
             return None;
         }
+        // the overlap-attribution window spans the WHOLE flush — WAL
+        // append (which can dominate under --fsync), engine apply, and the
+        // post-epoch durability work — so the router's concurrent route
+        // time lands in route_overlap_s wherever the flusher actually is
         self.flushing.store(true, Ordering::Relaxed);
+        // WAL-before-apply: the epoch this flush is about to run gets the
+        // number apply_mailboxes will assign (the flusher is the only
+        // epoch applier, so the +1 cannot race). A failed append is fatal:
+        // applying (and barrier-acknowledging) updates the log refused
+        // would hand clients a gapped history after the next crash, so the
+        // durability contract wins over availability — the panic-exit
+        // guard turns this into a diagnosed process exit.
+        if let Some(dur) = self.dur.as_mut() {
+            if let Err(e) = dur.log_epoch(self.engine.epochs_applied() + 1, &wal_log) {
+                panic!("wal: refusing to apply an unlogged epoch: {e}");
+            }
+        }
         let mut report = self.engine.apply_mailboxes(&mut mailboxes);
-        self.flushing.store(false, Ordering::Relaxed);
         report.route_wall_s = route_s;
         report.route_overlap_s = overlap_s;
         let now = Instant::now();
@@ -311,6 +413,11 @@ impl<'a> FlushExec<'a> {
         self.tel.total_route_s += route_s;
         self.tel.total_route_overlap_s += overlap_s;
         self.tel.epochs_with_updates += 1;
+        if let Some(dur) = self.dur.as_mut() {
+            // cadence snapshots + lagged WAL pruning
+            dur.after_epoch(self.engine);
+        }
+        self.flushing.store(false, Ordering::Relaxed);
         Some(report)
     }
 
@@ -348,12 +455,55 @@ impl<'a> FlushExec<'a> {
                     &self.tel,
                     &self.latencies,
                     full,
+                    self.dur.as_ref(),
                 )));
             }
+            FlushJob::Snapshot(gen, p) => {
+                if let Some(g) = gen {
+                    self.flush(g);
+                }
+                p.fulfill(match self.dur.as_mut() {
+                    Some(dur) if dur.snapshot_busy() => {
+                        // a previous snapshot is still being written: reply
+                        // from cheap counters without building the
+                        // O(|V|+|E|) barrier copy that would be discarded
+                        Response::Snapshot {
+                            epoch: self.engine.epochs_applied(),
+                            live_edges: self.engine.num_live_edges(),
+                            matched_vertices: self.engine.matched_vertices(),
+                            accepted: false,
+                        }
+                    }
+                    Some(dur) => {
+                        // capture at the barrier; serialization and disk IO
+                        // happen on the background writer thread
+                        let data = SnapshotData::capture(self.engine);
+                        let epoch = data.epoch;
+                        let live_edges = data.live_edges.len() as u64;
+                        let matched_vertices = 2 * data.matching.len();
+                        let accepted = dur.request_snapshot(data);
+                        Response::Snapshot { epoch, live_edges, matched_vertices, accepted }
+                    }
+                    None => Response::Error(
+                        "durability is off: restart serve with --data-dir".into(),
+                    ),
+                });
+            }
+            FlushJob::Crash => panic!("debug CRASH: deliberate flusher panic"),
         }
     }
 
-    fn summary(self) -> ServiceSummary {
+    fn summary(mut self) -> ServiceSummary {
+        // graceful exit: a final synchronous snapshot makes the next boot a
+        // snapshot-only recovery (zero WAL replay)
+        let mut recovery_replayed = 0;
+        let mut wal_epochs = 0;
+        let mut last_snapshot_epoch = 0;
+        if let Some(dur) = self.dur.take() {
+            recovery_replayed = dur.recovery().replayed_epochs;
+            wal_epochs = dur.counters().wal_epochs.load(Ordering::Relaxed);
+            last_snapshot_epoch = dur.shutdown(self.engine);
+        }
         ServiceSummary {
             epochs: self.engine.epochs_applied(),
             total_inserts: self.tel.total_inserts,
@@ -362,6 +512,9 @@ impl<'a> FlushExec<'a> {
             live_edges: self.engine.num_live_edges(),
             matched_vertices: self.engine.matched_vertices(),
             maximal: self.engine.verify().is_ok(),
+            recovery_replayed,
+            wal_epochs,
+            last_snapshot_epoch,
         }
     }
 }
@@ -394,6 +547,7 @@ const MAILBOX_GENERATIONS: usize = 4;
 /// The request router: drain → route into the current mailbox generation →
 /// hand flush jobs to the sink at barriers, until the queue closes or a
 /// `SHUTDOWN` arrives.
+#[allow(clippy::too_many_arguments)] // one call site, mirrors engine_loop's locals
 fn route_loop(
     cfg: &ServiceConfig,
     engine: &ShardedDynamicMatcher,
@@ -402,6 +556,7 @@ fn route_loop(
     flushing: &AtomicBool,
     spares: &BoundedQueue<ShardMailboxes>,
     sink: &mut FlushSink<'_, '_>,
+    log_wal: bool,
 ) {
     let _guard = EngineGuard { queue, stop };
     let mut buf: Vec<Request> = Vec::new();
@@ -430,6 +585,9 @@ fn route_loop(
         match res {
             Ok(()) => {
                 gen.stamps.push(enqueued);
+                if log_wal {
+                    gen.wal_log.extend_from_slice(updates);
+                }
                 true
             }
             // Connections validate vertex ranges before enqueueing, so the
@@ -473,6 +631,13 @@ fn route_loop(
                 Request::Stats(full, p) => {
                     sink.send(FlushJob::Stats(take_gen(&mut gen), full, p))
                 }
+                Request::Snapshot(p) => {
+                    sink.send(FlushJob::Snapshot(take_gen(&mut gen), p))
+                }
+                Request::Crash(CrashTarget::Router) => {
+                    panic!("debug CRASH: deliberate router panic")
+                }
+                Request::Crash(CrashTarget::Flusher) => sink.send(FlushJob::Crash),
                 Request::Shutdown => {
                     // finish answering the rest of this round first — a
                     // mid-buffer break would strand promises un-fulfilled
@@ -499,9 +664,10 @@ fn route_loop(
                 Request::Updates { updates, enqueued } => {
                     route(&mut gen, &updates, enqueued);
                 }
-                Request::Epoch(p) | Request::Stats(_, p) => {
+                Request::Epoch(p) | Request::Stats(_, p) | Request::Snapshot(p) => {
                     p.fulfill(Response::Error("server shutting down".into()))
                 }
+                Request::Crash(_) => {}
                 Request::Query(v, p) => {
                     // honor the ordering guarantee even during shutdown: the
                     // client's earlier updates (drained just above) must be
@@ -526,12 +692,16 @@ fn engine_loop(
     engine: &ShardedDynamicMatcher,
     queue: &ShardedQueue<Request>,
     stop: &AtomicBool,
+    dur: Option<DurableService>,
 ) -> ServiceSummary {
+    // a router panic must not strand clients on a half-dead server
+    let _router_guard = ExitOnPanic { role: "router", enabled: cfg.exit_on_panic };
+    let log_wal = dur.as_ref().is_some_and(|d| d.log_enabled());
     let flushing = AtomicBool::new(false);
     let spares: BoundedQueue<ShardMailboxes> = BoundedQueue::new(MAILBOX_GENERATIONS);
     if !cfg.pipeline {
-        let mut sink = FlushSink::Inline(FlushExec::new(cfg, engine, &flushing, &spares));
-        route_loop(cfg, engine, queue, stop, &flushing, &spares, &mut sink);
+        let mut sink = FlushSink::Inline(FlushExec::new(cfg, engine, &flushing, &spares, dur));
+        route_loop(cfg, engine, queue, stop, &flushing, &spares, &mut sink, log_wal);
         match sink {
             FlushSink::Inline(ex) => ex.summary(),
             FlushSink::Pipe(_) => unreachable!("inline sink cannot become a pipe"),
@@ -542,20 +712,32 @@ fn engine_loop(
         // the router run unboundedly ahead of the engine
         let jobs: BoundedQueue<FlushJob> = BoundedQueue::new(1);
         std::thread::scope(|s| {
-            let flusher = s.spawn(|| {
-                // closing on exit (including panic) keeps the router from
-                // blocking on a dead flusher; jobs it then fails to send are
-                // dropped, abandoning their promises and waking the waiters
-                let _close = CloseOnDrop(&jobs);
-                let mut ex = FlushExec::new(cfg, engine, &flushing, &spares);
-                while let Some(job) = jobs.pop() {
-                    ex.handle(job);
-                }
-                ex.summary()
-            });
+            // if the router panics mid-loop, this unwinds before the scope
+            // joins the flusher — closing the hand-off so the flusher can't
+            // block forever on an open-but-dead queue (which would deadlock
+            // the join and keep the panic-exit diagnostic from running)
+            let _close_jobs = CloseOnDrop(&jobs);
+            let flusher = {
+                let jobs = &jobs;
+                let flushing = &flushing;
+                let spares = &spares;
+                s.spawn(move || {
+                    let _flusher_guard =
+                        ExitOnPanic { role: "flusher", enabled: cfg.exit_on_panic };
+                    // closing on exit (including panic) keeps the router from
+                    // blocking on a dead flusher; jobs it then fails to send are
+                    // dropped, abandoning their promises and waking the waiters
+                    let _close = CloseOnDrop(jobs);
+                    let mut ex = FlushExec::new(cfg, engine, flushing, spares, dur);
+                    while let Some(job) = jobs.pop() {
+                        ex.handle(job);
+                    }
+                    ex.summary()
+                })
+            };
             {
                 let mut sink = FlushSink::Pipe(&jobs);
-                route_loop(cfg, engine, queue, stop, &flushing, &spares, &mut sink);
+                route_loop(cfg, engine, queue, stop, &flushing, &spares, &mut sink, log_wal);
             }
             jobs.close();
             flusher.join().expect("flusher thread panicked")
@@ -569,7 +751,21 @@ fn snapshot(
     tel: &Telemetry,
     lat: &LatencyRing,
     audit: bool,
+    dur: Option<&DurableService>,
 ) -> StatsSnapshot {
+    let (durable, wal_epochs, wal_bytes, last_snapshot_epoch, recovery_replayed) = match dur {
+        Some(d) => {
+            let c = d.counters();
+            (
+                true,
+                c.wal_epochs.load(Ordering::Relaxed),
+                c.wal_bytes.load(Ordering::Relaxed),
+                c.last_snapshot_epoch.load(Ordering::Relaxed),
+                c.recovery_replayed.load(Ordering::Relaxed),
+            )
+        }
+        None => (false, 0, 0, 0, 0),
+    };
     StatsSnapshot {
         epochs: engine.epochs_applied(),
         live_edges: engine.num_live_edges(),
@@ -596,6 +792,11 @@ fn snapshot(
         pipelined: cfg.pipeline,
         route_s: tel.total_route_s,
         route_overlap_s: tel.total_route_overlap_s,
+        durable,
+        wal_epochs,
+        wal_bytes,
+        last_snapshot_epoch,
+        recovery_replayed,
     }
 }
 
@@ -675,11 +876,12 @@ fn handle_conn<R: BufRead, W: Write>(
                     break;
                 }
             }
-            Command::Epoch | Command::Stats { .. } | Command::Query(_) => {
+            Command::Epoch | Command::Stats { .. } | Command::Query(_) | Command::Snapshot => {
                 let p = Promise::shared();
                 let req = match &cmd {
                     Command::Epoch => Request::Epoch(ReplySlot(Arc::clone(&p))),
                     Command::Stats { full } => Request::Stats(*full, ReplySlot(Arc::clone(&p))),
+                    Command::Snapshot => Request::Snapshot(ReplySlot(Arc::clone(&p))),
                     Command::Query(v) => {
                         if *v as usize >= cfg.num_vertices {
                             let err = format!("vertex {v} out of range (|V|={})", cfg.num_vertices);
@@ -716,6 +918,19 @@ fn handle_conn<R: BufRead, W: Write>(
                     }
                 }
             }
+            Command::Crash(target) => {
+                if !cfg.debug_commands {
+                    if !reply(
+                        writer,
+                        &Response::Error("CRASH requires --debug-commands".into()),
+                    ) {
+                        break;
+                    }
+                    continue;
+                }
+                // no reply on success: the process is about to die by design
+                let _ = queue.push(shard, Request::Crash(target));
+            }
             Command::Quit => {
                 let _ = reply(writer, &Response::Bye);
                 break;
@@ -731,28 +946,64 @@ fn handle_conn<R: BufRead, W: Write>(
     outcome
 }
 
+/// Open the durability bundle when the config names a data dir: recover
+/// the engine (snapshot + WAL replay, verified maximal) and report what
+/// happened on stderr.
+fn open_durability(
+    cfg: &ServiceConfig,
+    engine: &ShardedDynamicMatcher,
+) -> Result<Option<DurableService>, String> {
+    let Some(dir) = &cfg.data_dir else {
+        return Ok(None);
+    };
+    let opts = DurableOptions {
+        data_dir: PathBuf::from(dir),
+        wal: cfg.wal,
+        fsync: cfg.wal_fsync,
+        snapshot_every: cfg.snapshot_every,
+    };
+    let dur = DurableService::open(&opts, engine)?;
+    let r = dur.recovery();
+    eprintln!(
+        "recovery: snapshot epoch {}, replayed {} wal epochs ({} updates); resuming at epoch {} with {} live edges, {} matched",
+        r.snapshot_epoch.map_or("none".to_string(), |e| e.to_string()),
+        r.replayed_epochs,
+        r.replayed_updates,
+        r.resumed_epoch,
+        engine.num_live_edges(),
+        engine.matched_vertices(),
+    );
+    Ok(Some(dur))
+}
+
 /// Serve a single client over any line stream — `skipper-cli serve` on a
 /// stdin pipe, and the CI smoke test. Returns when the stream ends or the
-/// client sends `QUIT`/`SHUTDOWN`.
+/// client sends `QUIT`/`SHUTDOWN`. Errors only at boot (recovery failure);
+/// a durable service writes a final snapshot before returning.
 pub fn serve_lines<R: BufRead, W: Write>(
     cfg: &ServiceConfig,
     reader: R,
     writer: &mut W,
-) -> ServiceSummary {
+) -> Result<ServiceSummary, String> {
     let engine = ShardedDynamicMatcher::with_exec(
         cfg.num_vertices,
         cfg.threads,
         cfg.engine_shards,
         cfg.shard_exec(),
     );
+    let dur = open_durability(cfg, &engine)?;
     let queue: ShardedQueue<Request> = ShardedQueue::new(cfg.shards, cfg.shard_capacity);
     let stop = AtomicBool::new(false);
-    std::thread::scope(|s| {
-        let coordinator = s.spawn(|| engine_loop(cfg, &engine, &queue, &stop));
+    Ok(std::thread::scope(|s| {
+        let engine_ref = &engine;
+        let queue_ref = &queue;
+        let stop_ref = &stop;
+        let coordinator =
+            s.spawn(move || engine_loop(cfg, engine_ref, queue_ref, stop_ref, dur));
         handle_conn(cfg, 0, &engine, &queue, reader, writer);
         queue.close();
         coordinator.join().expect("engine thread panicked")
-    })
+    }))
 }
 
 /// Serve concurrent clients over TCP. Binds `addr` (use port 0 for an
@@ -777,6 +1028,7 @@ pub fn serve_tcp(
         cfg.engine_shards,
         cfg.shard_exec(),
     );
+    let dur = open_durability(cfg, &engine)?;
     let queue: ShardedQueue<Request> = ShardedQueue::new(cfg.shards, cfg.shard_capacity);
     let stop = AtomicBool::new(false);
     // every accepted socket, keyed by connection id, so shutdown can
@@ -787,7 +1039,12 @@ pub fn serve_tcp(
     let open_conns: Mutex<std::collections::HashMap<usize, TcpStream>> =
         Mutex::new(std::collections::HashMap::new());
     let summary = std::thread::scope(|s| {
-        let coordinator = s.spawn(|| engine_loop(cfg, &engine, &queue, &stop));
+        let coordinator = {
+            let engine_ref = &engine;
+            let queue_ref = &queue;
+            let stop_ref = &stop;
+            s.spawn(move || engine_loop(cfg, engine_ref, queue_ref, stop_ref, dur))
+        };
         let mut conn_id = 0usize;
         while !stop.load(Ordering::Relaxed) {
             match listener.accept() {
@@ -860,7 +1117,7 @@ mod tests {
 
     fn drive(cfg: &ServiceConfig, script: &str) -> (Vec<String>, ServiceSummary) {
         let mut out: Vec<u8> = Vec::new();
-        let summary = serve_lines(cfg, script.as_bytes(), &mut out);
+        let summary = serve_lines(cfg, script.as_bytes(), &mut out).unwrap();
         let lines = String::from_utf8(out)
             .unwrap()
             .lines()
@@ -1089,6 +1346,112 @@ QUIT\n";
         assert_eq!(summary.matched_vertices, 4);
         assert!(summary.maximal);
         assert!(summary.epochs >= 1);
+    }
+
+    #[test]
+    fn snapshot_without_data_dir_is_an_error_not_a_crash() {
+        let script = "INSERT 0 1\nSNAPSHOT\nQUERY 0\nQUIT\n";
+        let (lines, summary) = drive(&small_cfg(), script);
+        assert!(lines[1].contains(r#""ok":false"#), "{}", lines[1]);
+        assert!(lines[1].contains("--data-dir"), "{}", lines[1]);
+        // the SNAPSHOT barrier still flushed the insert (read-your-writes
+        // held even through the error reply)
+        assert!(lines[2].contains(r#""matched":true"#), "{}", lines[2]);
+        assert!(summary.maximal);
+        assert_eq!(summary.last_snapshot_epoch, 0);
+        assert_eq!(summary.wal_epochs, 0);
+    }
+
+    #[test]
+    fn crash_without_debug_commands_is_rejected() {
+        let script = "CRASH\nCRASH flusher\nINSERT 0 1\nEPOCH\nQUIT\n";
+        let (lines, summary) = drive(&small_cfg(), script);
+        assert!(lines[0].contains("--debug-commands"), "{}", lines[0]);
+        assert!(lines[1].contains("--debug-commands"), "{}", lines[1]);
+        assert!(lines[3].contains(r#""op":"epoch""#), "{}", lines[3]);
+        assert!(summary.maximal);
+    }
+
+    fn fresh_data_dir(tag: &str) -> String {
+        use std::sync::atomic::AtomicU64;
+        static DIR_ID: AtomicU64 = AtomicU64::new(0);
+        let dir = std::env::temp_dir().join(format!(
+            "skipper_serve_{}_{}_{}",
+            std::process::id(),
+            tag,
+            DIR_ID.fetch_add(1, Ordering::Relaxed)
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        dir.to_string_lossy().into_owned()
+    }
+
+    #[test]
+    fn durable_session_logs_snapshots_and_restarts_clean() {
+        let data_dir = fresh_data_dir("durable");
+        let cfg = ServiceConfig {
+            num_vertices: 32,
+            threads: 1,
+            engine_shards: 2,
+            data_dir: Some(data_dir.clone()),
+            ..Default::default()
+        };
+        // session 1: two epochs, an explicit SNAPSHOT, then EOF (graceful)
+        let script = "\
+INSERT 0 1 1 2 2 3\n\
+EPOCH\n\
+SNAPSHOT\n\
+DELETE 1 2\n\
+EPOCH\n\
+STATS\n\
+QUIT\n";
+        let (lines, summary) = drive(&cfg, script);
+        let snap = lines.iter().find(|l| l.contains(r#""op":"snapshot""#)).unwrap();
+        assert!(snap.contains(r#""epoch":1"#), "{snap}");
+        assert!(snap.contains(r#""accepted":true"#), "{snap}");
+        let stats = lines.iter().find(|l| l.contains(r#""op":"stats""#)).unwrap();
+        assert!(stats.contains(r#""durable":true"#), "{stats}");
+        assert!(stats.contains(r#""wal_epochs":2"#), "{stats}");
+        assert!(stats.contains(r#""recovery_replayed":0"#), "{stats}");
+        assert_eq!(summary.epochs, 2);
+        assert_eq!(summary.wal_epochs, 2);
+        assert_eq!(summary.last_snapshot_epoch, 2, "final snapshot at shutdown");
+        assert_eq!(summary.recovery_replayed, 0);
+
+        // session 2: a clean restart recovers from the final snapshot alone
+        // — zero WAL replay — and the state is intact
+        let (lines, summary) = drive(&cfg, "STATS full\nQUERY 0\nQUIT\n");
+        let stats = &lines[0];
+        assert!(stats.contains(r#""epochs":2"#), "epoch timeline resumes: {stats}");
+        assert!(stats.contains(r#""live_edges":2"#), "{stats}");
+        assert!(stats.contains(r#""recovery_replayed":0"#), "{stats}");
+        assert!(stats.contains(r#""last_snapshot_epoch":2"#), "{stats}");
+        assert!(stats.contains(r#""maximal":true"#), "{stats}");
+        // with threads=1 the first epoch matched (0,1) and (2,3); deleting
+        // the unmatched (1,2) left the matching intact, and the restore
+        // path reproduces it exactly
+        assert!(lines[1].contains(r#""partner":1"#), "{}", lines[1]);
+        assert_eq!(summary.epochs, 2);
+        assert!(summary.maximal);
+    }
+
+    #[test]
+    fn wal_off_durable_service_still_snapshots_at_shutdown() {
+        let data_dir = fresh_data_dir("no_wal");
+        let cfg = ServiceConfig {
+            num_vertices: 16,
+            threads: 1,
+            data_dir: Some(data_dir.clone()),
+            wal: false,
+            ..Default::default()
+        };
+        let (lines, summary) = drive(&cfg, "INSERT 0 1\nEPOCH\nSTATS\nQUIT\n");
+        let stats = lines.iter().find(|l| l.contains(r#""op":"stats""#)).unwrap();
+        assert!(stats.contains(r#""durable":true"#), "{stats}");
+        assert!(stats.contains(r#""wal_epochs":0"#), "no logging: {stats}");
+        assert_eq!(summary.last_snapshot_epoch, 1);
+        // restart: the shutdown snapshot alone carries the state
+        let (lines, _) = drive(&cfg, "QUERY 0\nQUIT\n");
+        assert!(lines[0].contains(r#""matched":true"#), "{}", lines[0]);
     }
 
     #[test]

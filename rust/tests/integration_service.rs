@@ -1,0 +1,178 @@
+//! Whole-process service tests, driving the real `skipper-cli` binary:
+//! coordinator-panic containment (a router/flusher panic must exit the
+//! process with a diagnostic instead of leaving clients hanging) and the
+//! `kill -9` → restart → recovery path the durability subsystem exists
+//! for. Everything runs over stdio pipes, so no sockets are needed.
+
+use std::io::{BufRead, BufReader, Write};
+use std::process::{Child, Command, Stdio};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::{Duration, Instant};
+
+fn bin() -> &'static str {
+    env!("CARGO_BIN_EXE_skipper-cli")
+}
+
+static DIR_ID: AtomicU64 = AtomicU64::new(0);
+
+fn fresh_dir(tag: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!(
+        "skipper_itest_{}_{}_{}",
+        std::process::id(),
+        tag,
+        DIR_ID.fetch_add(1, Ordering::Relaxed)
+    ));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+/// Wait for the child to exit, failing the test instead of hanging forever.
+fn wait_with_timeout(child: &mut Child, secs: u64) -> std::process::ExitStatus {
+    let deadline = Instant::now() + Duration::from_secs(secs);
+    loop {
+        if let Some(status) = child.try_wait().expect("try_wait") {
+            return status;
+        }
+        if Instant::now() >= deadline {
+            let _ = child.kill();
+            panic!("server did not exit within {secs}s");
+        }
+        std::thread::sleep(Duration::from_millis(25));
+    }
+}
+
+fn spawn_serve(args: &[&str]) -> Child {
+    Command::new(bin())
+        .arg("serve")
+        .args(args)
+        .stdin(Stdio::piped())
+        .stdout(Stdio::piped())
+        .stderr(Stdio::piped())
+        .spawn()
+        .expect("spawn skipper-cli serve")
+}
+
+/// A coordinator-thread panic must become a prompt, diagnosed process exit
+/// (code 70) — not a hung server. Covers the router and, separately, the
+/// flusher (which runs on its own thread under the default pipelining).
+#[test]
+fn coordinator_panic_exits_the_process_with_a_diagnostic() {
+    for target in ["router", "flusher"] {
+        let mut child = spawn_serve(&["--vertices", "64", "--debug-commands"]);
+        {
+            let stdin = child.stdin.as_mut().unwrap();
+            // a real update first, so the panic hits a live coordinator
+            writeln!(stdin, "INSERT 0 1").unwrap();
+            writeln!(stdin, "CRASH {target}").unwrap();
+            stdin.flush().unwrap();
+            // keep stdin OPEN: an EOF would be a normal shutdown and mask
+            // a server that ignored the crash
+        }
+        let status = wait_with_timeout(&mut child, 30);
+        assert_eq!(status.code(), Some(70), "{target}: wrong exit code");
+        let mut stderr = String::new();
+        std::io::Read::read_to_string(child.stderr.as_mut().unwrap(), &mut stderr).unwrap();
+        assert!(
+            stderr.contains(&format!("service {target} thread panicked")),
+            "{target}: missing diagnostic in stderr:\n{stderr}"
+        );
+        assert!(
+            stderr.contains("deliberate"),
+            "{target}: original panic message not surfaced:\n{stderr}"
+        );
+    }
+}
+
+/// Without `--debug-commands`, `CRASH` is refused and the server lives on.
+#[test]
+fn crash_command_requires_the_debug_flag() {
+    let mut child = spawn_serve(&["--vertices", "16"]);
+    {
+        let stdin = child.stdin.as_mut().unwrap();
+        writeln!(stdin, "CRASH router").unwrap();
+        writeln!(stdin, "QUIT").unwrap();
+        stdin.flush().unwrap();
+    }
+    let status = wait_with_timeout(&mut child, 30);
+    assert!(status.success(), "server must survive a refused CRASH");
+    let mut out = String::new();
+    std::io::Read::read_to_string(child.stdout.as_mut().unwrap(), &mut out).unwrap();
+    assert!(out.contains("--debug-commands"), "{out}");
+}
+
+/// The acceptance crash: SIGKILL the server mid-stream (after confirmed
+/// epoch replies, so the WAL provably holds them), restart over the same
+/// data dir, and check that recovery replayed every epoch and the state is
+/// exactly right.
+#[test]
+fn kill_dash_nine_then_restart_replays_the_wal() {
+    let dir = fresh_dir("kill9");
+    let dir_s = dir.to_string_lossy().into_owned();
+    let mut child = spawn_serve(&["--vertices", "256", "--threads", "1", "--data-dir", &dir_s]);
+    {
+        let stdin = child.stdin.as_mut().unwrap();
+        write!(
+            stdin,
+            "INSERT 0 1 2 3\nEPOCH\nINSERT 4 5\nEPOCH\nDELETE 0 1\nEPOCH\n"
+        )
+        .unwrap();
+        stdin.flush().unwrap();
+    }
+    // read replies until all 3 epoch reports arrived: each one means the
+    // epoch was logged (WAL-before-apply) AND applied
+    {
+        let stdout = child.stdout.as_mut().unwrap();
+        let reader = BufReader::new(stdout);
+        let mut epochs_seen = 0;
+        for line in reader.lines() {
+            let line = line.expect("server stdout");
+            if line.contains(r#""op":"epoch""#) {
+                epochs_seen += 1;
+                if epochs_seen == 3 {
+                    break;
+                }
+            }
+        }
+        assert_eq!(epochs_seen, 3, "server died before the crash point");
+    }
+    child.kill().expect("SIGKILL"); // kill -9: no shutdown, no final snapshot
+    let _ = child.wait();
+
+    // restart over the same data dir and interrogate the recovered state
+    let output = Command::new(bin())
+        .args(["serve", "--vertices", "256", "--threads", "1", "--data-dir", &dir_s])
+        .stdin(Stdio::piped())
+        .stdout(Stdio::piped())
+        .stderr(Stdio::piped())
+        .spawn()
+        .and_then(|mut c| {
+            c.stdin
+                .as_mut()
+                .unwrap()
+                .write_all(b"STATS full\nQUERY 4\nQUERY 0\nQUIT\n")?;
+            c.wait_with_output()
+        })
+        .expect("restart skipper-cli serve");
+    assert!(output.status.success(), "restart failed: {output:?}");
+    let stdout = String::from_utf8_lossy(&output.stdout);
+    let stderr = String::from_utf8_lossy(&output.stderr);
+    let stats = stdout
+        .lines()
+        .find(|l| l.contains(r#""op":"stats""#))
+        .unwrap_or_else(|| panic!("no stats line in:\n{stdout}"));
+    assert!(stats.contains(r#""recovery_replayed":3"#), "{stats}");
+    assert!(stats.contains(r#""epochs":3"#), "timeline resumes: {stats}");
+    assert!(stats.contains(r#""live_edges":2"#), "{stats}");
+    assert!(stats.contains(r#""maximal":true"#), "{stats}");
+    // epoch 1 matched (0,1) and (2,3); epoch 2 matched (4,5); epoch 3
+    // deleted (0,1), freeing 0 and 1 with no surviving edges to repair
+    let q4 = stdout.lines().find(|l| l.contains(r#""vertex":4"#)).unwrap();
+    assert!(q4.contains(r#""partner":5"#), "{q4}");
+    let q0 = stdout.lines().find(|l| l.contains(r#""vertex":0"#)).unwrap();
+    assert!(q0.contains(r#""matched":false"#), "{q0}");
+    assert!(
+        stderr.contains("replayed 3 wal epochs"),
+        "recovery report missing:\n{stderr}"
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}

@@ -144,6 +144,85 @@ fn prop_to_edge_list_canonical_and_complete() {
 }
 
 #[test]
+fn prop_binary_roundtrip_across_all_generator_families() {
+    // the snapshot encoding of the persistence layer rests on the `.skg`
+    // conventions, so the binary round-trip must hold for every generator
+    // family the suite (and the churn driver) can produce — not just the
+    // uniform random edge lists above
+    use skipper::graph::gen::{
+        barabasi_albert, erdos_renyi, grid, hostweb, knn_overlap, rmat, watts_strogatz,
+        GenConfig,
+    };
+    let roundtrip = |g: &CsrGraph| -> Result<(), String> {
+        let mut buf = Vec::new();
+        binary::write(&mut buf, g).map_err(|e| e.to_string())?;
+        let back = binary::read(&buf[..]).map_err(|e| e.to_string())?;
+        if &back != g {
+            return Err("binary roundtrip mismatch".into());
+        }
+        Ok(())
+    };
+    check(
+        &cfg(0x6708),
+        |rng| {
+            let seed = rng.next_u64();
+            match rng.next_usize(7) {
+                0 => {
+                    let n = 8 + rng.next_usize(200);
+                    ("er", erdos_renyi::generate(n, 2 * n + rng.next_usize(4 * n), seed))
+                }
+                1 => {
+                    let n = 8 + rng.next_usize(200);
+                    ("ba", barabasi_albert::generate(n, 1 + rng.next_usize(4), seed))
+                }
+                2 => ("grid", grid::generate(
+                    2 + rng.next_usize(16),
+                    2 + rng.next_usize(16),
+                    rng.next_usize(2) == 0,
+                )),
+                3 => ("rmat", rmat::generate(&GenConfig {
+                    scale: 4 + rng.next_usize(5) as u32,
+                    avg_degree: 1 + rng.next_usize(8) as u32,
+                    seed,
+                })),
+                4 => {
+                    let k = 1 + rng.next_usize(4);
+                    ("ws", watts_strogatz::generate(&watts_strogatz::WsConfig {
+                        n: 2 * k + 2 + rng.next_usize(150),
+                        k,
+                        beta: rng.next_usize(100) as f64 / 100.0,
+                        seed,
+                    }))
+                }
+                5 => ("knn", knn_overlap::generate(&knn_overlap::KnnConfig {
+                    n: 8 + rng.next_usize(200),
+                    k: 1 + rng.next_usize(5) as u32,
+                    window: 2 + rng.next_usize(20),
+                    long_range_p: rng.next_usize(100) as f64 / 200.0,
+                    seed,
+                })),
+                _ => ("hostweb", hostweb::generate(&hostweb::HostWebConfig {
+                    num_hosts: 1 + rng.next_usize(8),
+                    vertices_per_host: 2 + rng.next_usize(24),
+                    intra_degree: 1 + rng.next_usize(4) as u32,
+                    inter_degree: rng.next_usize(4) as u32,
+                    seed,
+                })),
+            }
+        },
+        |(family, g)| roundtrip(g).map_err(|e| format!("{family}: {e}")),
+    );
+    // the degenerate graphs every encoder forgets: empty, edgeless, and a
+    // single edge
+    let empty = CsrGraph::from_parts(vec![0], vec![]).unwrap();
+    roundtrip(&empty).unwrap();
+    let edgeless = CsrGraph::from_parts(vec![0, 0, 0, 0], vec![]).unwrap();
+    roundtrip(&edgeless).unwrap();
+    let single = CsrGraph::from_parts(vec![0, 1, 2], vec![1, 0]).unwrap();
+    roundtrip(&single).unwrap();
+}
+
+#[test]
 fn prop_csr_from_parts_validates_random_corruption() {
     // corrupting a valid CSR is caught by from_parts
     check(&cfg(0x6707), arb_edge_list, |el| {

@@ -1,0 +1,308 @@
+//! Kill-and-restart property tests for the durability subsystem.
+//!
+//! For random churn schedules at `engine_shards ∈ {1, 4}`:
+//!
+//! * a **durable run** applies each epoch after logging it to the WAL
+//!   (optionally snapshotting mid-schedule), then "crashes" after an
+//!   arbitrary epoch — everything is dropped with no shutdown ceremony;
+//! * **recovery** into a fresh engine (newest snapshot + WAL replay) must
+//!   yield a live-edge set *identical* to the uninterrupted run's at the
+//!   crash point, a matching the HashSet live-graph model confirms
+//!   maximal, and the epoch counter resumed at the crash epoch;
+//! * additionally, a random **torn tail** chopped off the WAL must recover
+//!   to exactly the live set of some epoch prefix (records are the unit of
+//!   atomicity — never half an epoch).
+//!
+//! The service-level guarantee rides on top: a `serve_lines` session with
+//! `--data-dir` that ends gracefully (SHUTDOWN/EOF) writes a final
+//! snapshot, and the restarted service recovers from the snapshot alone —
+//! zero WAL replay — with the exact matching intact. The real `kill -9`
+//! path is exercised end-to-end in `integration_service.rs` and the CI
+//! crash-recovery smoke.
+
+use skipper::dynamic::{ShardedDynamicMatcher, Update};
+use skipper::matching::verify::verify_maximal_dynamic;
+use skipper::persist::recovery;
+use skipper::persist::snapshot::{self, SnapshotData};
+use skipper::persist::wal::{Wal, WalOptions};
+use skipper::service::{serve_lines, ServiceConfig};
+use skipper::util::qcheck::{check, Config};
+use skipper::util::rng::Xoshiro256pp;
+use skipper::VertexId;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+static DIR_ID: AtomicU64 = AtomicU64::new(0);
+
+fn fresh_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!(
+        "skipper_prop_persist_{}_{}_{}",
+        std::process::id(),
+        tag,
+        DIR_ID.fetch_add(1, Ordering::Relaxed)
+    ));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// A concrete random schedule: per-epoch update batches plus the model's
+/// live-edge set after each epoch (maintained with disjoint live/pool/dead
+/// vectors, so the model is trivially exact).
+#[derive(Clone, Debug)]
+struct Schedule {
+    n: usize,
+    epochs: Vec<Vec<Update>>,
+    live_after: Vec<Vec<(VertexId, VertexId)>>,
+    /// Crash after this many epochs (1-based count, ≤ epochs.len()).
+    crash_after: usize,
+    /// Snapshot after this epoch index (0-based), if any.
+    snapshot_after: Option<usize>,
+}
+
+fn arb_schedule(rng: &mut Xoshiro256pp) -> Schedule {
+    let n = 16 + rng.next_usize(180);
+    let num_epochs = 2 + rng.next_usize(8);
+    let batch = 4 + rng.next_usize(60);
+    let mut pool: Vec<(VertexId, VertexId)> = Vec::new();
+    for u in 0..n as VertexId {
+        for _ in 0..3 {
+            let v = rng.next_usize(n) as VertexId;
+            if u != v {
+                let e = (u.min(v), u.max(v));
+                if !pool.contains(&e) {
+                    pool.push(e);
+                }
+            }
+        }
+    }
+    rng.shuffle(&mut pool);
+    let mut live: Vec<(VertexId, VertexId)> = Vec::new();
+    let mut dead: Vec<(VertexId, VertexId)> = Vec::new();
+    let mut epochs = Vec::new();
+    let mut live_after = Vec::new();
+    for _ in 0..num_epochs {
+        let mut ups = Vec::with_capacity(batch);
+        for _ in 0..batch {
+            let deleting = !live.is_empty() && rng.next_usize(100) < 40;
+            if deleting {
+                let i = rng.next_usize(live.len());
+                let (u, v) = live.swap_remove(i);
+                dead.push((u, v));
+                ups.push(Update::Delete(u, v));
+            } else {
+                if pool.is_empty() {
+                    pool.append(&mut dead);
+                    rng.shuffle(&mut pool);
+                }
+                match pool.pop() {
+                    Some((u, v)) => {
+                        live.push((u, v));
+                        ups.push(Update::Insert(u, v));
+                    }
+                    None => break,
+                }
+            }
+        }
+        epochs.push(ups);
+        let mut snap = live.clone();
+        snap.sort_unstable();
+        live_after.push(snap);
+    }
+    let crash_after = 1 + rng.next_usize(epochs.len());
+    let snapshot_after = if rng.next_usize(2) == 0 {
+        Some(rng.next_usize(crash_after))
+    } else {
+        None
+    };
+    Schedule { n, epochs, live_after, crash_after, snapshot_after }
+}
+
+/// Run the durable life up to the crash point, then recover and check the
+/// acceptance properties at one shard count.
+fn crash_and_recover(s: &Schedule, shards: usize) -> Result<(), String> {
+    let tag = |m: String| format!("P={shards}: {m}");
+    let dir = fresh_dir("crash");
+
+    // --- durable life: log each epoch, apply it, maybe snapshot ---------
+    {
+        let engine = ShardedDynamicMatcher::new(s.n, 2, shards);
+        let (mut wal, existing) =
+            Wal::open(&recovery::wal_dir(&dir), WalOptions::default())
+                .map_err(&tag)?;
+        if !existing.is_empty() {
+            return Err(tag("fresh wal dir not empty".into()));
+        }
+        for (i, ups) in s.epochs.iter().take(s.crash_after).enumerate() {
+            wal.append_epoch(i as u64 + 1, ups).map_err(&tag)?;
+            engine.apply_epoch(ups).map_err(&tag)?;
+            if s.snapshot_after == Some(i) {
+                let snap_dir = recovery::snapshot_dir(&dir);
+                std::fs::create_dir_all(&snap_dir).map_err(|e| tag(e.to_string()))?;
+                let data = SnapshotData::capture(&engine);
+                snapshot::write_file(
+                    &snap_dir.join(snapshot::file_name(data.epoch)),
+                    &data,
+                )
+                .map_err(&tag)?;
+            }
+        }
+    } // crash: wal and engine dropped cold, no final snapshot
+
+    // --- recovery --------------------------------------------------------
+    let recovered = ShardedDynamicMatcher::new(s.n, 2, shards);
+    let (_wal, report) =
+        recovery::recover(&recovered, &dir, WalOptions::default()).map_err(&tag)?;
+
+    let model = &s.live_after[s.crash_after - 1];
+    let mut got = recovered.live_edges();
+    got.sort_unstable();
+    if &got != model {
+        return Err(tag(format!(
+            "live set diverged after recovery: {} edges vs model {}",
+            got.len(),
+            model.len()
+        )));
+    }
+    verify_maximal_dynamic(s.n, model.iter().copied(), &recovered.matching_pairs())
+        .map_err(|e| tag(format!("recovered matching not maximal: {e}")))?;
+    if recovered.epochs_applied() != s.crash_after as u64 {
+        return Err(tag(format!(
+            "epoch counter resumed at {} instead of {}",
+            recovered.epochs_applied(),
+            s.crash_after
+        )));
+    }
+    let snap_epoch = s.snapshot_after.map(|i| i as u64 + 1).unwrap_or(0);
+    let expect_replayed = s.crash_after as u64 - snap_epoch;
+    if report.replayed_epochs != expect_replayed {
+        return Err(tag(format!(
+            "replayed {} epochs, expected {} (snapshot at {})",
+            report.replayed_epochs, expect_replayed, snap_epoch
+        )));
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+    Ok(())
+}
+
+#[test]
+fn crash_after_arbitrary_epoch_recovers_the_exact_live_set() {
+    check(
+        &Config { cases: 25, seed: 0xD15C, max_shrink_steps: 0 },
+        arb_schedule,
+        |s| {
+            for shards in [1usize, 4] {
+                crash_and_recover(s, shards)?;
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn torn_wal_tail_recovers_an_epoch_prefix() {
+    // chop random byte counts off the WAL tail: recovery must come up on
+    // exactly the live set of SOME epoch prefix — records are atomic
+    let mut rng = Xoshiro256pp::new(0x7EA4);
+    for case in 0..8 {
+        let s = arb_schedule(&mut rng);
+        let dir = fresh_dir("torn");
+        {
+            let engine = ShardedDynamicMatcher::new(s.n, 2, 4);
+            let (mut wal, _) =
+                Wal::open(&recovery::wal_dir(&dir), WalOptions::default()).unwrap();
+            for (i, ups) in s.epochs.iter().enumerate() {
+                wal.append_epoch(i as u64 + 1, ups).unwrap();
+                engine.apply_epoch(ups).unwrap();
+            }
+        }
+        // tear the tail: the wal dir holds exactly one segment here
+        let seg = std::fs::read_dir(recovery::wal_dir(&dir))
+            .unwrap()
+            .flatten()
+            .find(|e| e.file_name().to_string_lossy().starts_with("wal-"))
+            .unwrap()
+            .path();
+        let len = std::fs::metadata(&seg).unwrap().len();
+        let cut = 9 + rng.next_usize((len as usize).saturating_sub(9));
+        let f = std::fs::OpenOptions::new().write(true).open(&seg).unwrap();
+        f.set_len(len - cut as u64).unwrap();
+        drop(f);
+
+        let recovered = ShardedDynamicMatcher::new(s.n, 2, 4);
+        let (_, report) =
+            recovery::recover(&recovered, &dir, WalOptions::default()).unwrap();
+        let k = report.replayed_epochs as usize;
+        assert!(k < s.epochs.len(), "case {case}: a real tear dropped ≥1 epoch");
+        let mut got = recovered.live_edges();
+        got.sort_unstable();
+        if k == 0 {
+            assert!(got.is_empty(), "case {case}");
+        } else {
+            assert_eq!(got, s.live_after[k - 1], "case {case}: prefix of {k} epochs");
+            verify_maximal_dynamic(s.n, got.iter().copied(), &recovered.matching_pairs())
+                .unwrap();
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}
+
+/// SHUTDOWN-then-restart through the real service: the final snapshot
+/// alone carries the state — zero WAL replay — and the exact matching
+/// survives the restart.
+#[test]
+fn service_shutdown_then_restart_recovers_from_snapshot_alone() {
+    for shards in [1usize, 4] {
+        let dir = fresh_dir("service");
+        let cfg = ServiceConfig {
+            num_vertices: 64,
+            threads: 1,
+            engine_shards: shards,
+            data_dir: Some(dir.to_string_lossy().into_owned()),
+            ..Default::default()
+        };
+        // session 1: mixed epochs, ends with SHUTDOWN (graceful drain)
+        let script = "\
+INSERT 0 1 1 2 2 3 3 4 10 11 40 41\n\
+EPOCH\n\
+DELETE 1 2 10 11\n\
+EPOCH\n\
+QUERY 0\n\
+SHUTDOWN\n";
+        let mut out = Vec::new();
+        let summary = serve_lines(&cfg, script.as_bytes(), &mut out).unwrap();
+        assert!(summary.maximal, "P={shards}");
+        assert_eq!(summary.epochs, 2, "P={shards}");
+        assert_eq!(summary.wal_epochs, 2, "P={shards}");
+        assert_eq!(summary.last_snapshot_epoch, 2, "P={shards}: final snapshot");
+        let first = String::from_utf8(out).unwrap();
+        let partner_line = first
+            .lines()
+            .find(|l| l.contains(r#""op":"query""#))
+            .unwrap()
+            .to_string();
+
+        // session 2: restart over the same data dir
+        let mut out = Vec::new();
+        let summary =
+            serve_lines(&cfg, "STATS full\nQUERY 0\nQUIT\n".as_bytes(), &mut out).unwrap();
+        let text = String::from_utf8(out).unwrap();
+        let stats = text.lines().find(|l| l.contains(r#""op":"stats""#)).unwrap();
+        assert!(
+            stats.contains(r#""recovery_replayed":0"#),
+            "P={shards}: snapshot-only recovery: {stats}"
+        );
+        assert!(stats.contains(r#""durable":true"#), "P={shards}: {stats}");
+        assert!(stats.contains(r#""epochs":2"#), "P={shards}: {stats}");
+        assert!(stats.contains(r#""live_edges":4"#), "P={shards}: {stats}");
+        assert!(stats.contains(r#""maximal":true"#), "P={shards}: {stats}");
+        // the exact matching survived: QUERY 0 answers identically
+        let requeried = text
+            .lines()
+            .find(|l| l.contains(r#""op":"query""#))
+            .unwrap();
+        assert_eq!(requeried, partner_line, "P={shards}");
+        assert!(summary.maximal, "P={shards}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}
