@@ -12,16 +12,22 @@
 //!      mutate-phase wall time, and its spawn-vs-run decomposition,
 //!   5. small-epoch dispatch — tiny batches where the per-epoch spawn cost
 //!      dominates: the regime the pool exists for, forked vs pooled mutate
-//!      p50 side by side.
+//!      p50 side by side,
+//!   6. adjacency layout sweep — the same 50/50 churn at P=8 pooled
+//!      workers over flat per-vertex `Vec`s vs the cache-line block arena;
+//!      set `SKIPPER_BENCH_RECORD_DIR` to also emit canonical
+//!      `skipper-bench/v1` records for `skipper-cli report`.
 
 mod common;
 
 use skipper::coordinator::datasets::Scale;
-use skipper::dynamic::churn::ChurnGen;
-use skipper::dynamic::{DynamicMatcher, ShardExec, ShardedDynamicMatcher, Update};
+use skipper::coordinator::registry;
+use skipper::dynamic::churn::{run_churn, ChurnConfig, ChurnGen};
+use skipper::dynamic::{AdjLayout, DynamicMatcher, ShardExec, ShardedDynamicMatcher, Update};
 use skipper::util::benchlib::{bench, BenchConfig};
 use skipper::util::rng::Xoshiro256pp;
 use skipper::util::stats::percentile;
+use std::path::Path;
 
 fn main() {
     let scale = common::bench_scale();
@@ -185,5 +191,47 @@ fn main() {
             ));
         }
         println!("{line}");
+    }
+
+    // 6. adjacency layout sweep: identical seeded 50/50 churn at P=8
+    // pooled workers, storage layout the only variable — the deltas are
+    // attributable to cache behaviour alone. With SKIPPER_BENCH_RECORD_DIR
+    // set, each row also writes a canonical BENCH record so CI can publish
+    // the trajectory and gate regressions via `skipper-cli report`.
+    let record_dir = std::env::var("SKIPPER_BENCH_RECORD_DIR").ok();
+    println!("adjacency layout sweep (50/50 churn, P=8 pool, batch={batch}):");
+    for layout in [
+        AdjLayout::Flat,
+        AdjLayout::Blocked { block_bytes: 64 },
+        AdjLayout::Blocked { block_bytes: 256 },
+    ] {
+        let ccfg = ChurnConfig {
+            epochs: 3 * churn_epochs,
+            batch,
+            delete_frac: 0.5,
+            warmup_epochs: 2,
+            threads,
+            engine_shards: 8,
+            pool: true,
+            layout,
+            ..ChurnConfig::new(gen)
+        };
+        let summary = run_churn(&ccfg, |_| {}).expect("layout churn");
+        let wall: f64 = summary.epoch_wall_s.iter().sum();
+        let updates = (summary.epochs * ccfg.batch) as f64;
+        println!(
+            "  layout={:<10}: {:>7.2} Mupdates/s  epoch p50={:>8.2}ms  mutate p50={:>8.2}ms  adj={:>6.1}MB",
+            layout.name(),
+            updates / wall.max(1e-9) / 1e6,
+            percentile(&summary.epoch_wall_s, 50.0) * 1e3,
+            percentile(&summary.epoch_mutate_s, 50.0) * 1e3,
+            summary.final_adjacency_bytes as f64 / 1e6,
+        );
+        if let Some(dir) = &record_dir {
+            let rec = registry::churn_record(&ccfg, &summary);
+            let path = Path::new(dir).join(format!("{}_{}.json", rec.bench, layout.name()));
+            rec.write_file(&path).expect("bench record write");
+            eprintln!("  recorded -> {}", path.display());
+        }
     }
 }

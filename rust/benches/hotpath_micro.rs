@@ -3,14 +3,18 @@
 //! - Skipper 1-thread end-to-end throughput,
 //! - Skipper multi-thread wall,
 //! - APRAM simulator throughput (simulated ops/s of the host),
-//! - cache-simulator replay throughput.
+//! - cache-simulator replay throughput,
+//! - adjacency layout sweep: flat vs blocked sidecar iteration wall and
+//!   simulated L3 miss rate over an identically fragmented RMAT state.
 
 mod common;
 
 use skipper::apram::{simulate_skipper, SimConfig};
-use skipper::cachesim::Hierarchy;
+use skipper::cachesim::{Geometry, Hierarchy};
 use skipper::coordinator::datasets::{generate_cached, spec_by_name};
-use skipper::instrument::TracingProbe;
+use skipper::dynamic::churn::ChurnGen;
+use skipper::dynamic::{AdjLayout, DynamicAdjacency};
+use skipper::instrument::{NoProbe, TracingProbe};
 use skipper::matching::sgmm::Sgmm;
 use skipper::matching::skipper::Skipper;
 use skipper::matching::MaximalMatcher;
@@ -49,4 +53,57 @@ fn main() {
     let n_ev = trace.events.len() as f64;
     let r = bench("cachesim/replay-sgmm", &cfg, || Hierarchy::replay(&trace));
     println!("{}   ({:.1} M events/s)", r.row(), n_ev / r.median_s / 1e6);
+
+    // adjacency layout sweep: same fragmented RMAT sidecar per layout —
+    // full population inserted, every third edge deleted, half of those
+    // re-inserted, leaving tombstones in the flat Vecs and recycled
+    // blocks in the arena. Wall is the real iteration sweep; the L3
+    // column replays the sweep's actual resident addresses (headers,
+    // slot words, chain links) through the set-associative simulator
+    // sized to the working set — the Fig-8 methodology applied to the
+    // dynamic sidecar instead of the matchers.
+    let adj_exp: u32 = match scale {
+        skipper::coordinator::datasets::Scale::Tiny => 12,
+        skipper::coordinator::datasets::Scale::Small => 15,
+        skipper::coordinator::datasets::Scale::Medium => 18,
+        skipper::coordinator::datasets::Scale::Large => 20,
+    };
+    let churn_gen = ChurnGen::Rmat { scale: adj_exp, avg_degree: 8 };
+    let adj_n = churn_gen.num_vertices();
+    let population = churn_gen.population(11);
+    println!("adjacency layout sweep (fragmented rmat |V|={adj_n}, sweep wall + simulated L3):");
+    for layout in [
+        AdjLayout::Flat,
+        AdjLayout::Blocked { block_bytes: 64 },
+        AdjLayout::Blocked { block_bytes: 256 },
+    ] {
+        let mut adj = DynamicAdjacency::with_layout(adj_n, layout);
+        for &(u, v) in &population {
+            adj.insert(u, v);
+        }
+        for (i, &(u, v)) in population.iter().enumerate() {
+            if i % 3 == 0 {
+                adj.delete(u, v);
+            }
+        }
+        for (i, &(u, v)) in population.iter().enumerate() {
+            if i % 6 == 0 {
+                adj.insert(u, v);
+            }
+        }
+        let r = bench(&format!("adj-sweep/{}", layout.name()), &cfg, || {
+            adj.probe_sweep(&mut NoProbe)
+        });
+        let mut trace = TracingProbe::default();
+        let visited = adj.probe_sweep(&mut trace);
+        let stats =
+            Hierarchy::replay_with(&trace, Geometry::for_working_set(adj.memory_bytes()));
+        println!(
+            "{}   ({:.1} M half-edges/s, L3 miss {:.1}%, {:.1} MB resident)",
+            r.row(),
+            visited as f64 / r.median_s / 1e6,
+            100.0 * stats.l3_miss_rate(),
+            adj.memory_bytes() as f64 / 1e6,
+        );
+    }
 }

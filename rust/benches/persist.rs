@@ -3,8 +3,9 @@
 //! Three questions, at `SKIPPER_BENCH_SCALE`-dependent size:
 //!   1. snapshot write and load+restore throughput — how fast the engine's
 //!      durable state (live adjacency + matching) streams to and from disk,
-//!   2. WAL append latency per churn epoch, buffered vs fsync — the price
-//!      of the write-ahead guarantee on the flusher's critical path,
+//!   2. WAL append latency per churn epoch, buffered vs fsync vs grouped
+//!      fsync (`Wal::append_epochs`, one `sync_data` per 4 epochs) — the
+//!      price of the write-ahead guarantee on the flusher's critical path,
 //!   3. cold crash recovery — snapshot restore + WAL replay + maximality
 //!      audit, as a function of the replayed epoch count.
 
@@ -86,24 +87,38 @@ fn main() {
         bytes as f64 / r.median_s / 1e6
     );
 
-    // 2. WAL append latency per churn epoch, buffered vs fsync
+    // 2. WAL append latency per churn epoch, buffered vs fsync vs grouped
+    // fsync (4 coalesced epochs per `sync_data` via `Wal::append_epochs`;
+    // latency per epoch = group latency / 4, the flusher's amortised view).
     let batch = 4096.min(live.len()).max(2);
     let epochs = 64usize;
-    for fsync in [false, true] {
-        let tag = if fsync { "fsync" } else { "buffered" };
+    for (tag, fsync, group) in
+        [("buffered", false, 1usize), ("fsync", true, 1), ("fsync-grp4", true, 4)]
+    {
         let dir = fresh_dir(&base, &format!("wal_{tag}"));
         let (mut wal, _) = Wal::open(&dir, WalOptions { fsync, ..WalOptions::default() })
             .expect("wal open");
         let mut rng = Xoshiro256pp::new(99);
         let mut lat_s = Vec::with_capacity(epochs);
-        for e in 0..epochs {
-            let ups = recycle_batch(&live, &mut rng, e, batch);
+        for g in 0..epochs / group {
+            let batches: Vec<Vec<Update>> = (0..group)
+                .map(|j| recycle_batch(&live, &mut rng, g * group + j, batch))
+                .collect();
             let t0 = Instant::now();
-            wal.append_epoch(e as u64 + 1, &ups).expect("wal append");
-            lat_s.push(t0.elapsed().as_secs_f64());
+            if group == 1 {
+                wal.append_epoch(g as u64 + 1, &batches[0]).expect("wal append");
+            } else {
+                let recs: Vec<(u64, &[Update])> = batches
+                    .iter()
+                    .enumerate()
+                    .map(|(j, b)| ((g * group + j) as u64 + 1, b.as_slice()))
+                    .collect();
+                wal.append_epochs(&recs).expect("wal group append");
+            }
+            lat_s.push(t0.elapsed().as_secs_f64() / group as f64);
         }
         println!(
-            "persist/wal-append-{tag:<8} batch={batch}: p50={:>8.1}us  p99={:>8.1}us  ({:.1} MB logged)",
+            "persist/wal-append-{tag:<10} batch={batch}: p50={:>8.1}us/epoch  p99={:>8.1}us  ({:.1} MB logged)",
             percentile(&lat_s, 50.0) * 1e6,
             percentile(&lat_s, 99.0) * 1e6,
             wal.bytes_appended() as f64 / 1e6

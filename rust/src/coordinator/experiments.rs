@@ -542,6 +542,7 @@ pub fn dynamic_churn(scale: Scale, threads: usize) -> Result<String, String> {
 /// only serial phase before vertex partitioning.
 pub fn shard_scale(scale: Scale, threads: usize) -> Result<String, String> {
     use crate::dynamic::churn::{run_churn, ChurnConfig, ChurnGen};
+    use crate::dynamic::AdjLayout;
     use crate::util::stats::percentile;
     let exp: u32 = match scale {
         Scale::Tiny => 10,
@@ -610,9 +611,54 @@ pub fn shard_scale(scale: Scale, threads: usize) -> Result<String, String> {
             }
         }
     }
+    // Adjacency layout sweep at the acceptance point of the blocked-arena
+    // work: P=8, persistent pool, large batch. Same schedule for every
+    // layout (identical seed + config apart from storage), so throughput
+    // deltas are attributable to cache behaviour alone.
+    let mut lt = Table::new(&[
+        "layout", "batch", "updates/s", "epoch p50 ms", "mutate p50 ms",
+        "adj MB", "verified",
+    ]);
+    for layout in [
+        AdjLayout::Flat,
+        AdjLayout::Blocked { block_bytes: 64 },
+        AdjLayout::Blocked { block_bytes: 128 },
+        AdjLayout::Blocked { block_bytes: 256 },
+    ] {
+        let cfg = ChurnConfig {
+            epochs: 6,
+            batch: (n / 8).max(512),
+            delete_frac: 0.5,
+            warmup_epochs: 3,
+            threads,
+            engine_shards: 8,
+            pool: true,
+            layout,
+            verify: true,
+            ..ChurnConfig::new(gen)
+        };
+        let summary = run_churn(&cfg, |_| {})
+            .map_err(|e| format!("scale layout={} churn failed: {e}", layout.name()))?;
+        let wall: f64 = summary.epoch_wall_s.iter().sum();
+        let updates = (summary.epochs * cfg.batch) as f64;
+        lt.row(&[
+            layout.name(),
+            cfg.batch.to_string(),
+            format!("{:.0}", updates / wall.max(1e-9)),
+            format!("{:.2}", percentile(&summary.epoch_wall_s, 50.0) * 1e3),
+            format!("{:.2}", percentile(&summary.epoch_mutate_s, 50.0) * 1e3),
+            format!("{:.1}", summary.final_adjacency_bytes as f64 / 1e6),
+            format!(
+                "{}/{} epochs",
+                summary.verified_epochs,
+                summary.warmup_epochs + summary.epochs
+            ),
+        ]);
+    }
     Ok(format!(
-        "Engine-shard scaling — identical rmat 50/50 churn at engine_shards ∈ {{1,2,4,8}} × workers ∈ {{fork,pool}}, |V|={n} (t={threads}; maximality verified after every epoch)\n{}\nmutate share = parallel per-shard mutate phase / epoch wall; before sharding this phase was single-threaded.\nspawn ovh = mutate wall − longest per-shard run: per-epoch thread spawn+join cost for forked workers, doorbell wake + countdown for the persistent pool — the small-batch rows are where the pool earns its keep\n",
-        t.render()
+        "Engine-shard scaling — identical rmat 50/50 churn at engine_shards ∈ {{1,2,4,8}} × workers ∈ {{fork,pool}}, |V|={n} (t={threads}; maximality verified after every epoch)\n{}\nmutate share = parallel per-shard mutate phase / epoch wall; before sharding this phase was single-threaded.\nspawn ovh = mutate wall − longest per-shard run: per-epoch thread spawn+join cost for forked workers, doorbell wake + countdown for the persistent pool — the small-batch rows are where the pool earns its keep\n\nAdjacency layout sweep at P=8 pool workers, same rmat schedule per row — flat per-vertex Vecs vs the cache-line block arena at three block sizes:\n{}\nadj MB = resident adjacency bytes after the final epoch (blocked rows include recycled free-list blocks; flat is live Vec capacity)\n",
+        t.render(),
+        lt.render()
     ))
 }
 
@@ -659,12 +705,17 @@ pub fn durability(scale: Scale, threads: usize) -> Result<String, String> {
         Ok(engine)
     };
 
-    // --- (1) logging overhead: off vs buffered vs fsync ------------------
+    // --- (1) logging overhead: off vs buffered vs fsync vs group fsync ---
+    // fsync-group4 models a flusher that drains 4 coalesced epochs per
+    // durable group: 4 records, one `sync_data` (Wal::append_epochs) — the
+    // WAL-before-apply invariant holds for the whole group.
     let mut t = Table::new(&[
         "wal", "epochs", "batch", "updates/s", "epoch p50 ms", "wal MB", "slowdown vs off",
     ]);
     let mut off_updates_s = 0.0f64;
-    for mode in ["off", "buffered", "fsync"] {
+    let mut fsync_updates_s = 0.0f64;
+    let mut group_updates_s = 0.0f64;
+    for mode in ["off", "buffered", "fsync", "fsync-group4"] {
         let engine = warm_engine()?;
         let live: Vec<(u32, u32)> = engine.live_edges();
         let mut rng = Xoshiro256pp::new(23);
@@ -672,25 +723,44 @@ pub fn durability(scale: Scale, threads: usize) -> Result<String, String> {
             "off" => None,
             _ => {
                 let opts =
-                    WalOptions { fsync: mode == "fsync", ..WalOptions::default() };
+                    WalOptions { fsync: mode.starts_with("fsync"), ..WalOptions::default() };
                 Some(Wal::open(&base.join(format!("wal_{mode}")), opts)?.0)
             }
         };
+        let group = if mode == "fsync-group4" { 4usize } else { 1 };
         let mut epoch_s = Vec::new();
-        for e in 0..epochs {
-            let ups = recycle_batch(&live, &mut rng, e, batch);
+        for g in 0..epochs / group {
+            let batches: Vec<Vec<Update>> = (0..group)
+                .map(|j| recycle_batch(&live, &mut rng, g * group + j, batch))
+                .collect();
             let t0 = Instant::now();
             if let Some(w) = wal.as_mut() {
-                w.append_epoch(engine.epochs_applied() + 1, &ups)?;
+                let next = engine.epochs_applied() + 1;
+                if group == 1 {
+                    w.append_epoch(next, &batches[0])?;
+                } else {
+                    let recs: Vec<(u64, &[Update])> = batches
+                        .iter()
+                        .enumerate()
+                        .map(|(j, b)| (next + j as u64, b.as_slice()))
+                        .collect();
+                    w.append_epochs(&recs)?;
+                }
             }
-            engine.apply_epoch(&ups)?;
-            epoch_s.push(t0.elapsed().as_secs_f64());
+            for b in &batches {
+                engine.apply_epoch(b)?;
+            }
+            // per-epoch figure either way, so rows stay comparable
+            epoch_s.push(t0.elapsed().as_secs_f64() / group as f64);
         }
         engine.verify()?;
-        let wall: f64 = epoch_s.iter().sum();
+        let wall: f64 = epoch_s.iter().sum::<f64>() * group as f64;
         let updates_s = (epochs * batch) as f64 / wall.max(1e-9);
-        if mode == "off" {
-            off_updates_s = updates_s;
+        match mode {
+            "off" => off_updates_s = updates_s,
+            "fsync" => fsync_updates_s = updates_s,
+            "fsync-group4" => group_updates_s = updates_s,
+            _ => {}
         }
         let wal_mb =
             wal.as_ref().map_or(0.0, |w| w.bytes_appended() as f64 / 1e6);
@@ -708,6 +778,7 @@ pub fn durability(scale: Scale, threads: usize) -> Result<String, String> {
             },
         ]);
     }
+    let group_delta = group_updates_s / fsync_updates_s.max(1e-9);
 
     // --- (2) recovery time vs WAL length ---------------------------------
     let mut r = Table::new(&[
@@ -755,7 +826,7 @@ pub fn durability(scale: Scale, threads: usize) -> Result<String, String> {
     }
     let _ = std::fs::remove_dir_all(&base);
     Ok(format!(
-        "Durability — WAL logging overhead and crash-recovery cost (rmat |V|={n}, t={threads})\n{}\nrecovery = newest valid snapshot restore + WAL replay through real engine epochs + maximality audit\n{}\nbuffered = flushed to the OS per epoch; fsync = forced to media per epoch (the power-loss-safe mode)\n",
+        "Durability — WAL logging overhead and crash-recovery cost (rmat |V|={n}, t={threads})\n{}\nrecovery = newest valid snapshot restore + WAL replay through real engine epochs + maximality audit\n{}\nbuffered = flushed to the OS per epoch; fsync = forced to media per epoch (the power-loss-safe mode)\nfsync-group4 = 4 coalesced epochs per sync_data (Wal::append_epochs): {group_delta:.2}x the per-epoch fsync write throughput\n",
         t.render(),
         r.render()
     ))
@@ -844,26 +915,32 @@ mod tests {
     #[test]
     fn shard_scale_renders_all_shard_counts_verified() {
         let s = shard_scale(Scale::Tiny, 2).unwrap();
-        // one fully verified row per (batch, shard count, worker mode)
+        // one fully verified row per (batch, shard count, worker mode),
+        // plus the four adjacency-layout sweep rows at P=8
         assert_eq!(
             s.matches("9/9 epochs").count(),
-            16,
-            "expected 2 batches × 4 shard counts × 2 worker modes in: {s}"
+            20,
+            "expected 2 batches × 4 shard counts × 2 worker modes + 4 layout rows in: {s}"
         );
         assert!(s.contains("engine_shards"), "{s}");
         assert!(s.contains("mutate share"), "{s}");
         assert!(s.contains("spawn ovh"), "{s}");
         assert!(s.contains("fork"), "{s}");
         assert!(s.contains("pool"), "{s}");
+        // layout sweep rows: flat baseline plus blocked at three block sizes
+        assert!(s.contains("flat"), "{s}");
+        assert!(s.contains("blocked64"), "{s}");
+        assert!(s.contains("blocked256"), "{s}");
     }
 
     #[test]
     fn durability_renders_modes_and_recovery_rows() {
         let s = durability(Scale::Tiny, 2).unwrap();
-        for mode in ["off", "buffered", "fsync"] {
+        for mode in ["off", "buffered", "fsync", "fsync-group4"] {
             assert!(s.contains(mode), "missing {mode} row in: {s}");
         }
         assert!(s.contains("slowdown vs off"), "{s}");
+        assert!(s.contains("coalesced epochs per sync_data"), "{s}");
         assert!(s.contains("recover ms"), "{s}");
         assert_eq!(
             s.matches("maximal").count(),

@@ -1,10 +1,12 @@
 //! Experiment coordinator: dataset registry (the scaled analogue suite),
 //! cost-model calibration against real host measurements, the experiment
-//! registry (one entry per paper table/figure — DESIGN.md §5), and report
-//! writers.
+//! registry (one entry per paper table/figure — DESIGN.md §5), report
+//! writers, and the committed perf-trajectory registry ([`registry`],
+//! `BENCH_*.json`).
 
 pub mod calibrate;
 pub mod config;
 pub mod datasets;
 pub mod experiments;
+pub mod registry;
 pub mod report;

@@ -1,0 +1,810 @@
+//! Perf-trajectory registry: committed `BENCH_*.json` files that make every
+//! performance claim in this repo provable (and every regression visible).
+//!
+//! The pattern follows the ASM-registry idiom (SNIPPETS.md §1): each bench
+//! has one registry file `BENCH/BENCH_<bench>.json` holding an append-only
+//! list of runs. Every run carries
+//!
+//! * a **machine manifest** — OS, arch, CPU count, CPU model — because perf
+//!   numbers are only comparable on comparable hardware;
+//! * the full **config** (generator, layout, threads, shards, batch, …) and
+//!   its CRC-32 **config hash**, so runs of different configs never get
+//!   compared by accident;
+//! * the **metrics**, named by convention (see [`MetricKind`]).
+//!
+//! Workflow: a bench/experiment/CLI run writes a single-record *candidate*
+//! file (`churn --record out.json`), `skipper-cli report --publish` appends
+//! it to the registry, `report` renders the trajectory as markdown, and
+//! `report --gate` compares a candidate against the last committed run of
+//! the *same config* and fails on regression beyond a threshold. Gate rules
+//! tolerate machine variance explicitly:
+//!
+//! * no baseline with this config hash → **seeding** (pass) — a fresh
+//!   config bootstraps its own trajectory;
+//! * `exact_*` metrics are schedule-deterministic (e.g. the final live-edge
+//!   count is the set-semantics of the update stream, independent of
+//!   threads and timing) → compared **exactly**, even across hosts;
+//! * wall-clock metrics (`*_s`, `*_per_s`) are **strict only between runs
+//!   whose host fingerprints match**; across different machines they only
+//!   warn — a laptop is not a CI runner.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::dynamic::churn::{ChurnConfig, ChurnSummary};
+use crate::persist::crc32;
+use crate::util::json::{self, Json};
+use crate::util::stats;
+
+/// Registry schema identifier (bump on breaking file-shape changes).
+pub const SCHEMA: &str = "skipper-bench/v1";
+
+/// Default gate threshold: relative regression tolerated on wall-clock
+/// metrics before the gate fails (15% absorbs CI-runner noise).
+pub const DEFAULT_THRESHOLD: f64 = 0.15;
+
+// ---------------------------------------------------------------------------
+// machine manifest
+// ---------------------------------------------------------------------------
+
+/// The hardware/OS identity a run was measured on.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct MachineManifest {
+    /// Operating system (`std::env::consts::OS`).
+    pub os: String,
+    /// CPU architecture (`std::env::consts::ARCH`).
+    pub arch: String,
+    /// Logical CPUs available to the process.
+    pub ncpus: usize,
+    /// CPU model string from `/proc/cpuinfo` (or `"unknown"`).
+    pub cpu_model: String,
+}
+
+impl MachineManifest {
+    /// Detect the current machine.
+    pub fn detect() -> Self {
+        let cpu_model = std::fs::read_to_string("/proc/cpuinfo")
+            .ok()
+            .and_then(|text| {
+                text.lines()
+                    .find(|l| l.starts_with("model name"))
+                    .and_then(|l| l.split(':').nth(1))
+                    .map(|m| m.trim().to_string())
+            })
+            .unwrap_or_else(|| "unknown".to_string());
+        MachineManifest {
+            os: std::env::consts::OS.to_string(),
+            arch: std::env::consts::ARCH.to_string(),
+            ncpus: std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
+            cpu_model,
+        }
+    }
+
+    /// Host identity string — two runs are wall-clock-comparable iff their
+    /// fingerprints are equal.
+    pub fn fingerprint(&self) -> String {
+        format!("{}/{}/{}cpu/{}", self.os, self.arch, self.ncpus, self.cpu_model)
+    }
+
+    fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("os", Json::from(self.os.as_str()))
+            .set("arch", Json::from(self.arch.as_str()))
+            .set("ncpus", Json::from(self.ncpus))
+            .set("cpu_model", Json::from(self.cpu_model.as_str()));
+        o
+    }
+
+    fn from_json(v: &Json) -> Result<Self, String> {
+        let field = |k: &str| {
+            v.get(k)
+                .and_then(Json::as_str)
+                .map(str::to_string)
+                .ok_or_else(|| format!("manifest missing {k:?}"))
+        };
+        Ok(MachineManifest {
+            os: field("os")?,
+            arch: field("arch")?,
+            ncpus: v
+                .get("ncpus")
+                .and_then(Json::as_u64)
+                .ok_or("manifest missing \"ncpus\"")? as usize,
+            cpu_model: field("cpu_model")?,
+        })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// bench records
+// ---------------------------------------------------------------------------
+
+/// One measured run of one bench config on one machine.
+#[derive(Clone, Debug, PartialEq)]
+pub struct BenchRecord {
+    /// Bench identity — names the registry file (e.g. `churn_rmat13_t8_p8`).
+    pub bench: String,
+    /// Unix seconds when the run was recorded.
+    pub recorded_unix_s: u64,
+    /// Where it ran.
+    pub manifest: MachineManifest,
+    /// Full run configuration, stringly-typed and order-canonical.
+    pub config: BTreeMap<String, String>,
+    /// Measured metrics, named per [`MetricKind`] conventions.
+    pub metrics: BTreeMap<String, f64>,
+}
+
+impl BenchRecord {
+    /// A record for the current machine, stamped now.
+    pub fn new(
+        bench: impl Into<String>,
+        config: BTreeMap<String, String>,
+        metrics: BTreeMap<String, f64>,
+    ) -> Self {
+        let recorded_unix_s = std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .map(|d| d.as_secs())
+            .unwrap_or(0);
+        BenchRecord {
+            bench: bench.into(),
+            recorded_unix_s,
+            manifest: MachineManifest::detect(),
+            config,
+            metrics,
+        }
+    }
+
+    /// CRC-32 of the canonical config rendering, as 8 hex digits. Two runs
+    /// gate against each other only when these match.
+    pub fn config_hash(&self) -> String {
+        let mut o = Json::obj();
+        for (k, v) in &self.config {
+            o.set(k, Json::from(v.as_str()));
+        }
+        format!("{:08x}", crc32(o.render_compact().as_bytes()))
+    }
+
+    /// Render as the canonical JSON object stored in registries and
+    /// candidate files.
+    pub fn to_json(&self) -> Json {
+        let mut cfg = Json::obj();
+        for (k, v) in &self.config {
+            cfg.set(k, Json::from(v.as_str()));
+        }
+        let mut met = Json::obj();
+        for (k, v) in &self.metrics {
+            met.set(k, Json::from(*v));
+        }
+        let mut o = Json::obj();
+        o.set("bench", Json::from(self.bench.as_str()))
+            .set("recorded_unix_s", Json::from(self.recorded_unix_s))
+            .set("manifest", self.manifest.to_json())
+            .set("config", cfg)
+            .set("config_hash", Json::from(self.config_hash()))
+            .set("metrics", met);
+        o
+    }
+
+    /// Parse a record object (the stored `config_hash` is recomputed, not
+    /// trusted).
+    pub fn from_json(v: &Json) -> Result<Self, String> {
+        let bench = v
+            .get("bench")
+            .and_then(Json::as_str)
+            .ok_or("record missing \"bench\"")?
+            .to_string();
+        let recorded_unix_s =
+            v.get("recorded_unix_s").and_then(Json::as_u64).unwrap_or(0);
+        let manifest =
+            MachineManifest::from_json(v.get("manifest").ok_or("record missing \"manifest\"")?)?;
+        let mut config = BTreeMap::new();
+        for (k, val) in v
+            .get("config")
+            .and_then(Json::as_obj)
+            .ok_or("record missing \"config\"")?
+        {
+            config.insert(
+                k.clone(),
+                val.as_str().map(str::to_string).unwrap_or_else(|| val.render_compact()),
+            );
+        }
+        let mut metrics = BTreeMap::new();
+        for (k, val) in v
+            .get("metrics")
+            .and_then(Json::as_obj)
+            .ok_or("record missing \"metrics\"")?
+        {
+            metrics.insert(
+                k.clone(),
+                val.as_f64().ok_or_else(|| format!("metric {k:?} is not a number"))?,
+            );
+        }
+        Ok(BenchRecord { bench, recorded_unix_s, manifest, config, metrics })
+    }
+
+    /// Write a single-record candidate file.
+    pub fn write_file(&self, path: &Path) -> Result<(), String> {
+        std::fs::write(path, self.to_json().render_pretty())
+            .map_err(|e| format!("{}: {e}", path.display()))
+    }
+
+    /// Read a single-record candidate file.
+    pub fn read_file(path: &Path) -> Result<Self, String> {
+        let text =
+            std::fs::read_to_string(path).map_err(|e| format!("{}: {e}", path.display()))?;
+        Self::from_json(&json::parse(&text).map_err(|e| format!("{}: {e}", path.display()))?)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// registry files
+// ---------------------------------------------------------------------------
+
+/// The append-only trajectory of one bench: all committed runs, oldest
+/// first.
+#[derive(Clone, Debug, Default)]
+pub struct Registry {
+    /// The bench this registry tracks.
+    pub bench: String,
+    /// Committed runs, oldest first.
+    pub runs: Vec<BenchRecord>,
+}
+
+impl Registry {
+    /// An empty trajectory for `bench`.
+    pub fn new(bench: impl Into<String>) -> Self {
+        Registry { bench: bench.into(), runs: Vec::new() }
+    }
+
+    /// The conventional file name, `BENCH_<bench>.json`.
+    pub fn file_name(bench: &str) -> String {
+        format!("BENCH_{bench}.json")
+    }
+
+    /// The conventional path under the registry directory.
+    pub fn path_for(dir: &Path, bench: &str) -> PathBuf {
+        dir.join(Self::file_name(bench))
+    }
+
+    /// Load a registry file.
+    pub fn load(path: &Path) -> Result<Self, String> {
+        let text =
+            std::fs::read_to_string(path).map_err(|e| format!("{}: {e}", path.display()))?;
+        let v = json::parse(&text).map_err(|e| format!("{}: {e}", path.display()))?;
+        let schema = v.get("schema").and_then(Json::as_str).unwrap_or("");
+        if schema != SCHEMA {
+            return Err(format!(
+                "{}: schema {schema:?}, this binary speaks {SCHEMA:?}",
+                path.display()
+            ));
+        }
+        let bench = v
+            .get("bench")
+            .and_then(Json::as_str)
+            .ok_or_else(|| format!("{}: missing \"bench\"", path.display()))?
+            .to_string();
+        let mut runs = Vec::new();
+        for r in v.get("runs").and_then(Json::as_arr).unwrap_or(&[]) {
+            runs.push(BenchRecord::from_json(r).map_err(|e| format!("{}: {e}", path.display()))?);
+        }
+        Ok(Registry { bench, runs })
+    }
+
+    /// Load `dir/BENCH_<bench>.json`, or start an empty trajectory if the
+    /// file does not exist yet.
+    pub fn load_or_new(dir: &Path, bench: &str) -> Result<Self, String> {
+        let path = Self::path_for(dir, bench);
+        if path.exists() {
+            Self::load(&path)
+        } else {
+            Ok(Self::new(bench))
+        }
+    }
+
+    /// Canonical-render into `dir/BENCH_<bench>.json` (creates `dir`).
+    pub fn save(&self, dir: &Path) -> Result<PathBuf, String> {
+        std::fs::create_dir_all(dir).map_err(|e| format!("{}: {e}", dir.display()))?;
+        let path = Self::path_for(dir, &self.bench);
+        let mut o = Json::obj();
+        o.set("schema", Json::from(SCHEMA))
+            .set("bench", Json::from(self.bench.as_str()))
+            .set("runs", Json::Arr(self.runs.iter().map(BenchRecord::to_json).collect()));
+        std::fs::write(&path, o.render_pretty()).map_err(|e| format!("{}: {e}", path.display()))?;
+        Ok(path)
+    }
+
+    /// Append a run (the record's bench must match).
+    pub fn publish(&mut self, rec: BenchRecord) -> Result<(), String> {
+        if rec.bench != self.bench {
+            return Err(format!(
+                "candidate is for bench {:?}, registry tracks {:?}",
+                rec.bench, self.bench
+            ));
+        }
+        self.runs.push(rec);
+        Ok(())
+    }
+
+    /// The most recent committed run with the candidate's config hash — the
+    /// gate baseline.
+    pub fn baseline_for(&self, candidate: &BenchRecord) -> Option<&BenchRecord> {
+        let hash = candidate.config_hash();
+        self.runs.iter().rev().find(|r| r.config_hash() == hash)
+    }
+
+    /// All `BENCH_*.json` registries under `dir`, sorted by bench name.
+    pub fn load_dir(dir: &Path) -> Result<Vec<Registry>, String> {
+        let mut out = Vec::new();
+        let entries = match std::fs::read_dir(dir) {
+            Ok(e) => e,
+            Err(_) => return Ok(out), // no registry dir yet: empty trajectory
+        };
+        for entry in entries.flatten() {
+            let name = entry.file_name().to_string_lossy().into_owned();
+            if name.starts_with("BENCH_") && name.ends_with(".json") {
+                out.push(Self::load(&entry.path())?);
+            }
+        }
+        out.sort_by(|a, b| a.bench.cmp(&b.bench));
+        Ok(out)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// metric naming conventions
+// ---------------------------------------------------------------------------
+
+/// How a metric is compared by the gate, derived from its name.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MetricKind {
+    /// `exact_*` — schedule-deterministic; must match bit-for-bit even
+    /// across hosts (a mismatch means the *code changed behavior*, not that
+    /// the machine was slow).
+    Exact,
+    /// `*_per_s` — throughput; regression = candidate below baseline by
+    /// more than the threshold.
+    HigherIsBetter,
+    /// `*_s` — wall time; regression = candidate above baseline by more
+    /// than the threshold.
+    LowerIsBetter,
+    /// Anything else — reported, never gated.
+    Advisory,
+}
+
+impl MetricKind {
+    /// Classify a metric name.
+    pub fn of(name: &str) -> MetricKind {
+        if name.starts_with("exact_") {
+            MetricKind::Exact
+        } else if name.ends_with("_per_s") {
+            MetricKind::HigherIsBetter
+        } else if name.ends_with("_s") {
+            MetricKind::LowerIsBetter
+        } else {
+            MetricKind::Advisory
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// gate
+// ---------------------------------------------------------------------------
+
+/// Result of gating a candidate against a registry.
+#[derive(Clone, Debug)]
+pub struct GateOutcome {
+    /// Did the candidate pass?
+    pub pass: bool,
+    /// True when there was no baseline for this config (first run seeds the
+    /// trajectory).
+    pub seeded: bool,
+    /// Human-readable per-metric verdicts.
+    pub lines: Vec<String>,
+}
+
+/// Compare `candidate` against the last committed run of the same config.
+///
+/// `threshold` is the tolerated relative regression on wall-clock metrics
+/// (see [`DEFAULT_THRESHOLD`]). Cross-host wall-clock differences only
+/// warn; `exact_*` mismatches always fail; a missing baseline seeds.
+pub fn gate(registry: &Registry, candidate: &BenchRecord, threshold: f64) -> GateOutcome {
+    let mut out = GateOutcome { pass: true, seeded: false, lines: Vec::new() };
+    let hash = candidate.config_hash();
+    let Some(base) = registry.baseline_for(candidate) else {
+        out.seeded = true;
+        out.lines.push(format!(
+            "no committed baseline for config {hash}: seeding the trajectory (gate passes)"
+        ));
+        return out;
+    };
+    let same_host = base.manifest.fingerprint() == candidate.manifest.fingerprint();
+    out.lines.push(format!(
+        "baseline: recorded_unix_s={} host={}{}",
+        base.recorded_unix_s,
+        base.manifest.fingerprint(),
+        if same_host { " (same host: strict)" } else { " (different host: advisory)" }
+    ));
+    for (name, &base_v) in &base.metrics {
+        let Some(&cand_v) = candidate.metrics.get(name) else {
+            match MetricKind::of(name) {
+                MetricKind::Exact => {
+                    out.pass = false;
+                    out.lines.push(format!("FAIL {name}: present in baseline, missing in candidate"));
+                }
+                _ => out.lines.push(format!("warn {name}: missing in candidate")),
+            }
+            continue;
+        };
+        match MetricKind::of(name) {
+            MetricKind::Exact => {
+                if cand_v == base_v {
+                    out.lines.push(format!("ok   {name}: {cand_v} (exact)"));
+                } else {
+                    out.pass = false;
+                    out.lines.push(format!(
+                        "FAIL {name}: {cand_v} != baseline {base_v} (deterministic metric — \
+                         behavior changed)"
+                    ));
+                }
+            }
+            MetricKind::HigherIsBetter | MetricKind::LowerIsBetter => {
+                let regressed = if MetricKind::of(name) == MetricKind::HigherIsBetter {
+                    base_v > 0.0 && cand_v < base_v * (1.0 - threshold)
+                } else {
+                    base_v > 0.0 && cand_v > base_v * (1.0 + threshold)
+                };
+                let rel = if base_v != 0.0 { (cand_v - base_v) / base_v * 100.0 } else { 0.0 };
+                if !regressed {
+                    out.lines.push(format!("ok   {name}: {cand_v:.6} ({rel:+.1}% vs baseline)"));
+                } else if same_host {
+                    out.pass = false;
+                    out.lines.push(format!(
+                        "FAIL {name}: {cand_v:.6} vs baseline {base_v:.6} ({rel:+.1}%, threshold \
+                         ±{:.0}%)",
+                        threshold * 100.0
+                    ));
+                } else {
+                    out.lines.push(format!(
+                        "warn {name}: {cand_v:.6} vs baseline {base_v:.6} ({rel:+.1}%) — \
+                         different host, not gated"
+                    ));
+                }
+            }
+            MetricKind::Advisory => {
+                out.lines.push(format!("info {name}: {cand_v:.6} (baseline {base_v:.6})"));
+            }
+        }
+    }
+    for name in candidate.metrics.keys() {
+        if !base.metrics.contains_key(name) {
+            out.lines.push(format!("note {name}: new metric (no baseline)"));
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// markdown report
+// ---------------------------------------------------------------------------
+
+/// Render the trajectories of `registries` as a markdown report.
+pub fn report_markdown(registries: &[Registry]) -> String {
+    let mut out = String::from("# Perf trajectory\n");
+    if registries.is_empty() {
+        out.push_str("\n_No BENCH_*.json registries found._\n");
+        return out;
+    }
+    for reg in registries {
+        out.push_str(&format!("\n## {}\n\n", reg.bench));
+        if reg.runs.is_empty() {
+            out.push_str("_No committed runs yet (registry awaiting its first publish)._\n");
+            continue;
+        }
+        let mut metric_names: Vec<&str> = Vec::new();
+        for run in &reg.runs {
+            for name in run.metrics.keys() {
+                if !metric_names.contains(&name.as_str()) {
+                    metric_names.push(name);
+                }
+            }
+        }
+        metric_names.sort_unstable();
+        // config keys whose values differ across the committed runs — they
+        // are what tells rows apart (e.g. `layout=flat` vs
+        // `layout=blocked64`), so they join the hash in the config cell
+        let mut varying: Vec<&str> = Vec::new();
+        if let Some(first) = reg.runs.first() {
+            for run in &reg.runs {
+                for (k, v) in &run.config {
+                    if first.config.get(k) != Some(v) && !varying.contains(&k.as_str()) {
+                        varying.push(k);
+                    }
+                }
+                for k in first.config.keys() {
+                    if !run.config.contains_key(k) && !varying.contains(&k.as_str()) {
+                        varying.push(k);
+                    }
+                }
+            }
+        }
+        varying.sort_unstable();
+        out.push_str("| date | host | config | ");
+        out.push_str(&metric_names.join(" | "));
+        out.push_str(" |\n|---|---|---|");
+        out.push_str(&"---|".repeat(metric_names.len()));
+        out.push('\n');
+        for run in &reg.runs {
+            let cells: Vec<String> = metric_names
+                .iter()
+                .map(|m| {
+                    run.metrics
+                        .get(*m)
+                        .map(|v| format_metric(*v))
+                        .unwrap_or_else(|| "—".to_string())
+                })
+                .collect();
+            let mut config_cell = String::new();
+            for k in &varying {
+                if let Some(v) = run.config.get(*k) {
+                    config_cell.push_str(&format!("{k}={v} "));
+                }
+            }
+            config_cell.push_str(&format!("`{}`", run.config_hash()));
+            out.push_str(&format!(
+                "| {} | {} | {} | {} |\n",
+                format_date(run.recorded_unix_s),
+                run.manifest.fingerprint(),
+                config_cell,
+                cells.join(" | ")
+            ));
+        }
+    }
+    out
+}
+
+fn format_metric(v: f64) -> String {
+    if v.fract() == 0.0 && v.abs() < 1e15 {
+        format!("{}", v as i64)
+    } else if v.abs() >= 1000.0 {
+        format!("{v:.0}")
+    } else {
+        format!("{v:.4}")
+    }
+}
+
+/// `YYYY-MM-DD` from unix seconds (civil-from-days, proleptic Gregorian).
+fn format_date(unix_s: u64) -> String {
+    let days = (unix_s / 86_400) as i64;
+    let z = days + 719_468;
+    let era = z.div_euclid(146_097);
+    let doe = z.rem_euclid(146_097);
+    let yoe = (doe - doe / 1460 + doe / 36_524 - doe / 146_096) / 365;
+    let y = yoe + era * 400;
+    let doy = doe - (365 * yoe + yoe / 4 - yoe / 100);
+    let mp = (5 * doy + 2) / 153;
+    let d = doy - (153 * mp + 2) / 5 + 1;
+    let m = if mp < 10 { mp + 3 } else { mp - 9 };
+    let y = if m <= 2 { y + 1 } else { y };
+    format!("{y:04}-{m:02}-{d:02}")
+}
+
+// ---------------------------------------------------------------------------
+// churn adapter
+// ---------------------------------------------------------------------------
+
+/// The conventional bench name for a churn config:
+/// `churn_<gen><log2 n>_t<threads>_p<shards>`. The adjacency layout lives in
+/// the config (hence the config hash), not the name — flat and blocked runs
+/// of the same shape share one trajectory file, so the report shows them
+/// side by side.
+pub fn churn_bench_name(cfg: &ChurnConfig) -> String {
+    let n = cfg.gen.num_vertices();
+    let log2n = (usize::BITS - 1).saturating_sub(n.leading_zeros());
+    format!("churn_{}{}_t{}_p{}", cfg.gen.name(), log2n, cfg.threads, cfg.engine_shards)
+}
+
+/// Build the candidate record for a finished churn run.
+pub fn churn_record(cfg: &ChurnConfig, summary: &ChurnSummary) -> BenchRecord {
+    let mut config = BTreeMap::new();
+    config.insert("workload".to_string(), "churn".to_string());
+    config.insert("gen".to_string(), cfg.gen.name().to_string());
+    config.insert("n".to_string(), cfg.gen.num_vertices().to_string());
+    config.insert("seed".to_string(), cfg.seed.to_string());
+    config.insert("threads".to_string(), cfg.threads.to_string());
+    config.insert("shards".to_string(), cfg.engine_shards.to_string());
+    config.insert("pool".to_string(), cfg.pool.to_string());
+    config.insert("layout".to_string(), cfg.layout.name());
+    config.insert("epochs".to_string(), cfg.epochs.to_string());
+    config.insert("batch".to_string(), cfg.batch.to_string());
+    config.insert("delete_frac".to_string(), cfg.delete_frac.to_string());
+    config.insert("warmup_epochs".to_string(), cfg.warmup_epochs.to_string());
+
+    let wall_total: f64 = summary.epoch_wall_s.iter().sum();
+    let mut metrics = BTreeMap::new();
+    metrics.insert("exact_epochs".to_string(), summary.epochs as f64);
+    metrics.insert("exact_final_live_edges".to_string(), summary.final_live_edges as f64);
+    if wall_total > 0.0 && summary.epochs > 0 {
+        metrics.insert("epochs_per_s".to_string(), summary.epochs as f64 / wall_total);
+        metrics.insert(
+            "updates_per_s".to_string(),
+            (summary.epochs * cfg.batch) as f64 / wall_total,
+        );
+        metrics
+            .insert("epoch_wall_p50_s".to_string(), stats::median(&summary.epoch_wall_s));
+        metrics.insert(
+            "mutate_wall_mean_s".to_string(),
+            stats::mean(&summary.epoch_mutate_s),
+        );
+        metrics
+            .insert("route_wall_mean_s".to_string(), stats::mean(&summary.epoch_route_s));
+    }
+    metrics.insert("repair_frac_mean".to_string(), summary.repair_frac_mean);
+    BenchRecord::new(churn_bench_name(cfg), config, metrics)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dynamic::churn::{run_churn, ChurnGen};
+
+    fn sample_record(bench: &str, layout: &str, wall: f64) -> BenchRecord {
+        let mut config = BTreeMap::new();
+        config.insert("layout".to_string(), layout.to_string());
+        config.insert("threads".to_string(), "4".to_string());
+        let mut metrics = BTreeMap::new();
+        metrics.insert("epoch_wall_p50_s".to_string(), wall);
+        metrics.insert("updates_per_s".to_string(), 1000.0 / wall);
+        metrics.insert("exact_final_live_edges".to_string(), 2048.0);
+        BenchRecord::new(bench, config, metrics)
+    }
+
+    #[test]
+    fn records_roundtrip_through_canonical_json() {
+        let rec = sample_record("churn_rmat9_t4_p2", "blocked64", 0.125);
+        let parsed = BenchRecord::from_json(&rec.to_json()).unwrap();
+        assert_eq!(parsed, rec);
+        assert_eq!(parsed.config_hash(), rec.config_hash());
+        // canonical: render → parse → render is a fixed point
+        let text = rec.to_json().render_pretty();
+        assert_eq!(
+            crate::util::json::parse(&text).unwrap().render_pretty(),
+            text
+        );
+    }
+
+    #[test]
+    fn config_hash_separates_layouts() {
+        let flat = sample_record("b", "flat", 0.1);
+        let blocked = sample_record("b", "blocked64", 0.1);
+        assert_ne!(flat.config_hash(), blocked.config_hash());
+    }
+
+    #[test]
+    fn registry_files_roundtrip_on_disk() {
+        let dir = std::env::temp_dir().join(format!("skipper_registry_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut reg = Registry::new("churn_rmat9_t4_p2");
+        reg.publish(sample_record("churn_rmat9_t4_p2", "flat", 0.2)).unwrap();
+        reg.publish(sample_record("churn_rmat9_t4_p2", "blocked64", 0.1)).unwrap();
+        let path = reg.save(&dir).unwrap();
+        assert!(path.ends_with("BENCH_churn_rmat9_t4_p2.json"));
+        let loaded = Registry::load(&path).unwrap();
+        assert_eq!(loaded.bench, reg.bench);
+        assert_eq!(loaded.runs, reg.runs);
+        // bench mismatch is rejected
+        assert!(loaded.clone().publish(sample_record("other", "flat", 0.1)).is_err());
+        // directory scan finds it
+        let all = Registry::load_dir(&dir).unwrap();
+        assert_eq!(all.len(), 1);
+        assert_eq!(all[0].runs.len(), 2);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn gate_seeds_when_no_baseline_matches() {
+        let reg = Registry::new("b");
+        let out = gate(&reg, &sample_record("b", "flat", 0.1), DEFAULT_THRESHOLD);
+        assert!(out.pass && out.seeded);
+        // a committed run of a DIFFERENT config also seeds
+        let mut reg = Registry::new("b");
+        reg.publish(sample_record("b", "blocked64", 0.1)).unwrap();
+        let out = gate(&reg, &sample_record("b", "flat", 0.1), DEFAULT_THRESHOLD);
+        assert!(out.pass && out.seeded);
+    }
+
+    #[test]
+    fn gate_fails_same_host_regressions_and_exact_mismatches() {
+        let mut reg = Registry::new("b");
+        reg.publish(sample_record("b", "flat", 0.1)).unwrap();
+        // within threshold: pass
+        let out = gate(&reg, &sample_record("b", "flat", 0.11), 0.15);
+        assert!(out.pass && !out.seeded, "{:?}", out.lines);
+        // wall time blows the threshold on the same host: fail
+        let out = gate(&reg, &sample_record("b", "flat", 0.2), 0.15);
+        assert!(!out.pass, "{:?}", out.lines);
+        // exact_* mismatch: fail even when wall time is fine
+        let mut cand = sample_record("b", "flat", 0.1);
+        cand.metrics.insert("exact_final_live_edges".to_string(), 2047.0);
+        let out = gate(&reg, &cand, 0.15);
+        assert!(!out.pass, "{:?}", out.lines);
+        assert!(out.lines.iter().any(|l| l.contains("behavior changed")));
+    }
+
+    #[test]
+    fn gate_downgrades_wall_clock_to_advisory_across_hosts() {
+        let mut base = sample_record("b", "flat", 0.1);
+        base.manifest.cpu_model = "SomeOtherCpu 9000".to_string();
+        let mut reg = Registry::new("b");
+        reg.publish(base).unwrap();
+        // 10× slower but on different hardware: warn, don't fail
+        let out = gate(&reg, &sample_record("b", "flat", 1.0), 0.15);
+        assert!(out.pass, "{:?}", out.lines);
+        assert!(out.lines.iter().any(|l| l.contains("different host")));
+        // exact metrics still gate across hosts
+        let mut cand = sample_record("b", "flat", 1.0);
+        cand.metrics.insert("exact_final_live_edges".to_string(), 1.0);
+        assert!(!gate(&reg, &cand, 0.15).pass);
+    }
+
+    #[test]
+    fn metric_kinds_follow_naming() {
+        assert_eq!(MetricKind::of("exact_final_live_edges"), MetricKind::Exact);
+        assert_eq!(MetricKind::of("updates_per_s"), MetricKind::HigherIsBetter);
+        assert_eq!(MetricKind::of("epoch_wall_p50_s"), MetricKind::LowerIsBetter);
+        assert_eq!(MetricKind::of("repair_frac_mean"), MetricKind::Advisory);
+    }
+
+    #[test]
+    fn churn_runs_produce_publishable_records() {
+        let cfg = crate::dynamic::churn::ChurnConfig {
+            epochs: 3,
+            batch: 100,
+            warmup_epochs: 2,
+            threads: 2,
+            ..crate::dynamic::churn::ChurnConfig::new(ChurnGen::Er { n: 256, m: 1024 })
+        };
+        let summary = run_churn(&cfg, |_| {}).unwrap();
+        let rec = churn_record(&cfg, &summary);
+        assert_eq!(rec.bench, "churn_er8_t2_p1");
+        assert_eq!(rec.config["layout"], "blocked64");
+        assert!(rec.metrics["updates_per_s"] > 0.0);
+        assert_eq!(rec.metrics["exact_epochs"], 3.0);
+        assert!(rec.metrics["exact_final_live_edges"] > 0.0);
+        // deterministic replay ⇒ the exact metric really is exact
+        let rec2 = churn_record(&cfg, &run_churn(&cfg, |_| {}).unwrap());
+        assert_eq!(
+            rec.metrics["exact_final_live_edges"],
+            rec2.metrics["exact_final_live_edges"]
+        );
+        // the trajectory report renders it
+        let mut reg = Registry::new(rec.bench.clone());
+        reg.publish(rec).unwrap();
+        let md = report_markdown(&[reg]);
+        assert!(md.contains("churn_er8_t2_p1"));
+        assert!(md.contains("updates_per_s"));
+    }
+
+    #[test]
+    fn report_shows_varying_config_keys_beside_the_hash() {
+        let mut reg = Registry::new("b");
+        reg.publish(sample_record("b", "flat", 0.1)).unwrap();
+        reg.publish(sample_record("b", "blocked64", 0.2)).unwrap();
+        let md = report_markdown(&[reg]);
+        assert!(md.contains("## b"), "{md}");
+        assert!(md.contains("layout=flat"), "{md}");
+        assert!(md.contains("layout=blocked64"), "{md}");
+        // shared keys stay out of the config cell — only the differing ones
+        // (plus the hash) distinguish rows
+        let row = md.lines().find(|l| l.contains("layout=flat")).unwrap();
+        assert!(!row.contains("threads="), "{row}");
+
+        let empty = Registry::new("quiet");
+        let md = report_markdown(&[empty]);
+        assert!(md.contains("awaiting its first publish"), "{md}");
+    }
+
+    #[test]
+    fn dates_render_from_unix_seconds() {
+        assert_eq!(format_date(0), "1970-01-01");
+        assert_eq!(format_date(1_754_000_000), "2025-07-31");
+    }
+}

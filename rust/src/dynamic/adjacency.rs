@@ -20,25 +20,137 @@
 //!   insert/delete and whole-graph iteration, used by tests and any caller
 //!   that wants plain set-semantics edge storage.
 //!
+//! # Storage layouts
+//!
+//! The sidecar is the dynamic hot path's memory story, so its physical
+//! layout is a policy ([`AdjLayout`]) rather than a fixed choice:
+//!
+//! * **`flat`** — the historical layout: one independently heap-allocated
+//!   `Vec<VertexId>` per vertex. Long lists are contiguous (good for hub
+//!   scans), but every touched vertex costs a pointer chase into the
+//!   allocator's placement, growth reallocates, and compaction churns the
+//!   heap.
+//! * **`blocked`** — a shard-local **block arena**: one contiguous slab of
+//!   cache-line-aligned edge blocks. Each block holds
+//!   `block_bytes/4 - 1` neighbor slots plus a next-block index in its last
+//!   word; a per-vertex list is a short chain of blocks threaded through
+//!   the arena, with a free list recycling blocks released by compaction.
+//!   Every slot not currently holding a neighbor holds
+//!   [`INVALID_VERTEX`], so iteration needs no per-slot occupancy metadata,
+//!   and the all-ones bit pattern doubles as the nil block link. Sweeps
+//!   issue a software prefetch for the next block in the chain while
+//!   scanning the current one, and callers can prefetch the next vertex's
+//!   metadata and head block ahead of need
+//!   ([`HalfAdjacency::prefetch_vertex`] /
+//!   [`HalfAdjacency::prefetch_neighbors`]).
+//!
+//! Both layouts implement identical *semantics* — same slot order, same
+//! first-tombstone reuse on insert, same compaction policy — so the engines
+//! behave identically under either and the property suite can demand
+//! equality, not mere equivalence.
+//!
 //! Lists grow in amortized-O(1) pushes, delete by **tombstoning** (the slot
 //! is overwritten with [`INVALID_VERTEX`] instead of shifting the tail), and
 //! reclaim tombstones with **periodic per-vertex compaction** once they
-//! outnumber the live entries. Deletes therefore cost one scan of the
-//! endpoint's list, inserts cost a membership scan (the structures maintain
-//! *set* semantics — the live graph either has an edge or it doesn't, which
-//! is what the delete path and the maximality verifier need), and iteration
-//! skips tombstones in place. Self-loops are rejected at the
-//! [`DynamicAdjacency`] level: the matcher skips them anyway (Algorithm 1
-//! lines 6–7), so they can never affect maximality and keeping them live
-//! would only pollute repair sweeps; the sharded engine filters them before
-//! its half-edge edits for the same reason.
+//! outnumber the live entries (block recycling in the arena layout).
+//! Inserts reuse the first tombstoned slot before growing, so a vertex under
+//! steady insert/delete churn keeps a constant-length list. Deletes cost one
+//! scan of the endpoint's list, inserts cost a membership scan at the caller
+//! (the structures maintain *set* semantics — the live graph either has an
+//! edge or it doesn't, which is what the delete path and the maximality
+//! verifier need), and iteration skips tombstones in place. Self-loops are
+//! rejected at the [`DynamicAdjacency`] level: the matcher skips them anyway
+//! (Algorithm 1 lines 6–7), so they can never affect maximality and keeping
+//! them live would only pollute repair sweeps; the sharded engine filters
+//! them before its half-edge edits for the same reason.
 
+use crate::instrument::Probe;
 use crate::{VertexId, INVALID_VERTEX};
 
 /// Per-vertex slots start compacting once at least this many tombstones
 /// accumulate (and tombstones outnumber live entries) — small lists just
 /// tolerate their holes.
 const COMPACT_MIN_DEAD: u32 = 8;
+
+/// Nil block index in the arena layout. Shares the all-ones bit pattern
+/// with [`INVALID_VERTEX`], so a freshly scrubbed block (every word
+/// `INVALID_VERTEX`) has empty slots *and* a nil link in one fill.
+const NIL_BLOCK: u32 = u32::MAX;
+
+/// Issue a read prefetch for the cache line at `p` (no-op off x86_64).
+#[inline(always)]
+pub(crate) fn prefetch_read<T>(p: *const T) {
+    #[cfg(target_arch = "x86_64")]
+    // SAFETY: prefetch is a hint; it never faults, even on bad addresses.
+    unsafe {
+        use std::arch::x86_64::{_mm_prefetch, _MM_HINT_T0};
+        _mm_prefetch::<_MM_HINT_T0>(p as *const i8);
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    let _ = p;
+}
+
+/// Physical storage policy for [`HalfAdjacency`]: how per-vertex neighbor
+/// lists are laid out in memory. Semantics are identical across layouts;
+/// only locality, allocation behavior, and prefetchability differ.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AdjLayout {
+    /// One heap-allocated `Vec<VertexId>` per vertex (the historical
+    /// layout): contiguous per-list storage, allocator-placed.
+    Flat,
+    /// Shard-local block arena: per-vertex chains of cache-line-aligned
+    /// blocks carved from one contiguous slab, recycled through a free
+    /// list, swept with software prefetch.
+    Blocked {
+        /// Block size in bytes — a multiple of 64 in `64..=4096`. Each
+        /// block stores `block_bytes/4 - 1` neighbor slots plus its link.
+        block_bytes: usize,
+    },
+}
+
+impl Default for AdjLayout {
+    /// The arena layout with 64-byte (one cache line) blocks.
+    fn default() -> Self {
+        AdjLayout::Blocked { block_bytes: 64 }
+    }
+}
+
+impl AdjLayout {
+    /// Parse a layout name: `flat`, `blocked` (64-byte blocks), or
+    /// `blocked<N>` with `N` a multiple of 64 in `64..=4096` (e.g.
+    /// `blocked128`).
+    pub fn parse(s: &str) -> Result<Self, String> {
+        match s {
+            "flat" => Ok(AdjLayout::Flat),
+            "blocked" => Ok(AdjLayout::Blocked { block_bytes: 64 }),
+            _ => {
+                let n = s
+                    .strip_prefix("blocked")
+                    .and_then(|rest| rest.parse::<usize>().ok())
+                    .ok_or_else(|| format!("unknown adjacency layout {s:?} (want flat | blocked | blocked<N>)"))?;
+                if !(64..=4096).contains(&n) || n % 64 != 0 {
+                    return Err(format!(
+                        "blocked block size must be a multiple of 64 in 64..=4096, got {n}"
+                    ));
+                }
+                Ok(AdjLayout::Blocked { block_bytes: n })
+            }
+        }
+    }
+
+    /// Canonical name (`flat`, `blocked64`, `blocked128`, ...), accepted
+    /// back by [`parse`](Self::parse).
+    pub fn name(&self) -> String {
+        match self {
+            AdjLayout::Flat => "flat".to_string(),
+            AdjLayout::Blocked { block_bytes } => format!("blocked{block_bytes}"),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// flat layout
+// ---------------------------------------------------------------------------
 
 #[derive(Default)]
 struct AdjList {
@@ -59,13 +171,18 @@ impl AdjList {
     }
 
     fn push(&mut self, v: VertexId) {
-        // Reuse a tombstone when one is handy at the tail, else append.
-        if self.dead > 0 && self.slots.last() == Some(&INVALID_VERTEX) {
-            *self.slots.last_mut().unwrap() = v;
-            self.dead -= 1;
-        } else {
-            self.slots.push(v);
+        // Reuse the first tombstone before growing: under steady
+        // delete/insert churn the list length stays constant instead of
+        // ratcheting up between compactions.
+        if self.dead > 0 {
+            if let Some(slot) = self.slots.iter_mut().find(|s| **s == INVALID_VERTEX) {
+                *slot = v;
+                self.dead -= 1;
+                return;
+            }
+            debug_assert!(false, "dead > 0 with no tombstoned slot");
         }
+        self.slots.push(v);
     }
 
     /// Tombstone the first slot holding `v`; false if absent.
@@ -95,9 +212,325 @@ impl AdjList {
     }
 }
 
+// ---------------------------------------------------------------------------
+// blocked layout: the shard-local block arena
+// ---------------------------------------------------------------------------
+
+/// One cache line of slot words. Blocks are a whole number of these, so
+/// every block starts cache-line-aligned inside the arena slab.
+#[repr(C, align(64))]
+#[derive(Clone, Copy)]
+struct Line([u32; Line::WORDS]);
+
+impl Line {
+    const WORDS: usize = 16;
+    /// All slots empty, link nil — the scrubbed state.
+    const EMPTY: Line = Line([INVALID_VERTEX; Line::WORDS]);
+}
+
+/// Per-vertex chain header: 16 bytes, kept in one contiguous array so the
+/// sweep over owned vertices streams through it.
+#[derive(Clone, Copy)]
+struct Meta {
+    /// First block of the chain, or [`NIL_BLOCK`].
+    head: u32,
+    /// Last block of the chain, or [`NIL_BLOCK`].
+    tail: u32,
+    /// Slot positions in use (live + tombstoned). Appends go at position
+    /// `len`; positions beyond it hold [`INVALID_VERTEX`].
+    len: u32,
+    /// Tombstoned positions below `len`.
+    dead: u32,
+}
+
+impl Meta {
+    const EMPTY: Meta = Meta { head: NIL_BLOCK, tail: NIL_BLOCK, len: 0, dead: 0 };
+}
+
+struct BlockStore {
+    /// Cache lines per block (`block_bytes / 64`).
+    lines_per_block: usize,
+    /// Neighbor slots per block (`block_bytes / 4 - 1`; the last word is
+    /// the chain link).
+    slots_per_block: u32,
+    /// The slab: every shard-owned neighbor slot lives here.
+    arena: Vec<Line>,
+    /// Chain headers, indexed by `v - start`.
+    meta: Vec<Meta>,
+    /// Head of the recycled-block free list, threaded through link words.
+    free_head: u32,
+    /// Blocks currently on the free list.
+    free_blocks: u64,
+}
+
+impl BlockStore {
+    fn new(len: usize, block_bytes: usize) -> Self {
+        assert!(
+            (64..=4096).contains(&block_bytes) && block_bytes % 64 == 0,
+            "block_bytes must be a multiple of 64 in 64..=4096, got {block_bytes}"
+        );
+        Self {
+            lines_per_block: block_bytes / 64,
+            slots_per_block: (block_bytes / 4 - 1) as u32,
+            arena: Vec::new(),
+            meta: vec![Meta::EMPTY; len],
+            free_head: NIL_BLOCK,
+            free_blocks: 0,
+        }
+    }
+
+    #[inline]
+    fn word(&self, b: u32, w: u32) -> u32 {
+        let line = b as usize * self.lines_per_block + (w >> 4) as usize;
+        self.arena[line].0[(w & 15) as usize]
+    }
+
+    #[inline]
+    fn set_word(&mut self, b: u32, w: u32, val: u32) {
+        let line = b as usize * self.lines_per_block + (w >> 4) as usize;
+        self.arena[line].0[(w & 15) as usize] = val;
+    }
+
+    #[inline]
+    fn link(&self, b: u32) -> u32 {
+        self.word(b, self.slots_per_block)
+    }
+
+    #[inline]
+    fn set_link(&mut self, b: u32, val: u32) {
+        self.set_word(b, self.slots_per_block, val);
+    }
+
+    /// Address of block `b`'s first line, for prefetch and probes.
+    #[inline]
+    fn block_ptr(&self, b: u32) -> *const Line {
+        &self.arena[b as usize * self.lines_per_block] as *const Line
+    }
+
+    /// Pop a scrubbed block off the free list, or grow the slab by one.
+    fn alloc_block(&mut self) -> u32 {
+        if self.free_head != NIL_BLOCK {
+            let b = self.free_head;
+            self.free_head = self.link(b);
+            self.set_link(b, NIL_BLOCK);
+            self.free_blocks -= 1;
+            return b;
+        }
+        let b = (self.arena.len() / self.lines_per_block) as u32;
+        debug_assert!(b != NIL_BLOCK, "arena block index space exhausted");
+        self.arena.resize(self.arena.len() + self.lines_per_block, Line::EMPTY);
+        b
+    }
+
+    /// Scrub every block of the chain starting at `b` and push it onto the
+    /// free list — compaction's "block recycling".
+    fn release_chain(&mut self, mut b: u32) {
+        while b != NIL_BLOCK {
+            let next = self.link(b);
+            let at = b as usize * self.lines_per_block;
+            for line in &mut self.arena[at..at + self.lines_per_block] {
+                *line = Line::EMPTY;
+            }
+            self.set_link(b, self.free_head);
+            self.free_head = b;
+            self.free_blocks += 1;
+            b = next;
+        }
+    }
+
+    /// Full-chain membership scan, prefetching each next block while the
+    /// current one is scanned.
+    fn contains(&self, idx: usize, nb: VertexId) -> bool {
+        let mut b = self.meta[idx].head;
+        while b != NIL_BLOCK {
+            let next = self.link(b);
+            if next != NIL_BLOCK {
+                prefetch_read(self.block_ptr(next));
+            }
+            for w in 0..self.slots_per_block {
+                if self.word(b, w) == nb {
+                    return true;
+                }
+            }
+            b = next;
+        }
+        false
+    }
+
+    /// Append `nb`, reusing the first tombstoned slot before growing the
+    /// chain (same slot-order semantics as the flat layout).
+    fn push(&mut self, idx: usize, nb: VertexId) {
+        debug_assert!(nb != INVALID_VERTEX);
+        let spb = self.slots_per_block;
+        let m = self.meta[idx];
+        if m.dead > 0 {
+            let mut b = m.head;
+            let mut pos = 0u32;
+            while b != NIL_BLOCK && pos < m.len {
+                let take = spb.min(m.len - pos);
+                for w in 0..take {
+                    if self.word(b, w) == INVALID_VERTEX {
+                        self.set_word(b, w, nb);
+                        self.meta[idx].dead -= 1;
+                        return;
+                    }
+                }
+                pos += take;
+                b = self.link(b);
+            }
+            debug_assert!(false, "dead > 0 with no tombstoned slot");
+        }
+        if m.len % spb == 0 {
+            // empty list, or the tail block is exactly full: extend the chain
+            let fresh = self.alloc_block();
+            if m.head == NIL_BLOCK {
+                self.meta[idx].head = fresh;
+            } else {
+                let tail = self.meta[idx].tail;
+                self.set_link(tail, fresh);
+            }
+            self.meta[idx].tail = fresh;
+        }
+        let tail = self.meta[idx].tail;
+        self.set_word(tail, m.len % spb, nb);
+        self.meta[idx].len += 1;
+    }
+
+    /// Tombstone the first slot holding `nb`; false if absent.
+    fn remove(&mut self, idx: usize, nb: VertexId) -> bool {
+        debug_assert!(nb != INVALID_VERTEX);
+        let mut b = self.meta[idx].head;
+        while b != NIL_BLOCK {
+            let next = self.link(b);
+            if next != NIL_BLOCK {
+                prefetch_read(self.block_ptr(next));
+            }
+            for w in 0..self.slots_per_block {
+                if self.word(b, w) == nb {
+                    self.set_word(b, w, INVALID_VERTEX);
+                    self.meta[idx].dead += 1;
+                    return true;
+                }
+            }
+            b = next;
+        }
+        false
+    }
+
+    /// Same policy as the flat layout; compaction packs the chain in place
+    /// and recycles the surplus tail blocks.
+    fn maybe_compact(&mut self, idx: usize) -> bool {
+        let m = self.meta[idx];
+        let live = m.len - m.dead;
+        if m.dead < COMPACT_MIN_DEAD || m.dead <= live {
+            return false;
+        }
+        if live == 0 {
+            let head = m.head;
+            self.meta[idx] = Meta::EMPTY;
+            self.release_chain(head);
+            return true;
+        }
+        let spb = self.slots_per_block;
+        // two-cursor pack: read walks every used position, write trails it
+        // packing live values forward in slot order
+        let (mut rb, mut rw) = (m.head, 0u32);
+        let (mut wb, mut ww) = (m.head, 0u32);
+        let mut pos = 0u32;
+        while pos < m.len {
+            if rw == spb {
+                rb = self.link(rb);
+                rw = 0;
+                continue;
+            }
+            let val = self.word(rb, rw);
+            rw += 1;
+            pos += 1;
+            if val != INVALID_VERTEX {
+                if ww == spb {
+                    wb = self.link(wb);
+                    ww = 0;
+                }
+                self.set_word(wb, ww, val);
+                ww += 1;
+            }
+        }
+        for w in ww..spb {
+            self.set_word(wb, w, INVALID_VERTEX);
+        }
+        let surplus = self.link(wb);
+        self.set_link(wb, NIL_BLOCK);
+        self.release_chain(surplus);
+        let meta = &mut self.meta[idx];
+        meta.tail = wb;
+        meta.len = live;
+        meta.dead = 0;
+        true
+    }
+
+    fn memory_bytes(&self) -> usize {
+        self.arena.capacity() * std::mem::size_of::<Line>()
+            + self.meta.capacity() * std::mem::size_of::<Meta>()
+    }
+}
+
+/// Live-neighbor iterator over either layout, in slot order.
+enum NeighborIter<'a> {
+    Flat(std::slice::Iter<'a, VertexId>),
+    Blocked {
+        store: &'a BlockStore,
+        block: u32,
+        next: u32,
+        w: u32,
+    },
+}
+
+impl Iterator for NeighborIter<'_> {
+    type Item = VertexId;
+
+    fn next(&mut self) -> Option<VertexId> {
+        match self {
+            NeighborIter::Flat(it) => it.find(|&&s| s != INVALID_VERTEX).copied(),
+            NeighborIter::Blocked { store, block, next, w } => loop {
+                if *block == NIL_BLOCK {
+                    return None;
+                }
+                if *w == 0 {
+                    // entering a block: learn its successor and prefetch it
+                    // so the chain chase overlaps the current block's scan
+                    *next = store.link(*block);
+                    if *next != NIL_BLOCK {
+                        prefetch_read(store.block_ptr(*next));
+                    }
+                }
+                if *w == store.slots_per_block {
+                    *block = *next;
+                    *w = 0;
+                    continue;
+                }
+                let val = store.word(*block, *w);
+                *w += 1;
+                if val != INVALID_VERTEX {
+                    return Some(val);
+                }
+            },
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// HalfAdjacency: the layout-polymorphic public face
+// ---------------------------------------------------------------------------
+
+enum Store {
+    Flat(Vec<AdjList>),
+    Blocked(BlockStore),
+}
+
 /// Half-edge adjacency over the contiguous owned vertex range
 /// `[start, start+len)`: tombstoned per-vertex neighbor lists with periodic
-/// compaction, edited one endpoint at a time.
+/// compaction, edited one endpoint at a time, stored per the configured
+/// [`AdjLayout`].
 ///
 /// `HalfAdjacency` does **not** enforce set semantics on its own —
 /// [`insert_half`](Self::insert_half) pushes unconditionally so a caller
@@ -108,7 +541,9 @@ impl AdjList {
 /// edge.
 pub struct HalfAdjacency {
     start: usize,
-    lists: Vec<AdjList>,
+    len: usize,
+    layout: AdjLayout,
+    store: Store,
     /// Live directed half-edges stored here (each undirected edge
     /// contributes one per stored endpoint).
     half_edges: u64,
@@ -116,11 +551,30 @@ pub struct HalfAdjacency {
 }
 
 impl HalfAdjacency {
-    /// Empty lists for the owned range `[start, start+len)`.
+    /// Empty lists for the owned range `[start, start+len)` in the default
+    /// layout.
     pub fn new(start: VertexId, len: usize) -> Self {
-        let mut lists = Vec::new();
-        lists.resize_with(len, AdjList::default);
-        Self { start: start as usize, lists, half_edges: 0, compactions: 0 }
+        Self::with_layout(start, len, AdjLayout::default())
+    }
+
+    /// Empty lists for the owned range `[start, start+len)` in the given
+    /// layout.
+    pub fn with_layout(start: VertexId, len: usize, layout: AdjLayout) -> Self {
+        let store = match layout {
+            AdjLayout::Flat => {
+                let mut lists = Vec::new();
+                lists.resize_with(len, AdjList::default);
+                Store::Flat(lists)
+            }
+            AdjLayout::Blocked { block_bytes } => Store::Blocked(BlockStore::new(len, block_bytes)),
+        };
+        Self { start: start as usize, len, layout, store, half_edges: 0, compactions: 0 }
+    }
+
+    /// The storage layout this sidecar was built with.
+    #[inline]
+    pub fn layout(&self) -> AdjLayout {
+        self.layout
     }
 
     /// First owned vertex.
@@ -132,73 +586,152 @@ impl HalfAdjacency {
     /// One past the last owned vertex.
     #[inline]
     pub fn end(&self) -> VertexId {
-        (self.start + self.lists.len()) as VertexId
+        (self.start + self.len) as VertexId
     }
 
     #[inline]
     /// Does this sidecar own vertex `v`’s list?
     pub fn owns(&self, v: VertexId) -> bool {
         let v = v as usize;
-        v >= self.start && v < self.start + self.lists.len()
+        v >= self.start && v < self.start + self.len
     }
 
     #[inline]
-    fn list(&self, v: VertexId) -> &AdjList {
-        &self.lists[v as usize - self.start]
-    }
-
-    #[inline]
-    fn list_mut(&mut self, v: VertexId) -> &mut AdjList {
-        &mut self.lists[v as usize - self.start]
+    fn idx(&self, v: VertexId) -> usize {
+        v as usize - self.start
     }
 
     /// Is the half-edge `v → nb` stored? `v` must be owned.
     #[inline]
     pub fn contains_half(&self, v: VertexId, nb: VertexId) -> bool {
-        self.list(v).contains(nb)
+        let idx = self.idx(v);
+        match &self.store {
+            Store::Flat(lists) => lists[idx].contains(nb),
+            Store::Blocked(bs) => bs.contains(idx, nb),
+        }
     }
 
     /// Store the half-edge `v → nb` unconditionally (no membership scan —
     /// see the type docs). `v` must be owned.
     #[inline]
     pub fn insert_half(&mut self, v: VertexId, nb: VertexId) {
-        self.list_mut(v).push(nb);
+        let idx = self.idx(v);
+        match &mut self.store {
+            Store::Flat(lists) => lists[idx].push(nb),
+            Store::Blocked(bs) => bs.push(idx, nb),
+        }
         self.half_edges += 1;
     }
 
     /// Tombstone the half-edge `v → nb`; false if it was not stored.
     /// Compacts `v`'s list when its tombstones dominate.
     pub fn remove_half(&mut self, v: VertexId, nb: VertexId) -> bool {
-        if !self.list_mut(v).remove(nb) {
-            return false;
+        let idx = self.idx(v);
+        let (removed, compacted) = match &mut self.store {
+            Store::Flat(lists) => {
+                let list = &mut lists[idx];
+                if list.remove(nb) {
+                    (true, list.maybe_compact())
+                } else {
+                    (false, false)
+                }
+            }
+            Store::Blocked(bs) => {
+                if bs.remove(idx, nb) {
+                    (true, bs.maybe_compact(idx))
+                } else {
+                    (false, false)
+                }
+            }
+        };
+        if removed {
+            self.half_edges -= 1;
         }
-        self.half_edges -= 1;
-        if self.list_mut(v).maybe_compact() {
+        if compacted {
             self.compactions += 1;
         }
-        true
+        removed
     }
 
     /// Live neighbors of owned vertex `v` (tombstones skipped), slot order.
     pub fn neighbors(&self, v: VertexId) -> impl Iterator<Item = VertexId> + '_ {
-        self.list(v)
-            .slots
-            .iter()
-            .copied()
-            .filter(|&s| s != INVALID_VERTEX)
+        let idx = self.idx(v);
+        match &self.store {
+            Store::Flat(lists) => NeighborIter::Flat(lists[idx].slots.iter()),
+            Store::Blocked(bs) => NeighborIter::Blocked {
+                store: bs,
+                block: bs.meta[idx].head,
+                next: NIL_BLOCK,
+                w: 0,
+            },
+        }
     }
 
     #[inline]
     /// Live (non-tombstoned) neighbor count of owned vertex `v`.
     pub fn live_degree(&self, v: VertexId) -> usize {
-        self.list(v).live_len()
+        let idx = self.idx(v);
+        match &self.store {
+            Store::Flat(lists) => lists[idx].live_len(),
+            Store::Blocked(bs) => {
+                let m = bs.meta[idx];
+                (m.len - m.dead) as usize
+            }
+        }
     }
 
     /// Raw slot count of `v`'s list, tombstones included — lets callers
     /// pick the sparser endpoint for a membership scan.
     #[inline]
     pub(crate) fn slots_len(&self, v: VertexId) -> usize {
-        self.list(v).slots.len()
+        let idx = self.idx(v);
+        match &self.store {
+            Store::Flat(lists) => lists[idx].slots.len(),
+            Store::Blocked(bs) => bs.meta[idx].len as usize,
+        }
+    }
+
+    /// Prefetch vertex `v`'s list header (chain meta in the arena layout,
+    /// the `Vec` header in the flat one). Call a few iterations ahead of
+    /// touching `v` in a sweep; pair with
+    /// [`prefetch_neighbors`](Self::prefetch_neighbors) one iteration
+    /// ahead.
+    #[inline]
+    pub fn prefetch_vertex(&self, v: VertexId) {
+        if !self.owns(v) {
+            return;
+        }
+        let idx = self.idx(v);
+        match &self.store {
+            Store::Flat(lists) => prefetch_read(&lists[idx] as *const AdjList),
+            Store::Blocked(bs) => prefetch_read(&bs.meta[idx] as *const Meta),
+        }
+    }
+
+    /// Prefetch the first cache line of vertex `v`'s neighbor slots. Reads
+    /// the list header to find them, so it pays off when the header is
+    /// already cached (e.g. after a [`prefetch_vertex`](Self::prefetch_vertex)
+    /// issued earlier in the sweep).
+    #[inline]
+    pub fn prefetch_neighbors(&self, v: VertexId) {
+        if !self.owns(v) {
+            return;
+        }
+        let idx = self.idx(v);
+        match &self.store {
+            Store::Flat(lists) => {
+                let slots = &lists[idx].slots;
+                if !slots.is_empty() {
+                    prefetch_read(slots.as_ptr());
+                }
+            }
+            Store::Blocked(bs) => {
+                let head = bs.meta[idx].head;
+                if head != NIL_BLOCK {
+                    prefetch_read(bs.block_ptr(head));
+                }
+            }
+        }
     }
 
     /// Live directed half-edges stored in this range.
@@ -209,7 +742,10 @@ impl HalfAdjacency {
 
     /// Tombstoned slots currently awaiting compaction.
     pub fn tombstones(&self) -> u64 {
-        self.lists.iter().map(|l| l.dead as u64).sum()
+        match &self.store {
+            Store::Flat(lists) => lists.iter().map(|l| l.dead as u64).sum(),
+            Store::Blocked(bs) => bs.meta.iter().map(|m| m.dead as u64).sum(),
+        }
     }
 
     /// Per-vertex compactions performed so far.
@@ -217,13 +753,69 @@ impl HalfAdjacency {
         self.compactions
     }
 
-    /// Resident bytes (slot storage plus list headers).
+    /// Arena blocks currently parked on the recycling free list (0 in the
+    /// flat layout).
+    pub fn free_blocks(&self) -> u64 {
+        match &self.store {
+            Store::Flat(_) => 0,
+            Store::Blocked(bs) => bs.free_blocks,
+        }
+    }
+
+    /// Resident bytes (slot storage plus list headers / chain metadata).
     pub fn memory_bytes(&self) -> usize {
-        self.lists
-            .iter()
-            .map(|l| l.slots.capacity() * std::mem::size_of::<VertexId>())
-            .sum::<usize>()
-            + self.lists.capacity() * std::mem::size_of::<AdjList>()
+        match &self.store {
+            Store::Flat(lists) => {
+                lists
+                    .iter()
+                    .map(|l| l.slots.capacity() * std::mem::size_of::<VertexId>())
+                    .sum::<usize>()
+                    + lists.capacity() * std::mem::size_of::<AdjList>()
+            }
+            Store::Blocked(bs) => bs.memory_bytes(),
+        }
+    }
+
+    /// Replay one full iteration sweep (every owned vertex, every slot)
+    /// against `probe`, emitting loads at the *actual* resident addresses
+    /// of whatever the sweep dereferences — list headers, slot words, and
+    /// chain links. Replaying the trace through [`crate::cachesim`] gives
+    /// the layout's miss profile the way Fig 8 does for the matchers.
+    /// Returns the live half-edges visited (a checksum for `black_box`).
+    pub fn probe_sweep(&self, probe: &mut impl Probe) -> u64 {
+        let mut live = 0u64;
+        match &self.store {
+            Store::Flat(lists) => {
+                for list in lists {
+                    probe.load(list as *const AdjList as u64);
+                    for slot in &list.slots {
+                        probe.load(slot as *const VertexId as u64);
+                        if *slot != INVALID_VERTEX {
+                            live += 1;
+                        }
+                    }
+                }
+            }
+            Store::Blocked(bs) => {
+                for m in &bs.meta {
+                    probe.load(m as *const Meta as u64);
+                    let mut b = m.head;
+                    while b != NIL_BLOCK {
+                        let base = bs.block_ptr(b) as u64;
+                        for w in 0..bs.slots_per_block {
+                            probe.load(base + w as u64 * 4);
+                            if bs.word(b, w) != INVALID_VERTEX {
+                                live += 1;
+                            }
+                        }
+                        // the link word is read to chase the chain
+                        probe.load(base + bs.slots_per_block as u64 * 4);
+                        b = bs.link(b);
+                    }
+                }
+            }
+        }
+        live
     }
 }
 
@@ -236,9 +828,20 @@ pub struct DynamicAdjacency {
 }
 
 impl DynamicAdjacency {
-    /// Empty adjacency over `0..num_vertices`.
+    /// Empty adjacency over `0..num_vertices` in the default layout.
     pub fn new(num_vertices: usize) -> Self {
         Self { half: HalfAdjacency::new(0, num_vertices) }
+    }
+
+    /// Empty adjacency over `0..num_vertices` in the given layout.
+    pub fn with_layout(num_vertices: usize, layout: AdjLayout) -> Self {
+        Self { half: HalfAdjacency::with_layout(0, num_vertices, layout) }
+    }
+
+    /// The storage layout this sidecar was built with.
+    #[inline]
+    pub fn layout(&self) -> AdjLayout {
+        self.half.layout()
     }
 
     #[inline]
@@ -325,26 +928,53 @@ impl DynamicAdjacency {
     pub fn memory_bytes(&self) -> usize {
         self.half.memory_bytes()
     }
+
+    /// Replay one full iteration sweep against `probe` at resident
+    /// addresses — see [`HalfAdjacency::probe_sweep`].
+    pub fn probe_sweep(&self, probe: &mut impl Probe) -> u64 {
+        self.half.probe_sweep(probe)
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
 
+    /// Every layout the semantics tests must agree across.
+    const LAYOUTS: [AdjLayout; 4] = [
+        AdjLayout::Flat,
+        AdjLayout::Blocked { block_bytes: 64 },
+        AdjLayout::Blocked { block_bytes: 128 },
+        AdjLayout::Blocked { block_bytes: 256 },
+    ];
+
+    #[test]
+    fn layout_names_roundtrip() {
+        for l in LAYOUTS {
+            assert_eq!(AdjLayout::parse(&l.name()).unwrap(), l);
+        }
+        assert_eq!(AdjLayout::parse("blocked").unwrap(), AdjLayout::Blocked { block_bytes: 64 });
+        assert!(AdjLayout::parse("blocked65").is_err());
+        assert!(AdjLayout::parse("blocked8192").is_err());
+        assert!(AdjLayout::parse("mystery").is_err());
+    }
+
     #[test]
     fn insert_delete_roundtrip_with_set_semantics() {
-        let mut a = DynamicAdjacency::new(5);
-        assert!(a.insert(0, 1));
-        assert!(!a.insert(1, 0), "reinsert of the reverse orientation");
-        assert!(a.insert(1, 2));
-        assert_eq!(a.num_live_edges(), 2);
-        assert!(a.contains(0, 1) && a.contains(1, 0));
-        assert!(a.delete(1, 0));
-        assert!(!a.delete(0, 1), "double delete");
-        assert_eq!(a.num_live_edges(), 1);
-        assert!(!a.contains(0, 1));
-        assert_eq!(a.live_degree(1), 1);
-        assert_eq!(a.live_neighbors(1).collect::<Vec<_>>(), vec![2]);
+        for layout in LAYOUTS {
+            let mut a = DynamicAdjacency::with_layout(5, layout);
+            assert!(a.insert(0, 1));
+            assert!(!a.insert(1, 0), "reinsert of the reverse orientation");
+            assert!(a.insert(1, 2));
+            assert_eq!(a.num_live_edges(), 2);
+            assert!(a.contains(0, 1) && a.contains(1, 0));
+            assert!(a.delete(1, 0));
+            assert!(!a.delete(0, 1), "double delete");
+            assert_eq!(a.num_live_edges(), 1);
+            assert!(!a.contains(0, 1));
+            assert_eq!(a.live_degree(1), 1);
+            assert_eq!(a.live_neighbors(1).collect::<Vec<_>>(), vec![2]);
+        }
     }
 
     #[test]
@@ -358,37 +988,163 @@ mod tests {
 
     #[test]
     fn tombstones_are_skipped_and_reused() {
-        let mut a = DynamicAdjacency::new(4);
-        a.insert(0, 1);
-        a.insert(0, 2);
-        a.insert(0, 3);
-        a.delete(0, 3); // tail slot becomes a tombstone...
-        assert_eq!(a.tombstones(), 2);
-        a.insert(0, 3); // ...and is reused by the next push
-        assert_eq!(a.live_degree(0), 3);
-        a.delete(0, 2);
-        assert_eq!(
-            a.live_neighbors(0).collect::<Vec<_>>(),
-            vec![1, 3],
-            "tombstone skipped mid-list"
-        );
+        for layout in LAYOUTS {
+            let mut a = DynamicAdjacency::with_layout(4, layout);
+            a.insert(0, 1);
+            a.insert(0, 2);
+            a.insert(0, 3);
+            a.delete(0, 3); // tail slot becomes a tombstone...
+            assert_eq!(a.tombstones(), 2);
+            a.insert(0, 3); // ...and is reused by the next push
+            assert_eq!(a.live_degree(0), 3);
+            a.delete(0, 2);
+            assert_eq!(
+                a.live_neighbors(0).collect::<Vec<_>>(),
+                vec![1, 3],
+                "tombstone skipped mid-list ({})",
+                layout.name()
+            );
+        }
+    }
+
+    #[test]
+    fn first_tombstone_is_reused_before_growth() {
+        for layout in LAYOUTS {
+            let mut a = DynamicAdjacency::with_layout(8, layout);
+            for v in 1..=4 {
+                a.insert(0, v);
+            }
+            a.delete(0, 1); // hole at slot 0
+            a.delete(0, 3); // hole at slot 2
+            a.insert(0, 5); // must land in the FIRST hole
+            assert_eq!(
+                a.live_neighbors(0).collect::<Vec<_>>(),
+                vec![5, 2, 4],
+                "first hole reused ({})",
+                layout.name()
+            );
+        }
+    }
+
+    #[test]
+    fn sustained_churn_on_one_vertex_keeps_constant_list_length() {
+        // the satellite regression: delete+reinsert cycling must not grow
+        // the list — every insert lands in the tombstone the delete left
+        for layout in LAYOUTS {
+            let mut a = DynamicAdjacency::with_layout(64, layout);
+            for v in 1..=6 {
+                a.insert(0, v);
+            }
+            let baseline = a.half.slots_len(0);
+            for round in 0..1000u32 {
+                let v = 1 + (round % 6);
+                assert!(a.delete(0, v));
+                assert!(a.insert(0, v));
+                assert_eq!(
+                    a.half.slots_len(0),
+                    baseline,
+                    "list grew under steady churn ({})",
+                    layout.name()
+                );
+            }
+            assert_eq!(a.live_degree(0), 6);
+            assert_eq!(a.tombstones(), 0);
+        }
     }
 
     #[test]
     fn compaction_reclaims_dominating_tombstones() {
-        let n = 64;
-        let mut a = DynamicAdjacency::new(n + 1);
-        for v in 1..=n {
-            a.insert(0, v as VertexId);
+        for layout in LAYOUTS {
+            let n = 64;
+            let mut a = DynamicAdjacency::with_layout(n + 1, layout);
+            for v in 1..=n {
+                a.insert(0, v as VertexId);
+            }
+            for v in 1..=n - 4 {
+                a.delete(0, v as VertexId);
+            }
+            assert!(a.compactions() > 0, "hub list should have compacted");
+            assert_eq!(a.live_degree(0), 4);
+            // vertex 0's list really shrank
+            assert!(a.half.slots_len(0) <= 8, "slots {}", a.half.slots_len(0));
+            assert_eq!(a.num_live_edges(), 4);
         }
-        for v in 1..=n - 4 {
-            a.delete(0, v as VertexId);
+    }
+
+    #[test]
+    fn blocked_compaction_recycles_blocks() {
+        let mut a = DynamicAdjacency::with_layout(256, AdjLayout::Blocked { block_bytes: 64 });
+        for v in 1..=128 {
+            a.insert(0, v);
         }
-        assert!(a.compactions() > 0, "hub list should have compacted");
-        assert_eq!(a.live_degree(0), 4);
-        // vertex 0's list really shrank
-        assert!(a.half.slots_len(0) <= 8, "slots {}", a.half.slots_len(0));
-        assert_eq!(a.num_live_edges(), 4);
+        let grown = a.memory_bytes();
+        for v in 1..=128 {
+            a.delete(0, v);
+        }
+        assert!(a.compactions() > 0);
+        assert!(a.half.free_blocks() > 0, "compaction should recycle chain blocks");
+        // the hub re-grows entirely from the free list: the slab must not grow
+        for v in 1..=128 {
+            a.insert(0, v);
+        }
+        assert!(
+            a.memory_bytes() <= grown,
+            "arena grew ({} -> {}) despite a populated free list",
+            grown,
+            a.memory_bytes()
+        );
+    }
+
+    #[test]
+    fn layouts_agree_exactly_under_random_churn() {
+        use crate::util::rng::Xoshiro256pp;
+        let n = 80;
+        let mut subjects: Vec<DynamicAdjacency> = LAYOUTS
+            .iter()
+            .map(|&l| DynamicAdjacency::with_layout(n, l))
+            .collect();
+        let mut rng = Xoshiro256pp::new(42);
+        for _ in 0..30_000 {
+            let u = rng.next_usize(n) as VertexId;
+            let v = rng.next_usize(n) as VertexId;
+            let ins = rng.next_usize(3) > 0;
+            let results: Vec<bool> = subjects
+                .iter_mut()
+                .map(|a| if ins { a.insert(u, v) } else { a.delete(u, v) })
+                .collect();
+            assert!(results.windows(2).all(|w| w[0] == w[1]), "layouts diverged on op");
+        }
+        let reference: Vec<Vec<VertexId>> = (0..n as VertexId)
+            .map(|v| subjects[0].live_neighbors(v).collect())
+            .collect();
+        for (a, layout) in subjects.iter().zip(LAYOUTS.iter()).skip(1) {
+            assert_eq!(a.num_live_edges(), subjects[0].num_live_edges());
+            assert_eq!(a.tombstones(), subjects[0].tombstones(), "{}", layout.name());
+            assert_eq!(a.compactions(), subjects[0].compactions(), "{}", layout.name());
+            for v in 0..n as VertexId {
+                assert_eq!(
+                    a.live_neighbors(v).collect::<Vec<_>>(),
+                    reference[v as usize],
+                    "slot order diverged at v={v} ({})",
+                    layout.name()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn probe_sweep_counts_live_half_edges() {
+        use crate::instrument::CountingProbe;
+        for layout in LAYOUTS {
+            let mut a = DynamicAdjacency::with_layout(16, layout);
+            a.insert(0, 1);
+            a.insert(2, 3);
+            a.insert(0, 3);
+            a.delete(2, 3);
+            let mut p = CountingProbe::default();
+            assert_eq!(a.probe_sweep(&mut p), 4, "{}", layout.name());
+            assert!(p.loads > 0);
+        }
     }
 
     #[test]
@@ -406,62 +1162,68 @@ mod tests {
     #[test]
     fn churn_keeps_counts_consistent() {
         use crate::util::rng::Xoshiro256pp;
-        let n = 50;
-        let mut a = DynamicAdjacency::new(n);
-        let mut reference: std::collections::HashSet<(VertexId, VertexId)> =
-            std::collections::HashSet::new();
-        let mut rng = Xoshiro256pp::new(7);
-        for _ in 0..20_000 {
-            let u = rng.next_usize(n) as VertexId;
-            let v = rng.next_usize(n) as VertexId;
-            let key = (u.min(v), u.max(v));
-            if rng.next_usize(2) == 0 {
-                assert_eq!(a.insert(u, v), u != v && reference.insert(key));
-            } else {
-                assert_eq!(a.delete(u, v), reference.remove(&key));
+        for layout in LAYOUTS {
+            let n = 50;
+            let mut a = DynamicAdjacency::with_layout(n, layout);
+            let mut reference: std::collections::HashSet<(VertexId, VertexId)> =
+                std::collections::HashSet::new();
+            let mut rng = Xoshiro256pp::new(7);
+            for _ in 0..20_000 {
+                let u = rng.next_usize(n) as VertexId;
+                let v = rng.next_usize(n) as VertexId;
+                let key = (u.min(v), u.max(v));
+                if rng.next_usize(2) == 0 {
+                    assert_eq!(a.insert(u, v), u != v && reference.insert(key));
+                } else {
+                    assert_eq!(a.delete(u, v), reference.remove(&key));
+                }
             }
+            assert_eq!(a.num_live_edges(), reference.len() as u64);
+            let mut live: Vec<_> = a.live_edge_iter().collect();
+            live.sort_unstable();
+            let mut want: Vec<_> = reference.into_iter().collect();
+            want.sort_unstable();
+            assert_eq!(live, want);
         }
-        assert_eq!(a.num_live_edges(), reference.len() as u64);
-        let mut live: Vec<_> = a.live_edge_iter().collect();
-        live.sort_unstable();
-        let mut want: Vec<_> = reference.into_iter().collect();
-        want.sort_unstable();
-        assert_eq!(live, want);
     }
 
     #[test]
     fn half_adjacency_owns_only_its_range() {
-        let mut h = HalfAdjacency::new(8, 4);
-        assert_eq!(h.start(), 8);
-        assert_eq!(h.end(), 12);
-        assert!(h.owns(8) && h.owns(11));
-        assert!(!h.owns(7) && !h.owns(12));
-        // neighbors may lie outside the owned range
-        h.insert_half(9, 1000);
-        h.insert_half(9, 3);
-        assert_eq!(h.half_edges(), 2);
-        assert!(h.contains_half(9, 1000));
-        assert!(!h.contains_half(9, 4));
-        assert!(h.remove_half(9, 3));
-        assert!(!h.remove_half(9, 3), "double remove of a half-edge");
-        assert_eq!(h.half_edges(), 1);
-        assert_eq!(h.neighbors(9).collect::<Vec<_>>(), vec![1000]);
-        assert_eq!(h.live_degree(9), 1);
+        for layout in LAYOUTS {
+            let mut h = HalfAdjacency::with_layout(8, 4, layout);
+            assert_eq!(h.start(), 8);
+            assert_eq!(h.end(), 12);
+            assert!(h.owns(8) && h.owns(11));
+            assert!(!h.owns(7) && !h.owns(12));
+            // neighbors may lie outside the owned range
+            h.insert_half(9, 1000);
+            h.insert_half(9, 3);
+            assert_eq!(h.half_edges(), 2);
+            assert!(h.contains_half(9, 1000));
+            assert!(!h.contains_half(9, 4));
+            assert!(h.remove_half(9, 3));
+            assert!(!h.remove_half(9, 3), "double remove of a half-edge");
+            assert_eq!(h.half_edges(), 1);
+            assert_eq!(h.neighbors(9).collect::<Vec<_>>(), vec![1000]);
+            assert_eq!(h.live_degree(9), 1);
+        }
     }
 
     #[test]
     fn half_adjacency_compacts_like_the_full_sidecar() {
-        let mut h = HalfAdjacency::new(0, 1);
-        for v in 1..=64u32 {
-            h.insert_half(0, v);
+        for layout in LAYOUTS {
+            let mut h = HalfAdjacency::with_layout(0, 1, layout);
+            for v in 1..=64u32 {
+                h.insert_half(0, v);
+            }
+            for v in 1..=60u32 {
+                assert!(h.remove_half(0, v));
+            }
+            assert!(h.compactions() > 0);
+            assert_eq!(h.live_degree(0), 4);
+            assert!(h.slots_len(0) <= 8, "slots {}", h.slots_len(0));
+            assert!(h.tombstones() <= 4);
         }
-        for v in 1..=60u32 {
-            assert!(h.remove_half(0, v));
-        }
-        assert!(h.compactions() > 0);
-        assert_eq!(h.live_degree(0), 4);
-        assert!(h.slots_len(0) <= 8, "slots {}", h.slots_len(0));
-        assert!(h.tombstones() <= 4);
     }
 
     #[test]

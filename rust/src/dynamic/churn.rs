@@ -11,6 +11,7 @@
 //! edges are recycled once the population runs dry, so arbitrarily long
 //! runs never starve).
 
+use super::adjacency::AdjLayout;
 use super::engine::{EpochReport, Update};
 use super::partition::{ShardExec, ShardedDynamicMatcher};
 use crate::graph::gen::{barabasi_albert, erdos_renyi, grid, rmat, GenConfig};
@@ -127,6 +128,8 @@ pub struct ChurnConfig {
     /// Dispatch shard phases to the persistent worker pool (default);
     /// `false` forks scoped threads per epoch — the measured baseline.
     pub pool: bool,
+    /// Adjacency sidecar storage layout (`flat` vs cache-line `blocked`).
+    pub layout: AdjLayout,
     /// Churn epochs after warmup.
     pub epochs: usize,
     /// Updates per churn epoch.
@@ -158,6 +161,7 @@ impl ChurnConfig {
             threads: 4,
             engine_shards: 1,
             pool: true,
+            layout: AdjLayout::default(),
             epochs: 10,
             batch: 10_000,
             delete_frac: 0.5,
@@ -216,6 +220,9 @@ pub struct ChurnSummary {
     pub epoch_route_s: Vec<f64>,
     /// Live undirected edges at the end of the run.
     pub final_live_edges: u64,
+    /// Adjacency-sidecar resident bytes at the end of the run — what the
+    /// layout sweep compares across flat/blocked storage.
+    pub final_adjacency_bytes: usize,
     /// Matched vertices at the end of the run.
     pub final_matched_vertices: usize,
     /// Epochs whose post-epoch verification passed.
@@ -235,8 +242,13 @@ pub fn run_churn(
     if pending.is_empty() {
         return Err("generator produced no edges".into());
     }
-    let engine =
-        ShardedDynamicMatcher::with_exec(n, cfg.threads, cfg.engine_shards, cfg.shard_exec());
+    let engine = ShardedDynamicMatcher::with_exec_layout(
+        n,
+        cfg.threads,
+        cfg.engine_shards,
+        cfg.shard_exec(),
+        cfg.layout,
+    );
     let mut live: Vec<(VertexId, VertexId)> = Vec::with_capacity(pending.len());
     let mut graveyard: Vec<(VertexId, VertexId)> = Vec::new();
     let mut summary = ChurnSummary::default();
@@ -358,6 +370,7 @@ pub fn run_churn(
         summary.repair_frac_mean /= summary.epochs as f64;
     }
     summary.final_live_edges = engine.num_live_edges();
+    summary.final_adjacency_bytes = engine.adjacency_bytes();
     summary.final_matched_vertices = engine.matched_vertices();
 
     // --- save: persist the warmed/churned state for instant restarts -----
@@ -459,6 +472,35 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn layouts_run_the_same_schedule_to_the_same_state() {
+        // flat and blocked storage are alternative layouts of the same
+        // abstract list: the whole run — matching decisions included — must
+        // be bit-identical across them
+        let mut finals = Vec::new();
+        for layout in [
+            AdjLayout::Flat,
+            AdjLayout::Blocked { block_bytes: 64 },
+            AdjLayout::Blocked { block_bytes: 256 },
+        ] {
+            let cfg = ChurnConfig {
+                epochs: 4,
+                batch: 200,
+                warmup_epochs: 2,
+                threads: 2,
+                engine_shards: 2,
+                layout,
+                ..ChurnConfig::new(ChurnGen::Rmat { scale: 9, avg_degree: 4 })
+            };
+            let summary = run_churn(&cfg, |e| {
+                assert!(matches!(e.verified, Some(Ok(()))), "{layout:?}");
+            })
+            .unwrap_or_else(|e| panic!("{layout:?}: {e}"));
+            finals.push((summary.final_live_edges, summary.final_matched_vertices));
+        }
+        assert!(finals.windows(2).all(|w| w[0] == w[1]), "diverged: {finals:?}");
     }
 
     #[test]

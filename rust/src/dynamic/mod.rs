@@ -41,6 +41,6 @@ pub mod churn;
 pub mod engine;
 pub mod partition;
 
-pub use adjacency::{DynamicAdjacency, HalfAdjacency};
+pub use adjacency::{AdjLayout, DynamicAdjacency, HalfAdjacency};
 pub use engine::{DynamicMatcher, EpochReport, Update};
 pub use partition::{ShardExec, ShardMailboxes, ShardedDynamicMatcher, VertexPartition};

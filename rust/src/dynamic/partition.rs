@@ -91,7 +91,7 @@
 //! The full system walk-through (with this engine in context) lives in
 //! `docs/ARCHITECTURE.md`.
 
-use super::adjacency::HalfAdjacency;
+use super::adjacency::{AdjLayout, HalfAdjacency};
 use super::engine::{EpochReport, Update};
 use crate::graph::stream::BatchEdgeSource;
 use crate::matching::core::SkipperCore;
@@ -103,6 +103,13 @@ use crate::{VertexId, INVALID_VERTEX};
 use std::sync::atomic::{AtomicU32, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
+
+/// Software-prefetch lookahead (in loop iterations) for list *headers*
+/// during the mutate/repair sweeps. Headers are prefetched this far ahead
+/// so that by the time the one-iteration-ahead slot-line prefetch reads
+/// them, they are already resident; the values the sweep needs *now* were
+/// requested several iterations ago.
+const PF_HEADER: usize = 4;
 
 /// A split of the vertex universe `0..n` into contiguous shard ranges.
 #[derive(Clone, Debug)]
@@ -301,7 +308,20 @@ impl EngineShared {
         let mut st = self.shards[i].lock().unwrap();
         let st = &mut *st;
         let mut out = MutateOut::default();
-        for &op in ops {
+        for (k, &op) in ops.iter().enumerate() {
+            // Two-distance software prefetch down the op stream: pull the
+            // next-but-few op's list header toward the core now, and the
+            // *next* op's first slot line once its header (prefetched a few
+            // ops ago) is warm — the membership scan below is the phase's
+            // dominant memory traffic.
+            if let Some(&(Update::Insert(a, b) | Update::Delete(a, b))) = ops.get(k + PF_HEADER) {
+                let (u, v) = (a.min(b), a.max(b));
+                st.adj.prefetch_vertex(if st.adj.owns(u) { u } else { v });
+            }
+            if let Some(&(Update::Insert(a, b) | Update::Delete(a, b))) = ops.get(k + 1) {
+                let (u, v) = (a.min(b), a.max(b));
+                st.adj.prefetch_neighbors(if st.adj.owns(u) { u } else { v });
+            }
             match op {
                 Update::Insert(a, b) => {
                     if a == b {
@@ -384,7 +404,13 @@ impl EngineShared {
         let mut st = self.shards[i].lock().unwrap();
         let st = &mut *st;
         let mut repair = Vec::new();
-        for &f in &st.freed {
+        for (k, &f) in st.freed.iter().enumerate() {
+            if let Some(&ahead) = st.freed.get(k + PF_HEADER) {
+                st.adj.prefetch_vertex(ahead);
+            }
+            if let Some(&next) = st.freed.get(k + 1) {
+                st.adj.prefetch_neighbors(next);
+            }
             // the insert pass may already have re-matched a freed vertex
             if self.partner[f as usize].load(Ordering::Acquire) != INVALID_VERTEX {
                 continue;
@@ -419,6 +445,8 @@ pub struct ShardedDynamicMatcher {
     /// race mutate against harvest — this gate makes them queue instead.
     epoch_gate: Mutex<()>,
     epoch: AtomicU64,
+    /// The adjacency storage layout every shard was built with.
+    layout: AdjLayout,
 }
 
 impl ShardedDynamicMatcher {
@@ -439,6 +467,24 @@ impl ShardedDynamicMatcher {
         Self::with_partition_exec(VertexPartition::equal(num_vertices, engine_shards), threads, exec)
     }
 
+    /// Like [`with_exec`](Self::with_exec) with an explicit adjacency
+    /// storage layout — the knob `churn --layout`, the `scale` experiment,
+    /// and the layout benches sweep.
+    pub fn with_exec_layout(
+        num_vertices: usize,
+        threads: usize,
+        engine_shards: usize,
+        exec: ShardExec,
+        layout: AdjLayout,
+    ) -> Self {
+        Self::with_partition_exec_layout(
+            VertexPartition::equal(num_vertices, engine_shards),
+            threads,
+            exec,
+            layout,
+        )
+    }
+
     /// Engine over an explicit partition, pooled shard dispatch.
     pub fn with_partition(partition: VertexPartition, threads: usize) -> Self {
         Self::with_partition_exec(partition, threads, ShardExec::Pool)
@@ -450,12 +496,23 @@ impl ShardedDynamicMatcher {
         threads: usize,
         exec: ShardExec,
     ) -> Self {
+        Self::with_partition_exec_layout(partition, threads, exec, AdjLayout::default())
+    }
+
+    /// Engine over an explicit partition, shard-dispatch policy, and
+    /// adjacency storage layout.
+    pub fn with_partition_exec_layout(
+        partition: VertexPartition,
+        threads: usize,
+        exec: ShardExec,
+        layout: AdjLayout,
+    ) -> Self {
         let n = partition.num_vertices();
         let shards: Vec<Mutex<ShardState>> = (0..partition.num_shards())
             .map(|i| {
                 let (s, e) = partition.range(i);
                 Mutex::new(ShardState {
-                    adj: HalfAdjacency::new(s, (e - s) as usize),
+                    adj: HalfAdjacency::with_layout(s, (e - s) as usize, layout),
                     freed: Vec::new(),
                 })
             })
@@ -476,6 +533,7 @@ impl ShardedDynamicMatcher {
             pool,
             epoch_gate: Mutex::new(()),
             epoch: AtomicU64::new(0),
+            layout,
         }
     }
 
@@ -495,6 +553,12 @@ impl ShardedDynamicMatcher {
     #[inline]
     pub fn exec(&self) -> ShardExec {
         self.exec
+    }
+
+    /// The adjacency storage layout this engine was built with.
+    #[inline]
+    pub fn layout(&self) -> AdjLayout {
+        self.layout
     }
 
     /// Is a standing worker pool actually serving the shard phases? False
@@ -583,6 +647,9 @@ impl ShardedDynamicMatcher {
         for shard in &self.shared.shards {
             let st = shard.lock().unwrap();
             for w in st.adj.start()..st.adj.end() {
+                if w + 1 < st.adj.end() {
+                    st.adj.prefetch_neighbors(w + 1);
+                }
                 for nb in st.adj.neighbors(w) {
                     if w < nb {
                         edges.push((w, nb));

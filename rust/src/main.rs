@@ -11,6 +11,9 @@
 //!               DELETE/QUERY/STATS/EPOCH over the fully dynamic engine
 //!   churn       insert/delete churn driver over the dynamic engine with
 //!               per-epoch maximality verification and repair telemetry
+//!   report      perf-trajectory registry: render committed BENCH_*.json
+//!               files as markdown, publish a recorded run, or gate a
+//!               candidate run against the last committed baseline
 //!   info        print dataset/suite information
 
 use skipper::apram::{simulate_skipper, SimConfig};
@@ -34,9 +37,12 @@ use skipper::matching::sgmm::Sgmm;
 use skipper::matching::skipper::Skipper;
 use skipper::matching::streaming::{StreamingSkipper, DEFAULT_CHUNK_EDGES};
 use skipper::matching::{verify, MaximalMatcher};
+use skipper::coordinator::registry::{self, BenchRecord, Registry};
 use skipper::dynamic::churn::{run_churn, ChurnConfig, ChurnGen};
+use skipper::dynamic::AdjLayout;
 use skipper::service::{serve_lines, serve_tcp, ServiceConfig};
 use skipper::util::cli::Args;
+use std::path::Path;
 use std::time::Instant;
 
 const USAGE: &str = "\
@@ -83,14 +89,31 @@ USAGE:
   skipper-cli churn [--gen rmat|er|ba|grid] [--scale LOG2_V] [--avg-degree D]
               [--epochs E] [--batch B] [--delete-frac F] [--threads N]
               [--engine-shards P] [--no-pool] [--warmup-epochs W] [--seed S]
-              [--no-verify] [--save FILE] [--load FILE]
+              [--layout flat|blocked|blocked<N>] [--block-bytes N]
+              [--no-verify] [--save FILE] [--load FILE] [--record FILE]
               (mixed insert/delete epochs over the dynamic engine; verifies
                maximality over the LIVE edge set after every epoch and
                reports spawn-vs-run mutate timings — --no-pool selects the
-               forked per-epoch baseline for comparison. --save FILE writes
-               the warmed engine state as a snapshot at the end; --load
-               FILE restores one instead of running warmup, so a warmed-up
-               workload restarts instantly)
+               forked per-epoch baseline for comparison. --layout picks the
+               adjacency sidecar storage: flat per-vertex vectors, or the
+               cache-line block arena (default blocked64; blocked<N> or
+               --block-bytes N sets the block size, a multiple of 64 in
+               64..=4096). --save FILE writes the warmed engine state as a
+               snapshot at the end; --load FILE restores one instead of
+               running warmup, so a warmed-up workload restarts instantly.
+               --record FILE writes the run's machine manifest, config, and
+               metrics as a candidate record for `skipper-cli report`)
+  skipper-cli report [--dir BENCH] [--publish FILE | --gate FILE [--threshold T]]
+              (the committed perf-trajectory registry, BENCH_<bench>.json
+               under --dir. With no action: render every registry as a
+               markdown trajectory report. --publish appends a candidate
+               record — from `churn --record` or a bench — to its registry.
+               --gate compares a candidate against the last committed run of
+               the same config hash and exits non-zero on regression beyond
+               --threshold (default 0.15): exact_* metrics must match
+               bit-for-bit even across machines, wall-clock metrics gate
+               strictly only when the machine manifests match and warn
+               otherwise, and an unseen config passes as a seeding run)
   skipper-cli info
 ";
 
@@ -130,6 +153,7 @@ fn main() {
         "suite" => cmd_suite(&args),
         "serve" => cmd_serve(&args),
         "churn" => cmd_churn(&args),
+        "report" => cmd_report(&args),
         "info" => cmd_info(),
         other => Err(format!("unknown command {other:?}\n{USAGE}")),
     };
@@ -535,11 +559,19 @@ fn cmd_churn(args: &Args) -> Result<(), String> {
     let scale: u32 = args.get_parse("scale", 16u32)?;
     let avg_degree: u32 = args.get_parse("avg-degree", 8u32)?;
     let gen = ChurnGen::parse(args.get_or("gen", "rmat"), scale, avg_degree)?;
+    let mut layout = AdjLayout::parse(args.get_or("layout", "blocked64"))?;
+    if let Some(bb) = args.get("block-bytes") {
+        if layout == AdjLayout::Flat {
+            return Err("--block-bytes requires --layout blocked".into());
+        }
+        layout = AdjLayout::parse(&format!("blocked{bb}"))?;
+    }
     let cfg = ChurnConfig {
         seed: args.get_parse("seed", 1u64)?,
         threads: args.get_parse("threads", 4usize)?,
         engine_shards: args.get_parse("engine-shards", 1usize)?,
         pool: !args.flag("no-pool"),
+        layout,
         epochs: args.get_parse("epochs", 10usize)?,
         batch: args.get_parse("batch", 20_000usize)?,
         delete_frac: args.get_parse("delete-frac", 0.5f64)?,
@@ -556,11 +588,12 @@ fn cmd_churn(args: &Args) -> Result<(), String> {
         return Err("--engine-shards must be >= 1".into());
     }
     println!(
-        "churn {} |V|={} t={} P={} ({} shard workers): {}, then {} epochs of {} updates ({:.0}% deletes){}",
+        "churn {} |V|={} t={} P={} layout={} ({} shard workers): {}, then {} epochs of {} updates ({:.0}% deletes){}",
         gen.name(),
         gen.num_vertices(),
         cfg.threads,
         cfg.engine_shards,
+        cfg.layout.name(),
         cfg.shard_exec().name(),
         match &cfg.load {
             Some(path) => format!("warm state loaded from {path}"),
@@ -629,6 +662,59 @@ fn cmd_churn(args: &Args) -> Result<(), String> {
             summary.final_matched_vertices / 2
         );
     }
+    if let Some(path) = args.get("record") {
+        let rec = registry::churn_record(&cfg, &summary);
+        rec.write_file(Path::new(path))?;
+        println!(
+            "recorded bench {} (config {}) -> {path}; publish or gate it with `skipper-cli report`",
+            rec.bench,
+            rec.config_hash()
+        );
+    }
+    Ok(())
+}
+
+/// The perf-trajectory registry: render, publish, or gate `BENCH_*.json`.
+fn cmd_report(args: &Args) -> Result<(), String> {
+    let dir = Path::new(args.get_or("dir", "BENCH"));
+    if args.get("publish").is_some() && args.get("gate").is_some() {
+        return Err("--publish and --gate are mutually exclusive".into());
+    }
+    if let Some(cand) = args.get("publish") {
+        let rec = BenchRecord::read_file(Path::new(cand))?;
+        let (bench, hash) = (rec.bench.clone(), rec.config_hash());
+        let mut reg = Registry::load_or_new(dir, &bench)?;
+        reg.publish(rec)?;
+        let path = reg.save(dir)?;
+        println!(
+            "published {bench} run (config {hash}) -> {} ({} committed runs)",
+            path.display(),
+            reg.runs.len()
+        );
+        return Ok(());
+    }
+    if let Some(cand) = args.get("gate") {
+        let threshold: f64 = args.get_parse("threshold", registry::DEFAULT_THRESHOLD)?;
+        let rec = BenchRecord::read_file(Path::new(cand))?;
+        let reg = Registry::load_or_new(dir, &rec.bench)?;
+        let out = registry::gate(&reg, &rec, threshold);
+        println!("gating {} (config {}) against {}", rec.bench, rec.config_hash(), dir.display());
+        for line in &out.lines {
+            println!("  {line}");
+        }
+        return if out.pass {
+            println!("gate: PASS{}", if out.seeded { " (seeding run)" } else { "" });
+            Ok(())
+        } else {
+            Err(format!(
+                "gate: FAIL — {} regressed beyond ±{:.0}% of the committed baseline",
+                rec.bench,
+                threshold * 100.0
+            ))
+        };
+    }
+    let regs = Registry::load_dir(dir)?;
+    print!("{}", registry::report_markdown(&regs));
     Ok(())
 }
 

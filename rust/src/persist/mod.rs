@@ -311,6 +311,31 @@ impl DurableService {
         Ok(())
     }
 
+    /// Append several coalesced epochs as one durable group — a single
+    /// `sync_data` covers the whole batch under `--fsync` (see
+    /// [`Wal::append_epochs`]), so a flusher that drains `k` queued epochs
+    /// pays one device round-trip instead of `k`. Empty batches are skipped
+    /// (they have nothing to replay).
+    pub fn log_epochs(&mut self, batch: &[(u64, &[Update])]) -> Result<(), String> {
+        if !self.log_enabled {
+            return Ok(());
+        }
+        let group: Vec<(u64, &[Update])> = batch
+            .iter()
+            .filter(|(_, ups)| !ups.is_empty())
+            .copied()
+            .collect();
+        if group.is_empty() {
+            return Ok(());
+        }
+        let bytes = self.wal.append_epochs(&group)?;
+        self.counters
+            .wal_epochs
+            .fetch_add(group.len() as u64, Ordering::Relaxed);
+        self.counters.wal_bytes.fetch_add(bytes, Ordering::Relaxed);
+        Ok(())
+    }
+
     /// Is the background snapshot writer mid-write? Callers check this
     /// before building a barrier copy, so a busy writer costs nothing.
     pub fn snapshot_busy(&self) -> bool {

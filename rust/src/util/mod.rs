@@ -6,6 +6,7 @@
 pub mod benchlib;
 pub mod bitset;
 pub mod cli;
+pub mod json;
 pub mod qcheck;
 pub mod rng;
 pub mod stats;

@@ -1,0 +1,259 @@
+//! Property tests for the adjacency sidecar's storage layouts: for random
+//! insert/delete schedules, the flat per-vertex `Vec` layout and the
+//! cache-line block arena at several block sizes must be *observationally
+//! identical* — same accept/reject result for every operation, same live
+//! edge set, same per-vertex neighbor sequences (slot order is part of the
+//! contract, not just set equality), same half-edge counts — and both must
+//! agree with an independently maintained `HashSet` model.
+//!
+//! A second suite replays engine-level churn schedules on
+//! [`ShardedDynamicMatcher`] built flat vs blocked at `P ∈ {1, 4}`: the
+//! layouts must drive the engine to the identical live edge set and a
+//! verified-maximal matching at every shard count.
+
+use skipper::dynamic::{AdjLayout, DynamicAdjacency, ShardExec, ShardedDynamicMatcher, Update};
+use skipper::graph::gen::erdos_renyi;
+use skipper::instrument::NoProbe;
+use skipper::util::qcheck::{check, Config};
+use skipper::util::rng::Xoshiro256pp;
+use skipper::VertexId;
+use std::collections::HashSet;
+
+/// Block sizes the arena is exercised at alongside the flat baseline.
+const LAYOUTS: [AdjLayout; 4] = [
+    AdjLayout::Flat,
+    AdjLayout::Blocked { block_bytes: 64 },
+    AdjLayout::Blocked { block_bytes: 128 },
+    AdjLayout::Blocked { block_bytes: 256 },
+];
+
+#[derive(Clone, Debug)]
+struct AdjSchedule {
+    n: usize,
+    /// `(u, v, is_delete)` operations, self-loops and out-of-range included
+    /// on purpose — rejects must agree across layouts too.
+    ops: Vec<(VertexId, VertexId, bool)>,
+}
+
+fn arb_adj_schedule(rng: &mut Xoshiro256pp) -> AdjSchedule {
+    let n = 4 + rng.next_usize(120);
+    let len = 50 + rng.next_usize(900);
+    // skewed endpoint choice concentrates churn on a few hot vertices so
+    // lists grow past one block and tombstone-driven compaction triggers
+    let hot = rng.next_usize(n) as VertexId;
+    let ops = (0..len)
+        .map(|_| {
+            let u = if rng.next_usize(3) == 0 { hot } else { rng.next_usize(n) as VertexId };
+            let v = rng.next_usize(n + 2) as VertexId; // may be out of range
+            (u, v, rng.next_usize(100) < 40)
+        })
+        .collect();
+    AdjSchedule { n, ops }
+}
+
+fn canon(u: VertexId, v: VertexId) -> (VertexId, VertexId) {
+    (u.min(v), u.max(v))
+}
+
+/// Replay the schedule against every layout and a `HashSet` model in
+/// lock-step; error on the first observable divergence.
+fn run_adj_schedule(s: &AdjSchedule) -> Result<(), String> {
+    let mut sides: Vec<DynamicAdjacency> =
+        LAYOUTS.iter().map(|&l| DynamicAdjacency::with_layout(s.n, l)).collect();
+    let mut model: HashSet<(VertexId, VertexId)> = HashSet::new();
+
+    for (k, &(u, v, del)) in s.ops.iter().enumerate() {
+        let in_range = u != v && (u as usize) < s.n && (v as usize) < s.n;
+        let want = if del {
+            in_range && model.remove(&canon(u, v))
+        } else {
+            in_range && model.insert(canon(u, v))
+        };
+        for (side, &layout) in sides.iter_mut().zip(LAYOUTS.iter()) {
+            let got = if del { side.delete(u, v) } else { side.insert(u, v) };
+            if got != want {
+                return Err(format!(
+                    "op {k} ({u},{v},del={del}): {} returned {got}, model says {want}",
+                    layout.name()
+                ));
+            }
+        }
+        for (side, &layout) in sides.iter().zip(LAYOUTS.iter()) {
+            if side.num_live_edges() != model.len() as u64 {
+                return Err(format!(
+                    "op {k}: {} live {} != model {}",
+                    layout.name(),
+                    side.num_live_edges(),
+                    model.len()
+                ));
+            }
+        }
+    }
+
+    // final live edge sets: every layout == model
+    let mut want: Vec<(VertexId, VertexId)> = model.iter().copied().collect();
+    want.sort_unstable();
+    for (side, &layout) in sides.iter().zip(LAYOUTS.iter()) {
+        let mut got: Vec<(VertexId, VertexId)> = side.live_edge_iter().collect();
+        got.sort_unstable();
+        if got != want {
+            return Err(format!("{}: final live edge set diverges from model", layout.name()));
+        }
+        // the probe sweep walks every live half-edge exactly once
+        let visited = side.probe_sweep(&mut NoProbe);
+        if visited != 2 * model.len() as u64 {
+            return Err(format!(
+                "{}: probe_sweep visited {visited} half-edges, expected {}",
+                layout.name(),
+                2 * model.len()
+            ));
+        }
+    }
+
+    // slot order is part of the contract: identical neighbor *sequences*
+    // across layouts for every vertex, not just set equality
+    let flat = &sides[0];
+    for v in 0..s.n as VertexId {
+        let want_seq: Vec<VertexId> = flat.live_neighbors(v).collect();
+        for (side, &layout) in sides.iter().zip(LAYOUTS.iter()).skip(1) {
+            let got_seq: Vec<VertexId> = side.live_neighbors(v).collect();
+            if got_seq != want_seq {
+                return Err(format!(
+                    "vertex {v}: {} neighbor order {got_seq:?} != flat {want_seq:?}",
+                    layout.name()
+                ));
+            }
+        }
+    }
+    Ok(())
+}
+
+#[test]
+fn layouts_are_observationally_identical_on_random_schedules() {
+    check(
+        &Config { cases: 60, ..Default::default() },
+        arb_adj_schedule,
+        run_adj_schedule,
+    );
+}
+
+#[test]
+fn delete_heavy_schedules_compact_without_diverging() {
+    // 80%+ deletes against a pre-populated universe: tombstones dominate
+    // quickly, so compaction (and block recycling in the arena) fires on
+    // the hot vertices while the model keeps the layouts honest
+    check(
+        &Config { cases: 30, seed: 0xB10C, ..Default::default() },
+        |rng| {
+            let mut s = arb_adj_schedule(rng);
+            let n = s.n;
+            let el = erdos_renyi::edges(n, 4 * n, rng.next_u64());
+            let mut pre: Vec<(VertexId, VertexId, bool)> = el
+                .edges
+                .iter()
+                .filter(|&&(u, v)| u != v)
+                .map(|&(u, v)| (u, v, false))
+                .collect();
+            for op in s.ops.iter_mut() {
+                op.2 = rng.next_usize(100) < 80;
+            }
+            pre.append(&mut s.ops);
+            s.ops = pre;
+            s
+        },
+        run_adj_schedule,
+    );
+}
+
+#[derive(Clone, Debug)]
+struct EngineSchedule {
+    n: usize,
+    population: Vec<(VertexId, VertexId)>,
+    epochs: usize,
+    batch: usize,
+    seed: u64,
+}
+
+fn arb_engine_schedule(rng: &mut Xoshiro256pp) -> EngineSchedule {
+    let n = 32 + rng.next_usize(300);
+    let el = erdos_renyi::edges(n, 3 * n + rng.next_usize(3 * n), rng.next_u64());
+    let mut population: Vec<(VertexId, VertexId)> = el
+        .edges
+        .iter()
+        .filter(|&&(u, v)| u != v)
+        .map(|&(u, v)| (u.min(v), u.max(v)))
+        .collect();
+    population.sort_unstable();
+    population.dedup();
+    rng.shuffle(&mut population);
+    EngineSchedule {
+        n,
+        population,
+        epochs: 2 + rng.next_usize(6),
+        batch: 10 + rng.next_usize(150),
+        seed: rng.next_u64(),
+    }
+}
+
+/// Replay the identical update stream on engines built with each layout at
+/// one shard count; live sets must agree exactly and every engine's own
+/// maximality audit must pass after every epoch.
+fn run_engine_schedule_at(s: &EngineSchedule, shards: usize) -> Result<(), String> {
+    let engines: Vec<(AdjLayout, ShardedDynamicMatcher)> =
+        [AdjLayout::Flat, AdjLayout::Blocked { block_bytes: 64 }]
+            .into_iter()
+            .map(|l| {
+                (l, ShardedDynamicMatcher::with_exec_layout(s.n, 2, shards, ShardExec::Pool, l))
+            })
+            .collect();
+    let mut rng = Xoshiro256pp::new(s.seed);
+    let mut live: Vec<(VertexId, VertexId)> = Vec::new();
+    let mut pool = s.population.clone();
+
+    for epoch in 0..s.epochs {
+        let mut updates = Vec::with_capacity(s.batch);
+        for _ in 0..s.batch {
+            if !live.is_empty() && rng.next_usize(100) < 45 {
+                let (u, v) = live.swap_remove(rng.next_usize(live.len()));
+                pool.push((u, v));
+                updates.push(Update::Delete(u, v));
+            } else if let Some((u, v)) = pool.pop() {
+                live.push((u, v));
+                updates.push(Update::Insert(u, v));
+            }
+        }
+        let mut want = live.clone();
+        want.sort_unstable();
+        for (layout, engine) in &engines {
+            engine
+                .apply_epoch(&updates)
+                .map_err(|e| format!("P={shards} {} epoch {epoch}: {e}", layout.name()))?;
+            engine
+                .verify()
+                .map_err(|e| format!("P={shards} {} epoch {epoch}: audit: {e}", layout.name()))?;
+            let mut got = engine.live_edges();
+            got.sort_unstable();
+            if got != want {
+                return Err(format!(
+                    "P={shards} {} epoch {epoch}: live edge set diverges from model",
+                    layout.name()
+                ));
+            }
+        }
+    }
+    Ok(())
+}
+
+#[test]
+fn engine_layouts_agree_on_random_churn_at_every_shard_count() {
+    check(
+        &Config { cases: 20, seed: 0xAD7E, ..Default::default() },
+        arb_engine_schedule,
+        |s| {
+            for shards in [1usize, 4] {
+                run_engine_schedule_at(s, shards)?;
+            }
+            Ok(())
+        },
+    );
+}
