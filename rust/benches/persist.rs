@@ -8,10 +8,20 @@
 //!      price of the write-ahead guarantee on the flusher's critical path,
 //!   3. cold crash recovery — snapshot restore + WAL replay + maximality
 //!      audit, as a function of the replayed epoch count.
+//!
+//! With `SKIPPER_BENCH_RECORD_DIR=dir` set, the run additionally writes a
+//! perf-registry candidate record (`dir/persist_rmat<scale>.json`) holding
+//! every section's wall-clock metrics plus the WAL append/fsync latency
+//! percentiles read back from the process-global metrics registry — the
+//! same histograms a live `serve` exports over `METRICS`. Publish or gate
+//! it with `skipper-cli report`.
 
 mod common;
 
 use skipper::coordinator::datasets::Scale;
+use skipper::coordinator::registry::BenchRecord;
+use skipper::obs::metrics;
+use std::collections::BTreeMap;
 use skipper::dynamic::churn::{recycle_batch, ChurnGen};
 use skipper::dynamic::{ShardedDynamicMatcher, Update};
 use skipper::persist::recovery;
@@ -51,6 +61,8 @@ fn main() {
     );
     let cfg = BenchConfig { warmup_iters: 1, min_iters: 3, max_seconds: 8.0 };
     let threads = 4;
+    let record_dir = std::env::var("SKIPPER_BENCH_RECORD_DIR").ok();
+    let mut met: BTreeMap<String, f64> = BTreeMap::new();
 
     // warm engine once; every section snapshots/logs this state
     let engine = ShardedDynamicMatcher::new(n, threads, 1);
@@ -73,6 +85,9 @@ fn main() {
         bytes as f64 / 1e6,
         bytes as f64 / r.median_s / 1e6
     );
+    met.insert("snapshot_write_s".to_string(), r.median_s);
+    met.insert("snapshot_write_bytes_per_s".to_string(), bytes as f64 / r.median_s.max(1e-9));
+    met.insert("snapshot_bytes".to_string(), bytes as f64);
 
     // 1b. snapshot load + exact-matching restore into a fresh engine
     let r = bench("persist/snapshot-load-restore", &cfg, || {
@@ -86,6 +101,7 @@ fn main() {
         r.row(),
         bytes as f64 / r.median_s / 1e6
     );
+    met.insert("snapshot_load_restore_s".to_string(), r.median_s);
 
     // 2. WAL append latency per churn epoch, buffered vs fsync vs grouped
     // fsync (4 coalesced epochs per `sync_data` via `Wal::append_epochs`;
@@ -123,6 +139,23 @@ fn main() {
             percentile(&lat_s, 99.0) * 1e6,
             wal.bytes_appended() as f64 / 1e6
         );
+        met.insert(format!("wal_append_{tag}_p50_s"), percentile(&lat_s, 50.0));
+        met.insert(format!("wal_append_{tag}_p99_s"), percentile(&lat_s, 99.0));
+    }
+
+    // the same latencies as the observability registry saw them: every
+    // append above also recorded into the process-global histograms that a
+    // live `serve` exports over METRICS, so the registry record carries the
+    // full-history percentiles alongside the per-section medians
+    for (metric, name) in [
+        ("wal_append_hist", "skipper_wal_append_seconds"),
+        ("wal_fsync_hist", "skipper_wal_fsync_seconds"),
+    ] {
+        let h = metrics::global().histogram_secs(name, "");
+        if h.count() > 0 {
+            met.insert(format!("{metric}_p50_s"), h.percentile(50.0) as f64 * 1e-9);
+            met.insert(format!("{metric}_p99_s"), h.percentile(99.0) as f64 * 1e-9);
+        }
     }
 
     // 3. cold recovery vs replayed WAL length
@@ -148,6 +181,27 @@ fn main() {
             fresh.num_live_edges()
         });
         println!("{}", r.row());
+        met.insert(format!("recover_{k}_epochs_s"), r.median_s);
+    }
+    if let Some(dir) = record_dir {
+        let dir = PathBuf::from(dir);
+        std::fs::create_dir_all(&dir).expect("record dir");
+        let mut config = BTreeMap::new();
+        config.insert("workload".to_string(), "persist_bench".to_string());
+        config.insert("scale".to_string(), scale.name().to_string());
+        config.insert("n".to_string(), n.to_string());
+        config.insert("threads".to_string(), threads.to_string());
+        config.insert("batch".to_string(), batch.to_string());
+        config.insert("epochs".to_string(), epochs.to_string());
+        let rec = BenchRecord::new(format!("persist_rmat{exp}"), config, met);
+        let path = dir.join(format!("persist_rmat{exp}.json"));
+        rec.write_file(&path).expect("record write");
+        println!(
+            "recorded bench {} (config {}) -> {}; publish or gate it with `skipper-cli report`",
+            rec.bench,
+            rec.config_hash(),
+            path.display()
+        );
     }
     let _ = std::fs::remove_dir_all(&base);
 }

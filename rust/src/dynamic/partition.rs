@@ -97,6 +97,7 @@ use crate::graph::stream::BatchEdgeSource;
 use crate::matching::core::SkipperCore;
 use crate::matching::streaming::StreamingSkipper;
 use crate::matching::{MatchArena, BUFFER_EDGES};
+use crate::obs::{metrics, trace};
 use crate::par::pool::{ArriveOnDrop, Countdown, WorkerPool};
 use crate::par::run_threads_collect;
 use crate::{VertexId, INVALID_VERTEX};
@@ -295,6 +296,10 @@ struct EngineShared {
     partner: Vec<AtomicU32>,
     core: SkipperCore,
     matched: AtomicUsize,
+    /// Per-shard phase-latency histograms (index = shard), registered once
+    /// at engine construction against the global metrics registry.
+    mutate_hist: Vec<Arc<metrics::Histogram>>,
+    repair_hist: Vec<Arc<metrics::Histogram>>,
 }
 
 impl EngineShared {
@@ -304,7 +309,9 @@ impl EngineShared {
     /// shard's fresh-edge work list. Per-edge counters (`deleted_live`,
     /// `destroyed_pairs`, fresh edges) are reported by the owner of the
     /// *min* endpoint so cross-shard edges are never double-counted.
-    fn mutate_shard(&self, i: usize, ops: &[Update]) -> MutateOut {
+    fn mutate_shard(&self, i: usize, ops: &[Update], epoch: u64) -> MutateOut {
+        let t_obs = Instant::now();
+        let _span = trace::span_epoch("mutate", "engine", epoch, i as u64);
         let mut st = self.shards[i].lock().unwrap();
         let st = &mut *st;
         let mut out = MutateOut::default();
@@ -395,12 +402,15 @@ impl EngineShared {
             let (own, nb) = if st.adj.owns(u) { (u, v) } else { (v, u) };
             st.adj.contains_half(own, nb)
         });
+        self.mutate_hist[i].record_duration(t_obs.elapsed());
         out
     }
 
     /// One shard's repair collection: surviving incident edges of its freed
     /// vertices that the insert pass left unmatched, canonicalized.
-    fn collect_repair(&self, i: usize) -> Vec<(VertexId, VertexId)> {
+    fn collect_repair(&self, i: usize, epoch: u64) -> Vec<(VertexId, VertexId)> {
+        let t_obs = Instant::now();
+        let _span = trace::span_epoch("repair", "engine", epoch, i as u64);
         let mut st = self.shards[i].lock().unwrap();
         let st = &mut *st;
         let mut repair = Vec::new();
@@ -420,6 +430,7 @@ impl EngineShared {
             }
         }
         st.freed.clear();
+        self.repair_hist[i].record_duration(t_obs.elapsed());
         repair
     }
 }
@@ -520,6 +531,22 @@ impl ShardedDynamicMatcher {
         let num_shards = shards.len();
         let pool = (exec == ShardExec::Pool && num_shards > 1)
             .then(|| WorkerPool::new(num_shards));
+        let reg = metrics::global();
+        let shard_hist = |name: &str, help: &str| -> Vec<Arc<metrics::Histogram>> {
+            (0..num_shards)
+                .map(|i| {
+                    reg.histogram_secs_with(name, help, vec![("shard".into(), i.to_string())])
+                })
+                .collect()
+        };
+        let mutate_hist = shard_hist(
+            "skipper_shard_mutate_seconds",
+            "Per-shard mutate-phase busy time per epoch",
+        );
+        let repair_hist = shard_hist(
+            "skipper_shard_repair_seconds",
+            "Per-shard repair-collection busy time per epoch",
+        );
         Self {
             shared: Arc::new(EngineShared {
                 partition,
@@ -527,6 +554,8 @@ impl ShardedDynamicMatcher {
                 partner: (0..n).map(|_| AtomicU32::new(INVALID_VERTEX)).collect(),
                 core: SkipperCore::new(n),
                 matched: AtomicUsize::new(0),
+                mutate_hist,
+                repair_hist,
             }),
             driver: StreamingSkipper::new(threads),
             exec,
@@ -715,6 +744,7 @@ impl ShardedDynamicMatcher {
         updates: &[Update],
         mailboxes: &mut ShardMailboxes,
     ) -> Result<(), String> {
+        let _span = trace::span("route", "engine", updates.len() as u64);
         let n = self.num_vertices();
         if let Some(bad) = updates.iter().find(|u| {
             let (Update::Insert(a, b) | Update::Delete(a, b)) = **u;
@@ -777,7 +807,7 @@ impl ShardedDynamicMatcher {
         // every shard's half-edge edits, partner clears, and core releases
         // complete before any matching sweep observes them.
         let tm = Instant::now();
-        let outs = self.mutate_all(&mut mailboxes.boxes);
+        let outs = self.mutate_all(&mut mailboxes.boxes, epoch);
         rep.mutate_wall_s = tm.elapsed().as_secs_f64();
         let mut fresh: Vec<(VertexId, VertexId)> = Vec::new();
         for (out, busy_s) in outs {
@@ -806,7 +836,7 @@ impl ShardedDynamicMatcher {
         let tr = Instant::now();
         let mut repair: Vec<(VertexId, VertexId)> = Vec::new();
         if rep.freed_vertices > 0 {
-            for list in self.collect_repair_all() {
+            for list in self.collect_repair_all(epoch) {
                 repair.extend(list);
             }
         }
@@ -869,11 +899,11 @@ impl ShardedDynamicMatcher {
     /// shard's [`MutateOut`] plus its busy seconds (the "run" part of
     /// spawn-vs-run); the mailbox buffers come back with their capacity
     /// intact in every mode.
-    fn mutate_all(&self, boxes: &mut [Vec<Update>]) -> Vec<(MutateOut, f64)> {
+    fn mutate_all(&self, boxes: &mut [Vec<Update>], epoch: u64) -> Vec<(MutateOut, f64)> {
         let p = self.num_shards();
         if p == 1 {
             let t = Instant::now();
-            let out = self.shared.mutate_shard(0, &boxes[0]);
+            let out = self.shared.mutate_shard(0, &boxes[0], epoch);
             return vec![(out, t.elapsed().as_secs_f64())];
         }
         match &self.pool {
@@ -883,7 +913,7 @@ impl ShardedDynamicMatcher {
                         let ops = std::mem::take(&mut boxes[i]);
                         move |shared: &EngineShared| {
                             let t = Instant::now();
-                            let out = shared.mutate_shard(i, &ops);
+                            let out = shared.mutate_shard(i, &ops, epoch);
                             (out, ops, t.elapsed().as_secs_f64())
                         }
                     });
@@ -898,7 +928,7 @@ impl ShardedDynamicMatcher {
                 let boxes: &[Vec<Update>] = boxes;
                 run_threads_collect(p, |i| {
                     let t = Instant::now();
-                    let out = self.shared.mutate_shard(i, &boxes[i]);
+                    let out = self.shared.mutate_shard(i, &boxes[i], epoch);
                     (out, t.elapsed().as_secs_f64())
                 })
             }
@@ -907,16 +937,16 @@ impl ShardedDynamicMatcher {
 
     /// Dispatch the repair-collection phase across shards (same execution
     /// policy as [`mutate_all`](Self::mutate_all)).
-    fn collect_repair_all(&self) -> Vec<Vec<(VertexId, VertexId)>> {
+    fn collect_repair_all(&self, epoch: u64) -> Vec<Vec<(VertexId, VertexId)>> {
         let p = self.num_shards();
         if p == 1 {
-            return vec![self.shared.collect_repair(0)];
+            return vec![self.shared.collect_repair(0, epoch)];
         }
         match &self.pool {
             Some(pool) => self.pool_dispatch(pool, |i| {
-                move |shared: &EngineShared| shared.collect_repair(i)
+                move |shared: &EngineShared| shared.collect_repair(i, epoch)
             }),
-            None => run_threads_collect(p, |i| self.shared.collect_repair(i)),
+            None => run_threads_collect(p, |i| self.shared.collect_repair(i, epoch)),
         }
     }
 

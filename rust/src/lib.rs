@@ -39,6 +39,9 @@
 //!   (the sandbox has a single physical core; see DESIGN.md §3).
 //! * [`runtime`] — the PJRT runtime that loads the AOT-compiled JAX/Pallas
 //!   EMS matcher (`artifacts/*.hlo.txt`) and exposes it as a baseline.
+//! * [`obs`] — crate-wide observability: a lock-free metrics registry
+//!   (counters, gauges, log-scale histograms) exported as Prometheus text,
+//!   and a per-thread span tracer exported as Chrome trace-event JSON.
 //! * [`coordinator`] — config system, dataset registry, experiment registry
 //!   (one entry per paper table/figure), and report writers.
 //! * [`util`] — RNG, bitset, stats, CLI parsing, a mini property-testing
@@ -69,6 +72,7 @@ pub mod dynamic;
 pub mod graph;
 pub mod instrument;
 pub mod matching;
+pub mod obs;
 pub mod par;
 pub mod persist;
 pub mod runtime;

@@ -14,6 +14,10 @@
 //!   report      perf-trajectory registry: render committed BENCH_*.json
 //!               files as markdown, publish a recorded run, or gate a
 //!               candidate run against the last committed baseline
+//!   lint        validate observability artifacts offline: a Prometheus
+//!               metrics dump (a METRICS scrape or --metrics-file) and/or
+//!               a Chrome trace JSON (--trace-out), with --require
+//!               span-name assertions — the CI smoke gate
 //!   info        print dataset/suite information
 
 use skipper::apram::{simulate_skipper, SimConfig};
@@ -38,6 +42,7 @@ use skipper::matching::skipper::Skipper;
 use skipper::matching::streaming::{StreamingSkipper, DEFAULT_CHUNK_EDGES};
 use skipper::matching::{verify, MaximalMatcher};
 use skipper::coordinator::registry::{self, BenchRecord, Registry};
+use skipper::obs::{metrics, trace};
 use skipper::dynamic::churn::{run_churn, ChurnConfig, ChurnGen};
 use skipper::dynamic::AdjLayout;
 use skipper::service::{serve_lines, serve_tcp, ServiceConfig};
@@ -52,6 +57,9 @@ USAGE:
   skipper-cli gen --dataset <name> [--scale tiny|small|medium|large] [--out g.skg]
   skipper-cli run --graph <file|dataset> [--algo skipper|sgmm|sidmm|idmm|pbmm|israeli-itai|birn|auer-bisseling|xla-ems]
               [--threads N] [--scale S] [--verify] [--conflicts] [--sim]
+              [--record FILE]  (write the run as a perf-registry candidate
+               record for `skipper-cli report`: graph shape as exact_*
+               metrics, wall time and edge throughput as gated metrics)
   skipper-cli run --graph <file|dataset> --stream [--threads N] [--chunk-edges N] [--verify]
               (match while edges stream off disk — no CSR is materialized;
                reports peak topology-resident bytes vs the CSR equivalent)
@@ -62,6 +70,7 @@ USAGE:
               [--shard-capacity N] [--epoch-max-updates N]
               [--epoch-max-requests N] [--data-dir DIR] [--no-wal]
               [--fsync] [--snapshot-every E] [--debug-commands]
+              [--trace] [--trace-out FILE] [--metrics-file FILE]
               (line protocol INSERT/DELETE/QUERY/STATS[ full]/SNAPSHOT/
                EPOCH/QUIT/SHUTDOWN, specified in docs/PROTOCOL.md; stdin
                pipe by default, concurrent clients with --tcp.
@@ -85,12 +94,21 @@ USAGE:
                drain and write a final snapshot, and the next boot
                recovers: newest valid snapshot + WAL replay, verified
                maximal before going live. --debug-commands enables the
-               CRASH fault-injection command for recovery testing)
+               CRASH fault-injection command for recovery testing.
+               Observability: the METRICS command returns a Prometheus
+               text scrape and TRACE [n] one Chrome-trace JSON line, both
+               specified in docs/PROTOCOL.md. --trace turns span recording
+               on from boot (off by default — one relaxed atomic load when
+               off); --trace-out FILE writes every recorded span as Chrome
+               trace-event JSON at exit and implies --trace;
+               --metrics-file FILE writes the final Prometheus exposition
+               at exit, identical to a last METRICS scrape)
   skipper-cli churn [--gen rmat|er|ba|grid] [--scale LOG2_V] [--avg-degree D]
               [--epochs E] [--batch B] [--delete-frac F] [--threads N]
               [--engine-shards P] [--no-pool] [--warmup-epochs W] [--seed S]
               [--layout flat|blocked|blocked<N>] [--block-bytes N]
               [--no-verify] [--save FILE] [--load FILE] [--record FILE]
+              [--trace-out FILE]
               (mixed insert/delete epochs over the dynamic engine; verifies
                maximality over the LIVE edge set after every epoch and
                reports spawn-vs-run mutate timings — --no-pool selects the
@@ -102,7 +120,10 @@ USAGE:
                snapshot at the end; --load FILE restores one instead of
                running warmup, so a warmed-up workload restarts instantly.
                --record FILE writes the run's machine manifest, config, and
-               metrics as a candidate record for `skipper-cli report`)
+               metrics as a candidate record for `skipper-cli report`.
+               --trace-out FILE enables span recording for the run and
+               writes the collected spans as Chrome trace-event JSON —
+               open in chrome://tracing or `lint --trace` it)
   skipper-cli report [--dir BENCH] [--publish FILE | --gate FILE [--threshold T]]
               (the committed perf-trajectory registry, BENCH_<bench>.json
                under --dir. With no action: render every registry as a
@@ -114,6 +135,14 @@ USAGE:
                bit-for-bit even across machines, wall-clock metrics gate
                strictly only when the machine manifests match and warn
                otherwise, and an unseen config passes as a seeding run)
+  skipper-cli lint [--metrics FILE] [--trace FILE] [--require a,b,c]
+              (validate observability artifacts offline and exit non-zero
+               on any violation — the CI smoke gate. --metrics checks a
+               Prometheus text-format dump (a captured METRICS scrape or a
+               serve --metrics-file) for syntactic validity; --trace checks
+               a Chrome trace-event JSON file (serve/churn --trace-out);
+               --require fails unless every comma-separated span name
+               appears in the trace)
   skipper-cli info
 ";
 
@@ -132,6 +161,7 @@ fn main() {
             "no-wal",
             "fsync",
             "debug-commands",
+            "trace",
             "help",
         ],
     ) {
@@ -154,6 +184,7 @@ fn main() {
         "serve" => cmd_serve(&args),
         "churn" => cmd_churn(&args),
         "report" => cmd_report(&args),
+        "lint" => cmd_lint(&args),
         "info" => cmd_info(),
         other => Err(format!("unknown command {other:?}\n{USAGE}")),
     };
@@ -223,6 +254,9 @@ fn cmd_run(args: &Args) -> Result<(), String> {
     let cfg = load_config(args)?;
     let graph_name = args.get("graph").ok_or("--graph required")?;
     let threads: usize = args.get_parse("threads", 4usize)?;
+    if args.get("record").is_some() && (args.flag("sim") || args.flag("stream")) {
+        return Err("--record applies to the static run path (drop --sim/--stream)".into());
+    }
     if args.flag("stream") {
         return cmd_run_stream(args, &cfg, graph_name, threads);
     }
@@ -290,6 +324,37 @@ fn cmd_run(args: &Args) -> Result<(), String> {
     if args.flag("verify") {
         verify::check(&g, &matching)?;
         println!("verify: OK (valid maximal matching)");
+    }
+    if let Some(path) = args.get("record") {
+        // graph shape is deterministic (exact_*); matching size is
+        // schedule-dependent for the parallel matchers, so it rides along
+        // as an advisory metric (reported, never gated)
+        let graph_tag: String = graph_name
+            .chars()
+            .map(|c| if c.is_ascii_alphanumeric() { c } else { '_' })
+            .collect();
+        let mut config = std::collections::BTreeMap::new();
+        config.insert("workload".to_string(), "run".to_string());
+        config.insert("algo".to_string(), algo.to_string());
+        config.insert("graph".to_string(), graph_name.to_string());
+        config.insert("scale".to_string(), cfg.scale.name().to_string());
+        config.insert("threads".to_string(), threads.to_string());
+        let mut met = std::collections::BTreeMap::new();
+        met.insert("exact_vertices".to_string(), g.num_vertices() as f64);
+        met.insert("exact_edges".to_string(), g.num_undirected_edges() as f64);
+        met.insert("run_wall_s".to_string(), dt);
+        met.insert(
+            "edges_per_s".to_string(),
+            g.num_undirected_edges() as f64 / dt.max(1e-9),
+        );
+        met.insert("matched_pairs".to_string(), matching.len() as f64);
+        let rec = BenchRecord::new(format!("run_{algo}_{graph_tag}"), config, met);
+        rec.write_file(Path::new(path))?;
+        println!(
+            "recorded bench {} (config {}) -> {path}; publish or gate it with `skipper-cli report`",
+            rec.bench,
+            rec.config_hash()
+        );
     }
     Ok(())
 }
@@ -514,6 +579,10 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
         "{workers} shard workers, {} coordinator{durability}",
         if cfg.pipeline { "pipelined" } else { "inline" }
     );
+    let trace_out = args.get("trace-out");
+    if args.flag("trace") || trace_out.is_some() {
+        trace::set_enabled(true);
+    }
     let summary = match args.get("tcp") {
         Some(addr) => serve_tcp(&cfg, addr, |bound| {
             eprintln!(
@@ -546,6 +615,18 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
             "durability: recovery replayed {} wal epochs at boot; {} epochs logged this run; final snapshot at epoch {}",
             summary.recovery_replayed, summary.wal_epochs, summary.last_snapshot_epoch
         );
+    }
+    // observability artifacts are written even when the final audit fails —
+    // a failing run is exactly when the spans and counters matter most
+    if let Some(path) = args.get("metrics-file") {
+        std::fs::write(path, &summary.metrics_text).map_err(|e| format!("{path}: {e}"))?;
+        eprintln!("metrics: final Prometheus exposition -> {path}");
+    }
+    if let Some(path) = trace_out {
+        let events = trace::collect();
+        let doc = trace::chrome_trace_json(&events);
+        std::fs::write(path, doc.render_pretty()).map_err(|e| format!("{path}: {e}"))?;
+        eprintln!("trace: {} spans -> {path} (load in chrome://tracing)", events.len());
     }
     if !summary.maximal {
         return Err("final matching failed the live-set maximality audit".into());
@@ -586,6 +667,11 @@ fn cmd_churn(args: &Args) -> Result<(), String> {
     }
     if cfg.engine_shards == 0 {
         return Err("--engine-shards must be >= 1".into());
+    }
+    let trace_out = args.get("trace-out");
+    if trace_out.is_some() {
+        trace::set_enabled(true);
+        trace::clear();
     }
     println!(
         "churn {} |V|={} t={} P={} layout={} ({} shard workers): {}, then {} epochs of {} updates ({:.0}% deletes){}",
@@ -671,6 +757,13 @@ fn cmd_churn(args: &Args) -> Result<(), String> {
             rec.config_hash()
         );
     }
+    if let Some(path) = trace_out {
+        trace::set_enabled(false);
+        let events = trace::collect();
+        let doc = trace::chrome_trace_json(&events);
+        std::fs::write(path, doc.render_pretty()).map_err(|e| format!("{path}: {e}"))?;
+        println!("trace: {} spans -> {path} (load in chrome://tracing)", events.len());
+    }
     Ok(())
 }
 
@@ -715,6 +808,47 @@ fn cmd_report(args: &Args) -> Result<(), String> {
     }
     let regs = Registry::load_dir(dir)?;
     print!("{}", registry::report_markdown(&regs));
+    Ok(())
+}
+
+/// Validate observability artifacts offline — the CI smoke gate behind the
+/// `serve`/`churn` metrics and trace outputs.
+fn cmd_lint(args: &Args) -> Result<(), String> {
+    let metrics_path = args.get("metrics");
+    let trace_path = args.get("trace");
+    if metrics_path.is_none() && trace_path.is_none() {
+        return Err("lint needs --metrics FILE and/or --trace FILE".into());
+    }
+    if args.get("require").is_some() && trace_path.is_none() {
+        return Err("--require asserts span names, so it needs --trace FILE".into());
+    }
+    if let Some(path) = metrics_path {
+        let text = std::fs::read_to_string(path).map_err(|e| format!("{path}: {e}"))?;
+        metrics::validate_prometheus(&text).map_err(|e| format!("{path}: {e}"))?;
+        println!(
+            "lint: {path}: valid Prometheus exposition ({} lines)",
+            text.lines().count()
+        );
+    }
+    if let Some(path) = trace_path {
+        let text = std::fs::read_to_string(path).map_err(|e| format!("{path}: {e}"))?;
+        let names = trace::validate_chrome_trace(&text).map_err(|e| format!("{path}: {e}"))?;
+        println!(
+            "lint: {path}: well-formed Chrome trace ({} distinct span names)",
+            names.len()
+        );
+        if let Some(req) = args.get("require") {
+            for want in req.split(',').map(str::trim).filter(|s| !s.is_empty()) {
+                if !names.iter().any(|n| n == want) {
+                    return Err(format!(
+                        "{path}: required span {want:?} not present (have: {})",
+                        names.join(", ")
+                    ));
+                }
+            }
+            println!("lint: {path}: all required spans present ({req})");
+        }
+    }
     Ok(())
 }
 

@@ -1,0 +1,853 @@
+//! Lock-free metrics: sharded counters, gauges, and log-scale histograms
+//! behind a process-global registry with a Prometheus text exporter.
+//!
+//! ## Design
+//!
+//! * **Instruments are registered once, updated lock-free.** Registration
+//!   (`counter`/`gauge`/`histogram_*`) takes the registry mutex — a cold
+//!   path run at subsystem construction. The returned handles are `Arc`s
+//!   whose update methods touch only relaxed atomics, so the hot paths
+//!   (per-job, per-epoch, per-append) never contend on a lock.
+//! * **Registration is idempotent.** Asking for an instrument whose
+//!   `(name, labels)` pair already exists returns the existing handle, so
+//!   two engines in one process (common in tests) share instruments
+//!   instead of colliding. Monitoring counters are process-wide by design.
+//! * **Histograms are fixed log-scale buckets** ([`Histogram`]): every
+//!   recorded value lands in a bucket whose relative width is at most
+//!   1/8 (12.5%), so percentile estimates computed from the buckets are
+//!   within one bucket's relative error of the exact percentile over the
+//!   *full* recording history — unlike a bounded latency ring, nothing is
+//!   ever evicted.
+//!
+//! The [`global`] registry is what the `METRICS` protocol command, the
+//! `serve --metrics-file` writer, and the bench record emitters export.
+
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+// ---------------------------------------------------------------------------
+// stripes
+// ---------------------------------------------------------------------------
+
+/// Stripes per sharded counter — enough that the handful of threads a
+/// matching epoch runs (shard workers + router + flusher) rarely collide
+/// on a cache line.
+const STRIPES: usize = 16;
+
+/// A cache-line-padded atomic, so neighboring stripes never false-share.
+#[repr(align(64))]
+#[derive(Default)]
+struct PadAtomicU64(AtomicU64);
+
+static NEXT_THREAD_SLOT: AtomicUsize = AtomicUsize::new(0);
+
+thread_local! {
+    /// This thread's stable stripe slot, assigned round-robin on first use.
+    static THREAD_SLOT: usize =
+        NEXT_THREAD_SLOT.fetch_add(1, Ordering::Relaxed) % STRIPES;
+}
+
+#[inline]
+fn my_stripe() -> usize {
+    THREAD_SLOT.with(|s| *s)
+}
+
+// ---------------------------------------------------------------------------
+// counter / gauge
+// ---------------------------------------------------------------------------
+
+/// Monotonic counter, striped across cache-line-padded atomics so
+/// concurrent writers from different threads do not bounce one line.
+#[derive(Default)]
+pub struct Counter {
+    stripes: [PadAtomicU64; STRIPES],
+}
+
+impl Counter {
+    /// Add `n` (relaxed; this is monitoring, not synchronization).
+    #[inline]
+    pub fn add(&self, n: u64) {
+        self.stripes[my_stripe()].0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Increment by one.
+    #[inline]
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    /// Current total (sums the stripes; a racing `add` may or may not be
+    /// included — fine for monitoring).
+    pub fn get(&self) -> u64 {
+        self.stripes.iter().map(|s| s.0.load(Ordering::Relaxed)).sum()
+    }
+}
+
+/// Instantaneous integer value (queue depths, live counts). Single atomic:
+/// gauges are set/adjusted far less often than counters are bumped.
+#[derive(Default)]
+pub struct Gauge {
+    value: AtomicU64,
+}
+
+impl Gauge {
+    /// Set the gauge to `v`.
+    #[inline]
+    pub fn set(&self, v: u64) {
+        self.value.store(v, Ordering::Relaxed);
+    }
+
+    /// Increase by `n`.
+    #[inline]
+    pub fn inc(&self, n: u64) {
+        self.value.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Decrease by `n` (saturating at zero via wrapping guard: callers pair
+    /// inc/dec, so underflow indicates a bug — clamp rather than wrap so a
+    /// monitoring race never renders as 2^64).
+    #[inline]
+    pub fn dec(&self, n: u64) {
+        let mut cur = self.value.load(Ordering::Relaxed);
+        loop {
+            let next = cur.saturating_sub(n);
+            match self.value.compare_exchange_weak(
+                cur,
+                next,
+                Ordering::Relaxed,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => return,
+                Err(seen) => cur = seen,
+            }
+        }
+    }
+
+    /// Current value.
+    #[inline]
+    pub fn get(&self) -> u64 {
+        self.value.load(Ordering::Relaxed)
+    }
+}
+
+/// Floating-point accumulator (seconds of router time, repair fractions) —
+/// an `f64` stored as atomic bits, updated with a CAS loop. Used on
+/// per-epoch paths, not per-edge ones, so the loop never spins hot.
+#[derive(Default)]
+pub struct FGauge {
+    bits: AtomicU64,
+}
+
+impl FGauge {
+    /// Set the value.
+    #[inline]
+    pub fn set(&self, v: f64) {
+        self.bits.store(v.to_bits(), Ordering::Relaxed);
+    }
+
+    /// Add `v` to the accumulated value.
+    pub fn add(&self, v: f64) {
+        let mut cur = self.bits.load(Ordering::Relaxed);
+        loop {
+            let next = (f64::from_bits(cur) + v).to_bits();
+            match self.bits.compare_exchange_weak(
+                cur,
+                next,
+                Ordering::Relaxed,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => return,
+                Err(seen) => cur = seen,
+            }
+        }
+    }
+
+    /// Current value.
+    #[inline]
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.bits.load(Ordering::Relaxed))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// histogram
+// ---------------------------------------------------------------------------
+
+/// Sub-bucket resolution: 2^3 = 8 sub-buckets per power-of-two octave, so
+/// a bucket's width is at most 1/8 of its lower bound.
+const SUB_BITS: u32 = 3;
+const SUB: u64 = 1 << SUB_BITS;
+
+/// Total fixed buckets covering the full `u64` range at [`SUB`] sub-buckets
+/// per octave (values below `2·SUB` get exact single-value buckets). The
+/// largest index is `bucket_of(u64::MAX)`: shift 60, so
+/// `((60 + 1) << SUB_BITS) + (SUB - 1) = 495`, hence 496 buckets.
+pub const NUM_BUCKETS: usize = ((64 - SUB_BITS) as usize + 1) << SUB_BITS;
+
+/// The bucket index of `v` — log-scale with [`SUB`] linear sub-buckets per
+/// octave (the HdrHistogram idea at 3 significant bits).
+#[inline]
+pub fn bucket_of(v: u64) -> usize {
+    if v < SUB * 2 {
+        return v as usize; // exact buckets for 0..16
+    }
+    let msb = 63 - v.leading_zeros();
+    let shift = msb - SUB_BITS; // ≥ 1
+    let sub = ((v >> shift) - SUB) as usize; // 0..SUB
+    ((shift as usize + 1) << SUB_BITS) + sub
+}
+
+/// Inclusive `[lo, hi]` value range of bucket `idx` — the exact inverse of
+/// [`bucket_of`]: every `v` with `bucket_of(v) == idx` satisfies
+/// `lo ≤ v ≤ hi`, and `(hi - lo) ≤ lo / 8` (one bucket's relative error).
+pub fn bucket_bounds(idx: usize) -> (u64, u64) {
+    if idx < (SUB * 2) as usize {
+        return (idx as u64, idx as u64);
+    }
+    let shift = (idx >> SUB_BITS) as u32 - 1;
+    let sub = (idx & (SUB as usize - 1)) as u64;
+    let lo = (SUB + sub) << shift;
+    let hi = lo + (1u64 << shift) - 1;
+    (lo, hi)
+}
+
+/// Fixed-bucket log-scale histogram over `u64` samples (latencies in
+/// nanoseconds, sizes in bytes). Recording is one relaxed `fetch_add`;
+/// the full history is retained in bucket form, so percentiles reflect
+/// every sample ever recorded, within one bucket's relative error.
+pub struct Histogram {
+    buckets: Box<[AtomicU64]>,
+    count: AtomicU64,
+    sum: AtomicU64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Histogram {
+    /// An empty histogram.
+    pub fn new() -> Self {
+        Self {
+            buckets: (0..NUM_BUCKETS).map(|_| AtomicU64::new(0)).collect(),
+            count: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+        }
+    }
+
+    /// Record one sample.
+    #[inline]
+    pub fn record(&self, v: u64) {
+        self.buckets[bucket_of(v)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(v, Ordering::Relaxed);
+    }
+
+    /// Record a [`std::time::Duration`] in nanoseconds (saturating).
+    #[inline]
+    pub fn record_duration(&self, d: std::time::Duration) {
+        self.record(d.as_nanos().min(u128::from(u64::MAX)) as u64);
+    }
+
+    /// Samples recorded.
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    /// Sum of all recorded samples.
+    pub fn sum(&self) -> u64 {
+        self.sum.load(Ordering::Relaxed)
+    }
+
+    /// The `p`-th percentile (`0 ≤ p ≤ 100`) by nearest rank, reported as
+    /// the **upper bound** of the bucket holding that sample — so the
+    /// estimate never under-reports, and over-reports by at most one
+    /// bucket's relative width (≤ 12.5%). Returns 0 when empty.
+    pub fn percentile(&self, p: f64) -> u64 {
+        let total = self.count();
+        if total == 0 {
+            return 0;
+        }
+        // nearest-rank: the k-th smallest sample, k in 1..=total
+        let rank = ((p / 100.0) * total as f64).ceil().clamp(1.0, total as f64) as u64;
+        let mut seen = 0u64;
+        for (idx, b) in self.buckets.iter().enumerate() {
+            seen += b.load(Ordering::Relaxed);
+            if seen >= rank {
+                return bucket_bounds(idx).1;
+            }
+        }
+        bucket_bounds(NUM_BUCKETS - 1).1
+    }
+
+    /// Non-empty buckets as `(upper_bound, cumulative_count)`, ascending —
+    /// the Prometheus `_bucket{le=…}` series (the exporter appends `+Inf`).
+    pub fn cumulative_buckets(&self) -> Vec<(u64, u64)> {
+        let mut out = Vec::new();
+        let mut cum = 0u64;
+        for (idx, b) in self.buckets.iter().enumerate() {
+            let c = b.load(Ordering::Relaxed);
+            if c > 0 {
+                cum += c;
+                out.push((bucket_bounds(idx).1, cum));
+            }
+        }
+        out
+    }
+}
+
+// ---------------------------------------------------------------------------
+// registry
+// ---------------------------------------------------------------------------
+
+/// Label set of one instrument: ordered `(key, value)` pairs.
+pub type Labels = Vec<(String, String)>;
+
+struct Registered<T> {
+    name: String,
+    help: String,
+    labels: Labels,
+    /// Multiplier applied to raw sample values on export (histograms record
+    /// integer nanoseconds/bytes; Prometheus wants seconds for latencies).
+    scale: f64,
+    metric: Arc<T>,
+}
+
+#[derive(Default)]
+struct Inner {
+    counters: Vec<Registered<Counter>>,
+    gauges: Vec<Registered<Gauge>>,
+    fgauges: Vec<Registered<FGauge>>,
+    histograms: Vec<Registered<Histogram>>,
+}
+
+fn find<T>(list: &[Registered<T>], name: &str, labels: &Labels) -> Option<Arc<T>> {
+    list.iter()
+        .find(|r| r.name == name && r.labels == *labels)
+        .map(|r| Arc::clone(&r.metric))
+}
+
+/// The instrument registry: registration is mutexed (cold), updates via the
+/// returned handles are lock-free, and [`render_prometheus`]
+/// (Self::render_prometheus) snapshots everything for export.
+#[derive(Default)]
+pub struct Registry {
+    inner: Mutex<Inner>,
+}
+
+impl Registry {
+    /// An empty registry (tests; production code uses [`global`]).
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Get or register a counter. Same `(name, labels)` → same handle.
+    pub fn counter(&self, name: &str, help: &str) -> Arc<Counter> {
+        self.counter_with(name, help, Vec::new())
+    }
+
+    /// Labelled variant of [`counter`](Self::counter).
+    pub fn counter_with(&self, name: &str, help: &str, labels: Labels) -> Arc<Counter> {
+        let mut inner = self.inner.lock().unwrap();
+        if let Some(m) = find(&inner.counters, name, &labels) {
+            return m;
+        }
+        let metric = Arc::new(Counter::default());
+        inner.counters.push(Registered {
+            name: name.into(),
+            help: help.into(),
+            labels,
+            scale: 1.0,
+            metric: Arc::clone(&metric),
+        });
+        metric
+    }
+
+    /// Get or register an integer gauge.
+    pub fn gauge(&self, name: &str, help: &str) -> Arc<Gauge> {
+        self.gauge_with(name, help, Vec::new())
+    }
+
+    /// Labelled variant of [`gauge`](Self::gauge).
+    pub fn gauge_with(&self, name: &str, help: &str, labels: Labels) -> Arc<Gauge> {
+        let mut inner = self.inner.lock().unwrap();
+        if let Some(m) = find(&inner.gauges, name, &labels) {
+            return m;
+        }
+        let metric = Arc::new(Gauge::default());
+        inner.gauges.push(Registered {
+            name: name.into(),
+            help: help.into(),
+            labels,
+            scale: 1.0,
+            metric: Arc::clone(&metric),
+        });
+        metric
+    }
+
+    /// Get or register a floating-point gauge.
+    pub fn fgauge(&self, name: &str, help: &str) -> Arc<FGauge> {
+        let mut inner = self.inner.lock().unwrap();
+        if let Some(m) = find(&inner.fgauges, name, &Vec::new()) {
+            return m;
+        }
+        let metric = Arc::new(FGauge::default());
+        inner.fgauges.push(Registered {
+            name: name.into(),
+            help: help.into(),
+            labels: Vec::new(),
+            scale: 1.0,
+            metric: Arc::clone(&metric),
+        });
+        metric
+    }
+
+    /// Get or register a latency histogram: samples are recorded in
+    /// **nanoseconds** and exported in seconds.
+    pub fn histogram_secs(&self, name: &str, help: &str) -> Arc<Histogram> {
+        self.histogram_scaled(name, help, Vec::new(), 1e-9)
+    }
+
+    /// Labelled variant of [`histogram_secs`](Self::histogram_secs).
+    pub fn histogram_secs_with(&self, name: &str, help: &str, labels: Labels) -> Arc<Histogram> {
+        self.histogram_scaled(name, help, labels, 1e-9)
+    }
+
+    /// Get or register a raw-unit histogram (bytes, counts): samples are
+    /// exported unscaled.
+    pub fn histogram_raw(&self, name: &str, help: &str) -> Arc<Histogram> {
+        self.histogram_scaled(name, help, Vec::new(), 1.0)
+    }
+
+    fn histogram_scaled(
+        &self,
+        name: &str,
+        help: &str,
+        labels: Labels,
+        scale: f64,
+    ) -> Arc<Histogram> {
+        let mut inner = self.inner.lock().unwrap();
+        if let Some(m) = find(&inner.histograms, name, &labels) {
+            return m;
+        }
+        let metric = Arc::new(Histogram::new());
+        inner.histograms.push(Registered {
+            name: name.into(),
+            help: help.into(),
+            labels,
+            scale,
+            metric: Arc::clone(&metric),
+        });
+        metric
+    }
+
+    /// Render every registered instrument in the Prometheus text exposition
+    /// format, ending with an OpenMetrics-style `# EOF` line (which doubles
+    /// as the framing marker the wire protocol's `METRICS` reply needs).
+    pub fn render_prometheus(&self) -> String {
+        let inner = self.inner.lock().unwrap();
+        let mut out = String::new();
+        // a labelled family declares HELP/TYPE exactly once
+        let mut typed: Vec<String> = Vec::new();
+        let mut header = |out: &mut String, name: &str, help: &str, kind: &str| {
+            if !typed.iter().any(|t| t == name) {
+                out.push_str(&format!("# HELP {name} {help}\n# TYPE {name} {kind}\n"));
+                typed.push(name.to_string());
+            }
+        };
+        for r in &inner.counters {
+            header(&mut out, &r.name, &r.help, "counter");
+            out.push_str(&format!(
+                "{}{} {}\n",
+                r.name,
+                render_labels(&r.labels),
+                r.metric.get()
+            ));
+        }
+        for r in &inner.gauges {
+            header(&mut out, &r.name, &r.help, "gauge");
+            out.push_str(&format!(
+                "{}{} {}\n",
+                r.name,
+                render_labels(&r.labels),
+                r.metric.get()
+            ));
+        }
+        for r in &inner.fgauges {
+            header(&mut out, &r.name, &r.help, "gauge");
+            out.push_str(&format!(
+                "{}{} {}\n",
+                r.name,
+                render_labels(&r.labels),
+                render_f64(r.metric.get())
+            ));
+        }
+        for r in &inner.histograms {
+            header(&mut out, &r.name, &r.help, "histogram");
+            let labels = &r.labels;
+            for (hi, cum) in r.metric.cumulative_buckets() {
+                let mut le_labels = labels.clone();
+                le_labels.push(("le".into(), render_f64(hi as f64 * r.scale)));
+                out.push_str(&format!(
+                    "{}_bucket{} {}\n",
+                    r.name,
+                    render_labels(&le_labels),
+                    cum
+                ));
+            }
+            let mut inf_labels = labels.clone();
+            inf_labels.push(("le".into(), "+Inf".into()));
+            out.push_str(&format!(
+                "{}_bucket{} {}\n",
+                r.name,
+                render_labels(&inf_labels),
+                r.metric.count()
+            ));
+            out.push_str(&format!(
+                "{}_sum{} {}\n",
+                r.name,
+                render_labels(labels),
+                render_f64(r.metric.sum() as f64 * r.scale)
+            ));
+            out.push_str(&format!(
+                "{}_count{} {}\n",
+                r.name,
+                render_labels(labels),
+                r.metric.count()
+            ));
+        }
+        out.push_str("# EOF\n");
+        out
+    }
+}
+
+fn render_labels(labels: &Labels) -> String {
+    if labels.is_empty() {
+        return String::new();
+    }
+    let parts: Vec<String> = labels
+        .iter()
+        .map(|(k, v)| format!("{k}=\"{}\"", v.replace('\\', "\\\\").replace('"', "\\\"")))
+        .collect();
+    format!("{{{}}}", parts.join(","))
+}
+
+fn render_f64(v: f64) -> String {
+    if !v.is_finite() {
+        return if v > 0.0 { "+Inf".into() } else { "-Inf".into() };
+    }
+    if v == v.trunc() && v.abs() < 1e15 {
+        format!("{}", v as i64)
+    } else {
+        // enough digits to round-trip the bucket bounds distinctly
+        let s = format!("{v:.9}");
+        s.trim_end_matches('0').trim_end_matches('.').to_string()
+    }
+}
+
+/// The process-global registry every subsystem registers against. Using a
+/// global keeps instrument wiring out of constructor signatures: the pool,
+/// the WAL, the snapshot writer, and the engine each `get_or_register`
+/// their instruments here at construction.
+pub fn global() -> &'static Registry {
+    static GLOBAL: OnceLock<Registry> = OnceLock::new();
+    GLOBAL.get_or_init(Registry::new)
+}
+
+// ---------------------------------------------------------------------------
+// text-format validation
+// ---------------------------------------------------------------------------
+
+/// Validate Prometheus text exposition syntax: every line is a comment, a
+/// `# HELP`/`# TYPE` declaration, or `name[{labels}] value`; sample names
+/// (modulo `_bucket`/`_sum`/`_count` suffixes) have a preceding `# TYPE`;
+/// histogram `le` bucket values are non-decreasing per series. Used by the
+/// CI smoke (`skipper-cli lint --metrics`) and the obs tests.
+pub fn validate_prometheus(text: &str) -> Result<(), String> {
+    let name_ok = |s: &str| {
+        !s.is_empty()
+            && s.chars().next().is_some_and(|c| c.is_ascii_alphabetic() || c == '_')
+            && s.chars().all(|c| c.is_ascii_alphanumeric() || c == '_' || c == ':')
+    };
+    let mut types: Vec<(String, String)> = Vec::new();
+    let mut last_bucket: std::collections::BTreeMap<String, u64> = Default::default();
+    for (ln, line) in text.lines().enumerate() {
+        let ln = ln + 1;
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix("# ") {
+            if rest == "EOF" {
+                continue;
+            }
+            let mut it = rest.splitn(3, ' ');
+            let kind = it.next().unwrap_or("");
+            let name = it.next().unwrap_or("");
+            match kind {
+                "HELP" => {
+                    if !name_ok(name) {
+                        return Err(format!("line {ln}: bad HELP metric name {name:?}"));
+                    }
+                }
+                "TYPE" => {
+                    let ty = it.next().unwrap_or("");
+                    if !name_ok(name) {
+                        return Err(format!("line {ln}: bad TYPE metric name {name:?}"));
+                    }
+                    if !["counter", "gauge", "histogram", "summary", "untyped"].contains(&ty) {
+                        return Err(format!("line {ln}: unknown TYPE {ty:?}"));
+                    }
+                    types.push((name.to_string(), ty.to_string()));
+                }
+                _ => return Err(format!("line {ln}: unknown comment directive {kind:?}")),
+            }
+            continue;
+        }
+        if line.starts_with('#') {
+            return Err(format!("line {ln}: comments must start with '# '"));
+        }
+        // sample line: name[{labels}] value
+        let (series, value) = line
+            .rsplit_once(' ')
+            .ok_or_else(|| format!("line {ln}: no value field"))?;
+        let val: f64 = match value {
+            "+Inf" => f64::INFINITY,
+            "-Inf" => f64::NEG_INFINITY,
+            "NaN" => f64::NAN,
+            v => v
+                .parse()
+                .map_err(|_| format!("line {ln}: unparsable value {value:?}"))?,
+        };
+        let (name, labels) = match series.split_once('{') {
+            Some((n, rest)) => {
+                let body = rest
+                    .strip_suffix('}')
+                    .ok_or_else(|| format!("line {ln}: unterminated label set"))?;
+                (n, Some(body))
+            }
+            None => (series, None),
+        };
+        if !name_ok(name) {
+            return Err(format!("line {ln}: bad sample name {name:?}"));
+        }
+        if let Some(body) = labels {
+            for pair in split_label_pairs(body) {
+                let (k, v) = pair
+                    .split_once('=')
+                    .ok_or_else(|| format!("line {ln}: label {pair:?} missing '='"))?;
+                if !name_ok(k) {
+                    return Err(format!("line {ln}: bad label name {k:?}"));
+                }
+                if !(v.starts_with('"') && v.ends_with('"') && v.len() >= 2) {
+                    return Err(format!("line {ln}: label value {v:?} not quoted"));
+                }
+            }
+        }
+        // base name: strip histogram sample suffixes for the TYPE check
+        let base = ["_bucket", "_sum", "_count"]
+            .iter()
+            .find_map(|suf| name.strip_suffix(suf).filter(|b| has_type(&types, b)))
+            .unwrap_or(name);
+        if !has_type(&types, base) {
+            return Err(format!("line {ln}: sample {name:?} has no preceding # TYPE"));
+        }
+        // per-series histogram bucket monotonicity
+        if name.ends_with("_bucket") && val.is_finite() {
+            let cum = val as u64;
+            let key = series.to_string();
+            let prefix = key
+                .split_once("le=")
+                .map(|(p, _)| p.to_string())
+                .unwrap_or_else(|| key.clone());
+            if let Some(&prev) = last_bucket.get(&prefix) {
+                if cum < prev {
+                    return Err(format!("line {ln}: histogram buckets not cumulative"));
+                }
+            }
+            last_bucket.insert(prefix, cum);
+        }
+    }
+    if types.is_empty() {
+        return Err("no # TYPE declarations found".into());
+    }
+    Ok(())
+}
+
+fn has_type(types: &[(String, String)], name: &str) -> bool {
+    types.iter().any(|(n, _)| n == name)
+}
+
+/// Split a Prometheus label body on commas that are outside quoted values.
+fn split_label_pairs(body: &str) -> Vec<String> {
+    let mut out = Vec::new();
+    let mut cur = String::new();
+    let mut in_quotes = false;
+    let mut escape = false;
+    for c in body.chars() {
+        if escape {
+            cur.push(c);
+            escape = false;
+            continue;
+        }
+        match c {
+            '\\' if in_quotes => {
+                cur.push(c);
+                escape = true;
+            }
+            '"' => {
+                cur.push(c);
+                in_quotes = !in_quotes;
+            }
+            ',' if !in_quotes => {
+                out.push(std::mem::take(&mut cur));
+            }
+            _ => cur.push(c),
+        }
+    }
+    if !cur.is_empty() {
+        out.push(cur);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn buckets_tile_the_u64_range() {
+        // bucket_of is monotone, bucket_bounds inverts it, and widths stay
+        // within one-eighth of the lower bound
+        let mut probes: Vec<u64> = (0..2048).collect();
+        for shift in 11..64 {
+            probes.push(1u64 << shift);
+            probes.push((1u64 << shift) + 1);
+            probes.push((1u64 << shift) - 1);
+            probes.push((1u64 << shift) | (1 << (shift - 2)));
+        }
+        probes.push(u64::MAX);
+        let mut last_idx = 0usize;
+        probes.sort_unstable();
+        for &v in &probes {
+            let idx = bucket_of(v);
+            assert!(idx < NUM_BUCKETS, "v={v} idx={idx}");
+            assert!(idx >= last_idx, "bucket_of not monotone at {v}");
+            last_idx = idx;
+            let (lo, hi) = bucket_bounds(idx);
+            assert!(lo <= v && v <= hi, "v={v} outside [{lo},{hi}]");
+            assert!(hi - lo <= lo.max(8) / 8, "bucket [{lo},{hi}] too wide");
+        }
+        // adjacent buckets tile without gap or overlap
+        for idx in 0..NUM_BUCKETS - 1 {
+            let (_, hi) = bucket_bounds(idx);
+            let (lo2, _) = bucket_bounds(idx + 1);
+            if hi != u64::MAX {
+                assert_eq!(lo2, hi + 1, "gap after bucket {idx}");
+            }
+        }
+    }
+
+    #[test]
+    fn histogram_percentiles_bracket_exact_values() {
+        let h = Histogram::new();
+        let vals: Vec<u64> = (1..=1000u64).map(|i| i * i).collect();
+        for &v in &vals {
+            h.record(v);
+        }
+        assert_eq!(h.count(), 1000);
+        for p in [0.0, 10.0, 50.0, 90.0, 99.0, 99.9, 100.0] {
+            let est = h.percentile(p);
+            let rank = ((p / 100.0) * 1000.0).ceil().clamp(1.0, 1000.0) as usize;
+            let exact = vals[rank - 1];
+            let (lo, hi) = bucket_bounds(bucket_of(exact));
+            assert!(est >= exact, "p{p}: est {est} < exact {exact}");
+            assert_eq!(est, hi, "p{p}: est must be the exact sample's bucket hi");
+            assert!(lo <= exact, "p{p}");
+        }
+        assert_eq!(Histogram::new().percentile(50.0), 0, "empty histogram");
+    }
+
+    #[test]
+    fn counters_sum_across_threads() {
+        let c = Arc::new(Counter::default());
+        std::thread::scope(|s| {
+            for _ in 0..8 {
+                let c = Arc::clone(&c);
+                s.spawn(move || {
+                    for _ in 0..10_000 {
+                        c.inc();
+                    }
+                });
+            }
+        });
+        assert_eq!(c.get(), 80_000);
+    }
+
+    #[test]
+    fn gauge_dec_clamps_at_zero_and_fgauge_accumulates() {
+        let g = Gauge::default();
+        g.inc(3);
+        g.dec(5);
+        assert_eq!(g.get(), 0);
+        let f = FGauge::default();
+        f.add(0.5);
+        f.add(0.25);
+        assert!((f.get() - 0.75).abs() < 1e-12);
+        f.set(2.0);
+        assert_eq!(f.get(), 2.0);
+    }
+
+    #[test]
+    fn registry_dedups_and_renders_valid_prometheus() {
+        let reg = Registry::new();
+        let c1 = reg.counter("test_ops_total", "ops");
+        let c2 = reg.counter("test_ops_total", "ops");
+        c1.add(3);
+        c2.add(4);
+        assert_eq!(c1.get(), 7, "same name must share the instrument");
+        reg.gauge("test_depth", "queue depth").set(2);
+        reg.fgauge("test_frac", "fraction").set(0.125);
+        let h = reg.histogram_secs("test_latency_seconds", "latency");
+        h.record(1_000_000); // 1 ms
+        h.record(2_000_000);
+        let labelled = reg.histogram_secs_with(
+            "test_shard_seconds",
+            "per-shard",
+            vec![("shard".into(), "0".into())],
+        );
+        labelled.record(500);
+        let text = reg.render_prometheus();
+        validate_prometheus(&text).unwrap_or_else(|e| panic!("{e}\n---\n{text}"));
+        assert!(text.contains("# TYPE test_ops_total counter"));
+        assert!(text.contains("test_ops_total 7"));
+        assert!(text.contains("# TYPE test_latency_seconds histogram"));
+        assert!(text.contains("test_latency_seconds_bucket{le=\"+Inf\"} 2"));
+        assert!(text.contains("test_latency_seconds_count 2"));
+        assert!(text.contains("test_shard_seconds_bucket{shard=\"0\",le="));
+        assert!(text.ends_with("# EOF\n"));
+    }
+
+    #[test]
+    fn validator_rejects_malformed_text() {
+        assert!(validate_prometheus("").is_err(), "no TYPE at all");
+        assert!(validate_prometheus("#bad comment\n").is_err());
+        assert!(
+            validate_prometheus("# TYPE m counter\nm not_a_number\n").is_err(),
+            "unparsable value"
+        );
+        assert!(
+            validate_prometheus("orphan_sample 1\n").is_err(),
+            "sample without TYPE"
+        );
+        assert!(
+            validate_prometheus(
+                "# TYPE h histogram\nh_bucket{le=\"1\"} 5\nh_bucket{le=\"2\"} 3\n"
+            )
+            .is_err(),
+            "non-cumulative buckets"
+        );
+        assert!(validate_prometheus("# TYPE m counter\nm{x=unquoted} 1\n").is_err());
+    }
+}

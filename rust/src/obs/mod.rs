@@ -1,0 +1,22 @@
+//! Crate-wide observability: a lock-free metrics registry and an epoch
+//! span tracer, with Prometheus / Chrome-trace export surfaces.
+//!
+//! Three layers (see `docs/ARCHITECTURE.md` § Observability):
+//!
+//! * [`metrics`] — sharded atomic counters, gauges, and fixed-bucket
+//!   log-scale histograms behind a process-global registry
+//!   ([`metrics::global`]); exported as Prometheus text by the `METRICS`
+//!   protocol command and `serve --metrics-file`.
+//! * [`trace`] — per-thread flight-recorder rings of begin/end spans
+//!   (router, per-shard mutate/repair, WAL append+fsync, snapshot capture,
+//!   pool job run/park), disabled by default behind one relaxed atomic
+//!   branch; exported as Chrome trace-event JSON by the `TRACE <n>`
+//!   protocol command and `churn --trace-out`.
+//!
+//! Instrumented subsystems register their instruments once at
+//! construction and update them lock-free; nothing here appears on the
+//! per-edge hot path — the finest-grained sites are per shard-phase,
+//! per WAL append, and per pool job.
+
+pub mod metrics;
+pub mod trace;

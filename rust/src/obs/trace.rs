@@ -1,0 +1,389 @@
+//! Epoch span tracing: a per-thread flight recorder exportable as Chrome
+//! trace-event JSON.
+//!
+//! ## Overhead argument
+//!
+//! Tracing is **disabled by default**. Every instrumentation site calls
+//! [`span`], which starts with one relaxed [`AtomicBool`] load and a
+//! branch; when disabled it returns `None` immediately — no clock read, no
+//! allocation, no lock. That is the entire hot-path cost, so an
+//! uninstrumented build and a disabled-tracing build execute the same
+//! work per edge (the churn registry gate in CI holds this to numbers).
+//!
+//! When enabled ([`set_enabled`]), each span reads the monotonic clock
+//! twice (construction + drop) and pushes one fixed-size [`SpanEvent`]
+//! into its **own thread's** ring under a mutex that only the `TRACE`
+//! exporter ever contends on. Rings are bounded ([`RING_CAPACITY`]
+//! events); the newest events overwrite the oldest, flight-recorder style,
+//! so a long-running server holds a sliding window of recent epochs at a
+//! fixed memory cost.
+//!
+//! ## Export
+//!
+//! [`chrome_trace_json`] renders the recorded spans as Chrome
+//! trace-event JSON (`"ph":"X"` complete events with microsecond
+//! timestamps), loadable in `chrome://tracing` or Perfetto. Spans carry
+//! the engine epoch where the instrumentation site knows it, which is
+//! what lets the `TRACE <n>` protocol command cut the window to the last
+//! `n` epochs.
+
+use crate::util::json::Json;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::Instant;
+
+/// Per-thread ring capacity, in spans. At ~6 spans per epoch per thread
+/// this holds several hundred epochs of history per thread.
+pub const RING_CAPACITY: usize = 4096;
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+
+/// Is span recording on? One relaxed load — this is the branch every
+/// disabled-by-default instrumentation site pays.
+#[inline(always)]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Turn span recording on or off (`serve --trace`, `churn --trace-out`).
+pub fn set_enabled(on: bool) {
+    ENABLED.store(on, Ordering::Relaxed);
+}
+
+/// The process-wide epoch origin for span timestamps: all `ts` values are
+/// microseconds since the first span-related call in the process.
+fn origin() -> Instant {
+    static ORIGIN: OnceLock<Instant> = OnceLock::new();
+    *ORIGIN.get_or_init(Instant::now)
+}
+
+/// One recorded span: a closed `[start, start+dur]` interval on one thread.
+#[derive(Clone, Debug)]
+pub struct SpanEvent {
+    /// Site name (`mutate`, `repair`, `wal_append`, `pool_run`, ...).
+    pub name: &'static str,
+    /// Category for trace viewers (`engine`, `wal`, `pool`, `service`).
+    pub cat: &'static str,
+    /// Microseconds since the process trace origin.
+    pub ts_us: u64,
+    /// Span duration in microseconds.
+    pub dur_us: u64,
+    /// Recording thread (stable small integer, not the OS tid).
+    pub tid: u64,
+    /// Engine epoch the span belongs to, 0 when the site has no epoch
+    /// context (pool park/wake, snapshot writer).
+    pub epoch: u64,
+    /// Site-specific argument (shard index, byte count, group size).
+    pub arg: u64,
+}
+
+struct Ring {
+    tid: u64,
+    events: Mutex<std::collections::VecDeque<SpanEvent>>,
+}
+
+fn rings() -> &'static Mutex<Vec<Arc<Ring>>> {
+    static RINGS: OnceLock<Mutex<Vec<Arc<Ring>>>> = OnceLock::new();
+    RINGS.get_or_init(|| Mutex::new(Vec::new()))
+}
+
+static NEXT_TID: AtomicU64 = AtomicU64::new(1);
+
+thread_local! {
+    static MY_RING: Arc<Ring> = {
+        let ring = Arc::new(Ring {
+            tid: NEXT_TID.fetch_add(1, Ordering::Relaxed),
+            events: Mutex::new(std::collections::VecDeque::with_capacity(64)),
+        });
+        rings().lock().unwrap().push(Arc::clone(&ring));
+        ring
+    };
+}
+
+/// An in-flight span; records itself into the thread's ring when dropped.
+/// Only ever constructed when tracing is enabled (see [`span`]).
+pub struct SpanGuard {
+    name: &'static str,
+    cat: &'static str,
+    start: Instant,
+    epoch: u64,
+    arg: u64,
+}
+
+impl SpanGuard {
+    /// Attach/replace the site-specific argument after construction.
+    pub fn set_arg(&mut self, arg: u64) {
+        self.arg = arg;
+    }
+}
+
+impl Drop for SpanGuard {
+    fn drop(&mut self) {
+        let dur_us = self.start.elapsed().as_micros().min(u128::from(u64::MAX)) as u64;
+        let ts_us = self
+            .start
+            .duration_since(origin())
+            .as_micros()
+            .min(u128::from(u64::MAX)) as u64;
+        let epoch = self.epoch;
+        MY_RING.with(|ring| {
+            let mut events = ring.events.lock().unwrap();
+            if events.len() >= RING_CAPACITY {
+                events.pop_front();
+            }
+            events.push_back(SpanEvent {
+                name: self.name,
+                cat: self.cat,
+                ts_us,
+                dur_us,
+                tid: ring.tid,
+                epoch,
+                arg: self.arg,
+            });
+        });
+    }
+}
+
+/// Open an epoch-untagged span (sites with no epoch context: pool
+/// park/run, snapshot writer). Returns `None` (after one relaxed load)
+/// when tracing is disabled.
+#[inline]
+pub fn span(name: &'static str, cat: &'static str, arg: u64) -> Option<SpanGuard> {
+    if !enabled() {
+        return None;
+    }
+    let _ = origin(); // pin the time origin before the first timestamp
+    Some(SpanGuard { name, cat, start: Instant::now(), epoch: 0, arg })
+}
+
+/// Open a span tagged with an explicit epoch (sites that know it).
+#[inline]
+pub fn span_epoch(
+    name: &'static str,
+    cat: &'static str,
+    epoch: u64,
+    arg: u64,
+) -> Option<SpanGuard> {
+    if !enabled() {
+        return None;
+    }
+    let _ = origin();
+    Some(SpanGuard { name, cat, start: Instant::now(), epoch, arg })
+}
+
+/// Copy out every ring's events (the rings keep recording). Sorted by
+/// start timestamp.
+pub fn collect() -> Vec<SpanEvent> {
+    let rings = rings().lock().unwrap();
+    let mut out = Vec::new();
+    for ring in rings.iter() {
+        out.extend(ring.events.lock().unwrap().iter().cloned());
+    }
+    out.sort_by_key(|e| e.ts_us);
+    out
+}
+
+/// Clear every ring (used between runs so `--trace-out` captures exactly
+/// one workload).
+pub fn clear() {
+    let rings = rings().lock().unwrap();
+    for ring in rings.iter() {
+        ring.events.lock().unwrap().clear();
+    }
+}
+
+/// Restrict `events` to the last `n` engine epochs: spans tagged with an
+/// epoch keep the `n` newest distinct epoch numbers; untagged spans
+/// (epoch 0 — pool parks, snapshot writer) are kept when they start at or
+/// after the window's earliest tagged span. `n = 0` keeps everything.
+pub fn last_epochs(mut events: Vec<SpanEvent>, n: u64) -> Vec<SpanEvent> {
+    if n == 0 {
+        return events;
+    }
+    let max_epoch = events.iter().map(|e| e.epoch).max().unwrap_or(0);
+    if max_epoch == 0 {
+        return events; // nothing is epoch-tagged; the window is everything
+    }
+    let cutoff = max_epoch.saturating_sub(n - 1).max(1);
+    let tmin = events
+        .iter()
+        .filter(|e| e.epoch >= cutoff)
+        .map(|e| e.ts_us)
+        .min()
+        .unwrap_or(0);
+    events.retain(|e| e.epoch >= cutoff || (e.epoch == 0 && e.ts_us >= tmin));
+    events
+}
+
+/// Render spans as a Chrome trace-event JSON object:
+/// `{"displayTimeUnit":"ms","traceEvents":[{"ph":"X",...},...]}` —
+/// loadable directly in `chrome://tracing` / Perfetto (extra top-level
+/// keys, like the protocol's `ok`/`op`, are ignored by the viewers).
+pub fn chrome_trace_json(events: &[SpanEvent]) -> Json {
+    let pid = std::process::id() as u64;
+    let arr: Vec<Json> = events
+        .iter()
+        .map(|e| {
+            let mut args = Json::obj();
+            args.set("epoch", Json::from(e.epoch)).set("arg", Json::from(e.arg));
+            let mut o = Json::obj();
+            o.set("name", Json::from(e.name))
+                .set("cat", Json::from(e.cat))
+                .set("ph", Json::from("X"))
+                .set("ts", Json::from(e.ts_us))
+                .set("dur", Json::from(e.dur_us))
+                .set("pid", Json::from(pid))
+                .set("tid", Json::from(e.tid))
+                .set("args", args);
+            o
+        })
+        .collect();
+    let mut root = Json::obj();
+    root.set("displayTimeUnit", Json::from("ms"))
+        .set("traceEvents", Json::Arr(arr));
+    root
+}
+
+/// Validate a Chrome trace JSON document: it must parse, expose a
+/// `traceEvents` array, and every event needs `name`/`ph`/`ts` fields.
+/// Returns the span names found (for `lint --require` checks).
+pub fn validate_chrome_trace(text: &str) -> Result<Vec<String>, String> {
+    let root = crate::util::json::parse(text)?;
+    let events = root
+        .get("traceEvents")
+        .and_then(Json::as_arr)
+        .ok_or("no \"traceEvents\" array")?;
+    let mut names = Vec::new();
+    for (i, e) in events.iter().enumerate() {
+        let name = e
+            .get("name")
+            .and_then(Json::as_str)
+            .ok_or_else(|| format!("event {i}: missing \"name\""))?;
+        if e.get("ph").and_then(Json::as_str).is_none() {
+            return Err(format!("event {i}: missing \"ph\""));
+        }
+        if e.get("ts").and_then(Json::as_f64).is_none() {
+            return Err(format!("event {i}: missing \"ts\""));
+        }
+        if !names.iter().any(|n| n == name) {
+            names.push(name.to_string());
+        }
+    }
+    Ok(names)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Tracing state is process-global; tests that flip it serialize here
+    /// so cargo's parallel test threads don't interleave recordings.
+    fn tracing_lock() -> &'static Mutex<()> {
+        static LOCK: OnceLock<Mutex<()>> = OnceLock::new();
+        LOCK.get_or_init(|| Mutex::new(()))
+    }
+
+    /// Other tests in the crate run instrumented engines concurrently; any
+    /// of their spans recorded while one of these tests has tracing on are
+    /// noise. Assertions therefore filter on this test-only category.
+    const CAT: &str = "obstest";
+
+    #[test]
+    fn disabled_spans_record_nothing() {
+        let _guard = tracing_lock().lock().unwrap();
+        set_enabled(false);
+        clear();
+        assert!(span("obs_noop", CAT, 0).is_none());
+        assert!(!collect().iter().any(|e| e.cat == CAT));
+    }
+
+    #[test]
+    fn spans_record_and_export_chrome_trace() {
+        let _guard = tracing_lock().lock().unwrap();
+        set_enabled(true);
+        clear();
+        {
+            let _a = span_epoch("obs_mutate", CAT, 7, 3);
+            std::thread::sleep(std::time::Duration::from_micros(200));
+        }
+        {
+            let mut b = span("obs_wal", CAT, 0).expect("tracing is on");
+            b.set_arg(128);
+        }
+        set_enabled(false);
+        let events: Vec<SpanEvent> =
+            collect().into_iter().filter(|e| e.cat == CAT).collect();
+        assert_eq!(events.len(), 2);
+        let mutate = events.iter().find(|e| e.name == "obs_mutate").unwrap();
+        assert_eq!(mutate.epoch, 7);
+        assert_eq!(mutate.arg, 3);
+        assert!(mutate.dur_us >= 100, "measured {}", mutate.dur_us);
+        let wal = events.iter().find(|e| e.name == "obs_wal").unwrap();
+        assert_eq!(wal.epoch, 0, "span() leaves the epoch untagged");
+        assert_eq!(wal.arg, 128, "set_arg overrides the construction arg");
+        let text = chrome_trace_json(&events).render_compact();
+        let names = validate_chrome_trace(&text).unwrap();
+        assert!(names.contains(&"obs_mutate".to_string()));
+        assert!(names.contains(&"obs_wal".to_string()));
+        clear();
+        assert!(!collect().iter().any(|e| e.cat == CAT));
+    }
+
+    #[test]
+    fn ring_is_bounded() {
+        let _guard = tracing_lock().lock().unwrap();
+        set_enabled(true);
+        clear();
+        for i in 0..(RING_CAPACITY + 100) as u64 {
+            let _s = span_epoch("obs_tick", CAT, 1, i);
+        }
+        set_enabled(false);
+        let events: Vec<SpanEvent> =
+            collect().into_iter().filter(|e| e.name == "obs_tick").collect();
+        // concurrent tests' spans can displace a few of ours, never add
+        assert!(events.len() <= RING_CAPACITY, "ring exceeded capacity");
+        assert!(events.len() >= RING_CAPACITY - 100, "ring lost too much");
+        assert!(events.iter().all(|e| e.arg >= 100), "the survivors are the newest");
+        clear();
+    }
+
+    #[test]
+    fn last_epochs_windows_tagged_and_untagged_spans() {
+        let ev = |name: &'static str, epoch: u64, ts_us: u64| SpanEvent {
+            name,
+            cat: "test",
+            ts_us,
+            dur_us: 1,
+            tid: 1,
+            epoch,
+            arg: 0,
+        };
+        let events = vec![
+            ev("mutate", 1, 100),
+            ev("park", 0, 150), // before the window's first tagged span
+            ev("mutate", 2, 200),
+            ev("park", 0, 250),
+            ev("mutate", 3, 300),
+        ];
+        let cut = last_epochs(events.clone(), 2);
+        let names: Vec<(u64, u64)> = cut.iter().map(|e| (e.epoch, e.ts_us)).collect();
+        assert_eq!(names, vec![(2, 200), (0, 250), (3, 300)]);
+        assert_eq!(last_epochs(events.clone(), 0).len(), 5, "n=0 keeps all");
+        assert_eq!(last_epochs(events, 10).len(), 5, "window wider than history");
+    }
+
+    #[test]
+    fn trace_validator_rejects_malformed_documents() {
+        assert!(validate_chrome_trace("not json").is_err());
+        assert!(validate_chrome_trace("{\"a\":1}").is_err(), "no traceEvents");
+        assert!(
+            validate_chrome_trace("{\"traceEvents\":[{\"ph\":\"X\"}]}").is_err(),
+            "event without name"
+        );
+        let ok = validate_chrome_trace(
+            "{\"traceEvents\":[{\"name\":\"m\",\"ph\":\"X\",\"ts\":1,\"dur\":2,\"pid\":1,\"tid\":1}]}",
+        )
+        .unwrap();
+        assert_eq!(ok, vec!["m".to_string()]);
+    }
+}

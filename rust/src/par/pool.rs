@@ -36,12 +36,22 @@
 //! exits; dropping the pool closes every queue and joins every thread.
 
 use super::pump::BoundedQueue;
+use crate::obs::{metrics, trace};
 use std::panic::AssertUnwindSafe;
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
+use std::time::Instant;
 
 /// A unit of work submitted to one worker.
 pub type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// A queued job plus its submission timestamp, so the worker that pops it
+/// can report the spawn-to-run delay (how long work sat in the run queue —
+/// the pool's replacement for the old per-epoch thread-spawn overhead).
+struct Submitted {
+    job: Job,
+    queued_at: Instant,
+}
 
 /// Per-worker run-queue depth. Dispatch is phase-at-a-time (mutate, then
 /// repair), so one slot would suffice; a second gives slack for a caller
@@ -57,15 +67,29 @@ const RUN_QUEUE_DEPTH: usize = 2;
 /// keeps serving); callers that wait on a [`Countdown`] observe the panic
 /// as a missing result and surface it on their own thread.
 pub struct WorkerPool {
-    queues: Vec<Arc<BoundedQueue<Job>>>,
+    queues: Vec<Arc<BoundedQueue<Submitted>>>,
     handles: Vec<JoinHandle<()>>,
+    queue_depth: Arc<metrics::Gauge>,
 }
 
 impl WorkerPool {
     /// Spawn `workers` (clamped ≥ 1) parked threads, each with its own run
     /// queue. Threads are named `skipper-pool-<i>` for debuggability.
     pub fn new(workers: usize) -> Self {
-        let queues: Vec<Arc<BoundedQueue<Job>>> = (0..workers.max(1))
+        let reg = metrics::global();
+        let queue_depth = reg.gauge(
+            "skipper_pool_queue_depth",
+            "Jobs submitted to the worker pool and not yet started",
+        );
+        let spawn_delay = reg.histogram_secs(
+            "skipper_pool_spawn_delay_seconds",
+            "Delay between job submission and a worker starting it",
+        );
+        let jobs_run = reg.counter(
+            "skipper_pool_jobs_run_total",
+            "Jobs executed by the worker pool",
+        );
+        let queues: Vec<Arc<BoundedQueue<Submitted>>> = (0..workers.max(1))
             .map(|_| Arc::new(BoundedQueue::new(RUN_QUEUE_DEPTH)))
             .collect();
         let handles = queues
@@ -73,36 +97,47 @@ impl WorkerPool {
             .enumerate()
             .map(|(i, q)| {
                 let q = Arc::clone(q);
+                let depth = Arc::clone(&queue_depth);
+                let delay = Arc::clone(&spawn_delay);
+                let jobs = Arc::clone(&jobs_run);
                 std::thread::Builder::new()
                     .name(format!("skipper-pool-{i}"))
-                    .spawn(move || {
-                        while let Some(job) = q.pop() {
-                            // Contain job panics to the job: the worker must
-                            // survive to serve the next epoch, and the
-                            // dispatcher's countdown guard (dropped during
-                            // the unwind) releases the barrier so the
-                            // coordinator can report the failure. The
-                            // payload is surfaced here — the dispatcher only
-                            // knows *that* shard i died, not why.
-                            if let Err(payload) =
-                                std::panic::catch_unwind(AssertUnwindSafe(job))
-                            {
-                                let msg = payload
-                                    .downcast_ref::<&str>()
-                                    .map(|s| s.to_string())
-                                    .or_else(|| payload.downcast_ref::<String>().cloned())
-                                    .unwrap_or_else(|| "<non-string panic>".into());
-                                eprintln!(
-                                    "{}: job panicked: {msg}",
-                                    std::thread::current().name().unwrap_or("skipper-pool")
-                                );
-                            }
+                    .spawn(move || loop {
+                        let popped = {
+                            // idle time parked on the queue condvar
+                            let _park = trace::span("pool_park", "pool", i as u64);
+                            q.pop()
+                        };
+                        let Some(sub) = popped else { break };
+                        depth.dec(1);
+                        delay.record_duration(sub.queued_at.elapsed());
+                        jobs.inc();
+                        let _run = trace::span("pool_run", "pool", i as u64);
+                        // Contain job panics to the job: the worker must
+                        // survive to serve the next epoch, and the
+                        // dispatcher's countdown guard (dropped during
+                        // the unwind) releases the barrier so the
+                        // coordinator can report the failure. The
+                        // payload is surfaced here — the dispatcher only
+                        // knows *that* shard i died, not why.
+                        if let Err(payload) =
+                            std::panic::catch_unwind(AssertUnwindSafe(sub.job))
+                        {
+                            let msg = payload
+                                .downcast_ref::<&str>()
+                                .map(|s| s.to_string())
+                                .or_else(|| payload.downcast_ref::<String>().cloned())
+                                .unwrap_or_else(|| "<non-string panic>".into());
+                            eprintln!(
+                                "{}: job panicked: {msg}",
+                                std::thread::current().name().unwrap_or("skipper-pool")
+                            );
                         }
                     })
                     .expect("spawn pool worker")
             })
             .collect();
-        Self { queues, handles }
+        Self { queues, handles, queue_depth }
     }
 
     /// Number of workers in the pool.
@@ -116,7 +151,10 @@ impl WorkerPool {
     /// reference to it.
     pub fn submit(&self, worker: usize, job: impl FnOnce() + Send + 'static) {
         let q = &self.queues[worker % self.queues.len()];
-        if q.push(Box::new(job)).is_err() {
+        self.queue_depth.inc(1);
+        let sub = Submitted { job: Box::new(job), queued_at: Instant::now() };
+        if q.push(sub).is_err() {
+            self.queue_depth.dec(1);
             panic!("submit to a shut-down worker pool");
         }
     }

@@ -28,6 +28,7 @@
 
 use super::{crc32, DurabilityCounters};
 use crate::dynamic::ShardedDynamicMatcher;
+use crate::obs::{metrics, trace};
 use crate::VertexId;
 use std::io::Write;
 use std::path::{Path, PathBuf};
@@ -220,14 +221,30 @@ impl SnapshotWriter {
         let (tx, rx) = sync_channel::<SnapshotData>(1);
         let busy = Arc::new(std::sync::atomic::AtomicBool::new(false));
         let busy_writer = Arc::clone(&busy);
+        let reg = metrics::global();
+        let write_secs = reg.histogram_secs(
+            "skipper_snapshot_write_seconds",
+            "Snapshot serialize+write+fsync+rename latency",
+        );
+        let write_bytes = reg.histogram_raw(
+            "skipper_snapshot_bytes",
+            "On-disk size of each completed snapshot",
+        );
         let handle = std::thread::Builder::new()
             .name("skipper-snapshot".into())
             .spawn(move || {
                 while let Ok(data) = rx.recv() {
                     let epoch = data.epoch;
                     let path = dir.join(file_name(epoch));
+                    let t_obs = std::time::Instant::now();
+                    let mut span = trace::span_epoch("snapshot", "persist", epoch, 0);
                     match write_file(&path, &data) {
-                        Ok(_) => {
+                        Ok(bytes) => {
+                            write_secs.record_duration(t_obs.elapsed());
+                            write_bytes.record(bytes);
+                            if let Some(s) = span.as_mut() {
+                                s.set_arg(bytes);
+                            }
                             counters
                                 .last_snapshot_epoch
                                 .store(epoch, Ordering::Relaxed);
@@ -235,6 +252,7 @@ impl SnapshotWriter {
                         }
                         Err(e) => eprintln!("snapshot: {e}"),
                     }
+                    drop(span);
                     busy_writer.store(false, Ordering::Relaxed);
                 }
             })

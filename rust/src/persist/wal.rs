@@ -29,9 +29,12 @@
 
 use super::crc32;
 use crate::dynamic::Update;
+use crate::obs::{metrics, trace};
 use std::fs::{File, OpenOptions};
 use std::io::{BufWriter, Read, Seek, SeekFrom, Write};
 use std::path::{Path, PathBuf};
+use std::sync::Arc;
+use std::time::Instant;
 
 /// Per-segment magic, first 8 bytes of every WAL segment file.
 pub const WAL_MAGIC: &[u8; 8] = b"SKPWAL01";
@@ -89,6 +92,10 @@ pub struct Wal {
     writer: BufWriter<File>,
     epochs_appended: u64,
     bytes_appended: u64,
+    /// Append / fsync latency histograms, registered once at open against
+    /// the global metrics registry (shared by every `Wal` in the process).
+    append_hist: Arc<metrics::Histogram>,
+    fsync_hist: Arc<metrics::Histogram>,
 }
 
 fn segment_path(dir: &Path, seq: u64) -> PathBuf {
@@ -334,6 +341,7 @@ impl Wal {
         }
         file.seek(SeekFrom::Start(active.bytes))
             .map_err(|e| format!("seek {}: {e}", active.path.display()))?;
+        let reg = metrics::global();
         Ok(Wal {
             dir: dir.to_path_buf(),
             opts,
@@ -342,6 +350,14 @@ impl Wal {
             writer: BufWriter::new(file),
             epochs_appended: 0,
             bytes_appended: 0,
+            append_hist: reg.histogram_secs(
+                "skipper_wal_append_seconds",
+                "WAL record encode+write+flush latency (excluding fsync)",
+            ),
+            fsync_hist: reg.histogram_secs(
+                "skipper_wal_fsync_seconds",
+                "WAL sync_data latency (only recorded when fsync is on)",
+            ),
         })
     }
 
@@ -384,6 +400,8 @@ impl Wal {
     /// record) and [`append_epochs`](Self::append_epochs) (which syncs per
     /// group).
     fn append_record(&mut self, epoch: u64, updates: &[Update]) -> Result<u64, String> {
+        let t_obs = Instant::now();
+        let mut span = trace::span_epoch("wal_append", "wal", epoch, 0);
         let payload_len = 12u64 + 9 * updates.len() as u64;
         if payload_len > MAX_PAYLOAD_BYTES as u64 {
             return Err(format!(
@@ -414,16 +432,23 @@ impl Wal {
         self.active.last_epoch = epoch;
         self.epochs_appended += 1;
         self.bytes_appended += bytes;
+        if let Some(s) = span.as_mut() {
+            s.set_arg(bytes);
+        }
+        self.append_hist.record_duration(t_obs.elapsed());
         Ok(bytes)
     }
 
     /// `sync_data` the active segment when the options demand fsync.
     fn sync_if_configured(&mut self) -> Result<(), String> {
         if self.opts.fsync {
+            let t_obs = Instant::now();
+            let _span = trace::span("wal_fsync", "wal", 0);
             self.writer
                 .get_ref()
                 .sync_data()
                 .map_err(|e| format!("wal fsync: {e}"))?;
+            self.fsync_hist.record_duration(t_obs.elapsed());
         }
         Ok(())
     }

@@ -24,6 +24,15 @@
 //!                          consistent copy of the durable state to the
 //!                          background snapshot writer (requires
 //!                          --data-dir)
+//! METRICS                  every registered instrument in the Prometheus
+//!                          text exposition format. Answered immediately
+//!                          from the connection thread (no barrier) — safe
+//!                          to scrape at any rate
+//! TRACE [n]                span events of the last n engine epochs (all
+//!                          recorded epochs when n is omitted) as one JSON
+//!                          line embedding a Chrome trace-event document.
+//!                          Empty unless the server runs with tracing on
+//!                          (`serve --trace`)
 //! QUIT                     close this connection
 //! SHUTDOWN                 stop the whole server: drain, apply remaining
 //!                          updates, write a final snapshot when
@@ -36,6 +45,8 @@
 //! Every reply is one JSON line with an `"ok"` field, e.g.
 //! `{"ok":true,"op":"epoch","epoch":3,"repair_edges":12,...}` or
 //! `{"ok":false,"error":"..."}` — parseable by anything, greppable by CI.
+//! The single exception is `METRICS`, whose reply is the raw multi-line
+//! Prometheus exposition; its final `# EOF` line is the framing marker.
 //!
 //! The authoritative wire-format specification — every command, every
 //! reply schema field by field, backpressure and ordering guarantees, and
@@ -62,6 +73,11 @@ pub enum Command {
     },
     /// Barrier + hand the durable state to the background snapshot writer.
     Snapshot,
+    /// Scrape every registered instrument (Prometheus text exposition).
+    Metrics,
+    /// Span events of the last `n` engine epochs (`0` = all recorded) as a
+    /// Chrome trace-event document.
+    Trace(u64),
     /// Close this connection.
     Quit,
     /// Stop the whole server (graceful drain; final snapshot when durable).
@@ -131,6 +147,16 @@ impl Command {
                 }
             },
             "SNAPSHOT" => no_operands(&mut it, "SNAPSHOT", Command::Snapshot)?,
+            "METRICS" => no_operands(&mut it, "METRICS", Command::Metrics)?,
+            "TRACE" => match it.next() {
+                None => Command::Trace(0),
+                Some(t) => {
+                    let n = t
+                        .parse::<u64>()
+                        .map_err(|_| format!("TRACE expects an epoch count (got {t:?})"))?;
+                    no_operands(&mut it, "TRACE", Command::Trace(n))?
+                }
+            },
             "QUIT" => no_operands(&mut it, "QUIT", Command::Quit)?,
             "SHUTDOWN" => no_operands(&mut it, "SHUTDOWN", Command::Shutdown)?,
             "CRASH" => match it.next() {
@@ -256,10 +282,16 @@ pub struct StatsSnapshot {
     pub repair_frac_last: f64,
     /// Mean repair fraction over all update-carrying epochs.
     pub repair_frac_mean: f64,
-    /// Batch queue→applied latency percentiles, milliseconds.
+    /// Batch queue→applied latency percentiles, milliseconds. Computed
+    /// from the full-history `skipper_batch_latency_seconds` histogram, so
+    /// they reflect every batch since boot (each is the upper bound of the
+    /// log-scale bucket holding the nearest-rank sample — never an
+    /// under-report, over by at most one bucket's relative width).
     pub p50_batch_ms: f64,
     /// See [`p50_batch_ms`](Self::p50_batch_ms).
     pub p99_batch_ms: f64,
+    /// See [`p50_batch_ms`](Self::p50_batch_ms).
+    pub p999_batch_ms: f64,
     /// Live-set maximality audit result — `None` when the cheap `STATS`
     /// form skipped the O(|V|+|E_live|) walk (`STATS full` runs it).
     pub maximal: Option<bool>,
@@ -334,6 +366,14 @@ pub enum Response {
         /// and this request was skipped.
         accepted: bool,
     },
+    /// Reply to `METRICS`: the full Prometheus text exposition. The one
+    /// multi-line reply in the protocol — clients read until the `# EOF`
+    /// line that always terminates it.
+    Metrics(String),
+    /// Reply to `TRACE`: one pre-rendered JSON line embedding the Chrome
+    /// trace-event document (plus the protocol's `ok`/`op` fields, which
+    /// trace viewers ignore).
+    Trace(String),
     /// Reply to `QUIT`.
     Bye,
     /// Reply to `SHUTDOWN`.
@@ -343,10 +383,16 @@ pub enum Response {
 }
 
 impl Response {
-    /// Render as one JSON line (no trailing newline).
+    /// Render for the wire (no trailing newline). Every variant renders as
+    /// one JSON line except [`Metrics`](Self::Metrics), which is the raw
+    /// multi-line Prometheus text.
     pub fn render(&self) -> String {
         let mut j = JsonLine::new();
         match self {
+            // pre-rendered payloads: the exposition keeps its own framing
+            // (# EOF), the trace line is already one JSON object
+            Response::Metrics(text) => return text.trim_end_matches('\n').to_string(),
+            Response::Trace(line) => return line.clone(),
             Response::Queued { count } => {
                 j.bool("ok", true).str("op", "queued").u64("count", *count as u64);
             }
@@ -405,6 +451,7 @@ impl Response {
                     .f64("repair_frac_mean", s.repair_frac_mean)
                     .f64("p50_batch_ms", s.p50_batch_ms)
                     .f64("p99_batch_ms", s.p99_batch_ms)
+                    .f64("p999_batch_ms", s.p999_batch_ms)
                     .u64("adjacency_bytes", s.adjacency_bytes as u64)
                     .u64("engine_shards", s.engine_shards as u64)
                     .bool("pooled", s.pooled)
@@ -484,6 +531,12 @@ mod tests {
         assert_eq!(Command::parse("SHUTDOWN").unwrap(), Some(Command::Shutdown));
         assert_eq!(Command::parse("SNAPSHOT").unwrap(), Some(Command::Snapshot));
         assert!(Command::parse("SNAPSHOT now").is_err());
+        assert_eq!(Command::parse("METRICS").unwrap(), Some(Command::Metrics));
+        assert!(Command::parse("METRICS all").is_err());
+        assert_eq!(Command::parse("TRACE").unwrap(), Some(Command::Trace(0)));
+        assert_eq!(Command::parse("trace 5").unwrap(), Some(Command::Trace(5)));
+        assert!(Command::parse("TRACE five").is_err());
+        assert!(Command::parse("TRACE 5 6").is_err());
         assert_eq!(
             Command::parse("CRASH").unwrap(),
             Some(Command::Crash(CrashTarget::Router))
@@ -569,6 +622,32 @@ mod tests {
         let off = Response::Stats(StatsSnapshot::default()).render();
         assert!(off.contains(r#""durable":false"#), "{off}");
         assert!(off.contains(r#""wal_epochs":0"#), "{off}");
+    }
+
+    #[test]
+    fn stats_render_batch_latency_percentiles() {
+        let s = Response::Stats(StatsSnapshot {
+            p50_batch_ms: 0.5,
+            p99_batch_ms: 2.0,
+            p999_batch_ms: 8.0,
+            ..Default::default()
+        })
+        .render();
+        assert!(s.contains(r#""p50_batch_ms":0.500000"#), "{s}");
+        assert!(s.contains(r#""p99_batch_ms":2.000000"#), "{s}");
+        assert!(s.contains(r#""p999_batch_ms":8.000000"#), "{s}");
+    }
+
+    #[test]
+    fn metrics_reply_is_raw_exposition_and_trace_is_prerendered() {
+        let text = "# HELP x y\n# TYPE x counter\nx 1\n# EOF\n";
+        let m = Response::Metrics(text.into()).render();
+        // writeln! appends the final newline on the wire; render must not
+        // double it, and the EOF framing line must survive
+        assert_eq!(m, "# HELP x y\n# TYPE x counter\nx 1\n# EOF");
+        let t = Response::Trace(r#"{"ok":true,"op":"trace","traceEvents":[]}"#.into()).render();
+        assert!(t.contains(r#""traceEvents":[]"#), "{t}");
+        assert!(!t.contains('\n'), "one line: {t}");
     }
 
     #[test]

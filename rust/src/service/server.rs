@@ -12,15 +12,20 @@
 //!
 //! At a barrier (an explicit `EPOCH`, a queue-riding `QUERY`/`STATS`, or
 //! the coalescing threshold) the routed generation becomes a flush job.
-//! With pipelining on (the default), flush jobs cross a capacity-1 hand-off
-//! queue to the **flusher** thread, and the router immediately starts
-//! routing the *next* generation into a recycled mailbox set — parse/route
-//! work overlaps matching, and the per-epoch overlap is reported in
-//! [`EpochReport::route_overlap_s`](crate::dynamic::EpochReport). With
-//! pipelining off the same jobs execute inline on the router thread, which
-//! is exactly the previous serial coordinator. Either way a flush applies
-//! one engine epoch: the mutate phase fans out across the engine's
-//! persistent shard workers (or forked threads — see
+//! With pipelining on (the default), flush jobs cross a small fixed-depth
+//! hand-off queue to the **flusher** thread, and the router immediately
+//! starts routing the *next* generation into a recycled mailbox set —
+//! parse/route work overlaps matching, and the per-epoch overlap is
+//! reported in
+//! [`EpochReport::route_overlap_s`](crate::dynamic::EpochReport). The
+//! flusher drains the hand-off greedily: when several generations have
+//! queued behind a slow epoch, their WAL records are appended as **one
+//! durable group** (a single `fsync` under `--fsync` — see
+//! [`DurableService::log_epochs`]) before the generations are applied in
+//! FIFO order. With pipelining off the same jobs execute inline on the
+//! router thread, which is exactly the previous serial coordinator. Either
+//! way a flush applies one engine epoch: the mutate phase fans out across
+//! the engine's persistent shard workers (or forked threads — see
 //! [`ShardExec`](crate::dynamic::ShardExec)), and the insert/repair sweeps
 //! run against the shared one-byte-per-vertex core. Barrier jobs ride the
 //! same FIFO hand-off as the flushes they follow, so `EPOCH`/`STATS`
@@ -35,18 +40,27 @@
 //!
 //! Updates are acknowledged at enqueue time (`{"op":"queued"}`); the
 //! per-shard bounded queues push back on flooding clients without stalling
-//! the others, and the capacity-1 flush hand-off keeps the router at most
-//! one generation ahead of the engine.
+//! the others, and the bounded flush hand-off keeps the router at most
+//! `FLUSH_QUEUE_DEPTH` generations ahead of the engine.
+//!
+//! Service observability lives in a per-instance `ServiceMetrics`
+//! bundle: lifetime counters and the full-history batch-latency histogram
+//! are registry instruments (see [`crate::obs::metrics`]), so `STATS`
+//! reads and the `METRICS` Prometheus scrape are two views of the same
+//! atomics. `METRICS` and `TRACE` are answered directly on the connection
+//! thread — no barrier, no engine round-trip — so scraping never stalls
+//! epochs.
 //!
 //! The wire protocol itself is specified in `docs/PROTOCOL.md`.
 
 use super::protocol::{Command, CrashTarget, Response, StatsSnapshot};
 use super::{Promise, ShardedQueue};
 use crate::dynamic::{EpochReport, ShardExec, ShardMailboxes, ShardedDynamicMatcher, Update};
+use crate::obs::{metrics, trace};
 use crate::par::pump::{BoundedQueue, CloseOnDrop};
 use crate::persist::snapshot::SnapshotData;
 use crate::persist::{DurableOptions, DurableService};
-use crate::util::stats::percentile;
+use crate::util::json::Json;
 use crate::VertexId;
 use std::io::{BufRead, BufReader, Write};
 use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
@@ -162,6 +176,10 @@ pub struct ServiceSummary {
     /// normally the final shutdown snapshot; earlier (or 0) when that
     /// final write failed, and 0 when volatile.
     pub last_snapshot_epoch: u64,
+    /// Final Prometheus exposition (process-global registry plus this
+    /// service's counters), captured at shutdown — what a last `METRICS`
+    /// scrape would have returned. Backs `serve --metrics-file`.
+    pub metrics_text: String,
 }
 
 enum Request {
@@ -240,46 +258,120 @@ impl Drop for EngineGuard<'_> {
     }
 }
 
-/// Fixed-size ring of recent batch latencies (ms) for p50/p99 reporting.
-struct LatencyRing {
-    buf: Vec<f64>,
-    pos: usize,
+/// The service's lifetime instruments, registered in a **per-instance**
+/// [`metrics::Registry`] — `STATS` replies and the `METRICS` Prometheus
+/// scrape read the same atomics. Per-instance (rather than the process
+/// global) because one process can host several services (every in-process
+/// test does): totals must not smear across them. The `METRICS` reply
+/// concatenates this registry after the process-global one, so a scrape
+/// still sees the pool/engine/WAL instruments too.
+///
+/// The batch-latency histogram replaces the old fixed-size ring of recent
+/// samples: its log-scale buckets retain the *full* history, so
+/// p50/p99/p999 reflect every batch since boot instead of the last 4096,
+/// at the cost of reading each percentile as its bucket's upper bound
+/// (≤ 12.5% relative over-report, never under).
+struct ServiceMetrics {
+    registry: metrics::Registry,
+    total_inserts: Arc<metrics::Counter>,
+    total_deletes: Arc<metrics::Counter>,
+    total_repair_edges: Arc<metrics::Counter>,
+    /// Epochs that carried updates (the denominator of the mean repair
+    /// fraction).
+    update_epochs: Arc<metrics::Counter>,
+    repair_frac_last: Arc<metrics::FGauge>,
+    repair_frac_sum: Arc<metrics::FGauge>,
+    route_seconds: Arc<metrics::FGauge>,
+    route_overlap_seconds: Arc<metrics::FGauge>,
+    /// Enqueue→applied latency of every update batch, nanoseconds.
+    batch_latency: Arc<metrics::Histogram>,
+    /// Durable WAL append groups written (one shared `fsync` each).
+    wal_groups: Arc<metrics::Counter>,
+    /// Epochs logged through those groups; `wal_group_epochs /
+    /// wal_groups` is the mean coalescing factor the flusher achieved.
+    wal_group_epochs: Arc<metrics::Counter>,
 }
 
-const LATENCY_RING: usize = 4096;
-
-impl LatencyRing {
+impl ServiceMetrics {
     fn new() -> Self {
-        Self { buf: Vec::new(), pos: 0 }
-    }
-
-    fn push(&mut self, ms: f64) {
-        if self.buf.len() < LATENCY_RING {
-            self.buf.push(ms);
-        } else {
-            self.buf[self.pos] = ms;
-            self.pos = (self.pos + 1) % LATENCY_RING;
+        let registry = metrics::Registry::new();
+        let total_inserts = registry.counter(
+            "skipper_service_inserts_total",
+            "Insert updates received over the service lifetime",
+        );
+        let total_deletes = registry.counter(
+            "skipper_service_deletes_total",
+            "Delete updates received over the service lifetime",
+        );
+        let total_repair_edges = registry.counter(
+            "skipper_service_repair_edges_total",
+            "Edges re-examined by repair sweeps over the service lifetime",
+        );
+        let update_epochs = registry.counter(
+            "skipper_service_update_epochs_total",
+            "Engine epochs that carried updates",
+        );
+        let repair_frac_last = registry.fgauge(
+            "skipper_service_repair_fraction_last",
+            "Repair fraction of the most recent epoch",
+        );
+        let repair_frac_sum = registry.fgauge(
+            "skipper_service_repair_fraction_sum",
+            "Sum of per-epoch repair fractions (divide by update epochs for the mean)",
+        );
+        let route_seconds = registry.fgauge(
+            "skipper_service_route_seconds_total",
+            "Router wall seconds spent routing updates into shard mailboxes",
+        );
+        let route_overlap_seconds = registry.fgauge(
+            "skipper_service_route_overlap_seconds_total",
+            "Portion of route seconds that overlapped a running flush",
+        );
+        let batch_latency = registry.histogram_secs(
+            "skipper_batch_latency_seconds",
+            "Update batch latency from enqueue to applied",
+        );
+        let wal_groups = registry.counter(
+            "skipper_wal_groups_total",
+            "Durable WAL append groups written (one shared fsync each)",
+        );
+        let wal_group_epochs = registry.counter(
+            "skipper_wal_group_epochs_total",
+            "Epochs logged through WAL append groups",
+        );
+        Self {
+            registry,
+            total_inserts,
+            total_deletes,
+            total_repair_edges,
+            update_epochs,
+            repair_frac_last,
+            repair_frac_sum,
+            route_seconds,
+            route_overlap_seconds,
+            batch_latency,
+            wal_groups,
+            wal_group_epochs,
         }
     }
 
-    fn percentile(&self, p: f64) -> f64 {
-        if self.buf.is_empty() {
-            return 0.0;
-        }
-        percentile(&self.buf, p)
+    /// One batch-latency percentile, in milliseconds (samples are recorded
+    /// in nanoseconds).
+    fn batch_percentile_ms(&self, p: f64) -> f64 {
+        self.batch_latency.percentile(p) as f64 * 1e-6
     }
-}
 
-#[derive(Default)]
-struct Telemetry {
-    total_inserts: u64,
-    total_deletes: u64,
-    total_repair_edges: u64,
-    repair_frac_last: f64,
-    repair_frac_sum: f64,
-    epochs_with_updates: u64,
-    total_route_s: f64,
-    total_route_overlap_s: f64,
+    /// The full `METRICS` exposition: the process-global registry (pool,
+    /// engine shards, WAL, snapshots) followed by this service's
+    /// instruments, as one document with a single trailing `# EOF`.
+    fn render_prometheus(&self) -> String {
+        let mut text = metrics::global().render_prometheus();
+        let eof = "# EOF\n";
+        debug_assert!(text.ends_with(eof));
+        text.truncate(text.len() - eof.len());
+        text.push_str(&self.registry.render_prometheus());
+        text
+    }
 }
 
 /// One routed-but-unflushed generation of updates. The engine's per-shard
@@ -330,7 +422,7 @@ enum FlushJob {
     Crash,
 }
 
-/// The flush executor: owns service telemetry and the latency ring, applies
+/// The flush executor: updates the service instruments, applies
 /// generations to the engine, and answers barrier requests. Runs inline on
 /// the router thread when pipelining is off, or on the dedicated flusher
 /// thread when it is on.
@@ -346,8 +438,13 @@ struct FlushExec<'a> {
     /// service runs volatile. Owned here so every append and every state
     /// capture happens at an epoch barrier on the flush thread.
     dur: Option<DurableService>,
-    tel: Telemetry,
-    latencies: LatencyRing,
+    /// The service's lifetime instruments (shared with `STATS`/`METRICS`
+    /// readers; this executor is their only writer).
+    sm: &'a ServiceMetrics,
+    /// Generations whose WAL records `handle_group` already appended as a
+    /// durable group; `flush` skips its per-epoch append for exactly this
+    /// many upcoming generations.
+    prelogged: u64,
 }
 
 impl<'a> FlushExec<'a> {
@@ -357,16 +454,9 @@ impl<'a> FlushExec<'a> {
         flushing: &'a AtomicBool,
         spares: &'a BoundedQueue<ShardMailboxes>,
         dur: Option<DurableService>,
+        sm: &'a ServiceMetrics,
     ) -> Self {
-        Self {
-            cfg,
-            engine,
-            flushing,
-            spares,
-            dur,
-            tel: Telemetry::default(),
-            latencies: LatencyRing::new(),
-        }
+        Self { cfg, engine, flushing, spares, dur, sm, prelogged: 0 }
     }
 
     fn flush(&mut self, gen: PendingGen) -> Option<EpochReport> {
@@ -392,8 +482,20 @@ impl<'a> FlushExec<'a> {
         // durability contract wins over availability — the panic-exit
         // guard turns this into a diagnosed process exit.
         if let Some(dur) = self.dur.as_mut() {
-            if let Err(e) = dur.log_epoch(self.engine.epochs_applied() + 1, &wal_log) {
-                panic!("wal: refusing to apply an unlogged epoch: {e}");
+            if self.prelogged > 0 {
+                // this generation's record went to disk in a group append
+                // (handle_group), before any generation of the group was
+                // applied — the WAL-before-apply invariant still holds
+                self.prelogged -= 1;
+            } else {
+                if let Err(e) = dur.log_epoch(self.engine.epochs_applied() + 1, &wal_log) {
+                    panic!("wal: refusing to apply an unlogged epoch: {e}");
+                }
+                if dur.log_enabled() && !wal_log.is_empty() {
+                    // a lone append is a group of one
+                    self.sm.wal_groups.inc();
+                    self.sm.wal_group_epochs.inc();
+                }
             }
         }
         let mut report = self.engine.apply_mailboxes(&mut mailboxes);
@@ -401,24 +503,69 @@ impl<'a> FlushExec<'a> {
         report.route_overlap_s = overlap_s;
         let now = Instant::now();
         for s in stamps.drain(..) {
-            self.latencies.push(now.duration_since(s).as_secs_f64() * 1e3);
+            self.sm.batch_latency.record_duration(now.duration_since(s));
         }
         // recycle the drained mailbox set; a full rack just drops it
         let _ = self.spares.try_push(mailboxes);
-        self.tel.total_inserts += report.inserts as u64;
-        self.tel.total_deletes += report.deletes as u64;
-        self.tel.total_repair_edges += report.repair_edges as u64;
-        self.tel.repair_frac_last = report.repair_fraction();
-        self.tel.repair_frac_sum += report.repair_fraction();
-        self.tel.total_route_s += route_s;
-        self.tel.total_route_overlap_s += overlap_s;
-        self.tel.epochs_with_updates += 1;
+        self.sm.total_inserts.add(report.inserts as u64);
+        self.sm.total_deletes.add(report.deletes as u64);
+        self.sm.total_repair_edges.add(report.repair_edges as u64);
+        self.sm.repair_frac_last.set(report.repair_fraction());
+        self.sm.repair_frac_sum.add(report.repair_fraction());
+        self.sm.route_seconds.add(route_s);
+        self.sm.route_overlap_seconds.add(overlap_s);
+        self.sm.update_epochs.inc();
         if let Some(dur) = self.dur.as_mut() {
             // cadence snapshots + lagged WAL pruning
             dur.after_epoch(self.engine);
         }
         self.flushing.store(false, Ordering::Relaxed);
         Some(report)
+    }
+
+    /// Handle a burst of jobs the flusher drained from the hand-off queue
+    /// in one go. When the burst carries more than one pending generation,
+    /// every generation's WAL record is appended first as **one durable
+    /// group** — a single `sync_data` covers the whole burst under
+    /// `--fsync` — and only then are the generations applied and the
+    /// barriers answered, in FIFO order. WAL-before-apply holds for the
+    /// group exactly as it does per epoch: nothing is applied before its
+    /// record is on disk.
+    fn handle_group(&mut self, group: &mut Vec<FlushJob>) {
+        debug_assert_eq!(self.prelogged, 0, "a previous group left unapplied epochs");
+        if group.len() > 1 && self.dur.as_ref().is_some_and(|d| d.log_enabled()) {
+            // the flusher is the only epoch applier, so numbering the
+            // burst's generations base+1, base+2, … cannot race
+            let base = self.engine.epochs_applied();
+            let mut seq = 0u64;
+            let batch: Vec<(u64, &[Update])> = group
+                .iter()
+                .filter_map(|job| {
+                    let gen = match job {
+                        FlushJob::Apply(g) => Some(g),
+                        FlushJob::Epoch(g, _)
+                        | FlushJob::Query(g, _, _)
+                        | FlushJob::Stats(g, _, _)
+                        | FlushJob::Snapshot(g, _) => g.as_ref(),
+                        FlushJob::Crash => None,
+                    }?;
+                    seq += 1;
+                    Some((base + seq, gen.wal_log.as_slice()))
+                })
+                .collect();
+            if batch.len() > 1 {
+                let dur = self.dur.as_mut().expect("checked above");
+                if let Err(e) = dur.log_epochs(&batch) {
+                    panic!("wal: refusing to apply unlogged epochs: {e}");
+                }
+                self.prelogged = batch.len() as u64;
+                self.sm.wal_groups.inc();
+                self.sm.wal_group_epochs.add(batch.len() as u64);
+            }
+        }
+        for job in group.drain(..) {
+            self.handle(job);
+        }
     }
 
     fn handle(&mut self, job: FlushJob) {
@@ -452,8 +599,7 @@ impl<'a> FlushExec<'a> {
                 p.fulfill(Response::Stats(snapshot(
                     self.cfg,
                     self.engine,
-                    &self.tel,
-                    &self.latencies,
+                    self.sm,
                     full,
                     self.dur.as_ref(),
                 )));
@@ -506,15 +652,16 @@ impl<'a> FlushExec<'a> {
         }
         ServiceSummary {
             epochs: self.engine.epochs_applied(),
-            total_inserts: self.tel.total_inserts,
-            total_deletes: self.tel.total_deletes,
-            total_repair_edges: self.tel.total_repair_edges,
+            total_inserts: self.sm.total_inserts.get(),
+            total_deletes: self.sm.total_deletes.get(),
+            total_repair_edges: self.sm.total_repair_edges.get(),
             live_edges: self.engine.num_live_edges(),
             matched_vertices: self.engine.matched_vertices(),
             maximal: self.engine.verify().is_ok(),
             recovery_replayed,
             wal_epochs,
             last_snapshot_epoch,
+            metrics_text: self.sm.render_prometheus(),
         }
     }
 }
@@ -540,9 +687,16 @@ impl FlushSink<'_, '_> {
     }
 }
 
-/// Spare mailbox generations kept in rotation (one applying, one being
-/// routed, plus recycling slack).
-const MAILBOX_GENERATIONS: usize = 4;
+/// Depth of the router→flusher hand-off queue. Deeper than one so that
+/// when an epoch's flush runs long, the router keeps routing and the
+/// generations that pile up behind it are WAL-logged as one durable group
+/// (one `fsync` for the burst — see `FlushExec::handle_group`); still
+/// small, so the router can never run unboundedly ahead of the engine.
+const FLUSH_QUEUE_DEPTH: usize = 4;
+
+/// Spare mailbox generations kept in rotation (one being routed, up to
+/// `FLUSH_QUEUE_DEPTH` queued or applying, plus recycling slack).
+const MAILBOX_GENERATIONS: usize = FLUSH_QUEUE_DEPTH + 2;
 
 /// The request router: drain → route into the current mailbox generation →
 /// hand flush jobs to the sink at barriers, until the queue closes or a
@@ -693,6 +847,7 @@ fn engine_loop(
     queue: &ShardedQueue<Request>,
     stop: &AtomicBool,
     dur: Option<DurableService>,
+    sm: &ServiceMetrics,
 ) -> ServiceSummary {
     // a router panic must not strand clients on a half-dead server
     let _router_guard = ExitOnPanic { role: "router", enabled: cfg.exit_on_panic };
@@ -700,17 +855,18 @@ fn engine_loop(
     let flushing = AtomicBool::new(false);
     let spares: BoundedQueue<ShardMailboxes> = BoundedQueue::new(MAILBOX_GENERATIONS);
     if !cfg.pipeline {
-        let mut sink = FlushSink::Inline(FlushExec::new(cfg, engine, &flushing, &spares, dur));
+        let mut sink =
+            FlushSink::Inline(FlushExec::new(cfg, engine, &flushing, &spares, dur, sm));
         route_loop(cfg, engine, queue, stop, &flushing, &spares, &mut sink, log_wal);
         match sink {
             FlushSink::Inline(ex) => ex.summary(),
             FlushSink::Pipe(_) => unreachable!("inline sink cannot become a pipe"),
         }
     } else {
-        // capacity-1 hand-off: at most one generation queued behind the one
-        // being applied, so parse/route overlaps matching without letting
-        // the router run unboundedly ahead of the engine
-        let jobs: BoundedQueue<FlushJob> = BoundedQueue::new(1);
+        // bounded hand-off: a few generations may queue behind the one
+        // being applied — the flusher drains them as one WAL group — but
+        // the router can never run unboundedly ahead of the engine
+        let jobs: BoundedQueue<FlushJob> = BoundedQueue::new(FLUSH_QUEUE_DEPTH);
         std::thread::scope(|s| {
             // if the router panics mid-loop, this unwinds before the scope
             // joins the flusher — closing the hand-off so the flusher can't
@@ -728,9 +884,20 @@ fn engine_loop(
                     // blocking on a dead flusher; jobs it then fails to send are
                     // dropped, abandoning their promises and waking the waiters
                     let _close = CloseOnDrop(jobs);
-                    let mut ex = FlushExec::new(cfg, engine, flushing, spares, dur);
+                    let mut ex = FlushExec::new(cfg, engine, flushing, spares, dur, sm);
+                    let mut group: Vec<FlushJob> = Vec::with_capacity(FLUSH_QUEUE_DEPTH);
                     while let Some(job) = jobs.pop() {
-                        ex.handle(job);
+                        // greedy drain: everything already queued behind
+                        // this job is handled as one burst, so a backlog's
+                        // WAL records share a single append group
+                        group.push(job);
+                        while group.len() < FLUSH_QUEUE_DEPTH {
+                            match jobs.try_pop() {
+                                Some(j) => group.push(j),
+                                None => break,
+                            }
+                        }
+                        ex.handle_group(&mut group);
                     }
                     ex.summary()
                 })
@@ -748,8 +915,7 @@ fn engine_loop(
 fn snapshot(
     cfg: &ServiceConfig,
     engine: &ShardedDynamicMatcher,
-    tel: &Telemetry,
-    lat: &LatencyRing,
+    sm: &ServiceMetrics,
     audit: bool,
     dur: Option<&DurableService>,
 ) -> StatsSnapshot {
@@ -770,17 +936,17 @@ fn snapshot(
         epochs: engine.epochs_applied(),
         live_edges: engine.num_live_edges(),
         matched_vertices: engine.matched_vertices(),
-        total_inserts: tel.total_inserts,
-        total_deletes: tel.total_deletes,
-        total_repair_edges: tel.total_repair_edges,
-        repair_frac_last: tel.repair_frac_last,
-        repair_frac_mean: if tel.epochs_with_updates > 0 {
-            tel.repair_frac_sum / tel.epochs_with_updates as f64
-        } else {
-            0.0
+        total_inserts: sm.total_inserts.get(),
+        total_deletes: sm.total_deletes.get(),
+        total_repair_edges: sm.total_repair_edges.get(),
+        repair_frac_last: sm.repair_frac_last.get(),
+        repair_frac_mean: {
+            let n = sm.update_epochs.get();
+            if n > 0 { sm.repair_frac_sum.get() / n as f64 } else { 0.0 }
         },
-        p50_batch_ms: lat.percentile(50.0),
-        p99_batch_ms: lat.percentile(99.0),
+        p50_batch_ms: sm.batch_percentile_ms(50.0),
+        p99_batch_ms: sm.batch_percentile_ms(99.0),
+        p999_batch_ms: sm.batch_percentile_ms(99.9),
         // the O(|V|+|E_live|) walk only on `STATS full` — cheap polls must
         // not stall epochs on big graphs
         maximal: audit.then(|| engine.verify().is_ok()),
@@ -790,8 +956,8 @@ fn snapshot(
         // no pool exists there even under the default ShardExec::Pool
         pooled: engine.pooled(),
         pipelined: cfg.pipeline,
-        route_s: tel.total_route_s,
-        route_overlap_s: tel.total_route_overlap_s,
+        route_s: sm.route_seconds.get(),
+        route_overlap_s: sm.route_overlap_seconds.get(),
         durable,
         wal_epochs,
         wal_bytes,
@@ -810,6 +976,7 @@ fn handle_conn<R: BufRead, W: Write>(
     shard: usize,
     engine: &ShardedDynamicMatcher,
     queue: &ShardedQueue<Request>,
+    sm: &ServiceMetrics,
     reader: R,
     writer: &mut W,
 ) -> ConnOutcome {
@@ -858,6 +1025,26 @@ fn handle_conn<R: BufRead, W: Write>(
                 }
                 dirty = true;
                 if !reply(writer, &Response::Queued { count }) {
+                    break;
+                }
+            }
+            Command::Metrics => {
+                // answered here on the connection thread — a registry
+                // render is a lock-free snapshot of the instruments, so
+                // scrapes never ride the engine queue or stall an epoch
+                if !reply(writer, &Response::Metrics(sm.render_prometheus())) {
+                    break;
+                }
+            }
+            Command::Trace(n) => {
+                // flight-recorder copy-out; empty (but well-formed) when
+                // the server runs without --trace
+                let events = trace::last_epochs(trace::collect(), n);
+                let mut doc = trace::chrome_trace_json(&events);
+                doc.set("ok", Json::from(true))
+                    .set("op", Json::from("trace"))
+                    .set("events", Json::from(events.len()));
+                if !reply(writer, &Response::Trace(doc.render_compact())) {
                     break;
                 }
             }
@@ -992,15 +1179,17 @@ pub fn serve_lines<R: BufRead, W: Write>(
         cfg.shard_exec(),
     );
     let dur = open_durability(cfg, &engine)?;
+    let sm = ServiceMetrics::new();
     let queue: ShardedQueue<Request> = ShardedQueue::new(cfg.shards, cfg.shard_capacity);
     let stop = AtomicBool::new(false);
     Ok(std::thread::scope(|s| {
         let engine_ref = &engine;
         let queue_ref = &queue;
         let stop_ref = &stop;
+        let sm_ref = &sm;
         let coordinator =
-            s.spawn(move || engine_loop(cfg, engine_ref, queue_ref, stop_ref, dur));
-        handle_conn(cfg, 0, &engine, &queue, reader, writer);
+            s.spawn(move || engine_loop(cfg, engine_ref, queue_ref, stop_ref, dur, sm_ref));
+        handle_conn(cfg, 0, &engine, &queue, &sm, reader, writer);
         queue.close();
         coordinator.join().expect("engine thread panicked")
     }))
@@ -1029,6 +1218,7 @@ pub fn serve_tcp(
         cfg.shard_exec(),
     );
     let dur = open_durability(cfg, &engine)?;
+    let sm = ServiceMetrics::new();
     let queue: ShardedQueue<Request> = ShardedQueue::new(cfg.shards, cfg.shard_capacity);
     let stop = AtomicBool::new(false);
     // every accepted socket, keyed by connection id, so shutdown can
@@ -1043,7 +1233,8 @@ pub fn serve_tcp(
             let engine_ref = &engine;
             let queue_ref = &queue;
             let stop_ref = &stop;
-            s.spawn(move || engine_loop(cfg, engine_ref, queue_ref, stop_ref, dur))
+            let sm_ref = &sm;
+            s.spawn(move || engine_loop(cfg, engine_ref, queue_ref, stop_ref, dur, sm_ref))
         };
         let mut conn_id = 0usize;
         while !stop.load(Ordering::Relaxed) {
@@ -1062,6 +1253,7 @@ pub fn serve_tcp(
                     let engine = &engine;
                     let queue = &queue;
                     let stop = &stop;
+                    let sm = &sm;
                     let open_conns = &open_conns;
                     s.spawn(move || {
                         // the listener is nonblocking and some platforms
@@ -1077,7 +1269,8 @@ pub fn serve_tcp(
                             }
                         };
                         let mut writer = stream;
-                        let out = handle_conn(cfg, shard, engine, queue, reader, &mut writer);
+                        let out =
+                            handle_conn(cfg, shard, engine, queue, sm, reader, &mut writer);
                         // drop our registry dup so closing `writer` really
                         // closes the connection (FIN reaches the client)
                         open_conns.lock().unwrap().remove(&shard);
@@ -1360,6 +1553,146 @@ QUIT\n";
         assert!(summary.maximal);
         assert_eq!(summary.last_snapshot_epoch, 0);
         assert_eq!(summary.wal_epochs, 0);
+    }
+
+    #[test]
+    fn metrics_scrape_is_valid_prometheus_with_service_counters() {
+        let data_dir = fresh_data_dir("metrics");
+        let cfg = ServiceConfig {
+            num_vertices: 16,
+            threads: 1,
+            data_dir: Some(data_dir),
+            ..Default::default()
+        };
+        let script = "INSERT 0 1 2 3 4 5\nEPOCH\nDELETE 0 1\nEPOCH\nMETRICS\nQUIT\n";
+        let (lines, _) = drive(&cfg, script);
+        // the METRICS reply is the one multi-line response: everything from
+        // the first exposition line through the `# EOF` framing marker
+        let start = lines.iter().position(|l| l.starts_with("# HELP")).unwrap();
+        let end = lines.iter().position(|l| l == "# EOF").unwrap();
+        assert!(start < end, "exposition before its EOF");
+        let text = lines[start..=end].join("\n") + "\n";
+        crate::obs::metrics::validate_prometheus(&text).unwrap();
+        // service counters come from the same atomics STATS reads
+        assert!(lines.contains(&"skipper_service_inserts_total 3".to_string()), "{text}");
+        assert!(lines.contains(&"skipper_service_deletes_total 1".to_string()), "{text}");
+        // full-history latency histogram: 2 batches → _count 2 plus buckets
+        assert!(lines.contains(&"skipper_batch_latency_seconds_count 2".to_string()), "{text}");
+        assert!(
+            lines.iter().any(|l| l.starts_with("skipper_batch_latency_seconds_bucket{le=\"")),
+            "{text}"
+        );
+        // lock-step barriers flush one generation at a time, so every WAL
+        // append is a group of one — two epochs, two singleton groups
+        assert!(lines.contains(&"skipper_wal_groups_total 2".to_string()), "{text}");
+        assert!(lines.contains(&"skipper_wal_group_epochs_total 2".to_string()), "{text}");
+    }
+
+    #[test]
+    fn trace_reply_is_one_wellformed_chrome_trace_line() {
+        // tracing stays at its default (off) — the reply must still be a
+        // complete, loadable trace document, just with no events; flipping
+        // the global trace gate here would race the obs unit tests
+        let script = "INSERT 0 1\nEPOCH\nTRACE\nTRACE 2\nQUIT\n";
+        let (lines, _) = drive(&small_cfg(), script);
+        for trace_line in lines.iter().filter(|l| l.contains(r#""op":"trace""#)) {
+            assert!(trace_line.contains(r#""ok":true"#), "{trace_line}");
+            crate::obs::trace::validate_chrome_trace(trace_line).unwrap();
+        }
+        assert_eq!(
+            lines.iter().filter(|l| l.contains(r#""op":"trace""#)).count(),
+            2,
+            "{lines:?}"
+        );
+    }
+
+    #[test]
+    fn stats_counters_are_identical_across_pipeline_modes() {
+        // the registry-backed STATS must report exactly what the old
+        // struct-field telemetry did: lock-step sessions are deterministic,
+        // so every counter field must be identical with the flusher thread
+        // on and off (only the timing fields may differ)
+        let script = "\
+INSERT 0 1 1 2 2 3\n\
+EPOCH\n\
+DELETE 1 2\n\
+EPOCH\n\
+STATS\n\
+QUIT\n";
+        for pipeline in [true, false] {
+            let cfg = ServiceConfig { pipeline, ..small_cfg() };
+            let (lines, summary) = drive(&cfg, script);
+            let stats = lines.iter().find(|l| l.contains(r#""op":"stats""#)).unwrap();
+            for field in [
+                r#""epochs":2"#,
+                r#""total_inserts":3"#,
+                r#""total_deletes":1"#,
+                r#""total_repair_edges":0"#,
+                r#""live_edges":2"#,
+            ] {
+                assert!(stats.contains(field), "pipeline={pipeline}: missing {field}: {stats}");
+            }
+            assert_eq!(summary.total_inserts, 3, "pipeline={pipeline}");
+            assert_eq!(summary.total_deletes, 1, "pipeline={pipeline}");
+            // percentiles come from the full-history histogram now; two
+            // batches were recorded, so they are positive and ordered
+            let doc = crate::util::json::parse(stats).unwrap();
+            let p = |k: &str| doc.get(k).and_then(|v| v.as_f64()).unwrap();
+            let (p50, p99, p999) =
+                (p("p50_batch_ms"), p("p99_batch_ms"), p("p999_batch_ms"));
+            assert!(p50 > 0.0, "pipeline={pipeline}: {stats}");
+            assert!(p50 <= p99 && p99 <= p999, "pipeline={pipeline}: {stats}");
+        }
+    }
+
+    #[test]
+    fn flusher_groups_queued_wal_epochs_into_one_append() {
+        // drive the flush executor directly: two generations queued behind
+        // one another (as when the router outruns a slow epoch) must be
+        // WAL-logged as ONE append group covering two epoch records, and
+        // both records must replay on the next boot
+        let data_dir = fresh_data_dir("wal_group");
+        let cfg = ServiceConfig {
+            num_vertices: 32,
+            threads: 1,
+            data_dir: Some(data_dir),
+            ..Default::default()
+        };
+        let engine = ShardedDynamicMatcher::with_exec(
+            cfg.num_vertices,
+            cfg.threads,
+            cfg.engine_shards,
+            cfg.shard_exec(),
+        );
+        let sm = ServiceMetrics::new();
+        let flushing = AtomicBool::new(false);
+        let spares: BoundedQueue<ShardMailboxes> = BoundedQueue::new(MAILBOX_GENERATIONS);
+        let dur = open_durability(&cfg, &engine).unwrap();
+        let mut ex = FlushExec::new(&cfg, &engine, &flushing, &spares, dur, &sm);
+        let make_gen = |updates: &[Update]| -> PendingGen {
+            let mut gen = PendingGen::new(engine.mailboxes());
+            engine.route_into(updates, &mut gen.mailboxes).unwrap();
+            gen.stamps.push(Instant::now());
+            gen.wal_log.extend_from_slice(updates);
+            gen
+        };
+        let g1 = make_gen(&[Update::Insert(0, 1), Update::Insert(2, 3)]);
+        let g2 = make_gen(&[Update::Insert(4, 5)]);
+        let mut group = vec![FlushJob::Apply(g1), FlushJob::Apply(g2)];
+        ex.handle_group(&mut group);
+        assert_eq!(engine.epochs_applied(), 2);
+        assert_eq!(sm.wal_groups.get(), 1, "one durable group for the burst");
+        assert_eq!(sm.wal_group_epochs.get(), 2, "covering both epochs");
+        assert_eq!(sm.batch_latency.count(), 2, "one stamp per generation");
+        // drop without the graceful shutdown snapshot: the next boot can
+        // only restore this state by replaying the grouped WAL records
+        drop(ex);
+        let (lines, summary) = drive(&cfg, "STATS\nQUERY 4\nQUIT\n");
+        let stats = &lines[0];
+        assert!(stats.contains(r#""recovery_replayed":2"#), "{stats}");
+        assert!(lines[1].contains(r#""partner":5"#), "{}", lines[1]);
+        assert_eq!(summary.epochs, 2);
+        assert!(summary.maximal);
     }
 
     #[test]

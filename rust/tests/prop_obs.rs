@@ -1,0 +1,177 @@
+//! Property tests for the observability subsystem.
+//!
+//! * **Histogram percentiles vs exact**: for random sample sets spanning
+//!   the full `u64` magnitude range, the log-scale histogram's nearest-rank
+//!   percentile must bracket the exact (sorted-samples) nearest-rank value
+//!   from above, within one bucket's relative width: `exact ≤ est` and
+//!   `est − exact ≤ exact/8` (the bucket invariant `hi − lo ≤ lo/8`).
+//!   Count and (wrapping) sum must be exact, not approximate.
+//! * **Exposition validity**: a registry populated with random counters,
+//!   gauges, and histograms always renders text that its own
+//!   [`validate_prometheus`] accepts — the exporter and the CI linter can
+//!   never drift apart.
+//! * **Trace validity**: a Chrome trace document built from arbitrary span
+//!   events always passes [`validate_chrome_trace`], and the validator
+//!   reports exactly the span names that went in.
+//!
+//! [`validate_prometheus`]: skipper::obs::metrics::validate_prometheus
+//! [`validate_chrome_trace`]: skipper::obs::trace::validate_chrome_trace
+
+use skipper::obs::metrics::{validate_prometheus, Histogram, Registry};
+use skipper::obs::trace::{chrome_trace_json, validate_chrome_trace, SpanEvent};
+use skipper::util::qcheck::{check, Config};
+use skipper::util::rng::Xoshiro256pp;
+
+/// Exact nearest-rank percentile of `sorted` (the definition
+/// `Histogram::percentile` approximates): the k-th smallest sample with
+/// `k = ceil(p/100 · n)` clamped to `1..=n`.
+fn exact_nearest_rank(sorted: &[u64], p: f64) -> u64 {
+    let n = sorted.len();
+    let rank = ((p / 100.0) * n as f64).ceil().clamp(1.0, n as f64) as usize;
+    sorted[rank - 1]
+}
+
+/// Samples spanning the whole magnitude range: a uniform `u64` shifted
+/// right by a uniform amount lands in every octave with equal probability,
+/// which is exactly the regime the log-scale buckets are built for.
+fn arb_samples(rng: &mut Xoshiro256pp) -> Vec<u64> {
+    let len = 1 + rng.next_usize(400);
+    (0..len).map(|_| rng.next_u64() >> rng.next_usize(64)).collect()
+}
+
+#[test]
+fn histogram_percentiles_bracket_exact_within_one_bucket() {
+    check(
+        &Config { cases: 200, seed: 0x0B5E, max_shrink_steps: 0 },
+        arb_samples,
+        |samples| {
+            let h = Histogram::new();
+            let mut wrap_sum = 0u64;
+            for &v in samples {
+                h.record(v);
+                wrap_sum = wrap_sum.wrapping_add(v);
+            }
+            if h.count() != samples.len() as u64 {
+                return Err(format!("count {} != {}", h.count(), samples.len()));
+            }
+            if h.sum() != wrap_sum {
+                return Err(format!("sum {} != {wrap_sum}", h.sum()));
+            }
+            let mut sorted = samples.clone();
+            sorted.sort_unstable();
+            for p in [0.0, 10.0, 25.0, 50.0, 75.0, 90.0, 99.0, 99.9, 100.0] {
+                let exact = exact_nearest_rank(&sorted, p);
+                let est = h.percentile(p);
+                if est < exact {
+                    return Err(format!("p{p}: estimate {est} under-reports exact {exact}"));
+                }
+                if est - exact > exact / 8 {
+                    return Err(format!(
+                        "p{p}: estimate {est} beyond one bucket above exact {exact} \
+                         (err {} > {})",
+                        est - exact,
+                        exact / 8
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn empty_histogram_reports_zero_everywhere() {
+    let h = Histogram::new();
+    assert_eq!(h.count(), 0);
+    assert_eq!(h.sum(), 0);
+    assert_eq!(h.percentile(50.0), 0);
+    assert_eq!(h.percentile(100.0), 0);
+    assert!(h.cumulative_buckets().is_empty());
+}
+
+/// A random mix of instruments on one registry; returns the seed so each
+/// case draws different names/values.
+fn arb_registry_seed(rng: &mut Xoshiro256pp) -> u64 {
+    rng.next_u64()
+}
+
+#[test]
+fn random_registries_always_render_valid_prometheus() {
+    check(
+        &Config { cases: 60, seed: 0x9E75, max_shrink_steps: 0 },
+        arb_registry_seed,
+        |&seed| {
+            let mut rng = Xoshiro256pp::new(seed);
+            let reg = Registry::new();
+            for i in 0..1 + rng.next_usize(6) {
+                let c = reg.counter(&format!("prop_ops_{i}_total"), "random counter");
+                c.add(rng.next_u64() >> 40);
+            }
+            for i in 0..rng.next_usize(4) {
+                let g = reg.gauge(&format!("prop_depth_{i}"), "random gauge");
+                g.set(rng.next_u64() >> 50);
+            }
+            for i in 0..rng.next_usize(3) {
+                let f = reg.fgauge(&format!("prop_frac_{i}"), "random fgauge");
+                f.set(rng.next_f64());
+            }
+            for i in 0..rng.next_usize(3) {
+                let shard = rng.next_usize(4).to_string();
+                let h = reg.histogram_secs_with(
+                    &format!("prop_latency_{i}_seconds"),
+                    "random histogram",
+                    vec![("shard".to_string(), shard)],
+                );
+                for _ in 0..rng.next_usize(50) {
+                    h.record(rng.next_u64() >> rng.next_usize(64));
+                }
+            }
+            let text = reg.render_prometheus();
+            if !text.ends_with("# EOF\n") {
+                return Err("exposition does not end with # EOF".into());
+            }
+            validate_prometheus(&text).map_err(|e| format!("{e}\n---\n{text}"))
+        },
+    );
+}
+
+const SPAN_NAMES: [&str; 5] = ["mutate", "repair", "route", "wal_append", "pool_run"];
+const SPAN_CATS: [&str; 3] = ["engine", "wal", "pool"];
+
+fn arb_events(rng: &mut Xoshiro256pp) -> Vec<SpanEvent> {
+    let len = rng.next_usize(60);
+    (0..len)
+        .map(|_| SpanEvent {
+            name: SPAN_NAMES[rng.next_usize(SPAN_NAMES.len())],
+            cat: SPAN_CATS[rng.next_usize(SPAN_CATS.len())],
+            ts_us: rng.next_u64() >> 24,
+            dur_us: rng.next_u64() >> 40,
+            tid: rng.next_u64() >> 56,
+            epoch: rng.next_u64() >> 48,
+            arg: rng.next_u64() >> 32,
+        })
+        .collect()
+}
+
+#[test]
+fn chrome_trace_documents_validate_and_preserve_span_names() {
+    check(
+        &Config { cases: 100, seed: 0x7CA3, max_shrink_steps: 0 },
+        arb_events,
+        |events| {
+            let text = chrome_trace_json(events).render_compact();
+            let names = validate_chrome_trace(&text).map_err(|e| format!("{e}\n---\n{text}"))?;
+            for ev in events {
+                if !names.iter().any(|n| n == ev.name) {
+                    return Err(format!("span name {:?} lost in the document", ev.name));
+                }
+            }
+            for n in &names {
+                if !events.iter().any(|ev| ev.name == n.as_str()) {
+                    return Err(format!("validator invented span name {n:?}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
