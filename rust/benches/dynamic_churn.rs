@@ -16,14 +16,21 @@
 //!   6. adjacency layout sweep — the same 50/50 churn at P=8 pooled
 //!      workers over flat per-vertex `Vec`s vs the cache-line block arena;
 //!      set `SKIPPER_BENCH_RECORD_DIR` to also emit canonical
-//!      `skipper-bench/v1` records for `skipper-cli report`.
+//!      `skipper-bench/v1` records for `skipper-cli report`,
+//!   7. topology pinning sweep — the same 50/50 churn at P=8 pooled
+//!      workers, pin policy the only variable: unpinned vs compact (pack
+//!      one node first) vs spread (round-robin nodes), with socket-local
+//!      first-touch arenas and huge-page-advised slabs; also records when
+//!      `SKIPPER_BENCH_RECORD_DIR` is set.
 
 mod common;
 
 use skipper::coordinator::datasets::Scale;
 use skipper::coordinator::registry;
 use skipper::dynamic::churn::{run_churn, ChurnConfig, ChurnGen};
-use skipper::dynamic::{AdjLayout, DynamicMatcher, ShardExec, ShardedDynamicMatcher, Update};
+use skipper::dynamic::{
+    AdjLayout, DynamicMatcher, PinPolicy, ShardExec, ShardedDynamicMatcher, Update,
+};
 use skipper::util::benchlib::{bench, BenchConfig};
 use skipper::util::rng::Xoshiro256pp;
 use skipper::util::stats::percentile;
@@ -234,4 +241,53 @@ fn main() {
             eprintln!("  recorded -> {}", path.display());
         }
     }
+
+    // 7. topology pinning sweep: identical seeded 50/50 churn at P=8
+    // pooled workers, pin policy the only variable. On a single-node host
+    // (the CI runner) the rows measure pinning's overhead-free degradation;
+    // on a multi-socket box the compact/spread deltas show what
+    // socket-local first-touch placement buys. Final |M| is asserted
+    // identical — placement must never change decisions.
+    let topo = skipper::par::topology::Topology::discover();
+    println!(
+        "topology pinning sweep (50/50 churn, P=8 pool, batch={batch}, {} node(s)/{} cpu(s)):",
+        topo.num_nodes(),
+        topo.num_cpus()
+    );
+    let mut pin_finals = Vec::new();
+    for pin in [PinPolicy::None, PinPolicy::Compact, PinPolicy::Spread] {
+        let ccfg = ChurnConfig {
+            epochs: 3 * churn_epochs,
+            batch,
+            delete_frac: 0.5,
+            warmup_epochs: 2,
+            threads,
+            engine_shards: 8,
+            pool: true,
+            pin,
+            ..ChurnConfig::new(gen)
+        };
+        let summary = run_churn(&ccfg, |_| {}).expect("pin churn");
+        let wall: f64 = summary.epoch_wall_s.iter().sum();
+        let updates = (summary.epochs * ccfg.batch) as f64;
+        pin_finals.push(summary.final_matched_vertices);
+        println!(
+            "  pin={:<8}: {:>7.2} Mupdates/s  epoch p50={:>8.2}ms  mutate p50={:>8.2}ms  |M|={}",
+            pin.name(),
+            updates / wall.max(1e-9) / 1e6,
+            percentile(&summary.epoch_wall_s, 50.0) * 1e3,
+            percentile(&summary.epoch_mutate_s, 50.0) * 1e3,
+            summary.final_matched_vertices / 2,
+        );
+        if let Some(dir) = &record_dir {
+            let rec = registry::churn_record(&ccfg, &summary);
+            let path = Path::new(dir).join(format!("{}_pin_{}.json", rec.bench, pin.name()));
+            rec.write_file(&path).expect("bench record write");
+            eprintln!("  recorded -> {}", path.display());
+        }
+    }
+    assert!(
+        pin_finals.windows(2).all(|w| w[0] == w[1]),
+        "pin policies diverged on the same schedule: {pin_finals:?}"
+    );
 }

@@ -5,7 +5,10 @@
 //! - APRAM simulator throughput (simulated ops/s of the host),
 //! - cache-simulator replay throughput,
 //! - adjacency layout sweep: flat vs blocked sidecar iteration wall and
-//!   simulated L3 miss rate over an identically fragmented RMAT state.
+//!   simulated L3 miss rate over an identically fragmented RMAT state,
+//! - NUMA locality sweep: the blocked sidecar first-touched on each node
+//!   while the sweep stays pinned to node 0 — local vs remote arena rows
+//!   (single row + note on single-node hosts).
 
 mod common;
 
@@ -18,6 +21,7 @@ use skipper::instrument::{NoProbe, TracingProbe};
 use skipper::matching::sgmm::Sgmm;
 use skipper::matching::skipper::Skipper;
 use skipper::matching::MaximalMatcher;
+use skipper::par::topology::{self, Topology};
 use skipper::util::benchlib::{bench, BenchConfig};
 
 fn main() {
@@ -105,5 +109,61 @@ fn main() {
             100.0 * stats.l3_miss_rate(),
             adj.memory_bytes() as f64 / 1e6,
         );
+    }
+
+    // NUMA locality sweep: the same fragmented blocked sidecar, but the
+    // arena is allocated and first-touched on a chosen node's core while
+    // the sweep runs pinned to node 0 — "local" rows touch memory on the
+    // sweeping node, "remote" rows (only on multi-socket hosts) cross the
+    // interconnect on every block. This is the microcosm of what the
+    // engine's socket-local shard placement (`--pin`) avoids.
+    let topo = Topology::discover();
+    println!(
+        "numa locality sweep ({} node(s), {} cpu(s); sweep pinned to node 0):",
+        topo.num_nodes(),
+        topo.num_cpus()
+    );
+    let sweep_cpu = topo.nodes.first().and_then(|node| node.cpus.first().copied());
+    match sweep_cpu {
+        Some(cpu) if topology::pin_current_thread(cpu) => {
+            for node in &topo.nodes {
+                let Some(&build_cpu) = node.cpus.first() else { continue };
+                let n = adj_n;
+                let population = population.clone();
+                // allocate + first-touch the sidecar on the builder node
+                let adj = std::thread::spawn(move || {
+                    let _ = topology::pin_current_thread(build_cpu);
+                    let mut adj =
+                        DynamicAdjacency::with_layout(n, AdjLayout::Blocked { block_bytes: 64 });
+                    for &(u, v) in &population {
+                        adj.insert(u, v);
+                    }
+                    for (i, &(u, v)) in population.iter().enumerate() {
+                        if i % 3 == 0 {
+                            adj.delete(u, v);
+                        }
+                    }
+                    adj
+                })
+                .join()
+                .expect("builder thread");
+                let locality = if node.id == topo.nodes[0].id { "local" } else { "remote" };
+                let r = bench(&format!("adj-sweep/node{}-{locality}", node.id), &cfg, || {
+                    adj.probe_sweep(&mut NoProbe)
+                });
+                let visited = adj.probe_sweep(&mut NoProbe);
+                println!(
+                    "{}   ({:.1} M half-edges/s, arena on node {})",
+                    r.row(),
+                    visited as f64 / r.median_s / 1e6,
+                    node.id,
+                );
+            }
+            let _ = topology::unpin_current_thread(&topo);
+            if topo.num_nodes() == 1 {
+                println!("  (single node: no remote rows — run on a multi-socket host for the cross-node delta)");
+            }
+        }
+        _ => println!("  (pinning unavailable on this host: sweep skipped)"),
     }
 }

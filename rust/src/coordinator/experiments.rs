@@ -655,10 +655,63 @@ pub fn shard_scale(scale: Scale, threads: usize) -> Result<String, String> {
             ),
         ]);
     }
+    // Topology-pinning sweep at the same acceptance point: P=8 pool
+    // workers, large batch, one row per pin policy. Same schedule per row,
+    // so |M| must be identical — placement moves memory, never decisions.
+    // On the single-node CI host the rows differ only in pinned-worker
+    // count; on a multi-socket box the compact/spread deltas are the
+    // experiment.
+    let topo = crate::par::topology::Topology::discover();
+    let mut pt = Table::new(&[
+        "pin", "batch", "updates/s", "epoch p50 ms", "mutate p50 ms",
+        "|M|", "verified",
+    ]);
+    use crate::dynamic::PinPolicy;
+    let mut pin_matchings = Vec::new();
+    for pin in [PinPolicy::None, PinPolicy::Compact, PinPolicy::Spread] {
+        let cfg = ChurnConfig {
+            epochs: 6,
+            batch: (n / 8).max(512),
+            delete_frac: 0.5,
+            warmup_epochs: 3,
+            threads,
+            engine_shards: 8,
+            pool: true,
+            pin,
+            verify: true,
+            ..ChurnConfig::new(gen)
+        };
+        let summary = run_churn(&cfg, |_| {})
+            .map_err(|e| format!("scale pin={} churn failed: {e}", pin.name()))?;
+        let wall: f64 = summary.epoch_wall_s.iter().sum();
+        let updates = (summary.epochs * cfg.batch) as f64;
+        pin_matchings.push(summary.final_matched_vertices);
+        pt.row(&[
+            pin.name().to_string(),
+            cfg.batch.to_string(),
+            format!("{:.0}", updates / wall.max(1e-9)),
+            format!("{:.2}", percentile(&summary.epoch_wall_s, 50.0) * 1e3),
+            format!("{:.2}", percentile(&summary.epoch_mutate_s, 50.0) * 1e3),
+            (summary.final_matched_vertices / 2).to_string(),
+            format!(
+                "{}/{} epochs",
+                summary.verified_epochs,
+                summary.warmup_epochs + summary.epochs
+            ),
+        ]);
+    }
+    if pin_matchings.windows(2).any(|w| w[0] != w[1]) {
+        return Err(format!(
+            "pin policies diverged on the same schedule: {pin_matchings:?}"
+        ));
+    }
     Ok(format!(
-        "Engine-shard scaling — identical rmat 50/50 churn at engine_shards ∈ {{1,2,4,8}} × workers ∈ {{fork,pool}}, |V|={n} (t={threads}; maximality verified after every epoch)\n{}\nmutate share = parallel per-shard mutate phase / epoch wall; before sharding this phase was single-threaded.\nspawn ovh = mutate wall − longest per-shard run: per-epoch thread spawn+join cost for forked workers, doorbell wake + countdown for the persistent pool — the small-batch rows are where the pool earns its keep\n\nAdjacency layout sweep at P=8 pool workers, same rmat schedule per row — flat per-vertex Vecs vs the cache-line block arena at three block sizes:\n{}\nadj MB = resident adjacency bytes after the final epoch (blocked rows include recycled free-list blocks; flat is live Vec capacity)\n",
+        "Engine-shard scaling — identical rmat 50/50 churn at engine_shards ∈ {{1,2,4,8}} × workers ∈ {{fork,pool}}, |V|={n} (t={threads}; maximality verified after every epoch)\n{}\nmutate share = parallel per-shard mutate phase / epoch wall; before sharding this phase was single-threaded.\nspawn ovh = mutate wall − longest per-shard run: per-epoch thread spawn+join cost for forked workers, doorbell wake + countdown for the persistent pool — the small-batch rows are where the pool earns its keep\n\nAdjacency layout sweep at P=8 pool workers, same rmat schedule per row — flat per-vertex Vecs vs the cache-line block arena at three block sizes:\n{}\nadj MB = resident adjacency bytes after the final epoch (blocked rows include recycled free-list blocks; flat is live Vec capacity)\n\nTopology-pinning sweep at P=8 pool workers on {} NUMA node(s) / {} CPU(s), same rmat schedule per row — shard workers pinned per policy, arenas and partner[] stripes first-touched socket-local, block slabs advised MADV_HUGEPAGE:\n{}\nidentical |M| across rows is asserted: placement changes timings only, never matching decisions\n",
         t.render(),
-        lt.render()
+        lt.render(),
+        topo.num_nodes(),
+        topo.num_cpus(),
+        pt.render()
     ))
 }
 
@@ -916,11 +969,12 @@ mod tests {
     fn shard_scale_renders_all_shard_counts_verified() {
         let s = shard_scale(Scale::Tiny, 2).unwrap();
         // one fully verified row per (batch, shard count, worker mode),
-        // plus the four adjacency-layout sweep rows at P=8
+        // plus the four adjacency-layout sweep rows and the three
+        // pin-policy sweep rows at P=8
         assert_eq!(
             s.matches("9/9 epochs").count(),
-            20,
-            "expected 2 batches × 4 shard counts × 2 worker modes + 4 layout rows in: {s}"
+            23,
+            "expected 2 batches × 4 shard counts × 2 worker modes + 4 layout rows + 3 pin rows in: {s}"
         );
         assert!(s.contains("engine_shards"), "{s}");
         assert!(s.contains("mutate share"), "{s}");
@@ -931,6 +985,10 @@ mod tests {
         assert!(s.contains("flat"), "{s}");
         assert!(s.contains("blocked64"), "{s}");
         assert!(s.contains("blocked256"), "{s}");
+        // pin sweep rows: one per policy, identical |M| asserted inside
+        assert!(s.contains("Topology-pinning sweep"), "{s}");
+        assert!(s.contains("compact"), "{s}");
+        assert!(s.contains("spread"), "{s}");
     }
 
     #[test]

@@ -613,6 +613,7 @@ pub fn churn_record(cfg: &ChurnConfig, summary: &ChurnSummary) -> BenchRecord {
     config.insert("shards".to_string(), cfg.engine_shards.to_string());
     config.insert("pool".to_string(), cfg.pool.to_string());
     config.insert("layout".to_string(), cfg.layout.name());
+    config.insert("pin".to_string(), cfg.pin.name().to_string());
     config.insert("epochs".to_string(), cfg.epochs.to_string());
     config.insert("batch".to_string(), cfg.batch.to_string());
     config.insert("delete_frac".to_string(), cfg.delete_frac.to_string());
@@ -766,6 +767,15 @@ mod tests {
         let rec = churn_record(&cfg, &summary);
         assert_eq!(rec.bench, "churn_er8_t2_p1");
         assert_eq!(rec.config["layout"], "blocked64");
+        assert_eq!(rec.config["pin"], "none");
+        // a pinned run of the same shape gets its own config hash
+        let pinned = crate::dynamic::churn::ChurnConfig {
+            pin: crate::dynamic::PinPolicy::Compact,
+            ..cfg.clone()
+        };
+        let rec_pinned = churn_record(&pinned, &summary);
+        assert_eq!(rec_pinned.config["pin"], "compact");
+        assert_ne!(rec_pinned.config_hash(), rec.config_hash());
         assert!(rec.metrics["updates_per_s"] > 0.0);
         assert_eq!(rec.metrics["exact_epochs"], 3.0);
         assert!(rec.metrics["exact_final_live_edges"] > 0.0);

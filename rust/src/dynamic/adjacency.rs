@@ -65,6 +65,7 @@
 //! them before its half-edge edits for the same reason.
 
 use crate::instrument::Probe;
+use crate::par::topology;
 use crate::{VertexId, INVALID_VERTEX};
 
 /// Per-vertex slots start compacting once at least this many tombstones
@@ -261,6 +262,13 @@ struct BlockStore {
     free_head: u32,
     /// Blocks currently on the free list.
     free_blocks: u64,
+    /// Ask the kernel for transparent-huge-page backing on the slab
+    /// (`madvise(MADV_HUGEPAGE)`), re-advised whenever growth reallocates
+    /// it. Off by default; the NUMA-pinned engine turns it on.
+    huge: bool,
+    /// Arena capacity (bytes) last advised, so steady-state growth inside
+    /// the same allocation does not re-issue the syscall.
+    advised_bytes: usize,
 }
 
 impl BlockStore {
@@ -276,6 +284,36 @@ impl BlockStore {
             meta: vec![Meta::EMPTY; len],
             free_head: NIL_BLOCK,
             free_blocks: 0,
+            huge: false,
+            advised_bytes: 0,
+        }
+    }
+
+    /// Turn on huge-page advice: the chain headers and the current slab are
+    /// advised now, and every future growth that moves the slab re-advises
+    /// it. Failures (non-Linux, THP disabled) are silently ignored — the
+    /// layout works identically on 4 KiB pages.
+    fn advise_hugepages(&mut self) {
+        self.huge = true;
+        self.advised_bytes = 0;
+        let _ = topology::advise_hugepages(
+            self.meta.as_ptr() as *const u8,
+            self.meta.capacity() * std::mem::size_of::<Meta>(),
+        );
+        self.readvise();
+    }
+
+    /// Re-issue `MADV_HUGEPAGE` if the slab allocation changed size since
+    /// the last advice (capacity growth implies a possible move; advice is
+    /// per-mapping, so a moved slab starts unadvised).
+    fn readvise(&mut self) {
+        if !self.huge {
+            return;
+        }
+        let bytes = self.arena.capacity() * std::mem::size_of::<Line>();
+        if bytes != self.advised_bytes {
+            let _ = topology::advise_hugepages(self.arena.as_ptr() as *const u8, bytes);
+            self.advised_bytes = bytes;
         }
     }
 
@@ -319,6 +357,7 @@ impl BlockStore {
         let b = (self.arena.len() / self.lines_per_block) as u32;
         debug_assert!(b != NIL_BLOCK, "arena block index space exhausted");
         self.arena.resize(self.arena.len() + self.lines_per_block, Line::EMPTY);
+        self.readvise();
         b
     }
 
@@ -575,6 +614,19 @@ impl HalfAdjacency {
     #[inline]
     pub fn layout(&self) -> AdjLayout {
         self.layout
+    }
+
+    /// Ask for transparent-huge-page backing on the block-arena slabs
+    /// (`madvise(MADV_HUGEPAGE)`), now and on every future slab growth.
+    /// A no-op for the flat layout (per-vertex `Vec`s are too small and
+    /// allocator-placed) and on hosts without THP — storage semantics are
+    /// identical either way, only TLB pressure changes. Called by the
+    /// NUMA-pinned engine from each shard's owner worker, right after the
+    /// first-touch construction of this sidecar.
+    pub fn advise_hugepages(&mut self) {
+        if let Store::Blocked(store) = &mut self.store {
+            store.advise_hugepages();
+        }
     }
 
     /// First owned vertex.

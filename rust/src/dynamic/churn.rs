@@ -14,6 +14,7 @@
 use super::adjacency::AdjLayout;
 use super::engine::{EpochReport, Update};
 use super::partition::{ShardExec, ShardedDynamicMatcher};
+use crate::par::topology::PinPolicy;
 use crate::graph::gen::{barabasi_albert, erdos_renyi, grid, rmat, GenConfig};
 use crate::util::rng::Xoshiro256pp;
 use crate::VertexId;
@@ -130,6 +131,9 @@ pub struct ChurnConfig {
     pub pool: bool,
     /// Adjacency sidecar storage layout (`flat` vs cache-line `blocked`).
     pub layout: AdjLayout,
+    /// Worker→core pin policy for the shard pool (`--pin`); placement
+    /// only, never decisions — results are identical at any policy.
+    pub pin: PinPolicy,
     /// Churn epochs after warmup.
     pub epochs: usize,
     /// Updates per churn epoch.
@@ -162,6 +166,7 @@ impl ChurnConfig {
             engine_shards: 1,
             pool: true,
             layout: AdjLayout::default(),
+            pin: PinPolicy::None,
             epochs: 10,
             batch: 10_000,
             delete_frac: 0.5,
@@ -242,12 +247,13 @@ pub fn run_churn(
     if pending.is_empty() {
         return Err("generator produced no edges".into());
     }
-    let engine = ShardedDynamicMatcher::with_exec_layout(
+    let engine = ShardedDynamicMatcher::with_exec_layout_pin(
         n,
         cfg.threads,
         cfg.engine_shards,
         cfg.shard_exec(),
         cfg.layout,
+        cfg.pin,
     );
     let mut live: Vec<(VertexId, VertexId)> = Vec::with_capacity(pending.len());
     let mut graveyard: Vec<(VertexId, VertexId)> = Vec::new();
@@ -498,6 +504,31 @@ mod tests {
                 assert!(matches!(e.verified, Some(Ok(()))), "{layout:?}");
             })
             .unwrap_or_else(|e| panic!("{layout:?}: {e}"));
+            finals.push((summary.final_live_edges, summary.final_matched_vertices));
+        }
+        assert!(finals.windows(2).all(|w| w[0] == w[1]), "diverged: {finals:?}");
+    }
+
+    #[test]
+    fn pin_policies_run_the_same_schedule_to_the_same_state() {
+        // pinning moves workers and memory, never decisions: the whole run
+        // must be bit-identical across pin policies (including on hosts
+        // where sched_setaffinity is refused and workers float)
+        let mut finals = Vec::new();
+        for pin in [PinPolicy::None, PinPolicy::Compact, PinPolicy::Spread] {
+            let cfg = ChurnConfig {
+                epochs: 4,
+                batch: 200,
+                warmup_epochs: 2,
+                threads: 2,
+                engine_shards: 4,
+                pin,
+                ..ChurnConfig::new(ChurnGen::Rmat { scale: 9, avg_degree: 4 })
+            };
+            let summary = run_churn(&cfg, |e| {
+                assert!(matches!(e.verified, Some(Ok(()))), "{pin:?}");
+            })
+            .unwrap_or_else(|e| panic!("{pin:?}: {e}"));
             finals.push((summary.final_live_edges, summary.final_matched_vertices));
         }
         assert!(finals.windows(2).all(|w| w[0] == w[1]), "diverged: {finals:?}");

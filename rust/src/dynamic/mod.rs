@@ -44,3 +44,6 @@ pub mod partition;
 pub use adjacency::{AdjLayout, DynamicAdjacency, HalfAdjacency};
 pub use engine::{DynamicMatcher, EpochReport, Update};
 pub use partition::{ShardExec, ShardMailboxes, ShardedDynamicMatcher, VertexPartition};
+// placement is configured wherever an engine is built, so the policy enum
+// rides along with the engine's own types
+pub use crate::par::topology::PinPolicy;

@@ -100,6 +100,7 @@ use crate::matching::{MatchArena, BUFFER_EDGES};
 use crate::obs::{metrics, trace};
 use crate::par::pool::{ArriveOnDrop, Countdown, WorkerPool};
 use crate::par::run_threads_collect;
+use crate::par::topology::PinPolicy;
 use crate::{VertexId, INVALID_VERTEX};
 use std::sync::atomic::{AtomicU32, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
@@ -458,7 +459,19 @@ pub struct ShardedDynamicMatcher {
     epoch: AtomicU64,
     /// The adjacency storage layout every shard was built with.
     layout: AdjLayout,
+    /// The worker→core pin policy the pool (if any) was built with.
+    pin: PinPolicy,
 }
+
+/// A raw pointer that crosses into pool jobs for first-touch stripe
+/// initialization. Each job writes a disjoint `[start, end)` slice of the
+/// `partner[]` allocation and the constructor's countdown barrier sequences
+/// every write before the vector's length is set.
+#[derive(Clone, Copy)]
+struct SendPtr(*mut AtomicU32);
+// SAFETY: the pointee is only written through disjoint per-shard ranges
+// before the barrier, never read concurrently.
+unsafe impl Send for SendPtr {}
 
 impl ShardedDynamicMatcher {
     /// `engine_shards` contiguous equal-size shards over `0..num_vertices`,
@@ -496,6 +509,29 @@ impl ShardedDynamicMatcher {
         )
     }
 
+    /// Like [`with_exec_layout`](Self::with_exec_layout) with an explicit
+    /// worker→core pin policy — the knob behind `churn --pin` and
+    /// `serve --pin`. Pinning changes *where* shard state lives (which
+    /// core each worker runs on, which NUMA node its arena and `partner[]`
+    /// stripe land on), never *what* the engine computes: results are
+    /// bit-for-bit identical across policies.
+    pub fn with_exec_layout_pin(
+        num_vertices: usize,
+        threads: usize,
+        engine_shards: usize,
+        exec: ShardExec,
+        layout: AdjLayout,
+        pin: PinPolicy,
+    ) -> Self {
+        Self::with_partition_exec_layout_pin(
+            VertexPartition::equal(num_vertices, engine_shards),
+            threads,
+            exec,
+            layout,
+            pin,
+        )
+    }
+
     /// Engine over an explicit partition, pooled shard dispatch.
     pub fn with_partition(partition: VertexPartition, threads: usize) -> Self {
         Self::with_partition_exec(partition, threads, ShardExec::Pool)
@@ -511,26 +547,105 @@ impl ShardedDynamicMatcher {
     }
 
     /// Engine over an explicit partition, shard-dispatch policy, and
-    /// adjacency storage layout.
+    /// adjacency storage layout. Unpinned ([`PinPolicy::None`]).
     pub fn with_partition_exec_layout(
         partition: VertexPartition,
         threads: usize,
         exec: ShardExec,
         layout: AdjLayout,
     ) -> Self {
+        Self::with_partition_exec_layout_pin(partition, threads, exec, layout, PinPolicy::None)
+    }
+
+    /// The root constructor: explicit partition, shard-dispatch policy,
+    /// adjacency layout, and pin policy.
+    ///
+    /// Under a pinned pool the pool is built *first* and each shard's state
+    /// is constructed by a job on its owner worker — already pinned to its
+    /// planned core — so the arena's pages and the shard's `partner[]`
+    /// stripe are first-touched on the node the worker will sweep them
+    /// from, and the block slabs are advised `MADV_HUGEPAGE`. Unpinned (or
+    /// inline/forked) engines construct everything on the calling thread,
+    /// exactly as before.
+    pub fn with_partition_exec_layout_pin(
+        partition: VertexPartition,
+        threads: usize,
+        exec: ShardExec,
+        layout: AdjLayout,
+        pin: PinPolicy,
+    ) -> Self {
         let n = partition.num_vertices();
-        let shards: Vec<Mutex<ShardState>> = (0..partition.num_shards())
-            .map(|i| {
-                let (s, e) = partition.range(i);
-                Mutex::new(ShardState {
-                    adj: HalfAdjacency::with_layout(s, (e - s) as usize, layout),
-                    freed: Vec::new(),
-                })
-            })
-            .collect();
-        let num_shards = shards.len();
+        let num_shards = partition.num_shards();
         let pool = (exec == ShardExec::Pool && num_shards > 1)
-            .then(|| WorkerPool::new(num_shards));
+            .then(|| WorkerPool::with_pin(num_shards, pin));
+        let first_touch = pool.is_some() && pin != PinPolicy::None;
+        let shards: Vec<Mutex<ShardState>> = if first_touch {
+            let pool = pool.as_ref().unwrap();
+            let slots: Arc<Vec<Mutex<Option<ShardState>>>> =
+                Arc::new((0..num_shards).map(|_| Mutex::new(None)).collect());
+            let done = Arc::new(Countdown::new(num_shards));
+            for i in 0..num_shards {
+                let (s, e) = partition.range(i);
+                let slots = Arc::clone(&slots);
+                let arrive = ArriveOnDrop(Arc::clone(&done));
+                pool.submit(i, move || {
+                    let _arrive = arrive;
+                    let mut adj = HalfAdjacency::with_layout(s, (e - s) as usize, layout);
+                    adj.advise_hugepages();
+                    *slots[i].lock().unwrap() =
+                        Some(ShardState { adj, freed: Vec::new() });
+                });
+            }
+            done.wait();
+            slots
+                .iter()
+                .map(|slot| {
+                    Mutex::new(
+                        slot.lock()
+                            .unwrap()
+                            .take()
+                            .expect("shard construction job panicked"),
+                    )
+                })
+                .collect()
+        } else {
+            (0..num_shards)
+                .map(|i| {
+                    let (s, e) = partition.range(i);
+                    Mutex::new(ShardState {
+                        adj: HalfAdjacency::with_layout(s, (e - s) as usize, layout),
+                        freed: Vec::new(),
+                    })
+                })
+                .collect()
+        };
+        let partner: Vec<AtomicU32> = if first_touch && n > 0 {
+            let pool = pool.as_ref().unwrap();
+            let mut v: Vec<AtomicU32> = Vec::with_capacity(n);
+            let ptr = SendPtr(v.as_mut_ptr());
+            let done = Arc::new(Countdown::new(num_shards));
+            for i in 0..num_shards {
+                let (s, e) = partition.range(i);
+                let arrive = ArriveOnDrop(Arc::clone(&done));
+                pool.submit(i, move || {
+                    let _arrive = arrive;
+                    // first-touch: shard i's owner worker writes its own
+                    // stripe, so those pages land on its node
+                    for k in s as usize..e as usize {
+                        unsafe { ptr.0.add(k).write(AtomicU32::new(INVALID_VERTEX)) };
+                    }
+                });
+            }
+            done.wait();
+            // SAFETY: the partition's shard ranges tile `0..n` exactly and
+            // the stripe-writing jobs contain no panicking operations, so
+            // after the barrier every element is initialized. The countdown
+            // (mutex + condvar) sequences the writes before this.
+            unsafe { v.set_len(n) };
+            v
+        } else {
+            (0..n).map(|_| AtomicU32::new(INVALID_VERTEX)).collect()
+        };
         let reg = metrics::global();
         let shard_hist = |name: &str, help: &str| -> Vec<Arc<metrics::Histogram>> {
             (0..num_shards)
@@ -551,7 +666,7 @@ impl ShardedDynamicMatcher {
             shared: Arc::new(EngineShared {
                 partition,
                 shards,
-                partner: (0..n).map(|_| AtomicU32::new(INVALID_VERTEX)).collect(),
+                partner,
                 core: SkipperCore::new(n),
                 matched: AtomicUsize::new(0),
                 mutate_hist,
@@ -563,6 +678,7 @@ impl ShardedDynamicMatcher {
             epoch_gate: Mutex::new(()),
             epoch: AtomicU64::new(0),
             layout,
+            pin,
         }
     }
 
@@ -588,6 +704,19 @@ impl ShardedDynamicMatcher {
     #[inline]
     pub fn layout(&self) -> AdjLayout {
         self.layout
+    }
+
+    /// The worker→core pin policy this engine was built with.
+    #[inline]
+    pub fn pin(&self) -> PinPolicy {
+        self.pin
+    }
+
+    /// Pool workers whose pin syscall actually succeeded (0 when unpinned,
+    /// inline, or forked — and on hosts that refuse `sched_setaffinity`).
+    #[inline]
+    pub fn pinned_workers(&self) -> usize {
+        self.pool.as_ref().map_or(0, |p| p.pinned_workers())
     }
 
     /// Is a standing worker pool actually serving the shard phases? False
@@ -1217,6 +1346,63 @@ mod tests {
             assert_eq!(fork.num_live_edges(), pool.num_live_edges(), "epoch {epoch}");
             fork.verify().unwrap();
             pool.verify().unwrap();
+        }
+    }
+
+    #[test]
+    fn pinned_engine_matches_unpinned_bit_for_bit() {
+        // Placement moves memory and threads around, never decisions: at
+        // every pin policy the engine must reproduce the unpinned engine's
+        // matching, counters, and live set exactly — including on hosts
+        // where the pin syscall is refused and workers float.
+        use crate::util::rng::Xoshiro256pp;
+        let n = 120;
+        let base = ShardedDynamicMatcher::with_exec(n, 1, 4, ShardExec::Pool);
+        let engines: Vec<ShardedDynamicMatcher> = [PinPolicy::Compact, PinPolicy::Spread]
+            .iter()
+            .map(|&pin| {
+                let e = ShardedDynamicMatcher::with_exec_layout_pin(
+                    n,
+                    1,
+                    4,
+                    ShardExec::Pool,
+                    AdjLayout::default(),
+                    pin,
+                );
+                assert_eq!(e.pin(), pin);
+                assert!(e.pooled());
+                e
+            })
+            .collect();
+        assert_eq!(base.pin(), PinPolicy::None);
+        let mut rng = Xoshiro256pp::new(99);
+        let mut live: Vec<(VertexId, VertexId)> = Vec::new();
+        for epoch in 0..10 {
+            let mut batch = Vec::new();
+            for _ in 0..25 {
+                if !live.is_empty() && rng.next_usize(3) == 0 {
+                    let i = rng.next_usize(live.len());
+                    let (u, v) = live.swap_remove(i);
+                    batch.push(Delete(u, v));
+                } else {
+                    let u = rng.next_usize(n) as VertexId;
+                    let v = rng.next_usize(n) as VertexId;
+                    batch.push(Insert(u, v));
+                    if u != v && !live.contains(&(u.min(v), u.max(v))) {
+                        live.push((u.min(v), u.max(v)));
+                    }
+                }
+            }
+            let rb = base.apply_epoch(&batch).unwrap();
+            for e in &engines {
+                let re = e.apply_epoch(&batch).unwrap();
+                assert_eq!(rb.new_matches, re.new_matches, "epoch {epoch}");
+                assert_eq!(rb.destroyed_pairs, re.destroyed_pairs, "epoch {epoch}");
+                assert_eq!(rb.repair_edges, re.repair_edges, "epoch {epoch}");
+                assert_eq!(base.matching_pairs(), e.matching_pairs(), "epoch {epoch}");
+                assert_eq!(base.num_live_edges(), e.num_live_edges(), "epoch {epoch}");
+                e.verify().unwrap();
+            }
         }
     }
 

@@ -71,6 +71,7 @@ USAGE:
               [--epoch-max-requests N] [--data-dir DIR] [--no-wal]
               [--fsync] [--snapshot-every E] [--debug-commands]
               [--trace] [--trace-out FILE] [--metrics-file FILE]
+              [--metrics-addr HOST:PORT] [--pin none|compact|spread] [--numa]
               (line protocol INSERT/DELETE/QUERY/STATS[ full]/SNAPSHOT/
                EPOCH/QUIT/SHUTDOWN, specified in docs/PROTOCOL.md; stdin
                pipe by default, concurrent clients with --tcp.
@@ -102,11 +103,22 @@ USAGE:
                off); --trace-out FILE writes every recorded span as Chrome
                trace-event JSON at exit and implies --trace;
                --metrics-file FILE writes the final Prometheus exposition
-               at exit, identical to a last METRICS scrape)
+               at exit, identical to a last METRICS scrape;
+               --metrics-addr HOST:PORT serves live scrapes over HTTP
+               (GET /metrics — point Prometheus at it).
+               Topology: --pin compact packs the P shard workers onto the
+               cores of as few NUMA nodes as possible, --pin spread
+               round-robins them across nodes; either way each worker pins
+               itself before first-touching its shard's adjacency arena and
+               partner[] stripe, so shard memory is socket-local, and block
+               slabs are advised MADV_HUGEPAGE. --numa is shorthand for
+               --pin compact. Single-node hosts degrade gracefully —
+               placement changes timings only, never results)
   skipper-cli churn [--gen rmat|er|ba|grid] [--scale LOG2_V] [--avg-degree D]
               [--epochs E] [--batch B] [--delete-frac F] [--threads N]
               [--engine-shards P] [--no-pool] [--warmup-epochs W] [--seed S]
               [--layout flat|blocked|blocked<N>] [--block-bytes N]
+              [--pin none|compact|spread] [--numa]
               [--no-verify] [--save FILE] [--load FILE] [--record FILE]
               [--trace-out FILE]
               (mixed insert/delete epochs over the dynamic engine; verifies
@@ -119,6 +131,9 @@ USAGE:
                64..=4096). --save FILE writes the warmed engine state as a
                snapshot at the end; --load FILE restores one instead of
                running warmup, so a warmed-up workload restarts instantly.
+               --pin pins shard workers to cores (see serve) so each
+               shard's arena and partner[] stripe are first-touched
+               socket-local; --numa = --pin compact.
                --record FILE writes the run's machine manifest, config, and
                metrics as a candidate record for `skipper-cli report`.
                --trace-out FILE enables span recording for the run and
@@ -162,6 +177,7 @@ fn main() {
             "fsync",
             "debug-commands",
             "trace",
+            "numa",
             "help",
         ],
     ) {
@@ -528,6 +544,17 @@ fn cmd_suite(args: &Args) -> Result<(), String> {
     )
 }
 
+/// `--pin none|compact|spread` with `--numa` as shorthand for `--pin
+/// compact` (an explicit `--pin` wins when both are given).
+fn parse_pin(args: &Args) -> Result<skipper::dynamic::PinPolicy, String> {
+    use skipper::dynamic::PinPolicy;
+    match args.get("pin") {
+        Some(s) => PinPolicy::parse(s),
+        None if args.flag("numa") => Ok(PinPolicy::Compact),
+        None => Ok(PinPolicy::None),
+    }
+}
+
 /// Long-running match service: stdin pipe by default (one client — the CI
 /// smoke path and anything scriptable), or `--tcp HOST:PORT` for concurrent
 /// clients, each on its own connection thread and queue shard.
@@ -549,6 +576,8 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
         snapshot_every: args.get_parse("snapshot-every", defaults.snapshot_every)?,
         debug_commands: args.flag("debug-commands"),
         exit_on_panic: true,
+        pin: parse_pin(args)?,
+        metrics_addr: args.get("metrics-addr").map(String::from),
     };
     if cfg.engine_shards == 0 || cfg.epoch_max_updates == 0 || cfg.epoch_max_requests == 0 {
         return Err("--engine-shards/--epoch-max-updates/--epoch-max-requests must be >= 1".into());
@@ -576,7 +605,8 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
         None => String::new(),
     };
     let mode = format!(
-        "{workers} shard workers, {} coordinator{durability}",
+        "{workers} shard workers (pin={}), {} coordinator{durability}",
+        cfg.pin.name(),
         if cfg.pipeline { "pipelined" } else { "inline" }
     );
     let trace_out = args.get("trace-out");
@@ -653,6 +683,7 @@ fn cmd_churn(args: &Args) -> Result<(), String> {
         engine_shards: args.get_parse("engine-shards", 1usize)?,
         pool: !args.flag("no-pool"),
         layout,
+        pin: parse_pin(args)?,
         epochs: args.get_parse("epochs", 10usize)?,
         batch: args.get_parse("batch", 20_000usize)?,
         delete_frac: args.get_parse("delete-frac", 0.5f64)?,
@@ -674,12 +705,13 @@ fn cmd_churn(args: &Args) -> Result<(), String> {
         trace::clear();
     }
     println!(
-        "churn {} |V|={} t={} P={} layout={} ({} shard workers): {}, then {} epochs of {} updates ({:.0}% deletes){}",
+        "churn {} |V|={} t={} P={} layout={} pin={} ({} shard workers): {}, then {} epochs of {} updates ({:.0}% deletes){}",
         gen.name(),
         gen.num_vertices(),
         cfg.threads,
         cfg.engine_shards,
         cfg.layout.name(),
+        cfg.pin.name(),
         cfg.shard_exec().name(),
         match &cfg.load {
             Some(path) => format!("warm state loaded from {path}"),

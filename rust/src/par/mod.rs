@@ -8,6 +8,7 @@
 pub mod pool;
 pub mod pump;
 pub mod scheduler;
+pub mod topology;
 
 /// Run `f(tid)` on `t` scoped threads and join. `f` observes its thread id.
 pub fn run_threads<F>(t: usize, f: F)

@@ -36,8 +36,10 @@
 //! exits; dropping the pool closes every queue and joins every thread.
 
 use super::pump::BoundedQueue;
+use super::topology::{self, CpuSlot, PinPolicy, Topology};
 use crate::obs::{metrics, trace};
 use std::panic::AssertUnwindSafe;
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 use std::time::Instant;
@@ -70,12 +72,40 @@ pub struct WorkerPool {
     queues: Vec<Arc<BoundedQueue<Submitted>>>,
     handles: Vec<JoinHandle<()>>,
     queue_depth: Arc<metrics::Gauge>,
+    /// Per-worker placement under the pool's [`PinPolicy`] (`None` entries
+    /// for unpinned workers). Workers whose `sched_setaffinity` is refused
+    /// keep their planned slot here — the plan is intent, the
+    /// `pinned` counter is outcome.
+    plan: Vec<Option<CpuSlot>>,
+    pin: PinPolicy,
+    /// Workers whose pin syscall actually succeeded.
+    pinned: Arc<AtomicUsize>,
+    pinned_gauge: Arc<metrics::Gauge>,
 }
 
 impl WorkerPool {
     /// Spawn `workers` (clamped ≥ 1) parked threads, each with its own run
     /// queue. Threads are named `skipper-pool-<i>` for debuggability.
+    /// Unpinned ([`PinPolicy::None`]) — the historical default.
     pub fn new(workers: usize) -> Self {
+        Self::with_pin(workers, PinPolicy::None)
+    }
+
+    /// Like [`new`](Self::new) with worker→core pinning: the topology is
+    /// discovered (single synthetic node when sysfs is absent), `pin`
+    /// plans a core per worker, and each worker pins *itself* on its own
+    /// thread before serving jobs — so everything the worker subsequently
+    /// allocates and first-touches (shard arenas, `partner[]` stripes)
+    /// lands on that core's NUMA node. A refused `sched_setaffinity`
+    /// leaves the worker floating; placement is advice, never an error.
+    pub fn with_pin(workers: usize, pin: PinPolicy) -> Self {
+        let plan = if pin == PinPolicy::None {
+            vec![None; workers.max(1)]
+        } else {
+            let topo = Topology::discover();
+            topo.publish_gauges();
+            topo.plan(pin, workers.max(1))
+        };
         let reg = metrics::global();
         let queue_depth = reg.gauge(
             "skipper_pool_queue_depth",
@@ -89,6 +119,11 @@ impl WorkerPool {
             "skipper_pool_jobs_run_total",
             "Jobs executed by the worker pool",
         );
+        let pinned_gauge = reg.gauge(
+            "skipper_pinned_workers",
+            "Pool workers currently pinned to a core (0 under --pin none)",
+        );
+        let pinned = Arc::new(AtomicUsize::new(0));
         let queues: Vec<Arc<BoundedQueue<Submitted>>> = (0..workers.max(1))
             .map(|_| Arc::new(BoundedQueue::new(RUN_QUEUE_DEPTH)))
             .collect();
@@ -100,44 +135,91 @@ impl WorkerPool {
                 let depth = Arc::clone(&queue_depth);
                 let delay = Arc::clone(&spawn_delay);
                 let jobs = Arc::clone(&jobs_run);
+                let slot = plan[i];
+                let pinned = Arc::clone(&pinned);
+                let pinned_gauge = Arc::clone(&pinned_gauge);
                 std::thread::Builder::new()
                     .name(format!("skipper-pool-{i}"))
-                    .spawn(move || loop {
-                        let popped = {
-                            // idle time parked on the queue condvar
-                            let _park = trace::span("pool_park", "pool", i as u64);
-                            q.pop()
-                        };
-                        let Some(sub) = popped else { break };
-                        depth.dec(1);
-                        delay.record_duration(sub.queued_at.elapsed());
-                        jobs.inc();
-                        let _run = trace::span("pool_run", "pool", i as u64);
-                        // Contain job panics to the job: the worker must
-                        // survive to serve the next epoch, and the
-                        // dispatcher's countdown guard (dropped during
-                        // the unwind) releases the barrier so the
-                        // coordinator can report the failure. The
-                        // payload is surfaced here — the dispatcher only
-                        // knows *that* shard i died, not why.
-                        if let Err(payload) =
-                            std::panic::catch_unwind(AssertUnwindSafe(sub.job))
-                        {
-                            let msg = payload
-                                .downcast_ref::<&str>()
-                                .map(|s| s.to_string())
-                                .or_else(|| payload.downcast_ref::<String>().cloned())
-                                .unwrap_or_else(|| "<non-string panic>".into());
-                            eprintln!(
-                                "{}: job panicked: {msg}",
-                                std::thread::current().name().unwrap_or("skipper-pool")
-                            );
+                    .spawn(move || {
+                        // Pin before serving anything: the first jobs this
+                        // worker runs are the engine's first-touch arena
+                        // initializers, which must execute on the target
+                        // core for their pages to land on its node.
+                        if let Some(CpuSlot { cpu, node }) = slot {
+                            if topology::pin_current_thread(cpu) {
+                                pinned.fetch_add(1, Ordering::Relaxed);
+                                pinned_gauge.inc(1);
+                                let reg = metrics::global();
+                                let labels =
+                                    vec![("worker".to_string(), i.to_string())];
+                                reg.gauge_with(
+                                    "skipper_worker_core",
+                                    "Core each pinned pool worker runs on",
+                                    labels.clone(),
+                                )
+                                .set(cpu as u64);
+                                reg.gauge_with(
+                                    "skipper_worker_node",
+                                    "NUMA node each pinned pool worker runs on",
+                                    labels,
+                                )
+                                .set(node as u64);
+                            }
+                        }
+                        loop {
+                            let popped = {
+                                // idle time parked on the queue condvar
+                                let _park = trace::span("pool_park", "pool", i as u64);
+                                q.pop()
+                            };
+                            let Some(sub) = popped else { break };
+                            depth.dec(1);
+                            delay.record_duration(sub.queued_at.elapsed());
+                            jobs.inc();
+                            let _run = trace::span("pool_run", "pool", i as u64);
+                            // Contain job panics to the job: the worker must
+                            // survive to serve the next epoch, and the
+                            // dispatcher's countdown guard (dropped during
+                            // the unwind) releases the barrier so the
+                            // coordinator can report the failure. The
+                            // payload is surfaced here — the dispatcher only
+                            // knows *that* shard i died, not why.
+                            if let Err(payload) =
+                                std::panic::catch_unwind(AssertUnwindSafe(sub.job))
+                            {
+                                let msg = payload
+                                    .downcast_ref::<&str>()
+                                    .map(|s| s.to_string())
+                                    .or_else(|| payload.downcast_ref::<String>().cloned())
+                                    .unwrap_or_else(|| "<non-string panic>".into());
+                                eprintln!(
+                                    "{}: job panicked: {msg}",
+                                    std::thread::current().name().unwrap_or("skipper-pool")
+                                );
+                            }
                         }
                     })
                     .expect("spawn pool worker")
             })
             .collect();
-        Self { queues, handles, queue_depth }
+        Self { queues, handles, queue_depth, plan, pin, pinned, pinned_gauge }
+    }
+
+    /// The pin policy this pool was built with.
+    pub fn pin_policy(&self) -> PinPolicy {
+        self.pin
+    }
+
+    /// Worker `i`'s planned placement (`None` when unpinned or out of
+    /// range). This is the *plan*; a refused syscall leaves the worker
+    /// floating without clearing its slot.
+    pub fn worker_slot(&self, i: usize) -> Option<CpuSlot> {
+        self.plan.get(i).copied().flatten()
+    }
+
+    /// Workers whose pin syscall actually succeeded so far.
+    pub fn pinned_workers(&self) -> usize {
+        self.pinned.load(Ordering::Relaxed)
     }
 
     /// Number of workers in the pool.
@@ -168,6 +250,8 @@ impl Drop for WorkerPool {
         for h in self.handles.drain(..) {
             let _ = h.join();
         }
+        // the gauge tracks *currently* pinned workers across live pools
+        self.pinned_gauge.dec(self.pinned.load(Ordering::Relaxed) as u64);
     }
 }
 
@@ -333,5 +417,52 @@ mod tests {
         c.wait();
         c.arrive(); // saturating: no panic
         c.wait();
+    }
+
+    #[test]
+    fn unpinned_pool_has_no_placement() {
+        let pool = WorkerPool::new(3);
+        assert_eq!(pool.pin_policy(), PinPolicy::None);
+        assert!((0..3).all(|i| pool.worker_slot(i).is_none()));
+        assert_eq!(pool.pinned_workers(), 0);
+    }
+
+    #[test]
+    fn pinned_pool_serves_jobs_and_reports_placement() {
+        // compact always yields a plan (discovery falls back to one node
+        // covering every CPU); whether the pin syscall succeeds is
+        // host-dependent, so only the bookkeeping is asserted
+        let pool = WorkerPool::with_pin(2, PinPolicy::Compact);
+        assert_eq!(pool.pin_policy(), PinPolicy::Compact);
+        assert!(pool.worker_slot(0).is_some());
+        assert!(pool.worker_slot(1).is_some());
+        assert!(pool.worker_slot(99).is_none());
+        let hits = Arc::new(AtomicUsize::new(0));
+        let done = Arc::new(Countdown::new(2));
+        for w in 0..2 {
+            let hits = Arc::clone(&hits);
+            let done = Arc::clone(&done);
+            pool.submit(w, move || {
+                let _g = ArriveOnDrop(done);
+                hits.fetch_add(1, Ordering::Relaxed);
+            });
+        }
+        done.wait();
+        assert_eq!(hits.load(Ordering::Relaxed), 2);
+        // workers attempt the pin before serving their first job
+        assert!(pool.pinned_workers() <= 2);
+    }
+
+    #[test]
+    fn spread_pool_round_robins_nodes_in_plan() {
+        let pool = WorkerPool::with_pin(4, PinPolicy::Spread);
+        // on a single-node host every slot lands on node 0; on a multi-node
+        // host consecutive workers alternate nodes — both are covered by
+        // checking the plan matches the topology's own answer
+        let topo = Topology::discover();
+        let want = topo.plan(PinPolicy::Spread, 4);
+        for (i, slot) in want.iter().enumerate() {
+            assert_eq!(pool.worker_slot(i), *slot);
+        }
     }
 }

@@ -1,0 +1,491 @@
+//! CPU/NUMA topology discovery and thread placement for the shard workers.
+//!
+//! The dynamic engine's shard→worker affinity is stable by construction
+//! (shard `i` always runs on pool worker `i` — see
+//! [`WorkerPool`](super::pool::WorkerPool)), which makes worker placement
+//! *meaningful*: if worker `i` is pinned to a core and shard `i`'s
+//! adjacency arena is first-touched from that worker, the shard's entire
+//! hot path — list headers, slot lines, its stripe of the atomic
+//! `partner[]` — is resident on that core's NUMA node. This module supplies
+//! the three ingredients:
+//!
+//! * **discovery** — [`Topology::discover`] parses
+//!   `/sys/devices/system/node/*/cpulist` (no dependencies, no syscalls
+//!   beyond file reads) and falls back to a single synthetic node covering
+//!   every schedulable CPU when sysfs is absent (non-Linux, containers,
+//!   stripped-down CI runners);
+//! * **policy** — [`PinPolicy`] picks how workers map onto the topology:
+//!   `none` (default: the scheduler decides, nothing is pinned), `compact`
+//!   (fill one node before spilling to the next — minimizes cross-node
+//!   traffic for few workers), `spread` (round-robin across nodes —
+//!   maximizes aggregate memory bandwidth);
+//! * **mechanism** — [`pin_current_thread`] (`sched_setaffinity` on the
+//!   calling thread) and [`advise_hugepages`] (`madvise(MADV_HUGEPAGE)` on
+//!   a slab) via direct `extern "C"` libc declarations, since the crate
+//!   vendors everything and `std` already links libc on every supported
+//!   platform. Both degrade to no-ops that report failure (`false`) rather
+//!   than erroring: placement is an optimization, never a correctness
+//!   dependency, and every caller must behave identically when it fails.
+//!
+//! Pinning must be **invisible to results**: the engine asserts bit-for-bit
+//! identical matchings across policies (see `prop_dynamic.rs`), so the only
+//! observable differences are wall time and the placement gauges this
+//! module registers (`skipper_topology_nodes`, `skipper_topology_cpus`).
+
+use crate::obs::metrics;
+
+/// How pool workers are placed onto the discovered topology.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum PinPolicy {
+    /// No pinning: threads float wherever the OS scheduler puts them.
+    /// The default — placement is strictly opt-in.
+    #[default]
+    None,
+    /// Fill node 0's CPUs first, then node 1's, … — workers stay on as few
+    /// nodes as possible, so small pools share one socket's cache.
+    Compact,
+    /// Round-robin workers across nodes — large pools draw on every
+    /// node's memory bandwidth.
+    Spread,
+}
+
+impl PinPolicy {
+    /// Parse a CLI spelling (`none` / `compact` / `spread`).
+    pub fn parse(s: &str) -> Result<Self, String> {
+        match s {
+            "none" => Ok(PinPolicy::None),
+            "compact" => Ok(PinPolicy::Compact),
+            "spread" => Ok(PinPolicy::Spread),
+            other => Err(format!("unknown pin policy {other:?} (none|compact|spread)")),
+        }
+    }
+
+    /// The canonical CLI/report spelling.
+    pub fn name(&self) -> &'static str {
+        match self {
+            PinPolicy::None => "none",
+            PinPolicy::Compact => "compact",
+            PinPolicy::Spread => "spread",
+        }
+    }
+}
+
+/// One NUMA node: its id and the schedulable CPUs it holds.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct NodeInfo {
+    /// Kernel node id (the `N` of `/sys/devices/system/node/nodeN`).
+    pub id: usize,
+    /// CPU ids on this node, ascending.
+    pub cpus: Vec<usize>,
+}
+
+/// A worker's placement: the core it is pinned to and that core's node.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct CpuSlot {
+    /// CPU id to pin to.
+    pub cpu: usize,
+    /// NUMA node that CPU belongs to.
+    pub node: usize,
+}
+
+/// The machine's CPU/NUMA layout as far as placement cares: which CPUs
+/// exist and how they group into nodes.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Topology {
+    /// Nodes with at least one CPU, ascending by id. Never empty.
+    pub nodes: Vec<NodeInfo>,
+    /// True when this came from sysfs, false for the synthetic fallback.
+    pub from_sysfs: bool,
+}
+
+impl Topology {
+    /// Discover the topology from `/sys/devices/system/node`. Any failure —
+    /// non-Linux, masked sysfs, unparsable files, a node list with no CPUs —
+    /// yields the single-node [`fallback`](Self::fallback) instead of an
+    /// error: placement code never needs to handle "no topology".
+    pub fn discover() -> Self {
+        Self::from_sysfs_root("/sys/devices/system/node").unwrap_or_else(Self::fallback)
+    }
+
+    /// Parse a sysfs `node/` directory (exposed for tests, which point it
+    /// at a synthetic tree).
+    pub fn from_sysfs_root(root: &str) -> Option<Self> {
+        let online = std::fs::read_to_string(format!("{root}/online")).ok()?;
+        let ids = parse_cpu_list(online.trim())?;
+        let mut nodes = Vec::new();
+        for id in ids {
+            let list = std::fs::read_to_string(format!("{root}/node{id}/cpulist")).ok()?;
+            let cpus = parse_cpu_list(list.trim())?;
+            if !cpus.is_empty() {
+                nodes.push(NodeInfo { id, cpus });
+            }
+        }
+        if nodes.is_empty() {
+            return None;
+        }
+        Some(Self { nodes, from_sysfs: true })
+    }
+
+    /// One synthetic node holding every schedulable CPU — what single-node
+    /// machines genuinely look like, and what every `--pin` path degrades
+    /// to when discovery fails.
+    pub fn fallback() -> Self {
+        let ncpus = std::thread::available_parallelism().map_or(1, |n| n.get());
+        Self {
+            nodes: vec![NodeInfo { id: 0, cpus: (0..ncpus).collect() }],
+            from_sysfs: false,
+        }
+    }
+
+    /// Number of NUMA nodes with CPUs.
+    pub fn num_nodes(&self) -> usize {
+        self.nodes.len()
+    }
+
+    /// Total schedulable CPUs across nodes.
+    pub fn num_cpus(&self) -> usize {
+        self.nodes.iter().map(|n| n.cpus.len()).sum()
+    }
+
+    /// Assign `workers` placement slots under `policy`. `None` policy (or a
+    /// topology with zero CPUs, which [`fallback`](Self::fallback) rules
+    /// out) yields all-`None`: nothing gets pinned. More workers than CPUs
+    /// wrap around — oversubscription pins them anyway, preserving the
+    /// shard→node mapping that the first-touch arenas rely on.
+    pub fn plan(&self, policy: PinPolicy, workers: usize) -> Vec<Option<CpuSlot>> {
+        if policy == PinPolicy::None || self.num_cpus() == 0 {
+            return vec![None; workers];
+        }
+        match policy {
+            PinPolicy::None => unreachable!(),
+            PinPolicy::Compact => {
+                // node-major flattening: node 0's CPUs, then node 1's, …
+                let flat: Vec<CpuSlot> = self
+                    .nodes
+                    .iter()
+                    .flat_map(|n| n.cpus.iter().map(|&cpu| CpuSlot { cpu, node: n.id }))
+                    .collect();
+                (0..workers).map(|i| Some(flat[i % flat.len()])).collect()
+            }
+            PinPolicy::Spread => (0..workers)
+                .map(|i| {
+                    let node = &self.nodes[i % self.nodes.len()];
+                    let cpu = node.cpus[(i / self.nodes.len()) % node.cpus.len()];
+                    Some(CpuSlot { cpu, node: node.id })
+                })
+                .collect(),
+        }
+    }
+
+    /// Register and set the topology gauges on the global metrics registry
+    /// (`skipper_topology_nodes`, `skipper_topology_cpus`). Idempotent —
+    /// re-registration returns the same instruments.
+    pub fn publish_gauges(&self) {
+        let reg = metrics::global();
+        reg.gauge("skipper_topology_nodes", "NUMA nodes with CPUs discovered at engine construction")
+            .set(self.num_nodes() as u64);
+        reg.gauge("skipper_topology_cpus", "Schedulable CPUs discovered at engine construction")
+            .set(self.num_cpus() as u64);
+    }
+}
+
+/// Parse a kernel cpulist (`"0-3,8,10-11"`) into ascending CPU ids.
+/// Returns `None` on any malformed field; an empty string is an empty list
+/// (how sysfs spells a memory-only node).
+pub fn parse_cpu_list(s: &str) -> Option<Vec<usize>> {
+    let mut out = Vec::new();
+    for field in s.split(',') {
+        let field = field.trim();
+        if field.is_empty() {
+            continue;
+        }
+        match field.split_once('-') {
+            Some((lo, hi)) => {
+                let lo: usize = lo.trim().parse().ok()?;
+                let hi: usize = hi.trim().parse().ok()?;
+                if hi < lo {
+                    return None;
+                }
+                out.extend(lo..=hi);
+            }
+            None => out.push(field.trim().parse().ok()?),
+        }
+    }
+    out.sort_unstable();
+    out.dedup();
+    Some(out)
+}
+
+// ---------------------------------------------------------------------------
+// mechanism: sched_setaffinity / sched_getcpu / madvise
+// ---------------------------------------------------------------------------
+
+/// Widest CPU id the affinity mask covers (`[u64; 16]` = 1024 CPUs, the
+/// kernel's historical `CPU_SETSIZE`).
+const MASK_WORDS: usize = 16;
+
+#[cfg(target_os = "linux")]
+mod sys {
+    extern "C" {
+        pub fn sched_setaffinity(pid: i32, cpusetsize: usize, mask: *const u64) -> i32;
+        pub fn sched_getcpu() -> i32;
+        pub fn madvise(addr: *mut core::ffi::c_void, length: usize, advice: i32) -> i32;
+    }
+    /// `MADV_HUGEPAGE` from `<linux/mman.h>` — ask for transparent huge
+    /// pages on the range.
+    pub const MADV_HUGEPAGE: i32 = 14;
+}
+
+/// Pin the calling thread to `cpu`. Returns whether the kernel accepted the
+/// mask; `false` on non-Linux, for CPU ids beyond the mask, or when the
+/// syscall is refused (cgroup cpusets, seccomp). Callers treat `false` as
+/// "run unpinned", never as an error.
+pub fn pin_current_thread(cpu: usize) -> bool {
+    #[cfg(target_os = "linux")]
+    {
+        if cpu >= MASK_WORDS * 64 {
+            return false;
+        }
+        let mut mask = [0u64; MASK_WORDS];
+        mask[cpu / 64] = 1u64 << (cpu % 64);
+        // pid 0 = the calling thread
+        unsafe {
+            sys::sched_setaffinity(0, std::mem::size_of_val(&mask), mask.as_ptr()) == 0
+        }
+    }
+    #[cfg(not(target_os = "linux"))]
+    {
+        let _ = cpu;
+        false
+    }
+}
+
+/// Reset the calling thread's affinity to every CPU in `topo` — undoes a
+/// [`pin_current_thread`] (benches pin, measure, and restore).
+pub fn unpin_current_thread(topo: &Topology) -> bool {
+    #[cfg(target_os = "linux")]
+    {
+        let mut mask = [0u64; MASK_WORDS];
+        for node in &topo.nodes {
+            for &cpu in &node.cpus {
+                if cpu < MASK_WORDS * 64 {
+                    mask[cpu / 64] |= 1u64 << (cpu % 64);
+                }
+            }
+        }
+        if mask.iter().all(|&w| w == 0) {
+            return false;
+        }
+        unsafe {
+            sys::sched_setaffinity(0, std::mem::size_of_val(&mask), mask.as_ptr()) == 0
+        }
+    }
+    #[cfg(not(target_os = "linux"))]
+    {
+        let _ = topo;
+        false
+    }
+}
+
+/// The CPU the calling thread is on right now (`sched_getcpu`), `None` on
+/// non-Linux.
+pub fn current_cpu() -> Option<usize> {
+    #[cfg(target_os = "linux")]
+    {
+        let cpu = unsafe { sys::sched_getcpu() };
+        usize::try_from(cpu).ok()
+    }
+    #[cfg(not(target_os = "linux"))]
+    {
+        None
+    }
+}
+
+/// Assumed kernel page size for aligning `madvise` ranges inward. On
+/// kernels with larger pages the aligned range is simply rejected
+/// (`EINVAL`) and we report `false` — advice, not correctness.
+const PAGE: usize = 4096;
+
+/// Ask the kernel to back `[ptr, ptr+len)` with transparent huge pages
+/// (`madvise(MADV_HUGEPAGE)`). The range is aligned *inward* to page
+/// boundaries since heap slabs rarely start page-aligned; ranges smaller
+/// than one page (after alignment) are skipped. Returns whether the advice
+/// was accepted — `false` is always safe to ignore.
+pub fn advise_hugepages(ptr: *const u8, len: usize) -> bool {
+    #[cfg(target_os = "linux")]
+    {
+        let start = ptr as usize;
+        let aligned_start = start.checked_add(PAGE - 1).map(|s| s & !(PAGE - 1));
+        let Some(aligned_start) = aligned_start else { return false };
+        let end = (start + len) & !(PAGE - 1);
+        if end <= aligned_start {
+            return false; // less than one full page inside the slab
+        }
+        unsafe {
+            sys::madvise(
+                aligned_start as *mut core::ffi::c_void,
+                end - aligned_start,
+                sys::MADV_HUGEPAGE,
+            ) == 0
+        }
+    }
+    #[cfg(not(target_os = "linux"))]
+    {
+        let _ = (ptr, len);
+        false
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cpu_list_parses_kernel_spellings() {
+        assert_eq!(parse_cpu_list("0-3,8,10-11").unwrap(), vec![0, 1, 2, 3, 8, 10, 11]);
+        assert_eq!(parse_cpu_list("0").unwrap(), vec![0]);
+        assert_eq!(parse_cpu_list("").unwrap(), Vec::<usize>::new());
+        assert_eq!(parse_cpu_list("3,1,2,2").unwrap(), vec![1, 2, 3]);
+        assert!(parse_cpu_list("4-2").is_none());
+        assert!(parse_cpu_list("a-b").is_none());
+        assert!(parse_cpu_list("1,x").is_none());
+    }
+
+    #[test]
+    fn policy_parses_and_round_trips() {
+        for p in [PinPolicy::None, PinPolicy::Compact, PinPolicy::Spread] {
+            assert_eq!(PinPolicy::parse(p.name()).unwrap(), p);
+        }
+        assert!(PinPolicy::parse("sideways").is_err());
+        assert_eq!(PinPolicy::default(), PinPolicy::None);
+    }
+
+    #[test]
+    fn discovery_always_yields_a_usable_topology() {
+        // on any host — sysfs or fallback — there is at least one node
+        // holding at least one CPU, so plan() never divides by zero
+        let topo = Topology::discover();
+        assert!(topo.num_nodes() >= 1);
+        assert!(topo.num_cpus() >= 1);
+        for node in &topo.nodes {
+            assert!(!node.cpus.is_empty());
+        }
+    }
+
+    #[test]
+    fn fallback_is_one_node_covering_all_cpus() {
+        let topo = Topology::fallback();
+        assert_eq!(topo.num_nodes(), 1);
+        assert!(!topo.from_sysfs);
+        assert_eq!(topo.num_cpus(), topo.nodes[0].cpus.len());
+    }
+
+    fn two_socket() -> Topology {
+        Topology {
+            nodes: vec![
+                NodeInfo { id: 0, cpus: vec![0, 1, 2, 3] },
+                NodeInfo { id: 1, cpus: vec![4, 5, 6, 7] },
+            ],
+            from_sysfs: true,
+        }
+    }
+
+    #[test]
+    fn none_policy_pins_nothing() {
+        assert!(two_socket().plan(PinPolicy::None, 6).iter().all(Option::is_none));
+    }
+
+    #[test]
+    fn compact_fills_a_node_before_spilling() {
+        let plan = two_socket().plan(PinPolicy::Compact, 6);
+        let slots: Vec<CpuSlot> = plan.into_iter().map(Option::unwrap).collect();
+        assert_eq!(
+            slots.iter().map(|s| s.cpu).collect::<Vec<_>>(),
+            vec![0, 1, 2, 3, 4, 5]
+        );
+        assert_eq!(
+            slots.iter().map(|s| s.node).collect::<Vec<_>>(),
+            vec![0, 0, 0, 0, 1, 1]
+        );
+    }
+
+    #[test]
+    fn spread_round_robins_nodes() {
+        let plan = two_socket().plan(PinPolicy::Spread, 6);
+        let slots: Vec<CpuSlot> = plan.into_iter().map(Option::unwrap).collect();
+        assert_eq!(
+            slots.iter().map(|s| s.node).collect::<Vec<_>>(),
+            vec![0, 1, 0, 1, 0, 1]
+        );
+        assert_eq!(
+            slots.iter().map(|s| s.cpu).collect::<Vec<_>>(),
+            vec![0, 4, 1, 5, 2, 6]
+        );
+    }
+
+    #[test]
+    fn oversubscription_wraps_instead_of_failing() {
+        let topo = Topology {
+            nodes: vec![NodeInfo { id: 0, cpus: vec![0] }],
+            from_sysfs: false,
+        };
+        let plan = topo.plan(PinPolicy::Compact, 4);
+        assert!(plan.iter().all(|s| s == &Some(CpuSlot { cpu: 0, node: 0 })));
+        let plan = topo.plan(PinPolicy::Spread, 3);
+        assert!(plan.iter().all(|s| s == &Some(CpuSlot { cpu: 0, node: 0 })));
+    }
+
+    #[test]
+    fn synthetic_sysfs_tree_parses() {
+        let dir = std::env::temp_dir().join(format!("skipper_topo_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        for (node, list) in [(0, "0-1\n"), (1, "2-3\n")] {
+            let d = dir.join(format!("node{node}"));
+            std::fs::create_dir_all(&d).unwrap();
+            std::fs::write(d.join("cpulist"), list).unwrap();
+        }
+        std::fs::write(dir.join("online"), "0-1\n").unwrap();
+        let topo = Topology::from_sysfs_root(dir.to_str().unwrap()).unwrap();
+        assert!(topo.from_sysfs);
+        assert_eq!(topo.num_nodes(), 2);
+        assert_eq!(topo.nodes[1].cpus, vec![2, 3]);
+        // a missing cpulist file fails discovery (caller falls back)
+        std::fs::remove_file(dir.join("node1").join("cpulist")).unwrap();
+        assert!(Topology::from_sysfs_root(dir.to_str().unwrap()).is_none());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn pinning_mechanism_never_panics() {
+        // pin to the CPU we are on (or CPU 0), then restore — the calls may
+        // be refused (non-Linux, cgroup masks) but must never crash, and a
+        // refused pin must leave the thread schedulable
+        let topo = Topology::discover();
+        let target = current_cpu().unwrap_or(0);
+        let _ = pin_current_thread(target);
+        let _ = unpin_current_thread(&topo);
+        // out-of-range CPU is rejected cleanly
+        assert!(!pin_current_thread(MASK_WORDS * 64 + 1));
+    }
+
+    #[test]
+    fn hugepage_advice_is_safe_on_any_slab() {
+        // big enough to contain full pages after inward alignment
+        let slab = vec![0u8; 1 << 20];
+        let _ = advise_hugepages(slab.as_ptr(), slab.len());
+        // sub-page slabs are skipped, not crashed on
+        let tiny = vec![0u8; 64];
+        assert!(!advise_hugepages(tiny.as_ptr(), tiny.len()));
+        // zero-length range
+        assert!(!advise_hugepages(slab.as_ptr(), 0));
+    }
+
+    #[test]
+    fn gauges_publish_node_and_cpu_counts() {
+        let topo = Topology::fallback();
+        topo.publish_gauges();
+        let text = metrics::global().render_prometheus();
+        assert!(text.contains("skipper_topology_nodes"), "{text}");
+        assert!(text.contains("skipper_topology_cpus"), "{text}");
+    }
+}

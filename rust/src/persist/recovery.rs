@@ -49,6 +49,7 @@
 use super::snapshot::{self, SnapshotData};
 use super::wal::{Wal, WalOptions};
 use crate::dynamic::{ShardedDynamicMatcher, Update};
+use crate::obs::trace;
 use std::collections::HashSet;
 use std::path::{Path, PathBuf};
 
@@ -160,9 +161,17 @@ pub fn recover(
     std::fs::create_dir_all(&snap_dir)
         .map_err(|e| format!("mkdir {}: {e}", snap_dir.display()))?;
     let mut report = RecoveryReport::default();
+    // umbrella span over the whole boot path; the phase spans below nest
+    // inside it in the trace, mirroring the module's state-machine diagram
+    let _recovery_span = trace::span("recovery", "recovery", 0);
 
     // FindSnap → Restore
-    if let Some((path, snap)) = snapshot::load_latest(&snap_dir)? {
+    let found = {
+        let _span = trace::span("recovery_find_snap", "recovery", 0);
+        snapshot::load_latest(&snap_dir)?
+    };
+    if let Some((path, snap)) = found {
+        let _span = trace::span("recovery_restore", "recovery", snap.epoch);
         restore_into(engine, &snap)
             .map_err(|e| format!("restore {}: {e}", path.display()))?;
         report.snapshot_epoch = Some(snap.epoch);
@@ -181,6 +190,7 @@ pub fn recover(
     // so replay memory is one epoch regardless of log length.
     let mut last_replayed = snap_epoch;
     let wal = {
+        let _span = trace::span("recovery_replay_wal", "recovery", snap_epoch);
         let report = &mut report;
         let last_replayed = &mut last_replayed;
         Wal::open_replaying(&wal_dir(data_dir), wal_opts, snap_epoch, &mut |rec| {
@@ -210,9 +220,12 @@ pub fn recover(
     engine.set_epoch_base(report.resumed_epoch);
 
     // Verify → Live
-    engine
-        .verify()
-        .map_err(|e| format!("recovery produced an invalid matching: {e}"))?;
+    {
+        let _span = trace::span("recovery_verify", "recovery", report.resumed_epoch);
+        engine
+            .verify()
+            .map_err(|e| format!("recovery produced an invalid matching: {e}"))?;
+    }
     Ok((wal, report))
 }
 

@@ -120,6 +120,16 @@ pub struct ServiceConfig {
     /// half-dead server with hanging clients. On by default; in-process
     /// tests disable it to observe the panic directly.
     pub exit_on_panic: bool,
+    /// Worker→core pin policy for the engine's shard pool (`--pin`):
+    /// shard workers pin themselves, first-touch their shard's arena and
+    /// `partner[]` stripe socket-local, and block slabs are advised onto
+    /// huge pages. Placement only — results are identical at any policy.
+    pub pin: crate::dynamic::PinPolicy,
+    /// Serve live Prometheus scrapes over HTTP at this address
+    /// (`--metrics-addr HOST:PORT`): a minimal `GET /metrics` endpoint on
+    /// its own listener thread, answering from the same registries as the
+    /// `METRICS` command. `None` = no HTTP listener.
+    pub metrics_addr: Option<String>,
 }
 
 impl Default for ServiceConfig {
@@ -140,6 +150,8 @@ impl Default for ServiceConfig {
             snapshot_every: 0,
             debug_commands: false,
             exit_on_panic: true,
+            pin: crate::dynamic::PinPolicy::None,
+            metrics_addr: None,
         }
     }
 }
@@ -1163,6 +1175,83 @@ fn open_durability(
     Ok(Some(dur))
 }
 
+/// Bind the `--metrics-addr` HTTP scrape endpoint (port 0 = ephemeral).
+/// Separate from the serve loop so boot fails loudly on a bad address
+/// instead of silently dropping scrapes.
+fn bind_metrics(cfg: &ServiceConfig) -> Result<Option<TcpListener>, String> {
+    let Some(addr) = &cfg.metrics_addr else {
+        return Ok(None);
+    };
+    let listener = TcpListener::bind(addr).map_err(|e| format!("bind metrics {addr}: {e}"))?;
+    listener
+        .set_nonblocking(true)
+        .map_err(|e| format!("metrics nonblocking: {e}"))?;
+    if let Ok(local) = listener.local_addr() {
+        eprintln!("metrics: scrape http://{local}/metrics");
+    }
+    Ok(Some(listener))
+}
+
+/// Minimal HTTP framing for the scrape endpoint: `GET /metrics` (or `/`)
+/// answers 200 with the same exposition the `METRICS` command returns;
+/// anything else answers 404. One request per connection
+/// (`Connection: close`) — exactly what a Prometheus scraper needs, with
+/// none of an HTTP stack's surface.
+fn metrics_http_reply(request_line: &str, sm: &ServiceMetrics) -> String {
+    let mut parts = request_line.split_whitespace();
+    let method = parts.next().unwrap_or("");
+    let path = parts.next().unwrap_or("");
+    if method == "GET" && (path == "/metrics" || path == "/") {
+        let body = sm.render_prometheus();
+        format!(
+            "HTTP/1.0 200 OK\r\nContent-Type: text/plain; version=0.0.4; charset=utf-8\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{body}",
+            body.len()
+        )
+    } else {
+        let body = "scrape endpoint: GET /metrics\n";
+        format!(
+            "HTTP/1.0 404 Not Found\r\nContent-Type: text/plain; charset=utf-8\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{body}",
+            body.len()
+        )
+    }
+}
+
+/// The `--metrics-addr` listener loop: accept, read the request line,
+/// answer, close. Scrapes are answered directly from the registries — no
+/// barrier, no engine round-trip — so scraping never stalls epochs. Exits
+/// when the service raises `stop`.
+fn metrics_http_loop(listener: &TcpListener, sm: &ServiceMetrics, stop: &AtomicBool) {
+    while !stop.load(Ordering::Relaxed) {
+        match listener.accept() {
+            Ok((stream, _peer)) => {
+                let _ = stream.set_nonblocking(false);
+                // a client that connects and stalls must not wedge the loop
+                let _ = stream.set_read_timeout(Some(std::time::Duration::from_millis(500)));
+                let mut reader = BufReader::new(stream);
+                let mut line = String::new();
+                let _ = reader.read_line(&mut line);
+                let reply = metrics_http_reply(&line, sm);
+                let mut stream = reader.into_inner();
+                let _ = stream.write_all(reply.as_bytes());
+                let _ = stream.flush();
+                let _ = stream.shutdown(Shutdown::Both);
+            }
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::WouldBlock | std::io::ErrorKind::Interrupted
+                ) =>
+            {
+                std::thread::sleep(std::time::Duration::from_millis(20));
+            }
+            Err(e) => {
+                eprintln!("metrics accept: {e}");
+                break;
+            }
+        }
+    }
+}
+
 /// Serve a single client over any line stream — `skipper-cli serve` on a
 /// stdin pipe, and the CI smoke test. Returns when the stream ends or the
 /// client sends `QUIT`/`SHUTDOWN`. Errors only at boot (recovery failure);
@@ -1172,14 +1261,17 @@ pub fn serve_lines<R: BufRead, W: Write>(
     reader: R,
     writer: &mut W,
 ) -> Result<ServiceSummary, String> {
-    let engine = ShardedDynamicMatcher::with_exec(
+    let engine = ShardedDynamicMatcher::with_exec_layout_pin(
         cfg.num_vertices,
         cfg.threads,
         cfg.engine_shards,
         cfg.shard_exec(),
+        crate::dynamic::AdjLayout::default(),
+        cfg.pin,
     );
     let dur = open_durability(cfg, &engine)?;
     let sm = ServiceMetrics::new();
+    let metrics_listener = bind_metrics(cfg)?;
     let queue: ShardedQueue<Request> = ShardedQueue::new(cfg.shards, cfg.shard_capacity);
     let stop = AtomicBool::new(false);
     Ok(std::thread::scope(|s| {
@@ -1189,8 +1281,15 @@ pub fn serve_lines<R: BufRead, W: Write>(
         let sm_ref = &sm;
         let coordinator =
             s.spawn(move || engine_loop(cfg, engine_ref, queue_ref, stop_ref, dur, sm_ref));
+        if let Some(listener) = &metrics_listener {
+            let sm_ref = &sm;
+            let stop_ref = &stop;
+            s.spawn(move || metrics_http_loop(listener, sm_ref, stop_ref));
+        }
         handle_conn(cfg, 0, &engine, &queue, &sm, reader, writer);
         queue.close();
+        // the engine loop's exit guard raises `stop`, which also winds down
+        // the metrics listener before the scope joins it
         coordinator.join().expect("engine thread panicked")
     }))
 }
@@ -1211,14 +1310,17 @@ pub fn serve_tcp(
     let local = listener.local_addr().map_err(|e| format!("local_addr: {e}"))?;
     on_ready(local);
 
-    let engine = ShardedDynamicMatcher::with_exec(
+    let engine = ShardedDynamicMatcher::with_exec_layout_pin(
         cfg.num_vertices,
         cfg.threads,
         cfg.engine_shards,
         cfg.shard_exec(),
+        crate::dynamic::AdjLayout::default(),
+        cfg.pin,
     );
     let dur = open_durability(cfg, &engine)?;
     let sm = ServiceMetrics::new();
+    let metrics_listener = bind_metrics(cfg)?;
     let queue: ShardedQueue<Request> = ShardedQueue::new(cfg.shards, cfg.shard_capacity);
     let stop = AtomicBool::new(false);
     // every accepted socket, keyed by connection id, so shutdown can
@@ -1236,6 +1338,11 @@ pub fn serve_tcp(
             let sm_ref = &sm;
             s.spawn(move || engine_loop(cfg, engine_ref, queue_ref, stop_ref, dur, sm_ref))
         };
+        if let Some(listener) = &metrics_listener {
+            let sm_ref = &sm;
+            let stop_ref = &stop;
+            s.spawn(move || metrics_http_loop(listener, sm_ref, stop_ref));
+        }
         let mut conn_id = 0usize;
         while !stop.load(Ordering::Relaxed) {
             match listener.accept() {
@@ -1425,6 +1532,85 @@ QUIT\n";
         assert_eq!(summary.epochs, 3);
         assert_eq!(summary.total_inserts, 9);
         assert_eq!(summary.total_deletes, 2);
+    }
+
+    #[test]
+    fn pinned_service_serves_epochs_and_stays_maximal() {
+        // a pinned sharded engine behind the service must behave exactly
+        // like an unpinned one (placement changes timings, not results) —
+        // including on single-node hosts and hosts that refuse the pin
+        let cfg = ServiceConfig {
+            num_vertices: 64,
+            threads: 2,
+            engine_shards: 4,
+            pin: crate::dynamic::PinPolicy::Compact,
+            ..Default::default()
+        };
+        let script = "\
+INSERT 0 1 1 2 2 3 3 4 10 40 41 11 20 50\n\
+EPOCH\n\
+DELETE 1 2 10 40\n\
+EPOCH\n\
+STATS full\n\
+QUIT\n";
+        let (lines, summary) = drive(&cfg, script);
+        let stats = lines.iter().find(|l| l.contains(r#""op":"stats""#)).unwrap();
+        assert!(stats.contains(r#""maximal":true"#), "{stats}");
+        assert!(summary.maximal);
+        assert_eq!(summary.epochs, 2);
+        // the topology gauges are published the moment a pinned pool is built
+        assert!(summary.metrics_text.contains("skipper_topology_nodes"), "topology gauges missing");
+        assert!(summary.metrics_text.contains("skipper_pinned_workers"), "pin gauge missing");
+    }
+
+    #[test]
+    fn metrics_http_reply_frames_the_exposition() {
+        let sm = ServiceMetrics::new();
+        let ok = metrics_http_reply("GET /metrics HTTP/1.1", &sm);
+        assert!(ok.starts_with("HTTP/1.0 200 OK\r\n"), "{ok}");
+        assert!(ok.contains("Content-Type: text/plain"), "{ok}");
+        let body = ok.split("\r\n\r\n").nth(1).unwrap();
+        assert!(body.ends_with("# EOF\n"), "body must be a complete exposition");
+        assert!(body.contains("skipper_service_inserts_total"), "{body}");
+        let len: usize = ok
+            .lines()
+            .find(|l| l.starts_with("Content-Length:"))
+            .and_then(|l| l.split(':').nth(1))
+            .unwrap()
+            .trim()
+            .parse()
+            .unwrap();
+        assert_eq!(len, body.len());
+        // bare GET / also scrapes; everything else is a 404
+        assert!(metrics_http_reply("GET / HTTP/1.0", &sm).starts_with("HTTP/1.0 200"));
+        assert!(metrics_http_reply("GET /favicon.ico HTTP/1.1", &sm)
+            .starts_with("HTTP/1.0 404"));
+        assert!(metrics_http_reply("POST /metrics HTTP/1.1", &sm)
+            .starts_with("HTTP/1.0 404"));
+        assert!(metrics_http_reply("", &sm).starts_with("HTTP/1.0 404"));
+    }
+
+    #[test]
+    fn metrics_http_loop_answers_a_live_scrape() {
+        let sm = ServiceMetrics::new();
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        listener.set_nonblocking(true).unwrap();
+        let addr = listener.local_addr().unwrap();
+        let stop = AtomicBool::new(false);
+        std::thread::scope(|s| {
+            let sm_ref = &sm;
+            let stop_ref = &stop;
+            let listener_ref = &listener;
+            s.spawn(move || metrics_http_loop(listener_ref, sm_ref, stop_ref));
+            let mut conn = TcpStream::connect(addr).unwrap();
+            conn.write_all(b"GET /metrics HTTP/1.0\r\n\r\n").unwrap();
+            let mut response = String::new();
+            conn.read_to_string(&mut response).unwrap();
+            assert!(response.starts_with("HTTP/1.0 200 OK"), "{response}");
+            assert!(response.contains("skipper_service_update_epochs_total"), "{response}");
+            assert!(response.trim_end().ends_with("# EOF"), "{response}");
+            stop.store(true, Ordering::Relaxed);
+        });
     }
 
     #[test]

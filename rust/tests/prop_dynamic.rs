@@ -15,7 +15,7 @@
 //! and every invariant must hold at every shard count and under either
 //! dispatch policy.
 
-use skipper::dynamic::{ShardExec, ShardedDynamicMatcher, Update};
+use skipper::dynamic::{AdjLayout, PinPolicy, ShardExec, ShardedDynamicMatcher, Update};
 use skipper::graph::gen::{barabasi_albert, erdos_renyi, grid};
 use skipper::matching::verify::verify_maximal_dynamic;
 use skipper::util::qcheck::{check, Config};
@@ -165,6 +165,91 @@ fn run_schedule(s: &Schedule) -> Result<(), String> {
     }
     run_schedule_sharded(s, 4, ShardExec::Fork)?;
     Ok(())
+}
+
+/// Replay one schedule at a fixed shard count and pin policy, recording the
+/// per-epoch matching and live set. `threads = 1` makes the sweep order —
+/// and therefore the matching itself — deterministic, so two replays that
+/// differ only in placement must produce identical trajectories.
+fn run_schedule_pinned(
+    s: &Schedule,
+    engine_shards: usize,
+    pin: PinPolicy,
+) -> Vec<(Vec<(VertexId, VertexId)>, Vec<(VertexId, VertexId)>)> {
+    let mut rng = Xoshiro256pp::new(s.seed);
+    let engine = ShardedDynamicMatcher::with_exec_layout_pin(
+        s.n,
+        1,
+        engine_shards,
+        ShardExec::Pool,
+        AdjLayout::default(),
+        pin,
+    );
+    let mut live: Vec<(VertexId, VertexId)> = Vec::new();
+    let mut pool = s.population.clone();
+    let mut dead: Vec<(VertexId, VertexId)> = Vec::new();
+    let mut trajectory = Vec::with_capacity(s.epochs);
+    for _ in 0..s.epochs {
+        let mut updates = Vec::with_capacity(s.batch);
+        for _ in 0..s.batch {
+            let deleting = !live.is_empty() && rng.next_usize(100) < s.delete_pct;
+            if deleting {
+                let k = rng.next_usize(live.len());
+                let (u, v) = live.swap_remove(k);
+                dead.push((u, v));
+                updates.push(Update::Delete(u, v));
+            } else {
+                if pool.is_empty() {
+                    pool.append(&mut dead);
+                    rng.shuffle(&mut pool);
+                }
+                match pool.pop() {
+                    Some((u, v)) => {
+                        live.push((u, v));
+                        updates.push(Update::Insert(u, v));
+                    }
+                    None => break,
+                }
+            }
+        }
+        engine.apply_epoch(&updates).unwrap();
+        engine.verify().unwrap();
+        let mut matching = engine.matching_pairs();
+        matching.sort_unstable();
+        let mut live_now = engine.live_edges();
+        live_now.sort_unstable();
+        trajectory.push((matching, live_now));
+    }
+    trajectory
+}
+
+#[test]
+fn pinned_replays_are_bit_identical_to_unpinned() {
+    // pinning relocates workers and first-touches memory on their nodes; it
+    // must never change a single matching decision. Whole trajectories —
+    // matching AND live set after every epoch — are compared at P ∈
+    // {1, 4, 8} between the unpinned engine and both pin policies, on
+    // whatever topology the host has (single-node fallback included).
+    check(
+        &Config { cases: 12, seed: 0x91AA, ..Default::default() },
+        arb_schedule,
+        |s| {
+            for p in [1usize, 4, 8] {
+                let base = run_schedule_pinned(s, p, PinPolicy::None);
+                for pin in [PinPolicy::Compact, PinPolicy::Spread] {
+                    let pinned = run_schedule_pinned(s, p, pin);
+                    if pinned != base {
+                        return Err(format!(
+                            "{} P={p}: {} trajectory diverged from unpinned",
+                            s.family,
+                            pin.name()
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
 }
 
 #[test]
