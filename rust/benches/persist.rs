@@ -1,13 +1,16 @@
 //! Bench: durability costs on rmat-warmed engines.
 //!
-//! Three questions, at `SKIPPER_BENCH_SCALE`-dependent size:
+//! Four questions, at `SKIPPER_BENCH_SCALE`-dependent size:
 //!   1. snapshot write and load+restore throughput — how fast the engine's
 //!      durable state (live adjacency + matching) streams to and from disk,
 //!   2. WAL append latency per churn epoch, buffered vs fsync vs grouped
 //!      fsync (`Wal::append_epochs`, one `sync_data` per 4 epochs) — the
 //!      price of the write-ahead guarantee on the flusher's critical path,
 //!   3. cold crash recovery — snapshot restore + WAL replay + maximality
-//!      audit, as a function of the replayed epoch count.
+//!      audit, as a function of the replayed epoch count,
+//!   4. replication ship throughput — epochs/s and payload MB/s from a
+//!      `Shipper` to an acking follower over loopback, with the local WAL
+//!      append buffered vs fsync'd on the publish path.
 //!
 //! With `SKIPPER_BENCH_RECORD_DIR=dir` set, the run additionally writes a
 //! perf-registry candidate record (`dir/persist_rmat<scale>.json`) holding
@@ -25,6 +28,7 @@ use std::collections::BTreeMap;
 use skipper::dynamic::churn::{recycle_batch, ChurnGen};
 use skipper::dynamic::{ShardedDynamicMatcher, Update};
 use skipper::persist::recovery;
+use skipper::persist::ship::{ShipReader, Shipper};
 use skipper::persist::snapshot::{self, SnapshotData};
 use skipper::persist::wal::{Wal, WalOptions};
 use skipper::util::benchlib::{bench, BenchConfig};
@@ -183,6 +187,59 @@ fn main() {
         println!("{}", r.row());
         met.insert(format!("recover_{k}_epochs_s"), r.median_s);
     }
+    // 4. replication ship throughput over loopback: a Shipper publishing
+    // churn epochs, one raw ShipReader draining and acking them on its own
+    // thread. Buffered vs per-epoch fsync of the local WAL on the publish
+    // path — the flusher ships right after its local append, so the fsync
+    // row is the replicated-commit rate a durable primary sustains.
+    if std::net::TcpListener::bind("127.0.0.1:0").is_ok() {
+        let ship_epochs = 64u64;
+        for (tag, fsync) in [("buffered", false), ("fsync", true)] {
+            let dir = fresh_dir(&base, &format!("ship_{tag}"));
+            let (mut wal, _) = Wal::open(&dir, WalOptions { fsync, ..WalOptions::default() })
+                .expect("wal open");
+            let reg = metrics::Registry::new();
+            let shipper = Shipper::bind("127.0.0.1:0", n, 0, &reg).expect("ship bind");
+            let addr = shipper.local_addr().to_string();
+            let consumer = std::thread::spawn(move || {
+                let mut reader = ShipReader::connect(&addr, 0).expect("follow");
+                let mut drained = 0u64;
+                while let Some(frame) = reader.next_frame().expect("frame") {
+                    reader.ack(frame.rec.epoch).expect("ack");
+                    drained += 1;
+                }
+                drained
+            });
+            let mut rng = Xoshiro256pp::new(41);
+            let t0 = Instant::now();
+            for e in 0..ship_epochs {
+                let ups = recycle_batch(&live, &mut rng, e as usize, batch);
+                wal.append_epoch(e + 1, &ups).expect("wal append");
+                shipper.publish(e + 1, &ups);
+            }
+            // the clock stops when the follower has acked the tip
+            let deadline = Instant::now() + std::time::Duration::from_secs(30);
+            while shipper.stats().acked < ship_epochs {
+                assert!(Instant::now() < deadline, "follower never caught up");
+                std::thread::yield_now();
+            }
+            let dt = t0.elapsed().as_secs_f64().max(1e-9);
+            let shipped_bytes = shipper.stats().bytes_shipped;
+            shipper.shutdown();
+            let drained = consumer.join().expect("consumer");
+            assert_eq!(drained, ship_epochs, "every published epoch must arrive");
+            println!(
+                "persist/ship-{tag:<9} batch={batch}: {:>8.0} epochs/s  {:>7.1} MB/s over loopback (acked)",
+                ship_epochs as f64 / dt,
+                shipped_bytes as f64 / dt / 1e6
+            );
+            met.insert(format!("ship_{tag}_epochs_per_s"), ship_epochs as f64 / dt);
+            met.insert(format!("ship_{tag}_bytes_per_s"), shipped_bytes as f64 / dt);
+        }
+    } else {
+        eprintln!("[persist] skipping ship section: no loopback in this sandbox");
+    }
+
     if let Some(dir) = record_dir {
         let dir = PathBuf::from(dir);
         std::fs::create_dir_all(&dir).expect("record dir");

@@ -45,7 +45,9 @@ use skipper::coordinator::registry::{self, BenchRecord, Registry};
 use skipper::obs::{metrics, trace};
 use skipper::dynamic::churn::{run_churn, ChurnConfig, ChurnGen};
 use skipper::dynamic::AdjLayout;
-use skipper::service::{serve_lines, serve_tcp, ServiceConfig};
+use skipper::service::{
+    serve_follower_lines, serve_follower_tcp, serve_lines, serve_tcp, ServiceConfig,
+};
 use skipper::util::cli::Args;
 use std::path::Path;
 use std::time::Instant;
@@ -72,6 +74,7 @@ USAGE:
               [--fsync] [--snapshot-every E] [--debug-commands]
               [--trace] [--trace-out FILE] [--metrics-file FILE]
               [--metrics-addr HOST:PORT] [--pin none|compact|spread] [--numa]
+              [--replicate-addr HOST:PORT] [--follow HOST:PORT]
               (line protocol INSERT/DELETE/QUERY/STATS[ full]/SNAPSHOT/
                EPOCH/QUIT/SHUTDOWN, specified in docs/PROTOCOL.md; stdin
                pipe by default, concurrent clients with --tcp.
@@ -106,6 +109,17 @@ USAGE:
                at exit, identical to a last METRICS scrape;
                --metrics-addr HOST:PORT serves live scrapes over HTTP
                (GET /metrics — point Prometheus at it).
+               Replication: --replicate-addr HOST:PORT makes this server a
+               primary that streams every committed epoch's WAL record to
+               followers over TCP; --follow HOST:PORT starts a warm standby
+               that replays that stream through its own engine (same
+               --vertices and --engine-shards as the primary), answers
+               QUERY/STATS/METRICS read-only, and becomes a writable
+               primary on PROMOTE — e.g. after kill -9 of the old primary.
+               A follower with its own --data-dir WAL-logs each shipped
+               epoch before applying it and recovers+resumes on restart.
+               Framing and the replica_* STATS fields are specified in
+               docs/PROTOCOL.md.
                Topology: --pin compact packs the P shard workers onto the
                cores of as few NUMA nodes as possible, --pin spread
                round-robins them across nodes; either way each worker pins
@@ -578,6 +592,7 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
         exit_on_panic: true,
         pin: parse_pin(args)?,
         metrics_addr: args.get("metrics-addr").map(String::from),
+        replicate_addr: args.get("replicate-addr").map(String::from),
     };
     if cfg.engine_shards == 0 || cfg.epoch_max_updates == 0 || cfg.epoch_max_requests == 0 {
         return Err("--engine-shards/--epoch-max-updates/--epoch-max-requests must be >= 1".into());
@@ -612,6 +627,54 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
     let trace_out = args.get("trace-out");
     if args.flag("trace") || trace_out.is_some() {
         trace::set_enabled(true);
+    }
+    if let Some(primary) = args.get("follow") {
+        if cfg.replicate_addr.is_some() {
+            return Err(
+                "--follow and --replicate-addr are mutually exclusive (chained replication \
+                 is not supported)"
+                    .into(),
+            );
+        }
+        if args.get("metrics-file").is_some() {
+            return Err("--metrics-file is not supported with --follow (scrape METRICS)".into());
+        }
+        let summary = match args.get("tcp") {
+            Some(addr) => serve_follower_tcp(&cfg, primary, addr, |bound| {
+                eprintln!(
+                    "following {primary}; serving |V|={} ({mode}) on tcp://{bound} (SHUTDOWN to stop)",
+                    cfg.num_vertices
+                );
+            })?,
+            None => {
+                eprintln!(
+                    "following {primary}; serving |V|={} ({mode}) on stdin (QUERY/STATS[ full]/METRICS/PROMOTE; QUIT or EOF to stop)",
+                    cfg.num_vertices
+                );
+                let stdin = std::io::stdin();
+                let mut stdout = std::io::stdout();
+                serve_follower_lines(&cfg, primary, stdin.lock(), &mut stdout)?
+            }
+        };
+        eprintln!(
+            "follower replayed to epoch {}{}; final |M|={} over {} live edges, maximal={}; final snapshot at epoch {}",
+            summary.epochs,
+            if summary.promoted { " (promoted)" } else { "" },
+            summary.matched_vertices / 2,
+            summary.live_edges,
+            summary.maximal,
+            summary.last_snapshot_epoch,
+        );
+        if let Some(path) = trace_out {
+            let events = trace::collect();
+            let doc = trace::chrome_trace_json(&events);
+            std::fs::write(path, doc.render_pretty()).map_err(|e| format!("{path}: {e}"))?;
+            eprintln!("trace: {} spans -> {path} (load in chrome://tracing)", events.len());
+        }
+        if !summary.maximal {
+            return Err("final matching failed the live-set maximality audit".into());
+        }
+        return Ok(());
     }
     let summary = match args.get("tcp") {
         Some(addr) => serve_tcp(&cfg, addr, |bound| {

@@ -54,6 +54,7 @@
 //! architecture chapter is `docs/ARCHITECTURE.md`.
 
 pub mod recovery;
+pub mod ship;
 pub mod snapshot;
 pub mod wal;
 

@@ -1,0 +1,720 @@
+//! WAL shipping: the replication transport between a primary and its
+//! followers.
+//!
+//! The epoch WAL is already a totally-ordered, CRC-checked, replayable
+//! stream — this module ships it over TCP. The primary runs a [`Shipper`]
+//! that retains every committed epoch record (encoded exactly as the WAL
+//! record payload, see [`crate::persist::wal`]) in an in-memory backlog and
+//! streams it to any number of followers; each follower runs a
+//! [`ShipReader`] that replays frames through the real engine and acks each
+//! applied epoch back on the same socket.
+//!
+//! ## Wire format
+//!
+//! Everything is little-endian. The handshake:
+//!
+//! ```text
+//! follower → primary:  magic "SKPSHIP1" (8) | last_epoch: u64 (8)
+//! primary → follower:  magic "SKPSHIP1" (8) | num_vertices: u64 (8) | base_epoch: u64 (8)
+//! ```
+//!
+//! `last_epoch` is the highest epoch the follower has already applied
+//! (0 for a fresh standby); the primary resumes the stream at
+//! `last_epoch + 1`. `base_epoch` is the replication horizon: the primary's
+//! backlog covers epochs `base_epoch + 1` onward, so a follower whose
+//! `last_epoch < base_epoch` cannot catch up over the stream and must
+//! bootstrap from a copy of the primary's data dir instead — the follower
+//! fails the connect loudly in that case.
+//!
+//! After the handshake the primary sends **frames**, each carrying its
+//! current tip epoch (for follower lag accounting) and one WAL record
+//! payload:
+//!
+//! ```text
+//! frame:   tip: u64 (8) | payload_len: u32 (4) | crc32(payload): u32 (4) | payload
+//! payload: epoch: u64 | count: u32 | count × (op: u8, u: u32, v: u32)
+//! ```
+//!
+//! and the follower replies with **acks**, one `u64` epoch number per
+//! applied epoch. An epoch is *acked* only after the follower has durably
+//! logged (when it keeps its own WAL) and applied it — the same
+//! WAL-before-apply invariant the primary itself honors.
+//!
+//! ## Failure model
+//!
+//! A `kill -9` of the primary closes its sockets; followers observe EOF
+//! mid-stream, keep everything they have applied, and wait for promotion.
+//! Because frames carry contiguous epochs and followers enforce the same
+//! epoch-contiguity invariant as recovery, "the follower with the longest
+//! contiguous log" is simply the one with the highest applied epoch — no
+//! follower can ever hold a gapped prefix.
+
+use super::crc32;
+use super::wal::{decode_payload, encode_payload, WalEpoch};
+use crate::dynamic::Update;
+use crate::obs::metrics;
+use std::collections::VecDeque;
+use std::io::{Read, Write};
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// Handshake magic, first 8 bytes in each direction.
+pub const SHIP_MAGIC: &[u8; 8] = b"SKPSHIP1";
+
+/// Hard cap on one frame's payload — mirrors the WAL scanner's record cap
+/// so a malicious or corrupt length prefix is rejected, not allocated.
+const MAX_FRAME_PAYLOAD: u32 = 1 << 28;
+
+/// How long a freshly accepted connection gets to complete its handshake
+/// before the primary gives up on it.
+const HANDSHAKE_TIMEOUT: Duration = Duration::from_secs(5);
+
+/// Most recent publish timestamps retained for ack-latency measurement.
+const ACK_CLOCK_DEPTH: usize = 4096;
+
+/// One decoded replication frame: the primary's tip epoch at send time and
+/// the epoch record itself.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ShipFrame {
+    /// The primary's newest committed epoch when this frame was sent —
+    /// `tip - rec.epoch` is the follower's instantaneous lag in epochs.
+    pub tip: u64,
+    /// The shipped epoch record, byte-identical to the WAL's.
+    pub rec: WalEpoch,
+}
+
+/// A point-in-time view of the primary's replication state, for `STATS`.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ShipStats {
+    /// Live follower connections.
+    pub followers: u64,
+    /// Newest committed (published) epoch.
+    pub tip: u64,
+    /// Lowest epoch acked by every live follower (equals `tip` when all
+    /// followers are caught up, and when there are no followers at all).
+    pub acked: u64,
+    /// `tip - acked`.
+    pub lag_epochs: u64,
+    /// Backlog bytes not yet acked by the slowest live follower.
+    pub lag_bytes: u64,
+    /// Frames sent across all followers since bind.
+    pub records_shipped: u64,
+    /// Frame payload bytes sent across all followers since bind.
+    pub bytes_shipped: u64,
+}
+
+/// One live follower connection, tracked by the shipper.
+struct FollowerSlot {
+    peer: SocketAddr,
+    /// Highest epoch this follower has acked.
+    acked: AtomicU64,
+    alive: AtomicBool,
+    /// Kept so shutdown can close the socket and unblock both threads.
+    stream: TcpStream,
+}
+
+/// State shared between `publish` (flusher thread), the accept loop, and
+/// the per-follower sender/ack threads.
+struct ShipInner {
+    num_vertices: u64,
+    /// The backlog covers epochs `base + 1 ..= base + log.len()`.
+    base: u64,
+    /// Encoded record payloads, in epoch order, plus the cumulative payload
+    /// byte count through each entry (for lag-in-bytes accounting).
+    log: Mutex<(Vec<Arc<[u8]>>, Vec<u64>)>,
+    /// Signaled on publish and on shutdown.
+    cond: Condvar,
+    tip: AtomicU64,
+    shutdown: AtomicBool,
+    followers: Mutex<Vec<Arc<FollowerSlot>>>,
+    records_shipped: AtomicU64,
+    bytes_shipped: AtomicU64,
+    /// `(epoch, publish instant)` ring for ack-latency measurement.
+    ack_clock: Mutex<VecDeque<(u64, Instant)>>,
+    send_hist: Arc<metrics::Histogram>,
+    ack_hist: Arc<metrics::Histogram>,
+    lag_gauge: Arc<metrics::Gauge>,
+    followers_gauge: Arc<metrics::Gauge>,
+}
+
+impl ShipInner {
+    /// Recompute the primary-side lag gauge: tip minus the slowest live
+    /// follower's ack (0 with no followers — nothing is waiting on us).
+    fn refresh_lag(&self) {
+        let tip = self.tip.load(Ordering::Acquire);
+        let min_acked = self
+            .followers
+            .lock()
+            .unwrap()
+            .iter()
+            .filter(|f| f.alive.load(Ordering::Relaxed))
+            .map(|f| f.acked.load(Ordering::Relaxed))
+            .min();
+        let lag = match min_acked {
+            Some(a) => tip.saturating_sub(a),
+            None => 0,
+        };
+        self.lag_gauge.set(lag);
+    }
+}
+
+/// The primary side of replication: a TCP listener plus an in-memory
+/// backlog of every epoch committed since bind. The service's flusher
+/// calls [`publish`](Shipper::publish) once per committed epoch (after the
+/// local WAL append); follower connections are handled entirely on
+/// background threads, so a slow or dead follower never blocks the epoch
+/// pipeline — it just accumulates lag.
+pub struct Shipper {
+    inner: Arc<ShipInner>,
+    local_addr: SocketAddr,
+    threads: Mutex<Vec<std::thread::JoinHandle<()>>>,
+}
+
+impl Shipper {
+    /// Bind the replication listener on `addr` and start accepting
+    /// followers. `base_epoch` is the primary's current applied epoch —
+    /// the backlog (and therefore the replication horizon) starts right
+    /// after it. Instruments are registered against `reg`, so they land in
+    /// the serving instance's `METRICS` scrape.
+    pub fn bind(
+        addr: &str,
+        num_vertices: usize,
+        base_epoch: u64,
+        reg: &metrics::Registry,
+    ) -> Result<Shipper, String> {
+        let listener =
+            TcpListener::bind(addr).map_err(|e| format!("replicate bind {addr}: {e}"))?;
+        let local_addr = listener
+            .local_addr()
+            .map_err(|e| format!("replicate addr: {e}"))?;
+        listener
+            .set_nonblocking(true)
+            .map_err(|e| format!("replicate listener: {e}"))?;
+        let inner = Arc::new(ShipInner {
+            num_vertices: num_vertices as u64,
+            base: base_epoch,
+            log: Mutex::new((Vec::new(), Vec::new())),
+            cond: Condvar::new(),
+            tip: AtomicU64::new(base_epoch),
+            shutdown: AtomicBool::new(false),
+            followers: Mutex::new(Vec::new()),
+            records_shipped: AtomicU64::new(0),
+            bytes_shipped: AtomicU64::new(0),
+            ack_clock: Mutex::new(VecDeque::new()),
+            send_hist: reg.histogram_secs(
+                "skipper_ship_send_seconds",
+                "Replication frame encode+write latency, per frame per follower",
+            ),
+            ack_hist: reg.histogram_secs(
+                "skipper_ship_ack_seconds",
+                "Publish-to-ack round trip per epoch (first follower to ack)",
+            ),
+            lag_gauge: reg.gauge(
+                "skipper_replica_lag_epochs",
+                "Committed epochs not yet acked by the slowest live follower",
+            ),
+            followers_gauge: reg.gauge(
+                "skipper_replica_followers",
+                "Live follower connections on the replication listener",
+            ),
+        });
+        let accept_inner = Arc::clone(&inner);
+        let accept = std::thread::Builder::new()
+            .name("ship-accept".into())
+            .spawn(move || accept_loop(listener, accept_inner))
+            .map_err(|e| format!("replicate accept thread: {e}"))?;
+        Ok(Shipper {
+            inner,
+            local_addr,
+            threads: Mutex::new(vec![accept]),
+        })
+    }
+
+    /// The bound replication listener address (useful with port 0).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.local_addr
+    }
+
+    /// Publish one committed epoch to the backlog and wake every sender.
+    /// Called by the flusher right after the epoch is locally durable;
+    /// epochs must arrive contiguously (`base + 1`, `base + 2`, ...), which
+    /// the service's epoch counter guarantees.
+    pub fn publish(&self, epoch: u64, updates: &[Update]) {
+        let payload: Arc<[u8]> = encode_payload(epoch, updates).into();
+        let bytes = payload.len() as u64;
+        {
+            let mut log = self.inner.log.lock().unwrap();
+            debug_assert_eq!(
+                epoch,
+                self.inner.base + log.0.len() as u64 + 1,
+                "published epochs must be contiguous"
+            );
+            let total = log.1.last().copied().unwrap_or(0) + bytes;
+            log.0.push(payload);
+            log.1.push(total);
+        }
+        self.inner.tip.store(epoch, Ordering::Release);
+        {
+            let mut clock = self.inner.ack_clock.lock().unwrap();
+            if clock.len() == ACK_CLOCK_DEPTH {
+                clock.pop_front();
+            }
+            clock.push_back((epoch, Instant::now()));
+        }
+        self.inner.refresh_lag();
+        self.inner.cond.notify_all();
+    }
+
+    /// A point-in-time replication summary for `STATS`.
+    pub fn stats(&self) -> ShipStats {
+        let tip = self.inner.tip.load(Ordering::Acquire);
+        let followers: Vec<u64> = self
+            .inner
+            .followers
+            .lock()
+            .unwrap()
+            .iter()
+            .filter(|f| f.alive.load(Ordering::Relaxed))
+            .map(|f| f.acked.load(Ordering::Relaxed))
+            .collect();
+        let acked = followers.iter().copied().min().unwrap_or(tip);
+        let lag_bytes = {
+            let log = self.inner.log.lock().unwrap();
+            let total = log.1.last().copied().unwrap_or(0);
+            let idx = acked.saturating_sub(self.inner.base) as usize;
+            let covered = if idx == 0 { 0 } else { log.1[idx.min(log.1.len()) - 1] };
+            total - covered
+        };
+        ShipStats {
+            followers: followers.len() as u64,
+            tip,
+            acked,
+            lag_epochs: tip.saturating_sub(acked),
+            lag_bytes,
+            records_shipped: self.inner.records_shipped.load(Ordering::Relaxed),
+            bytes_shipped: self.inner.bytes_shipped.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Stop accepting, close every follower socket, and join the
+    /// background threads. Followers observe a clean EOF — from their side
+    /// indistinguishable from a primary crash, which is the point: failover
+    /// has a single code path.
+    pub fn shutdown(&self) {
+        self.inner.shutdown.store(true, Ordering::Release);
+        self.inner.cond.notify_all();
+        for f in self.inner.followers.lock().unwrap().iter() {
+            let _ = f.stream.shutdown(Shutdown::Both);
+        }
+        let threads = std::mem::take(&mut *self.threads.lock().unwrap());
+        for t in threads {
+            let _ = t.join();
+        }
+    }
+}
+
+impl Drop for Shipper {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+/// Accept loop: poll the nonblocking listener, handshake each follower on
+/// its own thread so a slow client can't stall admission.
+fn accept_loop(listener: TcpListener, inner: Arc<ShipInner>) {
+    while !inner.shutdown.load(Ordering::Acquire) {
+        match listener.accept() {
+            Ok((stream, peer)) => {
+                let conn_inner = Arc::clone(&inner);
+                // detached: the thread exits when its socket closes, which
+                // Shipper::shutdown forces for every registered follower
+                if let Err(e) = std::thread::Builder::new()
+                    .name(format!("ship-{peer}"))
+                    .spawn(move || follower_conn(stream, peer, conn_inner))
+                {
+                    eprintln!("replicate: spawn for {peer}: {e}");
+                }
+            }
+            Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(25));
+            }
+            Err(e) => {
+                eprintln!("replicate: accept: {e}");
+                std::thread::sleep(Duration::from_millis(100));
+            }
+        }
+    }
+}
+
+/// Handshake one follower, then stream frames to it (this thread) while a
+/// sibling thread consumes its acks.
+fn follower_conn(stream: TcpStream, peer: SocketAddr, inner: Arc<ShipInner>) {
+    let _ = stream.set_nodelay(true);
+    let _ = stream.set_read_timeout(Some(HANDSHAKE_TIMEOUT));
+    let mut hello = [0u8; 16];
+    let mut rd = &stream;
+    if rd.read_exact(&mut hello).is_err() || &hello[0..8] != SHIP_MAGIC {
+        eprintln!("replicate: {peer}: bad handshake, dropping");
+        return;
+    }
+    let last_epoch = u64::from_le_bytes(hello[8..16].try_into().unwrap());
+    let mut reply = Vec::with_capacity(24);
+    reply.extend_from_slice(SHIP_MAGIC);
+    reply.extend_from_slice(&inner.num_vertices.to_le_bytes());
+    reply.extend_from_slice(&inner.base.to_le_bytes());
+    if (&stream).write_all(&reply).is_err() {
+        return;
+    }
+    if last_epoch < inner.base {
+        // behind the horizon: header already told the follower why
+        eprintln!(
+            "replicate: {peer}: follower at epoch {last_epoch} is behind the \
+             replication horizon ({}), dropping — bootstrap it from a data-dir copy",
+            inner.base
+        );
+        return;
+    }
+    let _ = stream.set_read_timeout(None);
+    let slot = Arc::new(FollowerSlot {
+        peer,
+        acked: AtomicU64::new(last_epoch),
+        alive: AtomicBool::new(true),
+        stream: match stream.try_clone() {
+            Ok(s) => s,
+            Err(e) => {
+                eprintln!("replicate: {peer}: clone: {e}");
+                return;
+            }
+        },
+    });
+    inner.followers.lock().unwrap().push(Arc::clone(&slot));
+    inner.followers_gauge.inc(1);
+    inner.refresh_lag();
+    eprintln!("replicate: follower {peer} joined at epoch {last_epoch}");
+
+    // ack reader sibling
+    let ack_stream = match stream.try_clone() {
+        Ok(s) => s,
+        Err(_) => return,
+    };
+    let ack_inner = Arc::clone(&inner);
+    let ack_slot = Arc::clone(&slot);
+    let ack_thread = std::thread::Builder::new()
+        .name(format!("ship-ack-{peer}"))
+        .spawn(move || ack_loop(ack_stream, ack_slot, ack_inner));
+
+    send_loop(&stream, &slot, &inner, last_epoch);
+
+    slot.alive.store(false, Ordering::Release);
+    let _ = stream.shutdown(Shutdown::Both);
+    if let Ok(t) = ack_thread {
+        let _ = t.join();
+    }
+    inner
+        .followers
+        .lock()
+        .unwrap()
+        .retain(|f| !Arc::ptr_eq(f, &slot));
+    inner.followers_gauge.dec(1);
+    inner.refresh_lag();
+    eprintln!(
+        "replicate: follower {peer} left at acked epoch {}",
+        slot.acked.load(Ordering::Relaxed)
+    );
+}
+
+/// Stream backlog frames to one follower, waiting on the publish condvar
+/// when caught up.
+fn send_loop(stream: &TcpStream, slot: &FollowerSlot, inner: &ShipInner, start_after: u64) {
+    let mut next_idx = (start_after - inner.base) as usize;
+    let mut out = stream;
+    loop {
+        let chunk: Vec<Arc<[u8]>> = {
+            let mut log = inner.log.lock().unwrap();
+            while log.0.len() <= next_idx {
+                if inner.shutdown.load(Ordering::Acquire) || !slot.alive.load(Ordering::Acquire) {
+                    return;
+                }
+                log = inner.cond.wait(log).unwrap();
+            }
+            log.0[next_idx..].to_vec()
+        };
+        let tip = inner.tip.load(Ordering::Acquire);
+        for payload in &chunk {
+            let t_send = Instant::now();
+            let mut frame = Vec::with_capacity(16 + payload.len());
+            frame.extend_from_slice(&tip.to_le_bytes());
+            frame.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+            frame.extend_from_slice(&crc32(payload).to_le_bytes());
+            frame.extend_from_slice(payload);
+            if out.write_all(&frame).is_err() {
+                slot.alive.store(false, Ordering::Release);
+                return;
+            }
+            inner.send_hist.record_duration(t_send.elapsed());
+            inner.records_shipped.fetch_add(1, Ordering::Relaxed);
+            inner
+                .bytes_shipped
+                .fetch_add(payload.len() as u64, Ordering::Relaxed);
+        }
+        if out.flush().is_err() {
+            slot.alive.store(false, Ordering::Release);
+            return;
+        }
+        next_idx += chunk.len();
+    }
+}
+
+/// Consume one follower's acks, updating its slot and the lag gauge.
+fn ack_loop(stream: TcpStream, slot: Arc<FollowerSlot>, inner: Arc<ShipInner>) {
+    let mut rd = &stream;
+    let mut buf = [0u8; 8];
+    loop {
+        if rd.read_exact(&mut buf).is_err() {
+            slot.alive.store(false, Ordering::Release);
+            inner.cond.notify_all(); // unblock the sender so it can exit
+            return;
+        }
+        let epoch = u64::from_le_bytes(buf);
+        slot.acked.store(epoch, Ordering::Release);
+        // ack latency: measured against the publish instant, recorded only
+        // for epochs still in the clock window
+        let published_at = {
+            let clock = inner.ack_clock.lock().unwrap();
+            clock.iter().find(|(e, _)| *e == epoch).map(|(_, t)| *t)
+        };
+        if let Some(t) = published_at {
+            inner.ack_hist.record_duration(t.elapsed());
+        }
+        inner.refresh_lag();
+    }
+}
+
+/// The follower side of the replication stream: handshake on connect, then
+/// a blocking frame iterator plus an ack writer. The caller (the replica
+/// service) owns the apply loop; this type only speaks the wire format.
+pub struct ShipReader {
+    stream: TcpStream,
+    /// The primary's vertex universe, from the handshake — the follower's
+    /// engine must match or replayed vertex ids would be meaningless.
+    pub num_vertices: u64,
+    /// The primary's replication horizon: its backlog starts after this
+    /// epoch.
+    pub base_epoch: u64,
+}
+
+/// A cloned handle that can abort a blocked [`ShipReader::next_frame`]
+/// from another thread (the `PROMOTE` path).
+pub struct ShipAbort {
+    stream: TcpStream,
+}
+
+impl ShipAbort {
+    /// Close both directions of the stream; the blocked reader observes
+    /// EOF and returns `Ok(None)`.
+    pub fn abort(&self) {
+        let _ = self.stream.shutdown(Shutdown::Both);
+    }
+}
+
+impl ShipReader {
+    /// Connect to a primary's replication listener and handshake,
+    /// announcing that every epoch up to `last_epoch` is already applied
+    /// locally. Fails when the primary's universe size or replication
+    /// horizon is incompatible.
+    pub fn connect(addr: &str, last_epoch: u64) -> Result<ShipReader, String> {
+        let stream = TcpStream::connect(addr).map_err(|e| format!("follow {addr}: {e}"))?;
+        let _ = stream.set_nodelay(true);
+        let mut hello = Vec::with_capacity(16);
+        hello.extend_from_slice(SHIP_MAGIC);
+        hello.extend_from_slice(&last_epoch.to_le_bytes());
+        (&stream)
+            .write_all(&hello)
+            .map_err(|e| format!("follow {addr}: handshake write: {e}"))?;
+        let mut reply = [0u8; 24];
+        (&stream)
+            .read_exact(&mut reply)
+            .map_err(|e| format!("follow {addr}: handshake read: {e}"))?;
+        if &reply[0..8] != SHIP_MAGIC {
+            return Err(format!("follow {addr}: not a skipper replication listener"));
+        }
+        let num_vertices = u64::from_le_bytes(reply[8..16].try_into().unwrap());
+        let base_epoch = u64::from_le_bytes(reply[16..24].try_into().unwrap());
+        if last_epoch < base_epoch {
+            return Err(format!(
+                "follow {addr}: this follower is at epoch {last_epoch} but the primary's \
+                 replication horizon starts after epoch {base_epoch} — bootstrap the follower \
+                 from a copy of the primary's data dir first"
+            ));
+        }
+        Ok(ShipReader { stream, num_vertices, base_epoch })
+    }
+
+    /// A handle that can unblock [`next_frame`](Self::next_frame) from
+    /// another thread by closing the stream.
+    pub fn abort_handle(&self) -> Result<ShipAbort, String> {
+        Ok(ShipAbort {
+            stream: self.stream.try_clone().map_err(|e| format!("clone: {e}"))?,
+        })
+    }
+
+    /// Block for the next frame. `Ok(None)` means the stream ended cleanly
+    /// at a frame boundary — the primary died or shut down; everything
+    /// applied so far is a contiguous prefix of its log. `Err` means a
+    /// malformed frame (bad CRC, oversized or truncated payload), which a
+    /// TCP stream should never deliver.
+    pub fn next_frame(&mut self) -> Result<Option<ShipFrame>, String> {
+        let mut head = [0u8; 16];
+        let mut got = 0usize;
+        while got < head.len() {
+            match (&self.stream).read(&mut head[got..]) {
+                Ok(0) if got == 0 => return Ok(None),
+                Ok(0) => return Err("replication stream truncated mid-frame".into()),
+                Ok(n) => got += n,
+                Err(ref e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                Err(_) if got == 0 => return Ok(None), // closed under us (abort/kill)
+                Err(e) => return Err(format!("replication stream read: {e}")),
+            }
+        }
+        let tip = u64::from_le_bytes(head[0..8].try_into().unwrap());
+        let len = u32::from_le_bytes(head[8..12].try_into().unwrap());
+        let crc = u32::from_le_bytes(head[12..16].try_into().unwrap());
+        if len > MAX_FRAME_PAYLOAD {
+            return Err(format!("replication frame payload of {len} bytes exceeds cap"));
+        }
+        let mut payload = vec![0u8; len as usize];
+        (&self.stream)
+            .read_exact(&mut payload)
+            .map_err(|e| format!("replication stream payload: {e}"))?;
+        if crc32(&payload) != crc {
+            return Err("replication frame CRC mismatch".into());
+        }
+        match decode_payload(&payload) {
+            Some(rec) => Ok(Some(ShipFrame { tip, rec })),
+            None => Err("replication frame payload undecodable".into()),
+        }
+    }
+
+    /// Ack one applied epoch back to the primary. Errors are reported but
+    /// non-fatal to the caller's replay loop: a dead primary can no longer
+    /// hear acks, yet the applied state is still exactly what promotion
+    /// needs.
+    pub fn ack(&mut self, epoch: u64) -> Result<(), String> {
+        (&self.stream)
+            .write_all(&epoch.to_le_bytes())
+            .map_err(|e| format!("replication ack: {e}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn loopback_available() -> bool {
+        std::net::TcpListener::bind("127.0.0.1:0").is_ok()
+    }
+
+    #[test]
+    fn ship_roundtrip_frames_and_acks() {
+        if !loopback_available() {
+            eprintln!("skipping ship_roundtrip_frames_and_acks: no loopback");
+            return;
+        }
+        let reg = metrics::Registry::new();
+        let shipper = Shipper::bind("127.0.0.1:0", 64, 0, &reg).unwrap();
+        let addr = shipper.local_addr().to_string();
+        let mut reader = ShipReader::connect(&addr, 0).unwrap();
+        assert_eq!(reader.num_vertices, 64);
+        assert_eq!(reader.base_epoch, 0);
+        shipper.publish(1, &[Update::Insert(0, 1), Update::Delete(2, 3)]);
+        shipper.publish(2, &[Update::Insert(4, 5)]);
+        let f1 = reader.next_frame().unwrap().unwrap();
+        assert_eq!(f1.rec.epoch, 1);
+        assert_eq!(f1.rec.updates, vec![Update::Insert(0, 1), Update::Delete(2, 3)]);
+        reader.ack(1).unwrap();
+        let f2 = reader.next_frame().unwrap().unwrap();
+        assert_eq!(f2.rec.epoch, 2);
+        assert_eq!(f2.tip, 2);
+        reader.ack(2).unwrap();
+        // acks drain the lag
+        let deadline = Instant::now() + Duration::from_secs(5);
+        loop {
+            let s = shipper.stats();
+            if s.acked == 2 && s.followers == 1 {
+                assert_eq!(s.lag_epochs, 0);
+                assert_eq!(s.lag_bytes, 0);
+                break;
+            }
+            assert!(Instant::now() < deadline, "acks never reached the shipper: {s:?}");
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        // shipper shutdown = clean EOF on the follower
+        shipper.shutdown();
+        assert_eq!(reader.next_frame().unwrap(), None);
+    }
+
+    #[test]
+    fn late_joiner_catches_up_from_backlog() {
+        if !loopback_available() {
+            eprintln!("skipping late_joiner_catches_up_from_backlog: no loopback");
+            return;
+        }
+        let reg = metrics::Registry::new();
+        let shipper = Shipper::bind("127.0.0.1:0", 32, 0, &reg).unwrap();
+        for e in 1..=5u64 {
+            shipper.publish(e, &[Update::Insert(e as u32, e as u32 + 6)]);
+        }
+        let addr = shipper.local_addr().to_string();
+        let mut reader = ShipReader::connect(&addr, 0).unwrap();
+        for e in 1..=5u64 {
+            let f = reader.next_frame().unwrap().unwrap();
+            assert_eq!(f.rec.epoch, e);
+            reader.ack(e).unwrap();
+        }
+        // a partially caught-up joiner resumes mid-backlog
+        let mut mid = ShipReader::connect(&addr, 3).unwrap();
+        let f = mid.next_frame().unwrap().unwrap();
+        assert_eq!(f.rec.epoch, 4, "stream resumes after the announced epoch");
+    }
+
+    #[test]
+    fn behind_horizon_follower_is_refused() {
+        if !loopback_available() {
+            eprintln!("skipping behind_horizon_follower_is_refused: no loopback");
+            return;
+        }
+        let reg = metrics::Registry::new();
+        // primary booted at epoch 10: backlog starts at 11
+        let shipper = Shipper::bind("127.0.0.1:0", 32, 10, &reg).unwrap();
+        let addr = shipper.local_addr().to_string();
+        let err = match ShipReader::connect(&addr, 4) {
+            Ok(_) => panic!("behind-horizon follower must be refused"),
+            Err(e) => e,
+        };
+        assert!(err.contains("horizon"), "{err}");
+        // a caught-up follower is fine
+        let r = ShipReader::connect(&addr, 10).unwrap();
+        assert_eq!(r.base_epoch, 10);
+    }
+
+    #[test]
+    fn abort_handle_unblocks_a_waiting_reader() {
+        if !loopback_available() {
+            eprintln!("skipping abort_handle_unblocks_a_waiting_reader: no loopback");
+            return;
+        }
+        let reg = metrics::Registry::new();
+        let shipper = Shipper::bind("127.0.0.1:0", 16, 0, &reg).unwrap();
+        let addr = shipper.local_addr().to_string();
+        let mut reader = ShipReader::connect(&addr, 0).unwrap();
+        let abort = reader.abort_handle().unwrap();
+        let t = std::thread::spawn(move || reader.next_frame());
+        std::thread::sleep(Duration::from_millis(50));
+        abort.abort();
+        let out = t.join().unwrap().unwrap();
+        assert_eq!(out, None, "aborted reader sees a clean end of stream");
+        drop(shipper);
+    }
+}

@@ -194,7 +194,11 @@ fn read_exact_or_eof(f: &mut File, buf: &mut [u8]) -> ReadOutcome {
     ReadOutcome::Full
 }
 
-fn encode_payload(epoch: u64, updates: &[Update]) -> Vec<u8> {
+/// Encode one epoch batch as a WAL record payload (the bytes covered by
+/// the record CRC). Shared with the replication shipper, whose stream
+/// frames carry exactly this encoding so followers replay what a local
+/// recovery would.
+pub(crate) fn encode_payload(epoch: u64, updates: &[Update]) -> Vec<u8> {
     let mut buf = Vec::with_capacity(12 + 9 * updates.len());
     buf.extend_from_slice(&epoch.to_le_bytes());
     buf.extend_from_slice(&(updates.len() as u32).to_le_bytes());
@@ -210,7 +214,10 @@ fn encode_payload(epoch: u64, updates: &[Update]) -> Vec<u8> {
     buf
 }
 
-fn decode_payload(payload: &[u8]) -> Option<WalEpoch> {
+/// Decode a WAL record payload back into its epoch batch; `None` means
+/// the bytes are not a well-formed record (wrong length arithmetic or an
+/// unknown op byte). The inverse of [`encode_payload`].
+pub(crate) fn decode_payload(payload: &[u8]) -> Option<WalEpoch> {
     if payload.len() < 12 {
         return None;
     }
@@ -711,6 +718,104 @@ mod tests {
         drop(wal);
         let (_, replay) = Wal::open(&dir, opts).unwrap();
         assert_eq!(replay.len(), 20, "replay crosses segment boundaries");
+    }
+
+    #[test]
+    fn empty_group_append_is_a_noop() {
+        let dir = fresh_dir("group_empty");
+        // fsync on: if the empty group reached sync_if_configured it would
+        // still be "legal", but the contract is stronger — no record, no
+        // fsync, no observable effect at all
+        let opts = WalOptions { fsync: true, ..WalOptions::default() };
+        let (mut wal, _) = Wal::open(&dir, opts).unwrap();
+        wal.append_epoch(1, &batch(1)).unwrap();
+        let seg = segment_path(&dir, 1);
+        let len_before = std::fs::metadata(&seg).unwrap().len();
+        let mtime_before = std::fs::metadata(&seg).unwrap().modified().unwrap();
+        assert_eq!(wal.append_epochs(&[]).unwrap(), 0);
+        assert_eq!(wal.epochs_appended(), 1, "no record appended");
+        assert_eq!(wal.bytes_appended(), len_before - 8, "no bytes appended");
+        assert_eq!(
+            std::fs::metadata(&seg).unwrap().len(),
+            len_before,
+            "segment untouched by an empty group"
+        );
+        assert_eq!(
+            std::fs::metadata(&seg).unwrap().modified().unwrap(),
+            mtime_before,
+            "empty group must not even touch (fsync) the segment"
+        );
+        drop(wal);
+        let (_, replay) = Wal::open(&dir, opts).unwrap();
+        assert_eq!(replay.len(), 1);
+    }
+
+    #[test]
+    fn group_spanning_rotation_is_byte_identical_to_solo_appends() {
+        let (solo, grouped) = (fresh_dir("rotspan_solo"), fresh_dir("rotspan_group"));
+        let opts = WalOptions { segment_bytes: 128, fsync: true, ..WalOptions::default() };
+        {
+            let (mut wal, _) = Wal::open(&solo, opts).unwrap();
+            for e in 1..=20u64 {
+                wal.append_epoch(e, &batch(e)).unwrap();
+            }
+            assert!(wal.num_segments() > 1, "tiny segment limit must rotate");
+        }
+        let segments = {
+            let (mut wal, _) = Wal::open(&grouped, opts).unwrap();
+            let batches: Vec<Vec<Update>> = (1..=20u64).map(batch).collect();
+            let group: Vec<(u64, &[Update])> = batches
+                .iter()
+                .enumerate()
+                .map(|(i, b)| (i as u64 + 1, b.as_slice()))
+                .collect();
+            wal.append_epochs(&group).unwrap();
+            assert!(wal.num_segments() > 1, "group must span a rotation");
+            wal.num_segments() as u64
+        };
+        // rotation points are a function of bytes alone, so every segment
+        // file must match its solo twin byte for byte
+        for seq in 1..=segments {
+            assert_eq!(
+                std::fs::read(segment_path(&solo, seq)).unwrap(),
+                std::fs::read(segment_path(&grouped, seq)).unwrap(),
+                "segment {seq} diverges between solo and grouped appends"
+            );
+        }
+        let (_, replay) = Wal::open(&grouped, opts).unwrap();
+        assert_eq!(replay.len(), 20);
+    }
+
+    #[test]
+    fn torn_tail_inside_group_truncates_to_last_whole_record() {
+        let dir = fresh_dir("group_torn");
+        let opts = WalOptions { fsync: true, ..WalOptions::default() };
+        {
+            let (mut wal, _) = Wal::open(&dir, opts).unwrap();
+            let batches: Vec<Vec<Update>> = (1..=5u64).map(batch).collect();
+            let group: Vec<(u64, &[Update])> = batches
+                .iter()
+                .enumerate()
+                .map(|(i, b)| (i as u64 + 1, b.as_slice()))
+                .collect();
+            wal.append_epochs(&group).unwrap();
+        }
+        // tear the file mid-way through record 4 of the group: records 1-3
+        // stay whole, 4 becomes a torn tail, 5 is gone entirely
+        let seg = segment_path(&dir, 1);
+        let record = 8 + 12 + 9 * batch(1).len() as u64; // prefix + payload
+        let torn_at = 8 + 3 * record + record / 2;
+        let f = OpenOptions::new().write(true).open(&seg).unwrap();
+        f.set_len(torn_at).unwrap();
+        drop(f);
+        let (mut wal, replay) = Wal::open(&dir, opts).unwrap();
+        assert_eq!(replay.len(), 3, "only the whole records before the tear replay");
+        assert_eq!(replay.last().unwrap().epoch, 3);
+        // appends resume on the clean boundary left by the truncation
+        wal.append_epoch(4, &batch(4)).unwrap();
+        drop(wal);
+        let (_, replay) = Wal::open(&dir, opts).unwrap();
+        assert_eq!(replay.iter().map(|r| r.epoch).collect::<Vec<_>>(), vec![1, 2, 3, 4]);
     }
 
     #[test]

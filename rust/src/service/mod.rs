@@ -26,6 +26,10 @@
 //!   router/flusher coordinator pair, and per-epoch telemetry (repair
 //!   fraction, matched count, p50/p99 batch latency, per-phase wall times,
 //!   spawn-vs-run and route-overlap decompositions);
+//! * [`replica`] — the warm-standby follower: replays a primary's shipped
+//!   WAL stream (see [`crate::persist::ship`]) through its own engine,
+//!   serves reads lock-free, and takes over as a writable primary on
+//!   `PROMOTE`;
 //! * this module — the two coordination primitives they share:
 //!   [`ShardedQueue`], the front-end fan-in built from
 //!   [`BoundedQueue`](crate::par::pump::BoundedQueue)s (per-shard
@@ -44,11 +48,13 @@
 //! stalling an in-flight epoch.
 
 pub mod protocol;
+pub mod replica;
 pub mod server;
 
 use crate::par::pump::BoundedQueue;
 use std::sync::Arc;
 
+pub use replica::{serve_follower_lines, serve_follower_tcp, Replica, ReplicaSummary};
 pub use server::{serve_lines, serve_tcp, ServiceConfig, ServiceSummary};
 
 /// One-shot reply slot: the engine thread fulfills, the client thread

@@ -33,6 +33,9 @@
 //!                          line embedding a Chrome trace-event document.
 //!                          Empty unless the server runs with tracing on
 //!                          (`serve --trace`)
+//! PROMOTE                  failover: turn a follower (`serve --follow`)
+//!                          into a writable primary. Errors on a server
+//!                          that is not a replicating follower
 //! QUIT                     close this connection
 //! SHUTDOWN                 stop the whole server: drain, apply remaining
 //!                          updates, write a final snapshot when
@@ -78,6 +81,8 @@ pub enum Command {
     /// Span events of the last `n` engine epochs (`0` = all recorded) as a
     /// Chrome trace-event document.
     Trace(u64),
+    /// Failover: promote a replicating follower to a writable primary.
+    Promote,
     /// Close this connection.
     Quit,
     /// Stop the whole server (graceful drain; final snapshot when durable).
@@ -157,6 +162,7 @@ impl Command {
                     no_operands(&mut it, "TRACE", Command::Trace(n))?
                 }
             },
+            "PROMOTE" => no_operands(&mut it, "PROMOTE", Command::Promote)?,
             "QUIT" => no_operands(&mut it, "QUIT", Command::Quit)?,
             "SHUTDOWN" => no_operands(&mut it, "SHUTDOWN", Command::Shutdown)?,
             "CRASH" => match it.next() {
@@ -323,6 +329,54 @@ pub struct StatsSnapshot {
     /// WAL epochs recovery replayed at boot (0 on a fresh start or a clean
     /// snapshot-only restart).
     pub recovery_replayed: u64,
+    /// Replication role and lag telemetry — `None` when the server neither
+    /// replicates out (`--replicate-addr`) nor follows (`--follow`), in
+    /// which case `STATS` omits the `replica_*` fields entirely.
+    pub replica: Option<ReplicaStats>,
+}
+
+/// The replication role a serving process is in.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ReplicaRole {
+    /// A writable primary shipping its WAL to followers.
+    Primary,
+    /// A read-only standby replaying the primary's stream.
+    Follower,
+    /// A follower promoted to writable primary by `PROMOTE`.
+    Promoted,
+}
+
+impl ReplicaRole {
+    /// The wire spelling rendered into `"replica_role"`.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            ReplicaRole::Primary => "primary",
+            ReplicaRole::Follower => "follower",
+            ReplicaRole::Promoted => "promoted",
+        }
+    }
+}
+
+/// The `REPLICA` section of `STATS`, rendered as flat `replica_*` fields.
+/// On a primary, `acked_epoch`/lag describe the slowest live follower; on
+/// a follower they describe its own position against the last tip the
+/// stream carried.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ReplicaStats {
+    /// This process's replication role.
+    pub role: ReplicaRole,
+    /// Live follower connections (always 0 on a follower).
+    pub followers: u64,
+    /// Newest committed epoch the stream knows about: the primary's own
+    /// tip, or the tip carried by the last frame a follower received.
+    pub tip_epoch: u64,
+    /// Newest fully acknowledged epoch: min over live followers on a
+    /// primary, the locally applied epoch on a follower.
+    pub acked_epoch: u64,
+    /// `tip_epoch - acked_epoch`.
+    pub lag_epochs: u64,
+    /// Encoded record bytes in flight between tip and ack.
+    pub lag_bytes: u64,
 }
 
 /// A reply ready to be rendered onto the wire.
@@ -374,6 +428,13 @@ pub enum Response {
     /// trace-event document (plus the protocol's `ok`/`op` fields, which
     /// trace viewers ignore).
     Trace(String),
+    /// Reply to `PROMOTE` on a follower: the standby is now a writable
+    /// primary.
+    Promoted {
+        /// Highest contiguous epoch the follower had applied at promotion
+        /// — the epoch it resumes writing from.
+        epoch: u64,
+    },
     /// Reply to `QUIT`.
     Bye,
     /// Reply to `SHUTDOWN`.
@@ -463,6 +524,14 @@ impl Response {
                     .u64("wal_bytes", s.wal_bytes)
                     .u64("last_snapshot_epoch", s.last_snapshot_epoch)
                     .u64("recovery_replayed", s.recovery_replayed);
+                if let Some(r) = &s.replica {
+                    j.str("replica_role", r.role.as_str())
+                        .u64("replica_followers", r.followers)
+                        .u64("replica_tip_epoch", r.tip_epoch)
+                        .u64("replica_acked_epoch", r.acked_epoch)
+                        .u64("replica_lag_epochs", r.lag_epochs)
+                        .u64("replica_lag_bytes", r.lag_bytes);
+                }
                 if let Some(maximal) = s.maximal {
                     j.bool("maximal", maximal);
                 }
@@ -474,6 +543,9 @@ impl Response {
                     .u64("live_edges", *live_edges)
                     .u64("matched", *matched_vertices as u64)
                     .bool("accepted", *accepted);
+            }
+            Response::Promoted { epoch } => {
+                j.bool("ok", true).str("op", "promote").u64("epoch", *epoch);
             }
             Response::Bye => {
                 j.bool("ok", true).str("op", "bye");
@@ -527,6 +599,8 @@ mod tests {
         );
         assert!(Command::parse("STATS quick").is_err());
         assert!(Command::parse("STATS full now").is_err());
+        assert_eq!(Command::parse("promote").unwrap(), Some(Command::Promote));
+        assert!(Command::parse("PROMOTE now").is_err());
         assert_eq!(Command::parse("QUIT").unwrap(), Some(Command::Quit));
         assert_eq!(Command::parse("SHUTDOWN").unwrap(), Some(Command::Shutdown));
         assert_eq!(Command::parse("SNAPSHOT").unwrap(), Some(Command::Snapshot));
@@ -622,6 +696,44 @@ mod tests {
         let off = Response::Stats(StatsSnapshot::default()).render();
         assert!(off.contains(r#""durable":false"#), "{off}");
         assert!(off.contains(r#""wal_epochs":0"#), "{off}");
+    }
+
+    #[test]
+    fn stats_render_replica_section_only_when_replicating() {
+        let s = Response::Stats(StatsSnapshot {
+            replica: Some(ReplicaStats {
+                role: ReplicaRole::Follower,
+                followers: 0,
+                tip_epoch: 12,
+                acked_epoch: 9,
+                lag_epochs: 3,
+                lag_bytes: 250,
+            }),
+            ..Default::default()
+        })
+        .render();
+        assert!(s.contains(r#""replica_role":"follower""#), "{s}");
+        assert!(s.contains(r#""replica_followers":0"#), "{s}");
+        assert!(s.contains(r#""replica_tip_epoch":12"#), "{s}");
+        assert!(s.contains(r#""replica_acked_epoch":9"#), "{s}");
+        assert!(s.contains(r#""replica_lag_epochs":3"#), "{s}");
+        assert!(s.contains(r#""replica_lag_bytes":250"#), "{s}");
+        let p = Response::Stats(StatsSnapshot {
+            replica: Some(ReplicaStats {
+                role: ReplicaRole::Promoted,
+                followers: 0,
+                tip_epoch: 12,
+                acked_epoch: 12,
+                lag_epochs: 0,
+                lag_bytes: 0,
+            }),
+            ..Default::default()
+        })
+        .render();
+        assert!(p.contains(r#""replica_role":"promoted""#), "{p}");
+        // non-replicating servers omit the section entirely
+        let off = Response::Stats(StatsSnapshot::default()).render();
+        assert!(!off.contains("replica_"), "{off}");
     }
 
     #[test]

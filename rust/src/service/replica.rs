@@ -1,0 +1,780 @@
+//! Warm-standby follower: replay a primary's shipped WAL stream through a
+//! real engine, serve reads, survive the primary's death, take over on
+//! `PROMOTE`.
+//!
+//! A follower is a full engine plus (optionally) its own durability bundle
+//! — not a passive log sink. Every frame the [`ShipReader`] delivers is
+//! handled exactly like the primary's flusher handles a committed epoch:
+//! append to the local WAL first (when a `--data-dir` is configured), then
+//! apply through [`ShardedDynamicMatcher::apply_epoch`], then ack. The
+//! engine is deterministic for a fixed config, so a follower built with the
+//! same shard count as its primary converges to bit-identical `partner[]`
+//! state — `QUERY` answers on the standby equal the primary's at quiesce.
+//!
+//! ## Failover invariant
+//!
+//! Frames carry contiguous epochs and the follower enforces the same
+//! epoch-contiguity invariant recovery does (a gap is a loud error, never
+//! silently skipped), so "the follower with the longest contiguous log" is
+//! simply the one with the highest applied epoch. [`Replica::promote`]
+//! flips the standby to a writable primary: the replay loop is aborted,
+//! post-promotion epochs append to the follower's own WAL and apply under
+//! the same serialization lock the replay path used, resuming the epoch
+//! sequence exactly where the stream stopped — zero acked epochs lost.
+//!
+//! ## Lag accounting
+//!
+//! Each frame carries the primary's tip epoch at send time;
+//! `tip - applied` is the follower's instantaneous lag, exported as the
+//! `skipper_replica_lag_epochs` gauge (the primary exports the same gauge
+//! from its side: tip minus its slowest live follower's ack).
+
+use super::protocol::{Command, ReplicaRole, ReplicaStats, Response, StatsSnapshot};
+use super::server::{open_durability, ServiceConfig};
+use crate::dynamic::ShardedDynamicMatcher;
+use crate::dynamic::Update;
+use crate::obs::{metrics, trace};
+use crate::persist::ship::{ShipAbort, ShipReader};
+use crate::persist::snapshot::SnapshotData;
+use crate::persist::DurableService;
+use crate::util::json::Json;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+/// What a follower front-end reports when it returns.
+#[derive(Clone, Debug)]
+pub struct ReplicaSummary {
+    /// Engine epochs applied (replayed from the stream, plus any written
+    /// after promotion).
+    pub epochs: u64,
+    /// Live undirected edges at exit.
+    pub live_edges: u64,
+    /// Matched vertices at exit.
+    pub matched_vertices: usize,
+    /// Final maximality audit verdict over the live set.
+    pub maximal: bool,
+    /// True when this follower was promoted during the session.
+    pub promoted: bool,
+    /// Epoch of the final snapshot (0 when volatile).
+    pub last_snapshot_epoch: u64,
+}
+
+/// Repair-fraction bookkeeping for `STATS` (mirrors the primary's fields;
+/// a plain mutex — updated once per applied epoch, read on demand).
+#[derive(Default)]
+struct RepairFracs {
+    last: f64,
+    sum: f64,
+    epochs: u64,
+}
+
+/// A warm standby: an engine fed by a replication stream, promotable to a
+/// writable primary. Shareable across threads (`&Replica` is all any front
+/// end or the replay loop needs).
+pub struct Replica {
+    engine: ShardedDynamicMatcher,
+    /// The follower's own durability bundle (`--data-dir`): shipped epochs
+    /// are WAL-logged before apply, snapshots run on the configured
+    /// cadence, and a restart recovers then resumes the stream from its
+    /// recovered epoch.
+    dur: Mutex<Option<DurableService>>,
+    /// The connected stream, consumed by [`replay_loop`](Self::replay_loop).
+    reader: Mutex<Option<ShipReader>>,
+    /// Closes the stream socket from another thread (promotion/shutdown).
+    abort: Mutex<Option<ShipAbort>>,
+    /// Serializes epoch applies: stream replay vs post-promotion writes.
+    apply_lock: Mutex<()>,
+    promoted: AtomicBool,
+    /// True from connect until the replay loop exits (EOF, error, abort).
+    replaying: AtomicBool,
+    /// First replay error (CRC mismatch, gapped history, apply failure).
+    replay_error: Mutex<Option<String>>,
+    /// The primary's tip epoch from the most recent frame.
+    tip_seen: AtomicU64,
+    /// The primary's replication horizon from the handshake.
+    base_epoch: u64,
+    registry: metrics::Registry,
+    lag_gauge: std::sync::Arc<metrics::Gauge>,
+    applied_counter: std::sync::Arc<metrics::Counter>,
+    inserts: std::sync::Arc<metrics::Counter>,
+    deletes: std::sync::Arc<metrics::Counter>,
+    repair_edges: std::sync::Arc<metrics::Counter>,
+    apply_hist: std::sync::Arc<metrics::Histogram>,
+    fracs: Mutex<RepairFracs>,
+}
+
+impl Replica {
+    /// Build the follower engine (recovering from `cfg.data_dir` when set),
+    /// connect to the primary's replication listener at `primary`, and
+    /// handshake. The stream resumes right after the recovered epoch; a
+    /// follower that is behind the primary's replication horizon is
+    /// refused at connect (re-seed it from a data-dir copy).
+    pub fn new(cfg: &ServiceConfig, primary: &str) -> Result<Replica, String> {
+        let engine = ShardedDynamicMatcher::with_exec_layout_pin(
+            cfg.num_vertices,
+            cfg.threads,
+            cfg.engine_shards,
+            cfg.shard_exec(),
+            crate::dynamic::AdjLayout::default(),
+            cfg.pin,
+        );
+        let dur = open_durability(cfg, &engine)?;
+        let reader = ShipReader::connect(primary, engine.epochs_applied())?;
+        if reader.num_vertices as usize != cfg.num_vertices {
+            return Err(format!(
+                "follow {primary}: primary serves |V|={} but this follower was started \
+                 with --vertices {} — the universes must match",
+                reader.num_vertices, cfg.num_vertices
+            ));
+        }
+        let abort = reader.abort_handle()?;
+        let base_epoch = reader.base_epoch;
+        eprintln!(
+            "follow: replicating from {primary} starting after epoch {} (horizon {})",
+            engine.epochs_applied(),
+            base_epoch
+        );
+        let registry = metrics::Registry::new();
+        let lag_gauge = registry.gauge(
+            "skipper_replica_lag_epochs",
+            "Primary tip epochs not yet applied by this follower",
+        );
+        let applied_counter = registry.counter(
+            "skipper_replica_epochs_applied_total",
+            "Epochs replayed from the replication stream since connect",
+        );
+        let inserts = registry.counter(
+            "skipper_service_inserts_total",
+            "Insert updates received over the service lifetime",
+        );
+        let deletes = registry.counter(
+            "skipper_service_deletes_total",
+            "Delete updates received over the service lifetime",
+        );
+        let repair_edges = registry.counter(
+            "skipper_service_repair_edges_total",
+            "Edges re-examined by repair sweeps over the service lifetime",
+        );
+        let apply_hist = registry.histogram_secs(
+            "skipper_replica_apply_seconds",
+            "Wall time applying one replicated epoch through the engine",
+        );
+        Ok(Replica {
+            engine,
+            dur: Mutex::new(dur),
+            reader: Mutex::new(Some(reader)),
+            abort: Mutex::new(Some(abort)),
+            apply_lock: Mutex::new(()),
+            promoted: AtomicBool::new(false),
+            replaying: AtomicBool::new(true),
+            replay_error: Mutex::new(None),
+            tip_seen: AtomicU64::new(0),
+            base_epoch,
+            registry,
+            lag_gauge,
+            applied_counter,
+            inserts,
+            deletes,
+            repair_edges,
+            apply_hist,
+            fracs: Mutex::new(RepairFracs::default()),
+        })
+    }
+
+    /// Consume the replication stream until it ends (primary death or
+    /// shutdown: clean, the follower keeps serving), a malformed or gapped
+    /// frame arrives (loud error, replay stops), or [`promote`] aborts it.
+    /// Run this on its own thread; every other method works concurrently.
+    pub fn replay_loop(&self) {
+        let mut reader = match self.reader.lock().unwrap().take() {
+            Some(r) => r,
+            None => {
+                self.replaying.store(false, Ordering::Release);
+                return;
+            }
+        };
+        loop {
+            match reader.next_frame() {
+                Ok(Some(frame)) => {
+                    self.tip_seen.store(frame.tip, Ordering::Release);
+                    let applied = match self.apply_frame(frame.rec.epoch, &frame.rec.updates) {
+                        Ok(applied) => applied,
+                        Err(e) => {
+                            eprintln!("follow: replay stopped: {e}");
+                            *self.replay_error.lock().unwrap() = Some(e);
+                            break;
+                        }
+                    };
+                    if !applied {
+                        break; // promoted under us — stop consuming
+                    }
+                    // ack failures are non-fatal: a dead primary can no
+                    // longer hear us, but the applied state is exactly what
+                    // promotion needs
+                    let _ = reader.ack(frame.rec.epoch);
+                }
+                Ok(None) => {
+                    eprintln!(
+                        "follow: stream ended at epoch {} — standing by for promotion",
+                        self.engine.epochs_applied()
+                    );
+                    break;
+                }
+                Err(e) => {
+                    eprintln!("follow: replay stopped: {e}");
+                    *self.replay_error.lock().unwrap() = Some(e);
+                    break;
+                }
+            }
+        }
+        self.replaying.store(false, Ordering::Release);
+    }
+
+    /// WAL-log (when durable) and apply one shipped epoch. Returns
+    /// `Ok(false)` when the replica was promoted before the apply could
+    /// run — the frame is discarded, replay must stop.
+    fn apply_frame(&self, epoch: u64, updates: &[Update]) -> Result<bool, String> {
+        let _guard = self.apply_lock.lock().unwrap();
+        if self.promoted.load(Ordering::Acquire) {
+            return Ok(false);
+        }
+        let expect = self.engine.epochs_applied() + 1;
+        if epoch != expect {
+            return Err(format!(
+                "replication stream gapped history: got epoch {epoch}, expected {expect}"
+            ));
+        }
+        // WAL before apply — the same invariant the primary honors
+        let mut dur = self.dur.lock().unwrap();
+        if let Some(d) = dur.as_mut() {
+            d.log_epoch(epoch, updates)?;
+        }
+        let t0 = Instant::now();
+        let report = self.engine.apply_epoch(updates)?;
+        self.apply_hist.record_duration(t0.elapsed());
+        debug_assert_eq!(report.epoch, epoch);
+        if let Some(d) = dur.as_mut() {
+            d.after_epoch(&self.engine);
+        }
+        drop(dur);
+        self.applied_counter.inc();
+        self.inserts.add(report.inserts as u64);
+        self.deletes.add(report.deletes as u64);
+        self.repair_edges.add(report.repair_edges as u64);
+        {
+            let mut f = self.fracs.lock().unwrap();
+            f.last = report.repair_fraction();
+            f.sum += report.repair_fraction();
+            f.epochs += 1;
+        }
+        let tip = self.tip_seen.load(Ordering::Acquire);
+        self.lag_gauge.set(tip.saturating_sub(epoch));
+        Ok(true)
+    }
+
+    /// Highest contiguous epoch applied locally.
+    pub fn applied_epoch(&self) -> u64 {
+        self.engine.epochs_applied()
+    }
+
+    /// True until the replay loop exits (stream EOF, error, or abort).
+    pub fn replaying(&self) -> bool {
+        self.replaying.load(Ordering::Acquire)
+    }
+
+    /// The replay loop's terminal error, if it stopped on one.
+    pub fn replay_error(&self) -> Option<String> {
+        self.replay_error.lock().unwrap().clone()
+    }
+
+    /// Poll until at least `epoch` is applied, or `timeout` elapses.
+    /// Returns whether the target was reached — test and quiesce helper.
+    pub fn wait_applied(&self, epoch: u64, timeout: Duration) -> bool {
+        let deadline = Instant::now() + timeout;
+        loop {
+            if self.engine.epochs_applied() >= epoch {
+                return true;
+            }
+            if Instant::now() >= deadline || !self.replaying() {
+                return self.engine.epochs_applied() >= epoch;
+            }
+            std::thread::sleep(Duration::from_millis(1));
+        }
+    }
+
+    /// Promote this standby to a writable primary. Taken under the apply
+    /// lock, so an epoch mid-apply completes first; the replay loop is then
+    /// aborted and discards anything further. Returns the epoch the
+    /// promoted node resumes writing from. Idempotent.
+    pub fn promote(&self) -> u64 {
+        {
+            let _guard = self.apply_lock.lock().unwrap();
+            self.promoted.store(true, Ordering::Release);
+        }
+        self.disconnect();
+        // wait (bounded) for the replay loop to drain, so the returned
+        // epoch is final — it exits promptly: blocked reads were aborted,
+        // and the promoted flag stops any frame already in hand
+        let deadline = Instant::now() + Duration::from_secs(5);
+        while self.replaying() && Instant::now() < deadline {
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        let epoch = self.engine.epochs_applied();
+        self.lag_gauge.set(0);
+        eprintln!("follow: promoted to primary at epoch {epoch}");
+        epoch
+    }
+
+    /// True once [`promote`](Self::promote) has run.
+    pub fn is_promoted(&self) -> bool {
+        self.promoted.load(Ordering::Acquire)
+    }
+
+    /// Close the replication socket, unblocking the replay loop. Safe to
+    /// call repeatedly; used by promotion and front-end wind-down.
+    pub fn disconnect(&self) {
+        if let Some(a) = self.abort.lock().unwrap().take() {
+            a.abort();
+        }
+    }
+
+    /// Write one epoch on a **promoted** replica: WAL-log locally, apply,
+    /// snapshot on cadence — the promoted node is now the system of record.
+    pub fn apply_updates(
+        &self,
+        updates: &[Update],
+    ) -> Result<crate::dynamic::EpochReport, String> {
+        if !self.is_promoted() {
+            return Err("this follower is read-only until PROMOTE".into());
+        }
+        let _guard = self.apply_lock.lock().unwrap();
+        let epoch = self.engine.epochs_applied() + 1;
+        let mut dur = self.dur.lock().unwrap();
+        if let Some(d) = dur.as_mut() {
+            if !updates.is_empty() {
+                d.log_epoch(epoch, updates)?;
+            }
+        }
+        let report = self.engine.apply_epoch(updates)?;
+        if let Some(d) = dur.as_mut() {
+            d.after_epoch(&self.engine);
+        }
+        drop(dur);
+        self.inserts.add(report.inserts as u64);
+        self.deletes.add(report.deletes as u64);
+        self.repair_edges.add(report.repair_edges as u64);
+        {
+            let mut f = self.fracs.lock().unwrap();
+            f.last = report.repair_fraction();
+            f.sum += report.repair_fraction();
+            f.epochs += 1;
+        }
+        Ok(report)
+    }
+
+    /// Lock-free partner lookup from the engine's atomic `partner[]`.
+    pub fn partner(&self, v: crate::VertexId) -> Option<crate::VertexId> {
+        self.engine.partner(v)
+    }
+
+    /// Run the full O(|V|+|E_live|) maximality audit.
+    pub fn verify(&self) -> Result<(), String> {
+        self.engine.verify()
+    }
+
+    /// The engine under replication — read-only access for tests and
+    /// stats; all mutation goes through the replay loop or
+    /// [`apply_updates`](Self::apply_updates).
+    pub fn engine(&self) -> &ShardedDynamicMatcher {
+        &self.engine
+    }
+
+    /// Build the `STATS` snapshot for this replica (role `follower` or
+    /// `promoted`). On a follower, `replica_lag_bytes` is reported as 0:
+    /// byte-accurate lag needs the primary's backlog sizes, which only the
+    /// primary has — its own `STATS` reports both.
+    fn stats_snapshot(&self, audit: bool) -> StatsSnapshot {
+        let (durable, wal_epochs, wal_bytes, last_snapshot_epoch, recovery_replayed) =
+            match self.dur.lock().unwrap().as_ref() {
+                Some(d) => {
+                    let c = d.counters();
+                    (
+                        true,
+                        c.wal_epochs.load(Ordering::Relaxed),
+                        c.wal_bytes.load(Ordering::Relaxed),
+                        c.last_snapshot_epoch.load(Ordering::Relaxed),
+                        c.recovery_replayed.load(Ordering::Relaxed),
+                    )
+                }
+                None => (false, 0, 0, 0, 0),
+            };
+        let fracs = {
+            let f = self.fracs.lock().unwrap();
+            (f.last, if f.epochs > 0 { f.sum / f.epochs as f64 } else { 0.0 })
+        };
+        let applied = self.engine.epochs_applied();
+        let promoted = self.is_promoted();
+        let tip = if promoted {
+            applied
+        } else {
+            // before the first frame arrives the tip is unknown; report
+            // the applied epoch (lag 0) rather than a bogus negative
+            self.tip_seen.load(Ordering::Acquire).max(applied)
+        };
+        let pct = |p: f64| self.apply_hist.percentile(p) as f64 * 1e-6;
+        StatsSnapshot {
+            epochs: applied,
+            live_edges: self.engine.num_live_edges(),
+            matched_vertices: self.engine.matched_vertices(),
+            total_inserts: self.inserts.get(),
+            total_deletes: self.deletes.get(),
+            total_repair_edges: self.repair_edges.get(),
+            repair_frac_last: fracs.0,
+            repair_frac_mean: fracs.1,
+            p50_batch_ms: pct(50.0),
+            p99_batch_ms: pct(99.0),
+            p999_batch_ms: pct(99.9),
+            maximal: audit.then(|| self.engine.verify().is_ok()),
+            adjacency_bytes: self.engine.adjacency_bytes(),
+            engine_shards: self.engine.num_shards(),
+            pooled: self.engine.pooled(),
+            pipelined: false,
+            route_s: 0.0,
+            route_overlap_s: 0.0,
+            durable,
+            wal_epochs,
+            wal_bytes,
+            last_snapshot_epoch,
+            recovery_replayed,
+            replica: Some(ReplicaStats {
+                role: if promoted { ReplicaRole::Promoted } else { ReplicaRole::Follower },
+                followers: 0,
+                tip_epoch: tip,
+                acked_epoch: applied,
+                lag_epochs: tip.saturating_sub(applied),
+                lag_bytes: 0,
+            }),
+        }
+    }
+
+    /// The follower's `METRICS` exposition: the process-global registry
+    /// followed by this replica's instruments, one `# EOF`.
+    fn render_metrics(&self) -> String {
+        let mut text = metrics::global().render_prometheus();
+        let eof = "# EOF\n";
+        debug_assert!(text.ends_with(eof));
+        text.truncate(text.len() - eof.len());
+        text.push_str(&self.registry.render_prometheus());
+        text
+    }
+
+    /// Graceful wind-down: stop replaying, write a final snapshot when
+    /// durable, and report the terminal state.
+    fn finish(&self) -> ReplicaSummary {
+        self.disconnect();
+        let deadline = Instant::now() + Duration::from_secs(5);
+        while self.replaying() && Instant::now() < deadline {
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        let last_snapshot_epoch = match self.dur.lock().unwrap().take() {
+            Some(d) => d.shutdown(&self.engine),
+            None => 0,
+        };
+        ReplicaSummary {
+            epochs: self.engine.epochs_applied(),
+            live_edges: self.engine.num_live_edges(),
+            matched_vertices: self.engine.matched_vertices(),
+            maximal: self.engine.verify().is_ok(),
+            promoted: self.is_promoted(),
+            last_snapshot_epoch,
+        }
+    }
+}
+
+/// Serve one client over a line stream while the replica replays its
+/// primary in the background — `skipper-cli serve --follow` on a stdin
+/// pipe, and the CI failover smoke. Returns at stream end or
+/// `QUIT`/`SHUTDOWN`; a durable follower writes a final snapshot before
+/// returning.
+pub fn serve_follower_lines<R: BufRead, W: Write>(
+    cfg: &ServiceConfig,
+    primary: &str,
+    reader: R,
+    writer: &mut W,
+) -> Result<ReplicaSummary, String> {
+    let replica = Replica::new(cfg, primary)?;
+    std::thread::scope(|s| {
+        s.spawn(|| replica.replay_loop());
+        follower_conn(cfg, &replica, reader, writer);
+        replica.disconnect();
+    });
+    Ok(replica.finish())
+}
+
+/// Serve concurrent clients over TCP while replaying the primary. Binds
+/// `addr` (port 0 = ephemeral), invokes `on_ready` with the bound address,
+/// runs until a client sends `SHUTDOWN`.
+pub fn serve_follower_tcp(
+    cfg: &ServiceConfig,
+    primary: &str,
+    addr: &str,
+    on_ready: impl FnOnce(SocketAddr),
+) -> Result<ReplicaSummary, String> {
+    let listener = TcpListener::bind(addr).map_err(|e| format!("bind {addr}: {e}"))?;
+    listener
+        .set_nonblocking(true)
+        .map_err(|e| format!("nonblocking: {e}"))?;
+    let local = listener.local_addr().map_err(|e| format!("local_addr: {e}"))?;
+    on_ready(local);
+    let replica = Replica::new(cfg, primary)?;
+    let stop = AtomicBool::new(false);
+    // accepted sockets, so SHUTDOWN can unblock handlers parked in a read
+    let open_conns: Mutex<std::collections::HashMap<usize, TcpStream>> =
+        Mutex::new(std::collections::HashMap::new());
+    std::thread::scope(|s| {
+        s.spawn(|| replica.replay_loop());
+        let mut conn_id = 0usize;
+        while !stop.load(Ordering::Acquire) {
+            match listener.accept() {
+                Ok((stream, _peer)) => {
+                    conn_id += 1;
+                    let id = conn_id;
+                    match stream.try_clone() {
+                        Ok(clone) => {
+                            open_conns.lock().unwrap().insert(id, clone);
+                        }
+                        Err(_) => continue,
+                    }
+                    let replica = &replica;
+                    let stop = &stop;
+                    let open_conns = &open_conns;
+                    s.spawn(move || {
+                        let _ = stream.set_nonblocking(false);
+                        let _ = stream.set_nodelay(true);
+                        let reader = match stream.try_clone() {
+                            Ok(c) => BufReader::new(c),
+                            Err(_) => {
+                                open_conns.lock().unwrap().remove(&id);
+                                return;
+                            }
+                        };
+                        let mut out = stream;
+                        let outcome = follower_conn(cfg, replica, reader, &mut out);
+                        if outcome {
+                            stop.store(true, Ordering::Release);
+                            // wake every parked handler so the scope can join
+                            for c in open_conns.lock().unwrap().values() {
+                                let _ = c.shutdown(Shutdown::Both);
+                            }
+                        }
+                        open_conns.lock().unwrap().remove(&id);
+                    });
+                }
+                Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    if stop.load(Ordering::Acquire) {
+                        break;
+                    }
+                    std::thread::sleep(Duration::from_millis(20));
+                }
+                Err(e) => {
+                    eprintln!("follow accept: {e}");
+                    break;
+                }
+            }
+        }
+        replica.disconnect();
+    });
+    Ok(replica.finish())
+}
+
+/// Serve one follower connection: reads are answered from the replica's
+/// engine, writes are rejected until promotion and buffered per-connection
+/// after it (same enqueue-then-`EPOCH` shape as the primary protocol).
+/// Returns true when the client asked for `SHUTDOWN`.
+fn follower_conn<R: BufRead, W: Write>(
+    cfg: &ServiceConfig,
+    replica: &Replica,
+    mut reader: R,
+    writer: &mut W,
+) -> bool {
+    let mut reply = |writer: &mut W, resp: &Response| -> bool {
+        writeln!(writer, "{}", resp.render()).and_then(|_| writer.flush()).is_ok()
+    };
+    // updates enqueued on this connection since the last EPOCH (only ever
+    // non-empty after promotion)
+    let mut pending: Vec<Update> = Vec::new();
+    let mut shutdown = false;
+    let mut raw: Vec<u8> = Vec::new();
+    loop {
+        raw.clear();
+        match reader.read_until(b'\n', &mut raw) {
+            Ok(0) => break,
+            Ok(_) => {}
+            Err(_) => break,
+        }
+        // same byte-tolerant framing as the primary: invalid UTF-8 yields
+        // one structured error, never a dropped connection
+        let line = String::from_utf8_lossy(&raw);
+        let cmd = match Command::parse(&line) {
+            Ok(Some(cmd)) => cmd,
+            Ok(None) => continue,
+            Err(e) => {
+                if !reply(writer, &Response::Error(e)) {
+                    break;
+                }
+                continue;
+            }
+        };
+        match cmd {
+            Command::Updates(updates) => {
+                if !replica.is_promoted() {
+                    let msg = "read-only follower: this standby replays its primary \
+                               (PROMOTE to accept writes)";
+                    if !reply(writer, &Response::Error(msg.into())) {
+                        break;
+                    }
+                    continue;
+                }
+                let n = cfg.num_vertices;
+                if let Some(bad) = updates.iter().find(|u| {
+                    let (Update::Insert(a, b) | Update::Delete(a, b)) = **u;
+                    a as usize >= n || b as usize >= n
+                }) {
+                    let err = format!("{bad:?} out of range (|V|={n})");
+                    if !reply(writer, &Response::Error(err)) {
+                        break;
+                    }
+                    continue;
+                }
+                let count = updates.len();
+                pending.extend(updates);
+                if !reply(writer, &Response::Queued { count }) {
+                    break;
+                }
+            }
+            Command::Epoch => {
+                if !replica.is_promoted() {
+                    let msg = "read-only follower: this standby replays its primary \
+                               (PROMOTE to accept writes)";
+                    if !reply(writer, &Response::Error(msg.into())) {
+                        break;
+                    }
+                    continue;
+                }
+                let resp = if pending.is_empty() {
+                    Response::EpochIdle {
+                        epochs_applied: replica.applied_epoch(),
+                        live_edges: replica.engine().num_live_edges(),
+                        matched_vertices: replica.engine().matched_vertices(),
+                    }
+                } else {
+                    let updates = std::mem::take(&mut pending);
+                    match replica.apply_updates(&updates) {
+                        Ok(report) => Response::Epoch(report),
+                        Err(e) => Response::Error(e),
+                    }
+                };
+                if !reply(writer, &resp) {
+                    break;
+                }
+            }
+            Command::Query(v) => {
+                let resp = if (v as usize) < cfg.num_vertices {
+                    Response::Query { vertex: v, partner: replica.partner(v) }
+                } else {
+                    Response::Error(format!(
+                        "vertex {v} out of range (|V|={})",
+                        cfg.num_vertices
+                    ))
+                };
+                if !reply(writer, &resp) {
+                    break;
+                }
+            }
+            Command::Stats { full } => {
+                let resp = Response::Stats(replica.stats_snapshot(full));
+                if !reply(writer, &resp) {
+                    break;
+                }
+            }
+            Command::Snapshot => {
+                let resp = replica.command_snapshot();
+                if !reply(writer, &resp) {
+                    break;
+                }
+            }
+            Command::Metrics => {
+                if !reply(writer, &Response::Metrics(replica.render_metrics())) {
+                    break;
+                }
+            }
+            Command::Trace(n) => {
+                let events = trace::last_epochs(trace::collect(), n);
+                let mut doc = trace::chrome_trace_json(&events);
+                doc.set("ok", Json::from(true))
+                    .set("op", Json::from("trace"))
+                    .set("events", Json::from(events.len()));
+                if !reply(writer, &Response::Trace(doc.render_compact())) {
+                    break;
+                }
+            }
+            Command::Promote => {
+                let epoch = replica.promote();
+                if !reply(writer, &Response::Promoted { epoch }) {
+                    break;
+                }
+            }
+            Command::Crash(_) => {
+                let msg = "CRASH is not supported on a follower";
+                if !reply(writer, &Response::Error(msg.into())) {
+                    break;
+                }
+            }
+            Command::Quit => {
+                let _ = reply(writer, &Response::Bye);
+                break;
+            }
+            Command::Shutdown => {
+                let _ = reply(writer, &Response::ShuttingDown);
+                shutdown = true;
+                break;
+            }
+        }
+    }
+    shutdown
+}
+
+impl Replica {
+    /// `SNAPSHOT` entry point: capture under the apply lock (no epoch in
+    /// flight) and hand to the background writer.
+    fn command_snapshot(&self) -> Response {
+        let _guard = self.apply_lock.lock().unwrap();
+        let mut dur = self.dur.lock().unwrap();
+        match dur.as_mut() {
+            Some(d) => {
+                if d.snapshot_busy() {
+                    return Response::Snapshot {
+                        epoch: self.engine.epochs_applied(),
+                        live_edges: self.engine.num_live_edges(),
+                        matched_vertices: self.engine.matched_vertices(),
+                        accepted: false,
+                    };
+                }
+                let data = SnapshotData::capture(&self.engine);
+                let (epoch, live_edges, matched) =
+                    (data.epoch, self.engine.num_live_edges(), self.engine.matched_vertices());
+                let accepted = d.request_snapshot(data);
+                Response::Snapshot {
+                    epoch,
+                    live_edges,
+                    matched_vertices: matched,
+                    accepted,
+                }
+            }
+            None => Response::Error("SNAPSHOT requires --data-dir".into()),
+        }
+    }
+}

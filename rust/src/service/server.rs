@@ -53,11 +53,14 @@
 //!
 //! The wire protocol itself is specified in `docs/PROTOCOL.md`.
 
-use super::protocol::{Command, CrashTarget, Response, StatsSnapshot};
+use super::protocol::{
+    Command, CrashTarget, ReplicaRole, ReplicaStats, Response, StatsSnapshot,
+};
 use super::{Promise, ShardedQueue};
 use crate::dynamic::{EpochReport, ShardExec, ShardMailboxes, ShardedDynamicMatcher, Update};
 use crate::obs::{metrics, trace};
 use crate::par::pump::{BoundedQueue, CloseOnDrop};
+use crate::persist::ship::Shipper;
 use crate::persist::snapshot::SnapshotData;
 use crate::persist::{DurableOptions, DurableService};
 use crate::util::json::Json;
@@ -130,6 +133,11 @@ pub struct ServiceConfig {
     /// its own listener thread, answering from the same registries as the
     /// `METRICS` command. `None` = no HTTP listener.
     pub metrics_addr: Option<String>,
+    /// Ship committed epoch WAL records to followers connecting at this
+    /// address (`--replicate-addr HOST:PORT`) — the primary side of
+    /// replication (see [`crate::persist::ship`]). `None` = no replication
+    /// listener.
+    pub replicate_addr: Option<String>,
 }
 
 impl Default for ServiceConfig {
@@ -152,6 +160,7 @@ impl Default for ServiceConfig {
             exit_on_panic: true,
             pin: crate::dynamic::PinPolicy::None,
             metrics_addr: None,
+            replicate_addr: None,
         }
     }
 }
@@ -453,6 +462,10 @@ struct FlushExec<'a> {
     /// The service's lifetime instruments (shared with `STATS`/`METRICS`
     /// readers; this executor is their only writer).
     sm: &'a ServiceMetrics,
+    /// Replication shipper (`--replicate-addr`); every committed epoch is
+    /// published to it right after the local apply, so followers stream
+    /// exactly the epochs this executor ran, in order.
+    shipper: Option<&'a Shipper>,
     /// Generations whose WAL records `handle_group` already appended as a
     /// durable group; `flush` skips its per-epoch append for exactly this
     /// many upcoming generations.
@@ -467,8 +480,9 @@ impl<'a> FlushExec<'a> {
         spares: &'a BoundedQueue<ShardMailboxes>,
         dur: Option<DurableService>,
         sm: &'a ServiceMetrics,
+        shipper: Option<&'a Shipper>,
     ) -> Self {
-        Self { cfg, engine, flushing, spares, dur, sm, prelogged: 0 }
+        Self { cfg, engine, flushing, spares, dur, sm, shipper, prelogged: 0 }
     }
 
     fn flush(&mut self, gen: PendingGen) -> Option<EpochReport> {
@@ -513,6 +527,12 @@ impl<'a> FlushExec<'a> {
         let mut report = self.engine.apply_mailboxes(&mut mailboxes);
         report.route_wall_s = route_s;
         report.route_overlap_s = overlap_s;
+        if let Some(ship) = self.shipper {
+            // publish after the local WAL append (above) and apply: the
+            // epoch is committed here, and the backlog push is cheap — the
+            // socket writes happen on the shipper's sender threads
+            ship.publish(report.epoch, &wal_log);
+        }
         let now = Instant::now();
         for s in stamps.drain(..) {
             self.sm.batch_latency.record_duration(now.duration_since(s));
@@ -614,6 +634,7 @@ impl<'a> FlushExec<'a> {
                     self.sm,
                     full,
                     self.dur.as_ref(),
+                    self.shipper,
                 )));
             }
             FlushJob::Snapshot(gen, p) => {
@@ -722,7 +743,7 @@ fn route_loop(
     flushing: &AtomicBool,
     spares: &BoundedQueue<ShardMailboxes>,
     sink: &mut FlushSink<'_, '_>,
-    log_wal: bool,
+    keep_wal_log: bool,
 ) {
     let _guard = EngineGuard { queue, stop };
     let mut buf: Vec<Request> = Vec::new();
@@ -751,7 +772,7 @@ fn route_loop(
         match res {
             Ok(()) => {
                 gen.stamps.push(enqueued);
-                if log_wal {
+                if keep_wal_log {
                     gen.wal_log.extend_from_slice(updates);
                 }
                 true
@@ -860,16 +881,21 @@ fn engine_loop(
     stop: &AtomicBool,
     dur: Option<DurableService>,
     sm: &ServiceMetrics,
+    shipper: Option<&Shipper>,
 ) -> ServiceSummary {
     // a router panic must not strand clients on a half-dead server
     let _router_guard = ExitOnPanic { role: "router", enabled: cfg.exit_on_panic };
-    let log_wal = dur.as_ref().is_some_and(|d| d.log_enabled());
+    // the flat per-generation update list feeds both the WAL append and
+    // the replication backlog — keep it when either consumer exists
+    let keep_wal_log =
+        dur.as_ref().is_some_and(|d| d.log_enabled()) || shipper.is_some();
     let flushing = AtomicBool::new(false);
     let spares: BoundedQueue<ShardMailboxes> = BoundedQueue::new(MAILBOX_GENERATIONS);
     if !cfg.pipeline {
-        let mut sink =
-            FlushSink::Inline(FlushExec::new(cfg, engine, &flushing, &spares, dur, sm));
-        route_loop(cfg, engine, queue, stop, &flushing, &spares, &mut sink, log_wal);
+        let mut sink = FlushSink::Inline(FlushExec::new(
+            cfg, engine, &flushing, &spares, dur, sm, shipper,
+        ));
+        route_loop(cfg, engine, queue, stop, &flushing, &spares, &mut sink, keep_wal_log);
         match sink {
             FlushSink::Inline(ex) => ex.summary(),
             FlushSink::Pipe(_) => unreachable!("inline sink cannot become a pipe"),
@@ -896,7 +922,8 @@ fn engine_loop(
                     // blocking on a dead flusher; jobs it then fails to send are
                     // dropped, abandoning their promises and waking the waiters
                     let _close = CloseOnDrop(jobs);
-                    let mut ex = FlushExec::new(cfg, engine, flushing, spares, dur, sm);
+                    let mut ex =
+                        FlushExec::new(cfg, engine, flushing, spares, dur, sm, shipper);
                     let mut group: Vec<FlushJob> = Vec::with_capacity(FLUSH_QUEUE_DEPTH);
                     while let Some(job) = jobs.pop() {
                         // greedy drain: everything already queued behind
@@ -916,7 +943,9 @@ fn engine_loop(
             };
             {
                 let mut sink = FlushSink::Pipe(&jobs);
-                route_loop(cfg, engine, queue, stop, &flushing, &spares, &mut sink, log_wal);
+                route_loop(
+                    cfg, engine, queue, stop, &flushing, &spares, &mut sink, keep_wal_log,
+                );
             }
             jobs.close();
             flusher.join().expect("flusher thread panicked")
@@ -930,6 +959,7 @@ fn snapshot(
     sm: &ServiceMetrics,
     audit: bool,
     dur: Option<&DurableService>,
+    ship: Option<&Shipper>,
 ) -> StatsSnapshot {
     let (durable, wal_epochs, wal_bytes, last_snapshot_epoch, recovery_replayed) = match dur {
         Some(d) => {
@@ -975,6 +1005,17 @@ fn snapshot(
         wal_bytes,
         last_snapshot_epoch,
         recovery_replayed,
+        replica: ship.map(|s| {
+            let st = s.stats();
+            ReplicaStats {
+                role: ReplicaRole::Primary,
+                followers: st.followers,
+                tip_epoch: st.tip,
+                acked_epoch: st.acked,
+                lag_epochs: st.lag_epochs,
+                lag_bytes: st.lag_bytes,
+            }
+        }),
     }
 }
 
@@ -989,7 +1030,7 @@ fn handle_conn<R: BufRead, W: Write>(
     engine: &ShardedDynamicMatcher,
     queue: &ShardedQueue<Request>,
     sm: &ServiceMetrics,
-    reader: R,
+    mut reader: R,
     writer: &mut W,
 ) -> ConnOutcome {
     let mut outcome = ConnOutcome { shutdown: false };
@@ -1001,11 +1042,21 @@ fn handle_conn<R: BufRead, W: Write>(
     // trivially satisfied, so it is answered from the owner shard's atomic
     // partner slot without stalling in-flight epochs.
     let mut dirty = false;
-    for line in reader.lines() {
-        let line = match line {
-            Ok(l) => l,
+    let mut raw: Vec<u8> = Vec::new();
+    loop {
+        raw.clear();
+        match reader.read_until(b'\n', &mut raw) {
+            Ok(0) => break,  // EOF
+            Ok(_) => {}
             Err(_) => break, // client went away
-        };
+        }
+        // Byte-tolerant framing: a line that is not valid UTF-8 (a binary
+        // client, a truncated multi-byte character) still gets exactly one
+        // structured error reply — lossy decoding turns the bad bytes into
+        // replacement characters, which no verb matches. The alternative
+        // (BufRead::lines erroring out) silently dropped the connection,
+        // desyncing the one-reply-per-line framing.
+        let line = String::from_utf8_lossy(&raw);
         let cmd = match Command::parse(&line) {
             Ok(None) => continue,
             Ok(Some(c)) => c,
@@ -1130,6 +1181,19 @@ fn handle_conn<R: BufRead, W: Write>(
                 // no reply on success: the process is about to die by design
                 let _ = queue.push(shard, Request::Crash(target));
             }
+            Command::Promote => {
+                // PROMOTE only means something on a replicating follower
+                // (serve --follow); a primary has nothing to be promoted to
+                if !reply(
+                    writer,
+                    &Response::Error(
+                        "PROMOTE: this server is not a follower (start one with serve --follow)"
+                            .into(),
+                    ),
+                ) {
+                    break;
+                }
+            }
             Command::Quit => {
                 let _ = reply(writer, &Response::Bye);
                 break;
@@ -1148,7 +1212,7 @@ fn handle_conn<R: BufRead, W: Write>(
 /// Open the durability bundle when the config names a data dir: recover
 /// the engine (snapshot + WAL replay, verified maximal) and report what
 /// happened on stderr.
-fn open_durability(
+pub(super) fn open_durability(
     cfg: &ServiceConfig,
     engine: &ShardedDynamicMatcher,
 ) -> Result<Option<DurableService>, String> {
@@ -1173,6 +1237,27 @@ fn open_durability(
         engine.matched_vertices(),
     );
     Ok(Some(dur))
+}
+
+/// Bind the `--replicate-addr` WAL shipping listener when configured.
+/// Bound after recovery so the replication horizon is the recovered epoch:
+/// followers resuming at or past it stream the delta, anyone older is told
+/// to re-seed from a data-dir copy.
+fn open_shipper(
+    cfg: &ServiceConfig,
+    engine: &ShardedDynamicMatcher,
+    sm: &ServiceMetrics,
+) -> Result<Option<Shipper>, String> {
+    let Some(addr) = &cfg.replicate_addr else {
+        return Ok(None);
+    };
+    let ship = Shipper::bind(addr, cfg.num_vertices, engine.epochs_applied(), &sm.registry)?;
+    eprintln!(
+        "replicate: shipping committed epochs to followers on {} (horizon epoch {})",
+        ship.local_addr(),
+        engine.epochs_applied()
+    );
+    Ok(Some(ship))
 }
 
 /// Bind the `--metrics-addr` HTTP scrape endpoint (port 0 = ephemeral).
@@ -1271,6 +1356,7 @@ pub fn serve_lines<R: BufRead, W: Write>(
     );
     let dur = open_durability(cfg, &engine)?;
     let sm = ServiceMetrics::new();
+    let shipper = open_shipper(cfg, &engine, &sm)?;
     let metrics_listener = bind_metrics(cfg)?;
     let queue: ShardedQueue<Request> = ShardedQueue::new(cfg.shards, cfg.shard_capacity);
     let stop = AtomicBool::new(false);
@@ -1279,8 +1365,9 @@ pub fn serve_lines<R: BufRead, W: Write>(
         let queue_ref = &queue;
         let stop_ref = &stop;
         let sm_ref = &sm;
-        let coordinator =
-            s.spawn(move || engine_loop(cfg, engine_ref, queue_ref, stop_ref, dur, sm_ref));
+        let ship_ref = shipper.as_ref();
+        let coordinator = s
+            .spawn(move || engine_loop(cfg, engine_ref, queue_ref, stop_ref, dur, sm_ref, ship_ref));
         if let Some(listener) = &metrics_listener {
             let sm_ref = &sm;
             let stop_ref = &stop;
@@ -1320,6 +1407,7 @@ pub fn serve_tcp(
     );
     let dur = open_durability(cfg, &engine)?;
     let sm = ServiceMetrics::new();
+    let shipper = open_shipper(cfg, &engine, &sm)?;
     let metrics_listener = bind_metrics(cfg)?;
     let queue: ShardedQueue<Request> = ShardedQueue::new(cfg.shards, cfg.shard_capacity);
     let stop = AtomicBool::new(false);
@@ -1336,7 +1424,10 @@ pub fn serve_tcp(
             let queue_ref = &queue;
             let stop_ref = &stop;
             let sm_ref = &sm;
-            s.spawn(move || engine_loop(cfg, engine_ref, queue_ref, stop_ref, dur, sm_ref))
+            let ship_ref = shipper.as_ref();
+            s.spawn(move || {
+                engine_loop(cfg, engine_ref, queue_ref, stop_ref, dur, sm_ref, ship_ref)
+            })
         };
         if let Some(listener) = &metrics_listener {
             let sm_ref = &sm;
@@ -1854,7 +1945,7 @@ QUIT\n";
         let flushing = AtomicBool::new(false);
         let spares: BoundedQueue<ShardMailboxes> = BoundedQueue::new(MAILBOX_GENERATIONS);
         let dur = open_durability(&cfg, &engine).unwrap();
-        let mut ex = FlushExec::new(&cfg, &engine, &flushing, &spares, dur, &sm);
+        let mut ex = FlushExec::new(&cfg, &engine, &flushing, &spares, dur, &sm, None);
         let make_gen = |updates: &[Update]| -> PendingGen {
             let mut gen = PendingGen::new(engine.mailboxes());
             engine.route_into(updates, &mut gen.mailboxes).unwrap();

@@ -247,6 +247,72 @@ fn torn_wal_tail_recovers_an_epoch_prefix() {
     }
 }
 
+/// The retention rule end-to-end: keep the newest TWO snapshots and prune
+/// the WAL lagged one snapshot behind publication. Bit-rot the newest
+/// snapshot after a crash — recovery must fall back to the predecessor and
+/// replay the (un-pruned) WAL suffix to the *identical* live set, because
+/// the WAL behind the predecessor is exactly what the lagged prune kept.
+#[test]
+fn corrupt_newest_snapshot_falls_back_to_predecessor_and_replays() {
+    let mut rng = Xoshiro256pp::new(0xFA11);
+    for case in 0..8 {
+        let s = arb_schedule(&mut rng);
+        // the two retained snapshot epochs: predecessor a < newest b
+        // (a = 0 models "no predecessor": the corrupt-newest fallback then
+        // lands on nothing and the whole WAL replays)
+        let b = 1 + rng.next_usize(s.crash_after) as u64;
+        let a = rng.next_usize(b as usize) as u64;
+        let dir = fresh_dir("retention");
+        {
+            let engine = ShardedDynamicMatcher::new(s.n, 2, 4);
+            // tiny segments force rotation, so the lagged prune really
+            // deletes covered segments instead of being a no-op
+            let opts = WalOptions { fsync: false, segment_bytes: 256 };
+            let (mut wal, _) = Wal::open(&recovery::wal_dir(&dir), opts).unwrap();
+            let snap_dir = recovery::snapshot_dir(&dir);
+            std::fs::create_dir_all(&snap_dir).unwrap();
+            for (i, ups) in s.epochs.iter().take(s.crash_after).enumerate() {
+                let e = i as u64 + 1;
+                wal.append_epoch(e, ups).unwrap();
+                engine.apply_epoch(ups).unwrap();
+                if e == a || e == b {
+                    let data = SnapshotData::capture(&engine);
+                    snapshot::write_file(&snap_dir.join(snapshot::file_name(e)), &data)
+                        .unwrap();
+                    if e == b && a > 0 {
+                        // prune-after-publish, lagged by one: only the WAL
+                        // the PREDECESSOR covers may go
+                        wal.prune_below(a);
+                    }
+                }
+            }
+        } // crash
+
+        // bit-rot the newest snapshot
+        let newest = recovery::snapshot_dir(&dir).join(snapshot::file_name(b));
+        let mut bytes = std::fs::read(&newest).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0x40;
+        std::fs::write(&newest, &bytes).unwrap();
+
+        let recovered = ShardedDynamicMatcher::new(s.n, 2, 4);
+        let (_wal, report) =
+            recovery::recover(&recovered, &dir, WalOptions::default()).unwrap();
+        assert_eq!(
+            report.replayed_epochs,
+            s.crash_after as u64 - a,
+            "case {case}: fell back past corrupt epoch-{b} snapshot to {a}"
+        );
+        let mut got = recovered.live_edges();
+        got.sort_unstable();
+        assert_eq!(got, s.live_after[s.crash_after - 1], "case {case}: live set");
+        assert_eq!(recovered.epochs_applied(), s.crash_after as u64, "case {case}");
+        verify_maximal_dynamic(s.n, got.iter().copied(), &recovered.matching_pairs())
+            .unwrap_or_else(|e| panic!("case {case}: {e}"));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}
+
 /// SHUTDOWN-then-restart through the real service: the final snapshot
 /// alone carries the state — zero WAL replay — and the exact matching
 /// survives the restart.

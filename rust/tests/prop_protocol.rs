@@ -1,0 +1,181 @@
+//! Hostile-input property tests for the line protocol.
+//!
+//! The service promises byte-tolerant framing: whatever a client writes —
+//! truncated UTF-8 sequences, raw control bytes, unknown verbs, wrong
+//! arities, numeric overflow, oversized batches of out-of-range vertices —
+//! every non-blank, non-comment line gets **exactly one** structured JSON
+//! reply (`"ok":false` with an error message for the garbage), the
+//! connection never drops, framing never desyncs, and the server never
+//! panics. After an arbitrary junk prefix, a valid INSERT/EPOCH/QUERY tail
+//! must still work and see exactly its own writes.
+//!
+//! The reply-count oracle reuses the server's own framing rule: decode the
+//! line lossily, trim, and expect a reply iff the result is non-blank and
+//! not a `#` comment.
+
+use skipper::service::protocol::Command;
+use skipper::service::{serve_lines, ServiceConfig};
+use skipper::util::rng::Xoshiro256pp;
+
+/// A random ASCII word of `len` uppercase letters.
+fn word(rng: &mut Xoshiro256pp, len: usize) -> Vec<u8> {
+    (0..len).map(|_| b'A' + rng.next_usize(26) as u8).collect()
+}
+
+/// One adversarial input line (no trailing newline).
+fn junk_line(rng: &mut Xoshiro256pp) -> Vec<u8> {
+    match rng.next_usize(10) {
+        // raw bytes, newline excluded — mostly invalid UTF-8
+        0 => {
+            let len = rng.next_usize(33);
+            (0..len)
+                .map(|_| {
+                    let b = 1 + rng.next_usize(255) as u8;
+                    if b == b'\n' {
+                        0xFF
+                    } else {
+                        b
+                    }
+                })
+                .collect()
+        }
+        // a real verb cut off mid-multibyte-sequence
+        1 => b"QUERY 1 \xe2\x82".to_vec(),
+        // unknown verb with plausible arguments
+        2 => {
+            let len = 2 + rng.next_usize(10);
+            let mut l = word(rng, len);
+            l.extend_from_slice(b" 1 2");
+            l
+        }
+        // blank-ish lines: empty, spaces, a tab
+        3 => [b"" as &[u8], b"   ", b"\t"][rng.next_usize(3)].to_vec(),
+        // comments
+        4 => b"# a comment the server must skip silently".to_vec(),
+        // known verbs, wrong arity
+        5 => [
+            b"INSERT" as &[u8],
+            b"INSERT 5",
+            b"DELETE 1 2 3",
+            b"QUERY",
+            b"QUERY 1 2",
+            b"EPOCH now",
+            b"STATS verbose",
+            b"PROMOTE please",
+        ][rng.next_usize(8)]
+            .to_vec(),
+        // numeric garbage: overflow, sign, radix prefixes
+        6 => [
+            b"QUERY 18446744073709551616999" as &[u8],
+            b"INSERT -1 -2",
+            b"QUERY 0x10",
+            b"INSERT 1e9 2",
+        ][rng.next_usize(4)]
+            .to_vec(),
+        // an oversized batch of out-of-range vertices: parses fine, must
+        // come back as one bounds error, not 2·k queued updates
+        7 => {
+            let mut l = b"INSERT".to_vec();
+            for _ in 0..100 + rng.next_usize(400) {
+                l.extend_from_slice(b" 1000000 1000001");
+            }
+            l
+        }
+        // one huge unbroken token
+        8 => {
+            let len = 2000 + rng.next_usize(3000);
+            word(rng, len)
+        }
+        // valid but harmless commands mixed into the junk
+        9 => [b"QUERY 3" as &[u8], b"EPOCH", b"STATS"][rng.next_usize(3)].to_vec(),
+        _ => unreachable!(),
+    }
+}
+
+/// The framing oracle: does this input line owe the client a reply?
+fn expects_reply(line: &[u8]) -> bool {
+    let text = String::from_utf8_lossy(line);
+    let t = text.trim();
+    !t.is_empty() && !t.starts_with('#')
+}
+
+#[test]
+fn every_junk_line_gets_one_structured_reply_and_framing_never_desyncs() {
+    let mut rng = Xoshiro256pp::new(0xF0_22);
+    for case in 0..20 {
+        let num = 30 + rng.next_usize(40);
+        let mut script: Vec<u8> = Vec::new();
+        let mut expected = 0usize;
+        for _ in 0..num {
+            let line = junk_line(&mut rng);
+            if expects_reply(&line) {
+                expected += 1;
+            }
+            script.extend_from_slice(&line);
+            script.push(b'\n');
+        }
+        // a valid tail: the session must still be fully functional
+        script.extend_from_slice(b"INSERT 0 1\nEPOCH\nQUERY 0\nQUIT\n");
+        expected += 4;
+
+        let cfg = ServiceConfig {
+            num_vertices: 64,
+            threads: 1,
+            engine_shards: 2,
+            ..Default::default()
+        };
+        let mut out = Vec::new();
+        let summary = serve_lines(&cfg, script.as_slice(), &mut out)
+            .unwrap_or_else(|e| panic!("case {case}: server errored on junk: {e}"));
+        let text = String::from_utf8(out).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(
+            lines.len(),
+            expected,
+            "case {case}: exactly one reply per command line\n{text}"
+        );
+        for l in &lines {
+            assert!(l.contains(r#""ok":"#), "case {case}: unstructured reply: {l}");
+        }
+        // in-order framing survived: the tail's replies are the last four
+        assert!(lines[expected - 4].contains(r#""op":"queued""#), "case {case}");
+        assert!(lines[expected - 3].contains(r#""op":"epoch""#), "case {case}");
+        let q = lines[expected - 2];
+        assert!(
+            q.contains(r#""op":"query""#) && q.contains(r#""partner":1"#),
+            "case {case}: junk polluted the engine: {q}"
+        );
+        assert!(lines[expected - 1].contains(r#""op":"bye""#), "case {case}");
+        assert!(summary.maximal, "case {case}");
+    }
+}
+
+#[test]
+fn command_parse_never_panics_on_arbitrary_bytes() {
+    let mut rng = Xoshiro256pp::new(0xBEEF);
+    for _ in 0..5000 {
+        let len = rng.next_usize(65);
+        let bytes: Vec<u8> = (0..len).map(|_| rng.next_usize(256) as u8).collect();
+        // the server decodes lossily before parsing; do the same
+        let line = String::from_utf8_lossy(&bytes);
+        let _ = Command::parse(&line);
+    }
+}
+
+#[test]
+fn oversized_batch_of_out_of_range_vertices_is_one_error() {
+    let mut script = b"INSERT".to_vec();
+    for _ in 0..5000 {
+        script.extend_from_slice(b" 70000 70001");
+    }
+    script.extend_from_slice(b"\nQUERY 0\nQUIT\n");
+    let cfg = ServiceConfig { num_vertices: 64, threads: 1, engine_shards: 1, ..Default::default() };
+    let mut out = Vec::new();
+    serve_lines(&cfg, script.as_slice(), &mut out).unwrap();
+    let text = String::from_utf8(out).unwrap();
+    let lines: Vec<&str> = text.lines().collect();
+    assert_eq!(lines.len(), 3, "{text}");
+    assert!(lines[0].contains(r#""ok":false"#) && lines[0].contains("out of range"), "{}", lines[0]);
+    assert!(lines[1].contains(r#""matched":false"#), "{}", lines[1]);
+    assert!(lines[2].contains(r#""op":"bye""#), "{}", lines[2]);
+}

@@ -1,0 +1,470 @@
+//! Kill-9 failover property tests for the replication subsystem.
+//!
+//! For random churn schedules at `engine_shards ∈ {1, 4}`:
+//!
+//! * a **primary** (an engine plus a [`Shipper`], driven exactly the way
+//!   the service flusher drives them: apply locally, then publish) streams
+//!   committed epochs to two warm standbys — one durable, one volatile;
+//! * at **quiesce** (both followers caught up) every follower answers
+//!   `partner(v)` identically to the primary for every vertex — the engine
+//!   is deterministic for a fixed config, so replaying the same epoch
+//!   sequence converges to bit-identical `partner[]` state;
+//! * the primary is then **killed** after an arbitrary epoch — its sockets
+//!   close with no goodbye, indistinguishable from `kill -9`;
+//! * **failover** promotes the follower with the longest contiguous log
+//!   (= highest applied epoch; the stream is contiguous and gap-free).
+//!   The promoted node must hold a live-edge set *identical* to the
+//!   model's at the kill point, a matching the HashSet live-graph model
+//!   confirms maximal, and an epoch counter at least the highest epoch any
+//!   follower had acked when the primary died — zero acked epochs lost;
+//! * the promoted node then **keeps writing**: the next schedule epoch
+//!   applies through [`Replica::apply_updates`] and the result again
+//!   matches the model exactly, while the losing follower stays read-only.
+//!
+//! A separate deterministic test drives the follower *front end*
+//! (`serve_follower_lines`): writes are structured errors until `PROMOTE`,
+//! then the full write path works; and a durable follower killed and
+//! restarted recovers from its own WAL, then resumes the stream right
+//! where recovery left off.
+
+use skipper::dynamic::{ShardedDynamicMatcher, Update};
+use skipper::matching::verify::verify_maximal_dynamic;
+use skipper::obs::metrics;
+use skipper::persist::ship::Shipper;
+use skipper::service::{serve_follower_lines, Replica, ServiceConfig};
+use skipper::util::qcheck::{check, Config};
+use skipper::util::rng::Xoshiro256pp;
+use skipper::VertexId;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::{Duration, Instant};
+
+static DIR_ID: AtomicU64 = AtomicU64::new(0);
+
+fn fresh_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!(
+        "skipper_prop_replication_{}_{}_{}",
+        std::process::id(),
+        tag,
+        DIR_ID.fetch_add(1, Ordering::Relaxed)
+    ));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn loopback_available() -> bool {
+    std::net::TcpListener::bind("127.0.0.1:0").is_ok()
+}
+
+/// A concrete random schedule: per-epoch update batches plus the model's
+/// live-edge set after each epoch (maintained with disjoint live/pool/dead
+/// vectors, so the model is trivially exact). `kill_after` is strictly
+/// less than `epochs.len()`, so there is always at least one post-failover
+/// batch for the promoted node to write.
+#[derive(Clone, Debug)]
+struct Schedule {
+    n: usize,
+    epochs: Vec<Vec<Update>>,
+    live_after: Vec<Vec<(VertexId, VertexId)>>,
+    /// Kill the primary after this many epochs (1-based count).
+    kill_after: usize,
+}
+
+fn arb_schedule(rng: &mut Xoshiro256pp) -> Schedule {
+    let n = 16 + rng.next_usize(180);
+    let num_epochs = 3 + rng.next_usize(7);
+    let batch = 4 + rng.next_usize(60);
+    let mut pool: Vec<(VertexId, VertexId)> = Vec::new();
+    for u in 0..n as VertexId {
+        for _ in 0..3 {
+            let v = rng.next_usize(n) as VertexId;
+            if u != v {
+                let e = (u.min(v), u.max(v));
+                if !pool.contains(&e) {
+                    pool.push(e);
+                }
+            }
+        }
+    }
+    rng.shuffle(&mut pool);
+    let mut live: Vec<(VertexId, VertexId)> = Vec::new();
+    let mut dead: Vec<(VertexId, VertexId)> = Vec::new();
+    let mut epochs = Vec::new();
+    let mut live_after = Vec::new();
+    for _ in 0..num_epochs {
+        let mut ups = Vec::with_capacity(batch);
+        for _ in 0..batch {
+            let deleting = !live.is_empty() && rng.next_usize(100) < 40;
+            if deleting {
+                let i = rng.next_usize(live.len());
+                let (u, v) = live.swap_remove(i);
+                dead.push((u, v));
+                ups.push(Update::Delete(u, v));
+            } else {
+                if pool.is_empty() {
+                    pool.append(&mut dead);
+                    rng.shuffle(&mut pool);
+                }
+                match pool.pop() {
+                    Some((u, v)) => {
+                        live.push((u, v));
+                        ups.push(Update::Insert(u, v));
+                    }
+                    None => break,
+                }
+            }
+        }
+        if ups.is_empty() {
+            // never ship an empty epoch — the real service coalesces those
+            // into EpochIdle and applies nothing
+            let i = rng.next_usize(live.len());
+            let (u, v) = live.swap_remove(i);
+            dead.push((u, v));
+            ups.push(Update::Delete(u, v));
+        }
+        epochs.push(ups);
+        let mut snap = live.clone();
+        snap.sort_unstable();
+        live_after.push(snap);
+    }
+    let kill_after = 1 + rng.next_usize(epochs.len() - 1);
+    Schedule { n, epochs, live_after, kill_after }
+}
+
+/// Poll until a replica's replay loop has exited, or fail with `what`.
+fn wait_drained(r: &Replica, what: &str) -> Result<(), String> {
+    let deadline = Instant::now() + Duration::from_secs(10);
+    while r.replaying() {
+        if Instant::now() >= deadline {
+            return Err(format!("{what}: replay loop still running after primary death"));
+        }
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    Ok(())
+}
+
+/// Run the kill-9 failover life at one shard count.
+fn kill_and_fail_over(s: &Schedule, shards: usize) -> Result<(), String> {
+    let tag = |m: String| format!("P={shards}: {m}");
+    let dir = fresh_dir("failover");
+
+    // The primary: its engine plus the replication listener, fed the way
+    // the service flusher feeds them — apply locally, then publish. The
+    // engine config (pool exec, default layout, unpinned) matches what
+    // Replica::new builds from a default ServiceConfig, so follower state
+    // must converge bit-identically.
+    let primary = ShardedDynamicMatcher::new(s.n, 2, shards);
+    let reg = metrics::Registry::new();
+    let shipper = Shipper::bind("127.0.0.1:0", s.n, 0, &reg).map_err(&tag)?;
+    let addr = shipper.local_addr().to_string();
+
+    let durable_cfg = ServiceConfig {
+        num_vertices: s.n,
+        threads: 2,
+        engine_shards: shards,
+        data_dir: Some(dir.to_string_lossy().into_owned()),
+        ..Default::default()
+    };
+    let volatile_cfg =
+        ServiceConfig { num_vertices: s.n, threads: 2, engine_shards: shards, ..Default::default() };
+    let followers =
+        [Replica::new(&durable_cfg, &addr)?, Replica::new(&volatile_cfg, &addr)?];
+
+    let killed_at = s.kill_after as u64;
+    let result = std::thread::scope(|sc| {
+        for f in &followers {
+            sc.spawn(move || f.replay_loop());
+        }
+        let body = || -> Result<(), String> {
+            for (i, ups) in s.epochs.iter().take(s.kill_after).enumerate() {
+                primary.apply_epoch(ups)?;
+                shipper.publish(i as u64 + 1, ups);
+            }
+
+            // quiesce: both followers catch up
+            for (fi, f) in followers.iter().enumerate() {
+                if !f.wait_applied(killed_at, Duration::from_secs(20)) {
+                    return Err(format!(
+                        "follower {fi} stuck at epoch {} of {killed_at} (error: {:?})",
+                        f.applied_epoch(),
+                        f.replay_error()
+                    ));
+                }
+            }
+            // at quiesce every QUERY answer matches the primary's exactly
+            for v in 0..s.n as VertexId {
+                for (fi, f) in followers.iter().enumerate() {
+                    if f.partner(v) != primary.partner(v) {
+                        return Err(format!(
+                            "follower {fi}: partner({v}) = {:?} but primary says {:?}",
+                            f.partner(v),
+                            primary.partner(v)
+                        ));
+                    }
+                }
+            }
+            // the highest epoch acked by every live follower at the kill;
+            // ack intake is asynchronous, so this may trail killed_at —
+            // the failover guarantee is "nothing acked is lost"
+            let acked_at_kill = shipper.stats().acked;
+
+            // kill -9: sockets close with no goodbye
+            shipper.shutdown();
+            for (fi, f) in followers.iter().enumerate() {
+                wait_drained(f, &format!("follower {fi}"))?;
+                if let Some(e) = f.replay_error() {
+                    return Err(format!("follower {fi}: primary death read as error: {e}"));
+                }
+            }
+
+            // failover: longest contiguous log wins (ties → either)
+            let (winner, loser) = if followers[0].applied_epoch() >= followers[1].applied_epoch()
+            {
+                (&followers[0], &followers[1])
+            } else {
+                (&followers[1], &followers[0])
+            };
+            let promoted_epoch = winner.promote();
+            if promoted_epoch < acked_at_kill {
+                return Err(format!(
+                    "acked epochs lost: promoted at {promoted_epoch}, primary had acks to {acked_at_kill}"
+                ));
+            }
+            if promoted_epoch != killed_at {
+                return Err(format!(
+                    "both followers had quiesced at {killed_at} but promotion reports {promoted_epoch}"
+                ));
+            }
+            if winner.promote() != promoted_epoch {
+                return Err("second PROMOTE was not an idempotent no-op".into());
+            }
+
+            // the promoted node's state is exactly the model's at the kill
+            let model = &s.live_after[s.kill_after - 1];
+            let mut got = winner.engine().live_edges();
+            got.sort_unstable();
+            if &got != model {
+                return Err(format!(
+                    "promoted live set diverged: {} edges vs model {}",
+                    got.len(),
+                    model.len()
+                ));
+            }
+            verify_maximal_dynamic(s.n, model.iter().copied(), &winner.engine().matching_pairs())
+                .map_err(|e| format!("promoted matching not maximal: {e}"))?;
+
+            // the loser is still a read-only standby
+            if loser.is_promoted() {
+                return Err("losing follower reports itself promoted".into());
+            }
+            if loser.apply_updates(&s.epochs[s.kill_after]).is_ok() {
+                return Err("losing follower accepted a write without PROMOTE".into());
+            }
+
+            // life goes on: the promoted node writes the next epoch and
+            // still matches the model exactly
+            let report = winner.apply_updates(&s.epochs[s.kill_after])?;
+            if report.epoch != killed_at + 1 {
+                return Err(format!(
+                    "post-failover epoch numbered {} instead of {}",
+                    report.epoch,
+                    killed_at + 1
+                ));
+            }
+            let model = &s.live_after[s.kill_after];
+            let mut got = winner.engine().live_edges();
+            got.sort_unstable();
+            if &got != model {
+                return Err(format!(
+                    "post-failover live set diverged: {} edges vs model {}",
+                    got.len(),
+                    model.len()
+                ));
+            }
+            verify_maximal_dynamic(s.n, model.iter().copied(), &winner.engine().matching_pairs())
+                .map_err(|e| format!("post-failover matching not maximal: {e}"))?;
+            winner.verify().map_err(|e| format!("promoted audit failed: {e}"))?;
+            Ok(())
+        };
+        let r = body();
+        // wind down no matter what, so the scope can join the replay loops
+        shipper.shutdown();
+        for f in &followers {
+            f.disconnect();
+        }
+        r.map_err(&tag)
+    });
+    let _ = std::fs::remove_dir_all(&dir);
+    result
+}
+
+#[test]
+fn kill9_failover_loses_no_acked_epoch_and_stays_maximal() {
+    if !loopback_available() {
+        eprintln!("skipping kill9_failover_loses_no_acked_epoch_and_stays_maximal: no loopback");
+        return;
+    }
+    check(
+        &Config { cases: 10, seed: 0x5A1F, max_shrink_steps: 0 },
+        arb_schedule,
+        |s| {
+            for shards in [1usize, 4] {
+                kill_and_fail_over(s, shards)?;
+            }
+            Ok(())
+        },
+    );
+}
+
+/// A durable follower that dies and restarts recovers from its own WAL,
+/// then resumes the stream exactly where recovery left off — no replayed
+/// epoch is fetched twice, no shipped epoch is skipped.
+#[test]
+fn durable_follower_restart_resumes_stream_where_recovery_left_off() {
+    if !loopback_available() {
+        eprintln!(
+            "skipping durable_follower_restart_resumes_stream_where_recovery_left_off: no loopback"
+        );
+        return;
+    }
+    let mut rng = Xoshiro256pp::new(0x5EED);
+    for case in 0..4 {
+        let s = arb_schedule(&mut rng);
+        let dir = fresh_dir("resume");
+        let cfg = ServiceConfig {
+            num_vertices: s.n,
+            threads: 2,
+            engine_shards: 4,
+            data_dir: Some(dir.to_string_lossy().into_owned()),
+            ..Default::default()
+        };
+        let reg = metrics::Registry::new();
+        let shipper = Shipper::bind("127.0.0.1:0", s.n, 0, &reg).unwrap();
+        let addr = shipper.local_addr().to_string();
+        let split = s.kill_after;
+
+        // life 1: replay the first `split` epochs, then die cold — no
+        // finish(), no final snapshot; the WAL alone carries the state
+        let r1 = Replica::new(&cfg, &addr).unwrap();
+        std::thread::scope(|sc| {
+            sc.spawn(|| r1.replay_loop());
+            for (i, ups) in s.epochs.iter().take(split).enumerate() {
+                shipper.publish(i as u64 + 1, ups);
+            }
+            assert!(
+                r1.wait_applied(split as u64, Duration::from_secs(20)),
+                "case {case}: follower stuck at {} of {split} ({:?})",
+                r1.applied_epoch(),
+                r1.replay_error()
+            );
+            r1.disconnect();
+        });
+        drop(r1);
+
+        // the primary keeps committing while the follower is down
+        for (i, ups) in s.epochs.iter().enumerate().skip(split) {
+            shipper.publish(i as u64 + 1, ups);
+        }
+
+        // life 2: recovery replays the local WAL to `split`, the handshake
+        // resumes after it, and the stream delivers only `split+1..`
+        let r2 = Replica::new(&cfg, &addr).unwrap();
+        std::thread::scope(|sc| {
+            sc.spawn(|| r2.replay_loop());
+            assert!(
+                r2.wait_applied(s.epochs.len() as u64, Duration::from_secs(20)),
+                "case {case}: restarted follower stuck at {} of {} ({:?})",
+                r2.applied_epoch(),
+                s.epochs.len(),
+                r2.replay_error()
+            );
+            shipper.shutdown();
+            r2.disconnect();
+        });
+        let mut got = r2.engine().live_edges();
+        got.sort_unstable();
+        assert_eq!(got, *s.live_after.last().unwrap(), "case {case}: final live set");
+        verify_maximal_dynamic(s.n, got.iter().copied(), &r2.engine().matching_pairs())
+            .unwrap_or_else(|e| panic!("case {case}: {e}"));
+        drop(r2);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}
+
+/// The follower front end, deterministically (the primary publishes
+/// nothing, so there is no replication race): every write is a structured
+/// error until `PROMOTE`, after which the full write path works and
+/// `STATS` reports the promoted role.
+#[test]
+fn follower_front_end_is_read_only_until_promote_then_writable() {
+    if !loopback_available() {
+        eprintln!("skipping follower_front_end_is_read_only_until_promote_then_writable: no loopback");
+        return;
+    }
+    let reg = metrics::Registry::new();
+    let shipper = Shipper::bind("127.0.0.1:0", 64, 0, &reg).unwrap();
+    let addr = shipper.local_addr().to_string();
+    let cfg = ServiceConfig { num_vertices: 64, threads: 1, engine_shards: 4, ..Default::default() };
+    let script = "\
+INSERT 0 1\n\
+EPOCH\n\
+SNAPSHOT\n\
+PROMOTE\n\
+INSERT 0 1 2 3\n\
+EPOCH\n\
+QUERY 0\n\
+STATS full\n\
+METRICS\n\
+QUIT\n";
+    let mut out = Vec::new();
+    let summary = serve_follower_lines(&cfg, &addr, script.as_bytes(), &mut out).unwrap();
+    shipper.shutdown();
+    let text = String::from_utf8(out).unwrap();
+    let mut lines = text.lines();
+    let mut next = || lines.next().unwrap().to_string();
+
+    let l = next();
+    assert!(l.contains(r#""ok":false"#) && l.contains("read-only follower"), "INSERT: {l}");
+    let l = next();
+    assert!(l.contains(r#""ok":false"#) && l.contains("read-only follower"), "EPOCH: {l}");
+    let l = next();
+    assert!(l.contains("SNAPSHOT requires --data-dir"), "SNAPSHOT: {l}");
+    let l = next();
+    assert_eq!(l, r#"{"ok":true,"op":"promote","epoch":0}"#, "PROMOTE");
+    let l = next();
+    assert_eq!(l, r#"{"ok":true,"op":"queued","count":2}"#, "post-promote INSERT");
+    let l = next();
+    assert!(l.contains(r#""op":"epoch""#) && l.contains(r#""epoch":1"#), "post-promote EPOCH: {l}");
+    let l = next();
+    assert!(l.contains(r#""matched":true"#) && l.contains(r#""partner":1"#), "QUERY: {l}");
+    let l = next();
+    assert!(l.contains(r#""replica_role":"promoted""#), "STATS: {l}");
+    assert!(l.contains(r#""epochs":1"#) && l.contains(r#""live_edges":2"#), "STATS: {l}");
+    assert!(l.contains(r#""replica_lag_epochs":0"#), "STATS: {l}");
+    assert!(l.contains(r#""maximal":true"#), "STATS full: {l}");
+    // the METRICS exposition spans lines; the replica gauge must be in it
+    assert!(text.contains("skipper_replica_lag_epochs"), "METRICS: {text}");
+    assert!(text.contains("# EOF"), "METRICS framing: {text}");
+
+    assert!(summary.promoted, "summary: {summary:?}");
+    assert_eq!(summary.epochs, 1, "summary: {summary:?}");
+    assert_eq!(summary.live_edges, 2, "summary: {summary:?}");
+    assert!(summary.maximal, "summary: {summary:?}");
+}
+
+/// Universe-size mismatches are refused at the handshake, loudly.
+#[test]
+fn mismatched_universe_is_refused_at_connect() {
+    if !loopback_available() {
+        eprintln!("skipping mismatched_universe_is_refused_at_connect: no loopback");
+        return;
+    }
+    let reg = metrics::Registry::new();
+    let shipper = Shipper::bind("127.0.0.1:0", 128, 0, &reg).unwrap();
+    let addr = shipper.local_addr().to_string();
+    let cfg = ServiceConfig { num_vertices: 32, threads: 1, engine_shards: 1, ..Default::default() };
+    let err = Replica::new(&cfg, &addr).unwrap_err();
+    assert!(err.contains("universes must match"), "{err}");
+    shipper.shutdown();
+}
