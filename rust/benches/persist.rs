@@ -16,8 +16,10 @@
 //! perf-registry candidate record (`dir/persist_rmat<scale>.json`) holding
 //! every section's wall-clock metrics plus the WAL append/fsync latency
 //! percentiles read back from the process-global metrics registry — the
-//! same histograms a live `serve` exports over `METRICS`. Publish or gate
-//! it with `skipper-cli report`.
+//! same histograms a live `serve` exports over `METRICS` — and a second
+//! record (`dir/ship_loopback.json`) carrying §4's replication throughput
+//! alone, so the ship trajectory (`BENCH_ship_loopback.json`) gates
+//! independently. Publish or gate them with `skipper-cli report`.
 
 mod common;
 
@@ -192,8 +194,12 @@ fn main() {
     // thread. Buffered vs per-epoch fsync of the local WAL on the publish
     // path — the flusher ships right after its local append, so the fsync
     // row is the replicated-commit rate a durable primary sustains.
+    let ship_epochs = 64u64;
+    // ship metrics also feed their own `ship_loopback` record (committed
+    // as BENCH_ship_loopback.json) so the replication trajectory gates
+    // independently of the snapshot/WAL/recovery sections
+    let mut ship_met: BTreeMap<String, f64> = BTreeMap::new();
     if std::net::TcpListener::bind("127.0.0.1:0").is_ok() {
-        let ship_epochs = 64u64;
         for (tag, fsync) in [("buffered", false), ("fsync", true)] {
             let dir = fresh_dir(&base, &format!("ship_{tag}"));
             let (mut wal, _) = Wal::open(&dir, WalOptions { fsync, ..WalOptions::default() })
@@ -235,6 +241,8 @@ fn main() {
             );
             met.insert(format!("ship_{tag}_epochs_per_s"), ship_epochs as f64 / dt);
             met.insert(format!("ship_{tag}_bytes_per_s"), shipped_bytes as f64 / dt);
+            ship_met.insert(format!("ship_{tag}_epochs_per_s"), ship_epochs as f64 / dt);
+            ship_met.insert(format!("ship_{tag}_bytes_per_s"), shipped_bytes as f64 / dt);
         }
     } else {
         eprintln!("[persist] skipping ship section: no loopback in this sandbox");
@@ -259,6 +267,23 @@ fn main() {
             rec.config_hash(),
             path.display()
         );
+        if !ship_met.is_empty() {
+            let mut config = BTreeMap::new();
+            config.insert("workload".to_string(), "ship_loopback".to_string());
+            config.insert("scale".to_string(), scale.name().to_string());
+            config.insert("n".to_string(), n.to_string());
+            config.insert("batch".to_string(), batch.to_string());
+            config.insert("ship_epochs".to_string(), ship_epochs.to_string());
+            let rec = BenchRecord::new("ship_loopback".to_string(), config, ship_met);
+            let path = dir.join("ship_loopback.json");
+            rec.write_file(&path).expect("record write");
+            println!(
+                "recorded bench {} (config {}) -> {}; publish or gate it with `skipper-cli report`",
+                rec.bench,
+                rec.config_hash(),
+                path.display()
+            );
+        }
     }
     let _ = std::fs::remove_dir_all(&base);
 }

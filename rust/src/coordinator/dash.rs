@@ -1,0 +1,520 @@
+//! Static HTML perf dashboard: render every committed `BENCH_*.json`
+//! trajectory as inline-SVG sparkline panels, with an optional live
+//! snapshot section from a Prometheus exposition.
+//!
+//! Dependency-free by construction (no JS frameworks, no external assets,
+//! no script tags at all): the output of [`render_dash`] is one
+//! self-contained HTML file whose only moving parts are `<svg>` elements —
+//! it renders identically from `file://`, a CI artifact store, or a
+//! git-hosted preview.
+//!
+//! **Determinism invariant**: the rendered bytes are a pure function of the
+//! input registries and live text. Metric names and config hashes iterate
+//! in sorted order, colors come from a fixed palette assigned by sorted
+//! hash position, and no wall-clock value is read at render time — the same
+//! inputs always produce byte-identical HTML (asserted by
+//! `tests/prop_obs.rs`), so CI can diff dashboards like any other artifact.
+//!
+//! Panel anatomy, per bench × metric:
+//!
+//! * one polyline per config hash (runs of different configs are never
+//!   visually merged, mirroring the gate's comparison rule);
+//! * for gated metric kinds (`*_per_s`, `*_s`), a shaded horizontal band at
+//!   the newest committed value ± the gate threshold — a run drifting out
+//!   of the band is what `report --gate` would fail;
+//! * a `data-bench` attribute for CI smoke greps (`grep 'data-bench="..."'`
+//!   proves every committed trajectory made it into the artifact).
+//!
+//! The live section parses the exposition text shallowly: scalar samples
+//! become a table, histogram `_bucket` lines are summarized, and exemplars
+//! (`# {span_id="..."} v ts`, see [`crate::obs::metrics`]) on latency
+//! families are listed as annotations linking buckets to trace spans.
+
+use super::registry::{MetricKind, Registry, DEFAULT_THRESHOLD};
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+/// A live metrics exposition to append under the trajectories.
+#[derive(Clone, Debug)]
+pub struct LiveSource {
+    /// Where the exposition came from (a file path or `host:port`) —
+    /// rendered in the section heading.
+    pub origin: String,
+    /// The raw Prometheus text exposition.
+    pub text: String,
+}
+
+/// Fixed series palette; config hashes map onto it by sorted position.
+const PALETTE: [&str; 8] = [
+    "#2563eb", "#dc2626", "#16a34a", "#9333ea", "#ea580c", "#0891b2", "#4d7c0f", "#be185d",
+];
+
+/// Sparkline geometry (viewBox units).
+const SVG_W: f64 = 560.0;
+/// Sparkline height (viewBox units).
+const SVG_H: f64 = 96.0;
+/// Inner padding keeping strokes off the frame.
+const PAD: f64 = 10.0;
+
+/// Escape a string for HTML text/attribute positions.
+fn esc(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '&' => out.push_str("&amp;"),
+            '<' => out.push_str("&lt;"),
+            '>' => out.push_str("&gt;"),
+            '"' => out.push_str("&quot;"),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Shortest stable rendering of a metric value for labels.
+fn fmt_val(v: f64) -> String {
+    if v.fract() == 0.0 && v.abs() < 1e15 {
+        format!("{}", v as i64)
+    } else if v.abs() >= 1000.0 {
+        format!("{v:.1}")
+    } else {
+        format!("{v:.6}")
+    }
+}
+
+/// Render the full dashboard document.
+pub fn render_dash(registries: &[Registry], live: Option<&LiveSource>) -> String {
+    let mut out = String::new();
+    out.push_str(
+        "<!DOCTYPE html>\n<html lang=\"en\">\n<head>\n<meta charset=\"utf-8\">\n\
+         <title>skipper perf dashboard</title>\n<style>\n\
+         body{font:14px/1.5 system-ui,sans-serif;margin:2rem auto;max-width:64rem;\
+         padding:0 1rem;color:#111}\n\
+         h1{font-size:1.4rem} h2{font-size:1.15rem;margin-top:2rem;\
+         border-bottom:1px solid #ddd;padding-bottom:.25rem}\n\
+         h3{font-size:.95rem;margin:.9rem 0 .25rem}\n\
+         .kind{font-weight:normal;color:#666;font-size:.8rem;margin-left:.5rem}\n\
+         .legend{font-size:.8rem;color:#444;margin:.25rem 0}\n\
+         .legend b{font-family:monospace;font-weight:normal}\n\
+         svg.sparkline{display:block;background:#fafafa;border:1px solid #e5e5e5;\
+         border-radius:4px}\n\
+         table{border-collapse:collapse;font-size:.85rem}\n\
+         td,th{border:1px solid #ddd;padding:.15rem .5rem;text-align:left}\n\
+         td.num{text-align:right;font-variant-numeric:tabular-nums}\n\
+         ul.exemplars{font-size:.85rem} ul.exemplars code{background:#f3f3f3;\
+         padding:0 .25rem;border-radius:3px}\n\
+         .empty{color:#666;font-style:italic}\n\
+         .origin{font-weight:normal;color:#666;font-size:.8rem;margin-left:.5rem}\n\
+         </style>\n</head>\n<body>\n<h1>skipper perf dashboard</h1>\n",
+    );
+    if registries.is_empty() {
+        out.push_str("<p class=\"empty\">No BENCH_*.json registries found.</p>\n");
+    }
+    for reg in registries {
+        render_bench(&mut out, reg);
+    }
+    if let Some(live) = live {
+        render_live(&mut out, live);
+    }
+    out.push_str("</body>\n</html>\n");
+    out
+}
+
+/// One bench section: legend of config hashes plus a sparkline panel per
+/// metric the trajectory has ever recorded.
+fn render_bench(out: &mut String, reg: &Registry) {
+    let _ = writeln!(out, "<h2 id=\"bench-{0}\">{0}</h2>", esc(&reg.bench));
+    if reg.runs.is_empty() {
+        // keep a greppable (empty) sparkline so CI sees the trajectory
+        let _ = writeln!(
+            out,
+            "<p class=\"empty\">No committed runs yet.</p>\n\
+             <svg class=\"sparkline\" data-bench=\"{}\" width=\"{SVG_W}\" height=\"{SVG_H}\" \
+             viewBox=\"0 0 {SVG_W} {SVG_H}\"></svg>",
+            esc(&reg.bench)
+        );
+        return;
+    }
+    // sorted config hashes -> palette slots; sorted order keeps the color
+    // assignment independent of run order
+    let mut hashes: Vec<String> = reg.runs.iter().map(|r| r.config_hash()).collect();
+    hashes.sort_unstable();
+    hashes.dedup();
+    let color_of = |hash: &str| -> &'static str {
+        let idx = hashes.iter().position(|h| h == hash).unwrap_or(0);
+        PALETTE[idx % PALETTE.len()]
+    };
+    out.push_str("<p class=\"legend\">");
+    for (i, h) in hashes.iter().enumerate() {
+        let runs = reg.runs.iter().filter(|r| &r.config_hash() == h).count();
+        if i > 0 {
+            out.push_str(" &middot; ");
+        }
+        let _ = write!(
+            out,
+            "<span style=\"color:{}\">&#9632;</span> config <b>{}</b> ({} run{})",
+            color_of(h),
+            esc(h),
+            runs,
+            if runs == 1 { "" } else { "s" }
+        );
+    }
+    out.push_str("</p>\n");
+    // every metric this trajectory has ever recorded, sorted
+    let mut metric_names: Vec<&str> = Vec::new();
+    for run in &reg.runs {
+        for name in run.metrics.keys() {
+            if !metric_names.contains(&name.as_str()) {
+                metric_names.push(name);
+            }
+        }
+    }
+    metric_names.sort_unstable();
+    for metric in metric_names {
+        render_metric_panel(out, reg, metric, &color_of);
+    }
+}
+
+/// The sparkline panel of one metric over one trajectory.
+fn render_metric_panel(
+    out: &mut String,
+    reg: &Registry,
+    metric: &str,
+    color_of: &dyn Fn(&str) -> &'static str,
+) {
+    let kind = MetricKind::of(metric);
+    let kind_label = match kind {
+        MetricKind::Exact => "exact (bit-for-bit gated)",
+        MetricKind::HigherIsBetter => "throughput (higher is better)",
+        MetricKind::LowerIsBetter => "wall time (lower is better)",
+        MetricKind::Advisory => "advisory (not gated)",
+    };
+    // (run index, config hash, value) for every run carrying this metric
+    let points: Vec<(usize, String, f64)> = reg
+        .runs
+        .iter()
+        .enumerate()
+        .filter_map(|(i, r)| r.metrics.get(metric).map(|v| (i, r.config_hash(), *v)))
+        .collect();
+    if points.is_empty() {
+        return;
+    }
+    let mut lo = f64::INFINITY;
+    let mut hi = f64::NEG_INFINITY;
+    for (_, _, v) in &points {
+        lo = lo.min(*v);
+        hi = hi.max(*v);
+    }
+    // pad a flat series so the single line doesn't sit on the frame
+    if hi - lo < f64::EPSILON * hi.abs().max(1.0) {
+        let pad = hi.abs().max(1.0) * 0.1;
+        lo -= pad;
+        hi += pad;
+    }
+    let span = hi - lo;
+    let n_runs = reg.runs.len();
+    let x_of = |i: usize| -> f64 {
+        if n_runs <= 1 {
+            SVG_W / 2.0
+        } else {
+            PAD + (SVG_W - 2.0 * PAD) * i as f64 / (n_runs - 1) as f64
+        }
+    };
+    let y_of = |v: f64| -> f64 { PAD + (SVG_H - 2.0 * PAD) * (1.0 - (v - lo) / span) };
+    let _ = writeln!(
+        out,
+        "<h3>{} <span class=\"kind\">{}</span></h3>\n\
+         <svg class=\"sparkline\" data-bench=\"{}\" data-metric=\"{}\" width=\"{SVG_W}\" \
+         height=\"{SVG_H}\" viewBox=\"0 0 {SVG_W} {SVG_H}\" role=\"img\" \
+         aria-label=\"{} trajectory\">",
+        esc(metric),
+        kind_label,
+        esc(&reg.bench),
+        esc(metric),
+        esc(metric),
+    );
+    // gate band: what report --gate would tolerate around the newest
+    // committed value (drawn first, under the series)
+    if matches!(kind, MetricKind::HigherIsBetter | MetricKind::LowerIsBetter) {
+        let newest = points.last().map(|(_, _, v)| *v).unwrap_or(0.0);
+        let band_lo = (newest * (1.0 - DEFAULT_THRESHOLD)).max(lo);
+        let band_hi = (newest * (1.0 + DEFAULT_THRESHOLD)).min(hi);
+        if band_hi > band_lo {
+            let y_top = y_of(band_hi);
+            let h = y_of(band_lo) - y_top;
+            let _ = writeln!(
+                out,
+                "<rect class=\"gate-band\" x=\"{PAD:.1}\" y=\"{y_top:.1}\" \
+                 width=\"{:.1}\" height=\"{h:.1}\" fill=\"#d1fae5\" opacity=\"0.7\">\
+                 <title>gate band: newest &plusmn;{:.0}%</title></rect>",
+                SVG_W - 2.0 * PAD,
+                DEFAULT_THRESHOLD * 100.0
+            );
+        }
+    }
+    // one series per config hash, in sorted-hash order (stable bytes)
+    let mut by_hash: BTreeMap<&str, Vec<(usize, f64)>> = BTreeMap::new();
+    for (i, h, v) in &points {
+        by_hash.entry(h.as_str()).or_default().push((*i, *v));
+    }
+    for (hash, series) in &by_hash {
+        let color = color_of(hash);
+        if series.len() > 1 {
+            let coords: Vec<String> = series
+                .iter()
+                .map(|(i, v)| format!("{:.1},{:.1}", x_of(*i), y_of(*v)))
+                .collect();
+            let _ = writeln!(
+                out,
+                "<polyline fill=\"none\" stroke=\"{color}\" stroke-width=\"1.5\" \
+                 points=\"{}\"/>",
+                coords.join(" ")
+            );
+        }
+        for (i, v) in series {
+            let _ = writeln!(
+                out,
+                "<circle cx=\"{:.1}\" cy=\"{:.1}\" r=\"2.5\" fill=\"{color}\">\
+                 <title>run {}: {}</title></circle>",
+                x_of(*i),
+                y_of(*v),
+                i + 1,
+                fmt_val(*v)
+            );
+        }
+    }
+    // newest value, printed at the right edge
+    if let Some((_, _, v)) = points.last() {
+        let _ = writeln!(
+            out,
+            "<text x=\"{:.1}\" y=\"{:.1}\" font-size=\"10\" fill=\"#333\" \
+             text-anchor=\"end\">{}</text>",
+            SVG_W - 2.0,
+            12.0,
+            fmt_val(*v)
+        );
+    }
+    out.push_str("</svg>\n");
+}
+
+/// One exemplar pulled off a histogram bucket line.
+struct BucketExemplar {
+    family: String,
+    le: String,
+    span_id: String,
+    value: String,
+}
+
+/// Shallow exposition scan: scalar samples (name+labels → value), bucket
+/// counts per family, and bucket exemplars.
+struct LiveParse {
+    scalars: Vec<(String, String)>,
+    bucket_families: BTreeMap<String, u64>,
+    exemplars: Vec<BucketExemplar>,
+}
+
+fn parse_live(text: &str) -> LiveParse {
+    let mut out = LiveParse {
+        scalars: Vec::new(),
+        bucket_families: BTreeMap::new(),
+        exemplars: Vec::new(),
+    };
+    for line in text.lines() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let (sample, exemplar) = match line.split_once(" # ") {
+            Some((s, e)) => (s.trim_end(), Some(e)),
+            None => (line, None),
+        };
+        let name_end = sample.find(['{', ' ']).unwrap_or(sample.len());
+        let name = &sample[..name_end];
+        if let Some(family) = name.strip_suffix("_bucket") {
+            *out.bucket_families.entry(family.to_string()).or_insert(0) += 1;
+            if let Some(ex) = exemplar {
+                let le = label_value(sample, "le").unwrap_or_default();
+                let span_id = label_value(ex, "span_id").unwrap_or_default();
+                // exemplar value: first token after the closing brace
+                let value = ex
+                    .split_once('}')
+                    .map(|(_, rest)| rest.trim())
+                    .and_then(|rest| rest.split_whitespace().next())
+                    .unwrap_or("")
+                    .to_string();
+                out.exemplars.push(BucketExemplar {
+                    family: family.to_string(),
+                    le,
+                    span_id,
+                    value,
+                });
+            }
+            continue;
+        }
+        // scalar sample: series id (name + labels) and the value token
+        let series_end = match sample.find('{') {
+            Some(b) => sample[b..].find('}').map(|e| b + e + 1).unwrap_or(sample.len()),
+            None => name_end,
+        };
+        let series = &sample[..series_end];
+        let value = sample[series_end..].split_whitespace().next().unwrap_or("");
+        out.scalars.push((series.to_string(), value.to_string()));
+    }
+    out
+}
+
+/// First `key="…"` label value inside the braces of `s`.
+fn label_value(s: &str, key: &str) -> Option<String> {
+    let open = s.find('{')?;
+    let close = s[open..].find('}')? + open;
+    let body = &s[open + 1..close];
+    for pair in body.split(',') {
+        let (k, v) = pair.split_once('=')?;
+        if k.trim() == key {
+            return Some(v.trim().trim_matches('"').to_string());
+        }
+    }
+    None
+}
+
+/// The live snapshot section: scalar table, bucket summary, exemplar
+/// annotations on latency families.
+fn render_live(out: &mut String, live: &LiveSource) {
+    let parsed = parse_live(&live.text);
+    let _ = writeln!(
+        out,
+        "<h2 id=\"live\">Live snapshot <span class=\"origin\">{}</span></h2>",
+        esc(&live.origin)
+    );
+    if parsed.scalars.is_empty() && parsed.bucket_families.is_empty() {
+        out.push_str("<p class=\"empty\">The exposition carried no samples.</p>\n");
+        return;
+    }
+    if !parsed.scalars.is_empty() {
+        out.push_str("<table>\n<tr><th>series</th><th>value</th></tr>\n");
+        for (series, value) in &parsed.scalars {
+            let _ = writeln!(
+                out,
+                "<tr><td><code>{}</code></td><td class=\"num\">{}</td></tr>",
+                esc(series),
+                esc(value)
+            );
+        }
+        out.push_str("</table>\n");
+    }
+    if !parsed.bucket_families.is_empty() {
+        out.push_str("<h3>Histograms</h3>\n<table>\n<tr><th>family</th><th>buckets</th></tr>\n");
+        for (family, buckets) in &parsed.bucket_families {
+            let _ = writeln!(
+                out,
+                "<tr><td><code>{}</code></td><td class=\"num\">{}</td></tr>",
+                esc(family),
+                buckets
+            );
+        }
+        out.push_str("</table>\n");
+    }
+    if !parsed.exemplars.is_empty() {
+        out.push_str(
+            "<h3>Latency exemplars</h3>\n<p class=\"legend\">Each links a histogram bucket to \
+             the span that produced its most recent sample (resolve the span id against a \
+             TRACE dump or blackbox artifact).</p>\n<ul class=\"exemplars\">\n",
+        );
+        for ex in &parsed.exemplars {
+            let _ = writeln!(
+                out,
+                "<li><code>{}</code> le={} value={} span_id=<code>{}</code></li>",
+                esc(&ex.family),
+                esc(&ex.le),
+                esc(&ex.value),
+                esc(&ex.span_id)
+            );
+        }
+        out.push_str("</ul>\n");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::registry::BenchRecord;
+    use std::collections::BTreeMap;
+
+    fn rec(bench: &str, layout: &str, wall: f64, when: u64) -> BenchRecord {
+        let mut config = BTreeMap::new();
+        config.insert("layout".to_string(), layout.to_string());
+        let mut metrics = BTreeMap::new();
+        metrics.insert("epoch_wall_p50_s".to_string(), wall);
+        metrics.insert("updates_per_s".to_string(), 1000.0 / wall);
+        metrics.insert("exact_final_live_edges".to_string(), 2048.0);
+        let mut r = BenchRecord::new(bench, config, metrics);
+        r.recorded_unix_s = when; // pin: rendered HTML must not depend on now
+        r
+    }
+
+    fn sample_registry() -> Registry {
+        let mut reg = Registry::new("churn_test");
+        reg.publish(rec("churn_test", "flat", 0.2, 100)).unwrap();
+        reg.publish(rec("churn_test", "blocked64", 0.1, 200)).unwrap();
+        reg.publish(rec("churn_test", "blocked64", 0.11, 300)).unwrap();
+        reg
+    }
+
+    #[test]
+    fn dash_renders_sparklines_per_bench_with_gate_bands() {
+        let html = render_dash(&[sample_registry()], None);
+        assert!(html.contains("<!DOCTYPE html>"), "self-contained document");
+        assert!(html.contains("data-bench=\"churn_test\""), "{html}");
+        assert!(html.contains("data-metric=\"updates_per_s\""), "{html}");
+        assert!(html.contains("gate-band"), "gated metrics draw a band: {html}");
+        assert!(html.contains("<polyline"), "multi-run config draws a line");
+        // two config hashes -> two legend entries
+        assert_eq!(html.matches("config <b>").count(), 2, "{html}");
+        assert!(!html.contains("<script"), "no JS anywhere");
+    }
+
+    #[test]
+    fn dash_is_deterministic_byte_for_byte() {
+        let a = render_dash(&[sample_registry()], None);
+        let b = render_dash(&[sample_registry()], None);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn dash_renders_empty_registry_with_greppable_sparkline() {
+        let html = render_dash(&[Registry::new("quiet")], None);
+        assert!(html.contains("data-bench=\"quiet\""), "{html}");
+        assert!(html.contains("No committed runs yet"), "{html}");
+        let none = render_dash(&[], None);
+        assert!(none.contains("No BENCH_*.json registries found"), "{none}");
+    }
+
+    #[test]
+    fn live_section_tables_scalars_and_annotates_exemplars() {
+        let text = "# HELP skipper_wal_fsync_seconds t\n\
+                    # TYPE skipper_wal_fsync_seconds histogram\n\
+                    skipper_wal_fsync_seconds_bucket{le=\"0.001\"} 3 # {span_id=\"00000000000000ab\"} 0.0009 1.5\n\
+                    skipper_wal_fsync_seconds_bucket{le=\"+Inf\"} 3\n\
+                    skipper_wal_fsync_seconds_sum 0.002\n\
+                    skipper_wal_fsync_seconds_count 3\n\
+                    skipper_epochs_total 41\n\
+                    # EOF\n";
+        let live = LiveSource { origin: "/tmp/m.prom".to_string(), text: text.to_string() };
+        let html = render_dash(&[], Some(&live));
+        assert!(html.contains("Live snapshot"), "{html}");
+        assert!(html.contains("/tmp/m.prom"), "{html}");
+        assert!(html.contains("<code>skipper_epochs_total</code>"), "{html}");
+        assert!(html.contains("Latency exemplars"), "{html}");
+        assert!(html.contains("00000000000000ab"), "{html}");
+        assert!(html.contains("le=0.001"), "{html}");
+        assert!(html.contains("value=0.0009"), "{html}");
+        // the histogram family shows up summarized, not as raw bucket rows
+        assert!(html.contains("<code>skipper_wal_fsync_seconds</code>"), "{html}");
+        assert!(!html.contains("_bucket{"), "{html}");
+    }
+
+    #[test]
+    fn html_escaping_covers_text_and_attributes() {
+        assert_eq!(esc("a<b>&\"c\""), "a&lt;b&gt;&amp;&quot;c&quot;");
+    }
+}

@@ -1,11 +1,12 @@
 //! Experiment coordinator: dataset registry (the scaled analogue suite),
 //! cost-model calibration against real host measurements, the experiment
 //! registry (one entry per paper table/figure — DESIGN.md §5), report
-//! writers, and the committed perf-trajectory registry ([`registry`],
-//! `BENCH_*.json`).
+//! writers, the committed perf-trajectory registry ([`registry`],
+//! `BENCH_*.json`), and the static HTML dashboard renderer ([`dash`]).
 
 pub mod calibrate;
 pub mod config;
+pub mod dash;
 pub mod datasets;
 pub mod experiments;
 pub mod registry;

@@ -232,6 +232,10 @@ pub struct ChurnSummary {
     pub final_matched_vertices: usize,
     /// Epochs whose post-epoch verification passed.
     pub verified_epochs: usize,
+    /// The end-of-run Prometheus exposition of the process-global metrics
+    /// registry — what `churn --metrics-file` writes, byte-identical to a
+    /// final `METRICS` scrape of the same instruments (engine, pool, WAL).
+    pub metrics_text: String,
 }
 
 /// Drive a full warmup + churn schedule, invoking `observe` after every
@@ -378,6 +382,7 @@ pub fn run_churn(
     summary.final_live_edges = engine.num_live_edges();
     summary.final_adjacency_bytes = engine.adjacency_bytes();
     summary.final_matched_vertices = engine.matched_vertices();
+    summary.metrics_text = crate::obs::metrics::global().render_prometheus();
 
     // --- save: persist the warmed/churned state for instant restarts -----
     if let Some(path) = &cfg.save {
@@ -416,6 +421,10 @@ mod tests {
             assert_eq!(seen, summary.epochs + summary.warmup_epochs);
             assert!(summary.final_live_edges > 0);
             assert!(summary.final_matched_vertices > 0);
+            assert!(
+                summary.metrics_text.ends_with("# EOF\n"),
+                "metrics exposition must be EOF-framed"
+            );
         }
     }
 

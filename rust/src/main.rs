@@ -17,7 +17,11 @@
 //!   lint        validate observability artifacts offline: a Prometheus
 //!               metrics dump (a METRICS scrape or --metrics-file) and/or
 //!               a Chrome trace JSON (--trace-out), with --require
-//!               span-name assertions — the CI smoke gate
+//!               span-name assertions and --require-exemplars
+//!               exemplar/span cross-reference checks — the CI smoke gate
+//!   dash        render every committed BENCH_*.json trajectory (plus an
+//!               optional live metrics snapshot) as one dependency-free
+//!               static HTML dashboard — inline SVG sparklines, no JS
 //!   info        print dataset/suite information
 
 use skipper::apram::{simulate_skipper, SimConfig};
@@ -41,6 +45,7 @@ use skipper::matching::sgmm::Sgmm;
 use skipper::matching::skipper::Skipper;
 use skipper::matching::streaming::{StreamingSkipper, DEFAULT_CHUNK_EDGES};
 use skipper::matching::{verify, MaximalMatcher};
+use skipper::coordinator::dash::{render_dash, LiveSource};
 use skipper::coordinator::registry::{self, BenchRecord, Registry};
 use skipper::obs::{metrics, trace};
 use skipper::dynamic::churn::{run_churn, ChurnConfig, ChurnGen};
@@ -98,7 +103,10 @@ USAGE:
                drain and write a final snapshot, and the next boot
                recovers: newest valid snapshot + WAL replay, verified
                maximal before going live. --debug-commands enables the
-               CRASH fault-injection command for recovery testing.
+               CRASH fault-injection command for recovery testing and the
+               BLACKBOX command (dump a post-mortem metrics+trace artifact
+               into --data-dir on demand); a router/flusher panic writes
+               the same blackbox-<ts>.json artifact automatically.
                Observability: the METRICS command returns a Prometheus
                text scrape and TRACE [n] one Chrome-trace JSON line, both
                specified in docs/PROTOCOL.md. --trace turns span recording
@@ -134,7 +142,7 @@ USAGE:
               [--layout flat|blocked|blocked<N>] [--block-bytes N]
               [--pin none|compact|spread] [--numa]
               [--no-verify] [--save FILE] [--load FILE] [--record FILE]
-              [--trace-out FILE]
+              [--trace-out FILE] [--metrics-file FILE]
               (mixed insert/delete epochs over the dynamic engine; verifies
                maximality over the LIVE edge set after every epoch and
                reports spawn-vs-run mutate timings — --no-pool selects the
@@ -152,7 +160,10 @@ USAGE:
                metrics as a candidate record for `skipper-cli report`.
                --trace-out FILE enables span recording for the run and
                writes the collected spans as Chrome trace-event JSON —
-               open in chrome://tracing or `lint --trace` it)
+               open in chrome://tracing or `lint --trace` it.
+               --metrics-file FILE writes the end-of-run Prometheus
+               exposition of the process-global registry, identical to a
+               final METRICS scrape of the same instruments)
   skipper-cli report [--dir BENCH] [--publish FILE | --gate FILE [--threshold T]]
               (the committed perf-trajectory registry, BENCH_<bench>.json
                under --dir. With no action: render every registry as a
@@ -165,13 +176,30 @@ USAGE:
                strictly only when the machine manifests match and warn
                otherwise, and an unseen config passes as a seeding run)
   skipper-cli lint [--metrics FILE] [--trace FILE] [--require a,b,c]
+              [--require-exemplars fam1,fam2]
               (validate observability artifacts offline and exit non-zero
                on any violation — the CI smoke gate. --metrics checks a
                Prometheus text-format dump (a captured METRICS scrape or a
-               serve --metrics-file) for syntactic validity; --trace checks
-               a Chrome trace-event JSON file (serve/churn --trace-out);
-               --require fails unless every comma-separated span name
-               appears in the trace)
+               serve --metrics-file) for syntactic validity, exemplar
+               syntax included; --trace checks a Chrome trace-event JSON
+               file (serve/churn --trace-out); --require fails unless
+               every comma-separated span name appears in the trace;
+               --require-exemplars fails unless every listed histogram
+               family carries at least one exemplar in --metrics, and —
+               when --trace rides along — unless every exemplar span_id
+               resolves to a span in the trace (no dangling ids))
+  skipper-cli dash [--dir BENCH] [--out dash.html]
+              [--metrics FILE | --metrics-addr HOST:PORT]
+              (render the committed perf-trajectory registries as one
+               self-contained static HTML dashboard: per-metric SVG
+               sparklines of every BENCH_*.json run series, colored per
+               config hash, with the report --gate ±threshold band drawn
+               around the newest committed value. No JavaScript, no
+               external assets — the file is safe to open anywhere.
+               --metrics FILE appends a live-snapshot section from a saved
+               exposition; --metrics-addr scrapes GET /metrics once from a
+               running serve --metrics-addr endpoint instead. Histogram
+               exemplars in the snapshot are listed with their span ids)
   skipper-cli info
 ";
 
@@ -215,6 +243,7 @@ fn main() {
         "churn" => cmd_churn(&args),
         "report" => cmd_report(&args),
         "lint" => cmd_lint(&args),
+        "dash" => cmd_dash(&args),
         "info" => cmd_info(),
         other => Err(format!("unknown command {other:?}\n{USAGE}")),
     };
@@ -852,6 +881,10 @@ fn cmd_churn(args: &Args) -> Result<(), String> {
             rec.config_hash()
         );
     }
+    if let Some(path) = args.get("metrics-file") {
+        std::fs::write(path, &summary.metrics_text).map_err(|e| format!("{path}: {e}"))?;
+        println!("metrics: end-of-run Prometheus exposition -> {path}");
+    }
     if let Some(path) = trace_out {
         trace::set_enabled(false);
         let events = trace::collect();
@@ -917,6 +950,10 @@ fn cmd_lint(args: &Args) -> Result<(), String> {
     if args.get("require").is_some() && trace_path.is_none() {
         return Err("--require asserts span names, so it needs --trace FILE".into());
     }
+    if args.get("require-exemplars").is_some() && metrics_path.is_none() {
+        return Err("--require-exemplars asserts exemplar labels, so it needs --metrics FILE".into());
+    }
+    let mut metrics_text = None;
     if let Some(path) = metrics_path {
         let text = std::fs::read_to_string(path).map_err(|e| format!("{path}: {e}"))?;
         metrics::validate_prometheus(&text).map_err(|e| format!("{path}: {e}"))?;
@@ -924,7 +961,9 @@ fn cmd_lint(args: &Args) -> Result<(), String> {
             "lint: {path}: valid Prometheus exposition ({} lines)",
             text.lines().count()
         );
+        metrics_text = Some(text);
     }
+    let mut trace_text = None;
     if let Some(path) = trace_path {
         let text = std::fs::read_to_string(path).map_err(|e| format!("{path}: {e}"))?;
         let names = trace::validate_chrome_trace(&text).map_err(|e| format!("{path}: {e}"))?;
@@ -943,8 +982,107 @@ fn cmd_lint(args: &Args) -> Result<(), String> {
             }
             println!("lint: {path}: all required spans present ({req})");
         }
+        trace_text = Some(text);
+    }
+    if let Some(req) = args.get("require-exemplars") {
+        // presence of --metrics was checked up front
+        let mpath = metrics_path.unwrap();
+        let text = metrics_text.as_deref().unwrap();
+        // when a trace rides along, exemplar span ids must resolve into it
+        let trace_ids = match (&trace_text, trace_path) {
+            (Some(t), Some(tpath)) => {
+                Some(trace::chrome_trace_span_ids(t).map_err(|e| format!("{tpath}: {e}"))?)
+            }
+            _ => None,
+        };
+        for family in req.split(',').map(str::trim).filter(|s| !s.is_empty()) {
+            let ids = metrics::exemplar_span_ids(text, family);
+            if ids.is_empty() {
+                return Err(format!(
+                    "{mpath}: histogram family {family:?} carries no bucket exemplars \
+                     (was the run traced? exemplars attach only inside live spans)"
+                ));
+            }
+            if let (Some(trace_ids), Some(tpath)) = (&trace_ids, trace_path) {
+                for id in &ids {
+                    if !trace_ids.iter().any(|t| t == id) {
+                        return Err(format!(
+                            "{mpath}: exemplar span_id {id:?} on family {family:?} does not \
+                             resolve to any span in {tpath} (dangling span id)"
+                        ));
+                    }
+                }
+            }
+            println!(
+                "lint: {mpath}: family {family}: {} exemplar span id{}{}",
+                ids.len(),
+                if ids.len() == 1 { "" } else { "s" },
+                if trace_ids.is_some() {
+                    ", all resolve in the trace"
+                } else {
+                    ""
+                }
+            );
+        }
     }
     Ok(())
+}
+
+/// Render the committed perf registries (and an optional live metrics
+/// snapshot) as one self-contained static HTML dashboard.
+fn cmd_dash(args: &Args) -> Result<(), String> {
+    let dir = Path::new(args.get_or("dir", "BENCH"));
+    let out = args.get_or("out", "dash.html");
+    if args.get("metrics").is_some() && args.get("metrics-addr").is_some() {
+        return Err("--metrics and --metrics-addr are mutually exclusive".into());
+    }
+    let live = if let Some(path) = args.get("metrics") {
+        let text = std::fs::read_to_string(path).map_err(|e| format!("{path}: {e}"))?;
+        Some(LiveSource { origin: path.to_string(), text })
+    } else if let Some(addr) = args.get("metrics-addr") {
+        Some(LiveSource {
+            origin: format!("http://{addr}/metrics"),
+            text: scrape_metrics(addr)?,
+        })
+    } else {
+        None
+    };
+    let regs = Registry::load_dir(dir)?;
+    let html = render_dash(&regs, live.as_ref());
+    std::fs::write(out, &html).map_err(|e| format!("{out}: {e}"))?;
+    println!(
+        "dash: {} bench registr{} ({} committed runs){} -> {out}",
+        regs.len(),
+        if regs.len() == 1 { "y" } else { "ies" },
+        regs.iter().map(|r| r.runs.len()).sum::<usize>(),
+        if live.is_some() { " + live snapshot" } else { "" },
+    );
+    Ok(())
+}
+
+/// One-shot `GET /metrics` scrape of a `serve --metrics-addr` endpoint.
+fn scrape_metrics(addr: &str) -> Result<String, String> {
+    use std::io::{Read, Write};
+    let mut stream = std::net::TcpStream::connect(addr).map_err(|e| format!("{addr}: {e}"))?;
+    stream
+        .set_read_timeout(Some(std::time::Duration::from_secs(10)))
+        .map_err(|e| format!("{addr}: {e}"))?;
+    let req = format!("GET /metrics HTTP/1.0\r\nHost: {addr}\r\nConnection: close\r\n\r\n");
+    stream
+        .write_all(req.as_bytes())
+        .map_err(|e| format!("{addr}: {e}"))?;
+    let mut raw = String::new();
+    stream
+        .read_to_string(&mut raw)
+        .map_err(|e| format!("{addr}: {e}"))?;
+    let (head, body) = raw
+        .split_once("\r\n\r\n")
+        .ok_or_else(|| format!("{addr}: malformed HTTP response"))?;
+    let status = head.lines().next().unwrap_or("");
+    if !status.contains(" 200 ") {
+        return Err(format!("{addr}: scrape failed: {status}"));
+    }
+    Ok(body.to_string())
 }
 
 fn cmd_info() -> Result<(), String> {

@@ -1,0 +1,95 @@
+//! Crash blackbox: a post-mortem artifact combining the full metrics
+//! exposition with the recent span trace, written to the service's data
+//! dir when a coordinator thread panics (the `ExitOnPanic` exit-70 path)
+//! or on the `BLACKBOX` debug command.
+//!
+//! The artifact is one JSON file, `blackbox-<ts>.json`, whose shape is:
+//!
+//! ```text
+//! {
+//!   "schema": "skipper-blackbox-v1",
+//!   "written_unix_ms": <u64>,            // wall clock at dump time
+//!   "role": "<who dumped: router|flusher|command|...>",
+//!   "metrics": "<full Prometheus text exposition, # EOF framed>",
+//!   "trace": { Chrome trace-event document of the last N epochs }
+//! }
+//! ```
+//!
+//! `trace` embeds the same document `TRACE <n>` serves (empty
+//! `traceEvents` when the process runs without `--trace`), so exemplar
+//! `span_id` labels inside the `metrics` string resolve against the
+//! `trace` object of the same artifact — one self-contained file carries
+//! both halves of the link.
+
+use crate::obs::trace;
+use crate::util::json::Json;
+use std::path::{Path, PathBuf};
+
+/// How many trailing epochs of span history a blackbox dump retains.
+/// The flight-recorder rings are bounded anyway; this keeps the artifact
+/// focused on the incident window.
+pub const BLACKBOX_TRACE_EPOCHS: u64 = 256;
+
+/// Milliseconds since the Unix epoch, for the artifact filename and the
+/// `written_unix_ms` field.
+fn unix_ms() -> u64 {
+    std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_millis().min(u128::from(u64::MAX)) as u64)
+        .unwrap_or(0)
+}
+
+/// Dump a blackbox artifact into `dir`. `role` names the dumper (the
+/// panicking thread's role, or `"command"` for `BLACKBOX`); `metrics_text`
+/// is the full exposition the caller already knows how to render. The
+/// trace document is collected here — the last
+/// [`BLACKBOX_TRACE_EPOCHS`] epochs of every ring. Returns the written
+/// path. Never panics: this runs on the panic path itself.
+pub fn write_blackbox(dir: &Path, role: &str, metrics_text: &str) -> Result<PathBuf, String> {
+    let events = trace::last_epochs(trace::collect(), BLACKBOX_TRACE_EPOCHS);
+    let trace_doc = trace::chrome_trace_json(&events);
+    let ts = unix_ms();
+    let mut doc = Json::obj();
+    doc.set("schema", Json::from("skipper-blackbox-v1"))
+        .set("written_unix_ms", Json::from(ts))
+        .set("role", Json::from(role))
+        .set("metrics", Json::from(metrics_text))
+        .set("trace", trace_doc);
+    let mut path = dir.join(format!("blackbox-{ts}.json"));
+    // same-millisecond collision (two dumps racing): pick a fresh name
+    // rather than clobbering the first incident's evidence
+    let mut bump = 0u32;
+    while path.exists() {
+        bump += 1;
+        path = dir.join(format!("blackbox-{ts}-{bump}.json"));
+    }
+    let text = doc.render_compact();
+    std::fs::write(&path, text.as_bytes())
+        .map_err(|e| format!("blackbox write {}: {e}", path.display()))?;
+    Ok(path)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn blackbox_artifact_is_parseable_and_self_contained() {
+        let dir = std::env::temp_dir().join(format!("skipper-bb-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let metrics = "# HELP x y\n# TYPE x counter\nx 1\n# EOF\n";
+        let path = write_blackbox(&dir, "test", metrics).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let doc = crate::util::json::parse(&text).unwrap();
+        assert_eq!(doc.get("schema").and_then(Json::as_str), Some("skipper-blackbox-v1"));
+        assert_eq!(doc.get("role").and_then(Json::as_str), Some("test"));
+        assert_eq!(doc.get("metrics").and_then(Json::as_str), Some(metrics));
+        let trace = doc.get("trace").expect("trace document embedded");
+        assert!(trace.get("traceEvents").and_then(Json::as_arr).is_some());
+        assert!(doc.get("written_unix_ms").and_then(Json::as_u64).is_some());
+        // a second dump in the same millisecond must not clobber the first
+        let path2 = write_blackbox(&dir, "test", metrics).unwrap();
+        assert_ne!(path, path2);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

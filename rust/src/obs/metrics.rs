@@ -18,10 +18,19 @@
 //!   within one bucket's relative error of the exact percentile over the
 //!   *full* recording history — unlike a bounded latency ring, nothing is
 //!   ever evicted.
+//! * **Buckets carry exemplars when tracing is on.** A sample recorded
+//!   while the thread is inside a [`crate::obs::trace::SpanGuard`] stamps
+//!   its bucket with an [`Exemplar`] — the raw value plus the span's
+//!   id/epoch/tid and a timestamp on the trace clock. The exporter
+//!   renders them in OpenMetrics `# {span_id="..."} value ts` syntax, so
+//!   a p999 spike in a scrape resolves to the exact span in the `TRACE`
+//!   output. With tracing off (the default) the capture path is one
+//!   thread-local read per sample.
 //!
 //! The [`global`] registry is what the `METRICS` protocol command, the
 //! `serve --metrics-file` writer, and the bench record emitters export.
 
+use crate::obs::trace;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex, OnceLock};
 
@@ -211,6 +220,24 @@ pub fn bucket_bounds(idx: usize) -> (u64, u64) {
     (lo, hi)
 }
 
+/// One bucket's most recent in-span sample: the link from a histogram
+/// bucket back to the trace span that produced it.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Exemplar {
+    /// The raw recorded sample (pre-scale: nanoseconds for `_seconds`
+    /// histograms, exported scaled like the bucket bounds).
+    pub value: u64,
+    /// Capture time in microseconds on the trace clock
+    /// ([`trace::now_us`]), the same origin span `ts` values use.
+    pub ts_us: u64,
+    /// The recording thread's trace tid.
+    pub tid: u64,
+    /// The enclosing span's engine epoch (0 when it had none).
+    pub epoch: u64,
+    /// The enclosing span's process-unique id.
+    pub span_id: u64,
+}
+
 /// Fixed-bucket log-scale histogram over `u64` samples (latencies in
 /// nanoseconds, sizes in bytes). Recording is one relaxed `fetch_add`;
 /// the full history is retained in bucket form, so percentiles reflect
@@ -219,6 +246,12 @@ pub struct Histogram {
     buckets: Box<[AtomicU64]>,
     count: AtomicU64,
     sum: AtomicU64,
+    /// Sparse per-bucket exemplar slots, keyed by bucket index. Behind a
+    /// mutex taken with `try_lock` on the record path: exemplars are
+    /// best-effort monitoring, so a collision skips the update rather
+    /// than stall the recording thread. Only populated while tracing is
+    /// on (the current-span cell is empty otherwise).
+    exemplars: Mutex<Vec<(usize, Exemplar)>>,
 }
 
 impl Default for Histogram {
@@ -234,15 +267,47 @@ impl Histogram {
             buckets: (0..NUM_BUCKETS).map(|_| AtomicU64::new(0)).collect(),
             count: AtomicU64::new(0),
             sum: AtomicU64::new(0),
+            exemplars: Mutex::new(Vec::new()),
         }
     }
 
-    /// Record one sample.
+    /// Record one sample. When the calling thread is inside a live trace
+    /// span, the sample also becomes its bucket's exemplar.
     #[inline]
     pub fn record(&self, v: u64) {
-        self.buckets[bucket_of(v)].fetch_add(1, Ordering::Relaxed);
+        let idx = bucket_of(v);
+        self.buckets[idx].fetch_add(1, Ordering::Relaxed);
         self.count.fetch_add(1, Ordering::Relaxed);
         self.sum.fetch_add(v, Ordering::Relaxed);
+        if let Some(cur) = trace::current_span() {
+            self.attach_exemplar(
+                idx,
+                Exemplar {
+                    value: v,
+                    ts_us: trace::now_us(),
+                    tid: cur.tid,
+                    epoch: cur.epoch,
+                    span_id: cur.span_id,
+                },
+            );
+        }
+    }
+
+    fn attach_exemplar(&self, idx: usize, ex: Exemplar) {
+        if let Ok(mut slots) = self.exemplars.try_lock() {
+            match slots.iter_mut().find(|(i, _)| *i == idx) {
+                Some(slot) => slot.1 = ex,
+                None => slots.push((idx, ex)),
+            }
+        }
+    }
+
+    /// The retained exemplars as `(bucket_idx, exemplar)`, ascending by
+    /// bucket index.
+    pub fn exemplars(&self) -> Vec<(usize, Exemplar)> {
+        let mut out = self.exemplars.lock().unwrap().clone();
+        out.sort_by_key(|(i, _)| *i);
+        out
     }
 
     /// Record a [`std::time::Duration`] in nanoseconds (saturating).
@@ -285,13 +350,19 @@ impl Histogram {
     /// Non-empty buckets as `(upper_bound, cumulative_count)`, ascending —
     /// the Prometheus `_bucket{le=…}` series (the exporter appends `+Inf`).
     pub fn cumulative_buckets(&self) -> Vec<(u64, u64)> {
+        self.bucket_cells().into_iter().map(|(_, hi, cum)| (hi, cum)).collect()
+    }
+
+    /// Non-empty buckets as `(bucket_idx, upper_bound, cumulative_count)`,
+    /// ascending — the index keys each bucket line to its exemplar slot.
+    pub fn bucket_cells(&self) -> Vec<(usize, u64, u64)> {
         let mut out = Vec::new();
         let mut cum = 0u64;
         for (idx, b) in self.buckets.iter().enumerate() {
             let c = b.load(Ordering::Relaxed);
             if c > 0 {
                 cum += c;
-                out.push((bucket_bounds(idx).1, cum));
+                out.push((idx, bucket_bounds(idx).1, cum));
             }
         }
         out
@@ -487,15 +558,27 @@ impl Registry {
         for r in &inner.histograms {
             header(&mut out, &r.name, &r.help, "histogram");
             let labels = &r.labels;
-            for (hi, cum) in r.metric.cumulative_buckets() {
+            let exemplars = r.metric.exemplars();
+            for (idx, hi, cum) in r.metric.bucket_cells() {
                 let mut le_labels = labels.clone();
                 le_labels.push(("le".into(), render_f64(hi as f64 * r.scale)));
                 out.push_str(&format!(
-                    "{}_bucket{} {}\n",
+                    "{}_bucket{} {}",
                     r.name,
                     render_labels(&le_labels),
                     cum
                 ));
+                // OpenMetrics exemplar: `# {span_id="..."} value ts`, on
+                // the trace clock so lint can resolve the span by id
+                if let Some((_, ex)) = exemplars.iter().find(|(i, _)| *i == idx) {
+                    out.push_str(&format!(
+                        " # {{span_id=\"{}\"}} {} {}",
+                        trace::format_span_id(ex.span_id),
+                        render_f64(ex.value as f64 * r.scale),
+                        render_f64(ex.ts_us as f64 * 1e-6)
+                    ));
+                }
+                out.push('\n');
             }
             let mut inf_labels = labels.clone();
             inf_labels.push(("le".into(), "+Inf".into()));
@@ -608,7 +691,11 @@ pub fn validate_prometheus(text: &str) -> Result<(), String> {
         if line.starts_with('#') {
             return Err(format!("line {ln}: comments must start with '# '"));
         }
-        // sample line: name[{labels}] value
+        // sample line: name[{labels}] value [# {exemplar-labels} value [ts]]
+        let (line, exemplar) = match line.split_once(" # ") {
+            Some((main, ex)) => (main, Some(ex)),
+            None => (line, None),
+        };
         let (series, value) = line
             .rsplit_once(' ')
             .ok_or_else(|| format!("line {ln}: no value field"))?;
@@ -645,6 +732,12 @@ pub fn validate_prometheus(text: &str) -> Result<(), String> {
                 }
             }
         }
+        if let Some(ex) = exemplar {
+            if !name.ends_with("_bucket") {
+                return Err(format!("line {ln}: exemplar on non-bucket sample {name:?}"));
+            }
+            validate_exemplar(ex).map_err(|e| format!("line {ln}: {e}"))?;
+        }
         // base name: strip histogram sample suffixes for the TYPE check
         let base = ["_bucket", "_sum", "_count"]
             .iter()
@@ -677,6 +770,71 @@ pub fn validate_prometheus(text: &str) -> Result<(), String> {
 
 fn has_type(types: &[(String, String)], name: &str) -> bool {
     types.iter().any(|(n, _)| n == name)
+}
+
+/// Validate one OpenMetrics exemplar suffix (the part after `" # "`):
+/// `{label="value",...} value [timestamp]`.
+fn validate_exemplar(ex: &str) -> Result<(), String> {
+    let body = ex
+        .strip_prefix('{')
+        .ok_or_else(|| format!("exemplar {ex:?} must start with '{{'"))?;
+    let (labels, rest) = body
+        .split_once('}')
+        .ok_or_else(|| format!("exemplar {ex:?} has an unterminated label set"))?;
+    for pair in split_label_pairs(labels) {
+        let (k, v) = pair
+            .split_once('=')
+            .ok_or_else(|| format!("exemplar label {pair:?} missing '='"))?;
+        if k.is_empty() || !k.chars().all(|c| c.is_ascii_alphanumeric() || c == '_') {
+            return Err(format!("bad exemplar label name {k:?}"));
+        }
+        if !(v.starts_with('"') && v.ends_with('"') && v.len() >= 2) {
+            return Err(format!("exemplar label value {v:?} not quoted"));
+        }
+    }
+    let mut fields = rest.split_whitespace();
+    let value = fields.next().ok_or_else(|| format!("exemplar {ex:?} has no value"))?;
+    value
+        .parse::<f64>()
+        .map_err(|_| format!("unparsable exemplar value {value:?}"))?;
+    if let Some(ts) = fields.next() {
+        ts.parse::<f64>()
+            .map_err(|_| format!("unparsable exemplar timestamp {ts:?}"))?;
+    }
+    if let Some(extra) = fields.next() {
+        return Err(format!("trailing exemplar field {extra:?}"));
+    }
+    Ok(())
+}
+
+/// The distinct exemplar span ids attached to `family`'s `_bucket` lines
+/// in a rendered exposition — what `lint --require-exemplars` resolves
+/// against the trace document's span ids.
+pub fn exemplar_span_ids(text: &str, family: &str) -> Vec<String> {
+    let prefix = format!("{family}_bucket");
+    let mut out = Vec::new();
+    for line in text.lines() {
+        if !line.starts_with(&prefix) {
+            continue;
+        }
+        let Some((_, ex)) = line.split_once(" # ") else {
+            continue;
+        };
+        let Some(labels) = ex.strip_prefix('{').and_then(|b| b.split_once('}')) else {
+            continue;
+        };
+        for pair in split_label_pairs(labels.0) {
+            if let Some((k, v)) = pair.split_once('=') {
+                if k == "span_id" {
+                    let v = v.trim_matches('"');
+                    if !out.iter().any(|s| s == v) {
+                        out.push(v.to_string());
+                    }
+                }
+            }
+        }
+    }
+    out
 }
 
 /// Split a Prometheus label body on commas that are outside quoted values.
@@ -830,6 +988,40 @@ mod tests {
     }
 
     #[test]
+    fn exemplar_renders_openmetrics_syntax_and_roundtrips() {
+        let reg = Registry::new();
+        let h = reg.histogram_secs("test_exemplar_seconds", "latency with exemplars");
+        h.record(1_000_000); // 1 ms
+        h.record(2_000_000_000); // 2 s — a different bucket
+        // attach exemplars directly (the span-capture path needs the
+        // process-global trace gate; the integration tests cover it)
+        let ex = Exemplar { value: 2_000_000_000, ts_us: 1_500_000, tid: 3, epoch: 7, span_id: 0xabcd };
+        h.attach_exemplar(bucket_of(ex.value), ex);
+        assert_eq!(h.exemplars(), vec![(bucket_of(ex.value), ex)]);
+        // a newer sample in the same bucket replaces the slot
+        let newer = Exemplar { value: 1_900_000_000, ts_us: 2_000_000, tid: 3, epoch: 8, span_id: 0xabce };
+        assert_eq!(bucket_of(newer.value), bucket_of(ex.value), "same bucket");
+        h.attach_exemplar(bucket_of(newer.value), newer);
+        assert_eq!(h.exemplars(), vec![(bucket_of(ex.value), newer)]);
+        let text = reg.render_prometheus();
+        validate_prometheus(&text).unwrap_or_else(|e| panic!("{e}\n---\n{text}"));
+        let ids = exemplar_span_ids(&text, "test_exemplar_seconds");
+        assert_eq!(ids, vec![trace::format_span_id(0xabce)]);
+        // the exemplar rides the bucket line, value scaled like the bounds
+        let line = text
+            .lines()
+            .find(|l| l.contains(" # {"))
+            .expect("one bucket line carries the exemplar");
+        assert!(line.starts_with("test_exemplar_seconds_bucket{le="), "{line}");
+        assert!(line.contains("# {span_id=\"000000000000abce\"} 1.9 2"), "{line}");
+        // buckets without an exemplar stay bare
+        assert!(
+            text.lines().any(|l| l.starts_with("test_exemplar_seconds_bucket") && !l.contains('#')),
+            "{text}"
+        );
+    }
+
+    #[test]
     fn validator_rejects_malformed_text() {
         assert!(validate_prometheus("").is_err(), "no TYPE at all");
         assert!(validate_prometheus("#bad comment\n").is_err());
@@ -849,5 +1041,29 @@ mod tests {
             "non-cumulative buckets"
         );
         assert!(validate_prometheus("# TYPE m counter\nm{x=unquoted} 1\n").is_err());
+    }
+
+    #[test]
+    fn validator_checks_exemplar_syntax() {
+        let ok = "# TYPE h histogram\nh_bucket{le=\"1\"} 5 # {span_id=\"00ab\"} 0.5 12.25\n";
+        validate_prometheus(ok).unwrap();
+        let no_ts = "# TYPE h histogram\nh_bucket{le=\"1\"} 5 # {span_id=\"00ab\"} 0.5\n";
+        validate_prometheus(no_ts).unwrap();
+        for bad in [
+            // exemplars only belong on _bucket lines
+            "# TYPE m counter\nm 1 # {span_id=\"00ab\"} 0.5\n",
+            // missing label braces
+            "# TYPE h histogram\nh_bucket{le=\"1\"} 5 # span_id=\"00ab\" 0.5\n",
+            // unquoted label value
+            "# TYPE h histogram\nh_bucket{le=\"1\"} 5 # {span_id=00ab} 0.5\n",
+            // missing exemplar value
+            "# TYPE h histogram\nh_bucket{le=\"1\"} 5 # {span_id=\"00ab\"}\n",
+            // unparsable exemplar value
+            "# TYPE h histogram\nh_bucket{le=\"1\"} 5 # {span_id=\"00ab\"} x\n",
+            // trailing junk after the timestamp
+            "# TYPE h histogram\nh_bucket{le=\"1\"} 5 # {span_id=\"00ab\"} 0.5 1 z\n",
+        ] {
+            assert!(validate_prometheus(bad).is_err(), "accepted: {bad}");
+        }
     }
 }

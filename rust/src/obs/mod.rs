@@ -17,6 +17,11 @@
 //! construction and update them lock-free; nothing here appears on the
 //! per-edge hot path — the finest-grained sites are per shard-phase,
 //! per WAL append, and per pool job.
+//!
+//! A third surface, [`blackbox`], snapshots both exports into one
+//! post-mortem JSON artifact on coordinator-thread panic or the
+//! `BLACKBOX` debug command.
 
+pub mod blackbox;
 pub mod metrics;
 pub mod trace;

@@ -26,8 +26,20 @@
 //! the engine epoch where the instrumentation site knows it, which is
 //! what lets the `TRACE <n>` protocol command cut the window to the last
 //! `n` epochs.
+//!
+//! ## Span identity and exemplars
+//!
+//! Every recorded span carries a process-unique `span_id`, and while a
+//! [`SpanGuard`] is alive its id/epoch/tid triplet sits in a relaxed
+//! per-thread cell readable through [`current_span`]. Histogram
+//! recordings that happen inside a span scope (WAL fsync, replica apply)
+//! use that cell to attach an OpenMetrics *exemplar* to their bucket —
+//! see [`crate::obs::metrics::Histogram`] — so a latency spike in a
+//! `METRICS` scrape resolves to the exact span in the `TRACE` output via
+//! the `span_id` both sides render ([`format_span_id`]).
 
 use crate::util::json::Json;
+use std::cell::Cell;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, OnceLock};
 use std::time::Instant;
@@ -75,6 +87,54 @@ pub struct SpanEvent {
     pub epoch: u64,
     /// Site-specific argument (shard index, byte count, group size).
     pub arg: u64,
+    /// Process-unique span id — the cross-reference key exemplars carry
+    /// (rendered by [`format_span_id`] on both the trace and metrics
+    /// sides). 0 only in hand-built test events.
+    pub span_id: u64,
+}
+
+static NEXT_SPAN_ID: AtomicU64 = AtomicU64::new(1);
+
+/// The span a thread is currently inside: what
+/// [`crate::obs::metrics::Histogram::record`] captures as an exemplar.
+#[derive(Clone, Copy, Debug)]
+pub struct CurrentSpan {
+    /// The innermost live span's process-unique id.
+    pub span_id: u64,
+    /// That span's engine epoch (0 when the site had no epoch context).
+    pub epoch: u64,
+    /// The recording thread's stable trace tid.
+    pub tid: u64,
+}
+
+thread_local! {
+    /// The innermost live span on this thread, `span_id == 0` when none.
+    /// A plain `Cell` (one word set/restore per span) — only this thread
+    /// ever touches it, which is the "relaxed per-thread cell" that keeps
+    /// exemplar capture off every shared cache line.
+    static CURRENT_SPAN: Cell<(u64, u64, u64)> = const { Cell::new((0, 0, 0)) };
+}
+
+/// The innermost span currently open on the calling thread, if any.
+/// `None` whenever tracing is disabled (guards are only constructed while
+/// it is on), so callers pay one thread-local read on the common path.
+#[inline]
+pub fn current_span() -> Option<CurrentSpan> {
+    let (span_id, epoch, tid) = CURRENT_SPAN.with(Cell::get);
+    (span_id != 0).then_some(CurrentSpan { span_id, epoch, tid })
+}
+
+/// Microseconds since the process trace origin — the clock exemplar
+/// timestamps share with span `ts` values.
+pub fn now_us() -> u64 {
+    origin().elapsed().as_micros().min(u128::from(u64::MAX)) as u64
+}
+
+/// Canonical rendering of a span id (16 hex digits), used identically in
+/// Chrome-trace `args` and OpenMetrics exemplar labels so `lint` can
+/// cross-reference the two by string equality.
+pub fn format_span_id(id: u64) -> String {
+    format!("{id:016x}")
 }
 
 struct Ring {
@@ -101,24 +161,45 @@ thread_local! {
 }
 
 /// An in-flight span; records itself into the thread's ring when dropped.
-/// Only ever constructed when tracing is enabled (see [`span`]).
+/// Only ever constructed when tracing is enabled (see [`span`]). While
+/// alive it is the thread's [`current_span`]; dropping restores whatever
+/// enclosing span (or none) was current before, so nesting behaves like a
+/// stack.
 pub struct SpanGuard {
     name: &'static str,
     cat: &'static str,
     start: Instant,
     epoch: u64,
     arg: u64,
+    span_id: u64,
+    /// The cell value this guard displaced, restored on drop.
+    prev: (u64, u64, u64),
 }
 
 impl SpanGuard {
+    fn open(name: &'static str, cat: &'static str, epoch: u64, arg: u64) -> SpanGuard {
+        let _ = origin(); // pin the time origin before the first timestamp
+        let span_id = NEXT_SPAN_ID.fetch_add(1, Ordering::Relaxed);
+        let tid = MY_RING.with(|ring| ring.tid);
+        let prev = CURRENT_SPAN.with(|c| c.replace((span_id, epoch, tid)));
+        SpanGuard { name, cat, start: Instant::now(), epoch, arg, span_id, prev }
+    }
+
     /// Attach/replace the site-specific argument after construction.
     pub fn set_arg(&mut self, arg: u64) {
         self.arg = arg;
+    }
+
+    /// This span's process-unique id (what exemplars recorded inside the
+    /// span's scope will carry).
+    pub fn span_id(&self) -> u64 {
+        self.span_id
     }
 }
 
 impl Drop for SpanGuard {
     fn drop(&mut self) {
+        CURRENT_SPAN.with(|c| c.set(self.prev));
         let dur_us = self.start.elapsed().as_micros().min(u128::from(u64::MAX)) as u64;
         let ts_us = self
             .start
@@ -139,6 +220,7 @@ impl Drop for SpanGuard {
                 tid: ring.tid,
                 epoch,
                 arg: self.arg,
+                span_id: self.span_id,
             });
         });
     }
@@ -152,8 +234,7 @@ pub fn span(name: &'static str, cat: &'static str, arg: u64) -> Option<SpanGuard
     if !enabled() {
         return None;
     }
-    let _ = origin(); // pin the time origin before the first timestamp
-    Some(SpanGuard { name, cat, start: Instant::now(), epoch: 0, arg })
+    Some(SpanGuard::open(name, cat, 0, arg))
 }
 
 /// Open a span tagged with an explicit epoch (sites that know it).
@@ -167,8 +248,7 @@ pub fn span_epoch(
     if !enabled() {
         return None;
     }
-    let _ = origin();
-    Some(SpanGuard { name, cat, start: Instant::now(), epoch, arg })
+    Some(SpanGuard::open(name, cat, epoch, arg))
 }
 
 /// Copy out every ring's events (the rings keep recording). Sorted by
@@ -225,7 +305,9 @@ pub fn chrome_trace_json(events: &[SpanEvent]) -> Json {
         .iter()
         .map(|e| {
             let mut args = Json::obj();
-            args.set("epoch", Json::from(e.epoch)).set("arg", Json::from(e.arg));
+            args.set("epoch", Json::from(e.epoch))
+                .set("arg", Json::from(e.arg))
+                .set("span_id", Json::from(format_span_id(e.span_id)));
             let mut o = Json::obj();
             o.set("name", Json::from(e.name))
                 .set("cat", Json::from(e.cat))
@@ -270,6 +352,26 @@ pub fn validate_chrome_trace(text: &str) -> Result<Vec<String>, String> {
         }
     }
     Ok(names)
+}
+
+/// Collect the distinct `args.span_id` strings of a Chrome trace JSON
+/// document — the set `lint --require-exemplars` resolves metric exemplars
+/// against. Events without a span id (foreign traces) are skipped.
+pub fn chrome_trace_span_ids(text: &str) -> Result<Vec<String>, String> {
+    let root = crate::util::json::parse(text)?;
+    let events = root
+        .get("traceEvents")
+        .and_then(Json::as_arr)
+        .ok_or("no \"traceEvents\" array")?;
+    let mut ids = Vec::new();
+    for e in events {
+        if let Some(id) = e.get("args").and_then(|a| a.get("span_id")).and_then(Json::as_str) {
+            if !ids.iter().any(|i| i == id) {
+                ids.push(id.to_string());
+            }
+        }
+    }
+    Ok(ids)
 }
 
 #[cfg(test)]
@@ -325,8 +427,42 @@ mod tests {
         let names = validate_chrome_trace(&text).unwrap();
         assert!(names.contains(&"obs_mutate".to_string()));
         assert!(names.contains(&"obs_wal".to_string()));
+        // every recorded span carries a distinct nonzero id, and the
+        // exported document exposes them for exemplar cross-referencing
+        assert!(events.iter().all(|e| e.span_id != 0));
+        assert_ne!(events[0].span_id, events[1].span_id);
+        let ids = chrome_trace_span_ids(&text).unwrap();
+        assert_eq!(ids.len(), 2);
+        assert!(ids.contains(&format_span_id(events[0].span_id)));
         clear();
         assert!(!collect().iter().any(|e| e.cat == CAT));
+    }
+
+    #[test]
+    fn current_span_cell_tracks_nesting_and_clears() {
+        let _guard = tracing_lock().lock().unwrap();
+        set_enabled(true);
+        clear();
+        assert!(current_span().is_none(), "no span open yet");
+        {
+            let outer = span_epoch("obs_outer", CAT, 9, 0).unwrap();
+            let cur = current_span().expect("outer span is current");
+            assert_eq!(cur.span_id, outer.span_id());
+            assert_eq!(cur.epoch, 9);
+            {
+                let inner = span("obs_inner", CAT, 0).unwrap();
+                let cur = current_span().expect("inner span is current");
+                assert_eq!(cur.span_id, inner.span_id());
+                assert_eq!(cur.epoch, 0, "inner span's epoch wins while open");
+            }
+            let cur = current_span().expect("outer restored after inner drop");
+            assert_eq!(cur.span_id, outer.span_id());
+            assert_eq!(cur.epoch, 9);
+        }
+        assert!(current_span().is_none(), "cell cleared after the last drop");
+        set_enabled(false);
+        assert!(current_span().is_none(), "disabled tracing opens no spans");
+        clear();
     }
 
     #[test]
@@ -357,6 +493,7 @@ mod tests {
             tid: 1,
             epoch,
             arg: 0,
+            span_id: 0,
         };
         let events = vec![
             ev("mutate", 1, 100),

@@ -53,6 +53,7 @@ use super::crc32;
 use super::wal::{decode_payload, encode_payload, WalEpoch};
 use crate::dynamic::Update;
 use crate::obs::metrics;
+use crate::obs::trace;
 use std::collections::VecDeque;
 use std::io::{Read, Write};
 use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
@@ -360,6 +361,7 @@ fn follower_conn(stream: TcpStream, peer: SocketAddr, inner: Arc<ShipInner>) {
         return;
     }
     let last_epoch = u64::from_le_bytes(hello[8..16].try_into().unwrap());
+    let hs_span = trace::span("ship_handshake", "ship", last_epoch);
     let mut reply = Vec::with_capacity(24);
     reply.extend_from_slice(SHIP_MAGIC);
     reply.extend_from_slice(&inner.num_vertices.to_le_bytes());
@@ -376,6 +378,7 @@ fn follower_conn(stream: TcpStream, peer: SocketAddr, inner: Arc<ShipInner>) {
         );
         return;
     }
+    drop(hs_span); // close the handshake span before the long-lived stream
     let _ = stream.set_read_timeout(None);
     let slot = Arc::new(FollowerSlot {
         peer,
@@ -442,7 +445,10 @@ fn send_loop(stream: &TcpStream, slot: &FollowerSlot, inner: &ShipInner, start_a
             log.0[next_idx..].to_vec()
         };
         let tip = inner.tip.load(Ordering::Acquire);
-        for payload in &chunk {
+        for (i, payload) in chunk.iter().enumerate() {
+            // backlog index -> epoch: the entry at log.0[k] holds base+k+1
+            let epoch = inner.base + (next_idx + i) as u64 + 1;
+            let _sp = trace::span_epoch("ship_send", "ship", epoch, payload.len() as u64);
             let t_send = Instant::now();
             let mut frame = Vec::with_capacity(16 + payload.len());
             frame.extend_from_slice(&tip.to_le_bytes());
@@ -478,6 +484,7 @@ fn ack_loop(stream: TcpStream, slot: Arc<FollowerSlot>, inner: Arc<ShipInner>) {
             return;
         }
         let epoch = u64::from_le_bytes(buf);
+        let _sp = trace::span_epoch("ship_ack", "ship", epoch, 0);
         slot.acked.store(epoch, Ordering::Release);
         // ack latency: measured against the publish instant, recorded only
         // for epochs still in the clock window
@@ -525,6 +532,7 @@ impl ShipReader {
     /// locally. Fails when the primary's universe size or replication
     /// horizon is incompatible.
     pub fn connect(addr: &str, last_epoch: u64) -> Result<ShipReader, String> {
+        let _hs_span = trace::span("ship_handshake", "ship", last_epoch);
         let stream = TcpStream::connect(addr).map_err(|e| format!("follow {addr}: {e}"))?;
         let _ = stream.set_nodelay(true);
         let mut hello = Vec::with_capacity(16);

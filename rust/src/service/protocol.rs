@@ -43,6 +43,12 @@
 //! CRASH [router|flusher]   debug fault injection (requires
 //!                          --debug-commands): panic the named coordinator
 //!                          thread to exercise the panic-exit path
+//! BLACKBOX                 dump a post-mortem artifact — the full metrics
+//!                          exposition plus the recent Chrome trace — to
+//!                          `<data-dir>/blackbox-<ts>.json` (requires
+//!                          --debug-commands and --data-dir). The same
+//!                          artifact is written automatically when a
+//!                          coordinator thread panics
 //! ```
 //!
 //! Every reply is one JSON line with an `"ok"` field, e.g.
@@ -90,6 +96,9 @@ pub enum Command {
     /// Debug fault injection (gated behind `--debug-commands`): panic the
     /// named coordinator thread.
     Crash(CrashTarget),
+    /// Dump a crash-blackbox artifact (metrics exposition + recent trace)
+    /// to the data dir (gated behind `--debug-commands`).
+    Blackbox,
 }
 
 /// Which coordinator thread a debug `CRASH` command panics.
@@ -177,6 +186,7 @@ impl Command {
                     return Err(format!("CRASH takes `router` or `flusher` (got {other:?})"))
                 }
             },
+            "BLACKBOX" => no_operands(&mut it, "BLACKBOX", Command::Blackbox)?,
             other => return Err(format!("unknown command {other:?}")),
         };
         Ok(Some(cmd))
@@ -435,6 +445,11 @@ pub enum Response {
         /// — the epoch it resumes writing from.
         epoch: u64,
     },
+    /// Reply to `BLACKBOX`: where the post-mortem artifact was written.
+    Blackbox {
+        /// Path of the written `blackbox-<ts>.json` file.
+        path: String,
+    },
     /// Reply to `QUIT`.
     Bye,
     /// Reply to `SHUTDOWN`.
@@ -547,6 +562,9 @@ impl Response {
             Response::Promoted { epoch } => {
                 j.bool("ok", true).str("op", "promote").u64("epoch", *epoch);
             }
+            Response::Blackbox { path } => {
+                j.bool("ok", true).str("op", "blackbox").str("path", path);
+            }
             Response::Bye => {
                 j.bool("ok", true).str("op", "bye");
             }
@@ -620,6 +638,8 @@ mod tests {
             Some(Command::Crash(CrashTarget::Flusher))
         );
         assert!(Command::parse("CRASH engine").is_err());
+        assert_eq!(Command::parse("blackbox").unwrap(), Some(Command::Blackbox));
+        assert!(Command::parse("BLACKBOX now").is_err());
         assert!(Command::parse("EPOCH now").is_err());
         assert!(Command::parse("QUERY").is_err());
         assert!(Command::parse("FROB 1").is_err());
@@ -760,6 +780,15 @@ mod tests {
         let t = Response::Trace(r#"{"ok":true,"op":"trace","traceEvents":[]}"#.into()).render();
         assert!(t.contains(r#""traceEvents":[]"#), "{t}");
         assert!(!t.contains('\n'), "one line: {t}");
+    }
+
+    #[test]
+    fn blackbox_reply_renders() {
+        let r = Response::Blackbox { path: "/tmp/d/blackbox-12.json".into() }.render();
+        assert_eq!(
+            r,
+            r#"{"ok":true,"op":"blackbox","path":"/tmp/d/blackbox-12.json"}"#
+        );
     }
 
     #[test]

@@ -250,11 +250,16 @@ impl Replica {
         // WAL before apply — the same invariant the primary honors
         let mut dur = self.dur.lock().unwrap();
         if let Some(d) = dur.as_mut() {
+            let _sp = trace::span_epoch("replica_wal", "replica", epoch, updates.len() as u64);
             d.log_epoch(epoch, updates)?;
         }
-        let t0 = Instant::now();
-        let report = self.engine.apply_epoch(updates)?;
-        self.apply_hist.record_duration(t0.elapsed());
+        let report = {
+            let _sp = trace::span_epoch("replica_apply", "replica", epoch, updates.len() as u64);
+            let t0 = Instant::now();
+            let report = self.engine.apply_epoch(updates)?;
+            self.apply_hist.record_duration(t0.elapsed());
+            report
+        };
         debug_assert_eq!(report.epoch, epoch);
         if let Some(d) = dur.as_mut() {
             d.after_epoch(&self.engine);
@@ -310,6 +315,7 @@ impl Replica {
     /// aborted and discards anything further. Returns the epoch the
     /// promoted node resumes writing from. Idempotent.
     pub fn promote(&self) -> u64 {
+        let _sp = trace::span("promote", "replica", self.engine.epochs_applied());
         {
             let _guard = self.apply_lock.lock().unwrap();
             self.promoted.store(true, Ordering::Release);
@@ -730,6 +736,29 @@ fn follower_conn<R: BufRead, W: Write>(
             Command::Crash(_) => {
                 let msg = "CRASH is not supported on a follower";
                 if !reply(writer, &Response::Error(msg.into())) {
+                    break;
+                }
+            }
+            Command::Blackbox => {
+                let resp = if !cfg.debug_commands {
+                    Response::Error("BLACKBOX requires --debug-commands".into())
+                } else {
+                    match &cfg.data_dir {
+                        Some(dir) => {
+                            let text = replica.render_metrics();
+                            match crate::obs::blackbox::write_blackbox(
+                                std::path::Path::new(dir),
+                                "command",
+                                &text,
+                            ) {
+                                Ok(p) => Response::Blackbox { path: p.display().to_string() },
+                                Err(e) => Response::Error(e),
+                            }
+                        }
+                        None => Response::Error("BLACKBOX requires --data-dir".into()),
+                    }
+                };
+                if !reply(writer, &resp) {
                     break;
                 }
             }

@@ -58,7 +58,7 @@ use super::protocol::{
 };
 use super::{Promise, ShardedQueue};
 use crate::dynamic::{EpochReport, ShardExec, ShardMailboxes, ShardedDynamicMatcher, Update};
-use crate::obs::{metrics, trace};
+use crate::obs::{blackbox, metrics, trace};
 use crate::par::pump::{BoundedQueue, CloseOnDrop};
 use crate::persist::ship::Shipper;
 use crate::persist::snapshot::SnapshotData;
@@ -67,7 +67,7 @@ use crate::util::json::Json;
 use crate::VertexId;
 use std::io::{BufRead, BufReader, Write};
 use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
@@ -221,17 +221,34 @@ enum Request {
 /// server that accepts connections but never answers is strictly worse
 /// than a visible crash, and `EngineGuard`'s cleanup cannot reach clients
 /// that connect *after* the panic.
-struct ExitOnPanic {
+struct ExitOnPanic<'a> {
     role: &'static str,
     enabled: bool,
+    /// When the service is durable, a panic dumps a blackbox artifact
+    /// (metrics exposition + recent trace) into this data dir before the
+    /// process exits — a kill-worthy incident leaves post-mortem evidence.
+    blackbox: Option<(&'a str, &'a ServiceMetrics)>,
 }
 
 /// Exit code used when a coordinator thread dies (EX_SOFTWARE).
 pub const PANIC_EXIT_CODE: i32 = 70;
 
-impl Drop for ExitOnPanic {
+impl Drop for ExitOnPanic<'_> {
     fn drop(&mut self) {
         if self.enabled && std::thread::panicking() {
+            if let Some((dir, sm)) = self.blackbox {
+                // a failing (or itself-panicking) dump must not turn the
+                // orderly exit(70) into an unwind abort
+                let role = self.role;
+                let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                    blackbox::write_blackbox(Path::new(dir), role, &sm.render_prometheus())
+                }));
+                match outcome {
+                    Ok(Ok(p)) => eprintln!("fatal: blackbox written to {}", p.display()),
+                    Ok(Err(e)) => eprintln!("fatal: blackbox dump failed: {e}"),
+                    Err(_) => eprintln!("fatal: blackbox dump panicked; continuing exit"),
+                }
+            }
             eprintln!(
                 "fatal: service {} thread panicked; exiting so clients are not left hanging (panic message above)",
                 self.role
@@ -884,7 +901,11 @@ fn engine_loop(
     shipper: Option<&Shipper>,
 ) -> ServiceSummary {
     // a router panic must not strand clients on a half-dead server
-    let _router_guard = ExitOnPanic { role: "router", enabled: cfg.exit_on_panic };
+    let _router_guard = ExitOnPanic {
+        role: "router",
+        enabled: cfg.exit_on_panic,
+        blackbox: cfg.data_dir.as_deref().map(|d| (d, sm)),
+    };
     // the flat per-generation update list feeds both the WAL append and
     // the replication backlog — keep it when either consumer exists
     let keep_wal_log =
@@ -916,8 +937,11 @@ fn engine_loop(
                 let flushing = &flushing;
                 let spares = &spares;
                 s.spawn(move || {
-                    let _flusher_guard =
-                        ExitOnPanic { role: "flusher", enabled: cfg.exit_on_panic };
+                    let _flusher_guard = ExitOnPanic {
+                        role: "flusher",
+                        enabled: cfg.exit_on_panic,
+                        blackbox: cfg.data_dir.as_deref().map(|d| (d, sm)),
+                    };
                     // closing on exit (including panic) keeps the router from
                     // blocking on a dead flusher; jobs it then fails to send are
                     // dropped, abandoning their promises and waking the waiters
@@ -1180,6 +1204,27 @@ fn handle_conn<R: BufRead, W: Write>(
                 }
                 // no reply on success: the process is about to die by design
                 let _ = queue.push(shard, Request::Crash(target));
+            }
+            Command::Blackbox => {
+                // answered on the connection thread, like METRICS: the dump
+                // reads lock-free registries and the flight-recorder rings
+                let resp = if !cfg.debug_commands {
+                    Response::Error("BLACKBOX requires --debug-commands".into())
+                } else {
+                    match &cfg.data_dir {
+                        Some(dir) => {
+                            let text = sm.render_prometheus();
+                            match blackbox::write_blackbox(Path::new(dir), "command", &text) {
+                                Ok(p) => Response::Blackbox { path: p.display().to_string() },
+                                Err(e) => Response::Error(e),
+                            }
+                        }
+                        None => Response::Error("BLACKBOX requires --data-dir".into()),
+                    }
+                };
+                if !reply(writer, &resp) {
+                    break;
+                }
             }
             Command::Promote => {
                 // PROMOTE only means something on a replicating follower

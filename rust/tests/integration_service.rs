@@ -83,6 +83,62 @@ fn coordinator_panic_exits_the_process_with_a_diagnostic() {
     }
 }
 
+/// A panic inside a *durable* service additionally dumps a crash blackbox
+/// — one JSON artifact carrying the full metrics exposition and the recent
+/// span trace — into the data dir before the exit(70).
+#[test]
+fn coordinator_panic_leaves_a_parseable_blackbox_artifact() {
+    let dir = fresh_dir("blackbox");
+    let dir_s = dir.to_string_lossy().into_owned();
+    let mut child = spawn_serve(&[
+        "--vertices",
+        "64",
+        "--debug-commands",
+        "--trace",
+        "--data-dir",
+        &dir_s,
+    ]);
+    {
+        let stdin = child.stdin.as_mut().unwrap();
+        writeln!(stdin, "INSERT 0 1").unwrap();
+        writeln!(stdin, "EPOCH").unwrap();
+        writeln!(stdin, "CRASH flusher").unwrap();
+        stdin.flush().unwrap();
+        // keep stdin open — see coordinator_panic_exits_the_process
+    }
+    let status = wait_with_timeout(&mut child, 30);
+    assert_eq!(status.code(), Some(70), "wrong exit code");
+    let mut stderr = String::new();
+    std::io::Read::read_to_string(child.stderr.as_mut().unwrap(), &mut stderr).unwrap();
+    assert!(
+        stderr.contains("blackbox written to"),
+        "dump not reported in stderr:\n{stderr}"
+    );
+    let artifact = std::fs::read_dir(&dir)
+        .expect("data dir survives the crash")
+        .filter_map(|e| e.ok())
+        .map(|e| e.path())
+        .find(|p| {
+            p.file_name()
+                .and_then(|n| n.to_str())
+                .is_some_and(|n| n.starts_with("blackbox-") && n.ends_with(".json"))
+        })
+        .unwrap_or_else(|| panic!("no blackbox-*.json in {}; stderr:\n{stderr}", dir.display()));
+    let text = std::fs::read_to_string(&artifact).expect("read artifact");
+    let doc = skipper::util::json::parse(&text).expect("artifact must parse");
+    assert_eq!(
+        doc.get("schema").and_then(|j| j.as_str()),
+        Some("skipper-blackbox-v1"),
+        "{text}"
+    );
+    assert_eq!(doc.get("role").and_then(|j| j.as_str()), Some("flusher"), "{text}");
+    let metrics = doc.get("metrics").and_then(|j| j.as_str()).expect("metrics string");
+    assert!(metrics.contains("skipper_"), "exposition embedded:\n{metrics}");
+    let trace = doc.get("trace").expect("trace document embedded");
+    assert!(trace.get("traceEvents").and_then(|j| j.as_arr()).is_some(), "{text}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
 /// Without `--debug-commands`, `CRASH` is refused and the server lives on.
 #[test]
 fn crash_command_requires_the_debug_flag() {

@@ -13,14 +13,36 @@
 //! * **Trace validity**: a Chrome trace document built from arbitrary span
 //!   events always passes [`validate_chrome_trace`], and the validator
 //!   reports exactly the span names that went in.
+//! * **Exemplar attachment**: for random sample streams recorded inside a
+//!   live span, every non-empty bucket retains exactly its most recent
+//!   sample as the exemplar (stamped with the span's epoch and id), and
+//!   samples recorded outside any span never attach one.
+//! * **Exemplar exposition round-trip**: expositions whose bucket lines
+//!   carry `# {span_id="…"}` exemplar annotations still pass
+//!   [`validate_prometheus`], and the annotated ids parse back out via
+//!   [`exemplar_span_ids`].
+//! * **Dash determinism**: the `skipper-cli dash` HTML is a pure function
+//!   of its inputs — rendering random registries twice is byte-identical,
+//!   and the document never contains a `<script` tag.
 //!
 //! [`validate_prometheus`]: skipper::obs::metrics::validate_prometheus
 //! [`validate_chrome_trace`]: skipper::obs::trace::validate_chrome_trace
+//! [`exemplar_span_ids`]: skipper::obs::metrics::exemplar_span_ids
 
-use skipper::obs::metrics::{validate_prometheus, Histogram, Registry};
-use skipper::obs::trace::{chrome_trace_json, validate_chrome_trace, SpanEvent};
+use skipper::coordinator::dash::{render_dash, LiveSource};
+use skipper::coordinator::registry::{BenchRecord, Registry as BenchRegistry};
+use skipper::obs::metrics::{
+    bucket_of, exemplar_span_ids, validate_prometheus, Histogram, Registry,
+};
+use skipper::obs::trace::{self, chrome_trace_json, validate_chrome_trace, SpanEvent};
 use skipper::util::qcheck::{check, Config};
 use skipper::util::rng::Xoshiro256pp;
+use std::collections::BTreeMap;
+
+/// The trace gate is process-global: the two exemplar tests below both
+/// toggle it, so they serialize on this lock to keep `cargo test`'s
+/// parallel runner from disabling tracing under each other.
+static TRACE_GATE: std::sync::Mutex<()> = std::sync::Mutex::new(());
 
 /// Exact nearest-rank percentile of `sorted` (the definition
 /// `Histogram::percentile` approximates): the k-th smallest sample with
@@ -149,8 +171,148 @@ fn arb_events(rng: &mut Xoshiro256pp) -> Vec<SpanEvent> {
             tid: rng.next_u64() >> 56,
             epoch: rng.next_u64() >> 48,
             arg: rng.next_u64() >> 32,
+            span_id: 1 + (rng.next_u64() >> 32),
         })
         .collect()
+}
+
+#[test]
+fn exemplars_attach_buckets_most_recent_in_span_sample() {
+    let _gate = TRACE_GATE.lock().unwrap_or_else(|e| e.into_inner());
+    check(
+        &Config { cases: 60, seed: 0xE4A1, max_shrink_steps: 0 },
+        arb_samples,
+        |samples| {
+            trace::set_enabled(true);
+            let h = Histogram::new();
+            // the model: last sample recorded into each bucket wins
+            let mut expect: BTreeMap<usize, u64> = BTreeMap::new();
+            let epoch = 7u64;
+            {
+                let _sp = trace::span_epoch("prop_exemplar", "test", epoch, 0);
+                for &v in samples {
+                    h.record(v);
+                    expect.insert(bucket_of(v), v);
+                }
+            }
+            trace::set_enabled(false);
+            let got = h.exemplars();
+            if got.len() != expect.len() {
+                return Err(format!(
+                    "{} exemplar slots for {} non-empty buckets",
+                    got.len(),
+                    expect.len()
+                ));
+            }
+            for (idx, ex) in &got {
+                match expect.get(idx) {
+                    Some(&v) if v == ex.value => {}
+                    Some(&v) => {
+                        return Err(format!(
+                            "bucket {idx}: exemplar {} is not the most recent sample {v}",
+                            ex.value
+                        ))
+                    }
+                    None => return Err(format!("bucket {idx}: exemplar on an empty bucket")),
+                }
+                if ex.epoch != epoch {
+                    return Err(format!("bucket {idx}: epoch {} != {epoch}", ex.epoch));
+                }
+                if ex.span_id == 0 {
+                    return Err(format!("bucket {idx}: zero span id"));
+                }
+            }
+            // samples recorded outside any span never attach an exemplar,
+            // even with the trace gate still conceptually relevant
+            for &v in samples.iter().take(8) {
+                h.record(v);
+            }
+            if h.exemplars() != got {
+                return Err("out-of-span records changed the exemplar set".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn exemplar_expositions_round_trip_the_validator() {
+    let _gate = TRACE_GATE.lock().unwrap_or_else(|e| e.into_inner());
+    check(
+        &Config { cases: 40, seed: 0xE4A2, max_shrink_steps: 0 },
+        arb_registry_seed,
+        |&seed| {
+            trace::set_enabled(true);
+            let mut rng = Xoshiro256pp::new(seed);
+            let reg = Registry::new();
+            let families = 1 + rng.next_usize(3);
+            for i in 0..families {
+                let h = reg.histogram_secs(&format!("prop_ex_{i}_seconds"), "random histogram");
+                let _sp = trace::span_epoch("prop_ex", "test", i as u64 + 1, 0);
+                for _ in 0..1 + rng.next_usize(40) {
+                    h.record(1 + (rng.next_u64() >> rng.next_usize(64)));
+                }
+            }
+            trace::set_enabled(false);
+            let text = reg.render_prometheus();
+            if !text.contains(" # {span_id=\"") {
+                return Err(format!("no exemplar annotations rendered:\n{text}"));
+            }
+            validate_prometheus(&text).map_err(|e| format!("{e}\n---\n{text}"))?;
+            for i in 0..families {
+                let ids = exemplar_span_ids(&text, &format!("prop_ex_{i}_seconds"));
+                if ids.is_empty() {
+                    return Err(format!("family prop_ex_{i}_seconds lost its exemplars"));
+                }
+                for id in &ids {
+                    if id.len() != 16 || !id.bytes().all(|b| b.is_ascii_hexdigit()) {
+                        return Err(format!("span id {id:?} is not 16 hex digits"));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn dash_html_renders_deterministically_for_random_registries() {
+    check(
+        &Config { cases: 40, seed: 0xDA54, max_shrink_steps: 0 },
+        arb_registry_seed,
+        |&seed| {
+            let mut rng = Xoshiro256pp::new(seed);
+            let mut regs = Vec::new();
+            for b in 0..1 + rng.next_usize(3) {
+                let bench = format!("prop_dash_{b}");
+                let mut reg = BenchRegistry::new(&bench);
+                for r in 0..rng.next_usize(5) {
+                    let mut config = BTreeMap::new();
+                    config.insert("workload".to_string(), format!("w{}", rng.next_usize(2)));
+                    let mut met = BTreeMap::new();
+                    for m in 0..1 + rng.next_usize(4) {
+                        met.insert(format!("metric_{m}_per_s"), rng.next_f64() * 1e6);
+                    }
+                    met.insert("exact_items".to_string(), rng.next_usize(100) as f64);
+                    let mut rec = BenchRecord::new(bench.clone(), config, met);
+                    // pin the timestamp: rendered HTML must not depend on now
+                    rec.recorded_unix_s = 1_700_000_000 + r as u64;
+                    reg.publish(rec).map_err(|e| format!("publish: {e}"))?;
+                }
+                regs.push(reg);
+            }
+            let live = LiveSource { origin: "prop".into(), text: "# EOF\n".into() };
+            let a = render_dash(&regs, Some(&live));
+            let b = render_dash(&regs, Some(&live));
+            if a != b {
+                return Err("dash render is not byte-deterministic".into());
+            }
+            if a.contains("<script") {
+                return Err("dash document must carry no JavaScript".into());
+            }
+            Ok(())
+        },
+    );
 }
 
 #[test]
